@@ -1,0 +1,35 @@
+//! Flee + Explore tasks on AI2-THOR-like scenes (paper Appendix A.1):
+//! short training runs for both auxiliary tasks, reporting FPS and the
+//! training-score window (meters for Flee, visited cells for Explore).
+//!
+//! Run: cargo run --release --example flee_explore -- [--frames 50000]
+
+use bps::bench::{ensure_dataset, taskrow_config};
+use bps::coordinator::Coordinator;
+use bps::sim::Task;
+use bps::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv)?;
+    let frames = args.u64_or("frames", 50_000)?;
+    let dir = ensure_dataset("thor", 8)?;
+    println!("== Flee / Explore on thor-like scenes (Depth agents) ==");
+    for task in [Task::Flee, Task::Explore] {
+        let mut cfg = taskrow_config(task);
+        cfg.artifacts_dir = bps::bench::artifacts_dir();
+        cfg.dataset_dir = dir.clone();
+        cfg.total_frames = frames;
+        let mut coord = Coordinator::new(cfg)?;
+        while coord.frames() < coord.cfg.total_frames {
+            coord.train_iteration()?;
+        }
+        println!(
+            "{task:?}: {:.0} FPS, train score {:.2} over {} episodes",
+            coord.fps(),
+            coord.stats.score.mean(),
+            coord.stats.episodes
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: the smallest end-to-end BPS run — generate a tiny dataset,
+//! load the `test` AOT artifacts, train a handful of PPO iterations, and
+//! print the FPS + runtime breakdown.
+//!
+//! Run: make artifacts && cargo run --release --example quickstart
+
+use bps::config::Config;
+use bps::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let ds_dir = bps::bench::ensure_dataset("test", 4)?;
+    let mut cfg = Config::default();
+    cfg.variant = "test".into();
+    cfg.artifacts_dir = bps::bench::artifacts_dir();
+    cfg.dataset_dir = ds_dir;
+    cfg.num_envs = 4;
+    cfg.rollout_len = 4;
+    cfg.num_minibatches = 2;
+    cfg.k_scenes = 2;
+    cfg.total_frames = 320;
+
+    println!("== BPS quickstart: PointGoalNav, 4 envs, tiny SE-ResNet9 ==");
+    let mut coord = Coordinator::new(cfg)?;
+    while coord.frames() < coord.cfg.total_frames {
+        let it = coord.train_iteration()?;
+        println!(
+            "frames {:>5}  reward {:+.3}  entropy {:.3}  value-loss {:.4}",
+            coord.frames(),
+            coord.stats.reward.mean(),
+            it.losses.entropy,
+            it.losses.value
+        );
+    }
+    println!("\nFPS (paper methodology): {:.0}", coord.fps());
+    for (name, us) in coord.prof.breakdown(coord.frames()) {
+        println!("  {name:<10} {us:>8.1} us/frame");
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Standalone batch renderer demo (paper Appendix A.2 / Fig. A2): renders
+//! increasing batch sizes at several resolutions and prints the FPS grid
+//! plus an ASCII visualization of one depth frame.
+//!
+//! Run: cargo run --release --example standalone_renderer
+
+use std::sync::Arc;
+
+use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
+use bps::util::pool::WorkerPool;
+use bps::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ds_dir = bps::bench::ensure_dataset("gibson", 4)?;
+    let ds = bps::scene::Dataset::open(&ds_dir)?;
+    let scene = Arc::new(ds.load_scene(&ds.train[0], true)?);
+    println!(
+        "scene: {} tris, {:.1} MB geometry, {:.1} MB textures",
+        scene.mesh.num_tris(),
+        scene.geometry_bytes() as f64 / 1e6,
+        scene.texture_bytes() as f64 / 1e6
+    );
+    let pool = WorkerPool::new(WorkerPool::default_size());
+    let mut rng = Rng::new(11);
+
+    // one ASCII depth frame, for the humans
+    let cfg = RenderConfig { res: 48, sensor: Sensor::Depth, scale: 1, mode: PipelineMode::Fused };
+    let renderer = BatchRenderer::new(cfg, 1);
+    let pos = scene.navmesh.random_point(&mut rng).unwrap();
+    let mut obs = vec![0.0f32; cfg.obs_floats()];
+    renderer.render_batch(
+        &pool,
+        &[RenderItem { scene: Arc::clone(&scene), pos, heading: 0.8 }],
+        &mut obs,
+    );
+    let ramp = b"@%#*+=-:. ";
+    for y in (0..48).step_by(2) {
+        let line: String = (0..48)
+            .map(|x| ramp[((obs[y * 48 + x] * 9.0) as usize).min(9)] as char)
+            .collect();
+        println!("{line}");
+    }
+
+    println!("\nFPS vs batch size (64px depth, pipelined culling):");
+    for n in [1usize, 8, 32, 128, 512] {
+        let cfg = RenderConfig { res: 64, sensor: Sensor::Depth, scale: 1, mode: PipelineMode::Pipelined };
+        let renderer = BatchRenderer::new(cfg, n);
+        let items: Vec<RenderItem> = (0..n)
+            .map(|_| RenderItem {
+                scene: Arc::clone(&scene),
+                pos: scene.navmesh.random_point(&mut rng).unwrap(),
+                heading: rng.range_f32(0.0, std::f32::consts::TAU),
+            })
+            .collect();
+        let mut obs = vec![0.0f32; n * cfg.obs_floats()];
+        renderer.render_batch(&pool, &items, &mut obs); // warmup
+        let reps = (128 / n).max(1);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            renderer.render_batch(&pool, &items, &mut obs);
+        }
+        println!("  N={n:<4} {:>9.0} FPS", (n * reps) as f64 / t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

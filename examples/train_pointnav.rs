@@ -1,0 +1,87 @@
+//! End-to-end validation driver (DESIGN.md: Table 2 / Fig. 3 scaled-down):
+//! trains a Depth PointGoalNav agent with the full BPS stack on a
+//! procedural gibson-like dataset, logs the learning curve to CSV, then
+//! evaluates SPL/Success on the val split.
+//!
+//! Run: make artifacts && cargo run --release --example train_pointnav -- \
+//!        [--frames 200000] [--envs 64] [--optimizer lamb|adam] [--arch bps|workers]
+//!
+//! The recorded run lives in EXPERIMENTS.md.
+
+use bps::config::Config;
+use bps::coordinator::Coordinator;
+use bps::metrics::CsvLogger;
+use bps::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args::parse(&argv)?;
+    let frames = args.u64_or("frames", 200_000)?;
+    let eval_episodes = args.usize_or("eval-episodes", 32)?;
+    let curve_path = args.opt_or("curve", "runs/train_pointnav_curve.csv");
+
+    let mut cfg = Config::default();
+    cfg.variant = "depth64".into();
+    cfg.artifacts_dir = bps::bench::artifacts_dir();
+    cfg.dataset_dir = bps::bench::ensure_dataset("gibson", 8)?;
+    cfg.num_envs = 64;
+    cfg.rollout_len = 32;
+    cfg.num_minibatches = 2;
+    cfg.k_scenes = 4;
+    cfg.total_frames = frames;
+    cfg.memory_budget_mb = 16 * 1024;
+    cfg.apply_args(&mut args)?;
+    cfg.validate()?;
+
+    println!(
+        "== train_pointnav: {} frames, N={}, L={}, optimizer={}, arch={:?} ==",
+        cfg.total_frames, cfg.num_envs, cfg.rollout_len, cfg.optimizer, cfg.arch
+    );
+    let mut coord = Coordinator::new(cfg)?;
+    let mut curve = CsvLogger::create(
+        std::path::Path::new(&curve_path),
+        "iter,frames,seconds,fps,reward,success,spl,entropy",
+    )?;
+    let mut iter = 0u64;
+    while coord.frames() < coord.cfg.total_frames {
+        let it = coord.train_iteration()?;
+        iter += 1;
+        curve.row(&[
+            iter as f64,
+            coord.frames() as f64,
+            coord.fps.elapsed().as_secs_f64(),
+            coord.fps(),
+            coord.stats.reward.mean() as f64,
+            coord.stats.success.mean() as f64,
+            coord.stats.spl.mean() as f64,
+            it.losses.entropy as f64,
+        ])?;
+        if iter % 10 == 0 {
+            println!(
+                "iter {iter:>4} frames {:>8} fps {:>6.0} | reward {:+.2} success {:.2} spl {:.2} (eps {})",
+                coord.frames(),
+                coord.fps(),
+                coord.stats.reward.mean(),
+                coord.stats.success.mean(),
+                coord.stats.spl.mean(),
+                coord.stats.episodes
+            );
+        }
+    }
+    println!(
+        "\ntraining done: {} frames, {:.0} FPS; curve -> {curve_path}",
+        coord.frames(),
+        coord.fps()
+    );
+    for (name, us) in coord.prof.breakdown(coord.frames()) {
+        println!("  {name:<10} {us:>8.1} us/frame");
+    }
+    let (spl, success, _) = coord.evaluate("val", eval_episodes)?;
+    println!(
+        "\nval: SPL {:.1}  Success {:.1}  ({} episodes, greedy policy)",
+        spl * 100.0,
+        success * 100.0,
+        eval_episodes
+    );
+    Ok(())
+}

@@ -1,0 +1,250 @@
+"""AOT export: lower the L2/L1 computations to HLO text + manifest.json.
+
+This is the single point where Python runs in the system — at build time
+(``make artifacts``). It lowers jitted wrappers of the model/PPO/optimizer
+functions to **HLO text** (not serialized HloModuleProto: jax >= 0.5 emits
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly — see /opt/xla-example/README.md) and
+writes ``artifacts/manifest.json`` describing every artifact so the Rust
+runtime can load, compile, and execute them without any Python knowledge.
+
+Artifact kinds per variant (DESIGN.md §2):
+
+  init          (seed i32[])                                -> params f32[P]
+  infer_n{N}    (params, obs[N,R,R,C], goal[N,3], h, c)     -> (logits, value, h', c')
+  grad_b{B}l{L} (params, obs[B,L,R,R,C], goal, h0, c0,
+                 act i32[B,L], logp_old, ret, adv, notdone) -> (grads[P], losses[4])
+  update_lamb   (params, m, v, step[], grads, lr[])         -> (params', m', v', step')
+  update_adam   same signature (Fig. A3 ablation)
+
+Usage: ``python -m compile.aot --out-dir ../artifacts --presets default``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+from . import ppo as P
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """One model variant plus the batch geometries to export for it."""
+
+    name: str
+    cfg: M.ModelConfig
+    infer_ns: Tuple[int, ...]
+    grad_bls: Tuple[Tuple[int, int], ...]  # (B = minibatch envs, L = rollout len)
+
+
+def presets_table() -> Dict[str, Preset]:
+    """All exportable variants. Widths are CPU-scaled (DESIGN.md §1);
+    ``base_c=16, hidden=256`` vs the paper's 64/512 — the FLOP ratio between
+    systems (SE-ResNet9@64 vs ResNet50@128) is preserved."""
+    t = {}
+
+    def add(name, cfg, infer_ns, grad_bls):
+        t[name] = Preset(name, cfg, tuple(infer_ns), tuple(grad_bls))
+
+    se9 = dict(encoder="se9", base_c=16, hidden=256)
+    r50 = dict(encoder="r50", base_c=16, hidden=256)
+    # Tiny variant for fast unit/integration tests on the Rust side.
+    add(
+        "test",
+        M.ModelConfig(encoder="se9", res=32, in_ch=1, base_c=8, hidden=64),
+        [4],
+        [(2, 4)],
+    )
+    # Main Depth agent (BPS row of Table 1; e2e training example).
+    add("depth64", M.ModelConfig(res=64, in_ch=1, **se9), [4, 16, 64, 128, 256], [(8, 16), (32, 32)])
+    # RGB agent (BPS RGB rows).
+    add("rgb64", M.ModelConfig(res=64, in_ch=3, **se9), [16, 64, 128], [(8, 16), (32, 32)])
+    # Resolution ablation (Table A1): SE-ResNet9 at 128px.
+    add("depth128", M.ModelConfig(res=128, in_ch=1, **se9), [16, 64], [(8, 16)])
+    add("rgb128", M.ModelConfig(res=128, in_ch=3, **se9), [16, 64], [(8, 16)])
+    # BPS-R50 / WIJMANS20 encoder (Table 1, Table A1/A2).
+    add("r50_depth128", M.ModelConfig(res=128, in_ch=1, **r50), [16], [(4, 16)])
+    add("r50_rgb128", M.ModelConfig(res=128, in_ch=3, **r50), [16], [(4, 16)])
+    add("r50_depth64", M.ModelConfig(res=64, in_ch=1, **r50), [16], [(4, 16)])
+    return t
+
+
+DEFAULT_PRESETS = ("test", "depth64")
+BENCH_PRESETS = tuple(presets_table().keys())
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_init(cfg: M.ModelConfig) -> str:
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        return (M.flatten_params(M.init_params(cfg, key)),)
+
+    return to_hlo_text(jax.jit(init_fn).lower(_sds((), jnp.int32)))
+
+
+def lower_infer(cfg: M.ModelConfig, n: int) -> str:
+    p = M.num_params(cfg)
+
+    def infer_fn(flat, obs, goal, h, c):
+        params = M.unflatten_params(cfg, flat)
+        return M.policy_step(cfg, params, obs, goal, h, c)
+
+    return to_hlo_text(
+        jax.jit(infer_fn).lower(
+            _sds((p,)),
+            _sds((n, cfg.res, cfg.res, cfg.in_ch)),
+            _sds((n, cfg.goal_dim)),
+            _sds((n, cfg.hidden)),
+            _sds((n, cfg.hidden)),
+        )
+    )
+
+
+def lower_grad(cfg: M.ModelConfig, b: int, l: int, pcfg: P.PpoConfig) -> str:
+    p = M.num_params(cfg)
+
+    def grad_fn(flat, obs, goal, h0, c0, act, logp_old, ret, adv, notdone):
+        batch = (obs, goal, h0, c0, act, logp_old, ret, adv, notdone)
+        return P.ppo_grad(cfg, pcfg, flat, batch)
+
+    return to_hlo_text(
+        jax.jit(grad_fn).lower(
+            _sds((p,)),
+            _sds((b, l, cfg.res, cfg.res, cfg.in_ch)),
+            _sds((b, l, cfg.goal_dim)),
+            _sds((b, cfg.hidden)),
+            _sds((b, cfg.hidden)),
+            _sds((b, l), jnp.int32),
+            _sds((b, l)),
+            _sds((b, l)),
+            _sds((b, l)),
+            _sds((b, l)),
+        )
+    )
+
+
+def lower_update(cfg: M.ModelConfig, ocfg: O.OptimConfig, algo: str) -> str:
+    p = M.num_params(cfg)
+
+    def update_fn(flat, m, v, step, grads, lr):
+        return O.update(cfg, ocfg, flat, m, v, step, grads, lr, algo=algo)
+
+    return to_hlo_text(
+        jax.jit(update_fn).lower(
+            _sds((p,)), _sds((p,)), _sds((p,)), _sds(()), _sds((p,)), _sds(())
+        )
+    )
+
+
+def export_preset(preset: Preset, out_dir: str, verbose: bool = True) -> dict:
+    """Lower every artifact of one preset; returns its manifest entry."""
+    cfg = preset.cfg
+    pcfg = P.PpoConfig()
+    ocfg = O.OptimConfig()
+    files = {}
+
+    def emit(kind: str, text: str):
+        fname = f"{preset.name}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+        if verbose:
+            print(f"  {fname}: {len(text) / 1e6:.2f} MB")
+
+    emit("init", lower_init(cfg))
+    for n in preset.infer_ns:
+        emit(f"infer_n{n}", lower_infer(cfg, n))
+    for b, l in preset.grad_bls:
+        emit(f"grad_b{b}l{l}", lower_grad(cfg, b, l, pcfg))
+    emit("update_lamb", lower_update(cfg, ocfg, "lamb"))
+    emit("update_adam", lower_update(cfg, ocfg, "adam"))
+
+    layout = [
+        {"name": name, "offset": off, "shape": list(shape)}
+        for name, off, shape in M.param_layout(cfg)
+    ]
+    return {
+        "name": preset.name,
+        "encoder": cfg.encoder,
+        "res": cfg.res,
+        "in_ch": cfg.in_ch,
+        "base_c": cfg.base_c,
+        "hidden": cfg.hidden,
+        "num_actions": cfg.num_actions,
+        "goal_dim": cfg.goal_dim,
+        "num_params": M.num_params(cfg),
+        "infer_ns": list(preset.infer_ns),
+        "grad_bls": [list(x) for x in preset.grad_bls],
+        "ppo": dataclasses.asdict(pcfg),
+        "optim": dataclasses.asdict(ocfg),
+        "files": files,
+        "layout": layout,
+    }
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="default",
+        help="comma list of preset names, or 'default' / 'all'",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    table = presets_table()
+    if args.presets == "default":
+        names: List[str] = list(DEFAULT_PRESETS)
+    elif args.presets == "all":
+        names = list(BENCH_PRESETS)
+    else:
+        names = [s.strip() for s in args.presets.split(",") if s.strip()]
+    for n in names:
+        if n not in table:
+            raise SystemExit(f"unknown preset {n!r}; have {sorted(table)}")
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "variants": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest.setdefault("variants", {})
+
+    for name in names:
+        if not args.quiet:
+            print(f"exporting preset {name} ...")
+        manifest["variants"][name] = export_preset(
+            table[name], args.out_dir, verbose=not args.quiet
+        )
+        # Write incrementally so a crash keeps completed variants usable.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret-mode on CPU; see DESIGN.md §Hardware-Adaptation).
+
+Submodules: ``se_excite``, ``lstm_cell``, ``lamb`` (the kernels), ``ref``
+(pure-jnp oracles), ``ad`` (custom_vjp wrappers used by the L2 model so the
+training path can differentiate through the Pallas forwards).
+"""
+
+from . import ad, lamb, lstm_cell, ref, se_excite  # noqa: F401

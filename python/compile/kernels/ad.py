@@ -1,0 +1,61 @@
+"""Autodiff wrappers for the Pallas kernels.
+
+``pallas_call`` has no reverse-mode autodiff rule (even in interpret mode),
+but the training (``grad``) artifact must differentiate through the SE gate
+and the LSTM cell. We wrap each kernel in ``jax.custom_vjp``:
+
+  forward  — the Pallas kernel (so the fused kernel is what lands in the
+             inference *and* the training-forward HLO),
+  backward — the VJP of the pure-jnp oracle in ``ref.py`` (mathematically
+             identical function, so the cotangents are exact).
+
+On a real TPU the backward would get its own fused kernels; the oracle-VJP
+backward keeps the contract honest on this CPU testbed and is validated in
+``python/tests/test_kernels.py`` (grad-vs-ref allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import lstm_cell as _lstm_mod
+from . import ref as _ref
+from . import se_excite as _se_mod
+
+
+@jax.custom_vjp
+def se_excite(pooled, w1, b1, w2, b2):
+    """Differentiable fused SE gate; see ``se_excite.se_excite``."""
+    return _se_mod.se_excite(pooled, w1, b1, w2, b2)
+
+
+def _se_fwd(pooled, w1, b1, w2, b2):
+    out = _se_mod.se_excite(pooled, w1, b1, w2, b2)
+    return out, (pooled, w1, b1, w2, b2)
+
+
+def _se_bwd(res, ct):
+    _, vjp = jax.vjp(_ref.se_excite_ref, *res)
+    return vjp(ct)
+
+
+se_excite.defvjp(_se_fwd, _se_bwd)
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, wx, wh, b):
+    """Differentiable fused LSTM cell; see ``lstm_cell.lstm_cell``."""
+    return _lstm_mod.lstm_cell(x, h, c, wx, wh, b)
+
+
+def _lstm_fwd(x, h, c, wx, wh, b):
+    out = _lstm_mod.lstm_cell(x, h, c, wx, wh, b)
+    return out, (x, h, c, wx, wh, b)
+
+
+def _lstm_bwd(res, ct):
+    _, vjp = jax.vjp(_ref.lstm_cell_ref, *res)
+    return vjp(ct)
+
+
+lstm_cell.defvjp(_lstm_fwd, _lstm_bwd)

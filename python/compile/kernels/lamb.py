@@ -1,0 +1,170 @@
+"""Pallas kernels: Lamb optimizer update (paper §3.4, Eq. 1-2).
+
+The paper adapts Lamb (You et al. 2020) — Adam step direction rescaled by a
+clipped per-layer trust ratio — to keep sample efficiency at large training
+batches. The update is the per-step hot loop of the learner, so it is the L1
+hot-spot for the optimizer side of the system.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the trust ratio needs *global*
+per-layer reductions (‖θ‖, ‖d‖), so a single-pass kernel would need a
+cross-block reduction. We use the canonical two-pass structure a real TPU
+implementation wants:
+
+  pass 1 ``adam_dir``  — elementwise over VMEM-sized tiles: update m, v,
+       emit the raw direction d = m̂/(√v̂+ε) + λθ **and** per-tile partial
+       sums of θ² and d² (one scalar pair per grid step).
+  (host/XLA) reduce partials, form r = clip(min(‖θ‖,10)/‖d‖, ρ, 1/ρ).
+  pass 2 ``apply_update`` — elementwise: θ' = θ − (lr·r)·d.
+
+Layers are processed as slices of the flat parameter vector (see aot.py);
+the per-layer loop is unrolled at trace time.
+
+interpret=True for CPU-PJRT execution (see se_excite.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 64 * 1024  # 256 KiB/input-array per block: comfortable VMEM
+
+
+def _adam_dir_kernel(
+    theta_ref, m_ref, v_ref, g_ref, sc_ref, m_out, v_out, d_out, tss_out, dss_out
+):
+    """One tile: Adam moments + Lamb direction + partial norm sums.
+
+    ``sc_ref`` packs the six scalars [beta1, beta2, eps, lam, bc1, bc2] so the
+    kernel has a single tiny SMEM-like operand instead of six.
+    """
+    beta1 = sc_ref[0]
+    beta2 = sc_ref[1]
+    eps = sc_ref[2]
+    lam = sc_ref[3]
+    bc1 = sc_ref[4]
+    bc2 = sc_ref[5]
+    theta = theta_ref[...]
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    d = (m_new * bc1) / (jnp.sqrt(v_new * bc2) + eps) + lam * theta
+    m_out[...] = m_new
+    v_out[...] = v_new
+    d_out[...] = d
+    tss_out[...] = jnp.sum(theta * theta)[None]
+    dss_out[...] = jnp.sum(d * d)[None]
+
+
+def _apply_kernel(theta_ref, d_ref, scale_ref, out_ref):
+    """One tile: θ' = θ − scale·d (scale = lr · trust-ratio)."""
+    out_ref[...] = theta_ref[...] - scale_ref[0] * d_ref[...]
+
+
+def _pad1(x, pad):
+    return jnp.pad(x, ((0, pad),)) if pad else x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def adam_dir(theta, m, v, g, scalars, *, block: int = DEFAULT_BLOCK):
+    """Pass 1 over one layer (flat ``[P]`` arrays).
+
+    Args:
+      scalars: ``[6]`` = [beta1, beta2, eps, lam, bc1, bc2].
+
+    Returns:
+      ``(m_new[P], v_new[P], d[P], theta_sq_sum[], d_sq_sum[])``.
+
+    Zero-pad tail contributes 0 to both norm sums (g=θ=0 ⇒ m=v=d=0), so the
+    reductions are exact.
+    """
+    p = theta.shape[0]
+    bk = min(block, max(p, 1))
+    pad = (-p) % bk
+    theta_p, m_p, v_p, g_p = (_pad1(a, pad) for a in (theta, m, v, g))
+    tiles = (p + pad) // bk
+    m_new, v_new, d, tss, dss = pl.pallas_call(
+        _adam_dir_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((6,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((p + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles,), jnp.float32),
+        ],
+        interpret=True,
+    )(theta_p, m_p, v_p, g_p, scalars)
+    return m_new[:p], v_new[:p], d[:p], jnp.sum(tss), jnp.sum(dss)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def apply_update(theta, d, scale, *, block: int = DEFAULT_BLOCK):
+    """Pass 2 over one layer: ``theta - scale * d``; ``scale`` is ``[1]``."""
+    p = theta.shape[0]
+    bk = min(block, max(p, 1))
+    pad = (-p) % bk
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=((p + pad) // bk,),
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p + pad,), jnp.float32),
+        interpret=True,
+    )(_pad1(theta, pad), _pad1(d, pad), scale)
+    return out[:p]
+
+
+def lamb_layer(
+    theta, m, v, g, *, lr, beta1, beta2, eps, lam, rho, step, block=DEFAULT_BLOCK
+):
+    """Full single-layer Lamb update via the two Pallas passes.
+
+    ``lr`` and ``step`` may be traced scalars (the AOT update artifact feeds
+    them as runtime inputs). Matches ``ref.lamb_layer_ref``.
+    """
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    bc1 = 1.0 / (1.0 - beta1**stepf)
+    bc2 = 1.0 / (1.0 - beta2**stepf)
+    scalars = jnp.stack(
+        [
+            jnp.float32(beta1),
+            jnp.float32(beta2),
+            jnp.float32(eps),
+            jnp.float32(lam),
+            jnp.asarray(bc1, jnp.float32),
+            jnp.asarray(bc2, jnp.float32),
+        ]
+    )
+    m_new, v_new, d, tss, dss = adam_dir(theta, m, v, g, scalars, block=block)
+    r = ref.trust_ratio_ref(tss, dss, rho)
+    scale = (jnp.asarray(lr, jnp.float32) * r)[None]
+    return apply_update(theta, d, scale, block=block), m_new, v_new
+
+
+def vmem_bytes(block: int) -> int:
+    """Per-block VMEM footprint in bytes (fp32): 4 in + 3 out tile arrays."""
+    return 4 * (7 * block + 8)

@@ -1,0 +1,114 @@
+"""Pallas kernel: fused LSTM cell (gates + state update in one pass).
+
+The paper's policy runs an LSTM over the visual features (§3.3). On GPU this
+is cuDNN's persistent-RNN path; for TPU we block the fused gate GEMMs for the
+MXU instead (DESIGN.md §Hardware-Adaptation):
+
+- Weights are stored ``[Din, 4, H]`` / ``[H, 4, H]`` (gate axis *second*) so
+  a BlockSpec slice ``[Din, 4, Ht]`` hands the kernel all four gates of one
+  hidden tile contiguously — one MXU pass per (N-tile, H-tile) computes the
+  4*Ht pre-activations for that tile.
+- Gate nonlinearities and the c/h state update happen in-register before the
+  single write of ``h'``/``c'`` — no HBM round trip for pre-activations.
+
+Grid: 2-D ``(N/Nt, H/Ht)``. Per-block VMEM (fp32, paper scale Din=H=512,
+Nt=128, Ht=128): x ``Nt*Din`` + h ``Nt*H`` + wx ``Din*4*Ht`` + wh ``H*4*Ht``
++ c ``Nt*Ht`` + outs ``2*Nt*Ht`` ≈ 2.7 MiB — fits VMEM with double-buffering
+headroom.
+
+interpret=True for CPU-PJRT execution (see se_excite.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    """One (N-tile, H-tile): fused gates + state update. Gate order i,f,g,o."""
+    x = x_ref[...]  # [Nt, Din]
+    h = h_ref[...]  # [Nt, H]  (full H: both GEMMs reduce over the full axis)
+    nt = x.shape[0]
+    ht = c_ref.shape[1]
+    wx = wx_ref[...].reshape(x.shape[1], 4 * ht)  # [Din, 4*Ht]
+    wh = wh_ref[...].reshape(h.shape[1], 4 * ht)  # [H,   4*Ht]
+    b = b_ref[...].reshape(4 * ht)
+    gates = (
+        jnp.dot(x, wx, preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh, preferred_element_type=jnp.float32)
+        + b[None, :]
+    ).reshape(nt, 4, ht)
+    i = 1.0 / (1.0 + jnp.exp(-gates[:, 0]))
+    f = 1.0 / (1.0 + jnp.exp(-gates[:, 1]))
+    g = jnp.tanh(gates[:, 2])
+    o = 1.0 / (1.0 + jnp.exp(-gates[:, 3]))
+    c_new = f * c_ref[...] + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_h"))
+def lstm_cell(x, h, c, wx, wh, b, *, block_n: int = 128, block_h: int = 128):
+    """Fused LSTM step. Shapes as in ``ref.lstm_cell_ref``.
+
+    Returns ``(h_new, c_new)`` each ``[N, H]``. N is padded to a multiple of
+    ``block_n`` (rows independent, pads discarded); H must divide by
+    ``block_h`` or ``block_h`` is shrunk to H.
+    """
+    n, din = x.shape
+    hdim = h.shape[1]
+    bn = min(block_n, max(n, 1))
+    bh = min(block_h, hdim)
+    if hdim % bh != 0:
+        bh = hdim  # fall back to a single H tile
+    n_pad = (-n) % bn
+    if n_pad:
+        x = jnp.pad(x, ((0, n_pad), (0, 0)))
+        h = jnp.pad(h, ((0, n_pad), (0, 0)))
+        c = jnp.pad(c, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // bn, hdim // bh)
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, hdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((din, 4, bh), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((hdim, 4, bh), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + n_pad, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((n + n_pad, hdim), jnp.float32),
+        ],
+        interpret=True,
+    )(x, h, c, wx, wh, b)
+    return h_new[:n], c_new[:n]
+
+
+def vmem_bytes(block_n: int, block_h: int, din: int, hdim: int) -> int:
+    """Estimated per-block VMEM footprint in bytes (fp32) for DESIGN.md §Perf."""
+    floats = (
+        block_n * din
+        + block_n * hdim
+        + block_n * block_h
+        + din * 4 * block_h
+        + hdim * 4 * block_h
+        + 4 * block_h
+        + 2 * block_n * block_h
+    )
+    return 4 * floats
+
+
+def mxu_macs(block_n: int, block_h: int, din: int, hdim: int) -> int:
+    """MACs per block for the two gate GEMMs (MXU utilization estimate)."""
+    return block_n * 4 * block_h * (din + hdim)

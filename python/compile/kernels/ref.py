@@ -1,0 +1,105 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the kernel output matches
+the oracle (``assert_allclose``). The oracles are also used directly by the
+L2 model when ``use_pallas=False`` (useful for debugging HLO size).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def se_excite_ref(pooled, w1, b1, w2, b2):
+    """Squeeze-excite gating MLP (paper SE blocks, r=16).
+
+    Args:
+      pooled: ``[N, C]`` spatially-pooled features.
+      w1: ``[C, Cr]`` squeeze weights (Cr = C // r).
+      b1: ``[Cr]``.
+      w2: ``[Cr, C]`` excite weights.
+      b2: ``[C]``.
+
+    Returns:
+      ``[N, C]`` sigmoid gate in (0, 1).
+    """
+    h = jnp.maximum(pooled @ w1 + b1, 0.0)
+    return 1.0 / (1.0 + jnp.exp(-(h @ w2 + b2)))
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Single fused LSTM cell step.
+
+    Weight layout is ``[Din, 4, H]`` / ``[H, 4, H]`` / ``[4, H]`` — gate axis
+    second — chosen so the Pallas kernel can BlockSpec-slice the H axis while
+    keeping all four gates of a hidden tile together (see lstm_cell.py).
+    Gate order: i, f, g, o.
+
+    Returns:
+      ``(h_new, c_new)`` each ``[N, H]``.
+    """
+    gates = (
+        jnp.einsum("nd,dgh->ngh", x, wx)
+        + jnp.einsum("nk,kgh->ngh", h, wh)
+        + b[None, :, :]
+    )
+    i = 1.0 / (1.0 + jnp.exp(-gates[:, 0]))
+    f = 1.0 / (1.0 + jnp.exp(-gates[:, 1]))
+    g = jnp.tanh(gates[:, 2])
+    o = 1.0 / (1.0 + jnp.exp(-gates[:, 3]))
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def adam_dir_ref(theta, m, v, g, beta1, beta2, eps, lam, bc1, bc2):
+    """Adam moment update + Lamb step direction for one layer (paper Eq. 1).
+
+    Returns:
+      ``(m_new, v_new, d, theta_sq_sum, d_sq_sum)`` where
+      ``d = m_hat / (sqrt(v_hat) + eps) + lam * theta`` is the raw update
+      direction (Adam step + decoupled weight decay) and the two sums are the
+      squared-norm reductions that feed the trust ratio.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new * bc1
+    v_hat = v_new * bc2
+    d = m_hat / (jnp.sqrt(v_hat) + eps) + lam * theta
+    return m_new, v_new, d, jnp.sum(theta * theta), jnp.sum(d * d)
+
+
+def trust_ratio_ref(theta_sq_sum, d_sq_sum, rho, phi_cap=10.0):
+    """Clipped Lamb trust ratio (paper Eq. 2).
+
+    ``r = clip(phi(||theta||) / ||d||, rho, 1/rho)`` with
+    ``phi(x) = min(x, phi_cap)``. ``rho = 1`` degenerates to AdamW (r == 1),
+    which the paper uses for bias/fixup/gain parameters.
+    """
+    theta_norm = jnp.sqrt(theta_sq_sum)
+    d_norm = jnp.sqrt(d_sq_sum)
+    phi = jnp.minimum(theta_norm, phi_cap)
+    # Avoid 0/0 at step 0 for zero-init layers: ratio of zero norms -> 1.
+    raw = jnp.where(d_norm > 0.0, phi / jnp.maximum(d_norm, 1e-30), 1.0)
+    return jnp.clip(raw, rho, 1.0 / rho)
+
+
+def apply_update_ref(theta, d, scale):
+    """``theta' = theta - scale * d`` where ``scale = lr * r`` (paper Eq. 1)."""
+    return theta - scale * d
+
+
+def lamb_layer_ref(theta, m, v, g, *, lr, beta1, beta2, eps, lam, rho, step):
+    """Full single-layer Lamb update, composing the three pieces above.
+
+    ``step`` is the 1-based step count *after* increment (Adam convention).
+    """
+    bc1 = 1.0 / (1.0 - beta1**step)
+    bc2 = 1.0 / (1.0 - beta2**step)
+    m_new, v_new, d, tss, dss = adam_dir_ref(
+        theta, m, v, g, beta1, beta2, eps, lam, bc1, bc2
+    )
+    r = trust_ratio_ref(tss, dss, rho)
+    return apply_update_ref(theta, d, lr * r), m_new, v_new

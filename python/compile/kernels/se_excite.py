@@ -1,0 +1,79 @@
+"""Pallas kernel: fused squeeze-excite gating MLP.
+
+The SE block (Hu et al. 2018) used in every stage of the paper's SE-ResNet9
+visual encoder (paper §3.3, r=16). On GPU this is two tiny cuBLAS calls plus
+elementwise kernels; re-thought for TPU (see DESIGN.md §Hardware-Adaptation)
+we fuse both matmuls and both nonlinearities into one kernel so the
+``[C, C/r]`` / ``[C/r, C]`` weights stay resident in VMEM and the MXU runs
+back-to-back without an HBM round trip.
+
+Grid: 1-D over N tiles. Per-block VMEM footprint (fp32):
+``Nt*C (in) + C*Cr + Cr + Cr*C + C (weights) + Nt*C (out)`` — for the paper's
+largest stage (C=512, r=16, Nt=128) that is ~0.77 MiB, far under the 16 MiB
+VMEM budget, so a single-level tiling suffices.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads. Structure (BlockSpecs, fusion) is authored for real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _se_kernel(pooled_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One N-tile: sigmoid(relu(p @ w1 + b1) @ w2 + b2)."""
+    p = pooled_ref[...]
+    h = jnp.maximum(
+        jnp.dot(p, w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...][None, :],
+        0.0,
+    )
+    z = (
+        jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...][None, :]
+    )
+    out_ref[...] = 1.0 / (1.0 + jnp.exp(-z))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def se_excite(pooled, w1, b1, w2, b2, *, block_n: int = 128):
+    """Fused SE gate. Shapes as in ``ref.se_excite_ref``; returns ``[N, C]``.
+
+    N is padded up to a multiple of ``block_n`` (pad rows are computed and
+    discarded — SE is row-independent so this is exact for the live rows).
+    """
+    n, c = pooled.shape
+    cr = w1.shape[1]
+    bn = min(block_n, max(n, 1))
+    n_pad = (-n) % bn
+    if n_pad:
+        pooled = jnp.pad(pooled, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // bn,)
+    out = pl.pallas_call(
+        _se_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, cr), lambda i: (0, 0)),
+            pl.BlockSpec((cr,), lambda i: (0,)),
+            pl.BlockSpec((cr, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, c), jnp.float32),
+        interpret=True,
+    )(pooled, w1, b1, w2, b2)
+    return out[:n]
+
+
+def vmem_bytes(block_n: int, c: int, r: int = 16) -> int:
+    """Estimated per-block VMEM footprint in bytes (fp32) for DESIGN.md §Perf."""
+    cr = max(c // r, 1)
+    floats = block_n * c * 2 + c * cr * 2 + cr + c
+    return 4 * floats

@@ -1,0 +1,381 @@
+"""L2: the paper's policy DNN in JAX (paper §3.3), calling the L1 kernels.
+
+Architecture (BPS): SpaceToDepth stem → SE-ResNet9 visual encoder
+(ResNet18 with every other block removed; Squeeze-Excite r=16 in every
+stage; **no normalization layers** — Fixup initialization) → FC → concat
+goal-sensor embedding → LSTM → actor/critic heads.
+
+The BPS-R50 / WIJMANS20 ablations use a ResNet50 bottleneck encoder at
+128×128 input instead (Table 1).
+
+Everything here is build-time only: ``aot.py`` lowers jitted wrappers of
+these functions to HLO text, and the Rust runtime executes the artifacts.
+Parameters live in an ordered dict; ``flatten_params``/``param_layout``
+define the flat ``f32[P]`` vector contract shared with Rust (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ad as kad
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static policy-network configuration (fixed at AOT time)."""
+
+    encoder: str = "se9"  # "se9" | "r50"
+    res: int = 64  # input resolution (square)
+    in_ch: int = 1  # 1 = Depth sensor, 3 = RGB camera
+    base_c: int = 16  # stage-1 width (paper: 64; CPU default scaled down)
+    hidden: int = 256  # LSTM hidden size (paper: 512)
+    num_actions: int = 4  # forward / turn_left / turn_right / stop
+    se_r: int = 16  # squeeze-excite reduction ratio
+    goal_dim: int = 3  # GPS+compass: [dist, cos(theta), sin(theta)]
+    goal_emb: int = 32
+    use_pallas: bool = True  # False: pure-jnp oracles (debugging)
+
+    @property
+    def variant(self) -> str:
+        """Short key used in artifact filenames."""
+        sensor = "depth" if self.in_ch == 1 else "rgb"
+        return f"{self.encoder}_{sensor}_r{self.res}_c{self.base_c}_h{self.hidden}"
+
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# Initialization (Fixup: Zhang et al. 2019 — paper §3.3)
+# ---------------------------------------------------------------------------
+
+
+def _he_normal(key, shape, fan_in, gain=1.0):
+    std = gain * math.sqrt(2.0 / fan_in)
+    return std * jax.random.normal(key, shape, jnp.float32)
+
+
+def _conv_shape(k, cin, cout):
+    return (k, k, cin, cout)  # HWIO
+
+
+def _se9_stage_plan(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """(channels, stride) per stage for the SE-ResNet9 encoder."""
+    c = cfg.base_c
+    return [(c, 1), (2 * c, 2), (4 * c, 2), (8 * c, 2)]
+
+
+def _r50_stage_plan(cfg: ModelConfig) -> List[Tuple[int, int, int]]:
+    """(width, stride, blocks) per stage for ResNet50."""
+    c = cfg.base_c
+    return [(c, 1, 3), (2 * c, 2, 4), (4 * c, 2, 6), (8 * c, 2, 3)]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Build the full parameter dict with Fixup initialization.
+
+    Fixup rule for residual nets without normalization: scale the first
+    conv(s) of each residual branch by ``L^(-1/(2m-2))`` (L = number of
+    residual blocks, m = convs per branch), zero-init the last conv of each
+    branch, add scalar biases around each conv and a per-block scale.
+    """
+    p: Params = {}
+    keys = iter(jax.random.split(key, 4096))
+
+    def nk():
+        return next(keys)
+
+    if cfg.encoder == "se9":
+        stem_in = cfg.in_ch * 16  # SpaceToDepth factor 4 => 16x channels
+        p["stem.w"] = _he_normal(
+            nk(), _conv_shape(3, stem_in, cfg.base_c), 9 * stem_in
+        )
+        p["stem.b"] = jnp.zeros((cfg.base_c,), jnp.float32)
+        plan = _se9_stage_plan(cfg)
+        nblocks = len(plan)
+        fixup_gain = nblocks ** (-0.5)  # m=2 convs per branch
+        cin = cfg.base_c
+        for i, (cout, stride) in enumerate(plan):
+            pre = f"s{i}"
+            p[f"{pre}.b1a"] = jnp.zeros((), jnp.float32)
+            p[f"{pre}.conv1.w"] = _he_normal(
+                nk(), _conv_shape(3, cin, cout), 9 * cin, gain=fixup_gain
+            )
+            p[f"{pre}.b1b"] = jnp.zeros((), jnp.float32)
+            p[f"{pre}.b2a"] = jnp.zeros((), jnp.float32)
+            p[f"{pre}.conv2.w"] = jnp.zeros(_conv_shape(3, cout, cout), jnp.float32)
+            p[f"{pre}.scale"] = jnp.ones((), jnp.float32)
+            p[f"{pre}.b2b"] = jnp.zeros((), jnp.float32)
+            cr = max(cout // cfg.se_r, 4)
+            p[f"{pre}.se.w1"] = _he_normal(nk(), (cout, cr), cout)
+            p[f"{pre}.se.b1"] = jnp.zeros((cr,), jnp.float32)
+            p[f"{pre}.se.w2"] = _he_normal(nk(), (cr, cout), cr)
+            p[f"{pre}.se.b2"] = jnp.zeros((cout,), jnp.float32)
+            if stride != 1 or cin != cout:
+                p[f"{pre}.proj.w"] = _he_normal(nk(), _conv_shape(1, cin, cout), cin)
+                p[f"{pre}.proj.b"] = jnp.zeros((cout,), jnp.float32)
+            cin = cout
+        feat_hw = cfg.res // 4 // 8  # stem /4, strides 1,2,2,2 => /8
+        feat_dim = feat_hw * feat_hw * cin
+    elif cfg.encoder == "r50":
+        p["stem.w"] = _he_normal(
+            nk(), _conv_shape(7, cfg.in_ch, cfg.base_c), 49 * cfg.in_ch
+        )
+        p["stem.b"] = jnp.zeros((cfg.base_c,), jnp.float32)
+        plan = _r50_stage_plan(cfg)
+        nblocks = sum(b for _, _, b in plan)
+        fixup_gain = nblocks ** (-0.25)  # m=3 convs per branch
+        cin = cfg.base_c
+        for i, (width, stride, blocks) in enumerate(plan):
+            cout = width * 4
+            for j in range(blocks):
+                pre = f"s{i}b{j}"
+                s = stride if j == 0 else 1
+                p[f"{pre}.b1a"] = jnp.zeros((), jnp.float32)
+                p[f"{pre}.conv1.w"] = _he_normal(
+                    nk(), _conv_shape(1, cin, width), cin, gain=fixup_gain
+                )
+                p[f"{pre}.b1b"] = jnp.zeros((), jnp.float32)
+                p[f"{pre}.b2a"] = jnp.zeros((), jnp.float32)
+                p[f"{pre}.conv2.w"] = _he_normal(
+                    nk(), _conv_shape(3, width, width), 9 * width, gain=fixup_gain
+                )
+                p[f"{pre}.b2b"] = jnp.zeros((), jnp.float32)
+                p[f"{pre}.b3a"] = jnp.zeros((), jnp.float32)
+                p[f"{pre}.conv3.w"] = jnp.zeros(
+                    _conv_shape(1, width, cout), jnp.float32
+                )
+                p[f"{pre}.scale"] = jnp.ones((), jnp.float32)
+                p[f"{pre}.b3b"] = jnp.zeros((), jnp.float32)
+                if s != 1 or cin != cout:
+                    p[f"{pre}.proj.w"] = _he_normal(
+                        nk(), _conv_shape(1, cin, cout), cin
+                    )
+                    p[f"{pre}.proj.b"] = jnp.zeros((cout,), jnp.float32)
+                cin = cout
+        feat_hw = cfg.res // 4 // 8  # stem /2, maxpool /2, strides 1,2,2,2
+        feat_dim = feat_hw * feat_hw * cin
+    else:
+        raise ValueError(f"unknown encoder {cfg.encoder!r}")
+
+    p["fc_vis.w"] = _he_normal(nk(), (feat_dim, cfg.hidden), feat_dim)
+    p["fc_vis.b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+    p["goal.w"] = _he_normal(nk(), (cfg.goal_dim, cfg.goal_emb), cfg.goal_dim)
+    p["goal.b"] = jnp.zeros((cfg.goal_emb,), jnp.float32)
+
+    din = cfg.hidden + cfg.goal_emb
+    h = cfg.hidden
+    p["lstm.wx"] = _he_normal(nk(), (din, 4, h), din, gain=0.5)
+    p["lstm.wh"] = _he_normal(nk(), (h, 4, h), h, gain=0.5)
+    b = jnp.zeros((4, h), jnp.float32)
+    p["lstm.b"] = b.at[1].set(1.0)  # forget-gate bias 1.0
+    p["actor.w"] = _he_normal(nk(), (h, cfg.num_actions), h, gain=0.01)
+    p["actor.b"] = jnp.zeros((cfg.num_actions,), jnp.float32)
+    p["critic.w"] = _he_normal(nk(), (h, 1), h)
+    p["critic.b"] = jnp.zeros((1,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector contract (shared with Rust: DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+_LAYOUT_CACHE: Dict[str, List[Tuple[str, int, Tuple[int, ...]]]] = {}
+
+
+def param_layout(cfg: ModelConfig) -> List[Tuple[str, int, Tuple[int, ...]]]:
+    """``[(name, offset, shape)]`` in flat-vector order (sorted by name)."""
+    key = cfg.variant
+    if key not in _LAYOUT_CACHE:
+        shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        layout = []
+        off = 0
+        for name in sorted(shapes):
+            arr = shapes[name]
+            layout.append((name, off, tuple(arr.shape)))
+            off += int(math.prod(arr.shape)) if arr.shape else 1
+        _LAYOUT_CACHE[key] = layout
+    return _LAYOUT_CACHE[key]
+
+
+def num_params(cfg: ModelConfig) -> int:
+    lay = param_layout(cfg)
+    name, off, shape = lay[-1]
+    return off + (int(math.prod(shape)) if shape else 1)
+
+
+def flatten_params(params: Params) -> jnp.ndarray:
+    """Concatenate all tensors (sorted-key order — the canonical layout,
+    stable across jit boundaries since jax pytrees sort dict keys)."""
+    return jnp.concatenate([jnp.ravel(params[k]) for k in sorted(params)])
+
+
+def unflatten_params(cfg: ModelConfig, flat: jnp.ndarray) -> Params:
+    """Slice the flat vector back into the parameter dict (trace-time loop)."""
+    out: Params = {}
+    for name, off, shape in param_layout(cfg):
+        size = int(math.prod(shape)) if shape else 1
+        out[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def space_to_depth(x, factor=4):
+    """[N,H,W,C] -> [N,H/f,W/f,C*f*f] (TResNet stem; paper §3.3)."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // factor, factor, w // factor, factor, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(n, h // factor, w // factor, c * factor * factor)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _avg_pool(x, stride):
+    if stride == 1:
+        return x
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, stride, stride, 1), (1, stride, stride, 1), "SAME"
+    ) / float(stride * stride)
+
+
+def _max_pool(x, k, stride):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "SAME"
+    )
+
+
+def _se_gate(cfg: ModelConfig, y, w1, b1, w2, b2):
+    pooled = jnp.mean(y, axis=(1, 2))
+    if cfg.use_pallas:
+        gate = kad.se_excite(pooled, w1, b1, w2, b2)
+    else:
+        gate = kref.se_excite_ref(pooled, w1, b1, w2, b2)
+    return y * gate[:, None, None, :]
+
+
+def _se9_block(cfg: ModelConfig, p: Params, pre: str, x, cout, stride):
+    if f"{pre}.proj.w" in p:
+        identity = _conv(_avg_pool(x, stride), p[f"{pre}.proj.w"]) + p[f"{pre}.proj.b"]
+    else:
+        identity = x
+    y = _conv(x + p[f"{pre}.b1a"], p[f"{pre}.conv1.w"], stride)
+    y = jnp.maximum(y + p[f"{pre}.b1b"], 0.0)
+    y = _conv(y + p[f"{pre}.b2a"], p[f"{pre}.conv2.w"])
+    y = y * p[f"{pre}.scale"] + p[f"{pre}.b2b"]
+    y = _se_gate(
+        cfg,
+        y,
+        p[f"{pre}.se.w1"],
+        p[f"{pre}.se.b1"],
+        p[f"{pre}.se.w2"],
+        p[f"{pre}.se.b2"],
+    )
+    return jnp.maximum(y + identity, 0.0)
+
+
+def _r50_block(p: Params, pre: str, x, width, stride):
+    if f"{pre}.proj.w" in p:
+        identity = _conv(_avg_pool(x, stride), p[f"{pre}.proj.w"]) + p[f"{pre}.proj.b"]
+    else:
+        identity = x
+    y = _conv(x + p[f"{pre}.b1a"], p[f"{pre}.conv1.w"])
+    y = jnp.maximum(y + p[f"{pre}.b1b"], 0.0)
+    y = _conv(y + p[f"{pre}.b2a"], p[f"{pre}.conv2.w"], stride)
+    y = jnp.maximum(y + p[f"{pre}.b2b"], 0.0)
+    y = _conv(y + p[f"{pre}.b3a"], p[f"{pre}.conv3.w"])
+    y = y * p[f"{pre}.scale"] + p[f"{pre}.b3b"]
+    return jnp.maximum(y + identity, 0.0)
+
+
+def encode_visual(cfg: ModelConfig, p: Params, obs):
+    """Visual encoder: ``[N,R,R,C]`` float in [0,1] → ``[N,hidden]``."""
+    if cfg.encoder == "se9":
+        x = space_to_depth(obs, 4)
+        x = jnp.maximum(_conv(x, p["stem.w"]) + p["stem.b"], 0.0)
+        for i, (cout, stride) in enumerate(_se9_stage_plan(cfg)):
+            x = _se9_block(cfg, p, f"s{i}", x, cout, stride)
+    else:
+        x = jnp.maximum(_conv(obs, p["stem.w"], 2) + p["stem.b"], 0.0)
+        x = _max_pool(x, 3, 2)
+        for i, (width, stride, blocks) in enumerate(_r50_stage_plan(cfg)):
+            for j in range(blocks):
+                x = _r50_block(p, f"s{i}b{j}", x, width, stride if j == 0 else 1)
+    n = x.shape[0]
+    flat = x.reshape(n, -1)
+    return jnp.maximum(flat @ p["fc_vis.w"] + p["fc_vis.b"], 0.0)
+
+
+def _lstm(cfg: ModelConfig, p: Params, x, h, c):
+    if cfg.use_pallas:
+        return kad.lstm_cell(x, h, c, p["lstm.wx"], p["lstm.wh"], p["lstm.b"])
+    return kref.lstm_cell_ref(x, h, c, p["lstm.wx"], p["lstm.wh"], p["lstm.b"])
+
+
+def policy_step(cfg: ModelConfig, p: Params, obs, goal, h, c):
+    """One inference step (rollout hot path).
+
+    Args:
+      obs: ``[N,R,R,C]`` in [0,1]; goal: ``[N,3]``; h, c: ``[N,hidden]``.
+
+    Returns:
+      ``(logits[N,A], value[N], h_new, c_new)``.
+    """
+    vis = encode_visual(cfg, p, obs)
+    gemb = jnp.maximum(goal @ p["goal.w"] + p["goal.b"], 0.0)
+    x = jnp.concatenate([vis, gemb], axis=-1)
+    h_new, c_new = _lstm(cfg, p, x, h, c)
+    logits = h_new @ p["actor.w"] + p["actor.b"]
+    value = (h_new @ p["critic.w"] + p["critic.b"])[:, 0]
+    return logits, value, h_new, c_new
+
+
+def policy_sequence(cfg: ModelConfig, p: Params, obs, goal, h0, c0, notdone):
+    """BPTT forward over an L-step rollout slice (training path).
+
+    Args:
+      obs: ``[B,L,R,R,C]``; goal: ``[B,L,3]``; h0, c0: ``[B,hidden]``;
+      notdone: ``[B,L]`` — 0 where step t begins a fresh episode (hidden
+      state reset, DD-PPO behaviour), else 1.
+
+    Returns:
+      ``(logits[B,L,A], values[B,L])``.
+    """
+    b, l = obs.shape[0], obs.shape[1]
+    # Encode all frames at once: better XLA fusion than per-step convs.
+    vis = encode_visual(cfg, p, obs.reshape((b * l,) + obs.shape[2:]))
+    vis = vis.reshape(b, l, -1)
+    gemb = jnp.maximum(goal @ p["goal.w"] + p["goal.b"], 0.0)
+    x_seq = jnp.concatenate([vis, gemb], axis=-1)  # [B,L,Din]
+
+    def step(carry, inp):
+        h, c = carry
+        x_t, nd_t = inp
+        h = h * nd_t[:, None]
+        c = c * nd_t[:, None]
+        h, c = _lstm(cfg, p, x_t, h, c)
+        return (h, c), h
+
+    xs = (x_seq.transpose(1, 0, 2), notdone.transpose(1, 0))
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs)
+    hs = hs.transpose(1, 0, 2)  # [B,L,H]
+    logits = hs @ p["actor.w"] + p["actor.b"]
+    values = (hs @ p["critic.w"] + p["critic.b"])[..., 0]
+    return logits, values

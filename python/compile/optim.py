@@ -1,0 +1,103 @@
+"""Optimizer update artifacts: Lamb (paper §3.4) and Adam (Fig. A3 baseline).
+
+Both operate on the flat parameter/moment vectors, looping over the layer
+layout at trace time so each layer gets its own trust ratio (Lamb) while the
+Rust side only ever sees four flat buffers (params, m, v, step).
+
+Parameter grouping (paper Appendix B): matrix-shaped parameters (ndim >= 2:
+convs, FCs, LSTM weights) use the clipped trust ratio with rho = 0.01;
+bias / fixup-scalar / gain parameters (ndim < 2) use rho = 1.0, which makes
+the update exactly AdamW for those groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import lamb as lamb_kernel
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    """Lamb/Adam hyper-parameters (paper Table A4)."""
+
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01  # lambda
+    rho: float = 0.01  # trust-ratio clip for matrix params
+    rho_scalar: float = 1.0  # bias/fixup/gain params -> plain AdamW
+
+
+def _layer_slices(cfg: M.ModelConfig):
+    """Yield (name, offset, size, is_matrix) over the flat layout."""
+    for name, off, shape in M.param_layout(cfg):
+        size = int(math.prod(shape)) if shape else 1
+        yield name, off, size, len(shape) >= 2
+
+
+def update(
+    cfg: M.ModelConfig,
+    ocfg: OptimConfig,
+    flat_params,
+    m,
+    v,
+    step,
+    flat_grads,
+    lr,
+    *,
+    algo: str = "lamb",
+    use_pallas: bool = True,
+):
+    """One optimizer step over the flat vectors.
+
+    Args:
+      flat_params, m, v, flat_grads: ``f32[P]``.
+      step: ``f32[]`` scalar step count *before* this update.
+      lr: ``f32[]`` scalar learning rate (the schedule lives in Rust).
+      algo: "lamb" (paper) or "adam" (Fig. A3 ablation; plain AdamW, i.e.
+        trust ratio pinned to 1 for every group).
+
+    Returns:
+      ``(flat_params', m', v', step')``.
+    """
+    step_new = step + 1.0
+    new_p = []
+    new_m = []
+    new_v = []
+    for name, off, size, is_matrix in _layer_slices(cfg):
+        theta = jnp.ravel(jnp.asarray(flat_params[off : off + size]))
+        mm = m[off : off + size]
+        vv = v[off : off + size]
+        g = flat_grads[off : off + size]
+        if algo == "lamb":
+            rho = ocfg.rho if is_matrix else ocfg.rho_scalar
+        else:
+            rho = 1.0
+        kw = dict(
+            lr=lr,
+            beta1=ocfg.beta1,
+            beta2=ocfg.beta2,
+            eps=ocfg.eps,
+            lam=ocfg.weight_decay,
+            rho=rho,
+            step=step_new,
+        )
+        if use_pallas:
+            t2, m2, v2 = lamb_kernel.lamb_layer(theta, mm, vv, g, **kw)
+        else:
+            t2, m2, v2 = kref.lamb_layer_ref(theta, mm, vv, g, **kw)
+        new_p.append(t2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return (
+        jnp.concatenate(new_p),
+        jnp.concatenate(new_m),
+        jnp.concatenate(new_v),
+        step_new,
+    )

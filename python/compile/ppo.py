@@ -1,0 +1,94 @@
+"""PPO loss and gradient computation (paper §3.4, Table A4 hyper-params).
+
+The ``grad`` AOT artifact wraps :func:`ppo_grad`: given the flat parameter
+vector and one minibatch (a slice over the env dimension of a rollout, full
+L-step sequences for BPTT), it returns the flat gradient vector and the loss
+diagnostics. Gradient *application* is a separate artifact (optim.py) so the
+Rust coordinator can average gradients across DD-PPO shards in between —
+exactly the paper's multi-GPU dataflow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class PpoConfig:
+    """PPO hyper-parameters (paper Table A4)."""
+
+    clip: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    max_grad_norm: float = 1.0
+    # gamma / gae_lambda live in the Rust coordinator (GAE runs in Rust).
+
+
+def _log_softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    return z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+
+
+def ppo_loss(cfg: M.ModelConfig, pcfg: PpoConfig, params, batch):
+    """PPO clipped surrogate + value + entropy losses over one minibatch.
+
+    ``batch`` fields (B = minibatch envs, L = rollout length):
+      obs[B,L,R,R,C], goal[B,L,3], h0[B,H], c0[B,H], actions i32[B,L],
+      logp_old[B,L], returns[B,L], adv[B,L], notdone[B,L].
+
+    Returns ``(total_loss, aux[4])`` with aux = [policy, value, entropy,
+    approx_kl] for the metrics pipeline.
+    """
+    obs, goal, h0, c0, actions, logp_old, returns, adv, notdone = batch
+    logits, values = M.policy_sequence(cfg, params, obs, goal, h0, c0, notdone)
+    logp_all = _log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0]
+
+    ratio = jnp.exp(logp - logp_old)
+    surr1 = ratio * adv
+    surr2 = jnp.clip(ratio, 1.0 - pcfg.clip, 1.0 + pcfg.clip) * adv
+    policy_loss = -jnp.mean(jnp.minimum(surr1, surr2))
+
+    value_loss = 0.5 * jnp.mean((returns - values) ** 2)
+
+    probs = jnp.exp(logp_all)
+    entropy = -jnp.mean(jnp.sum(probs * logp_all, axis=-1))
+
+    approx_kl = jnp.mean(logp_old - logp)
+
+    total = (
+        policy_loss
+        + pcfg.value_coef * value_loss
+        - pcfg.entropy_coef * entropy
+    )
+    return total, jnp.stack([policy_loss, value_loss, entropy, approx_kl])
+
+
+def clip_grad_norm(flat_grad, max_norm):
+    """Global-norm gradient clipping over the flat gradient vector."""
+    norm = jnp.sqrt(jnp.sum(flat_grad * flat_grad))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return flat_grad * scale
+
+
+def ppo_grad(cfg: M.ModelConfig, pcfg: PpoConfig, flat_params, batch):
+    """Flat-in/flat-out gradient step (the ``grad`` artifact body).
+
+    Returns ``(flat_grads[P], losses[4])``. Gradients are global-norm
+    clipped here (Table A4: max grad norm 1.0) so shard averaging in Rust
+    composes with clipping the same way DD-PPO does (clip before reduce).
+    """
+
+    def loss_fn(flat):
+        params = M.unflatten_params(cfg, flat)
+        return ppo_loss(cfg, pcfg, params, batch)
+
+    (_, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(flat_params)
+    g = clip_grad_norm(g, pcfg.max_grad_norm)
+    return g, aux

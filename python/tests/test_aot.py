@@ -1,0 +1,107 @@
+"""AOT export tests: HLO text well-formedness + manifest schema.
+
+These run the actual lowering for the tiny test preset (seconds) and verify
+the emitted HLO parses structurally (entry computation, parameter counts)
+and that the manifest layout matches the model contract — the exact
+information the Rust runtime consumes.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+TEST_PRESET = aot.presets_table()["test"]
+CFG = TEST_PRESET.cfg
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    entry = aot.export_preset(TEST_PRESET, out, verbose=False)
+    return out, entry
+
+
+def _param_count(hlo_text: str) -> int:
+    """Count parameter instructions in the ENTRY computation."""
+    entry = hlo_text[hlo_text.index("ENTRY") :]
+    return entry.count("= parameter(") + entry.count(" parameter(")
+
+
+def test_manifest_entry_schema(exported):
+    _, entry = exported
+    for key in (
+        "name", "encoder", "res", "in_ch", "base_c", "hidden", "num_actions",
+        "num_params", "files", "layout", "infer_ns", "grad_bls",
+    ):
+        assert key in entry, key
+    assert entry["num_params"] == M.num_params(CFG)
+    assert entry["files"].keys() >= {
+        "init", "infer_n4", "grad_b2l4", "update_lamb", "update_adam",
+    }
+
+
+def test_layout_matches_model(exported):
+    _, entry = exported
+    lay = M.param_layout(CFG)
+    assert len(entry["layout"]) == len(lay)
+    for got, (name, off, shape) in zip(entry["layout"], lay):
+        assert got["name"] == name
+        assert got["offset"] == off
+        assert tuple(got["shape"]) == shape
+
+
+def test_hlo_files_exist_and_parse_header(exported):
+    out, entry = exported
+    for kind, fname in entry["files"].items():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), fname
+        text = open(path).read()
+        assert text.startswith("HloModule"), kind
+        assert "ENTRY" in text, kind
+
+
+def test_infer_artifact_signature(exported):
+    out, entry = exported
+    text = open(os.path.join(out, entry["files"]["infer_n4"])).read()
+    assert _param_count(text) == 5  # params, obs, goal, h, c
+    p = entry["num_params"]
+    assert f"f32[{p}]" in text
+    assert "f32[4,32,32,1]" in text  # obs N=4
+
+
+def test_grad_artifact_signature(exported):
+    out, entry = exported
+    text = open(os.path.join(out, entry["files"]["grad_b2l4"])).read()
+    assert _param_count(text) == 10
+    assert "f32[2,4,32,32,1]" in text  # obs [B=2, L=4]
+    assert "s32[2,4]" in text  # actions
+
+
+def test_update_artifact_signature(exported):
+    out, entry = exported
+    for kind in ("update_lamb", "update_adam"):
+        text = open(os.path.join(out, entry["files"][kind])).read()
+        assert _param_count(text) == 6  # params, m, v, step, grads, lr
+
+
+def test_main_writes_manifest(tmp_path):
+    out = str(tmp_path / "arts")
+    aot.main(["--out-dir", out, "--presets", "test", "--quiet"])
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    assert man["version"] == 1
+    assert "test" in man["variants"]
+    # incremental merge: re-export keeps existing variants
+    aot.main(["--out-dir", out, "--presets", "test", "--quiet"])
+    man2 = json.load(open(os.path.join(out, "manifest.json")))
+    assert man2["variants"].keys() == man["variants"].keys()
+
+
+def test_unknown_preset_rejected(tmp_path):
+    with pytest.raises(SystemExit):
+        aot.main(["--out-dir", str(tmp_path), "--presets", "nope"])

@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes and block sizes; every property asserts
+``assert_allclose`` between the interpret-mode Pallas kernel and ``ref.py``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ad, lamb, lstm_cell, ref, se_excite
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# se_excite
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    n=st.integers(1, 70),
+    c=st.sampled_from([8, 16, 32, 64]),
+    r=st.sampled_from([4, 8, 16]),
+    block_n=st.sampled_from([4, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_se_excite_matches_ref(n, c, r, block_n, seed):
+    rng = np.random.default_rng(seed)
+    cr = max(c // r, 1)
+    pooled = _arr(rng, (n, c))
+    w1, b1 = _arr(rng, (c, cr), 0.2), _arr(rng, (cr,), 0.2)
+    w2, b2 = _arr(rng, (cr, c), 0.2), _arr(rng, (c,), 0.2)
+    out = se_excite.se_excite(pooled, w1, b1, w2, b2, block_n=block_n)
+    expect = ref.se_excite_ref(pooled, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+    assert out.shape == (n, c)
+    assert np.all(out >= 0.0) and np.all(out <= 1.0)
+
+
+def test_se_excite_vmem_budget():
+    """Paper-scale largest stage fits VMEM with headroom (DESIGN.md §Perf)."""
+    assert se_excite.vmem_bytes(128, 512, 16) < 16 * 1024 * 1024 // 4
+
+
+def test_se_excite_grad_matches_ref():
+    rng = np.random.default_rng(0)
+    c, cr = 32, 2
+    args = (
+        _arr(rng, (8, c)),
+        _arr(rng, (c, cr), 0.2),
+        _arr(rng, (cr,), 0.2),
+        _arr(rng, (cr, c), 0.2),
+        _arr(rng, (c,), 0.2),
+    )
+    for argnum in range(5):
+        g = jax.grad(lambda *a: jnp.sum(ad.se_excite(*a)), argnums=argnum)(*args)
+        gr = jax.grad(lambda *a: jnp.sum(ref.se_excite_ref(*a)), argnums=argnum)(*args)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    n=st.integers(1, 40),
+    din=st.sampled_from([8, 24, 64]),
+    h=st.sampled_from([16, 32, 64]),
+    block_n=st.sampled_from([4, 8, 128]),
+    block_h=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_lstm_cell_matches_ref(n, din, h, block_n, block_h, seed):
+    rng = np.random.default_rng(seed)
+    x, hh, cc = _arr(rng, (n, din), 0.5), _arr(rng, (n, h), 0.5), _arr(rng, (n, h), 0.5)
+    wx, wh, b = _arr(rng, (din, 4, h), 0.2), _arr(rng, (h, 4, h), 0.2), _arr(rng, (4, h), 0.2)
+    h_new, c_new = lstm_cell.lstm_cell(
+        x, hh, cc, wx, wh, b, block_n=block_n, block_h=block_h
+    )
+    h_ref, c_ref = ref.lstm_cell_ref(x, hh, cc, wx, wh, b)
+    np.testing.assert_allclose(h_new, h_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_new, c_ref, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_state_bounded():
+    """|h| <= 1 always (o*tanh); c bounded by f*c0 + i*g geometric sum."""
+    rng = np.random.default_rng(1)
+    n, din, h = 16, 32, 32
+    x = _arr(rng, (n, din), 3.0)
+    hh = np.zeros((n, h), np.float32)
+    cc = np.zeros((n, h), np.float32)
+    wx, wh, b = _arr(rng, (din, 4, h), 1.0), _arr(rng, (h, 4, h), 1.0), _arr(rng, (4, h))
+    for _ in range(8):
+        hh, cc = lstm_cell.lstm_cell(x, hh, cc, wx, wh, b)
+        hh, cc = np.asarray(hh), np.asarray(cc)
+    assert np.all(np.abs(hh) <= 1.0 + 1e-6)
+
+
+def test_lstm_cell_grad_matches_ref():
+    rng = np.random.default_rng(2)
+    n, din, h = 5, 12, 16
+    args = (
+        _arr(rng, (n, din), 0.5),
+        _arr(rng, (n, h), 0.5),
+        _arr(rng, (n, h), 0.5),
+        _arr(rng, (din, 4, h), 0.2),
+        _arr(rng, (h, 4, h), 0.2),
+        _arr(rng, (4, h), 0.2),
+    )
+    for argnum in range(6):
+        g = jax.grad(
+            lambda *a: jnp.sum(ad.lstm_cell(*a)[0] + ad.lstm_cell(*a)[1]),
+            argnums=argnum,
+        )(*args)
+        gr = jax.grad(
+            lambda *a: jnp.sum(ref.lstm_cell_ref(*a)[0] + ref.lstm_cell_ref(*a)[1]),
+            argnums=argnum,
+        )(*args)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-6)
+
+
+def test_lstm_vmem_budget_paper_scale():
+    assert lstm_cell.vmem_bytes(128, 128, 544, 512) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# lamb
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    p=st.integers(1, 5000),
+    block=st.sampled_from([64, 256, 65536]),
+    step=st.integers(1, 1000),
+    rho=st.sampled_from([1e-4, 1e-3, 1e-2, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_lamb_layer_matches_ref(p, block, step, rho, seed):
+    rng = np.random.default_rng(seed)
+    theta = _arr(rng, (p,))
+    m = _arr(rng, (p,), 0.01)
+    v = np.abs(_arr(rng, (p,), 0.01))
+    g = _arr(rng, (p,), 0.1)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, lam=0.01, rho=rho, step=step)
+    t1, m1, v1 = lamb.lamb_layer(theta, m, v, g, block=block, **kw)
+    t2, m2, v2 = ref.lamb_layer_ref(theta, m, v, g, **kw)
+    np.testing.assert_allclose(t1, t2, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-7)
+
+
+def test_lamb_zero_init_layer_uses_rho_floor():
+    """Zero-init layers (fixup conv2/conv3): phi(0)=0 -> r clipped up to rho.
+
+    This is the paper's observation that the rho clip matters exactly at the
+    start of training for zero-initialized layers.
+    """
+    p = 64
+    theta = np.zeros(p, np.float32)
+    m = np.zeros(p, np.float32)
+    v = np.zeros(p, np.float32)
+    g = np.ones(p, np.float32)
+    rho = 0.01
+    t1, _, _ = lamb.lamb_layer(
+        theta, m, v, g, lr=1.0, beta1=0.9, beta2=0.999, eps=1e-8, lam=0.01,
+        rho=rho, step=1,
+    )
+    # direction ~= 1 elementwise; update magnitude must be ~rho * lr
+    np.testing.assert_allclose(np.asarray(t1), -rho * np.ones(p), rtol=1e-3)
+
+
+def test_lamb_rho_one_is_adamw():
+    """rho=1 pins the trust ratio to 1: the update equals plain AdamW."""
+    rng = np.random.default_rng(3)
+    p = 257
+    theta, g = _arr(rng, (p,)), _arr(rng, (p,), 0.1)
+    m = np.zeros(p, np.float32)
+    v = np.zeros(p, np.float32)
+    lr, b1, b2, eps, lam = 1e-3, 0.9, 0.999, 1e-8, 0.01
+    t1, _, _ = lamb.lamb_layer(
+        theta, m, v, g, lr=lr, beta1=b1, beta2=b2, eps=eps, lam=lam, rho=1.0, step=1
+    )
+    # manual AdamW step
+    m2 = (1 - b1) * g
+    v2 = (1 - b2) * g * g
+    d = (m2 / (1 - b1)) / (np.sqrt(v2 / (1 - b2)) + eps) + lam * theta
+    np.testing.assert_allclose(np.asarray(t1), theta - lr * d, rtol=1e-4, atol=1e-6)
+
+
+def test_trust_ratio_clip_bounds():
+    for tss, dss in [(0.0, 1.0), (1e6, 1e-8), (1.0, 1.0), (100.0, 1e4)]:
+        r = float(ref.trust_ratio_ref(jnp.float32(tss), jnp.float32(dss), 0.01))
+        assert 0.01 - 1e-6 <= r <= 100.0 + 1e-4
+
+
+def test_adam_dir_partial_sums_exact():
+    """Padding tail must not leak into the norm reductions."""
+    rng = np.random.default_rng(4)
+    p = 100  # not a multiple of block
+    theta, g = _arr(rng, (p,)), _arr(rng, (p,), 0.1)
+    m = _arr(rng, (p,), 0.01)
+    v = np.abs(_arr(rng, (p,), 0.01))
+    scal = np.array([0.9, 0.999, 1e-8, 0.01, 10.0, 31.6], np.float32)
+    m1, v1, d, tss, dss = lamb.adam_dir(theta, m, v, g, scal, block=64)
+    _, _, d_ref, tss_ref, dss_ref = ref.adam_dir_ref(
+        theta, m, v, g, *[float(x) for x in scal]
+    )
+    np.testing.assert_allclose(d, d_ref, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(tss), float(tss_ref), rtol=1e-5)
+    np.testing.assert_allclose(float(dss), float(dss_ref), rtol=1e-5)

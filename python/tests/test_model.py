@@ -1,0 +1,158 @@
+"""L2 model tests: shapes, flat-param contract, fixup/init properties."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.ModelConfig(res=32, base_c=8, hidden=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return M.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def test_space_to_depth_roundtrip_values():
+    x = np.arange(2 * 8 * 8 * 3, dtype=np.float32).reshape(2, 8, 8, 3)
+    y = np.asarray(M.space_to_depth(x, 4))
+    assert y.shape == (2, 2, 2, 48)
+    # every input value appears exactly once
+    assert sorted(y.ravel().tolist()) == sorted(x.ravel().tolist())
+    # top-left output pixel holds the top-left 4x4 input patch
+    patch = x[0, :4, :4, :].reshape(-1)
+    np.testing.assert_array_equal(np.sort(y[0, 0, 0]), np.sort(patch))
+
+
+def test_flat_layout_bijective(tiny_params):
+    flat = M.flatten_params(tiny_params)
+    assert flat.shape == (M.num_params(TINY),)
+    back = M.unflatten_params(TINY, flat)
+    assert set(back) == set(tiny_params)
+    for k in tiny_params:
+        np.testing.assert_array_equal(np.asarray(tiny_params[k]), np.asarray(back[k]))
+
+
+def test_layout_offsets_contiguous():
+    lay = M.param_layout(TINY)
+    off = 0
+    for name, o, shape in lay:
+        assert o == off, name
+        off += int(np.prod(shape)) if shape else 1
+    assert off == M.num_params(TINY)
+
+
+def test_fixup_init_properties(tiny_params):
+    p = tiny_params
+    # last conv of each residual branch is zero-initialized
+    for i in range(4):
+        assert float(jnp.abs(p[f"s{i}.conv2.w"]).max()) == 0.0
+        assert float(p[f"s{i}.scale"]) == 1.0
+        assert float(p[f"s{i}.b1a"]) == 0.0
+    # forget-gate bias starts at 1
+    np.testing.assert_array_equal(np.asarray(p["lstm.b"][1]), np.ones(64))
+    np.testing.assert_array_equal(np.asarray(p["lstm.b"][0]), np.zeros(64))
+
+
+def test_init_deterministic():
+    a = M.flatten_params(M.init_params(TINY, jax.random.PRNGKey(7)))
+    b = M.flatten_params(M.init_params(TINY, jax.random.PRNGKey(7)))
+    c = M.flatten_params(M.init_params(TINY, jax.random.PRNGKey(8)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(jnp.abs(a - c).max()) > 0.0
+
+
+@pytest.mark.parametrize("n", [1, 3, 5])
+def test_policy_step_shapes(tiny_params, n):
+    obs = np.random.rand(n, 32, 32, 1).astype(np.float32)
+    goal = np.random.rand(n, 3).astype(np.float32)
+    h = np.zeros((n, 64), np.float32)
+    c = np.zeros((n, 64), np.float32)
+    logits, value, h2, c2 = M.policy_step(TINY, tiny_params, obs, goal, h, c)
+    assert logits.shape == (n, 4)
+    assert value.shape == (n,)
+    assert h2.shape == (n, 64) and c2.shape == (n, 64)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_policy_step_output_sane_at_init(tiny_params):
+    """Fixup keeps activations bounded at init: logits near zero (gain .01)."""
+    obs = np.random.rand(16, 32, 32, 1).astype(np.float32)
+    goal = np.random.rand(16, 3).astype(np.float32)
+    z = np.zeros((16, 64), np.float32)
+    logits, value, _, _ = M.policy_step(TINY, tiny_params, obs, goal, z, z)
+    assert float(np.abs(np.asarray(logits)).max()) < 1.0
+    assert float(np.abs(np.asarray(value)).max()) < 5.0
+
+
+def test_policy_sequence_matches_stepwise(tiny_params):
+    """Scan BPTT == manual per-step rollout with identical hidden handling."""
+    b, l = 2, 5
+    rng = np.random.default_rng(0)
+    obs = rng.random((b, l, 32, 32, 1), dtype=np.float32)
+    goal = rng.random((b, l, 3), dtype=np.float32)
+    h = rng.standard_normal((b, 64)).astype(np.float32) * 0.1
+    c = rng.standard_normal((b, 64)).astype(np.float32) * 0.1
+    notdone = np.ones((b, l), np.float32)
+    notdone[0, 2] = 0.0  # episode reset mid-sequence
+    logits_seq, values_seq = M.policy_sequence(
+        TINY, tiny_params, obs, goal, h, c, notdone
+    )
+    hh, cc = jnp.asarray(h), jnp.asarray(c)
+    for t in range(l):
+        hh = hh * notdone[:, t][:, None]
+        cc = cc * notdone[:, t][:, None]
+        lg, vv, hh, cc = M.policy_step(
+            TINY, tiny_params, obs[:, t], goal[:, t], hh, cc
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits_seq[:, t]), np.asarray(lg), rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(values_seq[:, t]), np.asarray(vv), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_pallas_and_ref_paths_agree(tiny_params):
+    cfg_ref = M.ModelConfig(res=32, base_c=8, hidden=64, use_pallas=False)
+    obs = np.random.rand(3, 32, 32, 1).astype(np.float32)
+    goal = np.random.rand(3, 3).astype(np.float32)
+    z = np.zeros((3, 64), np.float32)
+    a = M.policy_step(TINY, tiny_params, obs, goal, z, z)
+    b = M.policy_step(cfg_ref, tiny_params, obs, goal, z, z)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5)
+
+
+def test_r50_encoder_shapes():
+    cfg = M.ModelConfig(encoder="r50", res=64, base_c=8, hidden=64)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    obs = np.random.rand(2, 64, 64, 1).astype(np.float32)
+    feat = M.encode_visual(cfg, p, obs)
+    assert feat.shape == (2, 64)
+    assert np.all(np.isfinite(np.asarray(feat)))
+    # r50 has many more params than se9 at equal base width
+    se9 = M.ModelConfig(encoder="se9", res=64, base_c=8, hidden=64)
+    assert M.num_params(cfg) > 2 * M.num_params(se9)
+
+
+def test_rgb_variant_shapes():
+    cfg = M.ModelConfig(res=32, in_ch=3, base_c=8, hidden=64)
+    p = M.init_params(cfg, jax.random.PRNGKey(1))
+    obs = np.random.rand(2, 32, 32, 3).astype(np.float32)
+    logits, value, _, _ = M.policy_step(
+        cfg, p, obs, np.zeros((2, 3), np.float32),
+        np.zeros((2, 64), np.float32), np.zeros((2, 64), np.float32),
+    )
+    assert logits.shape == (2, 4)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_variant_key_stable(seed):
+    cfg = M.ModelConfig(res=64, in_ch=1)
+    assert cfg.variant == "se9_depth_r64_c16_h256"

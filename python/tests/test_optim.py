@@ -1,0 +1,124 @@
+"""Optimizer update tests: flat-vector Lamb/Adam over the real layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optim as O
+from compile.kernels import ref as kref
+
+TINY = M.ModelConfig(res=32, base_c=8, hidden=64)
+OCFG = O.OptimConfig()
+
+
+@pytest.fixture(scope="module")
+def state():
+    flat = M.flatten_params(M.init_params(TINY, jax.random.PRNGKey(0)))
+    p = flat.shape[0]
+    rng = np.random.default_rng(0)
+    g = (rng.standard_normal(p) * 0.01).astype(np.float32)
+    return flat, np.zeros(p, np.float32), np.zeros(p, np.float32), g
+
+
+def test_update_changes_params_and_increments_step(state):
+    flat, m, v, g = state
+    p2, m2, v2, s2 = O.update(
+        TINY, OCFG, flat, m, v, jnp.float32(0.0), g, jnp.float32(2.5e-4)
+    )
+    assert float(s2) == 1.0
+    assert float(jnp.max(jnp.abs(p2 - flat))) > 0.0
+    assert float(jnp.max(jnp.abs(m2))) > 0.0
+    assert np.all(np.asarray(v2) >= 0.0)
+
+
+def test_update_pallas_matches_ref_path(state):
+    flat, m, v, g = state
+    a = O.update(TINY, OCFG, flat, m, v, jnp.float32(3.0), g, jnp.float32(1e-3))
+    b = O.update(
+        TINY, OCFG, flat, m, v, jnp.float32(3.0), g, jnp.float32(1e-3),
+        use_pallas=False,
+    )
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-7)
+
+
+def test_lamb_per_layer_matches_manual_loop(state):
+    """The flat update must equal applying lamb_layer_ref layer by layer."""
+    flat, m, v, g = state
+    lr, step = 1e-3, 0.0
+    p2, m2, v2, _ = O.update(
+        TINY, OCFG, flat, m, v, jnp.float32(step), g, jnp.float32(lr)
+    )
+    p2 = np.asarray(p2)
+    for name, off, shape in M.param_layout(TINY):
+        size = int(np.prod(shape)) if shape else 1
+        rho = OCFG.rho if len(shape) >= 2 else OCFG.rho_scalar
+        t_ref, _, _ = kref.lamb_layer_ref(
+            jnp.asarray(flat[off : off + size]),
+            jnp.asarray(m[off : off + size]),
+            jnp.asarray(v[off : off + size]),
+            jnp.asarray(g[off : off + size]),
+            lr=lr, beta1=OCFG.beta1, beta2=OCFG.beta2, eps=OCFG.eps,
+            lam=OCFG.weight_decay, rho=rho, step=step + 1,
+        )
+        np.testing.assert_allclose(
+            p2[off : off + size], np.asarray(t_ref), rtol=1e-5, atol=1e-7,
+            err_msg=name,
+        )
+
+
+def test_adam_mode_ignores_trust_ratio(state):
+    """algo='adam' must equal rho=1 (AdamW) for every layer group."""
+    flat, m, v, g = state
+    a = O.update(
+        TINY, OCFG, flat, m, v, jnp.float32(0.0), g, jnp.float32(1e-3), algo="adam"
+    )
+    ocfg_rho1 = O.OptimConfig(rho=1.0, rho_scalar=1.0)
+    b = O.update(
+        TINY, ocfg_rho1, flat, m, v, jnp.float32(0.0), g, jnp.float32(1e-3),
+        algo="lamb",
+    )
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6)
+
+
+def test_weight_decay_shrinks_weights():
+    """With zero gradients, AdamW still decays matrix weights toward 0."""
+    cfg = TINY
+    flat = M.flatten_params(M.init_params(cfg, jax.random.PRNGKey(1)))
+    p = flat.shape[0]
+    z = np.zeros(p, np.float32)
+    p2, _, _, _ = O.update(
+        cfg, OCFG, flat, z, z, jnp.float32(10.0), z, jnp.float32(1e-2), algo="adam"
+    )
+    # pick a matrix layer with nonzero init (fc_vis.w)
+    lay = {n: (o, s) for n, o, s in M.param_layout(cfg)}
+    off, shape = lay["fc_vis.w"]
+    size = int(np.prod(shape))
+    w0 = np.asarray(flat[off : off + size])
+    w1 = np.asarray(p2[off : off + size])
+    assert float(np.sum(w1 * w1)) < float(np.sum(w0 * w0))
+
+
+def test_repeated_updates_converge_quadratic():
+    """Optimizer sanity: Lamb on a quadratic reaches the minimum region.
+
+    Uses a fake 1-layer 'model' by driving lamb_layer_ref directly through
+    optim-style repeated updates.
+    """
+    rng = np.random.default_rng(2)
+    theta = rng.standard_normal(32).astype(np.float32)
+    target = rng.standard_normal(32).astype(np.float32)
+    m = np.zeros(32, np.float32)
+    v = np.zeros(32, np.float32)
+    for step in range(1, 400):
+        g = theta - target
+        theta, m, v = (
+            np.asarray(x)
+            for x in kref.lamb_layer_ref(
+                theta, m, v, g, lr=3e-2, beta1=0.9, beta2=0.999, eps=1e-8,
+                lam=0.0, rho=0.01, step=step,
+            )
+        )
+    assert float(np.abs(theta - target).mean()) < 0.15

@@ -1,0 +1,118 @@
+"""PPO loss/grad tests: hand-computed cases + clipping/masking semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import ppo
+
+TINY = M.ModelConfig(res=32, base_c=8, hidden=64)
+PCFG = ppo.PpoConfig()
+
+
+def _batch(b=2, l=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.random((b, l, 32, 32, 1), dtype=np.float32),
+        rng.random((b, l, 3), dtype=np.float32),
+        np.zeros((b, 64), np.float32),
+        np.zeros((b, 64), np.float32),
+        rng.integers(0, 4, (b, l)).astype(np.int32),
+        (-np.abs(rng.random((b, l)))).astype(np.float32),
+        rng.random((b, l), dtype=np.float32),
+        rng.standard_normal((b, l)).astype(np.float32),
+        np.ones((b, l), np.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def flat():
+    return M.flatten_params(M.init_params(TINY, jax.random.PRNGKey(0)))
+
+
+def test_log_softmax_normalized():
+    logits = np.random.randn(7, 4).astype(np.float32)
+    lp = np.asarray(ppo._log_softmax(logits))
+    np.testing.assert_allclose(np.exp(lp).sum(-1), np.ones(7), rtol=1e-5)
+
+
+def test_loss_components_finite(flat):
+    params = M.unflatten_params(TINY, flat)
+    total, aux = ppo.ppo_loss(TINY, PCFG, params, _batch())
+    aux = np.asarray(aux)
+    assert np.isfinite(float(total))
+    assert np.all(np.isfinite(aux))
+    # entropy of a 4-action categorical is in (0, ln 4]
+    assert 0.0 < aux[2] <= np.log(4.0) + 1e-5
+
+
+def test_entropy_near_uniform_at_init(flat):
+    """Actor head init gain 0.01 => near-uniform policy => entropy ~ ln(4)."""
+    params = M.unflatten_params(TINY, flat)
+    _, aux = ppo.ppo_loss(TINY, PCFG, params, _batch())
+    assert float(aux[2]) > 0.95 * np.log(4.0)
+
+
+def test_ppo_clip_manual_case():
+    """PPO surrogate on a hand-built single-step case with known ratio."""
+    # Construct logits directly: bypass the network, test only the math.
+    clip = 0.2
+    logp_old = np.float32(np.log(0.25))
+    for adv, new_p in [(1.0, 0.5), (1.0, 0.1), (-1.0, 0.5), (-1.0, 0.1)]:
+        logp_new = np.log(new_p)
+        ratio = new_p / 0.25
+        surr1 = ratio * adv
+        surr2 = np.clip(ratio, 1 - clip, 1 + clip) * adv
+        expect = -min(surr1, surr2)
+        got = -float(
+            jnp.minimum(
+                jnp.exp(logp_new - logp_old) * adv,
+                jnp.clip(jnp.exp(logp_new - logp_old), 1 - clip, 1 + clip) * adv,
+            )
+        )
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_grad_shape_and_clipping(flat):
+    g, aux = ppo.ppo_grad(TINY, PCFG, flat, _batch())
+    assert g.shape == flat.shape
+    norm = float(jnp.sqrt(jnp.sum(g * g)))
+    assert norm <= PCFG.max_grad_norm + 1e-4
+
+
+def test_clip_grad_norm_identity_below_threshold():
+    g = jnp.asarray(np.array([0.3, 0.4], np.float32))  # norm 0.5
+    out = ppo.clip_grad_norm(g, 1.0)
+    np.testing.assert_allclose(np.asarray(out), [0.3, 0.4], rtol=1e-6)
+    out2 = ppo.clip_grad_norm(g * 10, 1.0)  # norm 5 -> scaled to 1
+    np.testing.assert_allclose(float(jnp.linalg.norm(out2)), 1.0, rtol=1e-5)
+
+
+def test_grad_descends_value_loss(flat):
+    """A small step along -grad must reduce the total loss (sanity)."""
+    batch = _batch(seed=3)
+    params = M.unflatten_params(TINY, flat)
+    total0, _ = ppo.ppo_loss(TINY, PCFG, params, batch)
+    g, _ = ppo.ppo_grad(TINY, PCFG, flat, batch)
+    flat2 = flat - 1e-2 * g
+    total1, _ = ppo.ppo_loss(TINY, PCFG, M.unflatten_params(TINY, flat2), batch)
+    assert float(total1) < float(total0)
+
+
+def test_notdone_masks_hidden_carry(flat):
+    """Zeroing notdone at t must make steps >= t independent of h0."""
+    params = M.unflatten_params(TINY, flat)
+    b, l = 1, 3
+    rng = np.random.default_rng(5)
+    obs = rng.random((b, l, 32, 32, 1), dtype=np.float32)
+    goal = rng.random((b, l, 3), dtype=np.float32)
+    notdone = np.ones((b, l), np.float32)
+    notdone[0, 0] = 0.0  # reset at the first step
+    h_a = np.zeros((b, 64), np.float32)
+    h_b = rng.standard_normal((b, 64)).astype(np.float32)
+    la, va = M.policy_sequence(TINY, params, obs, goal, h_a, h_a, notdone)
+    lb, vb = M.policy_sequence(TINY, params, obs, goal, h_b, h_b, notdone)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vb), rtol=1e-4, atol=1e-5)

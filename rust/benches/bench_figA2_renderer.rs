@@ -1,0 +1,66 @@
+//! Fig. A2 reproduction: standalone batch-renderer FPS across resolution x
+//! batch size (RGB sensor, Gibson-like scene, camera poses from a rollout).
+//!
+//! Paper shape: FPS saturates with batch size (by N~512 on the paper's
+//! GPU); at small N resolution barely matters (underutilization), at large
+//! N higher resolution costs proportionally more.
+
+use std::sync::Arc;
+
+use bps::bench::dataset;
+use bps::render::{BatchRenderer, RenderConfig, RenderItem, Sensor};
+use bps::util::pool::WorkerPool;
+use bps::util::rng::Rng;
+
+fn main() {
+    let ds = dataset("gibson").expect("dataset");
+    let scene = Arc::new(ds.load_scene(&ds.train[0], true).expect("scene"));
+    let pool = WorkerPool::new(WorkerPool::default_size());
+    let mut rng = Rng::new(3);
+    // camera trace: random navigable poses (a stand-in for a training run)
+    let poses: Vec<_> = (0..1024)
+        .map(|_| {
+            (
+                scene.navmesh.random_point(&mut rng).unwrap(),
+                rng.range_f32(0.0, std::f32::consts::TAU),
+            )
+        })
+        .collect();
+    println!("# Fig A2 — standalone renderer FPS (RGB, {} tris)", scene.mesh.num_tris());
+    print!("{:>6}", "N\\res");
+    let resolutions = [32usize, 64, 128, 256];
+    for r in resolutions {
+        print!(" {r:>9}");
+    }
+    println!();
+    for n in [1usize, 8, 32, 128, 512] {
+        print!("{n:>6}");
+        for res in resolutions {
+            let cfg = RenderConfig {
+                res,
+                sensor: Sensor::Rgb,
+                scale: 1,
+                mode: bps::render::PipelineMode::Pipelined,
+            };
+            let renderer = BatchRenderer::new(cfg, n);
+            let mut obs = vec![0.0f32; n * cfg.obs_floats()];
+            let items: Vec<RenderItem> = (0..n)
+                .map(|i| RenderItem {
+                    scene: Arc::clone(&scene),
+                    pos: poses[i % poses.len()].0,
+                    heading: poses[i % poses.len()].1,
+                })
+                .collect();
+            // warmup + measure
+            renderer.render_batch(&pool, &items, &mut obs);
+            let reps = (256 / n).max(1);
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                renderer.render_batch(&pool, &items, &mut obs);
+            }
+            let fps = (n * reps) as f64 / t0.elapsed().as_secs_f64();
+            print!(" {fps:>9.0}");
+        }
+        println!();
+    }
+}

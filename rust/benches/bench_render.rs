@@ -1,0 +1,48 @@
+//! Micro-bench + ablation: renderer pipeline modes and frustum culling —
+//! the §3.2 design choices in isolation (DESIGN.md ablation index).
+
+use std::sync::Arc;
+
+use bps::bench::dataset;
+use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
+use bps::util::pool::WorkerPool;
+use bps::util::rng::Rng;
+
+fn main() {
+    let ds = dataset("gibson").expect("dataset");
+    let scene = Arc::new(ds.load_scene(&ds.train[0], true).expect("scene"));
+    let pool = WorkerPool::new(WorkerPool::default_size());
+    let mut rng = Rng::new(5);
+    let n = 64;
+    let items: Vec<RenderItem> = (0..n)
+        .map(|_| RenderItem {
+            scene: Arc::clone(&scene),
+            pos: scene.navmesh.random_point(&mut rng).unwrap(),
+            heading: rng.range_f32(0.0, std::f32::consts::TAU),
+        })
+        .collect();
+    println!(
+        "# renderer ablations (N={n}, 64px, {} tris/scene)",
+        scene.mesh.num_tris()
+    );
+    for (label, mode, sensor) in [
+        ("depth fused", PipelineMode::Fused, Sensor::Depth),
+        ("depth pipelined", PipelineMode::Pipelined, Sensor::Depth),
+        ("rgb   fused", PipelineMode::Fused, Sensor::Rgb),
+        ("rgb   pipelined", PipelineMode::Pipelined, Sensor::Rgb),
+    ] {
+        let cfg = RenderConfig { res: 64, sensor, scale: 1, mode };
+        let renderer = BatchRenderer::new(cfg, n);
+        let mut obs = vec![0.0f32; n * cfg.obs_floats()];
+        renderer.render_batch(&pool, &items, &mut obs);
+        let reps = 10;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            renderer.render_batch(&pool, &items, &mut obs);
+        }
+        let fps = (n * reps) as f64 / t0.elapsed().as_secs_f64();
+        let s = renderer.stats();
+        let cullpct = 100.0 * s.chunks_culled as f64 / s.chunks_total.max(1) as f64;
+        println!("{label:<16} {fps:>9.0} FPS  ({cullpct:>4.1}% chunks culled)");
+    }
+}

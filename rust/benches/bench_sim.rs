@@ -1,0 +1,45 @@
+//! Micro-bench: batch simulator step throughput (steps/sec) vs batch size
+//! and thread count — the §3.1 dynamic-scheduling claim in isolation.
+
+use std::sync::Arc;
+
+use bps::bench::dataset;
+use bps::sim::{BatchSim, SimConfig, SimOutputs};
+use bps::util::pool::WorkerPool;
+
+fn main() {
+    let ds = dataset("gibson").expect("dataset");
+    let scene = Arc::new(ds.load_scene(&ds.train[0], false).expect("scene"));
+    println!("# batch simulator step throughput (PointNav, steps/sec)");
+    print!("{:>8}", "N\\thr");
+    let threads = [0usize, 2, 4, 8];
+    for t in threads {
+        print!(" {t:>10}");
+    }
+    println!();
+    for n in [16usize, 64, 256, 1024] {
+        print!("{n:>8}");
+        for t in threads {
+            let pool = WorkerPool::new(t);
+            let mut sim = BatchSim::new(
+                SimConfig::pointnav(),
+                (0..n).map(|_| Arc::clone(&scene)).collect(),
+                7,
+            );
+            let mut out = SimOutputs::with_capacity(n);
+            let actions: Vec<u8> = (0..n).map(|i| 1 + (i % 3) as u8).collect();
+            // warmup
+            for _ in 0..3 {
+                sim.step_batch(&pool, &actions, &mut out);
+            }
+            let reps = 20;
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                sim.step_batch(&pool, &actions, &mut out);
+            }
+            let sps = (n * reps) as f64 / t0.elapsed().as_secs_f64();
+            print!(" {sps:>10.0}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 1 reproduction: end-to-end training FPS for BPS, BPS-R50,
+//! WIJMANS++ and WIJMANS20 on Depth and RGB sensors.
+//!
+//! Paper shape to check: BPS >> WIJMANS++ > WIJMANS20, with one-to-two
+//! orders of magnitude between BPS and WIJMANS20; RGB slower than Depth.
+//! Absolute numbers are CPU-testbed-scale (DESIGN.md §1).
+//!
+//! Usage: cargo bench --bench bench_table1 [-- --shards8]
+//! Env: BPS_BENCH_ITERS=warmup,iters (default 1,3)
+
+use bps::bench::{bench_iters, ensure_dataset, measure_fps, table1_rows};
+
+fn main() {
+    let shards = if std::env::args().any(|a| a == "--shards8") { 8 } else { 1 };
+    let (warmup, iters) = bench_iters(0, 1);
+    let dir = ensure_dataset("gibson", 8).expect("dataset");
+    println!("# Table 1 — system performance (FPS), CPU testbed, shards={shards}");
+    println!(
+        "{:<8} {:<10} {:<11} {:>4} {:>6} {:>10} {:>8} {:>8} {:>8}",
+        "Sensor", "System", "CNN", "Res", "N", "FPS", "sim+rnd", "infer", "learn"
+    );
+    for sensor in ["depth", "rgb"] {
+        for row in table1_rows(sensor, shards) {
+            if row.cfg.variant.starts_with("r50") && !bps::bench::bench_full() {
+                println!(
+                    "{:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
+                    sensor, row.system
+                );
+                continue;
+            }
+            if !bps::bench::have_variant(&row.cfg.variant) {
+                println!(
+                    "{:<8} {:<10} (skipped: export preset {} first)",
+                    sensor, row.system, row.cfg.variant
+                );
+                continue;
+            }
+            let n = row.cfg.num_envs;
+            match measure_fps(row.cfg.clone(), &dir, warmup, iters) {
+                Ok(r) => println!(
+                    "{:<8} {:<10} {:<11} {:>4} {:>6} {:>10.0} {:>8.1} {:>8.1} {:>8.1}",
+                    sensor,
+                    row.system,
+                    row.cnn,
+                    row.res,
+                    n,
+                    r.fps,
+                    r.breakdown.0,
+                    r.breakdown.1,
+                    r.breakdown.2
+                ),
+                Err(e) => println!("{:<8} {:<10} error: {e:#}", sensor, row.system),
+            }
+        }
+    }
+}

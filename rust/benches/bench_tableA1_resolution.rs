@@ -1,0 +1,48 @@
+//! Table A1 reproduction: impact of visual-encoder input resolution on
+//! end-to-end FPS (64 vs 128; 128 renders at 256 and downsamples, §4.1).
+//!
+//! Paper shape: higher resolution costs throughput everywhere; the drop is
+//! largest when memory pressure also forces N down.
+
+use bps::bench::{bench_iters, ensure_dataset, measure_fps};
+use bps::config::Config;
+
+fn main() {
+    let (warmup, iters) = bench_iters(0, 1);
+    let dir = ensure_dataset("gibson", 8).expect("dataset");
+    println!("# Table A1 — input resolution vs FPS (BPS / BPS-R50)");
+    println!("{:<8} {:<10} {:>4} {:>6} {:>10}", "Sensor", "System", "Res", "N", "FPS");
+    // (label, variant, res, n, l, mb, scale)
+    let rows: Vec<(&str, &str, usize, usize, usize, usize, usize)> = vec![
+        ("BPS", "depth64", 64, 64, 32, 2, 1),
+        ("BPS", "depth128", 128, 16, 16, 2, 2),
+        ("BPS-R50", "r50_depth64", 64, 16, 16, 4, 1),
+        ("BPS-R50", "r50_depth128", 128, 16, 16, 4, 2),
+        ("BPS", "rgb64", 64, 64, 32, 2, 1),
+        ("BPS", "rgb128", 128, 16, 16, 2, 2),
+        ("BPS-R50", "r50_rgb128", 128, 16, 16, 4, 2),
+    ];
+    for (system, variant, res, n, l, mb, scale) in rows {
+        if (variant.starts_with("r50") || res == 128) && !bps::bench::bench_full() {
+            println!("(heavy row {variant} skipped; set BPS_BENCH_FULL=1)");
+            continue;
+        }
+        if !bps::bench::have_variant(variant) {
+            println!("(skipped {variant}: export the preset first)");
+            continue;
+        }
+        let mut cfg = Config::default();
+        cfg.variant = variant.into();
+        cfg.num_envs = n;
+        cfg.rollout_len = l;
+        cfg.num_minibatches = mb;
+        cfg.render_scale = scale;
+        cfg.k_scenes = 4;
+        cfg.memory_budget_mb = 16 * 1024;
+        let sensor = if variant.contains("rgb") { "rgb" } else { "depth" };
+        match measure_fps(cfg, &dir, warmup, iters) {
+            Ok(r) => println!("{sensor:<8} {system:<10} {res:>4} {n:>6} {:>10.0}", r.fps),
+            Err(e) => println!("{sensor:<8} {system:<10} error: {e:#}"),
+        }
+    }
+}

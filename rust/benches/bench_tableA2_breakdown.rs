@@ -1,0 +1,44 @@
+//! Fig. 5 + Table A2 reproduction: runtime breakdown (µs per frame) across
+//! Simulation+Rendering / Inference / Learning for every system.
+//!
+//! Paper shape: for BPS the DNN (inference+learning) dominates (~60%) even
+//! with complex 3D rendering — the simulator is no longer the bottleneck;
+//! for the R50 systems the DNN share exceeds 90%.
+
+use bps::bench::{bench_iters, ensure_dataset, measure_fps, table1_rows};
+
+fn main() {
+    let (warmup, iters) = bench_iters(0, 1);
+    let dir = ensure_dataset("gibson", 8).expect("dataset");
+    println!("# Table A2 / Fig 5 — runtime breakdown (us per frame)");
+    println!(
+        "{:<8} {:<10} {:<11} {:>10} {:>10} {:>10} {:>7}",
+        "Sensor", "System", "CNN", "Sim+Rend", "Inference", "Learning", "DNN%"
+    );
+    for sensor in ["depth", "rgb"] {
+        for row in table1_rows(sensor, 1) {
+            if row.cfg.variant.starts_with("r50") && !bps::bench::bench_full() {
+                println!(
+                    "{:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
+                    sensor, row.system
+                );
+                continue;
+            }
+            if !bps::bench::have_variant(&row.cfg.variant) {
+                println!("(skipped {}: export the preset first)", row.cfg.variant);
+                continue;
+            }
+            match measure_fps(row.cfg.clone(), &dir, warmup, iters) {
+                Ok(r) => {
+                    let (s, i, l) = r.breakdown;
+                    let dnn = (i + l) / (s + i + l).max(1e-9) * 100.0;
+                    println!(
+                        "{:<8} {:<10} {:<11} {:>10.1} {:>10.1} {:>10.1} {:>6.0}%",
+                        sensor, row.system, row.cnn, s, i, l, dnn
+                    );
+                }
+                Err(e) => println!("{:<8} {:<10} error: {e:#}", sensor, row.system),
+            }
+        }
+    }
+}

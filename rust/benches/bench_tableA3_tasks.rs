@@ -1,0 +1,48 @@
+//! Table A3 reproduction: Flee and Explore tasks on AI2-THOR-like scenes
+//! (Depth agents): end-to-end FPS plus the training-score window.
+//!
+//! Paper shape: both tasks run FASTER than PointGoalNav on the same system
+//! because thor-like scenes have far less geometry; Explore > Flee by a
+//! small margin (no geodesic distance computation needed per step).
+
+use bps::bench::{bench_iters, ensure_dataset, taskrow_config};
+use bps::coordinator::Coordinator;
+use bps::sim::Task;
+
+fn main() {
+    let (warmup, iters) = bench_iters(0, 1);
+    let dir = ensure_dataset("thor", 8).expect("dataset");
+    println!("# Table A3 — Flee / Explore (Depth, thor-like scenes)");
+    println!("{:<10} {:>10} {:>14}", "Task", "FPS", "TrainScore");
+    for task in [Task::PointNav, Task::Flee, Task::Explore] {
+        let mut cfg = taskrow_config(task);
+        cfg.dataset_dir = dir.clone();
+        if !bps::bench::have_variant(&cfg.variant) {
+            println!("(skipped: export preset {} first)", cfg.variant);
+            continue;
+        }
+        let mut coord = match Coordinator::new(cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("{task:?}: error: {e:#}");
+                continue;
+            }
+        };
+        for _ in 0..warmup {
+            coord.train_iteration().unwrap();
+        }
+        coord.prof.reset();
+        let t0 = std::time::Instant::now();
+        let mut frames = 0u64;
+        for _ in 0..iters {
+            frames += coord.train_iteration().unwrap().frames;
+        }
+        let fps = frames as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "{:<10} {:>10.0} {:>14.2}",
+            format!("{task:?}"),
+            fps,
+            coord.stats.score.mean()
+        );
+    }
+}

@@ -1,0 +1,189 @@
+//! Shared harness for the paper-table benches (`rust/benches/*`) and the
+//! examples: dataset caching, coordinator construction from a named system
+//! row (BPS / BPS-R50 / WIJMANS++ / WIJMANS20 — Table 1), and FPS
+//! measurement per the paper's methodology (§4.1: samples of experience
+//! over rollout-generation + training wall time).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Config, SimArch};
+use crate::coordinator::Coordinator;
+use crate::scene::{generate_dataset, Complexity, Dataset};
+use crate::sim::Task;
+
+/// Generate (once) and return a cached benchmark dataset directory.
+pub fn ensure_dataset(complexity: &str, n_train: usize) -> Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("datasets")
+        .join(format!("bench_{complexity}"));
+    if !dir.join("splits.json").exists() {
+        let cx = match complexity {
+            "gibson" => Complexity::gibson_like(),
+            "thor" => Complexity::thor_like(),
+            _ => Complexity::test(),
+        };
+        eprintln!("generating bench dataset {dir:?} ...");
+        generate_dataset(&dir, n_train, 2, 2, cx, 2024)?;
+    }
+    Ok(dir)
+}
+
+pub fn dataset(complexity: &str) -> Result<Dataset> {
+    Dataset::open(&ensure_dataset(complexity, 8)?)
+}
+
+/// One row of Table 1: a named system configuration.
+#[derive(Clone, Debug)]
+pub struct SystemRow {
+    pub system: &'static str,
+    pub cnn: &'static str,
+    pub res: usize,
+    pub cfg: Config,
+}
+
+/// Build the Table 1 system rows for one sensor ("depth" | "rgb").
+///
+/// CPU-scaled mapping of the paper's Table A5 (documented in DESIGN.md §1):
+/// env counts / rollout lengths are set to the exported artifact geometry;
+/// WIJMANS20 renders at 2x and downsamples and runs 2 PPO epochs, exactly
+/// as in the paper's configuration.
+pub fn table1_rows(sensor: &str, shards: usize) -> Vec<SystemRow> {
+    let rgb = sensor == "rgb";
+    let mk = |variant: &str,
+              arch: SimArch,
+              n: usize,
+              l: usize,
+              mb: usize,
+              epochs: usize,
+              scale: usize| {
+        let mut cfg = Config::default();
+        cfg.variant = variant.to_string();
+        cfg.arch = arch;
+        cfg.num_envs = n;
+        cfg.rollout_len = l;
+        cfg.num_minibatches = mb;
+        cfg.ppo_epochs = epochs;
+        cfg.shards = shards;
+        cfg.k_scenes = 4;
+        cfg.render_scale = scale;
+        cfg.complexity = "gibson".into();
+        cfg.memory_budget_mb = 16 * 1024;
+        cfg.total_frames = u64::MAX; // bench loops control iteration count
+        cfg
+    };
+    let se9 = if rgb { "rgb64" } else { "depth64" };
+    let r50 = if rgb { "r50_rgb128" } else { "r50_depth128" };
+    vec![
+        SystemRow {
+            system: "BPS",
+            cnn: "SE-ResNet9",
+            res: 64,
+            cfg: mk(se9, SimArch::Bps, 64, 32, 2, 1, 1),
+        },
+        SystemRow {
+            system: "BPS-R50",
+            cnn: "ResNet50",
+            res: 128,
+            cfg: mk(r50, SimArch::Bps, 16, 16, 4, 1, 2),
+        },
+        SystemRow {
+            system: "WIJMANS++",
+            cnn: "SE-ResNet9",
+            res: 64,
+            cfg: mk(se9, SimArch::Workers, 16, 16, 2, 1, 1),
+        },
+        SystemRow {
+            system: "WIJMANS20",
+            cnn: "ResNet50",
+            res: 128,
+            cfg: mk(r50, SimArch::Workers, 16, 16, 4, 2, 2),
+        },
+    ]
+}
+
+/// Measured result of running a system row.
+#[derive(Clone, Copy, Debug)]
+pub struct FpsResult {
+    pub fps: f64,
+    pub frames: u64,
+    /// µs/frame: (simulation+rendering, inference, learning)
+    pub breakdown: (f64, f64, f64),
+}
+
+/// Run `iters` training iterations (after `warmup`) and report FPS +
+/// the Fig. 5 / Table A2 runtime breakdown.
+pub fn measure_fps(mut cfg: Config, dataset_dir: &PathBuf, warmup: usize, iters: usize)
+    -> Result<FpsResult> {
+    cfg.dataset_dir = dataset_dir.clone();
+    let mut coord = Coordinator::new(cfg)?;
+    for _ in 0..warmup {
+        coord.train_iteration()?;
+    }
+    coord.prof.reset();
+    let t0 = std::time::Instant::now();
+    let mut frames = 0u64;
+    for _ in 0..iters {
+        frames += coord.train_iteration()?.frames;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let rows = coord.prof.breakdown(frames);
+    let get = |k: &str| {
+        rows.iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    };
+    Ok(FpsResult {
+        fps: frames as f64 / secs,
+        frames,
+        breakdown: (get("sim") + get("render"), get("inference"), get("learn")),
+    })
+}
+
+/// Task-specific config for the Flee/Explore rows (Table A3): thor-like
+/// scenes, depth sensor.
+pub fn taskrow_config(task: Task) -> Config {
+    let mut cfg = Config::default();
+    cfg.variant = "depth64".into();
+    cfg.task = task;
+    cfg.num_envs = 64;
+    cfg.rollout_len = 32;
+    cfg.num_minibatches = 2;
+    cfg.k_scenes = 4;
+    cfg.complexity = "thor".into();
+    cfg.memory_budget_mb = 16 * 1024;
+    cfg.total_frames = u64::MAX;
+    cfg
+}
+
+/// Bench iteration counts, overridable: BPS_BENCH_ITERS=warmup,measure
+pub fn bench_iters(default_warmup: usize, default_iters: usize) -> (usize, usize) {
+    if let Ok(s) = std::env::var("BPS_BENCH_ITERS") {
+        if let Some((w, i)) = s.split_once(',') {
+            if let (Ok(w), Ok(i)) = (w.parse(), i.parse()) {
+                return (w, i);
+            }
+        }
+    }
+    (default_warmup, default_iters)
+}
+
+/// True when the manifest has this variant (benches skip gracefully).
+pub fn have_variant(name: &str) -> bool {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    crate::runtime::Manifest::load(&dir)
+        .map(|m| m.variants.contains_key(name))
+        .unwrap_or(false)
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Heavy rows (ResNet50 / 128px render-at-256) only run when
+/// BPS_BENCH_FULL=1 — on small CPU testbeds they dominate bench time.
+pub fn bench_full() -> bool {
+    std::env::var("BPS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}

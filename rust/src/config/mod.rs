@@ -1,0 +1,307 @@
+//! The config system: one typed `Config` drives the launcher, the training
+//! coordinator, the eval loop, and every bench. Loadable from a TOML file,
+//! overridable from the CLI, with presets that mirror the paper's Table A5
+//! system configurations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::render::PipelineMode;
+use crate::scene::Complexity;
+use crate::sim::Task;
+use crate::util::args::Args;
+use crate::util::toml;
+
+/// Simulation architecture under test (Table 1 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimArch {
+    /// BPS: batch simulation + batch renderer + asset sharing (the paper).
+    Bps,
+    /// WIJMANS20/++-style: per-environment private simulator+renderer
+    /// instances, no asset sharing (memory-capped env count).
+    Workers,
+}
+
+impl SimArch {
+    pub fn parse(s: &str) -> Option<SimArch> {
+        match s {
+            "bps" => Some(SimArch::Bps),
+            "workers" => Some(SimArch::Workers),
+            _ => None,
+        }
+    }
+}
+
+/// Everything needed to run training / eval / benches.
+#[derive(Clone, Debug)]
+pub struct Config {
+    // artifacts / model
+    pub variant: String,
+    pub artifacts_dir: PathBuf,
+    // dataset
+    pub dataset_dir: PathBuf,
+    pub complexity: String, // "gibson" | "thor" | "test"
+    // architecture
+    pub arch: SimArch,
+    pub pipeline: PipelineMode,
+    // batch geometry (paper Table A5)
+    pub num_envs: usize,
+    pub rollout_len: usize,
+    pub num_minibatches: usize,
+    pub ppo_epochs: usize,
+    pub shards: usize,
+    pub k_scenes: usize,
+    // sim
+    pub task: Task,
+    // optimization (paper Table A4)
+    pub optimizer: String, // "lamb" | "adam"
+    pub base_lr: f32,
+    pub lr_scaling: bool,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub normalize_adv: bool,
+    // run control
+    pub total_frames: u64,
+    pub seed: u64,
+    pub threads: usize,
+    pub out_dir: PathBuf,
+    pub render_scale: usize,
+    /// Simulated accelerator memory budget in MB ("GPU memory"): caps the
+    /// resident asset set for BPS and the env count for Workers.
+    pub memory_budget_mb: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            variant: "depth64".into(),
+            artifacts_dir: "artifacts".into(),
+            dataset_dir: "datasets/gibson_like".into(),
+            complexity: "gibson".into(),
+            arch: SimArch::Bps,
+            pipeline: PipelineMode::Pipelined,
+            num_envs: 64,
+            rollout_len: 32,
+            num_minibatches: 2,
+            ppo_epochs: 1,
+            shards: 1,
+            k_scenes: 4,
+            task: Task::PointNav,
+            optimizer: "lamb".into(),
+            base_lr: 2.5e-4,
+            lr_scaling: true,
+            gamma: 0.99,
+            gae_lambda: 0.95,
+            normalize_adv: true,
+            total_frames: 500_000,
+            seed: 1,
+            threads: 0, // 0 = auto
+            out_dir: "runs/default".into(),
+            render_scale: 1,
+            memory_budget_mb: 2048,
+        }
+    }
+}
+
+impl Config {
+    /// Per-shard training batch (frames per gradient step): N*L / minibatches.
+    pub fn train_batch(&self) -> usize {
+        self.num_envs * self.rollout_len / self.num_minibatches
+    }
+
+    /// Aggregate batch across shards (the paper's N in Table 2 / Fig. 4).
+    pub fn aggregate_envs(&self) -> usize {
+        self.num_envs * self.shards
+    }
+
+    pub fn complexity_preset(&self) -> Result<Complexity> {
+        Ok(match self.complexity.as_str() {
+            "gibson" => Complexity::gibson_like(),
+            "thor" => Complexity::thor_like(),
+            "test" => Complexity::test(),
+            other => bail!("unknown complexity {other:?} (gibson|thor|test)"),
+        })
+    }
+
+    /// Grad-artifact minibatch geometry implied by this config.
+    pub fn grad_bl(&self) -> (usize, usize) {
+        (self.num_envs / self.num_minibatches, self.rollout_len)
+    }
+
+    /// Load from TOML, then apply CLI overrides.
+    pub fn load(path: Option<&Path>, args: &mut Args) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            cfg.apply_toml(p)?;
+        }
+        cfg.apply_args(args)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = toml::parse(&text)?;
+        let all = doc.values().flat_map(|m| m.iter());
+        for (k, v) in all {
+            self.set(k, &toml_to_string(v))?;
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &mut Args) -> Result<()> {
+        for key in [
+            "variant", "artifacts-dir", "dataset", "complexity", "arch", "pipeline",
+            "envs", "rollout-len", "minibatches", "ppo-epochs", "shards", "k-scenes",
+            "task", "optimizer", "lr", "lr-scaling", "gamma", "gae-lambda",
+            "normalize-adv", "frames", "seed", "threads", "out", "render-scale",
+            "memory-mb",
+        ] {
+            if let Some(v) = args.opt(key) {
+                self.set(&key.replace('-', "_"), &v)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn set(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "variant" => self.variant = v.into(),
+            "artifacts_dir" => self.artifacts_dir = v.into(),
+            "dataset" | "dataset_dir" => self.dataset_dir = v.into(),
+            "complexity" => self.complexity = v.into(),
+            "arch" => {
+                self.arch = SimArch::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad arch {v:?} (bps|workers)"))?
+            }
+            "pipeline" => {
+                self.pipeline = match v {
+                    "fused" => PipelineMode::Fused,
+                    "pipelined" => PipelineMode::Pipelined,
+                    _ => bail!("bad pipeline {v:?} (fused|pipelined)"),
+                }
+            }
+            "envs" | "num_envs" => self.num_envs = v.parse()?,
+            "rollout_len" => self.rollout_len = v.parse()?,
+            "minibatches" | "num_minibatches" => self.num_minibatches = v.parse()?,
+            "ppo_epochs" => self.ppo_epochs = v.parse()?,
+            "shards" => self.shards = v.parse()?,
+            "k_scenes" => self.k_scenes = v.parse()?,
+            "task" => {
+                self.task = Task::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad task {v:?}"))?
+            }
+            "optimizer" => self.optimizer = v.into(),
+            "lr" | "base_lr" => self.base_lr = v.parse()?,
+            "lr_scaling" => self.lr_scaling = v.parse()?,
+            "gamma" => self.gamma = v.parse()?,
+            "gae_lambda" => self.gae_lambda = v.parse()?,
+            "normalize_adv" => self.normalize_adv = v.parse()?,
+            "frames" | "total_frames" => self.total_frames = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "threads" => self.threads = v.parse()?,
+            "out" | "out_dir" => self.out_dir = v.into(),
+            "render_scale" => self.render_scale = v.parse()?,
+            "memory_mb" | "memory_budget_mb" => self.memory_budget_mb = v.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_envs == 0 || self.rollout_len == 0 {
+            bail!("num_envs and rollout_len must be positive");
+        }
+        if self.num_envs % self.num_minibatches != 0 {
+            bail!(
+                "num_envs ({}) must divide evenly into {} minibatches",
+                self.num_envs,
+                self.num_minibatches
+            );
+        }
+        if !matches!(self.optimizer.as_str(), "lamb" | "adam") {
+            bail!("optimizer must be lamb or adam");
+        }
+        if self.num_envs > self.k_scenes * crate::render::MAX_N_TO_K {
+            bail!(
+                "num_envs {} violates the N:K<=32 sharing cap with k_scenes {}",
+                self.num_envs,
+                self.k_scenes
+            );
+        }
+        Ok(())
+    }
+}
+
+fn toml_to_string(v: &toml::TomlVal) -> String {
+    match v {
+        toml::TomlVal::Str(s) => s.clone(),
+        toml::TomlVal::Bool(b) => b.to_string(),
+        toml::TomlVal::Int(i) => i.to_string(),
+        toml::TomlVal::Float(f) => f.to_string(),
+        toml::TomlVal::Arr(_) => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let argv: Vec<String> = "train --envs 128 --arch workers --lr 1e-3 --task flee"
+            .split_whitespace()
+            .map(str::to_string)
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let cfg = Config::load(None, &mut args).unwrap();
+        assert_eq!(cfg.num_envs, 128);
+        assert_eq!(cfg.arch, SimArch::Workers);
+        assert!((cfg.base_lr - 1e-3).abs() < 1e-9);
+        assert_eq!(cfg.task, Task::Flee);
+    }
+
+    #[test]
+    fn toml_file_applies() {
+        let dir = std::env::temp_dir().join("bps_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(
+            &p,
+            "num_envs = 32\nrollout_len = 16\n[optim]\noptimizer = \"adam\"\nbase_lr = 1e-4\n",
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_toml(&p).unwrap();
+        assert_eq!(cfg.num_envs, 32);
+        assert_eq!(cfg.rollout_len, 16);
+        assert_eq!(cfg.optimizer, "adam");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = Config::default();
+        cfg.num_envs = 33; // not divisible by 2 minibatches
+        assert!(cfg.validate().is_err());
+        let mut cfg = Config::default();
+        cfg.num_envs = 256;
+        cfg.k_scenes = 4; // 256 > 4*32
+        assert!(cfg.validate().is_err());
+        let mut cfg = Config::default();
+        cfg.optimizer = "sgd".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn batch_geometry() {
+        let cfg = Config::default();
+        assert_eq!(cfg.train_batch(), 64 * 32 / 2);
+        assert_eq!(cfg.grad_bl(), (32, 32));
+    }
+}

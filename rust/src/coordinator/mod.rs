@@ -1,0 +1,465 @@
+//! The end-to-end RL coordinator: rollout generation (batch sim → batch
+//! render → batched inference), GAE, PPO training through the AOT
+//! artifacts, DD-PPO multi-shard gradient averaging, scene rotation, and
+//! evaluation. This is the paper's Fig. 2 loop.
+//!
+//! Two simulation architectures are selectable (Table 1):
+//! `SimArch::Bps` shares K ≪ N scene assets across the batch and uses the
+//! pipelined batch renderer; `SimArch::Workers` reproduces the prior-art
+//! design — every environment owns a *private* copy of its scene asset
+//! (deep-cloned, so memory pressure is real) and renders fused per-env,
+//! which is what caps its env count at a given memory budget.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Config, SimArch};
+use crate::metrics::EpisodeStats;
+use crate::optim::{scale_lr, Losses, LrSchedule, Trainer};
+use crate::policy::Policy;
+use crate::render::{BatchRenderer, RenderConfig, RenderItem, SceneRotation, Sensor};
+use crate::rollout::Rollout;
+use crate::runtime::{Exec, Manifest, ParamStore, Runtime, Variant};
+use crate::scene::{Dataset, SceneAsset};
+use crate::sim::{BatchSim, SimConfig, SimOutputs};
+use crate::util::pool::WorkerPool;
+use crate::util::timer::{FpsMeter, Profiler};
+
+/// One DD-PPO shard ("GPU"): envs + renderer + policy state + rollout.
+pub struct Shard {
+    pub sim: BatchSim,
+    pub renderer: BatchRenderer,
+    pub rotation: Option<SceneRotation>,
+    pub policy: Policy,
+    pub rollout: Rollout,
+    pub obs: Vec<f32>,
+    pub goal: Vec<f32>,
+    pub sim_out: SimOutputs,
+    pub last_dones: Vec<bool>,
+}
+
+/// Per-iteration summary.
+#[derive(Clone, Copy, Debug)]
+pub struct IterStats {
+    pub frames: u64,
+    pub losses: Losses,
+}
+
+/// The training coordinator.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub variant: Variant,
+    pub pool: WorkerPool,
+    pub shards: Vec<Shard>,
+    pub params: ParamStore,
+    pub trainer: Trainer,
+    pub prof: Profiler,
+    pub stats: EpisodeStats,
+    pub fps: FpsMeter,
+    rt: Runtime,
+    man: Manifest,
+}
+
+impl Coordinator {
+    pub fn new(cfg: Config) -> Result<Coordinator> {
+        cfg.validate()?;
+        let man = Manifest::load(&cfg.artifacts_dir)?;
+        let variant = man.variant(&cfg.variant)?.clone();
+        let (b, l) = cfg.grad_bl();
+        let grad_kind = format!("grad_b{b}l{l}");
+        if variant.file(&grad_kind).is_err() {
+            bail!(
+                "variant {:?} lacks {grad_kind} (exported: {:?}); adjust \
+                 --envs/--minibatches/--rollout-len or extend the preset",
+                variant.name,
+                variant.grad_bls
+            );
+        }
+        let rt = Runtime::cpu()?;
+        let init = rt.load(&man.artifact_path(&variant, "init")?)?;
+        let params = ParamStore::init(&init, variant.num_params, cfg.seed as i32)?;
+        let infer = Rc::new(rt.load(
+            &man.artifact_path(&variant, &format!("infer_n{}", cfg.num_envs))?,
+        )?);
+        let grad = rt.load(&man.artifact_path(&variant, &grad_kind)?)?;
+        let upd_kind = format!("update_{}", cfg.optimizer);
+        let update = rt.load(&man.artifact_path(&variant, &upd_kind)?)?;
+
+        let frames_per_iter = (cfg.num_envs * cfg.rollout_len * cfg.shards) as u64;
+        let total_iters = (cfg.total_frames / frames_per_iter.max(1)).max(1);
+        // LR scaling: sqrt(B/256), disabled for Adam (diverges — paper A.3).
+        let scaled = if cfg.lr_scaling && cfg.optimizer == "lamb" {
+            scale_lr(cfg.base_lr, cfg.train_batch() * cfg.shards, 256)
+        } else {
+            cfg.base_lr
+        };
+        let trainer = Trainer::new(
+            grad,
+            update,
+            variant.num_params,
+            cfg.num_minibatches,
+            cfg.ppo_epochs,
+            LrSchedule {
+                base: cfg.base_lr,
+                scaled,
+                decay_iters: total_iters / 2,
+            },
+            cfg.gamma,
+            cfg.gae_lambda,
+            cfg.normalize_adv,
+        );
+
+        let threads = if cfg.threads == 0 {
+            WorkerPool::default_size()
+        } else {
+            cfg.threads
+        };
+        let pool = WorkerPool::new(threads);
+
+        let dataset = Dataset::open(&cfg.dataset_dir).with_context(|| {
+            format!(
+                "open dataset {:?} — generate with `bps gen-dataset --dir {}`",
+                cfg.dataset_dir,
+                cfg.dataset_dir.display()
+            )
+        })?;
+
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for s in 0..cfg.shards {
+            shards.push(build_shard(
+                &cfg,
+                &variant,
+                Rc::clone(&infer),
+                &dataset,
+                s,
+            )?);
+        }
+        check_memory_budget(&cfg, &shards)?;
+
+        let stats = EpisodeStats::new(cfg.num_envs * cfg.shards, 256);
+        Ok(Coordinator {
+            cfg,
+            variant,
+            pool,
+            shards,
+            params,
+            trainer,
+            prof: Profiler::new(),
+            stats,
+            fps: FpsMeter::start(),
+            rt,
+            man,
+        })
+    }
+
+    /// Collect one rollout on every shard, then run the PPO update with
+    /// cross-shard gradient averaging. Returns frames processed.
+    pub fn train_iteration(&mut self) -> Result<IterStats> {
+        let l = self.cfg.rollout_len;
+        for si in 0..self.shards.len() {
+            {
+                let shard = &mut self.shards[si];
+                shard
+                    .rollout
+                    .begin(&shard.policy.h, &shard.policy.c, &shard.last_dones);
+            }
+            for t in 0..l {
+                let shard = &mut self.shards[si];
+                let step = {
+                    let _s = self.prof.span("inference");
+                    shard
+                        .policy
+                        .step(&self.params.flat, &shard.obs, &shard.goal)?
+                };
+                shard.rollout.record_step(
+                    t,
+                    &shard.obs,
+                    &shard.goal,
+                    &step.actions,
+                    &step.logp,
+                    &step.values,
+                );
+                {
+                    let _s = self.prof.span("sim");
+                    shard
+                        .sim
+                        .step_batch(&self.pool, &step.actions, &mut shard.sim_out);
+                }
+                shard
+                    .rollout
+                    .record_outcome(t, &shard.sim_out.rewards, &shard.sim_out.dones);
+                self.stats.update(
+                    &shard.sim_out.rewards,
+                    &shard.sim_out.dones,
+                    &shard.sim_out.successes,
+                    &shard.sim_out.spl,
+                    &shard.sim_out.scores,
+                );
+                shard.policy.reset_done(&shard.sim_out.dones);
+                shard.last_dones.copy_from_slice(&shard.sim_out.dones);
+                shard.goal.copy_from_slice(&shard.sim_out.goal_sensor);
+                {
+                    let _s = self.prof.span("render");
+                    render_current(shard, &self.pool);
+                }
+            }
+            // bootstrap + scene rotation
+            let shard = &mut self.shards[si];
+            shard.rollout.bootstrap = {
+                let _s = self.prof.span("inference");
+                shard
+                    .policy
+                    .values_only(&self.params.flat, &shard.obs, &shard.goal)?
+            };
+            if let Some(rot) = shard.rotation.as_mut() {
+                rot.rotate(&mut shard.sim);
+            }
+        }
+        // learning (DD-PPO gradient averaging across shards inside)
+        let losses = {
+            let _s = self.prof.span("learn");
+            let mut rollouts: Vec<&mut Rollout> =
+                self.shards.iter_mut().map(|s| &mut s.rollout).collect();
+            self.trainer.train_refs(&mut self.params, &mut rollouts)?
+        };
+        let frames = (self.cfg.num_envs * l * self.shards.len()) as u64;
+        self.fps.add_frames(frames);
+        Ok(IterStats { frames, losses })
+    }
+
+    /// Paper-methodology FPS: frames / wall-time over rollout + training.
+    pub fn fps(&self) -> f64 {
+        self.fps.fps()
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.fps.frames()
+    }
+
+    /// Greedy evaluation on a dataset split. Returns (SPL, success, score)
+    /// means over `episodes` completed episodes.
+    pub fn evaluate(&mut self, split: &str, episodes: usize) -> Result<(f32, f32, f32)> {
+        let dataset = Dataset::open(&self.cfg.dataset_dir)?;
+        let ids = dataset.split(split)?.to_vec();
+        if ids.is_empty() {
+            bail!("split {split:?} is empty");
+        }
+        let n = self.cfg.num_envs;
+        let with_tex = self.variant.in_ch == 3;
+        let scenes: Vec<Arc<SceneAsset>> = (0..n)
+            .map(|i| {
+                dataset
+                    .load_scene(&ids[i % ids.len()], with_tex)
+                    .map(Arc::new)
+            })
+            .collect::<Result<_>>()?;
+        let mut sim = BatchSim::new(
+            SimConfig::for_task(self.cfg.task),
+            scenes,
+            self.cfg.seed ^ 0xEA51,
+        );
+        let rcfg = render_cfg(&self.cfg, &self.variant);
+        let renderer = BatchRenderer::new(rcfg, n);
+        let mut policy = Policy::with_exec(
+            Rc::new(self.rt.load(&self.man.artifact_path(
+                &self.variant,
+                &format!("infer_n{n}"),
+            )?)?),
+            &self.variant,
+            n,
+            self.cfg.seed ^ 0x5EED,
+        );
+        let mut obs = vec![0.0f32; n * rcfg.obs_floats()];
+        let mut goal = vec![0.0f32; n * 3];
+        let mut out = SimOutputs::with_capacity(n);
+        sim.fill_goal_sensor(&mut goal);
+        render_sim(&sim, &renderer, &self.pool, &mut obs);
+        let (mut spl_sum, mut succ_sum, mut score_sum, mut count) =
+            (0.0f32, 0.0f32, 0.0f32, 0usize);
+        let max_steps = episodes * 600 / n + 600;
+        for _ in 0..max_steps {
+            let actions = policy.step_greedy(&self.params.flat, &obs, &goal)?;
+            sim.step_batch(&self.pool, &actions, &mut out);
+            policy.reset_done(&out.dones);
+            goal.copy_from_slice(&out.goal_sensor);
+            render_sim(&sim, &renderer, &self.pool, &mut obs);
+            for i in 0..n {
+                if out.dones[i] {
+                    count += 1;
+                    spl_sum += out.spl[i];
+                    succ_sum += if out.successes[i] { 1.0 } else { 0.0 };
+                    score_sum += out.scores[i];
+                }
+            }
+            if count >= episodes {
+                break;
+            }
+        }
+        let c = count.max(1) as f32;
+        Ok((spl_sum / c, succ_sum / c, score_sum / c))
+    }
+}
+
+/// Build one shard (scene assignment differs per arch — see module docs).
+fn build_shard(
+    cfg: &Config,
+    variant: &Variant,
+    infer: Rc<Exec>,
+    dataset: &Dataset,
+    shard_idx: usize,
+) -> Result<Shard> {
+    let n = cfg.num_envs;
+    let with_tex = variant.in_ch == 3;
+    // rotate the train split so shards see different scenes
+    let mut ids = dataset.train.clone();
+    if ids.is_empty() {
+        bail!("dataset has no train scenes");
+    }
+    let shift = (shard_idx * cfg.k_scenes) % ids.len();
+    ids.rotate_left(shift);
+
+    let (scenes, rotation): (Vec<Arc<SceneAsset>>, Option<SceneRotation>) = match cfg.arch {
+        SimArch::Bps => {
+            let rot = SceneRotation::new(dataset.clone(), ids, cfg.k_scenes, with_tex)?;
+            (rot.assign(n), Some(rot))
+        }
+        SimArch::Workers => {
+            // No sharing: every env deep-loads its own copy (real memory).
+            let mut scenes = Vec::with_capacity(n);
+            for i in 0..n {
+                let base = dataset.load_scene(&ids[i % ids.len()], with_tex)?;
+                scenes.push(Arc::new(base));
+            }
+            (scenes, None)
+        }
+    };
+
+    let sim = BatchSim::new(
+        SimConfig::for_task(cfg.task),
+        scenes,
+        cfg.seed.wrapping_add(shard_idx as u64 * 7919),
+    );
+    let rcfg = render_cfg(cfg, variant);
+    let renderer = BatchRenderer::new(rcfg, n);
+    let policy = Policy::with_exec(
+        infer,
+        variant,
+        n,
+        cfg.seed.wrapping_add(0xAC + shard_idx as u64),
+    );
+    let rollout = Rollout::new(n, cfg.rollout_len, rcfg.obs_floats(), variant.hidden);
+    let mut shard = Shard {
+        sim,
+        renderer,
+        rotation,
+        policy,
+        rollout,
+        obs: vec![0.0; n * rcfg.obs_floats()],
+        goal: vec![0.0; n * 3],
+        sim_out: SimOutputs::with_capacity(n),
+        last_dones: vec![true; n], // first obs of each env starts an episode
+    };
+    shard.sim.fill_goal_sensor(&mut shard.goal);
+    // initial observations (rendered once; subsequent renders follow steps)
+    let pool = WorkerPool::new(0);
+    render_current(&mut shard, &pool);
+    Ok(shard)
+}
+
+fn render_cfg(cfg: &Config, variant: &Variant) -> RenderConfig {
+    RenderConfig {
+        res: variant.res,
+        sensor: if variant.in_ch == 3 {
+            Sensor::Rgb
+        } else {
+            Sensor::Depth
+        },
+        scale: cfg.render_scale.max(1),
+        mode: match cfg.arch {
+            SimArch::Bps => cfg.pipeline,
+            // workers render fused per env (no staged batch pipeline)
+            SimArch::Workers => crate::render::PipelineMode::Fused,
+        },
+    }
+}
+
+fn render_current(shard: &mut Shard, pool: &WorkerPool) {
+    let items: Vec<RenderItem> = (0..shard.sim.num_envs())
+        .map(|i| {
+            let (pos, heading) = {
+                let e = shard.sim.env(i);
+                (e.pos, e.heading)
+            };
+            RenderItem {
+                scene: shard.sim.scene_of(i),
+                pos,
+                heading,
+            }
+        })
+        .collect();
+    shard.renderer.render_batch(pool, &items, &mut shard.obs);
+}
+
+/// Render a sim's current poses (shared by eval and benches).
+pub fn render_sim(sim: &BatchSim, renderer: &BatchRenderer, pool: &WorkerPool, obs: &mut [f32]) {
+    let items: Vec<RenderItem> = (0..sim.num_envs())
+        .map(|i| {
+            let e = sim.env(i);
+            RenderItem {
+                scene: sim.scene_of(i),
+                pos: e.pos,
+                heading: e.heading,
+            }
+        })
+        .collect();
+    renderer.render_batch(pool, &items, obs);
+}
+
+/// Resident-memory check against the simulated accelerator budget.
+fn check_memory_budget(cfg: &Config, shards: &[Shard]) -> Result<()> {
+    let with_tex = matches!(shards[0].renderer.cfg.sensor, Sensor::Rgb);
+    let mut bytes = 0usize;
+    for shard in shards {
+        match cfg.arch {
+            SimArch::Bps => {
+                if let Some(rot) = &shard.rotation {
+                    bytes += rot.resident_bytes(with_tex);
+                }
+            }
+            SimArch::Workers => {
+                for i in 0..shard.sim.num_envs() {
+                    bytes += shard.sim.scene_of(i).footprint_bytes(with_tex);
+                }
+            }
+        }
+    }
+    let budget = cfg.memory_budget_mb * 1024 * 1024;
+    if bytes > budget {
+        bail!(
+            "resident scene assets need {} MB but the memory budget is {} MB \
+             (arch {:?}): lower --envs (workers) or --k-scenes (bps), or raise \
+             --memory-mb",
+            bytes / (1024 * 1024),
+            cfg.memory_budget_mb,
+            cfg.arch
+        );
+    }
+    Ok(())
+}
+
+/// Asset bytes resident under an arch (used by benches to derive the
+/// memory-capped env counts the paper reports).
+pub fn resident_bytes_for(
+    arch: SimArch,
+    asset: &SceneAsset,
+    with_tex: bool,
+    n: usize,
+    k: usize,
+) -> usize {
+    match arch {
+        SimArch::Bps => asset.footprint_bytes(with_tex) * k.min(n.max(1)),
+        SimArch::Workers => asset.footprint_bytes(with_tex) * n,
+    }
+}

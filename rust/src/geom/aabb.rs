@@ -1,0 +1,115 @@
+//! Axis-aligned bounding boxes — the culling granule of the batch renderer:
+//! meshes are split into chunks at load time and each chunk's AABB is tested
+//! against the per-environment camera frustum (paper §3.2).
+
+use super::vec::{v3, Vec3};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    /// Empty box (min > max); unioning with any point fixes it up.
+    pub const EMPTY: Aabb = Aabb {
+        min: v3(f32::INFINITY, f32::INFINITY, f32::INFINITY),
+        max: v3(f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY),
+    };
+
+    pub fn from_points(points: impl IntoIterator<Item = Vec3>) -> Aabb {
+        let mut b = Aabb::EMPTY;
+        for p in points {
+            b.grow(p);
+        }
+        b
+    }
+
+    pub fn grow(&mut self, p: Vec3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        Aabb {
+            min: self.min.min(o.min),
+            max: self.max.max(o.max),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x
+    }
+
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) * 0.5
+    }
+
+    pub fn extent(&self) -> Vec3 {
+        self.max - self.min
+    }
+
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.x <= self.max.x
+            && p.y >= self.min.y
+            && p.y <= self.max.y
+            && p.z >= self.min.z
+            && p.z <= self.max.z
+    }
+
+    pub fn corners(&self) -> [Vec3; 8] {
+        let (a, b) = (self.min, self.max);
+        [
+            v3(a.x, a.y, a.z),
+            v3(b.x, a.y, a.z),
+            v3(a.x, b.y, a.z),
+            v3(b.x, b.y, a.z),
+            v3(a.x, a.y, b.z),
+            v3(b.x, a.y, b.z),
+            v3(a.x, b.y, b.z),
+            v3(b.x, b.y, b.z),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_points_bounds() {
+        let b = Aabb::from_points([v3(1.0, 2.0, 3.0), v3(-1.0, 5.0, 0.0)]);
+        assert_eq!(b.min, v3(-1.0, 2.0, 0.0));
+        assert_eq!(b.max, v3(1.0, 5.0, 3.0));
+        assert!(b.contains(v3(0.0, 3.0, 1.0)));
+        assert!(!b.contains(v3(2.0, 3.0, 1.0)));
+    }
+
+    #[test]
+    fn empty_behaves() {
+        assert!(Aabb::EMPTY.is_empty());
+        let mut b = Aabb::EMPTY;
+        b.grow(v3(1.0, 1.0, 1.0));
+        assert!(!b.is_empty());
+        assert_eq!(b.min, b.max);
+    }
+
+    #[test]
+    fn union_covers_both() {
+        let a = Aabb::from_points([v3(0.0, 0.0, 0.0), v3(1.0, 1.0, 1.0)]);
+        let b = Aabb::from_points([v3(2.0, -1.0, 0.5)]);
+        let u = a.union(&b);
+        assert!(u.contains(v3(0.5, 0.5, 0.5)));
+        assert!(u.contains(v3(2.0, -1.0, 0.5)));
+    }
+
+    #[test]
+    fn corners_count_and_extremes() {
+        let b = Aabb::from_points([v3(0.0, 0.0, 0.0), v3(1.0, 2.0, 3.0)]);
+        let cs = b.corners();
+        assert_eq!(cs.len(), 8);
+        assert!(cs.contains(&v3(0.0, 0.0, 0.0)));
+        assert!(cs.contains(&v3(1.0, 2.0, 3.0)));
+    }
+}

@@ -1,0 +1,146 @@
+//! View-frustum extraction and AABB rejection tests — the core primitive of
+//! the renderer's pipelined geometry culling stage (paper §3.2): chunks of
+//! scene geometry whose AABB lies fully outside an agent's view frustum are
+//! discarded before rasterization.
+
+use super::aabb::Aabb;
+use super::mat::Mat4;
+use super::vec::{v3, Vec3};
+
+/// One plane in `ax + by + cz + d >= 0` half-space form.
+#[derive(Clone, Copy, Debug)]
+pub struct Plane {
+    pub n: Vec3,
+    pub d: f32,
+}
+
+impl Plane {
+    pub fn signed_distance(&self, p: Vec3) -> f32 {
+        self.n.dot(p) + self.d
+    }
+}
+
+/// Six planes (left, right, bottom, top, near, far), inward-facing.
+#[derive(Clone, Copy, Debug)]
+pub struct Frustum {
+    pub planes: [Plane; 6],
+}
+
+impl Frustum {
+    /// Gribb–Hartmann extraction from a combined view-projection matrix
+    /// (column-major, depth in [0,1]).
+    pub fn from_view_proj(vp: &Mat4) -> Frustum {
+        let m = &vp.m;
+        let row = |r: usize| v3(m[0][r], m[1][r], m[2][r]);
+        let roww = |r: usize| m[3][r];
+        let mk = |n: Vec3, d: f32| {
+            let len = n.length().max(1e-20);
+            Plane { n: n / len, d: d / len }
+        };
+        Frustum {
+            planes: [
+                mk(row(3) + row(0), roww(3) + roww(0)), // left:   w + x >= 0
+                mk(row(3) - row(0), roww(3) - roww(0)), // right:  w - x >= 0
+                mk(row(3) + row(1), roww(3) + roww(1)), // bottom
+                mk(row(3) - row(1), roww(3) - roww(1)), // top
+                mk(row(2), roww(2)),                    // near:   z >= 0 ([0,1] depth)
+                mk(row(3) - row(2), roww(3) - roww(2)), // far:    w - z >= 0
+            ],
+        }
+    }
+
+    /// Conservative AABB test: `false` only when the box is certainly
+    /// outside (fully behind some plane). May return `true` for boxes that
+    /// are actually outside (corner cases) — safe for culling.
+    pub fn intersects_aabb(&self, b: &Aabb) -> bool {
+        for pl in &self.planes {
+            // pick the box corner farthest along the plane normal
+            let p = v3(
+                if pl.n.x >= 0.0 { b.max.x } else { b.min.x },
+                if pl.n.y >= 0.0 { b.max.y } else { b.min.y },
+                if pl.n.z >= 0.0 { b.max.z } else { b.min.z },
+            );
+            if pl.signed_distance(p) < 0.0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn contains_point(&self, p: Vec3) -> bool {
+        self.planes.iter().all(|pl| pl.signed_distance(p) >= 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_frustum() -> Frustum {
+        // camera at origin looking down -Z, 90 deg fov, square aspect
+        let view = Mat4::look_at(Vec3::ZERO, v3(0.0, 0.0, -1.0), Vec3::UP);
+        let proj = Mat4::perspective(std::f32::consts::FRAC_PI_2, 1.0, 0.1, 100.0);
+        Frustum::from_view_proj(&proj.mul(&view))
+    }
+
+    #[test]
+    fn point_in_front_inside() {
+        let f = test_frustum();
+        assert!(f.contains_point(v3(0.0, 0.0, -5.0)));
+        assert!(f.contains_point(v3(2.0, 0.0, -5.0))); // within 45 deg half-angle
+    }
+
+    #[test]
+    fn point_behind_outside() {
+        let f = test_frustum();
+        assert!(!f.contains_point(v3(0.0, 0.0, 5.0)));
+        assert!(!f.contains_point(v3(0.0, 0.0, 0.05))); // in front of near plane
+        assert!(!f.contains_point(v3(0.0, 0.0, -200.0))); // beyond far
+    }
+
+    #[test]
+    fn point_outside_fov() {
+        let f = test_frustum();
+        assert!(!f.contains_point(v3(10.0, 0.0, -5.0))); // > 45 deg off-axis
+    }
+
+    #[test]
+    fn aabb_inside_and_outside() {
+        let f = test_frustum();
+        let inside = Aabb::from_points([v3(-1.0, -1.0, -6.0), v3(1.0, 1.0, -4.0)]);
+        assert!(f.intersects_aabb(&inside));
+        let behind = Aabb::from_points([v3(-1.0, -1.0, 2.0), v3(1.0, 1.0, 4.0)]);
+        assert!(!f.intersects_aabb(&behind));
+        let left = Aabb::from_points([v3(-50.0, -1.0, -5.0), v3(-40.0, 1.0, -4.0)]);
+        assert!(!f.intersects_aabb(&left));
+    }
+
+    #[test]
+    fn aabb_straddling_plane_kept() {
+        let f = test_frustum();
+        // box straddles the near plane: conservative test must keep it
+        let straddle = Aabb::from_points([v3(-0.5, -0.5, 0.5), v3(0.5, 0.5, -1.0)]);
+        assert!(f.intersects_aabb(&straddle));
+    }
+
+    #[test]
+    fn culling_never_rejects_visible_points_property() {
+        crate::util::prop::check("frustum_conservative", 200, |rng| {
+            let view = Mat4::look_at(Vec3::ZERO, v3(0.0, 0.0, -1.0), Vec3::UP);
+            let proj =
+                Mat4::perspective(std::f32::consts::FRAC_PI_2, 1.0, 0.1, 100.0);
+            let f = Frustum::from_view_proj(&proj.mul(&view));
+            let p = v3(
+                rng.range_f32(-20.0, 20.0),
+                rng.range_f32(-20.0, 20.0),
+                rng.range_f32(-90.0, -0.2),
+            );
+            if f.contains_point(p) {
+                // any box containing a visible point must not be culled
+                let e = rng.range_f32(0.01, 5.0);
+                let b = Aabb::from_points([p - v3(e, e, e), p + v3(e, e, e)]);
+                assert!(f.intersects_aabb(&b));
+            }
+        });
+    }
+}

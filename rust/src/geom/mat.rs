@@ -1,0 +1,157 @@
+//! Column-major 4×4 matrix: camera view/projection transforms for the
+//! software batch renderer.
+
+use super::vec::{v4, Vec3, Vec4};
+#[cfg(test)]
+use super::vec::v3;
+
+/// Column-major (OpenGL convention): `m[col][row]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat4 {
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    pub fn mul(&self, o: &Mat4) -> Mat4 {
+        let mut r = [[0.0f32; 4]; 4];
+        for c in 0..4 {
+            for row in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += self.m[k][row] * o.m[c][k];
+                }
+                r[c][row] = s;
+            }
+        }
+        Mat4 { m: r }
+    }
+
+    pub fn mul_vec4(&self, v: Vec4) -> Vec4 {
+        v4(
+            self.m[0][0] * v.x + self.m[1][0] * v.y + self.m[2][0] * v.z + self.m[3][0] * v.w,
+            self.m[0][1] * v.x + self.m[1][1] * v.y + self.m[2][1] * v.z + self.m[3][1] * v.w,
+            self.m[0][2] * v.x + self.m[1][2] * v.y + self.m[2][2] * v.z + self.m[3][2] * v.w,
+            self.m[0][3] * v.x + self.m[1][3] * v.y + self.m[2][3] * v.z + self.m[3][3] * v.w,
+        )
+    }
+
+    /// Transform a point (w=1), without perspective divide.
+    pub fn transform_point(&self, p: Vec3) -> Vec3 {
+        self.mul_vec4(p.extend(1.0)).xyz()
+    }
+
+    /// Right-handed look-at view matrix (camera at `eye` looking at `center`).
+    pub fn look_at(eye: Vec3, center: Vec3, up: Vec3) -> Mat4 {
+        let f = (center - eye).normalized();
+        let s = f.cross(up).normalized();
+        let u = s.cross(f);
+        Mat4 {
+            m: [
+                [s.x, u.x, -f.x, 0.0],
+                [s.y, u.y, -f.y, 0.0],
+                [s.z, u.z, -f.z, 0.0],
+                [-s.dot(eye), -u.dot(eye), f.dot(eye), 1.0],
+            ],
+        }
+    }
+
+    /// Right-handed perspective projection, depth mapped to [0, 1]
+    /// (Vulkan-style, matching the paper's renderer).
+    pub fn perspective(fovy_rad: f32, aspect: f32, near: f32, far: f32) -> Mat4 {
+        let t = 1.0 / (fovy_rad * 0.5).tan();
+        let mut m = [[0.0f32; 4]; 4];
+        m[0][0] = t / aspect;
+        m[1][1] = t;
+        m[2][2] = far / (near - far);
+        m[2][3] = -1.0;
+        m[3][2] = near * far / (near - far);
+        Mat4 { m }
+    }
+
+    pub fn translation(t: Vec3) -> Mat4 {
+        let mut m = Mat4::IDENTITY;
+        m.m[3][0] = t.x;
+        m.m[3][1] = t.y;
+        m.m[3][2] = t.z;
+        m
+    }
+
+    /// Rotation about +Y by `angle` radians (agent heading).
+    pub fn rotation_y(angle: f32) -> Mat4 {
+        let (s, c) = angle.sin_cos();
+        let mut m = Mat4::IDENTITY;
+        m.m[0][0] = c;
+        m.m[0][2] = -s;
+        m.m[2][0] = s;
+        m.m[2][2] = c;
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Vec3, b: Vec3, eps: f32) -> bool {
+        (a - b).length() < eps
+    }
+
+    #[test]
+    fn identity_mul() {
+        let m = Mat4::perspective(1.0, 1.5, 0.1, 100.0);
+        assert_eq!(Mat4::IDENTITY.mul(&m), m);
+        assert_eq!(m.mul(&Mat4::IDENTITY), m);
+    }
+
+    #[test]
+    fn translation_moves_point() {
+        let m = Mat4::translation(v3(1.0, 2.0, 3.0));
+        assert_eq!(m.transform_point(v3(0.0, 0.0, 0.0)), v3(1.0, 2.0, 3.0));
+    }
+
+    #[test]
+    fn rotation_y_quarter_turn() {
+        let m = Mat4::rotation_y(std::f32::consts::FRAC_PI_2);
+        // +Z rotates to +X under right-handed Y rotation
+        assert!(close(m.transform_point(v3(0.0, 0.0, 1.0)), v3(1.0, 0.0, 0.0), 1e-5));
+    }
+
+    #[test]
+    fn look_at_centers_target() {
+        let view = Mat4::look_at(v3(0.0, 0.0, 5.0), Vec3::ZERO, Vec3::UP);
+        let p = view.transform_point(Vec3::ZERO);
+        // target lands on the -Z axis at distance 5
+        assert!(close(p, v3(0.0, 0.0, -5.0), 1e-5));
+    }
+
+    #[test]
+    fn perspective_depth_range() {
+        let proj = Mat4::perspective(std::f32::consts::FRAC_PI_2, 1.0, 0.1, 100.0);
+        // point at near plane -> ndc z = 0; far plane -> ndc z = 1
+        let near = proj.mul_vec4(v4(0.0, 0.0, -0.1, 1.0));
+        let far = proj.mul_vec4(v4(0.0, 0.0, -100.0, 1.0));
+        assert!((near.z / near.w).abs() < 1e-5);
+        assert!((far.z / far.w - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn view_proj_composition() {
+        let view = Mat4::look_at(v3(3.0, 2.0, 3.0), Vec3::ZERO, Vec3::UP);
+        let proj = Mat4::perspective(1.2, 1.0, 0.1, 50.0);
+        let vp = proj.mul(&view);
+        let clip = vp.mul_vec4(Vec3::ZERO.extend(1.0));
+        let ndc = clip.xyz() / clip.w;
+        // origin is centered in the view -> ndc x,y ~ 0
+        assert!(ndc.x.abs() < 1e-5 && ndc.y.abs() < 1e-5);
+        assert!((0.0..=1.0).contains(&ndc.z));
+    }
+}

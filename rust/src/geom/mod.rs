@@ -1,0 +1,13 @@
+//! 3D math for the simulator and renderer: vectors, 4×4 matrices, axis-
+//! aligned bounding boxes, and view-frustum plane tests (used by the batch
+//! renderer's pipelined geometry culling, paper §3.2).
+
+pub mod aabb;
+pub mod frustum;
+pub mod mat;
+pub mod vec;
+
+pub use aabb::Aabb;
+pub use frustum::Frustum;
+pub use mat::Mat4;
+pub use vec::{Vec2, Vec3, Vec4};

@@ -1,0 +1,183 @@
+//! Small fixed-size vector types (f32).
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec4 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub w: f32,
+}
+
+pub const fn v2(x: f32, y: f32) -> Vec2 {
+    Vec2 { x, y }
+}
+
+pub const fn v3(x: f32, y: f32, z: f32) -> Vec3 {
+    Vec3 { x, y, z }
+}
+
+pub const fn v4(x: f32, y: f32, z: f32, w: f32) -> Vec4 {
+    Vec4 { x, y, z, w }
+}
+
+impl Vec2 {
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    pub fn length(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    /// z-component of the 2D cross product (signed area ×2).
+    pub fn cross(self, o: Vec2) -> f32 {
+        self.x * o.y - self.y * o.x
+    }
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = v3(0.0, 0.0, 0.0);
+    pub const UP: Vec3 = v3(0.0, 1.0, 0.0);
+
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        v3(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    pub fn length(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn length_sq(self) -> f32 {
+        self.dot(self)
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let l = self.length();
+        if l > 1e-20 {
+            self / l
+        } else {
+            Vec3::ZERO
+        }
+    }
+
+    pub fn min(self, o: Vec3) -> Vec3 {
+        v3(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    pub fn max(self, o: Vec3) -> Vec3 {
+        v3(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    pub fn lerp(self, o: Vec3, t: f32) -> Vec3 {
+        self + (o - self) * t
+    }
+
+    /// Horizontal (xz-plane) 2D projection — navigation happens on a floor.
+    pub fn xz(self) -> Vec2 {
+        v2(self.x, self.z)
+    }
+
+    pub fn extend(self, w: f32) -> Vec4 {
+        v4(self.x, self.y, self.z, w)
+    }
+}
+
+impl Vec4 {
+    pub fn dot(self, o: Vec4) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z + self.w * o.w
+    }
+
+    pub fn xyz(self) -> Vec3 {
+        v3(self.x, self.y, self.z)
+    }
+}
+
+macro_rules! impl_ops {
+    ($t:ident, $($f:ident),+) => {
+        impl Add for $t {
+            type Output = $t;
+            fn add(self, o: $t) -> $t { $t { $($f: self.$f + o.$f),+ } }
+        }
+        impl Sub for $t {
+            type Output = $t;
+            fn sub(self, o: $t) -> $t { $t { $($f: self.$f - o.$f),+ } }
+        }
+        impl Mul<f32> for $t {
+            type Output = $t;
+            fn mul(self, s: f32) -> $t { $t { $($f: self.$f * s),+ } }
+        }
+        impl Div<f32> for $t {
+            type Output = $t;
+            fn div(self, s: f32) -> $t { $t { $($f: self.$f / s),+ } }
+        }
+        impl Neg for $t {
+            type Output = $t;
+            fn neg(self) -> $t { $t { $($f: -self.$f),+ } }
+        }
+        impl AddAssign for $t {
+            fn add_assign(&mut self, o: $t) { $(self.$f += o.$f;)+ }
+        }
+    };
+}
+
+impl_ops!(Vec2, x, y);
+impl_ops!(Vec3, x, y, z);
+impl_ops!(Vec4, x, y, z, w);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_orthogonal() {
+        let a = v3(1.0, 0.0, 0.0);
+        let b = v3(0.0, 1.0, 0.0);
+        assert_eq!(a.cross(b), v3(0.0, 0.0, 1.0));
+        assert!((a.cross(b).dot(a)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_unit_length() {
+        let v = v3(3.0, 4.0, 12.0).normalized();
+        assert!((v.length() - 1.0).abs() < 1e-6);
+        assert_eq!(Vec3::ZERO.normalized(), Vec3::ZERO);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let a = v3(1.0, 2.0, 3.0);
+        let b = v3(5.0, 6.0, 7.0);
+        assert_eq!(a.lerp(b, 0.0), a);
+        assert_eq!(a.lerp(b, 1.0), b);
+        assert_eq!(a.lerp(b, 0.5), v3(3.0, 4.0, 5.0));
+    }
+
+    #[test]
+    fn vec2_cross_sign() {
+        assert!(v2(1.0, 0.0).cross(v2(0.0, 1.0)) > 0.0);
+        assert!(v2(0.0, 1.0).cross(v2(1.0, 0.0)) < 0.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! # BPS — Batch Processing Simulator
+//!
+//! Production-oriented reproduction of **"Large Batch Simulation for Deep
+//! Reinforcement Learning"** (ICLR 2021) as a three-layer Rust + JAX +
+//! Pallas stack: a Rust batch simulator + batch renderer + RL coordinator
+//! (this crate) executing AOT-compiled policy/optimizer artifacts via PJRT.
+//! See DESIGN.md for the architecture and the experiment index.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod geom;
+pub mod metrics;
+pub mod optim;
+pub mod policy;
+pub mod rollout;
+pub mod navmesh;
+pub mod render;
+pub mod runtime;
+pub mod scene;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,181 @@
+//! `bps` — the launcher CLI for the Batch Processing Simulator.
+//!
+//! Subcommands:
+//!   gen-dataset   generate a procedural scene dataset with splits
+//!   train         end-to-end RL training (paper Fig. 2 loop)
+//!   eval          evaluate a checkpoint on a dataset split
+//!   info          print manifest / artifact information
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use bps::config::Config;
+use bps::coordinator::Coordinator;
+use bps::metrics::CsvLogger;
+use bps::runtime::{Manifest, ParamStore};
+use bps::scene::{generate_dataset, Complexity};
+use bps::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("gen-dataset") => gen_dataset(&mut args),
+        Some("train") => train(&mut args),
+        Some("eval") => eval(&mut args),
+        Some("info") => info(&mut args),
+        other => {
+            bail!(
+                "unknown subcommand {other:?}\n\
+                 usage: bps <gen-dataset|train|eval|info> [--key value ...]"
+            )
+        }
+    }
+}
+
+fn gen_dataset(args: &mut Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt_or("dir", "datasets/gibson_like"));
+    let n_train = args.usize_or("train", 12)?;
+    let n_val = args.usize_or("val", 3)?;
+    let n_test = args.usize_or("test", 3)?;
+    let seed = args.u64_or("seed", 1)?;
+    let cx = match args.opt_or("complexity", "gibson").as_str() {
+        "gibson" => Complexity::gibson_like(),
+        "thor" => Complexity::thor_like(),
+        "test" => Complexity::test(),
+        other => bail!("unknown complexity {other:?}"),
+    };
+    println!("generating {n_train}+{n_val}+{n_test} scenes into {dir:?} ...");
+    let t0 = std::time::Instant::now();
+    let ds = generate_dataset(&dir, n_train, n_val, n_test, cx, seed)?;
+    let sample = ds.load_scene(&ds.train[0], true)?;
+    println!(
+        "done in {:.1}s — sample scene: {} tris, {:.1} MB geometry, {:.1} MB textures, \
+         {:.0} m^2 navigable",
+        t0.elapsed().as_secs_f64(),
+        sample.mesh.num_tris(),
+        sample.geometry_bytes() as f64 / 1e6,
+        sample.texture_bytes() as f64 / 1e6,
+        sample.navmesh.area(),
+    );
+    Ok(())
+}
+
+fn train(args: &mut Args) -> Result<()> {
+    let cfg_path = args.opt("config").map(PathBuf::from);
+    let curve_path = args.opt("curve").map(PathBuf::from);
+    let ckpt_out = args.opt("checkpoint-out").map(PathBuf::from);
+    let log_every = args.usize_or("log-every", 5)?;
+    let cfg = Config::load(cfg_path.as_deref(), args)?;
+    println!(
+        "training: variant={} arch={:?} N={} L={} shards={} optimizer={} frames={}",
+        cfg.variant,
+        cfg.arch,
+        cfg.num_envs,
+        cfg.rollout_len,
+        cfg.shards,
+        cfg.optimizer,
+        cfg.total_frames
+    );
+    let mut coord = Coordinator::new(cfg)?;
+    let mut curve = match &curve_path {
+        Some(p) => Some(CsvLogger::create(
+            p,
+            "iter,frames,seconds,fps,reward,success,spl,policy_loss,value_loss,entropy,lr",
+        )?),
+        None => None,
+    };
+    let mut iter = 0u64;
+    while coord.frames() < coord.cfg.total_frames {
+        let it = coord.train_iteration()?;
+        iter += 1;
+        if iter % log_every as u64 == 0 {
+            let l = it.losses;
+            println!(
+                "iter {iter:>5} frames {:>9} fps {:>8.0} | reward {:+.3} success {:.2} \
+                 spl {:.2} | pi {:+.4} v {:.4} H {:.3} lr {:.2e} (eps {})",
+                coord.frames(),
+                coord.fps(),
+                coord.stats.reward.mean(),
+                coord.stats.success.mean(),
+                coord.stats.spl.mean(),
+                l.policy,
+                l.value,
+                l.entropy,
+                l.lr,
+                coord.stats.episodes,
+            );
+        }
+        if let Some(c) = curve.as_mut() {
+            let l = it.losses;
+            c.row(&[
+                iter as f64,
+                coord.frames() as f64,
+                coord.fps.elapsed().as_secs_f64(),
+                coord.fps(),
+                coord.stats.reward.mean() as f64,
+                coord.stats.success.mean() as f64,
+                coord.stats.spl.mean() as f64,
+                l.policy as f64,
+                l.value as f64,
+                l.entropy as f64,
+                l.lr as f64,
+            ])?;
+        }
+    }
+    println!(
+        "finished: {} frames in {:.1}s = {:.0} FPS (paper methodology)",
+        coord.frames(),
+        coord.fps.elapsed().as_secs_f64(),
+        coord.fps()
+    );
+    for (name, us) in coord.prof.breakdown(coord.frames()) {
+        println!("  {name:<10} {us:>9.1} us/frame");
+    }
+    if let Some(p) = ckpt_out {
+        coord.params.save(&p)?;
+        println!("checkpoint saved to {p:?}");
+    }
+    Ok(())
+}
+
+fn eval(args: &mut Args) -> Result<()> {
+    let cfg_path = args.opt("config").map(PathBuf::from);
+    let ckpt = args.opt("checkpoint").map(PathBuf::from);
+    let split = args.opt_or("split", "val");
+    let episodes = args.usize_or("episodes", 64)?;
+    let cfg = Config::load(cfg_path.as_deref(), args)?;
+    let mut coord = Coordinator::new(cfg)?;
+    if let Some(p) = ckpt {
+        coord.params = ParamStore::load(&p)?;
+        println!("loaded checkpoint {p:?} (step {})", coord.params.step);
+    }
+    let (spl, success, score) = coord.evaluate(&split, episodes)?;
+    println!(
+        "{split}: SPL {:.1} Success {:.1} Score {:.2} over {episodes} episodes",
+        spl * 100.0,
+        success * 100.0,
+        score
+    );
+    Ok(())
+}
+
+fn info(args: &mut Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt_or("artifacts-dir", "artifacts"));
+    let man = Manifest::load(&dir)?;
+    println!("artifacts in {dir:?}:");
+    for (name, v) in &man.variants {
+        println!(
+            "  {name}: encoder={} res={} ch={} hidden={} params={} infer_ns={:?} grad_bls={:?}",
+            v.encoder, v.res, v.in_ch, v.hidden, v.num_params, v.infer_ns, v.grad_bls
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Training metrics: episode-level SPL/success/score windows (paper §4.1
+//! evaluation metrics), FPS accounting per the paper's methodology, and
+//! CSV/JSONL logging for the figure-regeneration benches.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Sliding window over per-episode metrics.
+#[derive(Clone, Debug)]
+pub struct Window {
+    buf: VecDeque<f32>,
+    cap: usize,
+}
+
+impl Window {
+    pub fn new(cap: usize) -> Window {
+        Window {
+            buf: VecDeque::with_capacity(cap),
+            cap,
+        }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f32>() / self.buf.len() as f32
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Aggregated episode statistics (success / SPL / score / reward).
+#[derive(Debug)]
+pub struct EpisodeStats {
+    pub success: Window,
+    pub spl: Window,
+    pub score: Window,
+    pub reward: Window,
+    pub episodes: u64,
+    reward_acc: Vec<f32>,
+}
+
+impl EpisodeStats {
+    pub fn new(n_envs: usize, window: usize) -> EpisodeStats {
+        EpisodeStats {
+            success: Window::new(window),
+            spl: Window::new(window),
+            score: Window::new(window),
+            reward: Window::new(window),
+            episodes: 0,
+            reward_acc: vec![0.0; n_envs],
+        }
+    }
+
+    /// Feed one batched sim step's outcome.
+    pub fn update(
+        &mut self,
+        rewards: &[f32],
+        dones: &[bool],
+        successes: &[bool],
+        spl: &[f32],
+        scores: &[f32],
+    ) {
+        for i in 0..rewards.len() {
+            self.reward_acc[i] += rewards[i];
+            if dones[i] {
+                self.episodes += 1;
+                self.success.push(if successes[i] { 1.0 } else { 0.0 });
+                self.spl.push(spl[i]);
+                self.score.push(scores[i]);
+                self.reward.push(self.reward_acc[i]);
+                self.reward_acc[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Line-buffered CSV writer for training curves (Fig. 3/4/A1/A3 series).
+pub struct CsvLogger {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl CsvLogger {
+    pub fn create(path: &Path, header: &str) -> Result<CsvLogger> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{header}")?;
+        Ok(CsvLogger { file })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        let line = values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.file, "{line}")?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_caps_and_averages() {
+        let mut w = Window::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn episode_stats_accumulate_reward_per_episode() {
+        let mut s = EpisodeStats::new(2, 10);
+        s.update(&[1.0, 0.5], &[false, false], &[false, false], &[0.0, 0.0], &[0.0, 0.0]);
+        s.update(&[2.0, 0.5], &[true, false], &[true, false], &[0.9, 0.0], &[1.0, 0.0]);
+        assert_eq!(s.episodes, 1);
+        assert!((s.reward.mean() - 3.0).abs() < 1e-6);
+        assert!((s.success.mean() - 1.0).abs() < 1e-6);
+        assert!((s.spl.mean() - 0.9).abs() < 1e-6);
+        // env 1 still accumulating
+        s.update(&[0.0, 1.0], &[false, true], &[false, false], &[0.0, 0.0], &[0.0, 0.0]);
+        assert_eq!(s.episodes, 2);
+        assert!((s.reward.mean() - (3.0 + 2.0) / 2.0).abs() < 1e-6);
+        assert!((s.success.mean() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_logger_writes_rows() {
+        let dir = std::env::temp_dir().join("bps_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.csv");
+        let mut log = CsvLogger::create(&path, "a,b").unwrap();
+        log.row(&[1.0, 2.5]).unwrap();
+        log.row(&[2.0, 3.5]).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2.5\n"));
+    }
+}

@@ -1,0 +1,493 @@
+//! Grid navmesh: geodesic distance (A* / Dijkstra flood), sampling, motion.
+//!
+//! Distances are along 8-connected grid paths with unit/√2 step costs
+//! (octile metric) scaled by the cell size — a tight upper bound on true
+//! geodesic distance that preserves the semantics PointGoalNav needs:
+//! reward shaping, SPL, and episode difficulty filtering (paper §4.1).
+
+use crate::geom::vec::{v2, Vec2};
+use crate::util::rng::Rng;
+
+const SQRT2: f32 = std::f32::consts::SQRT_2;
+
+/// Walkable-cell navigation grid over the xz plane.
+#[derive(Clone, Debug)]
+pub struct GridNav {
+    pub origin: Vec2,
+    pub cell: f32,
+    pub w: usize,
+    pub h: usize,
+    pub walkable: Vec<bool>,
+}
+
+/// Dijkstra distance field from a source point: `dist[cell]` is the
+/// geodesic distance in meters (f32::INFINITY if unreachable).
+#[derive(Clone, Debug)]
+pub struct DistField {
+    pub dist: Vec<f32>,
+    w: usize,
+}
+
+impl DistField {
+    pub fn at_cell(&self, x: usize, y: usize) -> f32 {
+        self.dist[y * self.w + x]
+    }
+}
+
+impl GridNav {
+    pub fn new(origin: Vec2, cell: f32, w: usize, h: usize) -> GridNav {
+        GridNav {
+            origin,
+            cell,
+            w,
+            h,
+            walkable: vec![false; w * h],
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        y * self.w + x
+    }
+
+    #[inline]
+    pub fn cell_of(&self, p: Vec2) -> Option<(usize, usize)> {
+        let fx = (p.x - self.origin.x) / self.cell;
+        let fy = (p.y - self.origin.y) / self.cell;
+        if fx < 0.0 || fy < 0.0 {
+            return None;
+        }
+        let (x, y) = (fx as usize, fy as usize);
+        if x >= self.w || y >= self.h {
+            None
+        } else {
+            Some((x, y))
+        }
+    }
+
+    #[inline]
+    pub fn cell_center(&self, x: usize, y: usize) -> Vec2 {
+        v2(
+            self.origin.x + (x as f32 + 0.5) * self.cell,
+            self.origin.y + (y as f32 + 0.5) * self.cell,
+        )
+    }
+
+    #[inline]
+    pub fn is_walkable(&self, p: Vec2) -> bool {
+        match self.cell_of(p) {
+            Some((x, y)) => self.walkable[self.idx(x, y)],
+            None => false,
+        }
+    }
+
+    pub fn num_walkable(&self) -> usize {
+        self.walkable.iter().filter(|&&b| b).count()
+    }
+
+    /// Navigable area in m².
+    pub fn area(&self) -> f32 {
+        self.num_walkable() as f32 * self.cell * self.cell
+    }
+
+    fn neighbors(&self, x: usize, y: usize) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        const OFFS: [(i32, i32, f32); 8] = [
+            (1, 0, 1.0),
+            (-1, 0, 1.0),
+            (0, 1, 1.0),
+            (0, -1, 1.0),
+            (1, 1, SQRT2),
+            (1, -1, SQRT2),
+            (-1, 1, SQRT2),
+            (-1, -1, SQRT2),
+        ];
+        OFFS.iter().filter_map(move |&(dx, dy, c)| {
+            let nx = x as i32 + dx;
+            let ny = y as i32 + dy;
+            if nx < 0 || ny < 0 || nx as usize >= self.w || ny as usize >= self.h {
+                return None;
+            }
+            let (nx, ny) = (nx as usize, ny as usize);
+            if !self.walkable[self.idx(nx, ny)] {
+                return None;
+            }
+            // diagonal moves must not cut wall corners
+            if dx != 0 && dy != 0 {
+                let a = self.idx(nx, y);
+                let b = self.idx(x, ny);
+                if !self.walkable[a] || !self.walkable[b] {
+                    return None;
+                }
+            }
+            Some((nx, ny, c))
+        })
+    }
+
+    /// Dijkstra flood from `src`: geodesic distance to every cell. This is
+    /// the per-episode precomputation — per-step distance queries become
+    /// O(1) lookups (the batch simulator's hot path, paper §3.1).
+    pub fn dist_field(&self, src: Vec2) -> Option<DistField> {
+        let (sx, sy) = self.snap(src)?;
+        let mut dist = vec![f32::INFINITY; self.w * self.h];
+        let mut heap = std::collections::BinaryHeap::new();
+        let start = self.idx(sx, sy);
+        dist[start] = 0.0;
+        heap.push(HeapEntry {
+            cost: 0.0,
+            x: sx,
+            y: sy,
+        });
+        while let Some(HeapEntry { cost, x, y }) = heap.pop() {
+            if cost > dist[self.idx(x, y)] {
+                continue;
+            }
+            for (nx, ny, step) in self.neighbors(x, y) {
+                let nd = cost + step * self.cell;
+                let ni = self.idx(nx, ny);
+                if nd < dist[ni] {
+                    dist[ni] = nd;
+                    heap.push(HeapEntry {
+                        cost: nd,
+                        x: nx,
+                        y: ny,
+                    });
+                }
+            }
+        }
+        Some(DistField { dist, w: self.w })
+    }
+
+    /// Geodesic distance between two points via A* (octile heuristic).
+    pub fn geodesic(&self, a: Vec2, b: Vec2) -> Option<f32> {
+        let (ax, ay) = self.snap(a)?;
+        let (bx, by) = self.snap(b)?;
+        if (ax, ay) == (bx, by) {
+            return Some(0.0);
+        }
+        let hfn = |x: usize, y: usize| -> f32 {
+            let dx = (x as f32 - bx as f32).abs();
+            let dy = (y as f32 - by as f32).abs();
+            (dx.max(dy) + (SQRT2 - 1.0) * dx.min(dy)) * self.cell
+        };
+        let mut g = vec![f32::INFINITY; self.w * self.h];
+        let mut heap = std::collections::BinaryHeap::new();
+        g[self.idx(ax, ay)] = 0.0;
+        heap.push(HeapEntry {
+            cost: hfn(ax, ay),
+            x: ax,
+            y: ay,
+        });
+        while let Some(HeapEntry { cost, x, y }) = heap.pop() {
+            if (x, y) == (bx, by) {
+                return Some(g[self.idx(x, y)]);
+            }
+            if cost - hfn(x, y) > g[self.idx(x, y)] + 1e-6 {
+                continue;
+            }
+            for (nx, ny, step) in self.neighbors(x, y) {
+                let nd = g[self.idx(x, y)] + step * self.cell;
+                let ni = self.idx(nx, ny);
+                if nd < g[ni] {
+                    g[ni] = nd;
+                    heap.push(HeapEntry {
+                        cost: nd + hfn(nx, ny),
+                        x: nx,
+                        y: ny,
+                    });
+                }
+            }
+        }
+        None
+    }
+
+    /// Distance lookup against a precomputed field (snap + read).
+    pub fn field_dist(&self, field: &DistField, p: Vec2) -> f32 {
+        match self.snap(p) {
+            Some((x, y)) => field.at_cell(x, y),
+            None => f32::INFINITY,
+        }
+    }
+
+    /// Snap to the nearest walkable cell (expanding ring search, bounded).
+    pub fn snap(&self, p: Vec2) -> Option<(usize, usize)> {
+        let (cx, cy) = match self.cell_of(p) {
+            Some(c) => c,
+            None => {
+                // clamp into bounds, then search
+                let fx = ((p.x - self.origin.x) / self.cell)
+                    .clamp(0.0, self.w as f32 - 1.0) as usize;
+                let fy = ((p.y - self.origin.y) / self.cell)
+                    .clamp(0.0, self.h as f32 - 1.0) as usize;
+                (fx, fy)
+            }
+        };
+        if self.walkable[self.idx(cx, cy)] {
+            return Some((cx, cy));
+        }
+        for ring in 1..=20usize {
+            let x0 = cx.saturating_sub(ring);
+            let x1 = (cx + ring).min(self.w - 1);
+            let y0 = cy.saturating_sub(ring);
+            let y1 = (cy + ring).min(self.h - 1);
+            let mut best: Option<(usize, usize, f32)> = None;
+            for y in y0..=y1 {
+                for x in x0..=x1 {
+                    if (y != y0 && y != y1 && x != x0 && x != x1)
+                        || !self.walkable[self.idx(x, y)]
+                    {
+                        continue;
+                    }
+                    let c = self.cell_center(x, y);
+                    let d = (c - p).length();
+                    if best.map(|(_, _, bd)| d < bd).unwrap_or(true) {
+                        best = Some((x, y, d));
+                    }
+                }
+            }
+            if let Some((x, y, _)) = best {
+                return Some((x, y));
+            }
+        }
+        None
+    }
+
+    /// Uniform random walkable position (cell center jittered).
+    pub fn random_point(&self, rng: &mut Rng) -> Option<Vec2> {
+        let total = self.num_walkable();
+        if total == 0 {
+            return None;
+        }
+        for _ in 0..256 {
+            let x = rng.range_usize(0, self.w);
+            let y = rng.range_usize(0, self.h);
+            if self.walkable[self.idx(x, y)] {
+                let c = self.cell_center(x, y);
+                let j = self.cell * 0.3;
+                return Some(v2(
+                    c.x + rng.range_f32(-j, j),
+                    c.y + rng.range_f32(-j, j),
+                ));
+            }
+        }
+        // fall back to a scan (sparse navmeshes)
+        let target = rng.range_usize(0, total);
+        let mut seen = 0;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                if self.walkable[self.idx(x, y)] {
+                    if seen == target {
+                        return Some(self.cell_center(x, y));
+                    }
+                    seen += 1;
+                }
+            }
+        }
+        None
+    }
+
+    /// Move with wall sliding: try the full step in `delta`; on collision
+    /// retain the axis components that stay navigable (Habitat-style
+    /// sliding). Sub-steps prevent tunneling through thin walls.
+    pub fn move_agent(&self, pos: Vec2, delta: Vec2) -> Vec2 {
+        let mut p = pos;
+        let len = delta.length();
+        if len < 1e-9 {
+            return p;
+        }
+        let steps = (len / (self.cell * 0.5)).ceil().max(1.0) as usize;
+        let sub = delta / steps as f32;
+        for _ in 0..steps {
+            let cand = v2(p.x + sub.x, p.y + sub.y);
+            if self.is_walkable(cand) {
+                p = cand;
+            } else {
+                let slide_x = v2(p.x + sub.x, p.y);
+                let slide_y = v2(p.x, p.y + sub.y);
+                if self.is_walkable(slide_x) {
+                    p = slide_x;
+                } else if self.is_walkable(slide_y) {
+                    p = slide_y;
+                } else {
+                    break;
+                }
+            }
+        }
+        p
+    }
+}
+
+/// Min-heap entry (BinaryHeap is a max-heap; invert the ordering).
+#[derive(PartialEq)]
+struct HeapEntry {
+    cost: f32,
+    x: usize,
+    y: usize,
+}
+
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        o.cost
+            .partial_cmp(&self.cost)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// 10x10 m open room with a wall across the middle (door at one end).
+    fn room_with_wall() -> GridNav {
+        let mut nav = GridNav::new(v2(0.0, 0.0), 0.1, 100, 100);
+        for y in 0..100 {
+            for x in 0..100 {
+                let i = nav.idx(x, y);
+                nav.walkable[i] = true;
+            }
+        }
+        // wall at y=50 rows, door at x in [90, 97)
+        for x in 0..100 {
+            if !(90..97).contains(&x) {
+                let i = nav.idx(x, 50);
+                nav.walkable[i] = false;
+            }
+        }
+        nav
+    }
+
+    #[test]
+    fn straight_line_distance() {
+        let nav = room_with_wall();
+        let d = nav.geodesic(v2(1.0, 1.0), v2(8.0, 1.0)).unwrap();
+        assert!((d - 7.0).abs() < 0.2, "{d}");
+    }
+
+    #[test]
+    fn wall_forces_detour() {
+        let nav = room_with_wall();
+        let a = v2(1.0, 4.0);
+        let b = v2(1.0, 6.0);
+        let euclid = (b - a).length();
+        let d = nav.geodesic(a, b).unwrap();
+        // must route through the door at x~9: roughly 8 + 2 + 8 meters
+        assert!(d > 5.0 * euclid, "geodesic {d} vs euclid {euclid}");
+    }
+
+    #[test]
+    fn dist_field_matches_astar() {
+        let nav = room_with_wall();
+        let goal = v2(2.0, 8.0);
+        let field = nav.dist_field(goal).unwrap();
+        for &(px, py) in &[(1.0, 1.0), (9.0, 2.0), (5.0, 7.0), (2.0, 8.0)] {
+            let p = v2(px, py);
+            let a = nav.geodesic(p, goal).unwrap();
+            let f = nav.field_dist(&field, p);
+            assert!((a - f).abs() < 1e-3, "at {p:?}: astar {a} field {f}");
+        }
+    }
+
+    #[test]
+    fn unreachable_is_none() {
+        let mut nav = room_with_wall();
+        // seal the door
+        for x in 0..100 {
+            let i = nav.idx(x, 50);
+            nav.walkable[i] = false;
+        }
+        assert!(nav.geodesic(v2(1.0, 1.0), v2(1.0, 9.0)).is_none());
+        let field = nav.dist_field(v2(1.0, 9.0)).unwrap();
+        assert!(nav.field_dist(&field, v2(1.0, 1.0)).is_infinite());
+    }
+
+    #[test]
+    fn move_agent_slides_along_wall() {
+        let nav = room_with_wall();
+        // walk straight into the wall: x motion blocked, y motion should slide
+        let start = v2(5.0, 4.8);
+        let end = nav.move_agent(start, v2(0.3, 0.4));
+        assert!(end.x > start.x, "slid in x: {end:?}");
+        assert!(nav.is_walkable(end));
+        // y stays below the wall
+        assert!(end.y < 5.05);
+    }
+
+    #[test]
+    fn move_agent_never_leaves_navmesh_property() {
+        prop::check("move_stays_navigable", 300, |rng| {
+            let nav = room_with_wall();
+            let mut p = nav.random_point(rng).unwrap();
+            assert!(nav.is_walkable(p));
+            for _ in 0..20 {
+                let ang = rng.range_f32(0.0, std::f32::consts::TAU);
+                let d = v2(ang.cos(), ang.sin()) * rng.range_f32(0.0, 0.5);
+                p = nav.move_agent(p, d);
+                assert!(nav.is_walkable(p), "left navmesh at {p:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn geodesic_symmetric_property() {
+        prop::check("geodesic_symmetric", 40, |rng| {
+            let nav = room_with_wall();
+            let a = nav.random_point(rng).unwrap();
+            let b = nav.random_point(rng).unwrap();
+            let ab = nav.geodesic(a, b).unwrap();
+            let ba = nav.geodesic(b, a).unwrap();
+            assert!((ab - ba).abs() < 1e-3, "{ab} vs {ba}");
+        });
+    }
+
+    #[test]
+    fn geodesic_triangle_inequality_property() {
+        prop::check("geodesic_triangle", 30, |rng| {
+            let nav = room_with_wall();
+            let a = nav.random_point(rng).unwrap();
+            let b = nav.random_point(rng).unwrap();
+            let c = nav.random_point(rng).unwrap();
+            let ab = nav.geodesic(a, b).unwrap();
+            let bc = nav.geodesic(b, c).unwrap();
+            let ac = nav.geodesic(a, c).unwrap();
+            // tolerance: snapping quantizes endpoints by up to one cell
+            assert!(ac <= ab + bc + 4.0 * nav.cell, "{ac} > {ab} + {bc}");
+        });
+    }
+
+    #[test]
+    fn geodesic_lower_bounded_by_euclidean_property() {
+        prop::check("geodesic_ge_euclid", 50, |rng| {
+            let nav = room_with_wall();
+            let a = nav.random_point(rng).unwrap();
+            let b = nav.random_point(rng).unwrap();
+            let d = nav.geodesic(a, b).unwrap();
+            let e = (b - a).length();
+            assert!(d >= e - 4.0 * nav.cell, "geodesic {d} < euclid {e}");
+        });
+    }
+
+    #[test]
+    fn snap_finds_nearby_walkable() {
+        let nav = room_with_wall();
+        // point on the wall row
+        let (x, y) = nav.snap(v2(5.0, 5.05)).unwrap();
+        assert!(nav.walkable[nav.idx(x, y)]);
+        // out of bounds snaps inward
+        assert!(nav.snap(v2(-3.0, -3.0)).is_some());
+    }
+
+    #[test]
+    fn area_counts_cells() {
+        let nav = room_with_wall();
+        let expect = (100 * 100 - 93) as f32 * 0.01;
+        assert!((nav.area() - expect).abs() < 1e-3);
+    }
+}

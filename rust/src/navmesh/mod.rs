@@ -1,0 +1,9 @@
+//! Navigation mesh substrate (replaces Habitat-Sim's Recast navmesh —
+//! DESIGN.md §1): a walkable-cell grid extracted from the procedural floor
+//! plan, A* geodesic distances, Dijkstra distance fields (one flood per
+//! episode, O(1) per-step lookups), random navigable point sampling, and
+//! wall-sliding agent motion.
+
+pub mod grid;
+
+pub use grid::{DistField, GridNav};

@@ -1,0 +1,258 @@
+//! Policy optimization driver (paper §3.4): learning-rate scaling
+//! (sqrt(B/256), no warmup, cosine decay from the scaled LR back to base
+//! over the first half of training — Appendix B), DD-PPO-style multi-shard
+//! gradient averaging, and the Lamb/Adam update artifacts.
+
+use anyhow::Result;
+
+use crate::rollout::Rollout;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_f32, Exec, ParamStore};
+
+/// Which optimizer artifact to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    /// Lamb (paper §3.4) — the default.
+    Lamb,
+    /// Plain AdamW (the Fig. A3 ablation; LR scaling is disabled for Adam
+    /// because scaled LRs diverge, per the paper).
+    Adam,
+}
+
+/// Scaled learning rate: `base * sqrt(B / B_base)` (paper §3.4).
+pub fn scale_lr(base: f32, train_batch: usize, b_base: usize) -> f32 {
+    base * ((train_batch as f32 / b_base as f32).sqrt())
+}
+
+/// Cosine decay from the scaled LR back to base over the first
+/// `decay_iters` iterations, then constant base (Appendix B).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub scaled: f32,
+    pub decay_iters: u64,
+}
+
+impl LrSchedule {
+    pub fn lr(&self, iter: u64) -> f32 {
+        if self.decay_iters == 0 || iter >= self.decay_iters {
+            return self.base;
+        }
+        let t = iter as f32 / self.decay_iters as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        self.base + (self.scaled - self.base) * cos
+    }
+}
+
+/// PPO trainer bound to the `grad` + `update_*` executables.
+pub struct Trainer {
+    grad: Exec,
+    update: Exec,
+    pub num_params: usize,
+    pub mb_count: usize,
+    pub epochs: usize,
+    pub schedule: LrSchedule,
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub normalize_adv: bool,
+    pub iter: u64,
+}
+
+/// Loss diagnostics averaged over the iteration's updates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Losses {
+    pub policy: f32,
+    pub value: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub lr: f32,
+}
+
+impl Trainer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        grad: Exec,
+        update: Exec,
+        num_params: usize,
+        mb_count: usize,
+        epochs: usize,
+        schedule: LrSchedule,
+        gamma: f32,
+        gae_lambda: f32,
+        normalize_adv: bool,
+    ) -> Trainer {
+        Trainer {
+            grad,
+            update,
+            num_params,
+            mb_count,
+            epochs,
+            schedule,
+            gamma,
+            gae_lambda,
+            normalize_adv,
+            iter: 0,
+        }
+    }
+
+    /// Gradient for one minibatch of one shard.
+    fn grad_minibatch(
+        &self,
+        params: &[f32],
+        ro: &Rollout,
+        env_lo: usize,
+        env_hi: usize,
+    ) -> Result<(Vec<f32>, [f32; 4])> {
+        let mb = ro.minibatch(env_lo, env_hi);
+        let (b, l) = (mb.b as i64, mb.l as i64);
+        // obs dims recovered from the rollout geometry
+        let (r, c) = obs_dims(ro.obs_f);
+        let out = self.grad.run(&[
+            lit_f32(params, &[self.num_params as i64])?,
+            lit_f32(&mb.obs, &[b, l, r as i64, r as i64, c as i64])?,
+            lit_f32(&mb.goal, &[b, l, 3])?,
+            lit_f32(&mb.h0, &[b, ro.hidden as i64])?,
+            lit_f32(&mb.c0, &[b, ro.hidden as i64])?,
+            lit_i32(&mb.actions, &[b, l])?,
+            lit_f32(&mb.logp, &[b, l])?,
+            lit_f32(&mb.returns, &[b, l])?,
+            lit_f32(&mb.adv, &[b, l])?,
+            lit_f32(&mb.notdone, &[b, l])?,
+        ])?;
+        let grads = to_f32(&out[0])?;
+        let losses = to_f32(&out[1])?;
+        Ok((grads, [losses[0], losses[1], losses[2], losses[3]]))
+    }
+
+    /// One PPO training phase over the shards' rollouts — the DD-PPO
+    /// dataflow: per minibatch, every shard computes its gradient, the
+    /// coordinator averages (the all-reduce), and one update is applied.
+    pub fn train(&mut self, params: &mut ParamStore, shards: &mut [Rollout]) -> Result<Losses> {
+        let mut refs: Vec<&mut Rollout> = shards.iter_mut().collect();
+        self.train_refs(params, &mut refs)
+    }
+
+    /// Same as [`Trainer::train`] over mutable references (shard rollouts
+    /// live inside `Shard` structs in the coordinator).
+    pub fn train_refs(
+        &mut self,
+        params: &mut ParamStore,
+        shards: &mut [&mut Rollout],
+    ) -> Result<Losses> {
+        for ro in shards.iter_mut() {
+            ro.compute_gae(self.gamma, self.gae_lambda, self.normalize_adv);
+        }
+        let lr = self.schedule.lr(self.iter);
+        let n = shards[0].n;
+        let per_mb = n / self.mb_count;
+        let mut avg = Losses {
+            lr,
+            ..Default::default()
+        };
+        let mut updates = 0u32;
+        for _epoch in 0..self.epochs {
+            for mb in 0..self.mb_count {
+                let lo = mb * per_mb;
+                let hi = if mb == self.mb_count - 1 { n } else { lo + per_mb };
+                // shard gradients -> average (the all-reduce)
+                let mut acc = vec![0.0f32; self.num_params];
+                for ro in shards.iter() {
+                    let (g, l) = self.grad_minibatch(&params.flat, ro, lo, hi)?;
+                    for (a, b) in acc.iter_mut().zip(&g) {
+                        *a += b;
+                    }
+                    avg.policy += l[0];
+                    avg.value += l[1];
+                    avg.entropy += l[2];
+                    avg.approx_kl += l[3];
+                    updates += 1;
+                }
+                let inv = 1.0 / shards.len() as f32;
+                for a in &mut acc {
+                    *a *= inv;
+                }
+                self.apply(params, &acc, lr)?;
+            }
+        }
+        self.iter += 1;
+        let inv = 1.0 / updates.max(1) as f32;
+        avg.policy *= inv;
+        avg.value *= inv;
+        avg.entropy *= inv;
+        avg.approx_kl *= inv;
+        Ok(avg)
+    }
+
+    /// Run the optimizer update artifact in place.
+    pub fn apply(&self, params: &mut ParamStore, grads: &[f32], lr: f32) -> Result<()> {
+        let p = self.num_params as i64;
+        let out = self.update.run(&[
+            lit_f32(&params.flat, &[p])?,
+            lit_f32(&params.m, &[p])?,
+            lit_f32(&params.v, &[p])?,
+            lit_scalar_f32(params.step),
+            lit_f32(grads, &[p])?,
+            lit_scalar_f32(lr),
+        ])?;
+        params.flat = to_f32(&out[0])?;
+        params.m = to_f32(&out[1])?;
+        params.v = to_f32(&out[2])?;
+        params.step = to_f32(&out[3])?[0];
+        Ok(())
+    }
+}
+
+/// obs_f = res*res*c with c in {1, 3}: recover (res, c). Resolutions are
+/// powers of two in this system, so the factorization is unambiguous.
+fn obs_dims(obs_f: usize) -> (usize, usize) {
+    for c in [1usize, 3] {
+        if obs_f % c == 0 {
+            let rr = obs_f / c;
+            let r = (rr as f64).sqrt() as usize;
+            if r * r == rr && (c == 3 || r.is_power_of_two()) {
+                return (r, c);
+            }
+        }
+    }
+    // prefer rgb when both fit (res divisible by 3 never is a square here)
+    panic!("cannot infer obs dims from {obs_f}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_scaling_sqrt() {
+        assert!((scale_lr(2.5e-4, 256, 256) - 2.5e-4).abs() < 1e-9);
+        assert!((scale_lr(2.5e-4, 1024, 256) - 5.0e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_decays_scaled_to_base() {
+        let s = LrSchedule {
+            base: 1e-4,
+            scaled: 4e-4,
+            decay_iters: 100,
+        };
+        assert!((s.lr(0) - 4e-4).abs() < 1e-9);
+        assert!((s.lr(100) - 1e-4).abs() < 1e-9);
+        assert!((s.lr(1_000) - 1e-4).abs() < 1e-9);
+        let mid = s.lr(50);
+        assert!(mid < 4e-4 && mid > 1e-4);
+        // monotone non-increasing
+        let mut prev = f32::INFINITY;
+        for i in 0..=100 {
+            let lr = s.lr(i);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn obs_dims_inference() {
+        assert_eq!(obs_dims(64 * 64), (64, 1));
+        assert_eq!(obs_dims(64 * 64 * 3), (64, 3));
+        assert_eq!(obs_dims(32 * 32), (32, 1));
+        assert_eq!(obs_dims(128 * 128 * 3), (128, 3));
+    }
+}

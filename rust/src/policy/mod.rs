@@ -1,0 +1,149 @@
+//! Policy inference on the rollout hot path: batched forward through the
+//! AOT `infer` executable, recurrent state ownership, and categorical
+//! action sampling (sampling stays in Rust so the artifacts are pure
+//! functions and the whole system is reproducible from one seed).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{lit_f32, to_f32, Exec, Manifest, Runtime, Variant};
+use crate::util::rng::Rng;
+
+/// Batched recurrent policy bound to one `infer_n{N}` executable.
+pub struct Policy {
+    infer: Rc<Exec>,
+    pub n: usize,
+    pub res: usize,
+    pub in_ch: usize,
+    pub hidden: usize,
+    pub num_actions: usize,
+    num_params: usize,
+    /// Recurrent state, owned here ([N, hidden] each).
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    rng: Rng,
+}
+
+/// Outputs of one batched inference step.
+pub struct PolicyStep {
+    pub actions: Vec<u8>,
+    pub logp: Vec<f32>,
+    pub values: Vec<f32>,
+}
+
+impl Policy {
+    pub fn new(
+        rt: &Runtime,
+        man: &Manifest,
+        variant: &Variant,
+        n: usize,
+        seed: u64,
+    ) -> Result<Policy> {
+        if !variant.infer_ns.contains(&n) {
+            bail!(
+                "no infer artifact for N={n} in variant {:?} (exported: {:?}); \
+                 add it to the preset in python/compile/aot.py and re-run make artifacts",
+                variant.name,
+                variant.infer_ns
+            );
+        }
+        let infer = Rc::new(rt.load(&man.artifact_path(variant, &format!("infer_n{n}"))?)?);
+        Ok(Policy::with_exec(infer, variant, n, seed))
+    }
+
+    /// Build from an already-compiled executable (shared across shards —
+    /// compiling once and sharing matters when S x compile time adds up).
+    pub fn with_exec(infer: Rc<Exec>, variant: &Variant, n: usize, seed: u64) -> Policy {
+        Policy {
+            infer,
+            n,
+            res: variant.res,
+            in_ch: variant.in_ch,
+            hidden: variant.hidden,
+            num_actions: variant.num_actions,
+            num_params: variant.num_params,
+            h: vec![0.0; n * variant.hidden],
+            c: vec![0.0; n * variant.hidden],
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn forward(
+        &self,
+        params: &[f32],
+        obs: &[f32],
+        goal: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let n = self.n as i64;
+        let out = self.infer.run(&[
+            lit_f32(params, &[self.num_params as i64])?,
+            lit_f32(obs, &[n, self.res as i64, self.res as i64, self.in_ch as i64])?,
+            lit_f32(goal, &[n, 3])?,
+            lit_f32(&self.h, &[n, self.hidden as i64])?,
+            lit_f32(&self.c, &[n, self.hidden as i64])?,
+        ])?;
+        Ok((
+            to_f32(&out[0])?,
+            to_f32(&out[1])?,
+            to_f32(&out[2])?,
+            to_f32(&out[3])?,
+        ))
+    }
+
+    /// Sampled step (training rollouts): advances the recurrent state and
+    /// samples actions from the categorical policy.
+    pub fn step(&mut self, params: &[f32], obs: &[f32], goal: &[f32]) -> Result<PolicyStep> {
+        let (logits, values, h2, c2) = self.forward(params, obs, goal)?;
+        self.h = h2;
+        self.c = c2;
+        let a = self.num_actions;
+        let mut actions = Vec::with_capacity(self.n);
+        let mut logp = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let (act, lp) = self.rng.categorical(&logits[i * a..(i + 1) * a]);
+            actions.push(act as u8);
+            logp.push(lp);
+        }
+        Ok(PolicyStep {
+            actions,
+            logp,
+            values,
+        })
+    }
+
+    /// Greedy step (evaluation): argmax actions, recurrent state advances.
+    pub fn step_greedy(&mut self, params: &[f32], obs: &[f32], goal: &[f32]) -> Result<Vec<u8>> {
+        let (logits, _, h2, c2) = self.forward(params, obs, goal)?;
+        self.h = h2;
+        self.c = c2;
+        let a = self.num_actions;
+        Ok((0..self.n)
+            .map(|i| {
+                let row = &logits[i * a..(i + 1) * a];
+                row.iter()
+                    .enumerate()
+                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                    .map(|(k, _)| k as u8)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Value estimate WITHOUT advancing the recurrent state (rollout
+    /// bootstrap at step L).
+    pub fn values_only(&self, params: &[f32], obs: &[f32], goal: &[f32]) -> Result<Vec<f32>> {
+        let (_, values, _, _) = self.forward(params, obs, goal)?;
+        Ok(values)
+    }
+
+    /// Zero the recurrent state of environments whose episode ended.
+    pub fn reset_done(&mut self, dones: &[bool]) {
+        for (i, &d) in dones.iter().enumerate() {
+            if d {
+                self.h[i * self.hidden..(i + 1) * self.hidden].fill(0.0);
+                self.c[i * self.hidden..(i + 1) * self.hidden].fill(0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Agent camera: pinhole projection from a navmesh pose (position on the
+//! floor + heading), eye height and FoV matching Habitat's PointGoalNav
+//! sensor rig.
+
+use crate::geom::vec::{v3, Vec2, Vec3};
+use crate::geom::{Frustum, Mat4};
+
+pub const EYE_HEIGHT: f32 = 1.25;
+pub const FOV_DEG: f32 = 90.0;
+pub const NEAR: f32 = 0.05;
+pub const FAR: f32 = 50.0;
+
+/// Camera pose + cached view-projection and frustum.
+#[derive(Clone, Copy, Debug)]
+pub struct Camera {
+    pub eye: Vec3,
+    pub view_proj: Mat4,
+    pub frustum: Frustum,
+}
+
+impl Camera {
+    /// Build from an agent pose: `pos` on the xz floor plane, `heading` in
+    /// radians (0 = +x, counterclockwise when seen from above).
+    pub fn from_agent(pos: Vec2, heading: f32, aspect: f32) -> Camera {
+        let eye = v3(pos.x, EYE_HEIGHT, pos.y);
+        let fwd = v3(heading.cos(), 0.0, heading.sin());
+        let view = Mat4::look_at(eye, eye + fwd, Vec3::UP);
+        let proj = Mat4::perspective(FOV_DEG.to_radians(), aspect, NEAR, FAR);
+        let view_proj = proj.mul(&view);
+        Camera {
+            eye,
+            view_proj,
+            frustum: Frustum::from_view_proj(&view_proj),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::vec::v2;
+
+    #[test]
+    fn forward_point_visible_behind_not() {
+        let cam = Camera::from_agent(v2(2.0, 3.0), 0.0, 1.0);
+        // ahead along +x at eye height
+        assert!(cam.frustum.contains_point(v3(5.0, 1.25, 3.0)));
+        // behind
+        assert!(!cam.frustum.contains_point(v3(-1.0, 1.25, 3.0)));
+    }
+
+    #[test]
+    fn heading_rotates_view() {
+        // facing +z (heading = pi/2)
+        let cam = Camera::from_agent(v2(0.0, 0.0), std::f32::consts::FRAC_PI_2, 1.0);
+        assert!(cam.frustum.contains_point(v3(0.0, 1.25, 4.0)));
+        assert!(!cam.frustum.contains_point(v3(0.0, 1.25, -4.0)));
+    }
+
+    #[test]
+    fn eye_at_agent_height() {
+        let cam = Camera::from_agent(v2(1.0, 1.0), 0.3, 1.0);
+        assert!((cam.eye.y - EYE_HEIGHT).abs() < 1e-6);
+    }
+}

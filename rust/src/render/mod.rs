@@ -1,0 +1,13 @@
+//! The batch renderer (paper §3.2): software rasterizer, frustum culling,
+//! the megaframe batch pass, scene-asset sharing (K ≪ N), and the
+//! background asset streamer that rotates scenes during training.
+
+pub mod batch;
+pub mod camera;
+pub mod raster;
+pub mod stream;
+
+pub use batch::{BatchRenderer, PipelineMode, RenderConfig, RenderItem};
+pub use camera::Camera;
+pub use raster::{RasterStats, Sensor, DEPTH_MAX_M};
+pub use stream::{AssetStreamer, SceneRotation, MAX_N_TO_K};

@@ -1,0 +1,457 @@
+//! Software triangle rasterizer — the CPU stand-in for the paper's Vulkan
+//! batch renderer (DESIGN.md §1). Z-buffered edge-function rasterization
+//! with perspective-correct UV interpolation, near-plane clipping, frustum
+//! chunk culling (paper §3.2), point-sampled procedural textures, and both
+//! sensor modalities (Depth in meters / shaded RGB).
+
+use crate::geom::vec::{v2, Vec3};
+use crate::geom::{Frustum, Vec2};
+use crate::scene::mesh::NO_TEX;
+use crate::scene::SceneAsset;
+
+use super::camera::Camera;
+
+/// Which sensor to synthesize (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sensor {
+    Depth,
+    Rgb,
+}
+
+impl Sensor {
+    pub fn channels(&self) -> usize {
+        match self {
+            Sensor::Depth => 1,
+            Sensor::Rgb => 3,
+        }
+    }
+}
+
+/// Depth normalization: sensors report meters clamped to [0, 10] / 10,
+/// matching Habitat's depth camera range.
+pub const DEPTH_MAX_M: f32 = 10.0;
+
+/// Per-call culling statistics (feeds the Fig. A2 / ablation benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RasterStats {
+    pub chunks_total: usize,
+    pub chunks_culled: usize,
+    pub tris_rasterized: usize,
+}
+
+/// Reusable per-tile scratch (z-buffer) — allocation-free hot path.
+pub struct TileScratch {
+    zbuf: Vec<f32>,
+}
+
+impl TileScratch {
+    pub fn new(res: usize) -> TileScratch {
+        TileScratch {
+            zbuf: vec![f32::INFINITY; res * res],
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct ClipVert {
+    /// clip-space position (x, y, z, w) with w = view-space distance
+    x: f32,
+    y: f32,
+    z: f32,
+    w: f32,
+    u: f32,
+    v: f32,
+}
+
+/// Cull a scene's chunks against a frustum; visible chunk indices into
+/// `out`. This is the compute-shader stage of the paper's pipelined culling.
+pub fn cull_chunks(scene: &SceneAsset, frustum: &Frustum, out: &mut Vec<u32>) -> RasterStats {
+    out.clear();
+    let mut stats = RasterStats {
+        chunks_total: scene.mesh.chunks.len(),
+        ..Default::default()
+    };
+    for (ci, chunk) in scene.mesh.chunks.iter().enumerate() {
+        if frustum.intersects_aabb(&chunk.aabb) {
+            out.push(ci as u32);
+        } else {
+            stats.chunks_culled += 1;
+        }
+    }
+    stats
+}
+
+/// Rasterize the visible chunks of `scene` into one `res`×`res` tile.
+///
+/// `depth_out`: `res*res` floats (normalized [0,1] meters/10).
+/// `rgb_out`: `Some(res*res*3)` floats in [0,1] for RGB sensors.
+/// Returns triangle statistics.
+#[allow(clippy::too_many_arguments)]
+pub fn raster_tile(
+    scene: &SceneAsset,
+    cam: &Camera,
+    visible: &[u32],
+    res: usize,
+    depth_out: &mut [f32],
+    mut rgb_out: Option<&mut [f32]>,
+    scratch: &mut TileScratch,
+) -> RasterStats {
+    debug_assert_eq!(depth_out.len(), res * res);
+    let zbuf = &mut scratch.zbuf[..res * res];
+    zbuf.fill(f32::INFINITY);
+    if let Some(rgb) = rgb_out.as_deref_mut() {
+        rgb.fill(0.0);
+    }
+    let mut stats = RasterStats::default();
+
+    let vp = &cam.view_proj;
+    let mesh = &scene.mesh;
+    let light = Vec3 {
+        x: 0.35,
+        y: 0.85,
+        z: 0.4,
+    }
+    .normalized();
+
+    let mut poly = [ClipVert {
+        x: 0.0,
+        y: 0.0,
+        z: 0.0,
+        w: 0.0,
+        u: 0.0,
+        v: 0.0,
+    }; 4];
+
+    for &ci in visible {
+        let chunk = &mesh.chunks[ci as usize];
+        let t0 = chunk.tri_start as usize;
+        let t1 = t0 + chunk.tri_count as usize;
+        for t in t0..t1 {
+            let ia = mesh.indices[t * 3] as usize;
+            let ib = mesh.indices[t * 3 + 1] as usize;
+            let ic = mesh.indices[t * 3 + 2] as usize;
+            let (pa, pb, pc) = (mesh.positions[ia], mesh.positions[ib], mesh.positions[ic]);
+            let (ua, ub, uc) = (mesh.uvs[ia], mesh.uvs[ib], mesh.uvs[ic]);
+
+            let mk = |p: Vec3, uv: Vec2| {
+                let c = vp.mul_vec4(p.extend(1.0));
+                ClipVert {
+                    x: c.x,
+                    y: c.y,
+                    z: c.z,
+                    w: c.w,
+                    u: uv.x,
+                    v: uv.y,
+                }
+            };
+            let tri = [mk(pa, ua), mk(pb, ub), mk(pc, uc)];
+
+            // near-plane clip (w >= NEAR): Sutherland-Hodgman, <= 4 verts out
+            let n = clip_near(&tri, &mut poly);
+            if n < 3 {
+                continue;
+            }
+
+            // shading inputs shared by the fan
+            let shade = if rgb_out.is_some() {
+                let mat = &scene.materials[mesh.tri_material[t] as usize];
+                let normal = (pb - pa).cross(pc - pa).normalized();
+                let ndl = normal.dot(light).abs(); // double-sided
+                let lit = 0.45 + 0.55 * ndl;
+                Some((mat, lit))
+            } else {
+                None
+            };
+
+            for k in 1..n - 1 {
+                stats.tris_rasterized += 1;
+                fill_triangle(
+                    &poly[0],
+                    &poly[k],
+                    &poly[k + 1],
+                    res,
+                    zbuf,
+                    depth_out,
+                    rgb_out.as_deref_mut(),
+                    scene,
+                    shade,
+                );
+            }
+        }
+    }
+
+    // resolve: meters -> normalized depth; untouched pixels read as max range
+    for i in 0..res * res {
+        depth_out[i] = if zbuf[i].is_finite() {
+            (zbuf[i] / DEPTH_MAX_M).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+    }
+    stats
+}
+
+/// Clip a triangle against the near plane (keep w >= NEAR). Returns the
+/// number of output vertices written to `out` (0, 3 or 4).
+fn clip_near(tri: &[ClipVert; 3], out: &mut [ClipVert; 4]) -> usize {
+    const NEAR: f32 = super::camera::NEAR;
+    let inside = |v: &ClipVert| v.w >= NEAR;
+    let mut n = 0usize;
+    for i in 0..3 {
+        let a = &tri[i];
+        let b = &tri[(i + 1) % 3];
+        let (ia, ib) = (inside(a), inside(b));
+        if ia {
+            out[n] = *a;
+            n += 1;
+        }
+        if ia != ib {
+            let t = (NEAR - a.w) / (b.w - a.w);
+            out[n] = ClipVert {
+                x: a.x + (b.x - a.x) * t,
+                y: a.y + (b.y - a.y) * t,
+                z: a.z + (b.z - a.z) * t,
+                w: NEAR,
+                u: a.u + (b.u - a.u) * t,
+                v: a.v + (b.v - a.v) * t,
+            };
+            n += 1;
+        }
+        if n == 4 {
+            break;
+        }
+    }
+    n
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fill_triangle(
+    a: &ClipVert,
+    b: &ClipVert,
+    c: &ClipVert,
+    res: usize,
+    zbuf: &mut [f32],
+    _depth_out: &mut [f32],
+    mut rgb_out: Option<&mut [f32]>,
+    scene: &SceneAsset,
+    shade: Option<(&crate::scene::Material, f32)>,
+) {
+    let resf = res as f32;
+    // NDC -> screen (y flipped: NDC +y is up, row 0 is top)
+    let to_screen = |v: &ClipVert| {
+        let inv_w = 1.0 / v.w;
+        v2(
+            (v.x * inv_w * 0.5 + 0.5) * resf,
+            (0.5 - v.y * inv_w * 0.5) * resf,
+        )
+    };
+    let (sa, sb, sc) = (to_screen(a), to_screen(b), to_screen(c));
+    let area = (sb - sa).cross(sc - sa);
+    if area.abs() < 1e-12 {
+        return;
+    }
+    let inv_area = 1.0 / area;
+
+    let min_x = sa.x.min(sb.x).min(sc.x).floor().max(0.0) as usize;
+    let max_x = (sa.x.max(sb.x).max(sc.x).ceil() as usize).min(res);
+    let min_y = sa.y.min(sb.y).min(sc.y).floor().max(0.0) as usize;
+    let max_y = (sa.y.max(sb.y).max(sc.y).ceil() as usize).min(res);
+    if min_x >= max_x || min_y >= max_y {
+        return;
+    }
+
+    // perspective-correct attributes: interpolate (1/w, u/w, v/w)
+    let (iwa, iwb, iwc) = (1.0 / a.w, 1.0 / b.w, 1.0 / c.w);
+    let (uwa, uwb, uwc) = (a.u * iwa, b.u * iwb, c.u * iwc);
+    let (vwa, vwb, vwc) = (a.v * iwa, b.v * iwb, c.v * iwc);
+
+    for py in min_y..max_y {
+        let row = py * res;
+        let pyf = py as f32 + 0.5;
+        for px in min_x..max_x {
+            let p = v2(px as f32 + 0.5, pyf);
+            let w0 = (sb - p).cross(sc - p) * inv_area;
+            let w1 = (sc - p).cross(sa - p) * inv_area;
+            let w2 = 1.0 - w0 - w1;
+            if w0 < 0.0 || w1 < 0.0 || w2 < 0.0 {
+                continue;
+            }
+            let inv_w = w0 * iwa + w1 * iwb + w2 * iwc;
+            let depth_m = 1.0 / inv_w; // view-space distance in meters
+            let zi = row + px;
+            if depth_m >= zbuf[zi] {
+                continue;
+            }
+            zbuf[zi] = depth_m;
+            if let Some(rgb) = rgb_out.as_deref_mut() {
+                let (mat, lit) = shade.expect("rgb requires shading inputs");
+                let mut col = mat.albedo;
+                if mat.tex != NO_TEX {
+                    if let Some(tex) = scene.textures.get(mat.tex as usize) {
+                        let u = (w0 * uwa + w1 * uwb + w2 * uwc) / inv_w;
+                        let v = (w0 * vwa + w1 * vwb + w2 * vwc) / inv_w;
+                        let s = tex.sample(u, v);
+                        col = [col[0] * s[0], col[1] * s[1], col[2] * s[2]];
+                    }
+                }
+                let o = zi * 3;
+                rgb[o] = (col[0] * lit).clamp(0.0, 1.0);
+                rgb[o + 1] = (col[1] * lit).clamp(0.0, 1.0);
+                rgb[o + 2] = (col[2] * lit).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Render one environment observation (cull + raster in one call).
+pub fn render_env(
+    scene: &SceneAsset,
+    cam: &Camera,
+    res: usize,
+    depth_out: &mut [f32],
+    rgb_out: Option<&mut [f32]>,
+    scratch: &mut TileScratch,
+    visible_scratch: &mut Vec<u32>,
+) -> RasterStats {
+    let cull_stats = cull_chunks(scene, &cam.frustum, visible_scratch);
+    let mut stats = raster_tile(scene, cam, visible_scratch, res, depth_out, rgb_out, scratch);
+    stats.chunks_total = cull_stats.chunks_total;
+    stats.chunks_culled = cull_stats.chunks_culled;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::vec::v2 as gv2;
+    use crate::scene::procgen::{generate, Complexity};
+    use crate::util::rng::Rng;
+
+    fn scene() -> SceneAsset {
+        generate("r", 41, Complexity::test())
+    }
+
+    fn render(scene: &SceneAsset, pos: Vec2, heading: f32, res: usize, rgb: bool)
+        -> (Vec<f32>, Option<Vec<f32>>, RasterStats) {
+        let cam = Camera::from_agent(pos, heading, 1.0);
+        let mut depth = vec![0.0f32; res * res];
+        let mut color = if rgb { Some(vec![0.0f32; res * res * 3]) } else { None };
+        let mut scratch = TileScratch::new(res);
+        let mut vis = Vec::new();
+        let stats = render_env(
+            scene,
+            &cam,
+            res,
+            &mut depth,
+            color.as_deref_mut(),
+            &mut scratch,
+            &mut vis,
+        );
+        (depth, color, stats)
+    }
+
+    #[test]
+    fn depth_in_unit_range_and_varied() {
+        let s = scene();
+        let mut rng = Rng::new(2);
+        let pos = s.navmesh.random_point(&mut rng).unwrap();
+        let (depth, _, stats) = render(&s, pos, 0.7, 64, false);
+        assert!(depth.iter().all(|&d| (0.0..=1.0).contains(&d)));
+        // indoors: walls everywhere, so some pixels must be closer than max
+        let min = depth.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(min < 0.9, "min depth {min}");
+        assert!(stats.tris_rasterized > 0);
+    }
+
+    #[test]
+    fn floor_visible_in_lower_half() {
+        let s = scene();
+        let mut rng = Rng::new(3);
+        let pos = s.navmesh.random_point(&mut rng).unwrap();
+        let res = 64;
+        let (depth, _, _) = render(&s, pos, 1.1, res, false);
+        // bottom rows look at the floor right at the agent's feet: near
+        let bottom = &depth[(res - 2) * res..];
+        assert!(bottom.iter().any(|&d| d < 0.4), "bottom depths {bottom:?}");
+    }
+
+    #[test]
+    fn nearby_wall_reads_close_depth() {
+        let s = scene();
+        // walk to the west perimeter wall and look at it (heading pi = -x)
+        let p = gv2(0.5, s.navmesh.origin.y + 3.0);
+        let p = if s.navmesh.is_walkable(p) {
+            p
+        } else {
+            let mut rng = Rng::new(4);
+            s.navmesh.random_point(&mut rng).unwrap()
+        };
+        let (depth, _, _) = render(&s, p, std::f32::consts::PI, 32, false);
+        let center = depth[16 * 32 + 16];
+        assert!(center < 1.0);
+    }
+
+    #[test]
+    fn rgb_renders_colors() {
+        let s = scene();
+        let mut rng = Rng::new(5);
+        let pos = s.navmesh.random_point(&mut rng).unwrap();
+        let (_, rgb, _) = render(&s, pos, 0.0, 32, true);
+        let rgb = rgb.unwrap();
+        assert!(rgb.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        // scene is lit + textured: some channel variance expected
+        let mean: f32 = rgb.iter().sum::<f32>() / rgb.len() as f32;
+        assert!(mean > 0.01, "mean {mean}");
+        let var: f32 =
+            rgb.iter().map(|&c| (c - mean) * (c - mean)).sum::<f32>() / rgb.len() as f32;
+        assert!(var > 1e-5, "flat image, var {var}");
+    }
+
+    #[test]
+    fn culling_reduces_work_but_not_output() {
+        let s = scene();
+        let mut rng = Rng::new(6);
+        let pos = s.navmesh.random_point(&mut rng).unwrap();
+        let cam = Camera::from_agent(pos, 0.3, 1.0);
+        let res = 48;
+        // culled render
+        let mut vis = Vec::new();
+        let stats = cull_chunks(&s, &cam.frustum, &mut vis);
+        let mut scratch = TileScratch::new(res);
+        let mut d_culled = vec![0.0f32; res * res];
+        raster_tile(&s, &cam, &vis, res, &mut d_culled, None, &mut scratch);
+        // unculled render (all chunks)
+        let all: Vec<u32> = (0..s.mesh.chunks.len() as u32).collect();
+        let mut d_all = vec![0.0f32; res * res];
+        raster_tile(&s, &cam, &all, res, &mut d_all, None, &mut scratch);
+        assert_eq!(d_culled, d_all, "culling changed the image");
+        assert!(
+            stats.chunks_culled > 0,
+            "expected some culling ({} chunks)",
+            stats.chunks_total
+        );
+    }
+
+    #[test]
+    fn depth_monotonic_with_distance() {
+        // two boxes straight ahead at different distances: nearer box wins
+        let mut s = scene();
+        s.mesh = crate::scene::Mesh::default();
+        s.mesh.add_box(
+            crate::geom::vec::v3(3.0, 0.0, 2.6),
+            crate::geom::vec::v3(3.5, 2.5, 3.4),
+            0,
+            1,
+        );
+        s.mesh.add_box(
+            crate::geom::vec::v3(5.0, 0.0, 2.0),
+            crate::geom::vec::v3(5.5, 2.5, 4.0),
+            0,
+            1,
+        );
+        let (depth, _, _) = render(&s, gv2(1.0, 3.0), 0.0, 32, false);
+        let center = depth[16 * 32 + 16] * DEPTH_MAX_M;
+        // the near box face is at x=3.0, agent at x=1.0 -> 2.0m
+        assert!((center - 2.0).abs() < 0.3, "center depth {center}m");
+    }
+}

@@ -1,0 +1,272 @@
+//! Asset streaming + the K-slot scene rotation (paper §3.2).
+//!
+//! The renderer keeps K ≪ N unique scene assets resident and shares them
+//! across the batch (N:K ≤ 32 to preserve experience diversity). A
+//! background loader thread continuously loads the *next* scenes from disk,
+//! overlapping I/O with rollout generation and learning; when a load
+//! completes, the slot's environments are queued to move to the new scene
+//! at their next episode reset, and the old asset is dropped (freed once
+//! the last episode on it ends, via `Arc` refcounts).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::scene::{Dataset, SceneAsset};
+use crate::sim::BatchSim;
+
+/// Paper constraint: no scene asset shared by more than 32 envs in a batch.
+pub const MAX_N_TO_K: usize = 32;
+
+/// Background asset loader (the "asynchronous transfers" of Fig. 2).
+pub struct AssetStreamer {
+    req_tx: Sender<String>,
+    ready_rx: Receiver<(String, Arc<SceneAsset>)>,
+    _thread: JoinHandle<()>,
+}
+
+impl AssetStreamer {
+    pub fn new(dataset: Dataset, with_textures: bool) -> AssetStreamer {
+        let (req_tx, req_rx) = channel::<String>();
+        let (ready_tx, ready_rx) = channel();
+        let thread = std::thread::spawn(move || {
+            while let Ok(id) = req_rx.recv() {
+                match dataset.load_scene(&id, with_textures) {
+                    Ok(scene) => {
+                        if ready_tx.send((id, Arc::new(scene))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => eprintln!("asset streamer: failed to load {id}: {e:#}"),
+                }
+            }
+        });
+        AssetStreamer {
+            req_tx,
+            ready_rx,
+            _thread: thread,
+        }
+    }
+
+    pub fn request(&self, id: &str) {
+        let _ = self.req_tx.send(id.to_string());
+    }
+
+    /// Non-blocking poll for completed loads.
+    pub fn poll(&self) -> Vec<(String, Arc<SceneAsset>)> {
+        let mut out = Vec::new();
+        loop {
+            match self.ready_rx.try_recv() {
+                Ok(x) => out.push(x),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Blocking wait for one load (startup only).
+    pub fn wait_one(&self) -> Option<(String, Arc<SceneAsset>)> {
+        self.ready_rx.recv().ok()
+    }
+}
+
+/// K resident scenes rotated through the training split.
+pub struct SceneRotation {
+    pub k: usize,
+    pub active: Vec<Arc<SceneAsset>>,
+    ids: Vec<String>,
+    next_scene: usize,
+    next_slot: usize,
+    streamer: AssetStreamer,
+    inflight: bool,
+    pub rotations: u64,
+}
+
+impl SceneRotation {
+    /// Load the initial K scenes synchronously and start prefetching.
+    pub fn new(
+        dataset: Dataset,
+        split_ids: Vec<String>,
+        k: usize,
+        with_textures: bool,
+    ) -> Result<SceneRotation> {
+        assert!(!split_ids.is_empty());
+        let k = k.min(split_ids.len()).max(1);
+        let streamer = AssetStreamer::new(dataset, with_textures);
+        let mut active = Vec::with_capacity(k);
+        for id in split_ids.iter().take(k) {
+            streamer.request(id);
+        }
+        for _ in 0..k {
+            let (_, scene) = streamer
+                .wait_one()
+                .ok_or_else(|| anyhow::anyhow!("asset streamer died during startup"))?;
+            active.push(scene);
+        }
+        let mut rot = SceneRotation {
+            k,
+            active,
+            ids: split_ids,
+            next_scene: k,
+            next_slot: 0,
+            streamer,
+            inflight: false,
+            rotations: 0,
+        };
+        rot.kick_prefetch();
+        Ok(rot)
+    }
+
+    fn kick_prefetch(&mut self) {
+        if !self.inflight && self.ids.len() > self.k {
+            let id = &self.ids[self.next_scene % self.ids.len()];
+            self.streamer.request(id);
+            self.next_scene += 1;
+            self.inflight = true;
+        }
+    }
+
+    /// Initial env -> scene assignment (round-robin over the K slots,
+    /// enforcing the N:K <= 32 sharing cap).
+    pub fn assign(&self, n: usize) -> Vec<Arc<SceneAsset>> {
+        assert!(
+            n <= self.k * MAX_N_TO_K,
+            "N={n} exceeds K*32={} (paper sharing cap)",
+            self.k * MAX_N_TO_K
+        );
+        (0..n)
+            .map(|i| Arc::clone(&self.active[i % self.k]))
+            .collect()
+    }
+
+    pub fn slot_of_env(&self, env: usize) -> usize {
+        env % self.k
+    }
+
+    /// Called once per training iteration: if a prefetched scene is ready,
+    /// swap it into the next slot and queue the slot's envs for migration
+    /// at their next reset. Never blocks rollout generation.
+    pub fn rotate(&mut self, sim: &mut BatchSim) {
+        for (_, scene) in self.streamer.poll() {
+            let slot = self.next_slot % self.k;
+            self.active[slot] = Arc::clone(&scene);
+            for env in 0..sim.num_envs() {
+                if env % self.k == slot {
+                    sim.queue_scene(env, Arc::clone(&scene));
+                }
+            }
+            self.next_slot += 1;
+            self.rotations += 1;
+            self.inflight = false;
+        }
+        self.kick_prefetch();
+    }
+
+    /// Total resident asset footprint (the "GPU memory" budget check).
+    pub fn resident_bytes(&self, with_textures: bool) -> usize {
+        self.active
+            .iter()
+            .map(|s| s.footprint_bytes(with_textures))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::dataset::generate_dataset;
+    use crate::scene::Complexity;
+    use crate::sim::{SimConfig, SimOutputs, ACTION_LEFT};
+    use crate::util::pool::WorkerPool;
+    use std::path::PathBuf;
+
+    fn dataset(name: &str, n: usize) -> (Dataset, PathBuf) {
+        let dir = std::env::temp_dir().join("bps_stream_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = generate_dataset(&dir, n, 0, 0, Complexity::test(), 77).unwrap();
+        (ds, dir)
+    }
+
+    #[test]
+    fn streamer_loads_in_background() {
+        let (ds, _d) = dataset("bg", 2);
+        let st = AssetStreamer::new(ds, false);
+        st.request("train_000");
+        st.request("train_001");
+        let mut got = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while got.len() < 2 && std::time::Instant::now() < deadline {
+            got.extend(st.poll());
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().any(|(id, _)| id == "train_000"));
+    }
+
+    #[test]
+    fn rotation_respects_sharing_cap() {
+        let (ds, _d) = dataset("cap", 3);
+        let ids = ds.train.clone();
+        let rot = SceneRotation::new(ds, ids, 2, false).unwrap();
+        assert_eq!(rot.active.len(), 2);
+        let assign = rot.assign(8);
+        assert_eq!(assign.len(), 8);
+        // round robin across 2 slots
+        assert_eq!(assign[0].id, assign[2].id);
+        assert_eq!(assign[1].id, assign[3].id);
+        assert_ne!(assign[0].id, assign[1].id);
+    }
+
+    #[test]
+    #[should_panic(expected = "sharing cap")]
+    fn sharing_cap_enforced() {
+        let (ds, _d) = dataset("cap2", 1);
+        let ids = ds.train.clone();
+        let rot = SceneRotation::new(ds, ids, 1, false).unwrap();
+        let _ = rot.assign(33);
+    }
+
+    #[test]
+    fn rotate_swaps_scene_into_sim() {
+        let (ds, _d) = dataset("rot", 4);
+        let ids = ds.train.clone();
+        let mut rot = SceneRotation::new(ds, ids, 2, false).unwrap();
+        let mut sim = BatchSim::new(
+            SimConfig {
+                max_steps: 1,
+                ..SimConfig::pointnav()
+            },
+            rot.assign(4),
+            5,
+        );
+        let first_scene = sim.env(0).scene.id.clone();
+        // wait for the prefetch to complete, then rotate
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while rot.rotations == 0 && std::time::Instant::now() < deadline {
+            rot.rotate(&mut sim);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(rot.rotations >= 1, "no rotation happened");
+        // envs on the rotated slot migrate at next reset (max_steps = 1)
+        let pool = WorkerPool::new(0);
+        let mut out = SimOutputs::with_capacity(4);
+        sim.step_batch(&pool, &[ACTION_LEFT; 4], &mut out);
+        let rotated_slot = 0; // first rotation goes to slot 0
+        let env_scene = sim.env(rotated_slot).scene.id.clone();
+        assert_ne!(env_scene, first_scene, "scene not swapped after reset");
+    }
+
+    #[test]
+    fn resident_bytes_tracks_textures() {
+        let (ds, _d) = dataset("mem", 2);
+        let ids = ds.train.clone();
+        let rot = SceneRotation::new(ds.clone(), ids.clone(), 2, true).unwrap();
+        let with_tex = rot.resident_bytes(true);
+        let rot2 = SceneRotation::new(ds, ids, 2, false).unwrap();
+        let depth_only = rot2.resident_bytes(false);
+        assert!(with_tex > depth_only);
+    }
+}

@@ -1,0 +1,307 @@
+//! Rollout storage + GAE (paper §3.4): `N x L` steps of experience per
+//! rollout, generalized advantage estimation in Rust (Table A4:
+//! gamma = 0.99, GAE-lambda = 0.95), and minibatch assembly — splits over
+//! the env dimension so BPTT sees full L-step sequences.
+
+/// Storage layout is step-major (`[L, N, ...]`) because that is the order
+/// experience arrives in; minibatch assembly transposes to `[B, L, ...]`.
+pub struct Rollout {
+    pub n: usize,
+    pub l: usize,
+    pub obs_f: usize,
+    pub hidden: usize,
+    pub obs: Vec<f32>,     // [L, N, obs_f]
+    pub goal: Vec<f32>,    // [L, N, 3]
+    pub actions: Vec<i32>, // [L, N]
+    pub logp: Vec<f32>,    // [L, N]
+    pub values: Vec<f32>,  // [L, N]
+    pub rewards: Vec<f32>, // [L, N]
+    /// `dones[t*n+i]`: the action at step t ended env i's episode.
+    pub dones: Vec<bool>, // [L, N]
+    /// `notdone[t*n+i]`: obs t continues the episode begun earlier
+    /// (0 exactly when obs t is the first observation of a new episode).
+    pub notdone: Vec<f32>, // [L, N]
+    pub h0: Vec<f32>,      // [N, hidden] recurrent state at rollout start
+    pub c0: Vec<f32>,
+    pub bootstrap: Vec<f32>, // [N] V(s_L)
+    pub returns: Vec<f32>,   // [L, N]
+    pub adv: Vec<f32>,       // [L, N]
+}
+
+/// One minibatch in the exact argument layout of the `grad` artifact.
+pub struct MiniBatch {
+    pub b: usize,
+    pub l: usize,
+    pub obs: Vec<f32>,  // [B, L, obs_f]
+    pub goal: Vec<f32>, // [B, L, 3]
+    pub h0: Vec<f32>,   // [B, hidden]
+    pub c0: Vec<f32>,
+    pub actions: Vec<i32>, // [B, L]
+    pub logp: Vec<f32>,
+    pub returns: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub notdone: Vec<f32>,
+}
+
+impl Rollout {
+    pub fn new(n: usize, l: usize, obs_f: usize, hidden: usize) -> Rollout {
+        Rollout {
+            n,
+            l,
+            obs_f,
+            hidden,
+            obs: vec![0.0; l * n * obs_f],
+            goal: vec![0.0; l * n * 3],
+            actions: vec![0; l * n],
+            logp: vec![0.0; l * n],
+            values: vec![0.0; l * n],
+            rewards: vec![0.0; l * n],
+            dones: vec![false; l * n],
+            notdone: vec![1.0; l * n],
+            h0: vec![0.0; n * hidden],
+            c0: vec![0.0; n * hidden],
+            bootstrap: vec![0.0; n],
+            returns: vec![0.0; l * n],
+            adv: vec![0.0; l * n],
+        }
+    }
+
+    pub fn frames(&self) -> u64 {
+        (self.n * self.l) as u64
+    }
+
+    /// Snapshot the recurrent state at the start of the rollout.
+    pub fn begin(&mut self, h: &[f32], c: &[f32], prev_dones: &[bool]) {
+        self.h0.copy_from_slice(h);
+        self.c0.copy_from_slice(c);
+        for i in 0..self.n {
+            self.notdone[i] = if prev_dones[i] { 0.0 } else { 1.0 };
+        }
+    }
+
+    /// Record the policy IO of step `t` (before stepping the simulator).
+    pub fn record_step(
+        &mut self,
+        t: usize,
+        obs: &[f32],
+        goal: &[f32],
+        actions: &[u8],
+        logp: &[f32],
+        values: &[f32],
+    ) {
+        let (n, of) = (self.n, self.obs_f);
+        self.obs[t * n * of..(t + 1) * n * of].copy_from_slice(obs);
+        self.goal[t * n * 3..(t + 1) * n * 3].copy_from_slice(goal);
+        for i in 0..n {
+            self.actions[t * n + i] = actions[i] as i32;
+        }
+        self.logp[t * n..(t + 1) * n].copy_from_slice(logp);
+        self.values[t * n..(t + 1) * n].copy_from_slice(values);
+    }
+
+    /// Record the environment outcome of step `t` (after the sim step).
+    pub fn record_outcome(&mut self, t: usize, rewards: &[f32], dones: &[bool]) {
+        let n = self.n;
+        self.rewards[t * n..(t + 1) * n].copy_from_slice(rewards);
+        self.dones[t * n..(t + 1) * n].copy_from_slice(dones);
+        if t + 1 < self.l {
+            for i in 0..n {
+                self.notdone[(t + 1) * n + i] = if dones[i] { 0.0 } else { 1.0 };
+            }
+        }
+    }
+
+    /// GAE over every env stream; optionally normalizes advantages across
+    /// the whole rollout (habitat-baselines default; the paper disables
+    /// only *per-minibatch* normalization, Table A4).
+    pub fn compute_gae(&mut self, gamma: f32, lam: f32, normalize: bool) {
+        let (n, l) = (self.n, self.l);
+        for i in 0..n {
+            let mut acc = 0.0f32;
+            for t in (0..l).rev() {
+                let idx = t * n + i;
+                let nd = if self.dones[idx] { 0.0 } else { 1.0 };
+                let v_next = if t == l - 1 {
+                    self.bootstrap[i]
+                } else {
+                    self.values[(t + 1) * n + i]
+                };
+                let delta = self.rewards[idx] + gamma * v_next * nd - self.values[idx];
+                acc = delta + gamma * lam * nd * acc;
+                self.adv[idx] = acc;
+                self.returns[idx] = acc + self.values[idx];
+            }
+        }
+        if normalize {
+            let m = self.adv.len() as f32;
+            let mean: f32 = self.adv.iter().sum::<f32>() / m;
+            let var: f32 =
+                self.adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / m;
+            let inv_std = 1.0 / (var.sqrt() + 1e-5);
+            for a in &mut self.adv {
+                *a = (*a - mean) * inv_std;
+            }
+        }
+    }
+
+    /// Assemble the minibatch for env indices `[env_lo, env_hi)` —
+    /// transposes `[L, N]` storage to the `[B, L]` layout of the artifact.
+    pub fn minibatch(&self, env_lo: usize, env_hi: usize) -> MiniBatch {
+        let b = env_hi - env_lo;
+        let (n, l, of, h) = (self.n, self.l, self.obs_f, self.hidden);
+        let mut mb = MiniBatch {
+            b,
+            l,
+            obs: vec![0.0; b * l * of],
+            goal: vec![0.0; b * l * 3],
+            h0: vec![0.0; b * h],
+            c0: vec![0.0; b * h],
+            actions: vec![0; b * l],
+            logp: vec![0.0; b * l],
+            returns: vec![0.0; b * l],
+            adv: vec![0.0; b * l],
+            notdone: vec![0.0; b * l],
+        };
+        for (bi, i) in (env_lo..env_hi).enumerate() {
+            mb.h0[bi * h..(bi + 1) * h].copy_from_slice(&self.h0[i * h..(i + 1) * h]);
+            mb.c0[bi * h..(bi + 1) * h].copy_from_slice(&self.c0[i * h..(i + 1) * h]);
+            for t in 0..l {
+                let src = t * n + i;
+                let dst = bi * l + t;
+                mb.obs[dst * of..(dst + 1) * of]
+                    .copy_from_slice(&self.obs[src * of..(src + 1) * of]);
+                mb.goal[dst * 3..(dst + 1) * 3]
+                    .copy_from_slice(&self.goal[src * 3..(src + 1) * 3]);
+                mb.actions[dst] = self.actions[src];
+                mb.logp[dst] = self.logp[src];
+                mb.returns[dst] = self.returns[src];
+                mb.adv[dst] = self.adv[src];
+                mb.notdone[dst] = self.notdone[src];
+            }
+        }
+        mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, l: usize) -> Rollout {
+        let mut r = Rollout::new(n, l, 2, 4);
+        for t in 0..l {
+            for i in 0..n {
+                r.rewards[t * n + i] = 1.0;
+                r.values[t * n + i] = 0.5;
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn gae_matches_naive_reference() {
+        // naive O(L^2) reference per env
+        let n = 2;
+        let l = 5;
+        let mut r = toy(n, l);
+        r.rewards[2 * n] = -1.0; // vary env 0
+        r.dones[1 * n + 1] = true; // env 1 episode break after t=1
+        r.bootstrap = vec![0.7, -0.3];
+        let (gamma, lam) = (0.99f32, 0.95f32);
+        r.compute_gae(gamma, lam, false);
+        for i in 0..n {
+            for t in 0..l {
+                // naive: sum_k (gamma*lam)^k * delta_{t+k}, stopping at done
+                let mut expect = 0.0f32;
+                let mut factor = 1.0f32;
+                for k in t..l {
+                    let idx = k * n + i;
+                    let nd = if r.dones[idx] { 0.0 } else { 1.0 };
+                    let v_next = if k == l - 1 {
+                        r.bootstrap[i]
+                    } else {
+                        r.values[(k + 1) * n + i]
+                    };
+                    let delta = r.rewards[idx] + gamma * v_next * nd - r.values[idx];
+                    expect += factor * delta;
+                    if nd == 0.0 {
+                        break;
+                    }
+                    factor *= gamma * lam;
+                }
+                let got = r.adv[t * n + i];
+                assert!(
+                    (got - expect).abs() < 1e-4,
+                    "env {i} t {t}: {got} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn done_blocks_credit_flow() {
+        let n = 1;
+        let l = 4;
+        let mut r = toy(n, l);
+        r.rewards[3] = 100.0; // big reward at the last step
+        r.dones[1] = true; // episode ends after t=1
+        r.bootstrap = vec![0.0];
+        r.compute_gae(0.99, 0.95, false);
+        // adv at t=0,1 must not see the t=3 reward
+        assert!(r.adv[0].abs() < 5.0, "leaked credit: {}", r.adv[0]);
+        assert!(r.adv[3] > 50.0);
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut r = toy(3, 8);
+        for (k, x) in r.rewards.iter_mut().enumerate() {
+            *x = (k % 7) as f32 - 3.0;
+        }
+        r.compute_gae(0.99, 0.95, true);
+        let m = r.adv.iter().sum::<f32>() / r.adv.len() as f32;
+        let v = r.adv.iter().map(|a| (a - m) * (a - m)).sum::<f32>() / r.adv.len() as f32;
+        assert!(m.abs() < 1e-4);
+        assert!((v - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn minibatch_transpose_correct() {
+        let n = 4;
+        let l = 3;
+        let mut r = Rollout::new(n, l, 2, 2);
+        // tag every slot with a recognizable value
+        for t in 0..l {
+            for i in 0..n {
+                r.obs[(t * n + i) * 2] = (100 * t + i) as f32;
+                r.actions[t * n + i] = (10 * t + i) as i32;
+                r.adv[t * n + i] = (t + i) as f32;
+            }
+        }
+        for i in 0..n {
+            r.h0[i * 2] = i as f32;
+        }
+        let mb = r.minibatch(1, 3);
+        assert_eq!(mb.b, 2);
+        // env 1, t 2 lands at batch row 0, seq pos 2
+        assert_eq!(mb.obs[(0 * l + 2) * 2], 201.0);
+        assert_eq!(mb.actions[0 * l + 2], 21);
+        assert_eq!(mb.h0[0], 1.0);
+        // env 2 row
+        assert_eq!(mb.obs[(1 * l + 0) * 2], 2.0);
+        assert_eq!(mb.adv[1 * l + 1], 3.0);
+    }
+
+    #[test]
+    fn notdone_tracks_dones_shifted() {
+        let n = 2;
+        let l = 3;
+        let mut r = Rollout::new(n, l, 1, 1);
+        r.begin(&[0.0; 2], &[0.0; 2], &[true, false]);
+        assert_eq!(&r.notdone[0..2], &[0.0, 1.0]);
+        r.record_outcome(0, &[0.0, 0.0], &[false, true]);
+        assert_eq!(&r.notdone[2..4], &[1.0, 0.0]);
+        r.record_outcome(1, &[0.0, 0.0], &[false, false]);
+        assert_eq!(&r.notdone[4..6], &[1.0, 1.0]);
+    }
+}

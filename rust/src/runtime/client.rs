@@ -1,0 +1,88 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute on the hot
+//! path. Python never runs at request time — the Rust binary is fully
+//! self-contained after `make artifacts` (DESIGN.md §2).
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact. Compilation happens once; the
+    /// returned executable is reused for every call on the hot path.
+    pub fn load(&self, path: &Path) -> Result<Exec> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Exec { exe })
+    }
+}
+
+/// One compiled executable.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+// -- literal construction helpers -------------------------------------------
+
+/// f32 literal with shape `dims` from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(
+        data.len() as i64,
+        dims.iter().product::<i64>(),
+        "shape/volume mismatch"
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal with shape `dims`.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// f32 scalar literal (shape `[]`).
+pub fn lit_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 scalar literal.
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Copy a literal out to an f32 vec.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,225 @@
+//! `artifacts/manifest.json` parsing: the contract between `python/compile/
+//! aot.py` and the Rust runtime (DESIGN.md §2). Describes every AOT
+//! variant: model geometry, flat-parameter layout, and artifact filenames.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub encoder: String,
+    pub res: usize,
+    pub in_ch: usize,
+    pub hidden: usize,
+    pub num_actions: usize,
+    pub goal_dim: usize,
+    pub num_params: usize,
+    pub infer_ns: Vec<usize>,
+    pub grad_bls: Vec<(usize, usize)>,
+    pub files: BTreeMap<String, String>,
+    pub layout: Vec<LayoutEntry>,
+}
+
+impl Variant {
+    /// Artifact filename for a kind like `"infer_n64"` / `"update_lamb"`.
+    pub fn file(&self, kind: &str) -> Result<&str> {
+        self.files
+            .get(kind)
+            .map(String::as_str)
+            .ok_or_else(|| {
+                anyhow!(
+                    "variant {:?} has no artifact {kind:?} (have: {:?}); \
+                     re-run `make artifacts` with the right preset",
+                    self.name,
+                    self.files.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Largest exported inference batch `<= n`, used to pick an executable
+    /// when the requested env count has no exact artifact.
+    pub fn best_infer_n(&self, n: usize) -> Option<usize> {
+        self.infer_ns
+            .iter()
+            .copied()
+            .filter(|&k| k <= n)
+            .max()
+            .or_else(|| self.infer_ns.iter().copied().min())
+    }
+
+    pub fn obs_floats(&self, n: usize) -> usize {
+        n * self.res * self.res * self.in_ch
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text)?;
+        let version = root.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("manifest version {version} unsupported (expected 1)");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in root.req("variants")?.as_obj()? {
+            let files = v
+                .req("files")?
+                .as_obj()?
+                .iter()
+                .map(|(k, f)| Ok((k.clone(), f.as_str()?.to_string())))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let layout = v
+                .req("layout")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(LayoutEntry {
+                        name: e.req("name")?.as_str()?.to_string(),
+                        offset: e.req("offset")?.as_usize()?,
+                        shape: e
+                            .req("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let grad_bls = v
+                .req("grad_bls")?
+                .as_arr()?
+                .iter()
+                .map(|bl| {
+                    let bl = bl.as_arr()?;
+                    Ok((bl[0].as_usize()?, bl[1].as_usize()?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            variants.insert(
+                name.clone(),
+                Variant {
+                    name: name.clone(),
+                    encoder: v.req("encoder")?.as_str()?.to_string(),
+                    res: v.req("res")?.as_usize()?,
+                    in_ch: v.req("in_ch")?.as_usize()?,
+                    hidden: v.req("hidden")?.as_usize()?,
+                    num_actions: v.req("num_actions")?.as_usize()?,
+                    goal_dim: v.req("goal_dim")?.as_usize()?,
+                    num_params: v.req("num_params")?.as_usize()?,
+                    infer_ns: v
+                        .req("infer_ns")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    grad_bls,
+                    files,
+                    layout,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant {name:?} not in manifest (have: {:?}); \
+                 run: cd python && python -m compile.aot --out-dir ../artifacts --presets {name}",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, variant: &Variant, kind: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(variant.file(kind)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifest checks against the real exported artifacts when present
+    /// (integration tests cover execution; this validates parsing).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn parse_real_manifest_if_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts dir (run `make artifacts`)");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("test").unwrap();
+        assert_eq!(v.res, 32);
+        assert_eq!(v.in_ch, 1);
+        assert_eq!(v.num_actions, 4);
+        assert!(v.num_params > 10_000);
+        // layout is contiguous and sums to num_params
+        let mut off = 0;
+        for e in &v.layout {
+            assert_eq!(e.offset, off, "{}", e.name);
+            off += e.size();
+        }
+        assert_eq!(off, v.num_params);
+        assert!(m.artifact_path(v, "init").unwrap().exists());
+        assert!(v.file("nonexistent").is_err());
+    }
+
+    #[test]
+    fn best_infer_n_picks_fit() {
+        let v = Variant {
+            name: "x".into(),
+            encoder: "se9".into(),
+            res: 64,
+            in_ch: 1,
+            hidden: 256,
+            num_actions: 4,
+            goal_dim: 3,
+            num_params: 1,
+            infer_ns: vec![4, 64, 256],
+            grad_bls: vec![],
+            files: BTreeMap::new(),
+            layout: vec![],
+        };
+        assert_eq!(v.best_infer_n(300), Some(256));
+        assert_eq!(v.best_infer_n(64), Some(64));
+        assert_eq!(v.best_infer_n(65), Some(64));
+        assert_eq!(v.best_infer_n(2), Some(4)); // smallest available
+    }
+}

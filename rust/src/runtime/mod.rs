@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest loading, HLO-text compilation, execution, and the
+//! flat parameter store. The only module that touches the `xla` crate.
+
+pub mod client;
+pub mod manifest;
+pub mod params;
+
+pub use client::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_f32, Exec, Runtime};
+pub use manifest::{Manifest, Variant};
+pub use params::ParamStore;

@@ -1,0 +1,126 @@
+//! Flat parameter + optimizer-state store with binary checkpointing.
+//!
+//! Everything the learner owns lives in four flat buffers (params, m, v,
+//! step) — the contract that lets the Rust side checkpoint, average
+//! gradients across DD-PPO shards, and call the update artifact without
+//! knowing anything about the network (DESIGN.md §2).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{lit_scalar_i32, to_f32, Exec};
+
+/// Parameter vector + Adam/Lamb moments + step counter.
+pub struct ParamStore {
+    pub flat: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl ParamStore {
+    /// Initialize by running the `init` artifact (Fixup init in JAX).
+    pub fn init(init_exec: &Exec, num_params: usize, seed: i32) -> Result<ParamStore> {
+        let out = init_exec.run(&[lit_scalar_i32(seed)])?;
+        let flat = to_f32(&out[0])?;
+        if flat.len() != num_params {
+            bail!(
+                "init artifact returned {} params, manifest says {num_params}",
+                flat.len()
+            );
+        }
+        Ok(ParamStore {
+            flat,
+            m: vec![0.0; num_params],
+            v: vec![0.0; num_params],
+            step: 0.0,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// Save a checkpoint (params + optimizer state).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        w.write_all(b"BPSCKPT1")?;
+        w.write_all(&(self.flat.len() as u64).to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for buf in [&self.flat, &self.m, &self.v] {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != b"BPSCKPT1" {
+            bail!("{path:?}: not a BPS checkpoint");
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let step = f32::from_le_bytes(b4);
+        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+            let mut v = vec![0.0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, n * 4)
+            };
+            r.read_exact(bytes)?;
+            Ok(v)
+        };
+        Ok(ParamStore {
+            flat: read_vec(n)?,
+            m: read_vec(n)?,
+            v: read_vec(n)?,
+            step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let ps = ParamStore {
+            flat: (0..100).map(|i| i as f32 * 0.5).collect(),
+            m: vec![0.25; 100],
+            v: vec![0.125; 100],
+            step: 42.0,
+        };
+        let dir = std::env::temp_dir().join("bps_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        ps.save(&path).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.flat, ps.flat);
+        assert_eq!(back.m, ps.m);
+        assert_eq!(back.v, ps.v);
+        assert_eq!(back.step, 42.0);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("bps_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Scene asset container + versioned binary serialization (`.bsc`).
+//!
+//! Assets are generated once (`bps gen-dataset`) and streamed from disk by
+//! the renderer's background loader during training (paper §3.2). Loading
+//! supports `with_textures = false` so Depth agents skip the texture
+//! payload — the exact memory asymmetry the paper exploits (§4.1/§4.2).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::geom::vec::{v2, v3};
+use crate::geom::Aabb;
+use crate::navmesh::GridNav;
+
+use super::mesh::{Chunk, Material, Mesh, Texture};
+
+/// A fully loaded scene: geometry, materials, textures, navmesh.
+#[derive(Clone, Debug)]
+pub struct SceneAsset {
+    pub id: String,
+    pub mesh: Mesh,
+    pub materials: Vec<Material>,
+    pub textures: Vec<Texture>,
+    pub navmesh: GridNav,
+}
+
+impl SceneAsset {
+    pub fn geometry_bytes(&self) -> usize {
+        self.mesh.geometry_bytes() + self.materials.len() * 16
+    }
+
+    pub fn texture_bytes(&self) -> usize {
+        self.textures.iter().map(Texture::bytes).sum()
+    }
+
+    /// Total in-memory footprint for GPU-memory budgeting (DESIGN.md §1).
+    pub fn footprint_bytes(&self, with_textures: bool) -> usize {
+        self.geometry_bytes() + if with_textures { self.texture_bytes() } else { 0 }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = Vec::with_capacity(1 << 20);
+        w.extend_from_slice(MAGIC);
+        put_str(&mut w, &self.id);
+        // mesh
+        put_u32(&mut w, self.mesh.positions.len() as u32);
+        for p in &self.mesh.positions {
+            put_f32(&mut w, p.x);
+            put_f32(&mut w, p.y);
+            put_f32(&mut w, p.z);
+        }
+        for uv in &self.mesh.uvs {
+            put_f32(&mut w, uv.x);
+            put_f32(&mut w, uv.y);
+        }
+        put_u32(&mut w, self.mesh.indices.len() as u32);
+        for &i in &self.mesh.indices {
+            put_u32(&mut w, i);
+        }
+        for &m in &self.mesh.tri_material {
+            put_u32(&mut w, m);
+        }
+        put_u32(&mut w, self.mesh.chunks.len() as u32);
+        for c in &self.mesh.chunks {
+            for v in [c.aabb.min, c.aabb.max] {
+                put_f32(&mut w, v.x);
+                put_f32(&mut w, v.y);
+                put_f32(&mut w, v.z);
+            }
+            put_u32(&mut w, c.tri_start);
+            put_u32(&mut w, c.tri_count);
+        }
+        // materials
+        put_u32(&mut w, self.materials.len() as u32);
+        for m in &self.materials {
+            for c in m.albedo {
+                put_f32(&mut w, c);
+            }
+            put_u32(&mut w, m.tex);
+        }
+        // navmesh
+        put_f32(&mut w, self.navmesh.origin.x);
+        put_f32(&mut w, self.navmesh.origin.y);
+        put_f32(&mut w, self.navmesh.cell);
+        put_u32(&mut w, self.navmesh.w as u32);
+        put_u32(&mut w, self.navmesh.h as u32);
+        let bits = pack_bits(&self.navmesh.walkable);
+        put_u32(&mut w, bits.len() as u32);
+        w.extend_from_slice(&bits);
+        // textures (trailing section so depth-only loads can stop early)
+        put_u32(&mut w, self.textures.len() as u32);
+        for t in &self.textures {
+            put_u32(&mut w, t.w as u32);
+            put_u32(&mut w, t.h as u32);
+            w.extend_from_slice(&t.rgb);
+        }
+        std::fs::File::create(path)
+            .with_context(|| format!("create {path:?}"))?
+            .write_all(&w)?;
+        Ok(())
+    }
+
+    /// Load an asset; `with_textures = false` skips the texture payload
+    /// (Depth agents — paper §4.1 "minor modification to not load textures").
+    pub fn load(path: &Path, with_textures: bool) -> Result<SceneAsset> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        let mut r = Reader { b: &bytes, pos: 0 };
+        let magic = r.take(MAGIC.len())?;
+        if magic != MAGIC {
+            bail!("{path:?}: bad magic (not a .bsc scene asset)");
+        }
+        let id = r.str()?;
+        let nv = r.u32()? as usize;
+        let mut mesh = Mesh::default();
+        mesh.positions.reserve(nv);
+        for _ in 0..nv {
+            mesh.positions.push(v3(r.f32()?, r.f32()?, r.f32()?));
+        }
+        mesh.uvs.reserve(nv);
+        for _ in 0..nv {
+            mesh.uvs.push(v2(r.f32()?, r.f32()?));
+        }
+        let ni = r.u32()? as usize;
+        mesh.indices.reserve(ni);
+        for _ in 0..ni {
+            mesh.indices.push(r.u32()?);
+        }
+        let ntri = ni / 3;
+        mesh.tri_material.reserve(ntri);
+        for _ in 0..ntri {
+            mesh.tri_material.push(r.u32()?);
+        }
+        let nc = r.u32()? as usize;
+        mesh.chunks.reserve(nc);
+        for _ in 0..nc {
+            let min = v3(r.f32()?, r.f32()?, r.f32()?);
+            let max = v3(r.f32()?, r.f32()?, r.f32()?);
+            mesh.chunks.push(Chunk {
+                aabb: Aabb { min, max },
+                tri_start: r.u32()?,
+                tri_count: r.u32()?,
+            });
+        }
+        let nm = r.u32()? as usize;
+        let mut materials = Vec::with_capacity(nm);
+        for _ in 0..nm {
+            materials.push(Material {
+                albedo: [r.f32()?, r.f32()?, r.f32()?],
+                tex: r.u32()?,
+            });
+        }
+        let origin = v2(r.f32()?, r.f32()?);
+        let cell = r.f32()?;
+        let w = r.u32()? as usize;
+        let h = r.u32()? as usize;
+        let nbits = r.u32()? as usize;
+        let bits = r.take(nbits)?;
+        let mut navmesh = GridNav::new(origin, cell, w, h);
+        navmesh.walkable = unpack_bits(bits, w * h);
+        let mut textures = Vec::new();
+        if with_textures {
+            let nt = r.u32()? as usize;
+            for _ in 0..nt {
+                let tw = r.u32()? as usize;
+                let th = r.u32()? as usize;
+                let rgb = r.take(tw * th * 3)?.to_vec();
+                textures.push(Texture { w: tw, h: th, rgb });
+            }
+        }
+        Ok(SceneAsset {
+            id,
+            mesh,
+            materials,
+            textures,
+            navmesh,
+        })
+    }
+}
+
+const MAGIC: &[u8] = b"BSC1";
+
+fn put_u32(w: &mut Vec<u8>, x: u32) {
+    w.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32(w: &mut Vec<u8>, x: f32) {
+    w.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(w: &mut Vec<u8>, s: &str) {
+    put_u32(w, s.len() as u32);
+    w.extend_from_slice(s.as_bytes());
+}
+
+fn pack_bits(bools: &[bool]) -> Vec<u8> {
+    let mut out = vec![0u8; (bools.len() + 7) / 8];
+    for (i, &b) in bools.iter().enumerate() {
+        if b {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+fn unpack_bits(bytes: &[u8], n: usize) -> Vec<bool> {
+    (0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect()
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated asset file at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::procgen::{generate, Complexity};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let scene = generate("rt", 13, Complexity::test());
+        let dir = std::env::temp_dir().join("bps_asset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bsc");
+        scene.save(&path).unwrap();
+        let back = SceneAsset::load(&path, true).unwrap();
+        assert_eq!(back.id, "rt");
+        assert_eq!(back.mesh.positions.len(), scene.mesh.positions.len());
+        assert_eq!(back.mesh.indices, scene.mesh.indices);
+        assert_eq!(back.mesh.tri_material, scene.mesh.tri_material);
+        assert_eq!(back.materials.len(), scene.materials.len());
+        assert_eq!(back.textures.len(), scene.textures.len());
+        assert_eq!(back.textures[0].rgb, scene.textures[0].rgb);
+        assert_eq!(back.navmesh.walkable, scene.navmesh.walkable);
+        assert_eq!(back.mesh.chunks.len(), scene.mesh.chunks.len());
+    }
+
+    #[test]
+    fn depth_load_skips_textures() {
+        let scene = generate("dt", 14, Complexity::test());
+        let dir = std::env::temp_dir().join("bps_asset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dt.bsc");
+        scene.save(&path).unwrap();
+        let depth = SceneAsset::load(&path, false).unwrap();
+        assert!(depth.textures.is_empty());
+        assert!(depth.footprint_bytes(false) < scene.footprint_bytes(true));
+        // geometry intact
+        assert_eq!(depth.mesh.num_tris(), scene.mesh.num_tris());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("bps_asset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bsc");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(SceneAsset::load(&path, true).is_err());
+    }
+
+    #[test]
+    fn bit_packing_roundtrip() {
+        let bools: Vec<bool> = (0..37).map(|i| i % 3 == 0).collect();
+        let packed = pack_bits(&bools);
+        assert_eq!(unpack_bits(&packed, 37), bools);
+    }
+}

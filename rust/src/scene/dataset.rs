@@ -1,0 +1,158 @@
+//! On-disk scene datasets with train/val/test splits (replaces the
+//! Gibson-2plus / Matterport3D / AI2-THOR datasets; DESIGN.md §1).
+//!
+//! `generate_dataset` writes `.bsc` assets plus a `splits.json`; `Dataset`
+//! indexes them so the renderer's asset streamer can load scenes by name
+//! during training, and evaluation can iterate the val/test splits.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::asset::SceneAsset;
+use super::procgen::{generate, Complexity};
+
+/// Index over a generated dataset directory.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dir: PathBuf,
+    pub train: Vec<String>,
+    pub val: Vec<String>,
+    pub test: Vec<String>,
+}
+
+/// Generate `n_train`/`n_val`/`n_test` scenes into `dir`.
+pub fn generate_dataset(
+    dir: &Path,
+    n_train: usize,
+    n_val: usize,
+    n_test: usize,
+    cx: Complexity,
+    seed: u64,
+) -> Result<Dataset> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    let mut splits = [Vec::new(), Vec::new(), Vec::new()];
+    let names = ["train", "val", "test"];
+    let counts = [n_train, n_val, n_test];
+    let mut scene_index = 0u64;
+    for (s, &count) in counts.iter().enumerate() {
+        for k in 0..count {
+            let id = format!("{}_{k:03}", names[s]);
+            // disjoint seeds per scene — val/test scenes are unseen layouts
+            let scene = generate(&id, seed.wrapping_add(1000 + scene_index), cx);
+            scene.save(&dir.join(format!("{id}.bsc")))?;
+            splits[s].push(id);
+            scene_index += 1;
+        }
+    }
+    let ds = Dataset {
+        dir: dir.to_path_buf(),
+        train: splits[0].clone(),
+        val: splits[1].clone(),
+        test: splits[2].clone(),
+    };
+    ds.save_splits()?;
+    Ok(ds)
+}
+
+impl Dataset {
+    pub fn open(dir: &Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(dir.join("splits.json"))
+            .with_context(|| format!("read {dir:?}/splits.json"))?;
+        let v = Json::parse(&text)?;
+        let read = |key: &str| -> Result<Vec<String>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect()
+        };
+        Ok(Dataset {
+            dir: dir.to_path_buf(),
+            train: read("train")?,
+            val: read("val")?,
+            test: read("test")?,
+        })
+    }
+
+    fn save_splits(&self) -> Result<()> {
+        let arr = |v: &[String]| Json::Arr(v.iter().map(|s| json::s(s)).collect());
+        let doc = json::obj(vec![
+            ("train", arr(&self.train)),
+            ("val", arr(&self.val)),
+            ("test", arr(&self.test)),
+        ]);
+        std::fs::write(self.dir.join("splits.json"), doc.to_string())?;
+        Ok(())
+    }
+
+    pub fn scene_path(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.bsc"))
+    }
+
+    pub fn load_scene(&self, id: &str, with_textures: bool) -> Result<SceneAsset> {
+        SceneAsset::load(&self.scene_path(id), with_textures)
+    }
+
+    pub fn split(&self, name: &str) -> Result<&[String]> {
+        match name {
+            "train" => Ok(&self.train),
+            "val" => Ok(&self.val),
+            "test" => Ok(&self.test),
+            _ => bail!("unknown split {name:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("bps_ds_test").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn generate_open_load() {
+        let dir = tmpdir("basic");
+        let ds = generate_dataset(&dir, 3, 1, 1, Complexity::test(), 5).unwrap();
+        assert_eq!(ds.train.len(), 3);
+        let re = Dataset::open(&dir).unwrap();
+        assert_eq!(re.train, ds.train);
+        assert_eq!(re.val, vec!["val_000".to_string()]);
+        let scene = re.load_scene("train_001", false).unwrap();
+        assert_eq!(scene.id, "train_001");
+        assert!(scene.textures.is_empty());
+        let scene_tex = re.load_scene("train_001", true).unwrap();
+        assert!(!scene_tex.textures.is_empty());
+    }
+
+    #[test]
+    fn scenes_differ_across_split() {
+        let dir = tmpdir("differ");
+        let ds = generate_dataset(&dir, 2, 1, 0, Complexity::test(), 9).unwrap();
+        let a = ds.load_scene("train_000", false).unwrap();
+        let b = ds.load_scene("train_001", false).unwrap();
+        let v = ds.load_scene("val_000", false).unwrap();
+        assert_ne!(a.mesh.num_tris(), 0);
+        // layouts differ (seeds disjoint)
+        assert!(
+            a.navmesh.walkable != b.navmesh.walkable
+                || a.mesh.positions.len() != b.mesh.positions.len()
+        );
+        assert!(v.navmesh.walkable != a.navmesh.walkable);
+    }
+
+    #[test]
+    fn unknown_split_rejected() {
+        let dir = tmpdir("split");
+        let ds = generate_dataset(&dir, 1, 0, 0, Complexity::test(), 1).unwrap();
+        assert!(ds.split("train").is_ok());
+        assert!(ds.split("dev").is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Triangle meshes, materials, and procedural textures.
+//!
+//! Meshes are split into *chunks* (contiguous triangle ranges with an AABB)
+//! at build time — the culling granule of the batch renderer (paper §3.2).
+//! Textures are only materialized for RGB agents; Depth agents skip the
+//! texture payload entirely, reproducing the paper's memory asymmetry
+//! between Depth and RGB training (§4.2).
+
+use crate::geom::{Aabb, Vec2, Vec3};
+use crate::geom::vec::{v2, v3};
+
+/// Point-sampled RGB texture (procedurally generated; see `procgen`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Texture {
+    pub w: usize,
+    pub h: usize,
+    pub rgb: Vec<u8>, // w * h * 3
+}
+
+impl Texture {
+    /// Point sample with wrap addressing; returns linear [0,1] rgb.
+    #[inline]
+    pub fn sample(&self, u: f32, v: f32) -> [f32; 3] {
+        let x = ((u.rem_euclid(1.0)) * self.w as f32) as usize % self.w;
+        let y = ((v.rem_euclid(1.0)) * self.h as f32) as usize % self.h;
+        let i = (y * self.w + x) * 3;
+        [
+            self.rgb[i] as f32 / 255.0,
+            self.rgb[i + 1] as f32 / 255.0,
+            self.rgb[i + 2] as f32 / 255.0,
+        ]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.rgb.len()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Material {
+    pub albedo: [f32; 3],
+    /// Texture index, or u32::MAX for untextured.
+    pub tex: u32,
+}
+
+pub const NO_TEX: u32 = u32::MAX;
+
+/// Contiguous triangle range with a bounding box (culling granule).
+#[derive(Clone, Copy, Debug)]
+pub struct Chunk {
+    pub aabb: Aabb,
+    pub tri_start: u32,
+    pub tri_count: u32,
+}
+
+/// Indexed triangle mesh with per-triangle materials.
+#[derive(Clone, Debug, Default)]
+pub struct Mesh {
+    pub positions: Vec<Vec3>,
+    pub uvs: Vec<Vec2>,
+    pub indices: Vec<u32>,      // 3 per triangle
+    pub tri_material: Vec<u32>, // 1 per triangle
+    pub chunks: Vec<Chunk>,
+}
+
+impl Mesh {
+    pub fn num_tris(&self) -> usize {
+        self.indices.len() / 3
+    }
+
+    pub fn geometry_bytes(&self) -> usize {
+        self.positions.len() * 12
+            + self.uvs.len() * 8
+            + self.indices.len() * 4
+            + self.tri_material.len() * 4
+            + self.chunks.len() * 32
+    }
+
+    pub fn aabb(&self) -> Aabb {
+        Aabb::from_points(self.positions.iter().copied())
+    }
+
+    /// Close the current open triangle range into a chunk.
+    fn close_chunk(&mut self, tri_start: usize) {
+        let tri_count = self.num_tris() - tri_start;
+        if tri_count == 0 {
+            return;
+        }
+        let mut aabb = Aabb::EMPTY;
+        for t in tri_start..tri_start + tri_count {
+            for k in 0..3 {
+                aabb.grow(self.positions[self.indices[t * 3 + k] as usize]);
+            }
+        }
+        self.chunks.push(Chunk {
+            aabb,
+            tri_start: tri_start as u32,
+            tri_count: tri_count as u32,
+        });
+    }
+
+    fn push_vert(&mut self, p: Vec3, uv: Vec2) -> u32 {
+        self.positions.push(p);
+        self.uvs.push(uv);
+        (self.positions.len() - 1) as u32
+    }
+
+    fn push_tri(&mut self, a: u32, b: u32, c: u32, mat: u32) {
+        self.indices.extend_from_slice(&[a, b, c]);
+        self.tri_material.push(mat);
+    }
+
+    /// Add a subdivided quad (two triangles per cell). `subdiv >= 1` splits
+    /// the quad into `subdiv^2` cells — the triangle-count knob that lets
+    /// procgen hit Gibson-like geometric complexity (paper: up to 600K tris).
+    pub fn add_quad(
+        &mut self,
+        origin: Vec3,
+        edge_u: Vec3,
+        edge_v: Vec3,
+        mat: u32,
+        subdiv: usize,
+        uv_scale: f32,
+    ) {
+        let start = self.num_tris();
+        let s = subdiv.max(1);
+        let inv = 1.0 / s as f32;
+        // vertex grid
+        let mut grid = Vec::with_capacity((s + 1) * (s + 1));
+        for j in 0..=s {
+            for i in 0..=s {
+                let fu = i as f32 * inv;
+                let fv = j as f32 * inv;
+                let p = origin + edge_u * fu + edge_v * fv;
+                grid.push(self.push_vert(p, v2(fu * uv_scale, fv * uv_scale)));
+            }
+        }
+        for j in 0..s {
+            for i in 0..s {
+                let a = grid[j * (s + 1) + i];
+                let b = grid[j * (s + 1) + i + 1];
+                let c = grid[(j + 1) * (s + 1) + i + 1];
+                let d = grid[(j + 1) * (s + 1) + i];
+                self.push_tri(a, b, c, mat);
+                self.push_tri(a, c, d, mat);
+            }
+        }
+        self.close_chunk(start);
+    }
+
+    /// Axis-aligned box from `min` to `max`, each face subdivided.
+    pub fn add_box(&mut self, min: Vec3, max: Vec3, mat: u32, subdiv: usize) {
+        let d = max - min;
+        let uvs = 1.0f32;
+        // -y (bottom), +y (top)
+        self.add_quad(min, v3(d.x, 0.0, 0.0), v3(0.0, 0.0, d.z), mat, subdiv, uvs);
+        self.add_quad(
+            v3(min.x, max.y, min.z),
+            v3(0.0, 0.0, d.z),
+            v3(d.x, 0.0, 0.0),
+            mat,
+            subdiv,
+            uvs,
+        );
+        // -z, +z
+        self.add_quad(min, v3(0.0, d.y, 0.0), v3(d.x, 0.0, 0.0), mat, subdiv, uvs);
+        self.add_quad(
+            v3(min.x, min.y, max.z),
+            v3(d.x, 0.0, 0.0),
+            v3(0.0, d.y, 0.0),
+            mat,
+            subdiv,
+            uvs,
+        );
+        // -x, +x
+        self.add_quad(min, v3(0.0, 0.0, d.z), v3(0.0, d.y, 0.0), mat, subdiv, uvs);
+        self.add_quad(
+            v3(max.x, min.y, min.z),
+            v3(0.0, d.y, 0.0),
+            v3(0.0, 0.0, d.z),
+            mat,
+            subdiv,
+            uvs,
+        );
+    }
+
+    /// Vertical cylinder (clutter objects): `segments` sides + fan caps.
+    pub fn add_cylinder(
+        &mut self,
+        center: Vec3,
+        radius: f32,
+        height: f32,
+        segments: usize,
+        mat: u32,
+    ) {
+        let start = self.num_tris();
+        let seg = segments.max(3);
+        let mut bottom = Vec::with_capacity(seg);
+        let mut top = Vec::with_capacity(seg);
+        for k in 0..seg {
+            let a = k as f32 / seg as f32 * std::f32::consts::TAU;
+            let (s, c) = a.sin_cos();
+            let p = v3(center.x + radius * c, center.y, center.z + radius * s);
+            bottom.push(self.push_vert(p, v2(k as f32 / seg as f32, 0.0)));
+            top.push(self.push_vert(
+                v3(p.x, center.y + height, p.z),
+                v2(k as f32 / seg as f32, 1.0),
+            ));
+        }
+        for k in 0..seg {
+            let k2 = (k + 1) % seg;
+            self.push_tri(bottom[k], bottom[k2], top[k2], mat);
+            self.push_tri(bottom[k], top[k2], top[k], mat);
+        }
+        // caps (fan around the first rim vertex)
+        for k in 1..seg - 1 {
+            self.push_tri(top[0], top[k], top[k + 1], mat);
+            self.push_tri(bottom[0], bottom[k + 1], bottom[k], mat);
+        }
+        self.close_chunk(start);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quad_subdivision_counts() {
+        let mut m = Mesh::default();
+        m.add_quad(Vec3::ZERO, v3(1.0, 0.0, 0.0), v3(0.0, 0.0, 1.0), 0, 4, 1.0);
+        assert_eq!(m.num_tris(), 32); // 4*4 cells * 2
+        assert_eq!(m.positions.len(), 25);
+        assert_eq!(m.chunks.len(), 1);
+        assert_eq!(m.tri_material.len(), m.num_tris());
+    }
+
+    #[test]
+    fn box_chunk_aabbs_cover_box() {
+        let mut m = Mesh::default();
+        m.add_box(v3(1.0, 0.0, 2.0), v3(2.0, 1.0, 3.0), 0, 2);
+        assert_eq!(m.chunks.len(), 6);
+        let total = m.aabb();
+        assert_eq!(total.min, v3(1.0, 0.0, 2.0));
+        assert_eq!(total.max, v3(2.0, 1.0, 3.0));
+        assert_eq!(m.num_tris(), 6 * 8);
+    }
+
+    #[test]
+    fn cylinder_closed_tri_count() {
+        let mut m = Mesh::default();
+        m.add_cylinder(Vec3::ZERO, 0.5, 1.0, 8, 1);
+        // 8 sides * 2 + 2 caps * 6
+        assert_eq!(m.num_tris(), 16 + 12);
+        assert!(m.chunks.len() == 1);
+        let b = m.aabb();
+        assert!((b.max.y - 1.0).abs() < 1e-6);
+        assert!((b.max.x - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chunks_partition_triangles() {
+        let mut m = Mesh::default();
+        m.add_box(Vec3::ZERO, v3(1.0, 1.0, 1.0), 0, 1);
+        m.add_cylinder(v3(3.0, 0.0, 0.0), 0.3, 1.0, 6, 1);
+        let mut covered = vec![false; m.num_tris()];
+        for c in &m.chunks {
+            for t in c.tri_start..c.tri_start + c.tri_count {
+                assert!(!covered[t as usize], "overlap at {t}");
+                covered[t as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn texture_sample_wraps() {
+        let t = Texture {
+            w: 2,
+            h: 2,
+            rgb: vec![255, 0, 0, 0, 255, 0, 0, 0, 255, 255, 255, 255],
+        };
+        assert_eq!(t.sample(0.0, 0.0), [1.0, 0.0, 0.0]);
+        assert_eq!(t.sample(1.0, 1.0), t.sample(0.0, 0.0)); // wrap
+        assert_eq!(t.sample(-0.25, 0.0), t.sample(0.75, 0.0));
+    }
+
+    #[test]
+    fn geometry_bytes_positive() {
+        let mut m = Mesh::default();
+        m.add_box(Vec3::ZERO, v3(1.0, 1.0, 1.0), 0, 1);
+        assert!(m.geometry_bytes() > 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Scene substrate: meshes/materials/textures, the procedural indoor scene
+//! generator standing in for Gibson/Matterport3D/AI2-THOR scans, binary
+//! asset serialization, and on-disk datasets with train/val/test splits.
+
+pub mod asset;
+pub mod dataset;
+pub mod mesh;
+pub mod procgen;
+
+pub use asset::SceneAsset;
+pub use dataset::{generate_dataset, Dataset};
+pub use mesh::{Chunk, Material, Mesh, Texture};
+pub use procgen::Complexity;

@@ -1,0 +1,122 @@
+//! Episode specification and sampling for the three tasks the paper's
+//! system supports: PointGoalNav (§4.1) plus Flee and Explore (Appendix A.1).
+
+use crate::geom::vec::Vec2;
+use crate::navmesh::GridNav;
+use crate::util::rng::Rng;
+
+/// Which task the agents are being trained for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Navigate to a point given relative to the start (GPS+compass).
+    PointNav,
+    /// Find the farthest valid location from the start point.
+    Flee,
+    /// Visit as much of the navigable area as possible.
+    Explore,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        match s {
+            "pointnav" => Some(Task::PointNav),
+            "flee" => Some(Task::Flee),
+            "explore" => Some(Task::Explore),
+            _ => None,
+        }
+    }
+}
+
+/// One episode: start pose, goal, and the shortest-path length (for reward
+/// shaping and SPL).
+#[derive(Clone, Debug)]
+pub struct Episode {
+    pub start: Vec2,
+    pub start_heading: f32,
+    pub goal: Vec2,
+    pub geodesic_dist: f32,
+}
+
+/// Episode difficulty filter, Habitat-style: geodesic distance within
+/// bounds, and (when possible) a non-trivial geodesic/euclidean ratio so
+/// straight-line policies do not solve everything.
+pub fn sample_episode(nav: &GridNav, rng: &mut Rng, task: Task) -> Option<Episode> {
+    let min_d = 1.0f32;
+    for attempt in 0..64 {
+        let start = nav.random_point(rng)?;
+        let heading = rng.range_f32(0.0, std::f32::consts::TAU);
+        match task {
+            Task::PointNav => {
+                let goal = nav.random_point(rng)?;
+                let euclid = (goal - start).length();
+                if euclid < min_d {
+                    continue;
+                }
+                let Some(geo) = nav.geodesic(start, goal) else {
+                    continue;
+                };
+                if !geo.is_finite() || geo < min_d {
+                    continue;
+                }
+                // prefer non-straight-line episodes early in the attempts
+                if attempt < 32 && geo / euclid.max(1e-6) < 1.05 {
+                    continue;
+                }
+                return Some(Episode {
+                    start,
+                    start_heading: heading,
+                    goal,
+                    geodesic_dist: geo,
+                });
+            }
+            Task::Flee | Task::Explore => {
+                // goal is unused; keep start as the reference point
+                return Some(Episode {
+                    start,
+                    start_heading: heading,
+                    goal: start,
+                    geodesic_dist: 0.0,
+                });
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::procgen::{generate, Complexity};
+
+    #[test]
+    fn pointnav_episode_valid() {
+        let scene = generate("e", 21, Complexity::test());
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let ep = sample_episode(&scene.navmesh, &mut rng, Task::PointNav).unwrap();
+            assert!(scene.navmesh.is_walkable(ep.start));
+            assert!(scene.navmesh.is_walkable(ep.goal));
+            assert!(ep.geodesic_dist >= 1.0);
+            assert!(ep.geodesic_dist.is_finite());
+            // geodesic >= euclidean (up to grid snap)
+            let euclid = (ep.goal - ep.start).length();
+            assert!(ep.geodesic_dist >= euclid - 0.4);
+        }
+    }
+
+    #[test]
+    fn flee_episode_goal_is_start() {
+        let scene = generate("f", 22, Complexity::test());
+        let mut rng = Rng::new(0);
+        let ep = sample_episode(&scene.navmesh, &mut rng, Task::Flee).unwrap();
+        assert_eq!(ep.goal, ep.start);
+    }
+
+    #[test]
+    fn task_parse() {
+        assert_eq!(Task::parse("pointnav"), Some(Task::PointNav));
+        assert_eq!(Task::parse("flee"), Some(Task::Flee));
+        assert_eq!(Task::parse("explore"), Some(Task::Explore));
+        assert_eq!(Task::parse("x"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Batch environment simulator (paper §3.1): episodes and tasks
+//! (PointGoalNav, Flee, Explore), rewards/SPL/success accounting, the
+//! GPS+compass sensor, and the dynamically scheduled batch stepper.
+
+pub mod batch;
+pub mod episode;
+
+pub use batch::{
+    BatchSim, SimConfig, SimOutputs, ACTION_FORWARD, ACTION_LEFT, ACTION_RIGHT,
+    ACTION_STOP, NUM_ACTIONS,
+};
+pub use episode::{sample_episode, Episode, Task};

@@ -1,0 +1,152 @@
+//! Tiny argv parser for the CLI (no `clap` in the offline vendor set).
+//!
+//! Grammar: `bps <subcommand> [--key value | --key=value | --flag] ...`.
+//! Typed getters consume recognized options; `finish()` errors on leftovers
+//! so typos are caught instead of silently ignored.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.opts.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    /// Consume a string option.
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.opts.remove(name)
+    }
+
+    pub fn opt_or(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&mut self, name: &str) -> Result<String> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: invalid integer {v:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: invalid integer {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: invalid float {v:?}: {e}")),
+        }
+    }
+
+    /// Consume a boolean flag (`--verbose`).
+    pub fn flag(&mut self, name: &str) -> bool {
+        if let Some(pos) = self.flags.iter().position(|f| f == name) {
+            self.flags.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Error if any option/flag was not consumed (catches typos).
+    pub fn finish(self) -> Result<()> {
+        if let Some(k) = self.opts.keys().next() {
+            bail!("unknown option --{k}");
+        }
+        if let Some(f) = self.flags.first() {
+            bail!("unknown flag --{f}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let mut a = Args::parse(&argv("train --preset depth64 --iters=10 --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("preset").as_deref(), Some("depth64"));
+        assert_eq!(a.usize_or("iters", 0).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn leftover_option_is_error() {
+        let a = Args::parse(&argv("train --oops 1")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required() {
+        let mut a = Args::parse(&argv("eval")).unwrap();
+        assert!(a.req("checkpoint").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(&argv("bench")).unwrap();
+        assert_eq!(a.usize_or("envs", 64).unwrap(), 64);
+        assert!((a.f64_or("lr", 2.5e-4).unwrap() - 2.5e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(&argv("a b")).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Shared infrastructure: PRNG, JSON/TOML parsing, argv parsing, the
+//! dynamic-scheduling worker pool (paper §3.1), timers, and the
+//! property-test driver. Everything is dependency-free (offline build).
+
+pub mod args;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+pub mod toml;
+
+pub use json::Json;
+pub use pool::WorkerPool;
+pub use rng::Rng;
+pub use timer::{FpsMeter, Profiler};

@@ -1,0 +1,249 @@
+//! Persistent worker pool with dynamic scheduling (paper §3.1).
+//!
+//! The batch simulator operates on "significantly more environments than
+//! available CPU cores and dynamically schedules work onto cores using a
+//! pool of worker threads". This module is that pool: N persistent threads,
+//! a broadcast "current task" slot, and an atomic grab-next-chunk index so
+//! fast environments do not wait for slow ones (the workload-imbalance
+//! problem that motivates the design).
+//!
+//! `parallel_for` borrows its closure (no `'static` bound) — the pool
+//! guarantees every worker has finished with the closure before returning,
+//! which is what makes the internal pointer-erasure sound.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct Task {
+    /// Type-erased `&dyn Fn(usize)` valid for the duration of the task.
+    func: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    end: usize,
+    grain: usize,
+    completed: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `func` outlives the task (parallel_for blocks until completion);
+// the pointee is Sync so shared calls from many threads are fine.
+unsafe impl Send for Task {}
+unsafe impl Sync for Task {}
+
+impl Task {
+    fn run(&self) {
+        loop {
+            let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+            if start >= self.end {
+                break;
+            }
+            let stop = (start + self.grain).min(self.end);
+            let f = unsafe { &*self.func };
+            for i in start..stop {
+                f(i);
+            }
+            let prev = self.completed.fetch_add(stop - start, Ordering::AcqRel);
+            if prev + (stop - start) == self.end {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    slot: Mutex<(u64, Option<Arc<Task>>)>,
+    cv: Condvar,
+    shutdown: AtomicUsize,
+}
+
+/// Persistent dynamic-scheduling thread pool.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    serialize: Mutex<()>,
+    n_workers: usize,
+}
+
+impl WorkerPool {
+    /// `n_threads` worker threads (0 = caller-only execution, still correct).
+    pub fn new(n_threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new((0, None)),
+            cv: Condvar::new(),
+            shutdown: AtomicUsize::new(0),
+        });
+        let threads = (0..n_threads)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            threads,
+            serialize: Mutex::new(()),
+            n_workers: n_threads,
+        }
+    }
+
+    /// Pool sized for the current machine (leaves one core for the OS).
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get().saturating_sub(1).max(1))
+            .unwrap_or(4)
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, dynamically scheduled in chunks of
+    /// `grain`. Blocks until every call has returned. The caller thread
+    /// participates, so progress is guaranteed even with 0 workers.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, grain: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        // One batch at a time: the slot is a broadcast of the current task.
+        let _guard = self.serialize.lock().unwrap();
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: we erase the lifetime; `wait_done` below ensures all
+        // workers finished calling `func` before `f` drops.
+        let func: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fref) };
+        let task = Arc::new(Task {
+            func,
+            next: AtomicUsize::new(0),
+            end: n,
+            grain,
+            completed: AtomicUsize::new(0),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.0 += 1;
+            slot.1 = Some(Arc::clone(&task));
+            self.shared.cv.notify_all();
+        }
+        // The caller helps until the index range is exhausted...
+        task.run();
+        // ...then waits for stragglers still inside `f`.
+        let mut done = task.done.lock().unwrap();
+        while !*done {
+            done = task.done_cv.wait(done).unwrap();
+        }
+        // Clear the slot so idle workers stop re-checking a finished task.
+        let mut slot = self.shared.slot.lock().unwrap();
+        slot.1 = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(1, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let task = {
+            let mut slot = sh.slot.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::SeqCst) == 1 {
+                    return;
+                }
+                if slot.0 != seen_gen {
+                    if let Some(t) = slot.1.clone() {
+                        seen_gen = slot.0;
+                        break t;
+                    }
+                    seen_gen = slot.0;
+                }
+                slot = sh.cv.wait(slot).unwrap();
+            }
+        };
+        task.run();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_indices_visited_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let n = 10_000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(n, 7, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn zero_workers_still_completes() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn imbalanced_work_dynamic_schedule() {
+        // A few very slow items must not serialize the rest: with dynamic
+        // scheduling total wall time ~= slow item, not sum of all.
+        let pool = WorkerPool::new(4);
+        let start = std::time::Instant::now();
+        pool.parallel_for(64, 1, |i| {
+            if i % 16 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        });
+        let elapsed = start.elapsed();
+        assert!(elapsed.as_millis() < 60, "took {elapsed:?}");
+    }
+
+    #[test]
+    fn reusable_across_batches() {
+        let pool = WorkerPool::new(3);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(round + 1, 4, |i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            let n = (round + 1) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let pool = WorkerPool::new(2);
+        pool.parallel_for(0, 8, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn borrows_local_state() {
+        let pool = WorkerPool::new(2);
+        let data: Vec<u64> = (0..1000).collect();
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(data.len(), 16, |i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+    }
+}

@@ -1,0 +1,80 @@
+//! Hand-rolled property-testing driver (no `proptest` in the offline vendor
+//! set). `check` runs a property against many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check("astar_symmetric", 200, |rng| {
+//!     let g = random_navmesh(rng);
+//!     /* ... assertions ... */
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `property` against `cases` deterministic random cases. Panics with
+/// the failing case's seed on assertion failure.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    property: F,
+) {
+    // Base seed is fixed so CI is reproducible; override with PROP_SEED.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB5_u64);
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n{msg}\n\
+                 replay with PROP_SEED={base} and case index {case}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // count via a cell-free trick: check is Fn, so use an atomic
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("trivial", 50, |rng| {
+            let x = rng.f32();
+            assert!((0.0..1.0).contains(&x));
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        count += counter.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always_fails\" failed")]
+    fn failing_property_reports_seed() {
+        check("always_fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = std::sync::Mutex::new(Vec::new());
+        check("collect", 5, |rng| a.lock().unwrap().push(rng.next_u64()));
+        let b = std::sync::Mutex::new(Vec::new());
+        check("collect", 5, |rng| b.lock().unwrap().push(rng.next_u64()));
+        assert_eq!(*a.lock().unwrap(), *b.lock().unwrap());
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-component timing for the paper's runtime breakdowns (Fig. 5,
+//! Table A2: µs/frame spent in Simulation+Rendering / Inference / Learning).
+//!
+//! A `Profiler` accumulates named durations; `breakdown(frames)` converts to
+//! µs-per-frame rows identical in shape to the paper's tables.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-time per named component. Cheap enough for per-step use.
+#[derive(Default)]
+pub struct Profiler {
+    acc: Mutex<BTreeMap<&'static str, (Duration, u64)>>,
+}
+
+/// RAII guard: adds elapsed time to its component when dropped.
+pub struct Span<'a> {
+    prof: &'a Profiler,
+    name: &'static str,
+    start: Instant,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start timing `name`; stops when the returned guard drops.
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        Span {
+            prof: self,
+            name,
+            start: Instant::now(),
+        }
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&self, name: &'static str, d: Duration) {
+        let mut acc = self.acc.lock().unwrap();
+        let e = acc.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Total accumulated time for one component.
+    pub fn total(&self, name: &'static str) -> Duration {
+        self.acc
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|e| e.0)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &'static str) -> u64 {
+        self.acc.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// µs per frame for every component, given the number of frames
+    /// (samples of experience) processed — the paper's breakdown unit.
+    pub fn breakdown(&self, frames: u64) -> Vec<(String, f64)> {
+        let acc = self.acc.lock().unwrap();
+        acc.iter()
+            .map(|(k, (d, _))| {
+                (k.to_string(), d.as_secs_f64() * 1e6 / frames.max(1) as f64)
+            })
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        self.acc.lock().unwrap().clear();
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.prof.add(self.name, self.start.elapsed());
+    }
+}
+
+/// Frames-per-second meter using the paper's methodology (§4.1): samples of
+/// experience processed divided by wall time of rollout + training.
+pub struct FpsMeter {
+    start: Instant,
+    frames: u64,
+}
+
+impl FpsMeter {
+    pub fn start() -> Self {
+        FpsMeter {
+            start: Instant::now(),
+            frames: 0,
+        }
+    }
+
+    pub fn add_frames(&mut self, n: u64) {
+        self.frames += n;
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.frames as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_accumulates() {
+        let p = Profiler::new();
+        for _ in 0..3 {
+            let _s = p.span("sim");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(p.count("sim"), 3);
+        assert!(p.total("sim") >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn breakdown_per_frame() {
+        let p = Profiler::new();
+        p.add("render", Duration::from_micros(1000));
+        p.add("infer", Duration::from_micros(3000));
+        let rows = p.breakdown(100);
+        let map: std::collections::BTreeMap<_, _> = rows.into_iter().collect();
+        assert!((map["render"] - 10.0).abs() < 1e-9);
+        assert!((map["infer"] - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fps_meter_counts() {
+        let mut m = FpsMeter::start();
+        m.add_frames(500);
+        m.add_frames(500);
+        assert_eq!(m.frames(), 1000);
+        assert!(m.fps() > 0.0);
+    }
+
+    #[test]
+    fn zero_frames_no_panic() {
+        let p = Profiler::new();
+        p.add("x", Duration::from_micros(5));
+        let _ = p.breakdown(0);
+    }
+}

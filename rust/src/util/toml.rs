@@ -1,0 +1,229 @@
+//! Minimal TOML-subset parser for the config system (no `toml` crate in the
+//! offline vendor set). Supports: `[section]` headers, `key = value` with
+//! string / bool / integer / float / homogeneous-array values, `#` comments
+//! and blank lines. This covers every config file the launcher accepts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlVal {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<TomlVal>),
+}
+
+impl TomlVal {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlVal::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlVal::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlVal::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected non-negative integer, got {i}");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlVal::Float(f) => Ok(*f),
+            TomlVal::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+}
+
+/// section -> key -> value. Top-level keys live in section `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlVal>>;
+
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let parsed = parse_value(val)
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), parsed);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlVal> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlVal::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if v == "true" {
+        return Ok(TomlVal::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlVal::Bool(false));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let mut out = Vec::new();
+        for item in split_top_level(body) {
+            let item = item.trim();
+            if !item.is_empty() {
+                out.push(parse_value(item)?);
+            }
+        }
+        return Ok(TomlVal::Arr(out));
+    }
+    if !v.contains('.') && !v.contains('e') && !v.contains('E') {
+        if let Ok(i) = v.replace('_', "").parse::<i64>() {
+            return Ok(TomlVal::Int(i));
+        }
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlVal::Float(f));
+    }
+    bail!("cannot parse value {v:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = parse(
+            r#"
+# top comment
+seed = 42
+name = "run-a"   # trailing comment
+
+[sim]
+num_envs = 256
+forward_step = 0.25
+tasks = ["pointnav", "flee"]
+verbose = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["seed"], TomlVal::Int(42));
+        assert_eq!(doc[""]["name"].as_str().unwrap(), "run-a");
+        assert_eq!(doc["sim"]["num_envs"].as_usize().unwrap(), 256);
+        assert!((doc["sim"]["forward_step"].as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(
+            doc["sim"]["tasks"],
+            TomlVal::Arr(vec![
+                TomlVal::Str("pointnav".into()),
+                TomlVal::Str("flee".into())
+            ])
+        );
+        assert!(doc["sim"]["verbose"].as_bool().unwrap());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["k"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.0\nc = 1e-4").unwrap();
+        assert_eq!(doc[""]["a"], TomlVal::Int(3));
+        assert_eq!(doc[""]["b"], TomlVal::Float(3.0));
+        assert!((doc[""]["c"].as_f64().unwrap() - 1e-4).abs() < 1e-18);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn int_conversion_bounds() {
+        let doc = parse("neg = -1").unwrap();
+        assert!(doc[""]["neg"].as_usize().is_err());
+        assert_eq!(doc[""]["neg"].as_i64().unwrap(), -1);
+    }
+}

@@ -1,0 +1,120 @@
+//! End-to-end integration: full training iterations through the real stack
+//! (procgen dataset → batch sim → batch render → PJRT inference → GAE →
+//! PPO grad → Lamb update), on the tiny `test` artifact variant.
+
+use std::path::PathBuf;
+
+use bps::config::{Config, SimArch};
+use bps::coordinator::Coordinator;
+
+fn test_config(name: &str) -> Option<Config> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if !root.join("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    // tiny dataset generated on demand (cached across tests)
+    let ds_dir = std::env::temp_dir().join("bps_e2e_dataset");
+    if !ds_dir.join("splits.json").exists() {
+        std::fs::create_dir_all(&ds_dir).unwrap();
+        bps::scene::generate_dataset(
+            &ds_dir,
+            3,
+            1,
+            1,
+            bps::scene::Complexity::test(),
+            123,
+        )
+        .unwrap();
+    }
+    let mut cfg = Config::default();
+    cfg.variant = "test".into();
+    cfg.artifacts_dir = root.join("artifacts");
+    cfg.dataset_dir = ds_dir;
+    cfg.complexity = "test".into();
+    cfg.num_envs = 4;
+    cfg.rollout_len = 4;
+    cfg.num_minibatches = 2;
+    cfg.k_scenes = 2;
+    cfg.shards = 1;
+    cfg.total_frames = 64;
+    cfg.seed = 9;
+    cfg.threads = 2;
+    cfg.out_dir = std::env::temp_dir().join(format!("bps_e2e_{name}"));
+    cfg.validate().unwrap();
+    Some(cfg)
+}
+
+#[test]
+fn bps_training_iterations_run_and_update_params() {
+    let Some(cfg) = test_config("bps") else { return };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let p0 = coord.params.flat.clone();
+    for _ in 0..3 {
+        let it = coord.train_iteration().unwrap();
+        assert_eq!(it.frames, 16);
+        assert!(it.losses.entropy > 0.0 && it.losses.entropy <= (4.0f32).ln() + 1e-4);
+        assert!(it.losses.value.is_finite());
+    }
+    assert_eq!(coord.frames(), 48);
+    // params changed and remained finite
+    let p1 = &coord.params.flat;
+    assert!(p1.iter().all(|x| x.is_finite()));
+    let delta: f32 = p1.iter().zip(&p0).map(|(a, b)| (a - b).abs()).sum();
+    assert!(delta > 0.0);
+    // optimizer stepped: 3 iters * 1 epoch * 2 minibatches
+    assert_eq!(coord.params.step, 6.0);
+    // profiler recorded every phase
+    for phase in ["inference", "sim", "render", "learn"] {
+        assert!(coord.prof.count(phase) > 0, "missing phase {phase}");
+    }
+}
+
+#[test]
+fn workers_arch_runs() {
+    let Some(mut cfg) = test_config("workers") else { return };
+    cfg.arch = SimArch::Workers;
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let it = coord.train_iteration().unwrap();
+    assert_eq!(it.frames, 16);
+}
+
+#[test]
+fn multi_shard_ddppo_matches_frame_accounting() {
+    let Some(mut cfg) = test_config("shards") else { return };
+    cfg.shards = 2;
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let it = coord.train_iteration().unwrap();
+    assert_eq!(it.frames, 32); // 2 shards x 4 envs x 4 steps
+    assert!(coord.params.step > 0.0);
+}
+
+#[test]
+fn evaluation_completes_episodes() {
+    let Some(cfg) = test_config("eval") else { return };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let (spl, success, _score) = coord.evaluate("val", 8).unwrap();
+    assert!((0.0..=1.0).contains(&spl));
+    assert!((0.0..=1.0).contains(&success));
+}
+
+#[test]
+fn checkpoint_roundtrip_through_coordinator() {
+    let Some(cfg) = test_config("ckpt") else { return };
+    let mut coord = Coordinator::new(cfg).unwrap();
+    coord.train_iteration().unwrap();
+    let path = std::env::temp_dir().join("bps_e2e_ckpt.bin");
+    coord.params.save(&path).unwrap();
+    let loaded = bps::runtime::ParamStore::load(&path).unwrap();
+    assert_eq!(loaded.flat, coord.params.flat);
+    assert_eq!(loaded.step, coord.params.step);
+}
+
+#[test]
+fn adam_optimizer_variant_runs() {
+    let Some(mut cfg) = test_config("adam") else { return };
+    cfg.optimizer = "adam".into();
+    let mut coord = Coordinator::new(cfg).unwrap();
+    let it = coord.train_iteration().unwrap();
+    assert!(it.losses.value.is_finite());
+}

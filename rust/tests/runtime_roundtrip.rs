@@ -1,0 +1,130 @@
+//! Integration: python AOT artifacts -> rust PJRT load/compile/execute.
+//! Requires `make artifacts` (test preset). These are the core correctness
+//! checks of the L3<->L2 boundary.
+
+use std::path::PathBuf;
+
+use bps::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_f32, Manifest, ParamStore, Runtime};
+
+fn artifacts() -> Option<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).ok()
+}
+
+#[test]
+fn init_infer_grad_update_roundtrip() {
+    let Some(man) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = man.variant("test").unwrap();
+    let rt = Runtime::cpu().unwrap();
+
+    // init: deterministic in the seed
+    let init = rt.load(&man.artifact_path(v, "init").unwrap()).unwrap();
+    let ps = ParamStore::init(&init, v.num_params, 7).unwrap();
+    let ps2 = ParamStore::init(&init, v.num_params, 7).unwrap();
+    let ps3 = ParamStore::init(&init, v.num_params, 8).unwrap();
+    assert_eq!(ps.flat, ps2.flat);
+    assert_ne!(ps.flat, ps3.flat);
+    assert!(ps.flat.iter().all(|x| x.is_finite()));
+
+    // infer: shapes + finiteness + hidden-state evolution
+    let n = 4usize;
+    let infer = rt
+        .load(&man.artifact_path(v, "infer_n4").unwrap())
+        .unwrap();
+    let res = v.res;
+    let obs = vec![0.5f32; n * res * res * v.in_ch];
+    let goal = vec![0.1f32; n * 3];
+    let h = vec![0.0f32; n * v.hidden];
+    let c = vec![0.0f32; n * v.hidden];
+    let out = infer
+        .run(&[
+            lit_f32(&ps.flat, &[v.num_params as i64]).unwrap(),
+            lit_f32(&obs, &[n as i64, res as i64, res as i64, v.in_ch as i64]).unwrap(),
+            lit_f32(&goal, &[n as i64, 3]).unwrap(),
+            lit_f32(&h, &[n as i64, v.hidden as i64]).unwrap(),
+            lit_f32(&c, &[n as i64, v.hidden as i64]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let logits = to_f32(&out[0]).unwrap();
+    let value = to_f32(&out[1]).unwrap();
+    let h2 = to_f32(&out[2]).unwrap();
+    assert_eq!(logits.len(), n * v.num_actions);
+    assert_eq!(value.len(), n);
+    assert_eq!(h2.len(), n * v.hidden);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert!(h2.iter().any(|&x| x.abs() > 0.0), "hidden state unchanged");
+    // identical rows for identical inputs (batch determinism)
+    assert_eq!(logits[0..4], logits[4..8]);
+
+    // grad: finite grads of the right size; loss aux has 4 entries
+    let (b, l) = (2usize, 4usize);
+    let grad = rt
+        .load(&man.artifact_path(v, "grad_b2l4").unwrap())
+        .unwrap();
+    let obs_bl = vec![0.5f32; b * l * res * res * v.in_ch];
+    let goal_bl = vec![0.1f32; b * l * 3];
+    let h0 = vec![0.0f32; b * v.hidden];
+    let actions = vec![1i32; b * l];
+    let logp_old = vec![-1.3863f32; b * l]; // ln(1/4)
+    let ret = vec![0.5f32; b * l];
+    let adv = vec![0.3f32; b * l];
+    let notdone = vec![1.0f32; b * l];
+    let gout = grad
+        .run(&[
+            lit_f32(&ps.flat, &[v.num_params as i64]).unwrap(),
+            lit_f32(
+                &obs_bl,
+                &[b as i64, l as i64, res as i64, res as i64, v.in_ch as i64],
+            )
+            .unwrap(),
+            lit_f32(&goal_bl, &[b as i64, l as i64, 3]).unwrap(),
+            lit_f32(&h0, &[b as i64, v.hidden as i64]).unwrap(),
+            lit_f32(&h0, &[b as i64, v.hidden as i64]).unwrap(),
+            lit_i32(&actions, &[b as i64, l as i64]).unwrap(),
+            lit_f32(&logp_old, &[b as i64, l as i64]).unwrap(),
+            lit_f32(&ret, &[b as i64, l as i64]).unwrap(),
+            lit_f32(&adv, &[b as i64, l as i64]).unwrap(),
+            lit_f32(&notdone, &[b as i64, l as i64]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(gout.len(), 2);
+    let grads = to_f32(&gout[0]).unwrap();
+    let losses = to_f32(&gout[1]).unwrap();
+    assert_eq!(grads.len(), v.num_params);
+    assert_eq!(losses.len(), 4);
+    assert!(grads.iter().all(|x| x.is_finite()));
+    let gnorm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 0.0 && gnorm <= 1.0 + 1e-3, "clipped grad norm {gnorm}");
+    // entropy of a near-uniform init policy ~ ln(4)
+    assert!(losses[2] > 0.9 * (4.0f32).ln(), "entropy {}", losses[2]);
+
+    // update: params move, step increments, lamb != adam
+    for algo in ["update_lamb", "update_adam"] {
+        let upd = rt.load(&man.artifact_path(v, algo).unwrap()).unwrap();
+        let uout = upd
+            .run(&[
+                lit_f32(&ps.flat, &[v.num_params as i64]).unwrap(),
+                lit_f32(&ps.m, &[v.num_params as i64]).unwrap(),
+                lit_f32(&ps.v, &[v.num_params as i64]).unwrap(),
+                lit_scalar_f32(0.0),
+                lit_f32(&grads, &[v.num_params as i64]).unwrap(),
+                lit_scalar_f32(2.5e-4),
+            ])
+            .unwrap();
+        assert_eq!(uout.len(), 4);
+        let new_p = to_f32(&uout[0]).unwrap();
+        let step = to_f32(&uout[3]).unwrap();
+        assert_eq!(step[0], 1.0);
+        let delta: f32 = new_p
+            .iter()
+            .zip(&ps.flat)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(delta > 0.0, "{algo} did not change params");
+        assert!(new_p.iter().all(|x| x.is_finite()));
+    }
+}
