@@ -1,14 +1,59 @@
-//! Quickstart: the smallest end-to-end BPS run — generate a tiny dataset,
-//! load the `test` AOT artifacts, train a handful of PPO iterations, and
-//! print the FPS + runtime breakdown.
+//! Quickstart: the smallest end-to-end BPS run, in two acts.
 //!
-//! Run: make artifacts && cargo run --release --example quickstart
+//! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
+//! batched request/response environment API at the heart of the system —
+//! over a tiny procedural dataset and drives it with scripted actions
+//! through the pipelined `submit → wait` cycle (simulation+rendering of
+//! step t+1 overlaps consumption of step t via double buffering).
+//!
+//! Act 2 needs the AOT artifacts (`make artifacts`): it loads the `test`
+//! model variant, trains a handful of PPO iterations through the
+//! coordinator (a pure client of the same `EnvBatch` API), and prints the
+//! FPS + runtime breakdown.
+//!
+//! Run: cargo run --release --example quickstart
+
+use std::sync::Arc;
 
 use bps::config::Config;
 use bps::coordinator::Coordinator;
+use bps::env::EnvBatchConfig;
+use bps::render::RenderConfig;
+use bps::scene::Dataset;
+use bps::sim::{Task, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
 
 fn main() -> anyhow::Result<()> {
     let ds_dir = bps::bench::ensure_dataset("test", 4)?;
+
+    // -- Act 1: the EnvBatch API, no artifacts required ---------------------
+    println!("== EnvBatch quickstart: 8 envs, scripted actions ==");
+    let ds = Dataset::open(&ds_dir)?;
+    let scene = Arc::new(ds.load_scene(&ds.train[0], false)?);
+    let pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+    let mut env = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32))
+        .seed(7)
+        .overlap(true) // double-buffered pipelined stepping (the default)
+        .build_with_scenes((0..8).map(|_| Arc::clone(&scene)).collect(), pool)?;
+    let mut reward_sum = 0.0f32;
+    let mut episodes = 0u32;
+    for t in 0..64usize {
+        let actions: Vec<u8> = (0..8).map(|i| ((t + i) % NUM_ACTIONS) as u8).collect();
+        let handle = env.submit(&actions)?; // sim+render of t+1 starts here
+        let _obs_t = handle.current().obs; // step t stays readable meanwhile
+        let view = handle.wait()?; // step t+1: borrowed SoA slices
+        reward_sum += view.rewards.iter().sum::<f32>();
+        episodes += view.dones.iter().filter(|&&d| d).count() as u32;
+    }
+    let (sim_d, render_d) = env.drain_timings();
+    println!(
+        "64 steps x 8 envs: total reward {reward_sum:+.2}, {episodes} episodes, \
+         sim {:.1} ms, render {:.1} ms\n",
+        sim_d.as_secs_f64() * 1e3,
+        render_d.as_secs_f64() * 1e3
+    );
+
+    // -- Act 2: PPO training through the same API (needs `make artifacts`) --
     let mut cfg = Config::default();
     cfg.variant = "test".into();
     cfg.artifacts_dir = bps::bench::artifacts_dir();
@@ -20,7 +65,14 @@ fn main() -> anyhow::Result<()> {
     cfg.total_frames = 320;
 
     println!("== BPS quickstart: PointGoalNav, 4 envs, tiny SE-ResNet9 ==");
-    let mut coord = Coordinator::new(cfg)?;
+    let mut coord = match Coordinator::new(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("(training act skipped: {e:#})");
+            println!("run `make artifacts` to export the test AOT variant");
+            return Ok(());
+        }
+    };
     while coord.frames() < coord.cfg.total_frames {
         let it = coord.train_iteration()?;
         println!(

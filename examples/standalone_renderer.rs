@@ -1,12 +1,16 @@
-//! Standalone batch renderer demo (paper Appendix A.2 / Fig. A2): renders
-//! increasing batch sizes at several resolutions and prints the FPS grid
-//! plus an ASCII visualization of one depth frame.
+//! Standalone batch renderer + environment server demo (paper Appendix
+//! A.2 / Fig. A2): renders increasing batch sizes at several resolutions
+//! and prints the FPS grid plus an ASCII visualization of one depth frame,
+//! then measures the full `EnvBatch` step cycle (sim + render) with the
+//! double-buffered pipelined driver against synchronous stepping.
 //!
 //! Run: cargo run --release --example standalone_renderer
 
 use std::sync::Arc;
 
+use bps::env::EnvBatchConfig;
 use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
+use bps::sim::Task;
 use bps::util::pool::WorkerPool;
 use bps::util::rng::Rng;
 
@@ -20,7 +24,7 @@ fn main() -> anyhow::Result<()> {
         scene.geometry_bytes() as f64 / 1e6,
         scene.texture_bytes() as f64 / 1e6
     );
-    let pool = WorkerPool::new(WorkerPool::default_size());
+    let pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
     let mut rng = Rng::new(11);
 
     // one ASCII depth frame, for the humans
@@ -60,6 +64,31 @@ fn main() -> anyhow::Result<()> {
             renderer.render_batch(&pool, &items, &mut obs);
         }
         println!("  N={n:<4} {:>9.0} FPS", (n * reps) as f64 / t0.elapsed().as_secs_f64());
+    }
+
+    // full environment step cycle through the request/response API:
+    // scripted actions, sim + render per step, overlap on vs off
+    println!("\nEnvBatch step FPS (64px depth, sim+render, N=64):");
+    for (label, overlap) in [("synchronous", false), ("pipelined  ", true)] {
+        let mut env = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(64))
+            .seed(3)
+            .overlap(overlap)
+            .build_with_scenes(
+                (0..64).map(|_| Arc::clone(&scene)).collect(),
+                Arc::clone(&pool),
+            )?;
+        let actions: Vec<u8> = (0..64).map(|i| 1 + (i % 3) as u8).collect();
+        env.step(&actions)?; // warmup
+        let reps = 20;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let handle = env.submit(&actions)?;
+            let _ = handle.wait()?;
+        }
+        println!(
+            "  {label} {:>9.0} steps/s",
+            (64 * reps) as f64 / t0.elapsed().as_secs_f64()
+        );
     }
     Ok(())
 }

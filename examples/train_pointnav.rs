@@ -1,7 +1,9 @@
-//! End-to-end validation driver (DESIGN.md: Table 2 / Fig. 3 scaled-down):
-//! trains a Depth PointGoalNav agent with the full BPS stack on a
-//! procedural gibson-like dataset, logs the learning curve to CSV, then
-//! evaluates SPL/Success on the val split.
+//! End-to-end validation driver (DESIGN.md §3: Table 2 / Fig. 3
+//! scaled-down): trains a Depth PointGoalNav agent with the full BPS
+//! stack — the coordinator stepping per-shard `EnvBatch` servers through
+//! the pipelined submit/wait cycle — on a procedural gibson-like dataset,
+//! logs the learning curve to CSV, then evaluates SPL/Success on the val
+//! split (`--overlap false` selects synchronous stepping for A/B runs).
 //!
 //! Run: make artifacts && cargo run --release --example train_pointnav -- \
 //!        [--frames 200000] [--envs 64] [--optimizer lamb|adam] [--arch bps|workers]

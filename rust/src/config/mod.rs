@@ -54,6 +54,19 @@ pub struct Config {
     pub k_scenes: usize,
     // sim
     pub task: Task,
+    /// Optional per-shard task override: shard `s` runs
+    /// `tasks[s % tasks.len()]`. Empty = every shard runs `task`.
+    /// Every shard is an independent `EnvBatch`, so heterogeneous
+    /// workloads (e.g. `--tasks pointnav,flee`) train one policy across
+    /// tasks.
+    pub tasks: Vec<Task>,
+    /// Double-buffered pipelined env stepping (paper Fig. 2 overlap).
+    /// `--overlap false` selects the synchronous path; given the same
+    /// scene-rotation schedule the two produce bitwise-identical
+    /// rollouts (see rust/tests/env_batch.rs). Active rotation prefetch
+    /// swaps scenes at wall-clock-dependent iterations in *both* modes,
+    /// so pin `k_scenes` to the train-split size for exact A/B runs.
+    pub overlap: bool,
     // optimization (paper Table A4)
     pub optimizer: String, // "lamb" | "adam"
     pub base_lr: f32,
@@ -88,6 +101,8 @@ impl Default for Config {
             shards: 1,
             k_scenes: 4,
             task: Task::PointNav,
+            tasks: Vec::new(),
+            overlap: true,
             optimizer: "lamb".into(),
             base_lr: 2.5e-4,
             lr_scaling: true,
@@ -113,6 +128,16 @@ impl Config {
     /// Aggregate batch across shards (the paper's N in Table 2 / Fig. 4).
     pub fn aggregate_envs(&self) -> usize {
         self.num_envs * self.shards
+    }
+
+    /// Task assigned to shard `s` (round-robin over `tasks`, falling back
+    /// to the homogeneous `task`).
+    pub fn task_of_shard(&self, s: usize) -> Task {
+        if self.tasks.is_empty() {
+            self.task
+        } else {
+            self.tasks[s % self.tasks.len()]
+        }
     }
 
     pub fn complexity_preset(&self) -> Result<Complexity> {
@@ -154,7 +179,7 @@ impl Config {
         for key in [
             "variant", "artifacts-dir", "dataset", "complexity", "arch", "pipeline",
             "envs", "rollout-len", "minibatches", "ppo-epochs", "shards", "k-scenes",
-            "task", "optimizer", "lr", "lr-scaling", "gamma", "gae-lambda",
+            "task", "tasks", "overlap", "optimizer", "lr", "lr-scaling", "gamma", "gae-lambda",
             "normalize-adv", "frames", "seed", "threads", "out", "render-scale",
             "memory-mb",
         ] {
@@ -192,6 +217,17 @@ impl Config {
                 self.task = Task::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad task {v:?}"))?
             }
+            "tasks" => {
+                self.tasks = v
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| {
+                        Task::parse(s.trim())
+                            .ok_or_else(|| anyhow::anyhow!("bad task {s:?} in --tasks"))
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+            "overlap" => self.overlap = v.parse()?,
             "optimizer" => self.optimizer = v.into(),
             "lr" | "base_lr" => self.base_lr = v.parse()?,
             "lr_scaling" => self.lr_scaling = v.parse()?,
@@ -296,6 +332,27 @@ mod tests {
         let mut cfg = Config::default();
         cfg.optimizer = "sgd".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn hetero_tasks_and_overlap() {
+        let argv: Vec<String> = "train --tasks pointnav,flee,explore --overlap false --shards 6"
+            .split_whitespace()
+            .map(str::to_string)
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let cfg = Config::load(None, &mut args).unwrap();
+        assert!(!cfg.overlap);
+        assert_eq!(cfg.task_of_shard(0), Task::PointNav);
+        assert_eq!(cfg.task_of_shard(1), Task::Flee);
+        assert_eq!(cfg.task_of_shard(2), Task::Explore);
+        assert_eq!(cfg.task_of_shard(3), Task::PointNav); // round-robin
+        // homogeneous fallback
+        let base = Config::default();
+        assert_eq!(base.task_of_shard(5), base.task);
+        // bad task rejected
+        let mut cfg = Config::default();
+        assert!(cfg.set("tasks", "pointnav,swim").is_err());
     }
 
     #[test]

@@ -1,14 +1,26 @@
-//! The end-to-end RL coordinator: rollout generation (batch sim → batch
-//! render → batched inference), GAE, PPO training through the AOT
-//! artifacts, DD-PPO multi-shard gradient averaging, scene rotation, and
-//! evaluation. This is the paper's Fig. 2 loop.
+//! The end-to-end RL coordinator: rollout generation driven through the
+//! batched environment API (`EnvBatch` request/response stepping), GAE,
+//! PPO training through the AOT artifacts, DD-PPO multi-shard gradient
+//! averaging, and evaluation. This is the paper's Fig. 2 loop.
+//!
+//! The coordinator is a pure *client* of [`crate::env`]: each shard owns
+//! an `EnvBatch` (which encapsulates the batch simulator, batch renderer,
+//! and scene rotation) plus the policy and rollout storage. In the default
+//! pipelined mode the `EnvBatch` overlaps simulation+rendering of step
+//! t+1 with the coordinator's bookkeeping on step t (`--overlap false`
+//! selects the synchronous path, which is bitwise-identical).
 //!
 //! Two simulation architectures are selectable (Table 1):
 //! `SimArch::Bps` shares K ≪ N scene assets across the batch and uses the
 //! pipelined batch renderer; `SimArch::Workers` reproduces the prior-art
 //! design — every environment owns a *private* copy of its scene asset
-//! (deep-cloned, so memory pressure is real) and renders fused per-env,
+//! (deep-loaded, so memory pressure is real) and renders fused per-env,
 //! which is what caps its env count at a given memory budget.
+//!
+//! Shards may run heterogeneous tasks (`--tasks pointnav,flee,explore`
+//! assigns tasks round-robin): every shard is an independent `EnvBatch`,
+//! so a PointNav shard and a Flee shard share nothing but the worker pool
+//! and the policy parameters.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -16,28 +28,25 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Config, SimArch};
+use crate::env::{EnvBatch, EnvBatchConfig};
 use crate::metrics::EpisodeStats;
 use crate::optim::{scale_lr, Losses, LrSchedule, Trainer};
 use crate::policy::Policy;
-use crate::render::{BatchRenderer, RenderConfig, RenderItem, SceneRotation, Sensor};
+use crate::render::{RenderConfig, SceneRotation, Sensor};
 use crate::rollout::Rollout;
 use crate::runtime::{Exec, Manifest, ParamStore, Runtime, Variant};
 use crate::scene::{Dataset, SceneAsset};
-use crate::sim::{BatchSim, SimConfig, SimOutputs};
 use crate::util::pool::WorkerPool;
 use crate::util::timer::{FpsMeter, Profiler};
 
-/// One DD-PPO shard ("GPU"): envs + renderer + policy state + rollout.
-pub struct Shard {
-    pub sim: BatchSim,
-    pub renderer: BatchRenderer,
-    pub rotation: Option<SceneRotation>,
-    pub policy: Policy,
-    pub rollout: Rollout,
-    pub obs: Vec<f32>,
-    pub goal: Vec<f32>,
-    pub sim_out: SimOutputs,
-    pub last_dones: Vec<bool>,
+/// One DD-PPO shard ("GPU"): a batched environment plus policy state and
+/// rollout storage. Internals are private — everything below the policy
+/// goes through the `EnvBatch` API.
+struct Shard {
+    env: EnvBatch,
+    policy: Policy,
+    rollout: Rollout,
+    last_dones: Vec<bool>,
 }
 
 /// Per-iteration summary.
@@ -50,16 +59,19 @@ pub struct IterStats {
 /// The training coordinator.
 pub struct Coordinator {
     pub cfg: Config,
-    pub variant: Variant,
-    pub pool: WorkerPool,
-    pub shards: Vec<Shard>,
     pub params: ParamStore,
-    pub trainer: Trainer,
     pub prof: Profiler,
     pub stats: EpisodeStats,
     pub fps: FpsMeter,
+    variant: Variant,
+    pool: Arc<WorkerPool>,
+    shards: Vec<Shard>,
+    trainer: Trainer,
     rt: Runtime,
     man: Manifest,
+    /// Compiled `infer_n{n}` executable, cached per env count so repeated
+    /// `evaluate` calls don't reload + recompile the artifact.
+    eval_infer: Option<(usize, Rc<Exec>)>,
 }
 
 impl Coordinator {
@@ -116,7 +128,7 @@ impl Coordinator {
         } else {
             cfg.threads
         };
-        let pool = WorkerPool::new(threads);
+        let pool = Arc::new(WorkerPool::new(threads));
 
         let dataset = Dataset::open(&cfg.dataset_dir).with_context(|| {
             format!(
@@ -134,88 +146,82 @@ impl Coordinator {
                 Rc::clone(&infer),
                 &dataset,
                 s,
+                Arc::clone(&pool),
             )?);
         }
         check_memory_budget(&cfg, &shards)?;
 
         let stats = EpisodeStats::new(cfg.num_envs * cfg.shards, 256);
+        // The training infer exec serves eval too whenever the env counts
+        // match (they do by default), so seed the cache with it.
+        let eval_infer = Some((cfg.num_envs, infer));
         Ok(Coordinator {
             cfg,
-            variant,
-            pool,
-            shards,
             params,
-            trainer,
             prof: Profiler::new(),
             stats,
             fps: FpsMeter::start(),
+            variant,
+            pool,
+            shards,
+            trainer,
             rt,
             man,
+            eval_infer,
         })
     }
 
     /// Collect one rollout on every shard, then run the PPO update with
     /// cross-shard gradient averaging. Returns frames processed.
+    ///
+    /// Per step the shard runs the paper's pipelined request cycle:
+    /// inference on the front buffer (step t) → `submit` the sampled
+    /// actions (sim+render of t+1 starts on the driver) → record step t
+    /// into the rollout *while the step executes* → `wait` and consume
+    /// the outcomes.
     pub fn train_iteration(&mut self) -> Result<IterStats> {
         let l = self.cfg.rollout_len;
         for si in 0..self.shards.len() {
-            {
-                let shard = &mut self.shards[si];
-                shard
-                    .rollout
-                    .begin(&shard.policy.h, &shard.policy.c, &shard.last_dones);
-            }
+            let shard = &mut self.shards[si];
+            shard
+                .rollout
+                .begin(&shard.policy.h, &shard.policy.c, &shard.last_dones);
             for t in 0..l {
-                let shard = &mut self.shards[si];
                 let step = {
                     let _s = self.prof.span("inference");
-                    shard
-                        .policy
-                        .step(&self.params.flat, &shard.obs, &shard.goal)?
+                    let v = shard.env.view();
+                    shard.policy.step(&self.params.flat, v.obs, v.goal)?
                 };
-                shard.rollout.record_step(
-                    t,
-                    &shard.obs,
-                    &shard.goal,
-                    &step.actions,
-                    &step.logp,
-                    &step.values,
-                );
+                let handle = shard.env.submit(&step.actions)?;
                 {
-                    let _s = self.prof.span("sim");
-                    shard
-                        .sim
-                        .step_batch(&self.pool, &step.actions, &mut shard.sim_out);
+                    // overlapped with sim+render of this step
+                    let v = handle.current();
+                    shard.rollout.record_step(
+                        t,
+                        v.obs,
+                        v.goal,
+                        &step.actions,
+                        &step.logp,
+                        &step.values,
+                    );
                 }
-                shard
-                    .rollout
-                    .record_outcome(t, &shard.sim_out.rewards, &shard.sim_out.dones);
-                self.stats.update(
-                    &shard.sim_out.rewards,
-                    &shard.sim_out.dones,
-                    &shard.sim_out.successes,
-                    &shard.sim_out.spl,
-                    &shard.sim_out.scores,
-                );
-                shard.policy.reset_done(&shard.sim_out.dones);
-                shard.last_dones.copy_from_slice(&shard.sim_out.dones);
-                shard.goal.copy_from_slice(&shard.sim_out.goal_sensor);
-                {
-                    let _s = self.prof.span("render");
-                    render_current(shard, &self.pool);
-                }
+                let v = handle.wait()?;
+                shard.rollout.record_outcome(t, v.rewards, v.dones);
+                self.stats
+                    .update(v.rewards, v.dones, v.successes, v.spl, v.scores);
+                shard.policy.reset_done(v.dones);
+                shard.last_dones.copy_from_slice(v.dones);
             }
-            // bootstrap + scene rotation
-            let shard = &mut self.shards[si];
+            // bootstrap values + scene rotation
             shard.rollout.bootstrap = {
                 let _s = self.prof.span("inference");
-                shard
-                    .policy
-                    .values_only(&self.params.flat, &shard.obs, &shard.goal)?
+                let v = shard.env.view();
+                shard.policy.values_only(&self.params.flat, v.obs, v.goal)?
             };
-            if let Some(rot) = shard.rotation.as_mut() {
-                rot.rotate(&mut shard.sim);
-            }
+            shard.env.rotate_scenes()?;
+            let (sim_d, render_d) = shard.env.drain_timings();
+            self.prof.add("sim", sim_d);
+            self.prof.add("render", render_d);
         }
         // learning (DD-PPO gradient averaging across shards inside)
         let losses = {
@@ -239,7 +245,12 @@ impl Coordinator {
     }
 
     /// Greedy evaluation on a dataset split. Returns (SPL, success, score)
-    /// means over `episodes` completed episodes.
+    /// means over `episodes` completed episodes. The eval environments are
+    /// a fresh `EnvBatch` over the split's scenes; the inference
+    /// executable is cached per env count across calls.
+    ///
+    /// Heterogeneous-task runs (`--tasks`) evaluate the first listed
+    /// task (shard 0's); to evaluate a different one, list it first.
     pub fn evaluate(&mut self, split: &str, episodes: usize) -> Result<(f32, f32, f32)> {
         let dataset = Dataset::open(&self.cfg.dataset_dir)?;
         let ids = dataset.split(split)?.to_vec();
@@ -255,42 +266,32 @@ impl Coordinator {
                     .map(Arc::new)
             })
             .collect::<Result<_>>()?;
-        let mut sim = BatchSim::new(
-            SimConfig::for_task(self.cfg.task),
-            scenes,
-            self.cfg.seed ^ 0xEA51,
-        );
         let rcfg = render_cfg(&self.cfg, &self.variant);
-        let renderer = BatchRenderer::new(rcfg, n);
-        let mut policy = Policy::with_exec(
-            Rc::new(self.rt.load(&self.man.artifact_path(
-                &self.variant,
-                &format!("infer_n{n}"),
-            )?)?),
-            &self.variant,
-            n,
-            self.cfg.seed ^ 0x5EED,
-        );
-        let mut obs = vec![0.0f32; n * rcfg.obs_floats()];
-        let mut goal = vec![0.0f32; n * 3];
-        let mut out = SimOutputs::with_capacity(n);
-        sim.fill_goal_sensor(&mut goal);
-        render_sim(&sim, &renderer, &self.pool, &mut obs);
+        // Eval consumes every step immediately (submit + wait back to
+        // back, no bookkeeping in between), so the synchronous path is
+        // strictly cheaper and bitwise-identical — no driver thread.
+        let mut env = EnvBatchConfig::new(self.cfg.task_of_shard(0), rcfg)
+            .seed(self.cfg.seed ^ 0xEA51)
+            .overlap(false)
+            .build_with_scenes(scenes, Arc::clone(&self.pool))?;
+        let infer = self.eval_exec(n)?;
+        let mut policy = Policy::with_exec(infer, &self.variant, n, self.cfg.seed ^ 0x5EED);
         let (mut spl_sum, mut succ_sum, mut score_sum, mut count) =
             (0.0f32, 0.0f32, 0.0f32, 0usize);
         let max_steps = episodes * 600 / n + 600;
         for _ in 0..max_steps {
-            let actions = policy.step_greedy(&self.params.flat, &obs, &goal)?;
-            sim.step_batch(&self.pool, &actions, &mut out);
-            policy.reset_done(&out.dones);
-            goal.copy_from_slice(&out.goal_sensor);
-            render_sim(&sim, &renderer, &self.pool, &mut obs);
+            let actions = {
+                let v = env.view();
+                policy.step_greedy(&self.params.flat, v.obs, v.goal)?
+            };
+            let v = env.step(&actions)?;
+            policy.reset_done(v.dones);
             for i in 0..n {
-                if out.dones[i] {
+                if v.dones[i] {
                     count += 1;
-                    spl_sum += out.spl[i];
-                    succ_sum += if out.successes[i] { 1.0 } else { 0.0 };
-                    score_sum += out.scores[i];
+                    spl_sum += v.spl[i];
+                    succ_sum += if v.successes[i] { 1.0 } else { 0.0 };
+                    score_sum += v.scores[i];
                 }
             }
             if count >= episodes {
@@ -299,6 +300,20 @@ impl Coordinator {
         }
         let c = count.max(1) as f32;
         Ok((spl_sum / c, succ_sum / c, score_sum / c))
+    }
+
+    /// Cached per-env-count `infer_n{n}` executable for evaluation.
+    fn eval_exec(&mut self, n: usize) -> Result<Rc<Exec>> {
+        if let Some((cached_n, exec)) = self.eval_infer.as_ref() {
+            if *cached_n == n {
+                return Ok(Rc::clone(exec));
+            }
+        }
+        let exec = Rc::new(self.rt.load(
+            &self.man.artifact_path(&self.variant, &format!("infer_n{n}"))?,
+        )?);
+        self.eval_infer = Some((n, Rc::clone(&exec)));
+        Ok(exec)
     }
 }
 
@@ -309,6 +324,7 @@ fn build_shard(
     infer: Rc<Exec>,
     dataset: &Dataset,
     shard_idx: usize,
+    pool: Arc<WorkerPool>,
 ) -> Result<Shard> {
     let n = cfg.num_envs;
     let with_tex = variant.in_ch == 3;
@@ -320,10 +336,14 @@ fn build_shard(
     let shift = (shard_idx * cfg.k_scenes) % ids.len();
     ids.rotate_left(shift);
 
-    let (scenes, rotation): (Vec<Arc<SceneAsset>>, Option<SceneRotation>) = match cfg.arch {
+    let rcfg = render_cfg(cfg, variant);
+    let ecfg = EnvBatchConfig::new(cfg.task_of_shard(shard_idx), rcfg)
+        .seed(cfg.seed.wrapping_add(shard_idx as u64 * 7919))
+        .overlap(cfg.overlap);
+    let env = match cfg.arch {
         SimArch::Bps => {
             let rot = SceneRotation::new(dataset.clone(), ids, cfg.k_scenes, with_tex)?;
-            (rot.assign(n), Some(rot))
+            ecfg.build_with_rotation(rot, n, pool)?
         }
         SimArch::Workers => {
             // No sharing: every env deep-loads its own copy (real memory).
@@ -332,17 +352,10 @@ fn build_shard(
                 let base = dataset.load_scene(&ids[i % ids.len()], with_tex)?;
                 scenes.push(Arc::new(base));
             }
-            (scenes, None)
+            ecfg.build_with_scenes(scenes, pool)?
         }
     };
 
-    let sim = BatchSim::new(
-        SimConfig::for_task(cfg.task),
-        scenes,
-        cfg.seed.wrapping_add(shard_idx as u64 * 7919),
-    );
-    let rcfg = render_cfg(cfg, variant);
-    let renderer = BatchRenderer::new(rcfg, n);
     let policy = Policy::with_exec(
         infer,
         variant,
@@ -350,22 +363,12 @@ fn build_shard(
         cfg.seed.wrapping_add(0xAC + shard_idx as u64),
     );
     let rollout = Rollout::new(n, cfg.rollout_len, rcfg.obs_floats(), variant.hidden);
-    let mut shard = Shard {
-        sim,
-        renderer,
-        rotation,
+    Ok(Shard {
+        env,
         policy,
         rollout,
-        obs: vec![0.0; n * rcfg.obs_floats()],
-        goal: vec![0.0; n * 3],
-        sim_out: SimOutputs::with_capacity(n),
         last_dones: vec![true; n], // first obs of each env starts an episode
-    };
-    shard.sim.fill_goal_sensor(&mut shard.goal);
-    // initial observations (rendered once; subsequent renders follow steps)
-    let pool = WorkerPool::new(0);
-    render_current(&mut shard, &pool);
-    Ok(shard)
+    })
 }
 
 fn render_cfg(cfg: &Config, variant: &Variant) -> RenderConfig {
@@ -385,56 +388,11 @@ fn render_cfg(cfg: &Config, variant: &Variant) -> RenderConfig {
     }
 }
 
-fn render_current(shard: &mut Shard, pool: &WorkerPool) {
-    let items: Vec<RenderItem> = (0..shard.sim.num_envs())
-        .map(|i| {
-            let (pos, heading) = {
-                let e = shard.sim.env(i);
-                (e.pos, e.heading)
-            };
-            RenderItem {
-                scene: shard.sim.scene_of(i),
-                pos,
-                heading,
-            }
-        })
-        .collect();
-    shard.renderer.render_batch(pool, &items, &mut shard.obs);
-}
-
-/// Render a sim's current poses (shared by eval and benches).
-pub fn render_sim(sim: &BatchSim, renderer: &BatchRenderer, pool: &WorkerPool, obs: &mut [f32]) {
-    let items: Vec<RenderItem> = (0..sim.num_envs())
-        .map(|i| {
-            let e = sim.env(i);
-            RenderItem {
-                scene: sim.scene_of(i),
-                pos: e.pos,
-                heading: e.heading,
-            }
-        })
-        .collect();
-    renderer.render_batch(pool, &items, obs);
-}
-
-/// Resident-memory check against the simulated accelerator budget.
+/// Resident-memory check against the simulated accelerator budget. Every
+/// shard's `EnvBatch` reports its resident asset footprint (rotation slots
+/// for BPS, per-env copies for Workers).
 fn check_memory_budget(cfg: &Config, shards: &[Shard]) -> Result<()> {
-    let with_tex = matches!(shards[0].renderer.cfg.sensor, Sensor::Rgb);
-    let mut bytes = 0usize;
-    for shard in shards {
-        match cfg.arch {
-            SimArch::Bps => {
-                if let Some(rot) = &shard.rotation {
-                    bytes += rot.resident_bytes(with_tex);
-                }
-            }
-            SimArch::Workers => {
-                for i in 0..shard.sim.num_envs() {
-                    bytes += shard.sim.scene_of(i).footprint_bytes(with_tex);
-                }
-            }
-        }
-    }
+    let bytes: usize = shards.iter().map(|s| s.env.resident_bytes()).sum();
     let budget = cfg.memory_budget_mb * 1024 * 1024;
     if bytes > budget {
         bail!(

@@ -1,0 +1,500 @@
+//! [`EnvBatch`]: the request/response batched environment server.
+//!
+//! One `EnvBatch` owns N environments (the `BatchSim`), their renderer
+//! (`BatchRenderer`), and optionally the K-slot `SceneRotation`. Clients
+//! never touch those internals; they drive the batch through
+//! [`submit`](EnvBatch::submit) / [`StepHandle::wait`] and read results as
+//! borrowed SoA slices via [`StepView`].
+//!
+//! ## Double buffering
+//!
+//! Two `StepBuffers` (observation megaframe + `SimOutputs`) rotate between
+//! the caller and the step executor. In pipelined mode the executor is a
+//! dedicated driver thread: `submit` *moves* the back buffer and the action
+//! vector to it over a channel, the driver runs sim → render on the shared
+//! `WorkerPool`, and `wait` moves the filled buffer back and swaps it in as
+//! the new front. The caller keeps full read access to the front buffer
+//! (via [`StepHandle::current`]) for the whole in-flight window — that is
+//! the paper's overlap of inference/bookkeeping on step *t* with
+//! simulation+rendering of step *t+1* (Fig. 2). Because ownership moves,
+//! no `unsafe` is needed at this layer.
+//!
+//! Determinism: the sim's per-env RNG streams and the renderer are
+//! independent of worker count and scheduling, so pipelined and
+//! synchronous stepping produce bitwise-identical tensors for the same
+//! seed, action sequence, and scene-rotation schedule (asserted in
+//! `rust/tests/env_batch.rs`; an active rotation prefetch swaps scenes
+//! at wall-clock-dependent resets in either mode).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::render::{BatchRenderer, RenderItem, SceneRotation, Sensor};
+use crate::scene::SceneAsset;
+use crate::sim::{BatchSim, SimOutputs, Task};
+use crate::util::pool::WorkerPool;
+
+use super::config::EnvBatchConfig;
+
+/// One rotating buffer: the observation megaframe plus the SoA outputs.
+struct StepBuffers {
+    obs: Vec<f32>,
+    out: SimOutputs,
+}
+
+impl StepBuffers {
+    fn new(n: usize, obs_floats: usize) -> StepBuffers {
+        StepBuffers {
+            obs: vec![0.0; n * obs_floats],
+            out: SimOutputs::with_capacity(n),
+        }
+    }
+}
+
+/// Wall-time spent in sim / render, accumulated by the executor and
+/// drained by the client (feeds the paper's runtime-breakdown profiling).
+#[derive(Default)]
+struct StepTimings {
+    sim_ns: AtomicU64,
+    render_ns: AtomicU64,
+}
+
+impl StepTimings {
+    fn add(&self, sim: Duration, render: Duration) {
+        self.sim_ns
+            .fetch_add(sim.as_nanos() as u64, Ordering::Relaxed);
+        self.render_ns
+            .fetch_add(render.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn drain(&self) -> (Duration, Duration) {
+        (
+            Duration::from_nanos(self.sim_ns.swap(0, Ordering::Relaxed)),
+            Duration::from_nanos(self.render_ns.swap(0, Ordering::Relaxed)),
+        )
+    }
+}
+
+/// The simulation world: everything the step executor owns. Lives on the
+/// driver thread in pipelined mode, inline in synchronous mode.
+struct EnvWorld {
+    sim: BatchSim,
+    renderer: BatchRenderer,
+    rotation: Option<SceneRotation>,
+    pool: Arc<WorkerPool>,
+    timings: Arc<StepTimings>,
+}
+
+impl EnvWorld {
+    /// Execute one batch step: simulate, then render the new poses.
+    fn exec_step(&mut self, actions: &[u8], buf: &mut StepBuffers) {
+        let t0 = Instant::now();
+        self.sim.step_batch(&self.pool, actions, &mut buf.out);
+        let t1 = Instant::now();
+        self.render(&mut buf.obs);
+        self.timings.add(t1 - t0, t1.elapsed());
+    }
+
+    /// Render the sim's current poses into the observation megaframe.
+    fn render(&self, obs: &mut [f32]) {
+        let items: Vec<RenderItem> = (0..self.sim.num_envs())
+            .map(|i| {
+                let (pos, heading) = {
+                    let e = self.sim.env(i);
+                    (e.pos, e.heading)
+                };
+                RenderItem {
+                    scene: self.sim.scene_of(i),
+                    pos,
+                    heading,
+                }
+            })
+            .collect();
+        self.renderer.render_batch(&self.pool, &items, obs);
+    }
+
+    /// First observation of the run: goal sensor + rendered megaframe.
+    /// Not accumulated into the step timings — it happens at build time,
+    /// outside the profiled rollout loop.
+    fn render_initial(&mut self, buf: &mut StepBuffers) {
+        self.sim.fill_goal_sensor(&mut buf.out.goal_sensor);
+        self.render(&mut buf.obs);
+    }
+
+    fn rotate(&mut self) {
+        if let Some(rot) = self.rotation.as_mut() {
+            rot.rotate(&mut self.sim);
+        }
+    }
+}
+
+/// Requests the client sends to the step executor, in order.
+enum Request {
+    Step { actions: Vec<u8>, buf: StepBuffers },
+    Rotate,
+}
+
+/// Completed step: the filled buffer plus the recycled action vector.
+type Response = (StepBuffers, Vec<u8>);
+
+enum Mode {
+    /// Steps execute inline on the caller thread.
+    Sync(Box<EnvWorld>),
+    /// Steps execute on a dedicated driver thread (double-buffered).
+    Pipelined {
+        req_tx: Option<Sender<Request>>,
+        resp_rx: Receiver<Response>,
+        driver: Option<JoinHandle<()>>,
+    },
+}
+
+fn driver_loop(mut world: EnvWorld, req_rx: Receiver<Request>, resp_tx: Sender<Response>) {
+    while let Ok(req) = req_rx.recv() {
+        match req {
+            Request::Step { actions, mut buf } => {
+                world.exec_step(&actions, &mut buf);
+                if resp_tx.send((buf, actions)).is_err() {
+                    return; // client dropped mid-step; shut down
+                }
+            }
+            Request::Rotate => world.rotate(),
+        }
+    }
+}
+
+/// The batched environment server (see module docs).
+pub struct EnvBatch {
+    n: usize,
+    obs_floats: usize,
+    task: Task,
+    mode: Mode,
+    /// Step-t results the client reads from (always owned here).
+    front: StepBuffers,
+    /// The buffer the next submit will hand to the executor.
+    spare: Option<StepBuffers>,
+    /// Sync mode: the executed-but-not-consumed step result.
+    ready: Option<StepBuffers>,
+    /// Recycled action vector (avoids a per-step allocation).
+    actions_scratch: Option<Vec<u8>>,
+    inflight: bool,
+    timings: Arc<StepTimings>,
+    resident_bytes: usize,
+}
+
+impl EnvBatch {
+    /// Assemble sim + renderer + rotation, render the initial observation,
+    /// and start the driver thread when `cfg.overlap` is set. Called via
+    /// the [`EnvBatchConfig`] builders.
+    pub(super) fn build(
+        cfg: EnvBatchConfig,
+        scenes: Vec<Arc<SceneAsset>>,
+        rotation: Option<SceneRotation>,
+        pool: Arc<WorkerPool>,
+    ) -> Result<EnvBatch> {
+        let n = scenes.len();
+        let obs_floats = cfg.render.obs_floats();
+        let with_tex = cfg.render.sensor == Sensor::Rgb;
+        let resident_bytes = match &rotation {
+            Some(rot) => rot.resident_bytes(with_tex),
+            // No sharing bookkeeping: count every env's asset (Workers-arch
+            // semantics, where each env loads a private copy).
+            None => scenes.iter().map(|s| s.footprint_bytes(with_tex)).sum(),
+        };
+        let task = cfg.sim.task;
+        let sim = BatchSim::new(cfg.sim, scenes, cfg.seed);
+        let renderer = BatchRenderer::new(cfg.render, n);
+        let timings = Arc::new(StepTimings::default());
+        let mut world = EnvWorld {
+            sim,
+            renderer,
+            rotation,
+            pool,
+            timings: Arc::clone(&timings),
+        };
+        let mut front = StepBuffers::new(n, obs_floats);
+        world.render_initial(&mut front);
+        let mode = if cfg.overlap {
+            let (req_tx, req_rx) = channel();
+            let (resp_tx, resp_rx) = channel();
+            let driver = std::thread::Builder::new()
+                .name("env-batch-driver".into())
+                .spawn(move || driver_loop(world, req_rx, resp_tx))
+                .map_err(|e| anyhow!("spawn env driver thread: {e}"))?;
+            Mode::Pipelined {
+                req_tx: Some(req_tx),
+                resp_rx,
+                driver: Some(driver),
+            }
+        } else {
+            Mode::Sync(Box::new(world))
+        };
+        Ok(EnvBatch {
+            n,
+            obs_floats,
+            task,
+            mode,
+            front,
+            spare: Some(StepBuffers::new(n, obs_floats)),
+            ready: None,
+            actions_scratch: Some(Vec::with_capacity(n)),
+            inflight: false,
+            timings,
+            resident_bytes,
+        })
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.n
+    }
+
+    /// Floats per environment observation tile.
+    pub fn obs_floats(&self) -> usize {
+        self.obs_floats
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// True when steps run on the pipelined driver thread.
+    pub fn is_pipelined(&self) -> bool {
+        matches!(self.mode, Mode::Pipelined { .. })
+    }
+
+    /// Resident scene-asset footprint (the "GPU memory" budget input),
+    /// computed at build time.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// The current front buffer: observations + outcomes of the last
+    /// completed step (or the initial observation before any submit).
+    pub fn view(&self) -> StepView<'_> {
+        StepView {
+            obs: &self.front.obs,
+            goal: &self.front.out.goal_sensor,
+            rewards: &self.front.out.rewards,
+            dones: &self.front.out.dones,
+            successes: &self.front.out.successes,
+            spl: &self.front.out.spl,
+            scores: &self.front.out.scores,
+        }
+    }
+
+    /// Submit a batch of actions (`actions[i]` steps env `i`). In
+    /// pipelined mode this returns immediately while sim+render run on the
+    /// driver thread; consume the result through the returned handle. If a
+    /// previous step is still unconsumed (its handle was dropped), it is
+    /// drained first so the request order stays deterministic.
+    pub fn submit(&mut self, actions: &[u8]) -> Result<StepHandle<'_>> {
+        // validate before draining so a rejected submit is side-effect-free
+        if actions.len() != self.n {
+            bail!(
+                "submit: {} actions for {} environments",
+                actions.len(),
+                self.n
+            );
+        }
+        if self.inflight {
+            self.finish_step()?;
+        }
+        let mut act = self.actions_scratch.take().unwrap_or_default();
+        act.clear();
+        act.extend_from_slice(actions);
+        let mut buf = self.spare.take().expect("spare step buffer");
+        match &mut self.mode {
+            Mode::Sync(world) => {
+                world.exec_step(&act, &mut buf);
+                self.ready = Some(buf);
+                self.actions_scratch = Some(act);
+            }
+            Mode::Pipelined { req_tx, .. } => {
+                let sent = req_tx
+                    .as_ref()
+                    .expect("driver channel open")
+                    .send(Request::Step { actions: act, buf });
+                if let Err(std::sync::mpsc::SendError(req)) = sent {
+                    // recover the buffers so the batch stays usable
+                    if let Request::Step { actions, buf } = req {
+                        self.actions_scratch = Some(actions);
+                        self.spare = Some(buf);
+                    }
+                    bail!("env driver thread terminated");
+                }
+            }
+        }
+        self.inflight = true;
+        Ok(StepHandle { batch: self })
+    }
+
+    /// Convenience: submit and immediately wait (no overlap window).
+    pub fn step(&mut self, actions: &[u8]) -> Result<StepView<'_>> {
+        self.submit(actions)?.wait()
+    }
+
+    /// Apply pending scene-rotation swaps (BPS asset streaming, §3.2).
+    /// Executed in request order after any in-flight step; a no-op when
+    /// the batch was built without a rotation.
+    pub fn rotate_scenes(&mut self) -> Result<()> {
+        match &mut self.mode {
+            Mode::Sync(world) => {
+                world.rotate();
+                Ok(())
+            }
+            Mode::Pipelined { req_tx, .. } => req_tx
+                .as_ref()
+                .expect("driver channel open")
+                .send(Request::Rotate)
+                .map_err(|_| anyhow!("env driver thread terminated")),
+        }
+    }
+
+    /// Drain accumulated (simulation, rendering) wall time since the last
+    /// drain. In pipelined mode this reflects completed steps only.
+    pub fn drain_timings(&self) -> (Duration, Duration) {
+        self.timings.drain()
+    }
+
+    /// Receive the in-flight step and rotate it in as the new front.
+    fn finish_step(&mut self) -> Result<()> {
+        debug_assert!(self.inflight, "finish_step without an in-flight step");
+        let buf = match &mut self.mode {
+            Mode::Sync(_) => self.ready.take().expect("sync step result"),
+            Mode::Pipelined { resp_rx, .. } => {
+                let (buf, act) = resp_rx
+                    .recv()
+                    .map_err(|_| anyhow!("env driver thread terminated"))?;
+                self.actions_scratch = Some(act);
+                buf
+            }
+        };
+        let old_front = std::mem::replace(&mut self.front, buf);
+        self.spare = Some(old_front);
+        self.inflight = false;
+        Ok(())
+    }
+}
+
+impl Drop for EnvBatch {
+    fn drop(&mut self) {
+        if let Mode::Pipelined { req_tx, driver, .. } = &mut self.mode {
+            drop(req_tx.take()); // close the request channel
+            if let Some(h) = driver.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// An in-flight batch step. While it lives, sim+render of the submitted
+/// step may still be executing; [`current`](StepHandle::current) exposes
+/// the *previous* step's front buffer for overlapped bookkeeping, and
+/// [`wait`](StepHandle::wait) blocks until the new step is ready.
+pub struct StepHandle<'a> {
+    batch: &'a mut EnvBatch,
+}
+
+impl<'a> StepHandle<'a> {
+    /// The front buffer (step *t*) — valid while step *t+1* executes.
+    pub fn current(&self) -> StepView<'_> {
+        self.batch.view()
+    }
+
+    /// Block until the submitted step completes and view its results.
+    pub fn wait(self) -> Result<StepView<'a>> {
+        let batch = self.batch;
+        batch.finish_step()?;
+        Ok(batch.view())
+    }
+}
+
+/// Borrowed SoA results of one batch step: the observation megaframe
+/// (`[N, res, res, C]` f32), the GPS+compass goal sensor (`[N, 3]`), and
+/// the per-env outcome arrays (rewards / dones / successes / SPL / task
+/// scores — the "infos" of the step).
+#[derive(Clone, Copy)]
+pub struct StepView<'a> {
+    pub obs: &'a [f32],
+    pub goal: &'a [f32],
+    pub rewards: &'a [f32],
+    pub dones: &'a [bool],
+    pub successes: &'a [bool],
+    pub spl: &'a [f32],
+    pub scores: &'a [f32],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::render::RenderConfig;
+    use crate::scene::procgen::{generate, Complexity};
+    use crate::sim::{ACTION_FORWARD, ACTION_LEFT};
+
+    fn batch(n: usize, overlap: bool) -> EnvBatch {
+        let scene = Arc::new(generate("envb", 41, Complexity::test()));
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16))
+            .seed(11)
+            .overlap(overlap)
+            .build_with_scenes(
+                (0..n).map(|_| Arc::clone(&scene)).collect(),
+                Arc::new(WorkerPool::new(2)),
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn initial_view_is_rendered_and_goal_filled() {
+        let env = batch(3, false);
+        let v = env.view();
+        assert_eq!(v.obs.len(), 3 * env.obs_floats());
+        assert_eq!(v.goal.len(), 9);
+        // depth tiles are normalized to [0, 1] and goal dist is positive
+        assert!(v.obs.iter().all(|d| (0.0..=1.0).contains(d)));
+        assert!(v.goal[0] > 0.0);
+        assert!(!v.dones.iter().any(|&d| d));
+    }
+
+    #[test]
+    fn submit_wait_cycle_advances_state() {
+        for overlap in [false, true] {
+            let mut env = batch(2, overlap);
+            assert_eq!(env.is_pipelined(), overlap);
+            let obs0 = env.view().obs.to_vec();
+            let v = env.step(&[ACTION_FORWARD, ACTION_LEFT]).unwrap();
+            assert_eq!(v.rewards.len(), 2);
+            assert_ne!(v.obs, &obs0[..], "observation did not advance");
+            let (sim_d, render_d) = env.drain_timings();
+            assert!(sim_d > Duration::ZERO && render_d > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn overlap_window_keeps_front_readable() {
+        let mut env = batch(2, true);
+        let before = env.view().obs.to_vec();
+        let handle = env.submit(&[ACTION_FORWARD, ACTION_FORWARD]).unwrap();
+        // while step t+1 is in flight, the front buffer still serves step t
+        assert_eq!(handle.current().obs, &before[..]);
+        let v = handle.wait().unwrap();
+        assert_ne!(v.obs, &before[..]);
+    }
+
+    #[test]
+    fn dropped_handle_is_drained_on_next_submit() {
+        let mut env = batch(1, true);
+        let _ = env.submit(&[ACTION_FORWARD]).unwrap(); // dropped unconsumed
+        let v = env.step(&[ACTION_FORWARD]).unwrap();
+        assert_eq!(v.rewards.len(), 1);
+    }
+
+    #[test]
+    fn wrong_action_count_rejected() {
+        let mut env = batch(2, false);
+        assert!(env.submit(&[ACTION_FORWARD]).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! `EnvBatchConfig`: the builder for [`EnvBatch`](super::EnvBatch).
+//!
+//! Two scene sources cover every workload in the repo:
+//! - [`build_with_scenes`](EnvBatchConfig::build_with_scenes): an explicit
+//!   env → scene assignment (eval, Workers arch, tests, benches);
+//! - [`build_with_rotation`](EnvBatchConfig::build_with_rotation): the
+//!   K-slot [`SceneRotation`] with background asset streaming (BPS arch).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::render::{RenderConfig, SceneRotation};
+use crate::scene::SceneAsset;
+use crate::sim::{SimConfig, Task};
+use crate::util::pool::WorkerPool;
+
+use super::batch::EnvBatch;
+
+/// Everything needed to stand up one batched environment.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvBatchConfig {
+    /// Simulator parameters (task, step sizes, episode limits).
+    pub sim: SimConfig,
+    /// Renderer parameters (resolution, sensor, supersampling, pipeline).
+    pub render: RenderConfig,
+    /// Master seed for episode sampling across the batch.
+    pub seed: u64,
+    /// Double-buffered pipelined stepping: when true (default) a driver
+    /// thread overlaps simulation+rendering of step t+1 with the caller's
+    /// consumption of step t. When false, steps execute inline on the
+    /// caller thread. Output is bitwise-identical either way.
+    pub overlap: bool,
+}
+
+impl EnvBatchConfig {
+    /// Start a config for `task` with the given render settings.
+    pub fn new(task: Task, render: RenderConfig) -> EnvBatchConfig {
+        EnvBatchConfig {
+            sim: SimConfig::for_task(task),
+            render,
+            seed: 0,
+            overlap: true,
+        }
+    }
+
+    /// Override the full simulator config (custom step sizes / limits).
+    pub fn sim(mut self, sim: SimConfig) -> EnvBatchConfig {
+        self.sim = sim;
+        self
+    }
+
+    /// Set the batch seed.
+    pub fn seed(mut self, seed: u64) -> EnvBatchConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Enable/disable the pipelined double-buffered driver.
+    pub fn overlap(mut self, overlap: bool) -> EnvBatchConfig {
+        self.overlap = overlap;
+        self
+    }
+
+    /// Build over an explicit env → scene assignment (no rotation).
+    pub fn build_with_scenes(
+        self,
+        scenes: Vec<Arc<SceneAsset>>,
+        pool: Arc<WorkerPool>,
+    ) -> Result<EnvBatch> {
+        if scenes.is_empty() {
+            bail!("EnvBatch needs at least one environment");
+        }
+        EnvBatch::build(self, scenes, None, pool)
+    }
+
+    /// Build `n` environments over a K-slot scene rotation; the rotation's
+    /// background streamer keeps swapping fresh scenes in at episode
+    /// resets (drive it with [`EnvBatch::rotate_scenes`]).
+    pub fn build_with_rotation(
+        self,
+        rotation: SceneRotation,
+        n: usize,
+        pool: Arc<WorkerPool>,
+    ) -> Result<EnvBatch> {
+        if n == 0 {
+            bail!("EnvBatch needs at least one environment");
+        }
+        let scenes = rotation.assign(n);
+        EnvBatch::build(self, scenes, Some(rotation), pool)
+    }
+}

@@ -1,0 +1,40 @@
+//! First-class batched environment API (paper §3, Fig. 2).
+//!
+//! The paper's core systems contribution is an *API shape*: a simulator
+//! that "accepts and executes large batches of requests simultaneously".
+//! This module is that surface. A client builds an [`EnvBatch`] from an
+//! [`EnvBatchConfig`], then drives it with a request/response step cycle:
+//!
+//! ```ignore
+//! let mut env = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(64))
+//!     .seed(7)
+//!     .build_with_scenes(scenes, pool)?;
+//! loop {
+//!     let actions = policy(env.view());          // inference on step t
+//!     let handle = env.submit(&actions)?;        // sim+render of t+1 starts
+//!     record(handle.current());                  // overlapped bookkeeping
+//!     let view = handle.wait()?;                 // step t+1 observations
+//! }
+//! ```
+//!
+//! [`EnvBatch`] owns the `BatchSim` + `BatchRenderer` + `SceneRotation`
+//! triple and internally **double-buffers**: in the default pipelined mode
+//! a driver thread executes simulation + rendering of step *t+1* on the
+//! worker pool while the caller is still consuming step *t* from the front
+//! buffer (the paper's pipelined-overlap design, Fig. 2). Buffers are
+//! *moved* between the caller and the driver through channels, so the
+//! overlap requires no shared mutable state. The synchronous mode
+//! (`overlap(false)`) executes steps inline on the caller thread and is
+//! bitwise-identical in output for the same seed, action stream, and
+//! scene-rotation schedule — see `rust/tests/env_batch.rs`.
+//!
+//! The RL `Coordinator` and the eval loop are pure clients of this API;
+//! heterogeneous workloads (PointNav / Flee / Explore per shard) are
+//! expressed as independently configured `EnvBatch` instances sharing one
+//! `WorkerPool`.
+
+pub mod batch;
+pub mod config;
+
+pub use batch::{EnvBatch, StepHandle, StepView};
+pub use config::EnvBatchConfig;

@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod env;
 pub mod geom;
 pub mod metrics;
 pub mod optim;

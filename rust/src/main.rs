@@ -5,6 +5,13 @@
 //!   train         end-to-end RL training (paper Fig. 2 loop)
 //!   eval          evaluate a checkpoint on a dataset split
 //!   info          print manifest / artifact information
+//!   help          describe the batched environment API + all options
+//!
+//! Training and eval drive environments through the `bps::env` batched
+//! request/response API: each shard is an `EnvBatch` the coordinator
+//! steps with `submit(actions) → StepHandle::wait() → StepView`, with
+//! simulation+rendering of the next step double-buffered against the
+//! caller (disable with `--overlap false`).
 
 use std::path::PathBuf;
 
@@ -26,18 +33,71 @@ fn main() {
 
 fn run() -> Result<()> {
     let mut args = Args::from_env()?;
+    if args.flag("help") {
+        print_help();
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         Some("gen-dataset") => gen_dataset(&mut args),
         Some("train") => train(&mut args),
         Some("eval") => eval(&mut args),
         Some("info") => info(&mut args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|info> [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|info|help> [--key value ...]"
             )
         }
     }
+}
+
+fn print_help() {
+    println!(
+        "\
+bps — Batch Processing Simulator (Large Batch Simulation for Deep RL)
+
+USAGE:  bps <subcommand> [--key value | --key=value | --flag] ...
+
+SUBCOMMANDS
+  gen-dataset  generate a procedural scene dataset with train/val/test splits
+               (--dir PATH --train N --val N --test N --complexity gibson|thor|test --seed S)
+  train        end-to-end RL training, the paper's Fig. 2 loop
+               (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K)
+  eval         greedy evaluation on a dataset split
+               (--checkpoint ckpt.bin --split val --episodes N)
+  info         print the AOT artifact manifest (--artifacts-dir PATH)
+  help         this text
+
+ENVIRONMENT API
+  Training and eval step environments through the batched request/response
+  surface in bps::env (the paper's core design): the coordinator builds one
+  EnvBatch per shard via EnvBatchConfig, submits a batch of actions with
+  EnvBatch::submit, and receives the next observations / rewards / dones as
+  borrowed SoA slices from StepHandle::wait. The EnvBatch owns the batch
+  simulator, batch renderer and scene rotation, and double-buffers so
+  simulation+rendering of step t+1 overlaps consumption of step t.
+
+SHARED TRAINING OPTIONS (CLI overrides the TOML config)
+  --variant NAME        AOT model variant (depth64, rgb64, r50_depth128, ...)
+  --artifacts-dir PATH  AOT artifact directory        --dataset PATH  scene dataset
+  --arch bps|workers    simulation architecture (Table 1 rows)
+  --pipeline fused|pipelined   renderer culling/raster pipeline mode
+  --overlap true|false  double-buffered pipelined env stepping (default true;
+                        false = synchronous — bitwise-identical rollouts when
+                        the scene-rotation schedule matches, e.g. --k-scenes
+                        equal to the train-split size)
+  --envs N --rollout-len L --minibatches M --ppo-epochs E --shards S
+  --k-scenes K          resident scene slots (N:K <= 32 sharing cap)
+  --task NAME           pointnav | flee | explore
+  --tasks a,b,...       heterogeneous per-shard tasks, round-robin over shards
+  --optimizer lamb|adam --lr X --lr-scaling BOOL --gamma X --gae-lambda X
+  --normalize-adv BOOL  --frames N --seed S --threads T --out DIR
+  --render-scale K      supersampling factor   --memory-mb MB  accelerator budget"
+    );
 }
 
 fn gen_dataset(args: &mut Args) -> Result<()> {

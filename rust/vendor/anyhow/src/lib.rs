@@ -1,0 +1,193 @@
+//! Vendored minimal re-implementation of the `anyhow` API surface used by
+//! this workspace. The container/CI environment builds with no registry
+//! access, so the crate is a path dependency providing exactly what the
+//! codebase needs: `Error`, `Result`, `Context`, `anyhow!`, `bail!`.
+//!
+//! Differences from upstream anyhow: the error chain is flattened to
+//! strings at construction time (no downcasting, no backtraces). Display
+//! prints the outermost message; `{:#}` prints the full `a: b: c` chain;
+//! Debug prints the multi-line "Caused by:" form, matching what callers
+//! (`eprintln!("{e:#}")`, `fn main() -> anyhow::Result<()>`) expect.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default type parameter as
+/// upstream, so `Result<T>` and `Result<T, E>` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: `chain[0]` is the outermost context message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    fn from_std<E: StdError + ?Sized>(err: &E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket `From` below and the two `Context` impls
+// coherent (same trick as upstream anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+/// Attach context to a `Result` or `Option`, producing `anyhow::Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted `Error`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted `Error` when a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u8>.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            ensure!(x != 1, "one is banned");
+            Ok(x)
+        }
+        assert!(f(2).is_ok());
+        assert_eq!(format!("{:#}", f(-3).unwrap_err()), "negative: -3");
+        assert_eq!(format!("{:#}", f(1).unwrap_err()), "one is banned");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+}
