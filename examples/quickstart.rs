@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in two acts.
+//! Quickstart: the smallest end-to-end BPS run, in three acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -6,7 +6,13 @@
 //! through the pipelined `submit → wait` cycle (simulation+rendering of
 //! step t+1 overlaps consumption of step t via double buffering).
 //!
-//! Act 2 needs the AOT artifacts (`make artifacts`): it loads the `test`
+//! Act 2 shows the multi-client serving layer (`bps::serve`): a
+//! `SimServer` puts the same batch behind a session front door, two
+//! client threads each lease half the env slots with `connect`, and the
+//! per-shard coalescer assembles their partial submissions into full
+//! batch steps — one `EnvBatch::submit` serving both tenants.
+//!
+//! Act 3 needs the AOT artifacts (`make artifacts`): it loads the `test`
 //! model variant, trains a handful of PPO iterations through the
 //! coordinator (a pure client of the same `EnvBatch` API), and prints the
 //! FPS + runtime breakdown.
@@ -20,6 +26,7 @@ use bps::coordinator::Coordinator;
 use bps::env::EnvBatchConfig;
 use bps::render::RenderConfig;
 use bps::scene::Dataset;
+use bps::serve::{ShardSpec, SimServer};
 use bps::sim::{Task, NUM_ACTIONS};
 use bps::util::pool::WorkerPool;
 
@@ -53,16 +60,61 @@ fn main() -> anyhow::Result<()> {
         render_d.as_secs_f64() * 1e3
     );
 
-    // -- Act 2: PPO training through the same API (needs `make artifacts`) --
-    let mut cfg = Config::default();
-    cfg.variant = "test".into();
-    cfg.artifacts_dir = bps::bench::artifacts_dir();
-    cfg.dataset_dir = ds_dir;
-    cfg.num_envs = 4;
-    cfg.rollout_len = 4;
-    cfg.num_minibatches = 2;
-    cfg.k_scenes = 2;
-    cfg.total_frames = 320;
+    // -- Act 2: two clients multiplexed onto one shard (bps::serve) ---------
+    println!("== SimServer quickstart: 2 clients x 4 envs on one shard ==");
+    let serve_pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+    let shard = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(7),
+        (0..8).map(|_| Arc::clone(&scene)).collect(),
+    );
+    let server = SimServer::start(vec![shard], serve_pool)?;
+    // lease 4 slots each *before* spawning, so the first coalesced step
+    // already includes both tenants
+    let sessions = [
+        server.connect(Task::PointNav, 4)?,
+        server.connect(Task::PointNav, 4)?,
+    ];
+    std::thread::scope(|sc| {
+        for (c, mut session) in sessions.into_iter().enumerate() {
+            sc.spawn(move || {
+                let mut reward = 0.0f32;
+                for t in 0..32usize {
+                    // partial batch: 4 of the shard's 8 actions; the
+                    // coalescer steps once both sessions have submitted
+                    let actions: Vec<u8> = (0..4).map(|i| (1 + (t + c + i) % 3) as u8).collect();
+                    let view = session.step(&actions).expect("served step");
+                    reward += view.rewards.iter().sum::<f32>();
+                }
+                let (p50, p95) = session.latency();
+                println!(
+                    "client {c}: 32 steps x 4 envs, reward {reward:+.2}, \
+                     step latency p50 {:.2} ms / p95 {:.2} ms",
+                    p50 * 1e3,
+                    p95 * 1e3
+                );
+            });
+        }
+    });
+    for st in server.stats() {
+        println!(
+            "shard: {} coalesced batch steps served for both clients\n",
+            st.steps
+        );
+    }
+    drop(server);
+
+    // -- Act 3: PPO training through the same API (needs `make artifacts`) --
+    let cfg = Config {
+        variant: "test".into(),
+        artifacts_dir: bps::bench::artifacts_dir(),
+        dataset_dir: ds_dir,
+        num_envs: 4,
+        rollout_len: 4,
+        num_minibatches: 2,
+        k_scenes: 2,
+        total_frames: 320,
+        ..Config::default()
+    };
 
     println!("== BPS quickstart: PointGoalNav, 4 envs, tiny SE-ResNet9 ==");
     let mut coord = match Coordinator::new(cfg) {

@@ -22,16 +22,18 @@ fn main() -> anyhow::Result<()> {
     let eval_episodes = args.usize_or("eval-episodes", 32)?;
     let curve_path = args.opt_or("curve", "runs/train_pointnav_curve.csv");
 
-    let mut cfg = Config::default();
-    cfg.variant = "depth64".into();
-    cfg.artifacts_dir = bps::bench::artifacts_dir();
-    cfg.dataset_dir = bps::bench::ensure_dataset("gibson", 8)?;
-    cfg.num_envs = 64;
-    cfg.rollout_len = 32;
-    cfg.num_minibatches = 2;
-    cfg.k_scenes = 4;
-    cfg.total_frames = frames;
-    cfg.memory_budget_mb = 16 * 1024;
+    let mut cfg = Config {
+        variant: "depth64".into(),
+        artifacts_dir: bps::bench::artifacts_dir(),
+        dataset_dir: bps::bench::ensure_dataset("gibson", 8)?,
+        num_envs: 64,
+        rollout_len: 32,
+        num_minibatches: 2,
+        k_scenes: 4,
+        total_frames: frames,
+        memory_budget_mb: 16 * 1024,
+        ..Config::default()
+    };
     cfg.apply_args(&mut args)?;
     cfg.validate()?;
 

@@ -1,0 +1,95 @@
+//! Serving-layer overhead bench: aggregate FPS at full occupancy through
+//! the `bps::serve` multi-tenant layer vs direct `EnvBatch` stepping,
+//! swept over client count × envs-per-client, plus per-client step
+//! latency percentiles (p50/p95). The coalescer + snapshot-publish cost
+//! is bounded when `ratio` stays near 1.0.
+
+use std::sync::Arc;
+
+use bps::bench::{bench_iters, dataset};
+use bps::env::EnvBatchConfig;
+use bps::render::RenderConfig;
+use bps::serve::{ShardSpec, SimServer, StragglerPolicy};
+use bps::sim::{Task, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const RES: usize = 64;
+
+fn actions_at(t: usize, offset: usize, n: usize) -> Vec<u8> {
+    (0..n)
+        .map(|i| (1 + (t + offset + i) % (NUM_ACTIONS - 1)) as u8)
+        .collect()
+}
+
+fn main() {
+    let (warmup, iters) = bench_iters(10, 100);
+    let ds = dataset("gibson").expect("dataset");
+    let scene = Arc::new(ds.load_scene(&ds.train[0], false).expect("scene"));
+    let steps = warmup + iters;
+    println!("# SimServer coalescing overhead vs direct EnvBatch ({steps} steps, depth {RES})");
+    // avg_p50 = mean of per-client p50s; max_p95 = worst client's p95
+    println!(
+        "{:>8} {:>7} {:>6} {:>11} {:>11} {:>7} {:>10} {:>10}",
+        "clients", "envs/c", "N", "direct_fps", "served_fps", "ratio", "avg_p50_ms", "max_p95_ms"
+    );
+    for clients in [1usize, 2, 4, 8] {
+        for epc in [8usize, 32] {
+            let n = clients * epc;
+            let pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+            let cfg = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(RES))
+                .seed(2024)
+                .overlap(false);
+
+            // Baseline: one caller driving the whole batch directly.
+            let mut direct = cfg
+                .build_with_scenes(
+                    (0..n).map(|_| Arc::clone(&scene)).collect(),
+                    Arc::clone(&pool),
+                )
+                .expect("direct batch");
+            let t0 = std::time::Instant::now();
+            for t in 0..steps {
+                direct.step(&actions_at(t, 0, n)).expect("direct step");
+            }
+            let direct_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
+            drop(direct);
+
+            // Served: same batch behind SimServer, `clients` sessions at
+            // full occupancy, each driven from its own thread.
+            let spec = ShardSpec::with_scenes(cfg, (0..n).map(|_| Arc::clone(&scene)).collect())
+                .straggler(StragglerPolicy::Wait);
+            let srv = SimServer::start(vec![spec], Arc::clone(&pool)).expect("server");
+            let sessions: Vec<_> = (0..clients)
+                .map(|_| srv.connect(Task::PointNav, epc).expect("connect"))
+                .collect();
+            let t0 = std::time::Instant::now();
+            let lats: Vec<(f32, f32)> = std::thread::scope(|sc| {
+                let handles: Vec<_> = sessions
+                    .into_iter()
+                    .enumerate()
+                    .map(|(c, mut session)| {
+                        sc.spawn(move || {
+                            for t in 0..steps {
+                                session
+                                    .step(&actions_at(t, c, epc))
+                                    .expect("served step");
+                            }
+                            session.latency()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let served_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
+            let p50 = lats.iter().map(|l| l.0).sum::<f32>() / lats.len() as f32;
+            let p95 = lats.iter().map(|l| l.1).fold(0.0f32, f32::max);
+            println!(
+                "{clients:>8} {epc:>7} {n:>6} {direct_fps:>11.0} {served_fps:>11.0} \
+                 {:>7.3} {:>10.2} {:>10.2}",
+                served_fps / direct_fps,
+                p50 * 1e3,
+                p95 * 1e3
+            );
+        }
+    }
+}

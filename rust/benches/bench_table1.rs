@@ -23,33 +23,31 @@ fn main() {
         for row in table1_rows(sensor, shards) {
             if row.cfg.variant.starts_with("r50") && !bps::bench::bench_full() {
                 println!(
-                    "{:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
-                    sensor, row.system
+                    "{sensor:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
+                    row.system
                 );
                 continue;
             }
             if !bps::bench::have_variant(&row.cfg.variant) {
                 println!(
-                    "{:<8} {:<10} (skipped: export preset {} first)",
-                    sensor, row.system, row.cfg.variant
+                    "{sensor:<8} {:<10} (skipped: export preset {} first)",
+                    row.system, row.cfg.variant
                 );
                 continue;
             }
             let n = row.cfg.num_envs;
             match measure_fps(row.cfg.clone(), &dir, warmup, iters) {
                 Ok(r) => println!(
-                    "{:<8} {:<10} {:<11} {:>4} {:>6} {:>10.0} {:>8.1} {:>8.1} {:>8.1}",
-                    sensor,
+                    "{sensor:<8} {:<10} {:<11} {:>4} {n:>6} {:>10.0} {:>8.1} {:>8.1} {:>8.1}",
                     row.system,
                     row.cnn,
                     row.res,
-                    n,
                     r.fps,
                     r.breakdown.0,
                     r.breakdown.1,
                     r.breakdown.2
                 ),
-                Err(e) => println!("{:<8} {:<10} error: {e:#}", sensor, row.system),
+                Err(e) => println!("{sensor:<8} {:<10} error: {e:#}", row.system),
             }
         }
     }

@@ -31,14 +31,16 @@ fn main() {
             println!("(skipped {variant}: export the preset first)");
             continue;
         }
-        let mut cfg = Config::default();
-        cfg.variant = variant.into();
-        cfg.num_envs = n;
-        cfg.rollout_len = l;
-        cfg.num_minibatches = mb;
-        cfg.render_scale = scale;
-        cfg.k_scenes = 4;
-        cfg.memory_budget_mb = 16 * 1024;
+        let cfg = Config {
+            variant: variant.into(),
+            num_envs: n,
+            rollout_len: l,
+            num_minibatches: mb,
+            render_scale: scale,
+            k_scenes: 4,
+            memory_budget_mb: 16 * 1024,
+            ..Config::default()
+        };
         let sensor = if variant.contains("rgb") { "rgb" } else { "depth" };
         match measure_fps(cfg, &dir, warmup, iters) {
             Ok(r) => println!("{sensor:<8} {system:<10} {res:>4} {n:>6} {:>10.0}", r.fps),

@@ -19,8 +19,8 @@ fn main() {
         for row in table1_rows(sensor, 1) {
             if row.cfg.variant.starts_with("r50") && !bps::bench::bench_full() {
                 println!(
-                    "{:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
-                    sensor, row.system
+                    "{sensor:<8} {:<10} (heavy row skipped; set BPS_BENCH_FULL=1)",
+                    row.system
                 );
                 continue;
             }
@@ -33,11 +33,11 @@ fn main() {
                     let (s, i, l) = r.breakdown;
                     let dnn = (i + l) / (s + i + l).max(1e-9) * 100.0;
                     println!(
-                        "{:<8} {:<10} {:<11} {:>10.1} {:>10.1} {:>10.1} {:>6.0}%",
-                        sensor, row.system, row.cnn, s, i, l, dnn
+                        "{sensor:<8} {:<10} {:<11} {s:>10.1} {i:>10.1} {l:>10.1} {dnn:>6.0}%",
+                        row.system, row.cnn
                     );
                 }
-                Err(e) => println!("{:<8} {:<10} error: {e:#}", sensor, row.system),
+                Err(e) => println!("{sensor:<8} {:<10} error: {e:#}", row.system),
             }
         }
     }

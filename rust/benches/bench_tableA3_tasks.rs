@@ -39,9 +39,8 @@ fn main() {
         }
         let fps = frames as f64 / t0.elapsed().as_secs_f64();
         println!(
-            "{:<10} {:>10.0} {:>14.2}",
+            "{:<10} {fps:>10.0} {:>14.2}",
             format!("{task:?}"),
-            fps,
             coord.stats.score.mean()
         );
     }

@@ -4,7 +4,7 @@
 //! measurement per the paper's methodology (§4.1: samples of experience
 //! over rollout-generation + training wall time).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
@@ -57,21 +57,20 @@ pub fn table1_rows(sensor: &str, shards: usize) -> Vec<SystemRow> {
               l: usize,
               mb: usize,
               epochs: usize,
-              scale: usize| {
-        let mut cfg = Config::default();
-        cfg.variant = variant.to_string();
-        cfg.arch = arch;
-        cfg.num_envs = n;
-        cfg.rollout_len = l;
-        cfg.num_minibatches = mb;
-        cfg.ppo_epochs = epochs;
-        cfg.shards = shards;
-        cfg.k_scenes = 4;
-        cfg.render_scale = scale;
-        cfg.complexity = "gibson".into();
-        cfg.memory_budget_mb = 16 * 1024;
-        cfg.total_frames = u64::MAX; // bench loops control iteration count
-        cfg
+              scale: usize| Config {
+        variant: variant.to_string(),
+        arch,
+        num_envs: n,
+        rollout_len: l,
+        num_minibatches: mb,
+        ppo_epochs: epochs,
+        shards,
+        k_scenes: 4,
+        render_scale: scale,
+        complexity: "gibson".into(),
+        memory_budget_mb: 16 * 1024,
+        total_frames: u64::MAX, // bench loops control iteration count
+        ..Config::default()
     };
     let se9 = if rgb { "rgb64" } else { "depth64" };
     let r50 = if rgb { "r50_rgb128" } else { "r50_depth128" };
@@ -114,9 +113,9 @@ pub struct FpsResult {
 
 /// Run `iters` training iterations (after `warmup`) and report FPS +
 /// the Fig. 5 / Table A2 runtime breakdown.
-pub fn measure_fps(mut cfg: Config, dataset_dir: &PathBuf, warmup: usize, iters: usize)
+pub fn measure_fps(mut cfg: Config, dataset_dir: &Path, warmup: usize, iters: usize)
     -> Result<FpsResult> {
-    cfg.dataset_dir = dataset_dir.clone();
+    cfg.dataset_dir = dataset_dir.to_path_buf();
     let mut coord = Coordinator::new(cfg)?;
     for _ in 0..warmup {
         coord.train_iteration()?;
@@ -145,17 +144,18 @@ pub fn measure_fps(mut cfg: Config, dataset_dir: &PathBuf, warmup: usize, iters:
 /// Task-specific config for the Flee/Explore rows (Table A3): thor-like
 /// scenes, depth sensor.
 pub fn taskrow_config(task: Task) -> Config {
-    let mut cfg = Config::default();
-    cfg.variant = "depth64".into();
-    cfg.task = task;
-    cfg.num_envs = 64;
-    cfg.rollout_len = 32;
-    cfg.num_minibatches = 2;
-    cfg.k_scenes = 4;
-    cfg.complexity = "thor".into();
-    cfg.memory_budget_mb = 16 * 1024;
-    cfg.total_frames = u64::MAX;
-    cfg
+    Config {
+        variant: "depth64".into(),
+        task,
+        num_envs: 64,
+        rollout_len: 32,
+        num_minibatches: 2,
+        k_scenes: 4,
+        complexity: "thor".into(),
+        memory_budget_mb: 16 * 1024,
+        total_frames: u64::MAX,
+        ..Config::default()
+    }
 }
 
 /// Bench iteration counts, overridable: BPS_BENCH_ITERS=warmup,measure

@@ -64,9 +64,16 @@ pub struct Config {
     /// `--overlap false` selects the synchronous path; given the same
     /// scene-rotation schedule the two produce bitwise-identical
     /// rollouts (see rust/tests/env_batch.rs). Active rotation prefetch
-    /// swaps scenes at wall-clock-dependent iterations in *both* modes,
-    /// so pin `k_scenes` to the train-split size for exact A/B runs.
+    /// swaps scenes at wall-clock-dependent iterations in *both* modes;
+    /// for exact A/B runs either set `--rotate-every` (below) or pin
+    /// `k_scenes` to the train-split size.
     pub overlap: bool,
+    /// `--rotate-every K` pins the scene-rotation schedule to iteration
+    /// counts: every K-th training iteration performs exactly one
+    /// blocking slot swap instead of polling the prefetch, making runs
+    /// reproducible with prefetch active. `None` (0 on the CLI) keeps
+    /// the non-blocking wall-clock behavior.
+    pub rotate_every: Option<u64>,
     // optimization (paper Table A4)
     pub optimizer: String, // "lamb" | "adam"
     pub base_lr: f32,
@@ -103,6 +110,7 @@ impl Default for Config {
             task: Task::PointNav,
             tasks: Vec::new(),
             overlap: true,
+            rotate_every: None,
             optimizer: "lamb".into(),
             base_lr: 2.5e-4,
             lr_scaling: true,
@@ -179,7 +187,8 @@ impl Config {
         for key in [
             "variant", "artifacts-dir", "dataset", "complexity", "arch", "pipeline",
             "envs", "rollout-len", "minibatches", "ppo-epochs", "shards", "k-scenes",
-            "task", "tasks", "overlap", "optimizer", "lr", "lr-scaling", "gamma", "gae-lambda",
+            "task", "tasks", "overlap", "rotate-every", "optimizer", "lr", "lr-scaling",
+            "gamma", "gae-lambda",
             "normalize-adv", "frames", "seed", "threads", "out", "render-scale",
             "memory-mb",
         ] {
@@ -228,6 +237,12 @@ impl Config {
                     .collect::<Result<Vec<_>>>()?
             }
             "overlap" => self.overlap = v.parse()?,
+            "rotate_every" => {
+                self.rotate_every = match v.parse::<u64>()? {
+                    0 => None,
+                    k => Some(k),
+                }
+            }
             "optimizer" => self.optimizer = v.into(),
             "lr" | "base_lr" => self.base_lr = v.parse()?,
             "lr_scaling" => self.lr_scaling = v.parse()?,
@@ -353,6 +368,20 @@ mod tests {
         // bad task rejected
         let mut cfg = Config::default();
         assert!(cfg.set("tasks", "pointnav,swim").is_err());
+    }
+
+    #[test]
+    fn rotate_every_parses_with_zero_meaning_off() {
+        let argv: Vec<String> = "train --rotate-every 3"
+            .split_whitespace()
+            .map(str::to_string)
+            .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let cfg = Config::load(None, &mut args).unwrap();
+        assert_eq!(cfg.rotate_every, Some(3));
+        let mut cfg = Config::default();
+        cfg.set("rotate_every", "0").unwrap();
+        assert_eq!(cfg.rotate_every, None);
     }
 
     #[test]

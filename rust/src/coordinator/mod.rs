@@ -181,8 +181,7 @@ impl Coordinator {
     /// the outcomes.
     pub fn train_iteration(&mut self) -> Result<IterStats> {
         let l = self.cfg.rollout_len;
-        for si in 0..self.shards.len() {
-            let shard = &mut self.shards[si];
+        for shard in self.shards.iter_mut() {
             shard
                 .rollout
                 .begin(&shard.policy.h, &shard.policy.c, &shard.last_dones);
@@ -337,9 +336,12 @@ fn build_shard(
     ids.rotate_left(shift);
 
     let rcfg = render_cfg(cfg, variant);
-    let ecfg = EnvBatchConfig::new(cfg.task_of_shard(shard_idx), rcfg)
+    let mut ecfg = EnvBatchConfig::new(cfg.task_of_shard(shard_idx), rcfg)
         .seed(cfg.seed.wrapping_add(shard_idx as u64 * 7919))
         .overlap(cfg.overlap);
+    if let Some(every) = cfg.rotate_every {
+        ecfg = ecfg.pin_rotation(every);
+    }
     let env = match cfg.arch {
         SimArch::Bps => {
             let rot = SceneRotation::new(dataset.clone(), ids, cfg.k_scenes, with_tex)?;

@@ -23,8 +23,9 @@
 //! independent of worker count and scheduling, so pipelined and
 //! synchronous stepping produce bitwise-identical tensors for the same
 //! seed, action sequence, and scene-rotation schedule (asserted in
-//! `rust/tests/env_batch.rs`; an active rotation prefetch swaps scenes
-//! at wall-clock-dependent resets in either mode).
+//! `rust/tests/env_batch.rs`). An active rotation prefetch swaps scenes
+//! at wall-clock-dependent iterations in either mode unless the schedule
+//! is pinned to call counts via [`EnvBatchConfig::pin_rotation`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -126,9 +127,13 @@ impl EnvWorld {
         self.render(&mut buf.obs);
     }
 
-    fn rotate(&mut self) {
+    fn rotate(&mut self, pinned: bool) {
         if let Some(rot) = self.rotation.as_mut() {
-            rot.rotate(&mut self.sim);
+            if pinned {
+                rot.rotate_pinned(&mut self.sim);
+            } else {
+                rot.rotate(&mut self.sim);
+            }
         }
     }
 }
@@ -136,7 +141,7 @@ impl EnvWorld {
 /// Requests the client sends to the step executor, in order.
 enum Request {
     Step { actions: Vec<u8>, buf: StepBuffers },
-    Rotate,
+    Rotate { pinned: bool },
 }
 
 /// Completed step: the filled buffer plus the recycled action vector.
@@ -162,7 +167,7 @@ fn driver_loop(mut world: EnvWorld, req_rx: Receiver<Request>, resp_tx: Sender<R
                     return; // client dropped mid-step; shut down
                 }
             }
-            Request::Rotate => world.rotate(),
+            Request::Rotate { pinned } => world.rotate(pinned),
         }
     }
 }
@@ -184,6 +189,10 @@ pub struct EnvBatch {
     inflight: bool,
     timings: Arc<StepTimings>,
     resident_bytes: usize,
+    /// `Some(k)`: pinned rotation schedule — every k-th `rotate_scenes`
+    /// call performs one blocking swap (`EnvBatchConfig::pin_rotation`).
+    rotate_every: Option<u64>,
+    rotate_calls: u64,
 }
 
 impl EnvBatch {
@@ -245,6 +254,8 @@ impl EnvBatch {
             inflight: false,
             timings,
             resident_bytes,
+            rotate_every: cfg.rotate_every,
+            rotate_calls: 0,
         })
     }
 
@@ -339,17 +350,30 @@ impl EnvBatch {
 
     /// Apply pending scene-rotation swaps (BPS asset streaming, §3.2).
     /// Executed in request order after any in-flight step; a no-op when
-    /// the batch was built without a rotation.
+    /// the batch was built without a rotation. With a pinned schedule
+    /// (`EnvBatchConfig::pin_rotation(k)`) every k-th call performs one
+    /// blocking swap and the rest do nothing, so the swap iterations are
+    /// a pure function of the call count — reproducible across A/B runs.
     pub fn rotate_scenes(&mut self) -> Result<()> {
+        let pinned = match self.rotate_every {
+            Some(every) => {
+                self.rotate_calls += 1;
+                if self.rotate_calls % every != 0 {
+                    return Ok(());
+                }
+                true
+            }
+            None => false,
+        };
         match &mut self.mode {
             Mode::Sync(world) => {
-                world.rotate();
+                world.rotate(pinned);
                 Ok(())
             }
             Mode::Pipelined { req_tx, .. } => req_tx
                 .as_ref()
                 .expect("driver channel open")
-                .send(Request::Rotate)
+                .send(Request::Rotate { pinned })
                 .map_err(|_| anyhow!("env driver thread terminated")),
         }
     }

@@ -31,6 +31,14 @@ pub struct EnvBatchConfig {
     /// consumption of step t. When false, steps execute inline on the
     /// caller thread. Output is bitwise-identical either way.
     pub overlap: bool,
+    /// Pin the scene-rotation schedule to call counts: `Some(k)` makes
+    /// every k-th [`EnvBatch::rotate_scenes`](super::EnvBatch::rotate_scenes)
+    /// call perform exactly one *blocking* slot swap (waiting for the
+    /// prefetched asset), all other calls a no-op. `None` (default) keeps
+    /// the non-blocking poll, whose swap iteration depends on load
+    /// latency. Pinning makes pipelined-vs-sync A/B runs exactly
+    /// reproducible with prefetch active.
+    pub rotate_every: Option<u64>,
 }
 
 impl EnvBatchConfig {
@@ -41,6 +49,7 @@ impl EnvBatchConfig {
             render,
             seed: 0,
             overlap: true,
+            rotate_every: None,
         }
     }
 
@@ -59,6 +68,13 @@ impl EnvBatchConfig {
     /// Enable/disable the pipelined double-buffered driver.
     pub fn overlap(mut self, overlap: bool) -> EnvBatchConfig {
         self.overlap = overlap;
+        self
+    }
+
+    /// Pin the rotation schedule: every `every`-th `rotate_scenes` call
+    /// performs one blocking slot swap (see the `rotate_every` field).
+    pub fn pin_rotation(mut self, every: u64) -> EnvBatchConfig {
+        self.rotate_every = Some(every.max(1));
         self
     }
 

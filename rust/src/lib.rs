@@ -19,5 +19,6 @@ pub mod navmesh;
 pub mod render;
 pub mod runtime;
 pub mod scene;
+pub mod serve;
 pub mod sim;
 pub mod util;

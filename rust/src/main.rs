@@ -4,6 +4,7 @@
 //!   gen-dataset   generate a procedural scene dataset with splits
 //!   train         end-to-end RL training (paper Fig. 2 loop)
 //!   eval          evaluate a checkpoint on a dataset split
+//!   serve-demo    multi-client serving demo over the SimServer layer
 //!   info          print manifest / artifact information
 //!   help          describe the batched environment API + all options
 //!
@@ -41,6 +42,7 @@ fn run() -> Result<()> {
         Some("gen-dataset") => gen_dataset(&mut args),
         Some("train") => train(&mut args),
         Some("eval") => eval(&mut args),
+        Some("serve-demo") => serve_demo(&mut args),
         Some("info") => info(&mut args),
         Some("help") | None => {
             print_help();
@@ -49,7 +51,7 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|info|help> [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|serve-demo|info|help> [--key value ...]"
             )
         }
     }
@@ -69,6 +71,12 @@ SUBCOMMANDS
                (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K)
   eval         greedy evaluation on a dataset split
                (--checkpoint ckpt.bin --split val --episodes N)
+  serve-demo   drive M concurrent synthetic clients through the SimServer
+               multi-tenant serving layer (bps::serve) and report aggregate
+               FPS, occupancy, and per-client step-latency p50/p95
+               (--clients M --envs-per-client E --steps T --shards S
+                --task NAME --res R --straggler wait|noop|repeat
+                --deadline-ticks K --threads T --seed S)
   info         print the AOT artifact manifest (--artifacts-dir PATH)
   help         this text
 
@@ -81,6 +89,13 @@ ENVIRONMENT API
   simulator, batch renderer and scene rotation, and double-buffers so
   simulation+rendering of step t+1 overlaps consumption of step t.
 
+  Multi-client traffic goes through bps::serve (see serve-demo): a
+  SimServer owns N EnvBatch shards sharing one worker pool; clients
+  connect(task, n_envs) to lease env slots, submit partial action
+  batches, and wait on tickets for their slice of each coalesced batch
+  step — so one EnvBatch step serves many tenants and the paper's
+  amortization survives multi-tenancy.
+
 SHARED TRAINING OPTIONS (CLI overrides the TOML config)
   --variant NAME        AOT model variant (depth64, rgb64, r50_depth128, ...)
   --artifacts-dir PATH  AOT artifact directory        --dataset PATH  scene dataset
@@ -88,8 +103,11 @@ SHARED TRAINING OPTIONS (CLI overrides the TOML config)
   --pipeline fused|pipelined   renderer culling/raster pipeline mode
   --overlap true|false  double-buffered pipelined env stepping (default true;
                         false = synchronous — bitwise-identical rollouts when
-                        the scene-rotation schedule matches, e.g. --k-scenes
-                        equal to the train-split size)
+                        the scene-rotation schedule matches)
+  --rotate-every K      pin the scene-rotation schedule: one blocking slot
+                        swap every K training iterations instead of the
+                        wall-clock prefetch poll, so pipelined-vs-sync A/B
+                        runs are exactly reproducible (0 = off, the default)
   --envs N --rollout-len L --minibatches M --ppo-epochs E --shards S
   --k-scenes K          resident scene slots (N:K <= 32 sharing cap)
   --task NAME           pointnav | flee | explore
@@ -224,6 +242,130 @@ fn eval(args: &mut Args) -> Result<()> {
         success * 100.0,
         score
     );
+    Ok(())
+}
+
+/// Drive M concurrent synthetic clients (threads with scripted policies)
+/// through the `bps::serve` multi-tenant layer and report aggregate FPS,
+/// occupancy, and step-latency percentiles.
+fn serve_demo(args: &mut Args) -> Result<()> {
+    use bps::env::EnvBatchConfig;
+    use bps::render::RenderConfig;
+    use bps::scene::procgen::{generate, Complexity};
+    use bps::serve::{FillAction, ShardSpec, SimServer, StragglerPolicy};
+    use bps::sim::Task;
+    use bps::util::pool::WorkerPool;
+    use std::sync::Arc;
+
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let epc = args.usize_or("envs-per-client", 8)?.max(1);
+    let steps = args.usize_or("steps", 256)?.max(1);
+    let shards = args.usize_or("shards", 2)?.clamp(1, clients);
+    let res = args.usize_or("res", 32)?.max(4);
+    let seed = args.u64_or("seed", 7)?;
+    let threads = args.usize_or("threads", 0)?;
+    let ticks = args.usize_or("deadline-ticks", 2)? as u32;
+    let task = {
+        let name = args.opt_or("task", "pointnav");
+        Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
+    };
+    let straggler = match args.opt_or("straggler", "wait").as_str() {
+        "wait" => StragglerPolicy::Wait,
+        "noop" => StragglerPolicy::Deadline {
+            ticks,
+            fill: FillAction::NoOp,
+        },
+        "repeat" => StragglerPolicy::Deadline {
+            ticks,
+            fill: FillAction::Repeat,
+        },
+        other => bail!("bad straggler policy {other:?} (wait|noop|repeat)"),
+    };
+
+    // Shards sized so every client fits: ceil(M/S) client groups per shard.
+    let clients_per_shard = clients.div_ceil(shards);
+    let slots_per_shard = clients_per_shard * epc;
+    let scene = Arc::new(generate("serve_demo", seed, Complexity::test()));
+    let pool = Arc::new(WorkerPool::new(if threads == 0 {
+        WorkerPool::default_size()
+    } else {
+        threads
+    }));
+    let mut specs = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let cfg = EnvBatchConfig::new(task, RenderConfig::depth(res))
+            .seed(seed.wrapping_add(s as u64 * 7919));
+        let scenes = (0..slots_per_shard).map(|_| Arc::clone(&scene)).collect();
+        specs.push(ShardSpec::with_scenes(cfg, scenes).straggler(straggler));
+    }
+    let server = SimServer::start(specs, pool)?;
+    println!(
+        "serve-demo: {clients} clients x {epc} envs on {shards} shard(s) x \
+         {slots_per_shard} slots, task {task:?}, {steps} steps each"
+    );
+
+    // Lease every client's slots before any thread submits, so the first
+    // coalesced step on each shard already includes all of its tenants (a
+    // lone early tenant would otherwise race private batch steps in under
+    // the Wait policy and the reported stats would vary run to run).
+    let sessions = (0..clients)
+        .map(|_| server.connect(task, epc))
+        .collect::<Result<Vec<_>>>()?;
+    let t0 = std::time::Instant::now();
+    let results = std::thread::scope(|sc| {
+        let mut handles = Vec::with_capacity(clients);
+        for (c, mut session) in sessions.into_iter().enumerate() {
+            handles.push(sc.spawn(move || -> Result<(f32, u32, f32, f32)> {
+                let mut actions = vec![0u8; epc];
+                let mut reward = 0.0f32;
+                let mut episodes = 0u32;
+                for t in 0..steps {
+                    for (j, a) in actions.iter_mut().enumerate() {
+                        // turn/forward script, never STOP
+                        *a = (1 + (t + c + j) % 3) as u8;
+                    }
+                    let v = session.step(&actions)?;
+                    reward += v.rewards.iter().sum::<f32>();
+                    episodes += v.dones.iter().filter(|&&d| d).count() as u32;
+                }
+                let (p50, p95) = session.latency();
+                Ok((reward, episodes, p50, p95))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    for (c, (reward, episodes, p50, p95)) in results.iter().enumerate() {
+        println!(
+            "  client {c:>3}: reward {reward:+9.2}  episodes {episodes:>4}  \
+             step latency p50 {:.2} ms  p95 {:.2} ms",
+            p50 * 1e3,
+            p95 * 1e3
+        );
+    }
+    let frames = (clients * epc * steps) as f64;
+    println!(
+        "aggregate: {frames:.0} frames in {wall:.2}s = {:.0} FPS, \
+         occupancy {}/{}",
+        frames / wall,
+        clients * epc,
+        shards * slots_per_shard
+    );
+    for (i, st) in server.stats().iter().enumerate() {
+        println!(
+            "  shard {i}: task {:?} steps {} straggler-fills {} \
+             latency p50 {:.2} ms p95 {:.2} ms",
+            st.task,
+            st.steps,
+            st.straggler_fills,
+            st.latency_p50 * 1e3,
+            st.latency_p95 * 1e3
+        );
+    }
     Ok(())
 }
 

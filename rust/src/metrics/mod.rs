@@ -37,6 +37,21 @@ impl Window {
         self.buf.iter().sum::<f32>() / self.buf.len() as f32
     }
 
+    /// Nearest-rank percentile of the windowed samples (`q` in `[0, 1]`;
+    /// `percentile(0.5)` is the median, `percentile(0.95)` the p95). Used
+    /// by the serve layer's step-latency stats, where a mean hides the
+    /// tail a straggling co-tenant inflicts. Returns 0.0 when empty.
+    pub fn percentile(&self, q: f32) -> f32 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        let mut sorted: Vec<f32> = self.buf.iter().copied().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * sorted.len() as f32).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -131,6 +146,37 @@ mod tests {
         }
         assert_eq!(w.len(), 3);
         assert!((w.mean() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut w = Window::new(100);
+        for x in 1..=100 {
+            w.push(x as f32);
+        }
+        assert!((w.percentile(0.5) - 50.0).abs() < 1e-6);
+        assert!((w.percentile(0.95) - 95.0).abs() < 1e-6);
+        assert!((w.percentile(0.0) - 1.0).abs() < 1e-6);
+        assert!((w.percentile(1.0) - 100.0).abs() < 1e-6);
+        // out-of-range quantiles clamp
+        assert!((w.percentile(2.0) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_unordered_and_capped() {
+        let mut w = Window::new(3);
+        for x in [5.0, 1.0, 9.0, 3.0, 7.0] {
+            w.push(x); // window keeps [9, 3, 7]
+        }
+        assert!((w.percentile(0.5) - 7.0).abs() < 1e-6);
+        assert!((w.percentile(1.0) - 9.0).abs() < 1e-6);
+        let single = {
+            let mut w = Window::new(4);
+            w.push(2.5);
+            w
+        };
+        assert!((single.percentile(0.5) - 2.5).abs() < 1e-6);
+        assert_eq!(Window::new(4).percentile(0.5), 0.0);
     }
 
     #[test]

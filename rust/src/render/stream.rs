@@ -93,7 +93,7 @@ impl SceneRotation {
         with_textures: bool,
     ) -> Result<SceneRotation> {
         assert!(!split_ids.is_empty());
-        let k = k.min(split_ids.len()).max(1);
+        let k = k.clamp(1, split_ids.len());
         let streamer = AssetStreamer::new(dataset, with_textures);
         let mut active = Vec::with_capacity(k);
         for id in split_ids.iter().take(k) {
@@ -147,21 +147,51 @@ impl SceneRotation {
 
     /// Called once per training iteration: if a prefetched scene is ready,
     /// swap it into the next slot and queue the slot's envs for migration
-    /// at their next reset. Never blocks rollout generation.
+    /// at their next reset. Never blocks rollout generation — but the swap
+    /// iteration therefore depends on wall-clock load latency; see
+    /// [`rotate_pinned`](SceneRotation::rotate_pinned) for the
+    /// reproducible variant.
     pub fn rotate(&mut self, sim: &mut BatchSim) {
         for (_, scene) in self.streamer.poll() {
-            let slot = self.next_slot % self.k;
-            self.active[slot] = Arc::clone(&scene);
-            for env in 0..sim.num_envs() {
-                if env % self.k == slot {
-                    sim.queue_scene(env, Arc::clone(&scene));
-                }
-            }
-            self.next_slot += 1;
-            self.rotations += 1;
             self.inflight = false;
+            self.swap_in(scene, sim);
         }
         self.kick_prefetch();
+    }
+
+    /// Deterministic variant of [`rotate`](SceneRotation::rotate): block
+    /// until the in-flight prefetch completes and swap exactly one slot.
+    /// The swap schedule becomes a pure function of the call count instead
+    /// of load latency, so A/B runs (e.g. pipelined vs synchronous
+    /// stepping) rotate scenes at identical iterations even with prefetch
+    /// active (`EnvBatchConfig::pin_rotation`). No-op when the whole split
+    /// already fits in the K resident slots.
+    pub fn rotate_pinned(&mut self, sim: &mut BatchSim) {
+        if self.ids.len() <= self.k {
+            return;
+        }
+        self.kick_prefetch();
+        let scene = match self.streamer.wait_one() {
+            Some((_, scene)) => scene,
+            None => return, // streamer thread died; degrade to a no-op
+        };
+        self.inflight = false;
+        self.swap_in(scene, sim);
+        self.kick_prefetch();
+    }
+
+    /// Swap `scene` into the next rotation slot and queue the slot's envs
+    /// for migration at their next episode reset.
+    fn swap_in(&mut self, scene: Arc<SceneAsset>, sim: &mut BatchSim) {
+        let slot = self.next_slot % self.k;
+        self.active[slot] = Arc::clone(&scene);
+        for env in 0..sim.num_envs() {
+            if env % self.k == slot {
+                sim.queue_scene(env, Arc::clone(&scene));
+            }
+        }
+        self.next_slot += 1;
+        self.rotations += 1;
     }
 
     /// Total resident asset footprint (the "GPU memory" budget check).
@@ -257,6 +287,35 @@ mod tests {
         let rotated_slot = 0; // first rotation goes to slot 0
         let env_scene = sim.env(rotated_slot).scene.id.clone();
         assert_ne!(env_scene, first_scene, "scene not swapped after reset");
+    }
+
+    #[test]
+    fn pinned_rotation_schedule_is_call_count_deterministic() {
+        let (ds, _d) = dataset("pin", 4);
+        let ids = ds.train.clone();
+        let mut rot = SceneRotation::new(ds, ids, 2, false).unwrap();
+        let mut sim = BatchSim::new(SimConfig::pointnav(), rot.assign(4), 5);
+        // deterministic sequence: slot 0 <- train_002, slot 1 <- train_003,
+        // slot 0 <- train_000 — regardless of how long each load takes
+        rot.rotate_pinned(&mut sim);
+        assert_eq!(rot.rotations, 1);
+        assert_eq!(rot.active[0].id, "train_002");
+        rot.rotate_pinned(&mut sim);
+        assert_eq!(rot.rotations, 2);
+        assert_eq!(rot.active[1].id, "train_003");
+        rot.rotate_pinned(&mut sim);
+        assert_eq!(rot.rotations, 3);
+        assert_eq!(rot.active[0].id, "train_000");
+    }
+
+    #[test]
+    fn pinned_rotation_noop_when_split_resident() {
+        let (ds, _d) = dataset("pin_noop", 2);
+        let ids = ds.train.clone();
+        let mut rot = SceneRotation::new(ds, ids, 2, false).unwrap();
+        let mut sim = BatchSim::new(SimConfig::pointnav(), rot.assign(2), 5);
+        rot.rotate_pinned(&mut sim);
+        assert_eq!(rot.rotations, 0, "nothing to rotate when K covers the split");
     }
 
     #[test]

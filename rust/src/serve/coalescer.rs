@@ -1,0 +1,280 @@
+//! Per-shard coalescer: assembles full batch steps from partial
+//! per-session submissions.
+//!
+//! A shard's `EnvBatch` only steps whole batches — that is where the
+//! paper's amortization comes from — so multi-tenancy needs something to
+//! reconcile "many clients, each owning a few env slots" with "one batch
+//! step for everyone". The coalescer is that piece: it tracks which slots
+//! are leased to which session, buffers each session's submitted actions,
+//! and reports when a full batch can be assembled. Slots whose tenant has
+//! not submitted by the straggler deadline are filled per
+//! [`StragglerPolicy`]; free (unleased) slots always step with
+//! `ACTION_STOP`, which ends any orphaned episode so a future tenant
+//! starts on a fresh one (the "auto-reset" of re-leased slots).
+//!
+//! The coalescer is plain data guarded by the shard mutex in
+//! `serve::server`; it does no locking or stepping itself.
+
+use crate::sim::ACTION_STOP;
+
+/// What a straggler's slots step with once the deadline passes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FillAction {
+    /// Step with `ACTION_STOP`: ends the episode, fresh one next step.
+    NoOp,
+    /// Repeat the last action the slot stepped with.
+    Repeat,
+}
+
+/// When a shard may step without waiting for every leased slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StragglerPolicy {
+    /// Wait until every leased slot has an action. Deterministic: a step's
+    /// action vector never depends on timing. A session that never
+    /// submits stalls its co-tenants — use `Deadline` for open traffic.
+    Wait,
+    /// Once at least one action is pending, wait at most `ticks` driver
+    /// ticks (see `serve::server::TICK`) for the rest, then fill the
+    /// missing leased slots with `fill`.
+    Deadline { ticks: u32, fill: FillAction },
+}
+
+/// One leased slot's coalescing state.
+struct SlotLease {
+    session: u64,
+    pending: Option<u8>,
+    /// Last action this slot stepped with (the `Repeat` fill).
+    last: u8,
+}
+
+/// Lease + action-assembly state for one shard (see module docs).
+pub(crate) struct Coalescer {
+    policy: StragglerPolicy,
+    /// `slots[i]` is `None` when slot `i` is free.
+    slots: Vec<Option<SlotLease>>,
+    /// Driver ticks waited since the first pending action of this step.
+    waited: u32,
+    /// Leased slots filled by the straggler policy, cumulative.
+    pub straggler_fills: u64,
+}
+
+impl Coalescer {
+    pub fn new(n: usize, policy: StragglerPolicy) -> Coalescer {
+        Coalescer {
+            policy,
+            slots: (0..n).map(|_| None).collect(),
+            waited: 0,
+            straggler_fills: 0,
+        }
+    }
+
+    pub fn policy(&self) -> StragglerPolicy {
+        self.policy
+    }
+
+    /// Lease `want` free slots (lowest indices first) to `session`.
+    /// Returns `None` — leasing nothing — when fewer than `want` are free.
+    pub fn lease(&mut self, session: u64, want: usize) -> Option<Vec<usize>> {
+        let free: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .take(want)
+            .collect();
+        if free.len() < want {
+            return None;
+        }
+        for &i in &free {
+            self.slots[i] = Some(SlotLease {
+                session,
+                pending: None,
+                last: ACTION_STOP,
+            });
+        }
+        Some(free)
+    }
+
+    /// Free every slot leased to `session` (detach).
+    pub fn release(&mut self, session: u64) {
+        for s in self.slots.iter_mut() {
+            if s.as_ref().is_some_and(|l| l.session == session) {
+                *s = None;
+            }
+        }
+    }
+
+    /// Buffer `actions[j]` for `slots[j]`. Slots no longer leased to the
+    /// session (should not happen through the public API) are skipped.
+    pub fn submit(&mut self, session: u64, slots: &[usize], actions: &[u8]) {
+        for (&i, &a) in slots.iter().zip(actions.iter()) {
+            if let Some(l) = self.slots[i].as_mut() {
+                if l.session == session {
+                    l.pending = Some(a);
+                }
+            }
+        }
+    }
+
+    /// Number of leased slots (occupancy numerator).
+    pub fn leased(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Number of buffered actions awaiting coalescing (queue depth).
+    pub fn pending(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.as_ref().is_some_and(|l| l.pending.is_some()))
+            .count()
+    }
+
+    /// True when a full batch can be assembled: at least one slot is
+    /// leased and every leased slot has a pending action.
+    pub fn ready(&self) -> bool {
+        let mut leased = 0usize;
+        for s in self.slots.iter().flatten() {
+            leased += 1;
+            if s.pending.is_none() {
+                return false;
+            }
+        }
+        leased > 0
+    }
+
+    /// True when at least one action is buffered (starts the deadline).
+    pub fn has_pending(&self) -> bool {
+        self.slots
+            .iter()
+            .any(|s| s.as_ref().is_some_and(|l| l.pending.is_some()))
+    }
+
+    /// One driver tick elapsed while waiting for stragglers.
+    pub fn tick(&mut self) {
+        self.waited = self.waited.saturating_add(1);
+    }
+
+    pub fn waited(&self) -> u32 {
+        self.waited
+    }
+
+    /// Drain the buffered actions into a full batch action vector:
+    /// pending actions verbatim, straggler slots per the policy's fill,
+    /// free slots with `ACTION_STOP`. Resets the deadline clock.
+    pub fn assemble(&mut self, out: &mut Vec<u8>) {
+        out.clear();
+        for s in self.slots.iter_mut() {
+            let a = match s {
+                Some(l) => match l.pending.take() {
+                    Some(a) => {
+                        l.last = a;
+                        a
+                    }
+                    None => {
+                        self.straggler_fills += 1;
+                        match self.policy {
+                            StragglerPolicy::Deadline {
+                                fill: FillAction::Repeat,
+                                ..
+                            } => l.last,
+                            _ => ACTION_STOP,
+                        }
+                    }
+                },
+                None => ACTION_STOP,
+            };
+            out.push(a);
+        }
+        self.waited = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{ACTION_FORWARD, ACTION_LEFT};
+
+    #[test]
+    fn lease_release_and_re_lease_lowest_first() {
+        let mut c = Coalescer::new(4, StragglerPolicy::Wait);
+        let a = c.lease(1, 2).unwrap();
+        assert_eq!(a, vec![0, 1]);
+        let b = c.lease(2, 2).unwrap();
+        assert_eq!(b, vec![2, 3]);
+        assert!(c.lease(3, 1).is_none(), "full shard must refuse");
+        assert_eq!(c.leased(), 4);
+        c.release(1);
+        assert_eq!(c.leased(), 2);
+        // freed slots are re-leased lowest-first
+        assert_eq!(c.lease(3, 2).unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn ready_only_when_all_leased_have_actions() {
+        let mut c = Coalescer::new(4, StragglerPolicy::Wait);
+        assert!(!c.ready(), "no leases -> nothing to step");
+        let a = c.lease(1, 2).unwrap();
+        let b = c.lease(2, 2).unwrap();
+        c.submit(1, &a, &[ACTION_FORWARD, ACTION_LEFT]);
+        assert!(!c.ready() && c.has_pending());
+        assert_eq!(c.pending(), 2);
+        c.submit(2, &b, &[ACTION_LEFT, ACTION_LEFT]);
+        assert!(c.ready());
+        let mut out = Vec::new();
+        c.assemble(&mut out);
+        assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_LEFT, ACTION_LEFT]);
+        assert!(!c.has_pending(), "assemble drains the buffer");
+        assert_eq!(c.straggler_fills, 0);
+    }
+
+    #[test]
+    fn straggler_fill_repeat_and_free_slot_filler() {
+        let policy = StragglerPolicy::Deadline {
+            ticks: 1,
+            fill: FillAction::Repeat,
+        };
+        let mut c = Coalescer::new(4, policy);
+        let a = c.lease(1, 1).unwrap(); // slot 0
+        let b = c.lease(2, 1).unwrap(); // slot 1; slots 2,3 stay free
+        c.submit(1, &a, &[ACTION_FORWARD]);
+        c.submit(2, &b, &[ACTION_LEFT]);
+        let mut out = Vec::new();
+        c.assemble(&mut out);
+        assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_STOP, ACTION_STOP]);
+        assert_eq!(c.straggler_fills, 0, "free slots are not straggler fills");
+        // next step: session 2 straggles -> its slot repeats ACTION_LEFT
+        c.submit(1, &a, &[ACTION_FORWARD]);
+        c.assemble(&mut out);
+        assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_STOP, ACTION_STOP]);
+        assert_eq!(c.straggler_fills, 1);
+    }
+
+    #[test]
+    fn straggler_fill_noop_stops() {
+        let policy = StragglerPolicy::Deadline {
+            ticks: 1,
+            fill: FillAction::NoOp,
+        };
+        let mut c = Coalescer::new(2, policy);
+        let a = c.lease(1, 1).unwrap();
+        let _b = c.lease(2, 1).unwrap();
+        c.submit(1, &a, &[ACTION_FORWARD]);
+        let mut out = Vec::new();
+        c.assemble(&mut out);
+        assert_eq!(out, vec![ACTION_FORWARD, ACTION_STOP]);
+    }
+
+    #[test]
+    fn deadline_clock_resets_on_assemble() {
+        let mut c = Coalescer::new(1, StragglerPolicy::Wait);
+        let a = c.lease(1, 1).unwrap();
+        c.tick();
+        c.tick();
+        assert_eq!(c.waited(), 2);
+        c.submit(1, &a, &[ACTION_FORWARD]);
+        let mut out = Vec::new();
+        c.assemble(&mut out);
+        assert_eq!(c.waited(), 0);
+    }
+}

@@ -1,0 +1,45 @@
+//! Async multi-client serving layer: sessions multiplexed onto sharded
+//! [`EnvBatch`](crate::env::EnvBatch)es.
+//!
+//! The paper's batch simulator amortizes scene storage, rendering, and
+//! synchronization across one large batch of requests (§3, Fig. 2). This
+//! module keeps that amortization under **multi-tenancy**: a
+//! [`SimServer`] owns N `EnvBatch` shards (heterogeneous tasks allowed,
+//! sharing one `WorkerPool`), and many concurrent clients each lease a
+//! few env slots instead of owning a simulator:
+//!
+//! ```ignore
+//! let server = SimServer::start(vec![ShardSpec::with_scenes(cfg, scenes)], pool)?;
+//! let mut session = server.connect(Task::PointNav, 8)?;   // lease 8 slots
+//! loop {
+//!     let actions = policy(session.view());
+//!     let ticket = session.submit(&actions)?;  // partial batch submission
+//!     let view = ticket.wait()?;               // this session's slice of the step
+//! }
+//! ```
+//!
+//! Per shard, a [`Coalescer`](coalescer) assembles full batch steps from
+//! the sessions' partial submissions: the shard steps when every leased
+//! slot has an action, or — under [`StragglerPolicy::Deadline`] — after a
+//! deadline tick, with straggler slots filled by a no-op/repeat policy.
+//! One `EnvBatch::submit` therefore serves every tenant. Sessions detach
+//! and reattach without disturbing co-tenants: freed slots keep stepping
+//! on an auto-reset filler action until re-leased.
+//!
+//! Determinism: with the default `Wait` policy, a single session driving
+//! a whole shard produces tensors bitwise-identical to driving the
+//! same-seeded `EnvBatch` directly — the coalescer passes its actions
+//! through verbatim (`rust/tests/serve.rs`).
+//!
+//! Observability: [`SimServer::stats`] reports per-shard occupancy,
+//! queue depth, step counts, straggler fills, and submit→result latency
+//! percentiles ([`metrics::Window::percentile`](crate::metrics::Window));
+//! [`Session::latency`] reports the same percentiles per client.
+
+pub mod coalescer;
+pub mod server;
+pub mod session;
+
+pub use coalescer::{FillAction, StragglerPolicy};
+pub use server::{SceneSource, ShardSpec, ShardStats, SimServer, TICK};
+pub use session::{Session, SessionView, Ticket};

@@ -1,0 +1,381 @@
+//! [`SimServer`]: N `EnvBatch` shards behind a session front door.
+//!
+//! Each shard is one `EnvBatch` owned by a dedicated **shard driver
+//! thread**; all shards share one `WorkerPool`, so the machine's cores are
+//! scheduled across shards exactly as they are across a single big batch.
+//! Clients never see the batch: [`SimServer::connect`] leases env slots
+//! and returns a [`Session`](super::Session), and the shard's
+//! [`Coalescer`] assembles full batch steps from the sessions' partial
+//! submissions. Results are published as shared snapshots
+//! ([`StepResult`]) that sessions slice into per-client views, so one
+//! `EnvBatch::submit` serves every tenant of the shard.
+//!
+//! Synchronization is a mutex + two condvars per shard: `submitted`
+//! (clients → driver: actions arrived / leases changed) and `stepped`
+//! (driver → clients: the published step advanced). The driver recycles
+//! `StepResult` buffers through `Arc::try_unwrap`, so the steady-state
+//! serving loop allocates nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::env::{EnvBatch, EnvBatchConfig, StepView};
+use crate::metrics::Window;
+use crate::render::SceneRotation;
+use crate::scene::SceneAsset;
+use crate::sim::Task;
+use crate::util::pool::WorkerPool;
+
+use super::coalescer::{Coalescer, StragglerPolicy};
+use super::session::Session;
+
+/// Driver wakeup granularity while waiting out a straggler deadline
+/// (`StragglerPolicy::Deadline { ticks, .. }` waits `ticks` of these).
+pub const TICK: Duration = Duration::from_millis(1);
+
+/// How many latency samples the per-shard window keeps for p50/p95.
+const LATENCY_WINDOW: usize = 4096;
+
+/// One completed batch step, published to every session of a shard.
+/// Same SoA shape as [`StepView`], but owned, so tenants on other
+/// threads can hold it while the `EnvBatch` reuses its step buffers.
+#[derive(Default)]
+pub(crate) struct StepResult {
+    pub step: u64,
+    pub obs: Vec<f32>,
+    pub goal: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<bool>,
+    pub successes: Vec<bool>,
+    pub spl: Vec<f32>,
+    pub scores: Vec<f32>,
+}
+
+impl StepResult {
+    /// Copy a step's view in, reusing this result's buffers.
+    fn fill(&mut self, step: u64, v: StepView<'_>) {
+        self.step = step;
+        self.obs.clear();
+        self.obs.extend_from_slice(v.obs);
+        self.goal.clear();
+        self.goal.extend_from_slice(v.goal);
+        self.rewards.clear();
+        self.rewards.extend_from_slice(v.rewards);
+        self.dones.clear();
+        self.dones.extend_from_slice(v.dones);
+        self.successes.clear();
+        self.successes.extend_from_slice(v.successes);
+        self.spl.clear();
+        self.spl.extend_from_slice(v.spl);
+        self.scores.clear();
+        self.scores.extend_from_slice(v.scores);
+    }
+}
+
+/// Mutex-guarded per-shard state (lease table + published step).
+pub(crate) struct ShardState {
+    pub coal: Coalescer,
+    /// Latest completed step (`result.step` steps have fully executed).
+    pub result: Arc<StepResult>,
+    /// Steps handed to the `EnvBatch` so far; a submit buffered now is
+    /// consumed by step `issued + 1`, which is what tickets wait for.
+    pub issued: u64,
+    pub shutdown: bool,
+    pub error: Option<String>,
+    /// Shard-wide submit→result latency samples (seconds).
+    pub latency: Window,
+}
+
+/// One shard as seen by sessions and the driver thread.
+pub(crate) struct ShardShared {
+    pub task: Task,
+    pub slots: usize,
+    pub obs_floats: usize,
+    pub state: Mutex<ShardState>,
+    /// Clients → driver: actions buffered / leases changed / shutdown.
+    pub submitted: Condvar,
+    /// Driver → clients: `state.result` advanced (or shard failed).
+    pub stepped: Condvar,
+}
+
+impl ShardShared {
+    pub fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        st.error = Some(msg);
+        self.submitted.notify_all();
+        self.stepped.notify_all();
+    }
+}
+
+/// The shard driver loop: coalesce → step → publish, until shutdown.
+fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch) {
+    let mut actions: Vec<u8> = Vec::with_capacity(shared.slots);
+    let mut spare: Option<StepResult> = None;
+    loop {
+        // Phase 1: wait until a full batch can be assembled.
+        let step_no = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.coal.ready() {
+                    break;
+                }
+                match st.coal.policy() {
+                    StragglerPolicy::Deadline { ticks, .. } if st.coal.has_pending() => {
+                        if st.coal.waited() >= ticks {
+                            break; // deadline passed: fill stragglers
+                        }
+                        let (guard, timeout) = shared.submitted.wait_timeout(st, TICK).unwrap();
+                        st = guard;
+                        if timeout.timed_out() {
+                            st.coal.tick();
+                        }
+                    }
+                    _ => st = shared.submitted.wait(st).unwrap(),
+                }
+            }
+            st.coal.assemble(&mut actions);
+            st.issued += 1;
+            st.issued
+        };
+        // Phase 2: step the batch outside the lock (sim + render).
+        let result = match env.step(&actions) {
+            Ok(view) => {
+                let mut r = spare.take().unwrap_or_default();
+                r.fill(step_no, view);
+                Arc::new(r)
+            }
+            Err(e) => {
+                shared.fail(format!("shard step failed: {e:#}"));
+                return;
+            }
+        };
+        // Phase 3: publish, then reclaim the old snapshot's buffers if no
+        // session still holds it.
+        let prev = {
+            let mut st = shared.state.lock().unwrap();
+            let prev = std::mem::replace(&mut st.result, result);
+            shared.stepped.notify_all();
+            prev
+        };
+        if let Ok(r) = Arc::try_unwrap(prev) {
+            spare = Some(r);
+        }
+    }
+}
+
+/// Where a shard's environments get their scenes (mirrors the two
+/// [`EnvBatchConfig`] build paths).
+pub enum SceneSource {
+    /// Explicit env → scene assignment; the batch size is `scenes.len()`.
+    Scenes(Vec<Arc<SceneAsset>>),
+    /// `n` envs over a K-slot rotation. The serve layer does not drive
+    /// `rotate_scenes` yet — the rotation provides the initial residency.
+    Rotation { rotation: SceneRotation, n: usize },
+}
+
+/// Everything needed to stand up one shard of a [`SimServer`].
+pub struct ShardSpec {
+    pub cfg: EnvBatchConfig,
+    pub source: SceneSource,
+    pub straggler: StragglerPolicy,
+}
+
+impl ShardSpec {
+    /// A shard over an explicit scene assignment, defaulting to the
+    /// deterministic `Wait` coalescing policy.
+    pub fn with_scenes(cfg: EnvBatchConfig, scenes: Vec<Arc<SceneAsset>>) -> ShardSpec {
+        ShardSpec {
+            cfg,
+            source: SceneSource::Scenes(scenes),
+            straggler: StragglerPolicy::Wait,
+        }
+    }
+
+    /// A shard of `n` envs over a K-slot scene rotation.
+    pub fn with_rotation(cfg: EnvBatchConfig, rotation: SceneRotation, n: usize) -> ShardSpec {
+        ShardSpec {
+            cfg,
+            source: SceneSource::Rotation { rotation, n },
+            straggler: StragglerPolicy::Wait,
+        }
+    }
+
+    /// Override the straggler policy for this shard's coalescer.
+    pub fn straggler(mut self, policy: StragglerPolicy) -> ShardSpec {
+        self.straggler = policy;
+        self
+    }
+}
+
+/// Point-in-time counters for one shard (see [`SimServer::stats`]).
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub task: Task,
+    /// Total env slots in the shard.
+    pub slots: usize,
+    /// Slots currently leased to sessions (occupancy numerator).
+    pub leased: usize,
+    /// Actions buffered in the coalescer awaiting the next step.
+    pub queued_actions: usize,
+    /// Batch steps completed since start.
+    pub steps: u64,
+    /// Leased slots the straggler policy had to fill, cumulative.
+    pub straggler_fills: u64,
+    /// Submit→result latency percentiles over recent steps (seconds).
+    pub latency_p50: f32,
+    pub latency_p95: f32,
+}
+
+impl ShardStats {
+    /// Leased fraction of the shard's slots.
+    pub fn occupancy(&self) -> f32 {
+        if self.slots == 0 {
+            return 0.0;
+        }
+        self.leased as f32 / self.slots as f32
+    }
+}
+
+/// The multi-tenant simulation server (see module docs).
+pub struct SimServer {
+    shards: Vec<Arc<ShardShared>>,
+    drivers: Vec<JoinHandle<()>>,
+    next_session: AtomicU64,
+}
+
+impl SimServer {
+    /// Build every shard's `EnvBatch` and start one driver thread per
+    /// shard. Shards may be heterogeneous (different tasks / render
+    /// configs); they share `pool`.
+    pub fn start(specs: Vec<ShardSpec>, pool: Arc<WorkerPool>) -> Result<SimServer> {
+        if specs.is_empty() {
+            bail!("SimServer needs at least one shard");
+        }
+        let mut shards = Vec::with_capacity(specs.len());
+        let mut drivers = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let ShardSpec {
+                cfg,
+                source,
+                straggler,
+            } = spec;
+            // The shard driver always submits and immediately waits, so
+            // the EnvBatch's own pipelined driver thread would add a
+            // channel round-trip per step with zero overlap benefit:
+            // force the (bitwise-identical) synchronous path.
+            let cfg = cfg.overlap(false);
+            let env = match source {
+                SceneSource::Scenes(scenes) => cfg.build_with_scenes(scenes, Arc::clone(&pool))?,
+                SceneSource::Rotation { rotation, n } => {
+                    cfg.build_with_rotation(rotation, n, Arc::clone(&pool))?
+                }
+            };
+            let slots = env.num_envs();
+            // Publish the initial observation as step 0 so sessions can
+            // read a view before their first submit.
+            let mut initial = StepResult::default();
+            initial.fill(0, env.view());
+            let shared = Arc::new(ShardShared {
+                task: env.task(),
+                slots,
+                obs_floats: env.obs_floats(),
+                state: Mutex::new(ShardState {
+                    coal: Coalescer::new(slots, straggler),
+                    result: Arc::new(initial),
+                    issued: 0,
+                    shutdown: false,
+                    error: None,
+                    latency: Window::new(LATENCY_WINDOW),
+                }),
+                submitted: Condvar::new(),
+                stepped: Condvar::new(),
+            });
+            let for_driver = Arc::clone(&shared);
+            let driver = std::thread::Builder::new()
+                .name("sim-serve-shard".into())
+                .spawn(move || shard_driver(for_driver, env))
+                .map_err(|e| anyhow!("spawn shard driver thread: {e}"))?;
+            shards.push(shared);
+            drivers.push(driver);
+        }
+        Ok(SimServer {
+            shards,
+            drivers,
+            next_session: AtomicU64::new(1),
+        })
+    }
+
+    /// Lease `n_envs` slots on the first `task` shard with room and open
+    /// a session. Fails when no shard can host the lease — detach other
+    /// sessions (freeing their slots) or add shards.
+    pub fn connect(&self, task: Task, n_envs: usize) -> Result<Session> {
+        if n_envs == 0 {
+            bail!("connect: a session needs at least one env slot");
+        }
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        for shard in &self.shards {
+            if shard.task != task {
+                continue;
+            }
+            let slots = {
+                let mut st = shard.state.lock().unwrap();
+                if st.shutdown {
+                    continue;
+                }
+                st.coal.lease(id, n_envs)
+            };
+            if let Some(slots) = slots {
+                return Ok(Session::open(Arc::clone(shard), id, slots));
+            }
+        }
+        bail!(
+            "connect: no {task:?} shard with {n_envs} free slots \
+             (tasks served: {:?})",
+            self.shards.iter().map(|s| s.task).collect::<Vec<_>>()
+        )
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Point-in-time stats for every shard: occupancy, queue depth,
+    /// step counts, straggler fills, and latency percentiles.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|sh| {
+                let st = sh.state.lock().unwrap();
+                ShardStats {
+                    task: sh.task,
+                    slots: sh.slots,
+                    leased: st.coal.leased(),
+                    queued_actions: st.coal.pending(),
+                    steps: st.result.step,
+                    straggler_fills: st.coal.straggler_fills,
+                    latency_p50: st.latency.percentile(0.5),
+                    latency_p95: st.latency.percentile(0.95),
+                }
+            })
+            .collect()
+    }
+}
+
+impl Drop for SimServer {
+    fn drop(&mut self) {
+        for sh in &self.shards {
+            sh.fail("server shut down".into());
+        }
+        for d in self.drivers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}

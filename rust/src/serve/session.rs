@@ -1,0 +1,269 @@
+//! [`Session`]: one client's lease on a shard, plus the [`Ticket`] /
+//! [`SessionView`] request-response cycle.
+//!
+//! A session owns a set of env slots on one shard (granted by
+//! [`SimServer::connect`](super::SimServer::connect)) and mirrors the
+//! `EnvBatch` surface at the lease's granularity: `submit(actions)`
+//! buffers one action per leased slot and returns a [`Ticket`];
+//! `Ticket::wait` blocks until the shard's coalesced batch step that
+//! consumed those actions completes, then returns a [`SessionView`] of
+//! the session's slice of the step. The slice lives in session-owned SoA
+//! buffers (gathered from the shard's published snapshot), so co-tenants
+//! never contend after the gather.
+//!
+//! Sessions are `Send`: connect on one thread, drive from another. Drop
+//! (or [`detach`](Session::detach)) frees the slots for re-lease without
+//! disturbing co-tenants — freed slots step with `ACTION_STOP`, ending
+//! any orphaned episode so the next tenant starts fresh.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Window;
+use crate::sim::Task;
+
+use super::server::{ShardShared, StepResult};
+
+/// How many latency samples each session keeps for its own p50/p95.
+const SESSION_LATENCY_WINDOW: usize = 1024;
+
+/// A client's lease of env slots on one shard (see module docs).
+pub struct Session {
+    shard: Arc<ShardShared>,
+    id: u64,
+    /// Leased slot indices on the shard, in view order.
+    slots: Vec<usize>,
+    // Session-local SoA buffers, gathered from the shard snapshot.
+    obs: Vec<f32>,
+    goal: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    successes: Vec<bool>,
+    spl: Vec<f32>,
+    scores: Vec<f32>,
+    /// Shard step the buffers were last gathered from.
+    synced: u64,
+    latency: Window,
+    detached: bool,
+}
+
+impl Session {
+    pub(crate) fn open(shard: Arc<ShardShared>, id: u64, slots: Vec<usize>) -> Session {
+        let n = slots.len();
+        let obs_floats = shard.obs_floats;
+        let mut s = Session {
+            shard,
+            id,
+            slots,
+            obs: vec![0.0; n * obs_floats],
+            goal: vec![0.0; n * 3],
+            rewards: vec![0.0; n],
+            dones: vec![false; n],
+            successes: vec![false; n],
+            spl: vec![0.0; n],
+            scores: vec![0.0; n],
+            synced: 0,
+            latency: Window::new(SESSION_LATENCY_WINDOW),
+            detached: false,
+        };
+        // Seed the buffers from the latest published step so `view` works
+        // before the first submit.
+        let res = Arc::clone(&s.shard.state.lock().unwrap().result);
+        s.gather(&res);
+        s
+    }
+
+    /// Envs leased by this session.
+    pub fn num_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Floats per env observation tile (shard render config).
+    pub fn obs_floats(&self) -> usize {
+        self.shard.obs_floats
+    }
+
+    pub fn task(&self) -> Task {
+        self.shard.task
+    }
+
+    /// The shard slot indices backing this lease (ascending).
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    /// This session's view of the last step it gathered (initially the
+    /// shard's latest published observation).
+    pub fn view(&self) -> SessionView<'_> {
+        SessionView {
+            step: self.synced,
+            obs: &self.obs,
+            goal: &self.goal,
+            rewards: &self.rewards,
+            dones: &self.dones,
+            successes: &self.successes,
+            spl: &self.spl,
+            scores: &self.scores,
+        }
+    }
+
+    /// Submit one action per leased slot (`actions[j]` steps
+    /// `self.slots()[j]`). Returns a [`Ticket`] for the coalesced batch
+    /// step that will consume them; the shard steps once every leased
+    /// slot has an action (or the straggler deadline fires).
+    pub fn submit(&mut self, actions: &[u8]) -> Result<Ticket<'_>> {
+        if self.detached {
+            bail!("submit on a detached session");
+        }
+        if actions.len() != self.slots.len() {
+            bail!(
+                "submit: {} actions for a {}-env session",
+                actions.len(),
+                self.slots.len()
+            );
+        }
+        let target = {
+            let mut st = self.shard.state.lock().unwrap();
+            if st.shutdown {
+                let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
+                bail!("serve: {msg}");
+            }
+            st.coal.submit(self.id, &self.slots, actions);
+            // Wake the driver: the batch may now be complete, and a
+            // deadline-policy driver must notice the first pending action.
+            self.shard.submitted.notify_all();
+            st.issued + 1
+        };
+        Ok(Ticket {
+            session: self,
+            target,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// Convenience: submit and immediately wait.
+    pub fn step(&mut self, actions: &[u8]) -> Result<SessionView<'_>> {
+        self.submit(actions)?.wait()
+    }
+
+    /// Free this session's slots for re-lease. Co-tenants are not
+    /// disturbed: the shard keeps stepping, with the freed slots on the
+    /// auto-reset filler. Idempotent; also runs on drop.
+    pub fn detach(&mut self) {
+        if self.detached {
+            return;
+        }
+        self.detached = true;
+        let mut st = self.shard.state.lock().unwrap();
+        st.coal.release(self.id);
+        // A waiting driver may now have a complete batch (every remaining
+        // leased slot already submitted).
+        self.shard.submitted.notify_all();
+    }
+
+    /// Submit→result latency percentiles (p50, p95) over this session's
+    /// recent steps, in seconds.
+    pub fn latency(&self) -> (f32, f32) {
+        (self.latency.percentile(0.5), self.latency.percentile(0.95))
+    }
+
+    /// Copy this session's slots out of a published shard snapshot.
+    fn gather(&mut self, res: &StepResult) {
+        let of = self.shard.obs_floats;
+        for (j, &slot) in self.slots.iter().enumerate() {
+            self.obs[j * of..(j + 1) * of]
+                .copy_from_slice(&res.obs[slot * of..(slot + 1) * of]);
+            self.goal[j * 3..j * 3 + 3].copy_from_slice(&res.goal[slot * 3..slot * 3 + 3]);
+            self.rewards[j] = res.rewards[slot];
+            self.dones[j] = res.dones[slot];
+            self.successes[j] = res.successes[slot];
+            self.spl[j] = res.spl[slot];
+            self.scores[j] = res.scores[slot];
+        }
+        self.synced = res.step;
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}
+
+/// An in-flight session step: the shard batch step that will consume
+/// this session's submitted actions. [`wait`](Ticket::wait) blocks until
+/// it completes; meanwhile [`current`](Ticket::current) still serves the
+/// previous step for overlapped bookkeeping, mirroring
+/// `StepHandle::current`.
+pub struct Ticket<'a> {
+    session: &'a mut Session,
+    target: u64,
+    submitted: Instant,
+}
+
+impl<'a> Ticket<'a> {
+    /// The shard step this ticket resolves at.
+    pub fn step(&self) -> u64 {
+        self.target
+    }
+
+    /// The session's previous gathered view (valid while the coalesced
+    /// step executes).
+    pub fn current(&self) -> SessionView<'_> {
+        self.session.view()
+    }
+
+    /// Block until the coalesced batch step completes, gather this
+    /// session's slice, and view it.
+    ///
+    /// Latest-wins semantics: the view reflects the shard's most recent
+    /// published step at wake-up time, which under a
+    /// [`Deadline`](super::StragglerPolicy::Deadline) policy can be
+    /// *later* than [`step`](Ticket::step) — if this client stalls, the
+    /// deadline keeps its slots stepping and intermediate snapshots are
+    /// not retained. Compare `view.step` against `ticket.step()` when
+    /// per-step accounting matters; with the `Wait` policy they always
+    /// match.
+    pub fn wait(self) -> Result<SessionView<'a>> {
+        let Ticket {
+            session,
+            target,
+            submitted,
+        } = self;
+        let shard = Arc::clone(&session.shard);
+        let res = {
+            let mut st = shard.state.lock().unwrap();
+            while st.result.step < target {
+                if st.shutdown {
+                    let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
+                    bail!("serve: {msg}");
+                }
+                st = shard.stepped.wait(st).unwrap();
+            }
+            let lat = submitted.elapsed().as_secs_f32();
+            st.latency.push(lat);
+            session.latency.push(lat);
+            Arc::clone(&st.result)
+        };
+        session.gather(&res);
+        Ok(session.view())
+    }
+}
+
+/// Borrowed SoA results of one session step: the same shape as
+/// `env::StepView`, restricted to the session's leased slots, plus the
+/// shard step counter it was gathered from.
+#[derive(Clone, Copy)]
+pub struct SessionView<'a> {
+    /// Shard batch step these results belong to.
+    pub step: u64,
+    pub obs: &'a [f32],
+    pub goal: &'a [f32],
+    pub rewards: &'a [f32],
+    pub dones: &'a [bool],
+    pub successes: &'a [bool],
+    pub spl: &'a [f32],
+    pub scores: &'a [f32],
+}

@@ -111,7 +111,10 @@ impl WorkerPool {
         let _guard = self.serialize.lock().unwrap();
         let fref: &(dyn Fn(usize) + Sync) = &f;
         // SAFETY: we erase the lifetime; `wait_done` below ensures all
-        // workers finished calling `func` before `f` drops.
+        // workers finished calling `func` before `f` drops. A plain `as`
+        // cast cannot widen the trait object's lifetime bound to the
+        // 'static the pointer type implies, hence transmute.
+        #[allow(clippy::useless_transmute)]
         let func: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fref) };
         let task = Arc::new(Task {
             func,

@@ -27,20 +27,22 @@ fn test_config(name: &str) -> Option<Config> {
         )
         .unwrap();
     }
-    let mut cfg = Config::default();
-    cfg.variant = "test".into();
-    cfg.artifacts_dir = root.join("artifacts");
-    cfg.dataset_dir = ds_dir;
-    cfg.complexity = "test".into();
-    cfg.num_envs = 4;
-    cfg.rollout_len = 4;
-    cfg.num_minibatches = 2;
-    cfg.k_scenes = 2;
-    cfg.shards = 1;
-    cfg.total_frames = 64;
-    cfg.seed = 9;
-    cfg.threads = 2;
-    cfg.out_dir = std::env::temp_dir().join(format!("bps_e2e_{name}"));
+    let cfg = Config {
+        variant: "test".into(),
+        artifacts_dir: root.join("artifacts"),
+        dataset_dir: ds_dir,
+        complexity: "test".into(),
+        num_envs: 4,
+        rollout_len: 4,
+        num_minibatches: 2,
+        k_scenes: 2,
+        shards: 1,
+        total_frames: 64,
+        seed: 9,
+        threads: 2,
+        out_dir: std::env::temp_dir().join(format!("bps_e2e_{name}")),
+        ..Config::default()
+    };
     cfg.validate().unwrap();
     Some(cfg)
 }

@@ -151,6 +151,51 @@ fn rotation_owned_by_env_batch() {
     assert!(sim_d.as_nanos() > 0);
 }
 
+/// The DESIGN.md §0 determinism caveat, fixed: with prefetch *active*
+/// (k < split size) a wall-clock rotation schedule makes pipelined vs
+/// synchronous runs diverge whenever a swap lands on a different
+/// iteration. Pinning the schedule to call counts
+/// (`EnvBatchConfig::pin_rotation`) restores bitwise equivalence.
+#[test]
+fn pinned_rotation_keeps_pipelined_sync_bitwise() {
+    use bps::sim::SimConfig;
+    let dir = std::env::temp_dir().join("bps_envbatch_pin");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds =
+        bps::scene::dataset::generate_dataset(&dir, 5, 0, 0, Complexity::test(), 77).unwrap();
+    let n = 6;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mk = |overlap: bool| {
+        // k=2 of 5 train scenes: the prefetcher is active the whole run
+        let rot = SceneRotation::new(ds.clone(), ds.train.clone(), 2, false).unwrap();
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16))
+            .seed(33)
+            .overlap(overlap)
+            .pin_rotation(2)
+            // short episodes so queued scene swaps actually apply
+            .sim(SimConfig {
+                max_steps: 6,
+                ..SimConfig::pointnav()
+            })
+            .build_with_rotation(rot, n, Arc::clone(&pool))
+            .unwrap()
+    };
+    let mut sync = mk(false);
+    let mut pipe = mk(true);
+    for t in 0..40 {
+        let actions: Vec<u8> = (0..n).map(|i| (1 + (t + i) % 3) as u8).collect();
+        let va = sync.step(&actions).unwrap();
+        let (obs, rewards, dones) = (va.obs.to_vec(), va.rewards.to_vec(), va.dones.to_vec());
+        let vb = pipe.step(&actions).unwrap();
+        assert_eq!(obs, vb.obs, "obs diverged at step {t}");
+        assert_eq!(rewards, vb.rewards, "rewards diverged at step {t}");
+        assert_eq!(dones, vb.dones, "dones diverged at step {t}");
+        sync.rotate_scenes().unwrap();
+        pipe.rotate_scenes().unwrap();
+    }
+}
+
 /// Full-stack gate (needs `make artifacts`): two coordinator training
 /// iterations with pipelined vs synchronous env stepping must produce
 /// bitwise-identical parameters.
@@ -166,24 +211,23 @@ fn coordinator_overlap_equivalence() {
         std::fs::create_dir_all(&ds_dir).unwrap();
         bps::scene::generate_dataset(&ds_dir, 3, 1, 1, Complexity::test(), 123).unwrap();
     }
-    let mk = |overlap: bool| {
-        let mut cfg = bps::config::Config::default();
-        cfg.variant = "test".into();
-        cfg.artifacts_dir = root.join("artifacts");
-        cfg.dataset_dir = ds_dir.clone();
-        cfg.complexity = "test".into();
-        cfg.num_envs = 4;
-        cfg.rollout_len = 4;
-        cfg.num_minibatches = 2;
+    let mk = |overlap: bool| bps::config::Config {
+        variant: "test".into(),
+        artifacts_dir: root.join("artifacts"),
+        dataset_dir: ds_dir.clone(),
+        complexity: "test".into(),
+        num_envs: 4,
+        rollout_len: 4,
+        num_minibatches: 2,
         // k == train-scene count disables rotation prefetch, which would
         // otherwise swap scenes at timing-dependent iterations and make
-        // the bitwise comparison below flaky
-        cfg.k_scenes = 3;
-        cfg.total_frames = 32;
-        cfg.seed = 5;
-        cfg.threads = 2;
-        cfg.overlap = overlap;
-        cfg
+        // the bitwise comparison below flaky (or set rotate_every)
+        k_scenes: 3,
+        total_frames: 32,
+        seed: 5,
+        threads: 2,
+        overlap,
+        ..Default::default()
     };
     let mut a = bps::coordinator::Coordinator::new(mk(true)).unwrap();
     let mut b = bps::coordinator::Coordinator::new(mk(false)).unwrap();

@@ -1,0 +1,265 @@
+//! Integration tests for the multi-client serving layer (`bps::serve`).
+//!
+//! The acceptance gates: a single session driving a whole shard through
+//! `SimServer` must be *bitwise identical* to driving the same-seeded
+//! `EnvBatch` directly; two clients interleaving partial submissions on
+//! one shard must jointly reproduce the direct full-batch step; and
+//! detach / re-lease must not disturb co-tenants.
+
+use std::sync::Arc;
+
+use bps::env::{EnvBatch, EnvBatchConfig};
+use bps::render::RenderConfig;
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::serve::{FillAction, ShardSpec, SimServer, StragglerPolicy};
+use bps::sim::{Task, ACTION_FORWARD, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const SEED: u64 = 0xD0_5EED;
+
+fn scene() -> Arc<SceneAsset> {
+    Arc::new(generate("serve_eqv", 91, Complexity::test()))
+}
+
+fn env_cfg() -> EnvBatchConfig {
+    EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(20)).seed(SEED)
+}
+
+fn direct_batch(n: usize, pool: &Arc<WorkerPool>) -> EnvBatch {
+    let s = scene();
+    env_cfg()
+        .overlap(false)
+        .build_with_scenes((0..n).map(|_| Arc::clone(&s)).collect(), Arc::clone(pool))
+        .unwrap()
+}
+
+fn server(n: usize, policy: StragglerPolicy, pool: &Arc<WorkerPool>) -> SimServer {
+    let s = scene();
+    let spec = ShardSpec::with_scenes(env_cfg(), (0..n).map(|_| Arc::clone(&s)).collect())
+        .straggler(policy);
+    SimServer::start(vec![spec], Arc::clone(pool)).unwrap()
+}
+
+fn actions_at(t: usize, n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((5 * t + 3 * i) % NUM_ACTIONS) as u8).collect()
+}
+
+/// One session leasing the whole shard: served tensors must be bitwise
+/// equal to direct `EnvBatch` stepping at every step.
+#[test]
+fn single_session_bitwise_equals_direct() {
+    let n = 8;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let mut session = srv.connect(Task::PointNav, n).unwrap();
+    assert_eq!(session.num_envs(), n);
+    assert_eq!(session.slots(), (0..n).collect::<Vec<_>>().as_slice());
+
+    // initial observations (step 0) already match
+    assert_eq!(session.view().step, 0);
+    assert_eq!(session.view().obs, direct.view().obs);
+    assert_eq!(session.view().goal, direct.view().goal);
+
+    for t in 0..40 {
+        let actions = actions_at(t, n);
+        let dv = direct.step(&actions).unwrap();
+        let (obs, goal, rewards, dones, successes, spl, scores) = (
+            dv.obs.to_vec(),
+            dv.goal.to_vec(),
+            dv.rewards.to_vec(),
+            dv.dones.to_vec(),
+            dv.successes.to_vec(),
+            dv.spl.to_vec(),
+            dv.scores.to_vec(),
+        );
+        let sv = session.step(&actions).unwrap();
+        assert_eq!(sv.step, (t + 1) as u64, "shard step counter");
+        assert_eq!(obs, sv.obs, "obs diverged at step {t}");
+        assert_eq!(goal, sv.goal, "goal diverged at step {t}");
+        assert_eq!(rewards, sv.rewards, "rewards diverged at step {t}");
+        assert_eq!(dones, sv.dones, "dones diverged at step {t}");
+        assert_eq!(successes, sv.successes, "successes diverged at step {t}");
+        assert_eq!(spl, sv.spl, "spl diverged at step {t}");
+        assert_eq!(scores, sv.scores, "scores diverged at step {t}");
+    }
+    let stats = srv.stats();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].steps, 40);
+    assert_eq!(stats[0].leased, n);
+    assert!((stats[0].occupancy() - 1.0).abs() < 1e-6);
+    assert_eq!(stats[0].straggler_fills, 0);
+    assert!(stats[0].latency_p95 >= stats[0].latency_p50);
+    let (p50, p95) = session.latency();
+    assert!(p50 > 0.0 && p95 >= p50);
+}
+
+/// Two clients on one shard, submitting partial batches in alternating
+/// order: their joint results must equal the direct full-batch step.
+#[test]
+fn two_clients_interleave_and_match_direct() {
+    let n = 8;
+    let half = n / 2;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let mut a = srv.connect(Task::PointNav, half).unwrap();
+    let mut b = srv.connect(Task::PointNav, half).unwrap();
+    assert_eq!(a.slots(), &[0, 1, 2, 3]);
+    assert_eq!(b.slots(), &[4, 5, 6, 7]);
+    let of = a.obs_floats();
+
+    for t in 0..30 {
+        let actions = actions_at(t, n);
+        let dv = direct.step(&actions).unwrap();
+        let (d_obs, d_rewards, d_dones) =
+            (dv.obs.to_vec(), dv.rewards.to_vec(), dv.dones.to_vec());
+        // alternate submission order; the step only fires once both land
+        let (va, vb) = if t % 2 == 0 {
+            let ta = a.submit(&actions[..half]).unwrap();
+            let tb = b.submit(&actions[half..]).unwrap();
+            let vb = tb.wait().unwrap();
+            let va = ta.wait().unwrap();
+            (va, vb)
+        } else {
+            let tb = b.submit(&actions[half..]).unwrap();
+            let ta = a.submit(&actions[..half]).unwrap();
+            let va = ta.wait().unwrap();
+            let vb = tb.wait().unwrap();
+            (va, vb)
+        };
+        assert_eq!(va.step, vb.step, "both clients see the same batch step");
+        assert_eq!(va.obs, &d_obs[..half * of], "client A obs at step {t}");
+        assert_eq!(vb.obs, &d_obs[half * of..], "client B obs at step {t}");
+        assert_eq!(va.rewards, &d_rewards[..half]);
+        assert_eq!(vb.rewards, &d_rewards[half..]);
+        assert_eq!(va.dones, &d_dones[..half]);
+        assert_eq!(vb.dones, &d_dones[half..]);
+    }
+}
+
+/// Detach frees slots without disturbing the co-tenant; freed slots are
+/// re-leased to a new session which then steps normally.
+#[test]
+fn detach_and_re_lease() {
+    let n = 6;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let mut a = srv.connect(Task::PointNav, 3).unwrap();
+    let mut b = srv.connect(Task::PointNav, 3).unwrap();
+    // shard is full now
+    assert!(srv.connect(Task::PointNav, 1).is_err());
+
+    let acts = vec![ACTION_FORWARD; 3];
+    let ta = a.submit(&acts).unwrap();
+    let tb = b.submit(&acts).unwrap();
+    assert_eq!(ta.wait().unwrap().step, 1);
+    assert_eq!(tb.wait().unwrap().step, 1);
+
+    // A detaches; B keeps stepping alone (freed slots run on the filler)
+    a.detach();
+    assert_eq!(srv.stats()[0].leased, 3);
+    for t in 0..5 {
+        let v = b.step(&acts).unwrap();
+        assert_eq!(v.step, (t + 2) as u64);
+        assert!(v.rewards.iter().all(|r| r.is_finite()));
+    }
+
+    // A's old slots are re-leased to a new session, lowest-first
+    let mut c = srv.connect(Task::PointNav, 3).unwrap();
+    assert_eq!(c.slots(), &[0, 1, 2]);
+    assert_eq!(srv.stats()[0].leased, 6);
+    // both tenants step together again
+    let tc = c.submit(&acts).unwrap();
+    let tb = b.submit(&acts).unwrap();
+    let vc = tc.wait().unwrap();
+    let vb = tb.wait().unwrap();
+    assert_eq!(vc.step, vb.step);
+    // a detached session refuses further submits
+    assert!(a.submit(&acts).is_err());
+}
+
+/// With a deadline policy, one client's submissions keep the shard
+/// stepping even when the co-tenant goes silent.
+#[test]
+fn straggler_deadline_unblocks_half_occupied_shard() {
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let policy = StragglerPolicy::Deadline {
+        ticks: 2,
+        fill: FillAction::Repeat,
+    };
+    let srv = server(n, policy, &pool);
+    let mut active = srv.connect(Task::PointNav, 2).unwrap();
+    let _silent = srv.connect(Task::PointNav, 2).unwrap();
+
+    let acts = vec![ACTION_FORWARD; 2];
+    for t in 0..4 {
+        let v = active.step(&acts).unwrap();
+        assert_eq!(v.step, (t + 1) as u64, "deadline must fire each step");
+    }
+    let stats = srv.stats();
+    assert_eq!(stats[0].steps, 4);
+    assert!(
+        stats[0].straggler_fills >= 8,
+        "silent tenant's 2 slots filled on all 4 steps (got {})",
+        stats[0].straggler_fills
+    );
+}
+
+/// Session/connect misuse is rejected cleanly.
+#[test]
+fn api_misuse_rejected() {
+    let pool = Arc::new(WorkerPool::new(0));
+    let srv = server(2, StragglerPolicy::Wait, &pool);
+    assert!(srv.connect(Task::PointNav, 0).is_err(), "zero-env lease");
+    assert!(srv.connect(Task::Flee, 1).is_err(), "no shard for task");
+    assert!(srv.connect(Task::PointNav, 3).is_err(), "lease > shard");
+    let mut s = srv.connect(Task::PointNav, 2).unwrap();
+    assert!(s.submit(&[ACTION_FORWARD]).is_err(), "wrong action count");
+    // a failed oversized submit must not poison the session
+    let v = s.step(&[ACTION_FORWARD, ACTION_FORWARD]).unwrap();
+    assert_eq!(v.step, 1);
+}
+
+/// Multi-threaded smoke: M client threads drive one server concurrently
+/// (sessions are Send); every client sees every one of its steps.
+#[test]
+fn threaded_clients_serve_concurrently() {
+    let clients = 3;
+    let epc = 2;
+    let steps = 25;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(clients * epc, StragglerPolicy::Wait, &pool);
+    // connect on the main thread so every lease exists before any client
+    // submits (with Wait coalescing, a lone early tenant would otherwise
+    // race a private batch step in before the others join)
+    let sessions: Vec<_> = (0..clients)
+        .map(|_| srv.connect(Task::PointNav, epc).unwrap())
+        .collect();
+    let totals: Vec<u64> = std::thread::scope(|sc| {
+        let handles: Vec<_> = sessions
+            .into_iter()
+            .enumerate()
+            .map(|(c, mut session)| {
+                sc.spawn(move || {
+                    let mut last = 0;
+                    for t in 0..steps {
+                        let actions: Vec<u8> =
+                            (0..epc).map(|j| (1 + (t + c + j) % 3) as u8).collect();
+                        let v = session.step(&actions).unwrap();
+                        assert!(v.step > last, "steps advance monotonically");
+                        last = v.step;
+                        assert!(v.rewards.iter().all(|r| r.is_finite()));
+                    }
+                    last
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // all clients share the shard, so they all end on the same step count
+    assert!(totals.iter().all(|&s| s == steps as u64));
+    assert_eq!(srv.stats()[0].steps, steps as u64);
+}
