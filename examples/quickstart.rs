@@ -12,7 +12,13 @@
 //! per-shard coalescer assembles their partial submissions into full
 //! batch steps — one `EnvBatch::submit` serving both tenants.
 //!
-//! Act 3 needs the AOT artifacts (`make artifacts`): it loads the `test`
+//! Act 3 shows the scenario engine (`bps::scenario`): a declarative
+//! `ScenarioSpec` replaces the pre-generated dataset — scenes stream from
+//! procedural generation ahead of demand, and a success-driven
+//! `Curriculum` advances the spec's difficulty stages while a scripted
+//! GPS+compass policy drives the batch.
+//!
+//! Act 4 needs the AOT artifacts (`make artifacts`): it loads the `test`
 //! model variant, trains a handful of PPO iterations through the
 //! coordinator (a pure client of the same `EnvBatch` API), and prints the
 //! FPS + runtime breakdown.
@@ -103,7 +109,49 @@ fn main() -> anyhow::Result<()> {
     }
     drop(server);
 
-    // -- Act 3: PPO training through the same API (needs `make artifacts`) --
+    // -- Act 3: the scenario engine — streaming procgen + curriculum -------
+    println!("== Scenario quickstart: spec-driven worlds, curriculum run ==");
+    use bps::render::SceneRotation;
+    use bps::scenario::{sensor_policy, Curriculum, ScenarioSpec, ScenarioStream};
+    let spec = ScenarioSpec::parse(
+        "name=qs task=pointnav stages=3 tris=1k..6k extent=6..9 \
+         clutter=0..2 tex=32 max-steps=150",
+    )?;
+    println!("spec: {}", spec.summary());
+    let sc_pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+    // scenes are synthesized ahead of demand on the shared pool into a
+    // bounded prefetch queue — no gen-dataset step, no disk
+    let stream = ScenarioStream::new(spec.clone(), 7, 2, false, Arc::clone(&sc_pool));
+    let rot = SceneRotation::streaming(stream, 2)?;
+    let mut env = EnvBatchConfig::new(spec.task, RenderConfig::depth(32))
+        .sim(spec.sim_config())
+        .seed(7)
+        .pin_rotation(8)
+        .build_with_rotation(rot, 8, sc_pool)?;
+    let mut curriculum = Curriculum::new(spec.stages, 8, 0.25);
+    let mut actions = vec![0u8; 8];
+    for t in 0..400usize {
+        sensor_policy(env.view().goal, 0.15, t, &mut actions);
+        let v = env.step(&actions)?;
+        curriculum.observe(v.dones, v.successes, v.spl);
+        if let Some(stage) = curriculum.advance_if_ready() {
+            env.set_stage(stage)?; // future scenes generate at the new stage
+            println!("step {t:>4}: success window cleared the bar -> stage {stage}");
+        }
+        env.rotate_scenes()?;
+    }
+    println!(
+        "curriculum reached stage {}/{} after {} episodes \
+         ({} scene rotations, {} prefetch stalls)\n",
+        curriculum.stage(),
+        spec.stages - 1,
+        curriculum.episodes(),
+        env.rotations(),
+        env.feed_stalls()
+    );
+    drop(env);
+
+    // -- Act 4: PPO training through the same API (needs `make artifacts`) --
     let cfg = Config {
         variant: "test".into(),
         artifacts_dir: bps::bench::artifacts_dir(),

@@ -1,0 +1,93 @@
+//! Scenario-engine overhead bench: steady-state `EnvBatch` stepping FPS
+//! with scenes streamed from the scenario procgen pipeline vs the
+//! fixed-dataset rotation path, at matched scene complexity and rotation
+//! cadence. The streaming path synthesizes every rotated-in scene from
+//! scratch on the shared worker pool — `ratio` near 1.0 means a warm
+//! prefetch queue keeps that synthesis off the stepping hot path
+//! (`stalls` reports how often it failed to).
+
+use std::sync::Arc;
+
+use bps::bench::bench_iters;
+use bps::env::EnvBatchConfig;
+use bps::render::{RenderConfig, SceneRotation};
+use bps::scenario::{ScenarioSpec, ScenarioStream};
+use bps::scene::generate_dataset;
+use bps::scene::Complexity;
+use bps::sim::{Task, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const RES: usize = 32;
+const K: usize = 2;
+const ROTATE_EVERY: u64 = 8;
+
+fn actions_at(t: usize, n: usize) -> Vec<u8> {
+    (0..n)
+        .map(|i| (1 + (t + i) % (NUM_ACTIONS - 1)) as u8)
+        .collect()
+}
+
+fn main() {
+    let (warmup, iters) = bench_iters(20, 200);
+    let steps = warmup + iters;
+    // Matched workload: the spec's fixed bands mirror Complexity::test()
+    // (6 m extent, light geometry), so both paths step equivalent scenes.
+    let spec = ScenarioSpec::parse(
+        "name=bench task=pointnav stages=1 tris=600..600 extent=6..6 \
+         clutter=1..1 mats=2..2 tex=32",
+    )
+    .expect("bench spec");
+
+    println!(
+        "# scenario streaming vs fixed dataset: {steps} steps, depth {RES}, \
+         k={K}, rotate every {ROTATE_EVERY}"
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>7} {:>10} {:>7}",
+        "N", "dataset_fps", "stream_fps", "ratio", "rotations", "stalls"
+    );
+    for n in [16usize, 64] {
+        // --- baseline: fixed pre-generated dataset, K-slot rotation ----
+        let dir = std::env::temp_dir().join("bps_bench_scenario_ds");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = generate_dataset(&dir, 6, 0, 0, Complexity::test(), 2024).expect("dataset");
+        let pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+        let rot = SceneRotation::new(ds.clone(), ds.train.clone(), K, false).expect("rotation");
+        let mut env = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(RES))
+            .seed(7)
+            .overlap(false)
+            .pin_rotation(ROTATE_EVERY)
+            .build_with_rotation(rot, n, Arc::clone(&pool))
+            .expect("dataset batch");
+        let t0 = std::time::Instant::now();
+        for t in 0..steps {
+            env.step(&actions_at(t, n)).expect("dataset step");
+            env.rotate_scenes().expect("dataset rotate");
+        }
+        let dataset_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
+        drop(env);
+
+        // --- scenario streaming: scenes synthesized ahead of demand ----
+        let stream = ScenarioStream::new(spec.clone(), 7, 3, false, Arc::clone(&pool));
+        let rot = SceneRotation::streaming(stream, K).expect("streaming rotation");
+        let mut env = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(RES))
+            .seed(7)
+            .overlap(false)
+            .pin_rotation(ROTATE_EVERY)
+            .build_with_rotation(rot, n, Arc::clone(&pool))
+            .expect("streaming batch");
+        let t0 = std::time::Instant::now();
+        for t in 0..steps {
+            env.step(&actions_at(t, n)).expect("stream step");
+            env.rotate_scenes().expect("stream rotate");
+        }
+        let stream_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "{n:>6} {dataset_fps:>12.0} {stream_fps:>12.0} {:>7.3} {:>10} {:>7}",
+            stream_fps / dataset_fps,
+            env.rotations(),
+            env.feed_stalls()
+        );
+    }
+}

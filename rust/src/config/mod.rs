@@ -42,6 +42,23 @@ pub struct Config {
     // dataset
     pub dataset_dir: PathBuf,
     pub complexity: String, // "gibson" | "thor" | "test"
+    // scenario engine (replaces the on-disk dataset when set)
+    /// `--scenario`: an inline spec string (contains `=`) or the name of
+    /// a `.scenario` file in `scenario_dir`. When set, every shard runs
+    /// the scenario engine's streaming procgen instead of a pre-generated
+    /// dataset, and a success-driven curriculum advances the spec's
+    /// difficulty stages (`bps::scenario`).
+    pub scenario: Option<String>,
+    /// `--scenario-dir`: the `.scenario` registry directory.
+    pub scenario_dir: PathBuf,
+    /// `--prefetch`: scenario prefetch-queue depth (scenes generated
+    /// ahead of demand per shard).
+    pub prefetch_scenes: usize,
+    /// `--curriculum-window`: episodes of evidence per difficulty stage.
+    pub curriculum_window: usize,
+    /// `--curriculum-threshold`: windowed success rate that advances the
+    /// curriculum to the next stage.
+    pub curriculum_threshold: f32,
     // architecture
     pub arch: SimArch,
     pub pipeline: PipelineMode,
@@ -99,6 +116,11 @@ impl Default for Config {
             artifacts_dir: "artifacts".into(),
             dataset_dir: "datasets/gibson_like".into(),
             complexity: "gibson".into(),
+            scenario: None,
+            scenario_dir: "scenarios".into(),
+            prefetch_scenes: 2,
+            curriculum_window: 64,
+            curriculum_threshold: 0.8,
             arch: SimArch::Bps,
             pipeline: PipelineMode::Pipelined,
             num_envs: 64,
@@ -190,7 +212,8 @@ impl Config {
             "task", "tasks", "overlap", "rotate-every", "optimizer", "lr", "lr-scaling",
             "gamma", "gae-lambda",
             "normalize-adv", "frames", "seed", "threads", "out", "render-scale",
-            "memory-mb",
+            "memory-mb", "scenario", "scenario-dir", "prefetch", "curriculum-window",
+            "curriculum-threshold",
         ] {
             if let Some(v) = args.opt(key) {
                 self.set(&key.replace('-', "_"), &v)?;
@@ -205,6 +228,13 @@ impl Config {
             "artifacts_dir" => self.artifacts_dir = v.into(),
             "dataset" | "dataset_dir" => self.dataset_dir = v.into(),
             "complexity" => self.complexity = v.into(),
+            "scenario" => {
+                self.scenario = if v.is_empty() { None } else { Some(v.into()) }
+            }
+            "scenario_dir" => self.scenario_dir = v.into(),
+            "prefetch" | "prefetch_scenes" => self.prefetch_scenes = v.parse()?,
+            "curriculum_window" => self.curriculum_window = v.parse()?,
+            "curriculum_threshold" => self.curriculum_threshold = v.parse()?,
             "arch" => {
                 self.arch = SimArch::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad arch {v:?} (bps|workers)"))?
@@ -280,6 +310,23 @@ impl Config {
                 self.num_envs,
                 self.k_scenes
             );
+        }
+        if self.scenario.is_some() {
+            if self.arch != SimArch::Bps {
+                bail!("--scenario requires --arch bps (scene rotation is the scenario seam)");
+            }
+            if self.prefetch_scenes == 0 {
+                bail!("--prefetch must be positive");
+            }
+            if self.curriculum_window == 0 {
+                bail!("--curriculum-window must be positive");
+            }
+            if !(self.curriculum_threshold > 0.0 && self.curriculum_threshold <= 1.0) {
+                bail!(
+                    "--curriculum-threshold {} must be in (0, 1]",
+                    self.curriculum_threshold
+                );
+            }
         }
         Ok(())
     }
@@ -368,6 +415,48 @@ mod tests {
         // bad task rejected
         let mut cfg = Config::default();
         assert!(cfg.set("tasks", "pointnav,swim").is_err());
+    }
+
+    #[test]
+    fn scenario_keys_parse_and_validate() {
+        let argv: Vec<String> = [
+            "train",
+            "--scenario",
+            "name=maze task=pointnav tris=10k..40k stages=3",
+            "--scenario-dir",
+            "specs",
+            "--prefetch",
+            "3",
+            "--curriculum-window",
+            "32",
+            "--curriculum-threshold",
+            "0.7",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let mut args = Args::parse(&argv).unwrap();
+        let cfg = Config::load(None, &mut args).unwrap();
+        assert_eq!(
+            cfg.scenario.as_deref(),
+            Some("name=maze task=pointnav tris=10k..40k stages=3")
+        );
+        assert_eq!(cfg.scenario_dir, PathBuf::from("specs"));
+        assert_eq!(cfg.prefetch_scenes, 3);
+        assert_eq!(cfg.curriculum_window, 32);
+        assert!((cfg.curriculum_threshold - 0.7).abs() < 1e-6);
+        // scenario runs require the BPS arch and sane curriculum knobs
+        let mut bad = Config {
+            scenario: Some("task=pointnav".into()),
+            arch: SimArch::Workers,
+            ..Config::default()
+        };
+        assert!(bad.validate().is_err());
+        bad.arch = SimArch::Bps;
+        bad.curriculum_threshold = 1.5;
+        assert!(bad.validate().is_err());
+        bad.curriculum_threshold = 0.8;
+        bad.validate().unwrap();
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::policy::Policy;
 use crate::render::{RenderConfig, SceneRotation, Sensor};
 use crate::rollout::Rollout;
 use crate::runtime::{Exec, Manifest, ParamStore, Runtime, Variant};
+use crate::scenario::{Curriculum, ScenarioSpec, ScenarioStream};
 use crate::scene::{Dataset, SceneAsset};
 use crate::util::pool::WorkerPool;
 use crate::util::timer::{FpsMeter, Profiler};
@@ -47,6 +48,9 @@ struct Shard {
     policy: Policy,
     rollout: Rollout,
     last_dones: Vec<bool>,
+    /// Scenario runs only: the per-shard difficulty scheduler. Stage
+    /// changes flow through the public seam (`EnvBatch::set_stage`).
+    curriculum: Option<Curriculum>,
 }
 
 /// Per-iteration summary.
@@ -69,6 +73,9 @@ pub struct Coordinator {
     trainer: Trainer,
     rt: Runtime,
     man: Manifest,
+    /// Resolved `--scenario` spec (evaluation generates val scenes from
+    /// it instead of reading a dataset split).
+    scenario: Option<ScenarioSpec>,
     /// Compiled `infer_n{n}` executable, cached per env count so repeated
     /// `evaluate` calls don't reload + recompile the artifact.
     eval_infer: Option<(usize, Rc<Exec>)>,
@@ -130,13 +137,24 @@ impl Coordinator {
         };
         let pool = Arc::new(WorkerPool::new(threads));
 
-        let dataset = Dataset::open(&cfg.dataset_dir).with_context(|| {
-            format!(
-                "open dataset {:?} — generate with `bps gen-dataset --dir {}`",
-                cfg.dataset_dir,
-                cfg.dataset_dir.display()
-            )
-        })?;
+        // Scenario runs synthesize scenes on demand; dataset runs stream
+        // pre-generated assets from disk. Exactly one source is active.
+        let scenario = cfg
+            .scenario
+            .as_ref()
+            .map(|arg| ScenarioSpec::resolve(arg, &cfg.scenario_dir))
+            .transpose()?;
+        let dataset = if scenario.is_some() {
+            None
+        } else {
+            Some(Dataset::open(&cfg.dataset_dir).with_context(|| {
+                format!(
+                    "open dataset {:?} — generate with `bps gen-dataset --dir {}`",
+                    cfg.dataset_dir,
+                    cfg.dataset_dir.display()
+                )
+            })?)
+        };
 
         let mut shards = Vec::with_capacity(cfg.shards);
         for s in 0..cfg.shards {
@@ -144,7 +162,8 @@ impl Coordinator {
                 &cfg,
                 &variant,
                 Rc::clone(&infer),
-                &dataset,
+                dataset.as_ref(),
+                scenario.as_ref(),
                 s,
                 Arc::clone(&pool),
             )?);
@@ -167,6 +186,7 @@ impl Coordinator {
             trainer,
             rt,
             man,
+            scenario,
             eval_infer,
         })
     }
@@ -208,6 +228,9 @@ impl Coordinator {
                 shard.rollout.record_outcome(t, v.rewards, v.dones);
                 self.stats
                     .update(v.rewards, v.dones, v.successes, v.spl, v.scores);
+                if let Some(cur) = shard.curriculum.as_mut() {
+                    cur.observe(v.dones, v.successes, v.spl);
+                }
                 shard.policy.reset_done(v.dones);
                 shard.last_dones.copy_from_slice(v.dones);
             }
@@ -217,6 +240,13 @@ impl Coordinator {
                 let v = shard.env.view();
                 shard.policy.values_only(&self.params.flat, v.obs, v.goal)?
             };
+            // curriculum: advance the difficulty stage before rotating so
+            // the rotation's next prefetches request the new stage
+            if let Some(cur) = shard.curriculum.as_mut() {
+                if let Some(stage) = cur.advance_if_ready() {
+                    shard.env.set_stage(stage)?;
+                }
+            }
             shard.env.rotate_scenes()?;
             let (sim_d, render_d) = shard.env.drain_timings();
             self.prof.add("sim", sim_d);
@@ -232,6 +262,14 @@ impl Coordinator {
         let frames = (self.cfg.num_envs * l * self.shards.len()) as u64;
         self.fps.add_frames(frames);
         Ok(IterStats { frames, losses })
+    }
+
+    /// Per-shard curriculum stage (0 for shards without a curriculum).
+    pub fn stages(&self) -> Vec<u32> {
+        self.shards
+            .iter()
+            .map(|s| s.curriculum.as_ref().map_or(0, Curriculum::stage))
+            .collect()
     }
 
     /// Paper-methodology FPS: frames / wall-time over rollout + training.
@@ -251,25 +289,57 @@ impl Coordinator {
     /// Heterogeneous-task runs (`--tasks`) evaluate the first listed
     /// task (shard 0's); to evaluate a different one, list it first.
     pub fn evaluate(&mut self, split: &str, episodes: usize) -> Result<(f32, f32, f32)> {
-        let dataset = Dataset::open(&self.cfg.dataset_dir)?;
-        let ids = dataset.split(split)?.to_vec();
-        if ids.is_empty() {
-            bail!("split {split:?} is empty");
-        }
         let n = self.cfg.num_envs;
         let with_tex = self.variant.in_ch == 3;
-        let scenes: Vec<Arc<SceneAsset>> = (0..n)
-            .map(|i| {
-                dataset
-                    .load_scene(&ids[i % ids.len()], with_tex)
-                    .map(Arc::new)
-            })
-            .collect::<Result<_>>()?;
+        // Scenario runs: "val" = unseen layouts from the spec's hardest
+        // stage, drawn from a seed stream disjoint from training's.
+        // Dataset runs: load the split's scenes as before.
+        let (task, sim, scenes): (_, _, Vec<Arc<SceneAsset>>) = match &self.scenario {
+            Some(spec) => {
+                // Synthesize through the same DR pipeline as training
+                // (complexity + lighting proxy + texture stripping), in
+                // parallel on the shared pool — serial procgen of n heavy
+                // scenes would stall every periodic eval.
+                let hardest = spec.stages.saturating_sub(1);
+                let base_seed = self.cfg.seed;
+                let slots: Vec<std::sync::Mutex<Option<SceneAsset>>> =
+                    (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+                self.pool.parallel_for(n, 1, |i| {
+                    let seed = base_seed ^ 0xEA51_0000 ^ (i as u64).wrapping_mul(7919);
+                    let id = format!("{}_{split}_{i:03}", spec.name);
+                    let scene =
+                        crate::scenario::synthesize_scene(spec, hardest, &id, seed, with_tex);
+                    *slots[i].lock().unwrap() = Some(scene);
+                });
+                let scenes = slots
+                    .into_iter()
+                    .map(|s| Arc::new(s.into_inner().unwrap().expect("eval scene synthesized")))
+                    .collect();
+                (spec.task, spec.sim_config(), scenes)
+            }
+            None => {
+                let dataset = Dataset::open(&self.cfg.dataset_dir)?;
+                let ids = dataset.split(split)?.to_vec();
+                if ids.is_empty() {
+                    bail!("split {split:?} is empty");
+                }
+                let scenes = (0..n)
+                    .map(|i| {
+                        dataset
+                            .load_scene(&ids[i % ids.len()], with_tex)
+                            .map(Arc::new)
+                    })
+                    .collect::<Result<_>>()?;
+                let task = self.cfg.task_of_shard(0);
+                (task, crate::sim::SimConfig::for_task(task), scenes)
+            }
+        };
         let rcfg = render_cfg(&self.cfg, &self.variant);
         // Eval consumes every step immediately (submit + wait back to
         // back, no bookkeeping in between), so the synchronous path is
         // strictly cheaper and bitwise-identical — no driver thread.
-        let mut env = EnvBatchConfig::new(self.cfg.task_of_shard(0), rcfg)
+        let mut env = EnvBatchConfig::new(task, rcfg)
+            .sim(sim)
             .seed(self.cfg.seed ^ 0xEA51)
             .overlap(false)
             .build_with_scenes(scenes, Arc::clone(&self.pool))?;
@@ -317,44 +387,76 @@ impl Coordinator {
 }
 
 /// Build one shard (scene assignment differs per arch — see module docs).
+/// Exactly one of `dataset` / `scenario` is `Some`: scenario shards run
+/// the streaming procgen pipeline behind the scene rotation plus a
+/// success-driven curriculum; dataset shards stream `.bsc` assets.
 fn build_shard(
     cfg: &Config,
     variant: &Variant,
     infer: Rc<Exec>,
-    dataset: &Dataset,
+    dataset: Option<&Dataset>,
+    scenario: Option<&ScenarioSpec>,
     shard_idx: usize,
     pool: Arc<WorkerPool>,
 ) -> Result<Shard> {
     let n = cfg.num_envs;
     let with_tex = variant.in_ch == 3;
-    // rotate the train split so shards see different scenes
-    let mut ids = dataset.train.clone();
-    if ids.is_empty() {
-        bail!("dataset has no train scenes");
-    }
-    let shift = (shard_idx * cfg.k_scenes) % ids.len();
-    ids.rotate_left(shift);
-
     let rcfg = render_cfg(cfg, variant);
-    let mut ecfg = EnvBatchConfig::new(cfg.task_of_shard(shard_idx), rcfg)
+    let task = match scenario {
+        Some(spec) => spec.task,
+        None => cfg.task_of_shard(shard_idx),
+    };
+    let mut ecfg = EnvBatchConfig::new(task, rcfg)
         .seed(cfg.seed.wrapping_add(shard_idx as u64 * 7919))
         .overlap(cfg.overlap);
     if let Some(every) = cfg.rotate_every {
         ecfg = ecfg.pin_rotation(every);
     }
-    let env = match cfg.arch {
-        SimArch::Bps => {
-            let rot = SceneRotation::new(dataset.clone(), ids, cfg.k_scenes, with_tex)?;
-            ecfg.build_with_rotation(rot, n, pool)?
+
+    let mut curriculum = None;
+    let env = if let Some(spec) = scenario {
+        // Scenario engine: the spec defines the task, episode constraints
+        // and the streaming scene supply; shards get disjoint seed
+        // streams so they synthesize different worlds.
+        ecfg = ecfg.sim(spec.sim_config());
+        let stream_seed = cfg.seed.wrapping_add(0x5CE2A0 + shard_idx as u64 * 104_729);
+        let stream = ScenarioStream::new(
+            spec.clone(),
+            stream_seed,
+            cfg.prefetch_scenes,
+            with_tex,
+            Arc::clone(&pool),
+        );
+        let rot = SceneRotation::streaming(stream, cfg.k_scenes)?;
+        curriculum = Some(Curriculum::new(
+            spec.stages,
+            cfg.curriculum_window,
+            cfg.curriculum_threshold,
+        ));
+        ecfg.build_with_rotation(rot, n, pool)?
+    } else {
+        let dataset = dataset.expect("dataset or scenario");
+        // rotate the train split so shards see different scenes
+        let mut ids = dataset.train.clone();
+        if ids.is_empty() {
+            bail!("dataset has no train scenes");
         }
-        SimArch::Workers => {
-            // No sharing: every env deep-loads its own copy (real memory).
-            let mut scenes = Vec::with_capacity(n);
-            for i in 0..n {
-                let base = dataset.load_scene(&ids[i % ids.len()], with_tex)?;
-                scenes.push(Arc::new(base));
+        let shift = (shard_idx * cfg.k_scenes) % ids.len();
+        ids.rotate_left(shift);
+        match cfg.arch {
+            SimArch::Bps => {
+                let rot = SceneRotation::new(dataset.clone(), ids, cfg.k_scenes, with_tex)?;
+                ecfg.build_with_rotation(rot, n, pool)?
             }
-            ecfg.build_with_scenes(scenes, pool)?
+            SimArch::Workers => {
+                // No sharing: every env deep-loads its own copy (real memory).
+                let mut scenes = Vec::with_capacity(n);
+                for i in 0..n {
+                    let base = dataset.load_scene(&ids[i % ids.len()], with_tex)?;
+                    scenes.push(Arc::new(base));
+                }
+                ecfg.build_with_scenes(scenes, pool)?
+            }
         }
     };
 
@@ -370,6 +472,7 @@ fn build_shard(
         policy,
         rollout,
         last_dones: vec![true; n], // first obs of each env starts an episode
+        curriculum,
     })
 }
 

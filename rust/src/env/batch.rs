@@ -89,6 +89,12 @@ struct EnvWorld {
     rotation: Option<SceneRotation>,
     pool: Arc<WorkerPool>,
     timings: Arc<StepTimings>,
+    /// Completed rotation swaps, mirrored for the client (and the serve
+    /// layer's shard stats) to read without reaching into the world.
+    rotations: Arc<AtomicU64>,
+    /// Scenario-feed stalls (blocking takes that found the prefetch
+    /// queue cold), mirrored the same way.
+    feed_stalls: Arc<AtomicU64>,
 }
 
 impl EnvWorld {
@@ -134,6 +140,16 @@ impl EnvWorld {
             } else {
                 rot.rotate(&mut self.sim);
             }
+            self.rotations.store(rot.rotations, Ordering::Relaxed);
+            self.feed_stalls.store(rot.feed_stalls(), Ordering::Relaxed);
+        }
+    }
+
+    /// Forward a curriculum stage change to the rotation's scene feed
+    /// (no-op without a rotation or with a dataset-backed one).
+    fn set_stage(&mut self, stage: u32) {
+        if let Some(rot) = self.rotation.as_mut() {
+            rot.set_stage(stage);
         }
     }
 }
@@ -142,6 +158,7 @@ impl EnvWorld {
 enum Request {
     Step { actions: Vec<u8>, buf: StepBuffers },
     Rotate { pinned: bool },
+    SetStage(u32),
 }
 
 /// Completed step: the filled buffer plus the recycled action vector.
@@ -168,6 +185,7 @@ fn driver_loop(mut world: EnvWorld, req_rx: Receiver<Request>, resp_tx: Sender<R
                 }
             }
             Request::Rotate { pinned } => world.rotate(pinned),
+            Request::SetStage(stage) => world.set_stage(stage),
         }
     }
 }
@@ -188,6 +206,8 @@ pub struct EnvBatch {
     actions_scratch: Option<Vec<u8>>,
     inflight: bool,
     timings: Arc<StepTimings>,
+    rotations: Arc<AtomicU64>,
+    feed_stalls: Arc<AtomicU64>,
     resident_bytes: usize,
     /// `Some(k)`: pinned rotation schedule — every k-th `rotate_scenes`
     /// call performs one blocking swap (`EnvBatchConfig::pin_rotation`).
@@ -218,12 +238,16 @@ impl EnvBatch {
         let sim = BatchSim::new(cfg.sim, scenes, cfg.seed);
         let renderer = BatchRenderer::new(cfg.render, n);
         let timings = Arc::new(StepTimings::default());
+        let rotations = Arc::new(AtomicU64::new(0));
+        let feed_stalls = Arc::new(AtomicU64::new(0));
         let mut world = EnvWorld {
             sim,
             renderer,
             rotation,
             pool,
             timings: Arc::clone(&timings),
+            rotations: Arc::clone(&rotations),
+            feed_stalls: Arc::clone(&feed_stalls),
         };
         let mut front = StepBuffers::new(n, obs_floats);
         world.render_initial(&mut front);
@@ -253,6 +277,8 @@ impl EnvBatch {
             actions_scratch: Some(Vec::with_capacity(n)),
             inflight: false,
             timings,
+            rotations,
+            feed_stalls,
             resident_bytes,
             rotate_every: cfg.rotate_every,
             rotate_calls: 0,
@@ -376,6 +402,47 @@ impl EnvBatch {
                 .send(Request::Rotate { pinned })
                 .map_err(|_| anyhow!("env driver thread terminated")),
         }
+    }
+
+    /// Forward a curriculum stage change to the scene rotation's feed
+    /// (the scenario engine's seam — see `bps::scenario::Curriculum`).
+    /// Executed in request order with steps and rotations, so the stage a
+    /// given rotation sees is a pure function of the call sequence in
+    /// both the pipelined and synchronous modes. No-op for batches built
+    /// without a rotation or over a dataset feed.
+    pub fn set_stage(&mut self, stage: u32) -> Result<()> {
+        match &mut self.mode {
+            Mode::Sync(world) => {
+                world.set_stage(stage);
+                Ok(())
+            }
+            Mode::Pipelined { req_tx, .. } => req_tx
+                .as_ref()
+                .expect("driver channel open")
+                .send(Request::SetStage(stage))
+                .map_err(|_| anyhow!("env driver thread terminated")),
+        }
+    }
+
+    /// Completed scene-rotation swaps so far. In pipelined mode this
+    /// reflects rotations the driver has already executed.
+    pub fn rotations(&self) -> u64 {
+        self.rotations.load(Ordering::Relaxed)
+    }
+
+    /// Scenario-feed stalls so far: rotation swaps that had to wait on
+    /// scene synthesis because the prefetch queue was cold. Stays 0 when
+    /// generation keeps up with rotation (the non-blocking guarantee
+    /// asserted in `rust/tests/scenario.rs`); always 0 for dataset feeds
+    /// and fixed scene assignments.
+    pub fn feed_stalls(&self) -> u64 {
+        self.feed_stalls.load(Ordering::Relaxed)
+    }
+
+    /// Shared rotation counter (the serve layer reads it for shard stats
+    /// after the batch moves onto its driver thread).
+    pub(crate) fn rotations_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.rotations)
     }
 
     /// Drain accumulated (simulation, rendering) wall time since the last

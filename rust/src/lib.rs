@@ -18,6 +18,7 @@ pub mod rollout;
 pub mod navmesh;
 pub mod render;
 pub mod runtime;
+pub mod scenario;
 pub mod scene;
 pub mod serve;
 pub mod sim;

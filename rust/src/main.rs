@@ -1,12 +1,13 @@
 //! `bps` — the launcher CLI for the Batch Processing Simulator.
 //!
 //! Subcommands:
-//!   gen-dataset   generate a procedural scene dataset with splits
-//!   train         end-to-end RL training (paper Fig. 2 loop)
-//!   eval          evaluate a checkpoint on a dataset split
-//!   serve-demo    multi-client serving demo over the SimServer layer
-//!   info          print manifest / artifact information
-//!   help          describe the batched environment API + all options
+//!   gen-dataset    generate a procedural scene dataset with splits
+//!   train          end-to-end RL training (paper Fig. 2 loop)
+//!   eval           evaluate a checkpoint on a dataset split
+//!   serve-demo     multi-client serving demo over the SimServer layer
+//!   scenario-demo  scenario engine demo: streaming procgen + curriculum
+//!   info           print manifest / artifact information
+//!   help           describe the batched environment API + all options
 //!
 //! Training and eval drive environments through the `bps::env` batched
 //! request/response API: each shard is an `EnvBatch` the coordinator
@@ -43,6 +44,7 @@ fn run() -> Result<()> {
         Some("train") => train(&mut args),
         Some("eval") => eval(&mut args),
         Some("serve-demo") => serve_demo(&mut args),
+        Some("scenario-demo") => scenario_demo(&mut args),
         Some("info") => info(&mut args),
         Some("help") | None => {
             print_help();
@@ -51,7 +53,8 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|serve-demo|info|help> [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|serve-demo|scenario-demo|info|help> \
+                 [--key value ...]"
             )
         }
     }
@@ -76,9 +79,30 @@ SUBCOMMANDS
                FPS, occupancy, and per-client step-latency p50/p95
                (--clients M --envs-per-client E --steps T --shards S
                 --task NAME --res R --straggler wait|noop|repeat
-                --deadline-ticks K --threads T --seed S)
+                --deadline-ticks K --threads T --seed S --rotate-every K
+                --mem-budget MB  admission-control budget, 0 = unlimited)
+  scenario-demo drive the scenario engine (bps::scenario) with a scripted
+               GPS+compass policy: scenes stream from procgen ahead of
+               demand and a success-driven curriculum advances difficulty
+               (--scenario SPEC|NAME --scenario-dir DIR --envs N --steps T
+                --k K --prefetch P --rotate-every K --res R --seed S
+                --threads T --window E --threshold F --list)
   info         print the AOT artifact manifest (--artifacts-dir PATH)
   help         this text
+
+SCENARIO SPECS
+  A scenario declares what world every environment runs: task, a
+  *distribution* over scene complexity (ranges, not points), episode
+  constraints, and domain-randomization knobs. Inline spec strings are
+  key=value tokens; names resolve to <scenario-dir>/<name>.scenario:
+    --scenario \"name=maze task=pointnav tris=20k..80k stages=3
+                extent=8..14 clutter=0..6 mats=2..8 tex=64
+                light=0.5..1.5 min-geo=2 max-steps=400\"
+  With stages=S, difficulty stage s samples the [s/S, (s+1)/S] band of
+  every range; the curriculum advances stages when the windowed success
+  rate clears --curriculum-threshold. Scenes are synthesized ahead of
+  demand on the worker pool (bounded prefetch queue), so scene rotation
+  never blocks on procgen.
 
 ENVIRONMENT API
   Training and eval step environments through the batched request/response
@@ -114,7 +138,11 @@ SHARED TRAINING OPTIONS (CLI overrides the TOML config)
   --tasks a,b,...       heterogeneous per-shard tasks, round-robin over shards
   --optimizer lamb|adam --lr X --lr-scaling BOOL --gamma X --gae-lambda X
   --normalize-adv BOOL  --frames N --seed S --threads T --out DIR
-  --render-scale K      supersampling factor   --memory-mb MB  accelerator budget"
+  --render-scale K      supersampling factor   --memory-mb MB  accelerator budget
+  --scenario SPEC|NAME  run the scenario engine instead of a dataset (above)
+  --scenario-dir DIR    .scenario registry (default scenarios/)
+  --prefetch P          scenario prefetch-queue depth (default 2)
+  --curriculum-window E --curriculum-threshold F   stage-advance rule"
     );
 }
 
@@ -176,9 +204,14 @@ fn train(args: &mut Args) -> Result<()> {
         iter += 1;
         if iter % log_every as u64 == 0 {
             let l = it.losses;
+            let stage = if coord.cfg.scenario.is_some() {
+                format!(" stage {:?}", coord.stages())
+            } else {
+                String::new()
+            };
             println!(
                 "iter {iter:>5} frames {:>9} fps {:>8.0} | reward {:+.3} success {:.2} \
-                 spl {:.2} | pi {:+.4} v {:.4} H {:.3} lr {:.2e} (eps {})",
+                 spl {:.2} | pi {:+.4} v {:.4} H {:.3} lr {:.2e} (eps {}){stage}",
                 coord.frames(),
                 coord.fps(),
                 coord.stats.reward.mean(),
@@ -265,6 +298,7 @@ fn serve_demo(args: &mut Args) -> Result<()> {
     let seed = args.u64_or("seed", 7)?;
     let threads = args.usize_or("threads", 0)?;
     let ticks = args.usize_or("deadline-ticks", 2)? as u32;
+    let mem_budget_mb = args.usize_or("mem-budget", 0)?;
     let task = {
         let name = args.opt_or("task", "pointnav");
         Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
@@ -298,7 +332,11 @@ fn serve_demo(args: &mut Args) -> Result<()> {
         let scenes = (0..slots_per_shard).map(|_| Arc::clone(&scene)).collect();
         specs.push(ShardSpec::with_scenes(cfg, scenes).straggler(straggler));
     }
-    let server = SimServer::start(specs, pool)?;
+    let budget = match mem_budget_mb {
+        0 => None,
+        mb => Some(mb * 1024 * 1024),
+    };
+    let server = SimServer::with_budget(specs, pool, budget)?;
     println!(
         "serve-demo: {clients} clients x {epc} envs on {shards} shard(s) x \
          {slots_per_shard} slots, task {task:?}, {steps} steps each"
@@ -358,14 +396,104 @@ fn serve_demo(args: &mut Args) -> Result<()> {
     for (i, st) in server.stats().iter().enumerate() {
         println!(
             "  shard {i}: task {:?} steps {} straggler-fills {} \
-             latency p50 {:.2} ms p95 {:.2} ms",
+             resident {:.1} MB latency p50 {:.2} ms p95 {:.2} ms",
             st.task,
             st.steps,
             st.straggler_fills,
+            st.resident_bytes as f64 / 1e6,
             st.latency_p50 * 1e3,
             st.latency_p95 * 1e3
         );
     }
+    Ok(())
+}
+
+/// Drive the scenario engine end to end without any AOT artifacts: a
+/// scripted GPS+compass policy steps an `EnvBatch` whose scenes stream
+/// from procedural generation, while a success-driven curriculum advances
+/// the spec's difficulty stages. The CI smoke job runs this for a handful
+/// of steps.
+fn scenario_demo(args: &mut Args) -> Result<()> {
+    use bps::env::EnvBatchConfig;
+    use bps::render::{RenderConfig, SceneRotation};
+    use bps::scenario::{registry_list, sensor_policy, Curriculum, ScenarioSpec, ScenarioStream};
+    use bps::util::pool::WorkerPool;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    let dir = args.opt_or("scenario-dir", "scenarios");
+    if args.flag("list") {
+        for name in registry_list(Path::new(&dir))? {
+            let spec = ScenarioSpec::resolve(&name, Path::new(&dir))?;
+            println!("{name}: {}", spec.summary());
+        }
+        return Ok(());
+    }
+    let spec_arg = args.opt_or(
+        "scenario",
+        "name=demo task=pointnav stages=3 tris=1k..6k extent=6..9 \
+         clutter=0..2 mats=1..3 tex=32 min-geo=1 max-steps=200",
+    );
+    let spec = ScenarioSpec::resolve(&spec_arg, Path::new(&dir))?;
+    let n = args.usize_or("envs", 8)?.max(1);
+    let steps = args.usize_or("steps", 256)?.max(1);
+    let k = args.usize_or("k", 2)?.max(1);
+    let prefetch = args.usize_or("prefetch", 2)?.max(1);
+    let rotate_every = args.u64_or("rotate-every", 8)?.max(1);
+    let res = args.usize_or("res", 16)?.max(4);
+    let seed = args.u64_or("seed", 7)?;
+    let threads = args.usize_or("threads", 0)?;
+    let window = args.usize_or("window", 12)?.max(1);
+    let threshold = args.f64_or("threshold", 0.6)? as f32;
+
+    println!("scenario: {}", spec.summary());
+    let pool = Arc::new(WorkerPool::new(if threads == 0 {
+        WorkerPool::default_size()
+    } else {
+        threads
+    }));
+    let stream = ScenarioStream::new(spec.clone(), seed, prefetch, false, Arc::clone(&pool));
+    let rot = SceneRotation::streaming(stream, k)?;
+    let mut env = EnvBatchConfig::new(spec.task, RenderConfig::depth(res))
+        .sim(spec.sim_config())
+        .seed(seed)
+        .pin_rotation(rotate_every)
+        .build_with_rotation(rot, n, pool)?;
+    let mut cur = Curriculum::new(spec.stages, window, threshold);
+    let stop_dist = spec.sim_config().success_dist * 0.75;
+    let mut actions = vec![0u8; n];
+    let (mut episodes, mut successes) = (0u64, 0u64);
+    let t0 = std::time::Instant::now();
+    for t in 0..steps {
+        sensor_policy(env.view().goal, stop_dist, t, &mut actions);
+        let v = env.step(&actions)?;
+        cur.observe(v.dones, v.successes, v.spl);
+        episodes += v.dones.iter().filter(|&&d| d).count() as u64;
+        successes += v.successes.iter().filter(|&&s| s).count() as u64;
+        if let Some(stage) = cur.advance_if_ready() {
+            env.set_stage(stage)?;
+            println!(
+                "  step {t:>5}: stage -> {stage}/{} ({} episodes so far)",
+                spec.stages - 1,
+                cur.episodes()
+            );
+        }
+        env.rotate_scenes()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{steps} steps x {n} envs in {wall:.2}s = {:.0} FPS | episodes {episodes} \
+         success {:.0}% | stage {}/{} | rotations {}",
+        (steps * n) as f64 / wall,
+        if episodes > 0 {
+            100.0 * successes as f64 / episodes as f64
+        } else {
+            0.0
+        },
+        cur.stage(),
+        spec.stages - 1,
+        env.rotations()
+    );
     Ok(())
 }
 

@@ -59,6 +59,18 @@ impl Window {
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
+
+    /// True once the window holds `cap` samples — the "enough evidence"
+    /// gate for the scenario curriculum's advance rule.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    /// Drop every sample (the curriculum clears its windows on a stage
+    /// advance so each stage is judged on its own episodes).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
 }
 
 /// Aggregated episode statistics (success / SPL / score / reward).
@@ -141,11 +153,15 @@ mod tests {
     #[test]
     fn window_caps_and_averages() {
         let mut w = Window::new(3);
+        assert!(!w.is_full());
         for x in [1.0, 2.0, 3.0, 4.0] {
             w.push(x);
         }
         assert_eq!(w.len(), 3);
+        assert!(w.is_full());
         assert!((w.mean() - 3.0).abs() < 1e-6);
+        w.clear();
+        assert!(w.is_empty() && !w.is_full());
     }
 
     #[test]

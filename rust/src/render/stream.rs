@@ -14,6 +14,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::scenario::ScenarioStream;
 use crate::scene::{Dataset, SceneAsset};
 use crate::sim::BatchSim;
 
@@ -72,15 +73,29 @@ impl AssetStreamer {
     }
 }
 
+/// Where a rotation's fresh scenes come from: the on-disk dataset loader
+/// or the scenario engine's streaming procgen pipeline. Both prefetch in
+/// the background; the enum keeps dispatch static and the dataset path
+/// byte-identical to its pre-scenario behavior.
+enum Feed {
+    /// `.bsc` assets streamed from a dataset split (one load in flight).
+    Dataset {
+        streamer: AssetStreamer,
+        ids: Vec<String>,
+        next_scene: usize,
+        inflight: bool,
+    },
+    /// Scenes synthesized on demand by the scenario engine (its own
+    /// bounded prefetch queue; unbounded scene supply).
+    Scenario(Box<ScenarioStream>),
+}
+
 /// K resident scenes rotated through the training split.
 pub struct SceneRotation {
     pub k: usize,
     pub active: Vec<Arc<SceneAsset>>,
-    ids: Vec<String>,
-    next_scene: usize,
     next_slot: usize,
-    streamer: AssetStreamer,
-    inflight: bool,
+    feed: Feed,
     pub rotations: u64,
 }
 
@@ -108,23 +123,116 @@ impl SceneRotation {
         let mut rot = SceneRotation {
             k,
             active,
-            ids: split_ids,
-            next_scene: k,
             next_slot: 0,
-            streamer,
-            inflight: false,
+            feed: Feed::Dataset {
+                streamer,
+                ids: split_ids,
+                next_scene: k,
+                inflight: false,
+            },
             rotations: 0,
         };
         rot.kick_prefetch();
         Ok(rot)
     }
 
+    /// A rotation fed by the scenario engine's streaming procgen: pull
+    /// the initial K scenes (blocking — build time, like the dataset
+    /// path's initial loads), then keep the stream's bounded queue warm.
+    pub fn streaming(mut stream: ScenarioStream, k: usize) -> Result<SceneRotation> {
+        let k = k.max(1);
+        let mut active = Vec::with_capacity(k);
+        for _ in 0..k {
+            let scene = stream
+                .next_blocking()
+                .ok_or_else(|| anyhow::anyhow!("scenario procgen stream died during startup"))?;
+            active.push(scene);
+        }
+        // startup waits are expected; stalls now measure steady state
+        stream.reset_stalls();
+        stream.top_up();
+        Ok(SceneRotation {
+            k,
+            active,
+            next_slot: 0,
+            feed: Feed::Scenario(Box::new(stream)),
+            rotations: 0,
+        })
+    }
+
+    /// Forward a curriculum stage change to a scenario feed (a no-op for
+    /// dataset-backed rotations — their difficulty is baked on disk).
+    pub fn set_stage(&mut self, stage: u32) {
+        if let Feed::Scenario(stream) = &mut self.feed {
+            stream.set_stage(stage);
+        }
+    }
+
+    /// Steady-state stalls of a scenario feed (0 for dataset feeds):
+    /// blocking takes that found the prefetch queue cold.
+    pub fn feed_stalls(&self) -> u64 {
+        match &self.feed {
+            Feed::Scenario(stream) => stream.stalls(),
+            Feed::Dataset { .. } => 0,
+        }
+    }
+
+    /// Block until a scenario feed's prefetch queue is fully warm (no-op
+    /// for dataset feeds). Tests and benches use this to assert the
+    /// warm-queue non-blocking property deterministically.
+    pub fn wait_feed_warm(&mut self) {
+        if let Feed::Scenario(stream) = &mut self.feed {
+            stream.wait_warm();
+        }
+    }
+
+    /// True when the feed cannot supply a scene beyond the K resident
+    /// ones (a dataset split that fits entirely in the slots).
+    fn exhausted(&self) -> bool {
+        match &self.feed {
+            Feed::Dataset { ids, .. } => ids.len() <= self.k,
+            Feed::Scenario(_) => false,
+        }
+    }
+
     fn kick_prefetch(&mut self) {
-        if !self.inflight && self.ids.len() > self.k {
-            let id = &self.ids[self.next_scene % self.ids.len()];
-            self.streamer.request(id);
-            self.next_scene += 1;
-            self.inflight = true;
+        match &mut self.feed {
+            Feed::Dataset { streamer, ids, next_scene, inflight } => {
+                if !*inflight && ids.len() > self.k {
+                    let id = &ids[*next_scene % ids.len()];
+                    streamer.request(id);
+                    *next_scene += 1;
+                    *inflight = true;
+                }
+            }
+            Feed::Scenario(stream) => stream.top_up(),
+        }
+    }
+
+    /// Non-blocking take from the feed, if a fresh scene is ready.
+    fn try_take(&mut self) -> Option<Arc<SceneAsset>> {
+        match &mut self.feed {
+            Feed::Dataset { streamer, inflight, .. } => {
+                let mut got = None;
+                for (_, scene) in streamer.poll() {
+                    *inflight = false;
+                    got = Some(scene);
+                }
+                got
+            }
+            Feed::Scenario(stream) => stream.try_next(),
+        }
+    }
+
+    /// Blocking take (the pinned schedule's deterministic swap).
+    fn take_blocking(&mut self) -> Option<Arc<SceneAsset>> {
+        match &mut self.feed {
+            Feed::Dataset { streamer, inflight, .. } => {
+                let (_, scene) = streamer.wait_one()?;
+                *inflight = false;
+                Some(scene)
+            }
+            Feed::Scenario(stream) => stream.next_blocking(),
         }
     }
 
@@ -152,8 +260,7 @@ impl SceneRotation {
     /// [`rotate_pinned`](SceneRotation::rotate_pinned) for the
     /// reproducible variant.
     pub fn rotate(&mut self, sim: &mut BatchSim) {
-        for (_, scene) in self.streamer.poll() {
-            self.inflight = false;
+        if let Some(scene) = self.try_take() {
             self.swap_in(scene, sim);
         }
         self.kick_prefetch();
@@ -165,17 +272,18 @@ impl SceneRotation {
     /// of load latency, so A/B runs (e.g. pipelined vs synchronous
     /// stepping) rotate scenes at identical iterations even with prefetch
     /// active (`EnvBatchConfig::pin_rotation`). No-op when the whole split
-    /// already fits in the K resident slots.
+    /// already fits in the K resident slots. With a warm scenario feed the
+    /// blocking take pops straight off the prefetch queue — synthesis
+    /// stays off this thread (asserted via `feed_stalls` in tests).
     pub fn rotate_pinned(&mut self, sim: &mut BatchSim) {
-        if self.ids.len() <= self.k {
+        if self.exhausted() {
             return;
         }
         self.kick_prefetch();
-        let scene = match self.streamer.wait_one() {
-            Some((_, scene)) => scene,
-            None => return, // streamer thread died; degrade to a no-op
+        let scene = match self.take_blocking() {
+            Some(scene) => scene,
+            None => return, // feed thread died; degrade to a no-op
         };
-        self.inflight = false;
         self.swap_in(scene, sim);
         self.kick_prefetch();
     }

@@ -1,0 +1,182 @@
+//! [`Curriculum`]: success-driven stage scheduling.
+//!
+//! A deterministic state machine over episode outcomes: per stage it
+//! accumulates success/SPL into sliding windows ([`metrics::Window`])
+//! and advances to the next stage once the window is full **and** the
+//! windowed success rate clears the threshold. Advancing clears the
+//! windows, so each stage is judged only on its own episodes — the
+//! natural cooldown. Everything is a pure function of the observed
+//! `(dones, successes, spl)` stream, so equal rollouts produce equal
+//! stage schedules (the bitwise-reproducibility gate in
+//! `rust/tests/scenario.rs`).
+//!
+//! The curriculum never touches sim internals: its owner forwards stage
+//! changes through the public seam (`EnvBatch::set_stage`, then
+//! `EnvBatch::rotate_scenes` streams in scenes generated at the new
+//! difficulty).
+
+use crate::metrics::Window;
+
+/// The scheduler (see module docs).
+#[derive(Debug)]
+pub struct Curriculum {
+    stages: u32,
+    stage: u32,
+    success: Window,
+    spl: Window,
+    threshold: f32,
+    /// Total episodes observed (all stages).
+    episodes: u64,
+    /// Episode count at each past advance (diagnostics + determinism
+    /// assertions in tests).
+    advanced_at: Vec<u64>,
+}
+
+impl Curriculum {
+    /// `stages` from the scenario spec; `window` episodes of evidence per
+    /// stage; advance when the windowed success rate reaches `threshold`.
+    pub fn new(stages: u32, window: usize, threshold: f32) -> Curriculum {
+        let window = window.max(1);
+        Curriculum {
+            stages: stages.max(1),
+            stage: 0,
+            success: Window::new(window),
+            spl: Window::new(window),
+            threshold: threshold.clamp(0.0, 1.0),
+            episodes: 0,
+            advanced_at: Vec::new(),
+        }
+    }
+
+    pub fn stage(&self) -> u32 {
+        self.stage
+    }
+
+    pub fn num_stages(&self) -> u32 {
+        self.stages
+    }
+
+    pub fn episodes(&self) -> u64 {
+        self.episodes
+    }
+
+    /// Windowed success rate at the current stage (0 until evidence).
+    pub fn success_rate(&self) -> f32 {
+        self.success.mean()
+    }
+
+    /// Windowed mean SPL at the current stage.
+    pub fn mean_spl(&self) -> f32 {
+        self.spl.mean()
+    }
+
+    /// Episode counts at which past advances happened.
+    pub fn advanced_at(&self) -> &[u64] {
+        &self.advanced_at
+    }
+
+    /// Feed one batch step's outcome (the `StepView` outcome arrays).
+    pub fn observe(&mut self, dones: &[bool], successes: &[bool], spl: &[f32]) {
+        for ((&done, &success), &spl) in dones.iter().zip(successes).zip(spl) {
+            if done {
+                self.episodes += 1;
+                self.success.push(if success { 1.0 } else { 0.0 });
+                self.spl.push(spl);
+            }
+        }
+    }
+
+    /// The advance rule, evaluated once per training iteration: a full
+    /// window at or above the threshold moves to the next stage (and
+    /// clears the windows). Returns the new stage when it advanced.
+    pub fn advance_if_ready(&mut self) -> Option<u32> {
+        if self.stage + 1 >= self.stages {
+            return None; // already at the hardest stage
+        }
+        if !self.success.is_full() || self.success.mean() < self.threshold {
+            return None;
+        }
+        self.stage += 1;
+        self.success.clear();
+        self.spl.clear();
+        self.advanced_at.push(self.episodes);
+        Some(self.stage)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(cur: &mut Curriculum, episodes: usize, success: bool) {
+        for _ in 0..episodes {
+            cur.observe(&[true], &[success], &[if success { 0.8 } else { 0.0 }]);
+        }
+    }
+
+    #[test]
+    fn advances_on_full_window_above_threshold() {
+        let mut cur = Curriculum::new(3, 4, 0.75);
+        assert_eq!(cur.stage(), 0);
+        feed(&mut cur, 3, true);
+        assert_eq!(cur.advance_if_ready(), None, "window not full yet");
+        feed(&mut cur, 1, true);
+        assert_eq!(cur.advance_if_ready(), Some(1));
+        assert_eq!(cur.advanced_at(), &[4]);
+        // windows cleared: stage 1 needs its own evidence
+        assert_eq!(cur.advance_if_ready(), None);
+        assert_eq!(cur.success_rate(), 0.0);
+    }
+
+    #[test]
+    fn failures_hold_the_stage() {
+        let mut cur = Curriculum::new(2, 4, 0.75);
+        feed(&mut cur, 2, true);
+        feed(&mut cur, 2, false); // 50% < 75%
+        assert_eq!(cur.advance_if_ready(), None);
+        // the sliding window recovers as successes displace failures
+        feed(&mut cur, 4, true);
+        assert_eq!(cur.advance_if_ready(), Some(1));
+    }
+
+    #[test]
+    fn never_advances_past_last_stage() {
+        let mut cur = Curriculum::new(2, 2, 0.5);
+        feed(&mut cur, 2, true);
+        assert_eq!(cur.advance_if_ready(), Some(1));
+        feed(&mut cur, 8, true);
+        assert_eq!(cur.advance_if_ready(), None);
+        assert_eq!(cur.stage(), 1);
+        // single-stage curricula never move at all
+        let mut flat = Curriculum::new(1, 1, 0.0);
+        feed(&mut flat, 4, true);
+        assert_eq!(flat.advance_if_ready(), None);
+    }
+
+    #[test]
+    fn deterministic_given_equal_outcome_streams() {
+        let run = || {
+            let mut cur = Curriculum::new(4, 3, 0.6);
+            let mut stages = Vec::new();
+            for e in 0..40u64 {
+                let ok = e % 4 != 0; // 75% success pattern
+                cur.observe(&[true, false], &[ok, false], &[0.5, 0.0]);
+                if let Some(s) = cur.advance_if_ready() {
+                    stages.push((e, s));
+                }
+            }
+            (stages, cur.episodes(), cur.advanced_at().to_vec())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn spl_window_tracks_current_stage() {
+        let mut cur = Curriculum::new(2, 2, 0.9);
+        cur.observe(&[true], &[true], &[0.6]);
+        cur.observe(&[false], &[false], &[0.0]); // not done: ignored
+        cur.observe(&[true], &[true], &[1.0]);
+        assert!((cur.mean_spl() - 0.8).abs() < 1e-6);
+        assert_eq!(cur.episodes(), 2);
+    }
+}

@@ -1,0 +1,91 @@
+//! Scenario engine: declarative scenario specs, streaming procgen, and
+//! success-driven curriculum scheduling (DESIGN.md §0.6).
+//!
+//! This subsystem is the single source of "what world does environment
+//! *i* run" — for training shards and served tenants alike:
+//!
+//! - [`ScenarioSpec`] declares a workload: task, a *distribution* over
+//!   scene complexity (ranges, not points), episode constraints, and
+//!   domain-randomization knobs. Parse it from a spec string
+//!   (`--scenario "name=maze task=pointnav tris=20k..80k stages=3"`) or a
+//!   `.scenario` registry file.
+//! - [`ScenarioStream`] turns a spec into scenes: a generator thread
+//!   synthesizes [`SceneAsset`](crate::scene::SceneAsset)s ahead of
+//!   demand on the shared `WorkerPool` into a bounded prefetch queue,
+//!   replacing the eager whole-dataset `generate_dataset` path on the
+//!   training hot loop.
+//! - [`Curriculum`] watches success/SPL windows and deterministically
+//!   advances the spec's difficulty stage; its owner forwards the change
+//!   through the public env seam (`EnvBatch::set_stage` +
+//!   `EnvBatch::rotate_scenes`) — no sim internals.
+
+pub mod curriculum;
+pub mod spec;
+pub mod stream;
+
+pub use curriculum::Curriculum;
+pub use spec::{registry_list, ScenarioSpec, Span};
+pub use stream::{synthesize_scene, ScenarioStream};
+
+use crate::sim::{ACTION_FORWARD, ACTION_LEFT, ACTION_RIGHT, ACTION_STOP};
+
+/// Scripted GPS+compass policy over the public observation surface: each
+/// env turns toward its goal, walks, and calls STOP inside `stop_dist`.
+/// Goal-free tasks (Flee/Explore read an all-zero sensor) fall back to a
+/// turn/forward script parameterized by `t`. Used by `bps scenario-demo`,
+/// the quickstart, and the curriculum tests — it reaches high PointNav
+/// success on easy stages without any learned parameters, which is what
+/// lets tests drive the curriculum deterministically.
+pub fn sensor_policy(goal: &[f32], stop_dist: f32, t: usize, actions: &mut [u8]) {
+    for (i, a) in actions.iter_mut().enumerate() {
+        let g = &goal[i * 3..i * 3 + 3];
+        let (dist, cos, sin) = (g[0] * 10.0, g[1], g[2]);
+        if dist == 0.0 && cos == 0.0 && sin == 0.0 {
+            // goal-free task: scripted turn/forward, never STOP
+            *a = (1 + (t + i) % 3) as u8;
+            continue;
+        }
+        let angle = sin.atan2(cos);
+        *a = if dist <= stop_dist {
+            ACTION_STOP
+        } else if angle > 0.15 {
+            ACTION_LEFT
+        } else if angle < -0.15 {
+            ACTION_RIGHT
+        } else {
+            ACTION_FORWARD
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sensor_policy_steers_toward_goal() {
+        let mut actions = vec![0u8; 4];
+        // [dist/10, cos, sin] per env
+        let goal = vec![
+            0.01, 1.0, 0.0, // within stop radius
+            0.5, 1.0, 0.0, // dead ahead
+            0.5, 0.0, 1.0, // 90° left
+            0.5, 0.0, -1.0, // 90° right
+        ];
+        sensor_policy(&goal, 0.15, 0, &mut actions);
+        assert_eq!(
+            actions,
+            vec![ACTION_STOP, ACTION_FORWARD, ACTION_LEFT, ACTION_RIGHT]
+        );
+    }
+
+    #[test]
+    fn sensor_policy_goal_free_never_stops() {
+        let goal = vec![0.0f32; 3 * 8];
+        let mut actions = vec![0u8; 8];
+        for t in 0..24 {
+            sensor_policy(&goal, 0.15, t, &mut actions);
+            assert!(actions.iter().all(|&a| a != ACTION_STOP));
+        }
+    }
+}

@@ -1,0 +1,440 @@
+//! [`ScenarioSpec`]: the declarative description of a workload — task,
+//! a *distribution* over scene complexity (ranges, not points), episode
+//! constraints, and domain-randomization knobs.
+//!
+//! Specs parse from a compact spec string
+//! (`--scenario "name=maze task=pointnav tris=20k..80k stages=3"`) and
+//! from `.scenario` files in a registry directory (same grammar, any
+//! whitespace, `#` comments). Every ranged knob is interpreted per
+//! curriculum stage: stage `s` of `S` samples uniformly from the
+//! `[s/S, (s+1)/S]` band of the range, so difficulty grows monotonically
+//! while every stage still randomizes within its band.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::scene::Complexity;
+use crate::sim::{SimConfig, Task};
+use crate::util::rng::Rng;
+
+/// A closed numeric range `[lo, hi]` (a point when `lo == hi`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Span {
+    pub fn point(x: f32) -> Span {
+        Span { lo: x, hi: x }
+    }
+
+    pub fn new(lo: f32, hi: f32) -> Span {
+        Span { lo, hi }
+    }
+
+    /// Linear interpolation across the span (`t` in `[0, 1]`).
+    pub fn at(&self, t: f32) -> f32 {
+        self.lo + (self.hi - self.lo) * t.clamp(0.0, 1.0)
+    }
+
+    /// Uniform sample from the `[band_lo, band_hi]` fraction of the span.
+    pub fn sample_band(&self, band_lo: f32, band_hi: f32, rng: &mut Rng) -> f32 {
+        let t = if band_hi > band_lo {
+            rng.range_f32(band_lo, band_hi)
+        } else {
+            band_lo
+        };
+        self.at(t)
+    }
+
+    fn is_point(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// Declarative scenario: what world every environment runs (see module
+/// docs). Scene knobs are [`Span`]s sampled per generated scene; episode
+/// constraints are scalars applied through [`SimConfig`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub task: Task,
+    /// Curriculum stage count (1 = no curriculum, full-range DR).
+    pub stages: u32,
+    /// Triangle-budget distribution (drives the procgen `detail` knob).
+    pub tris: Span,
+    /// World extent in meters.
+    pub extent: Span,
+    /// Clutter objects per room (clutter-density DR knob).
+    pub clutter: Span,
+    /// Procedural texture/material count (material DR knob).
+    pub mats: Span,
+    /// Procedural texture resolution.
+    pub tex_res: usize,
+    /// Lighting proxy: global albedo brightness scale (lighting DR knob).
+    pub light: Span,
+    /// Episode constraint: minimum start→goal geodesic distance (m).
+    pub min_geodesic: f32,
+    /// Episode constraint: step budget per episode.
+    pub max_steps: u32,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "scenario".into(),
+            task: Task::PointNav,
+            stages: 1,
+            tris: Span::new(5_000.0, 20_000.0),
+            extent: Span::new(8.0, 10.0),
+            clutter: Span::new(1.0, 4.0),
+            mats: Span::new(2.0, 6.0),
+            tex_res: 64,
+            light: Span::point(1.0),
+            min_geodesic: 1.0,
+            max_steps: 500,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse a spec string: whitespace-separated `key=value` tokens.
+    /// Ranges are `lo..hi`; numbers accept `k`/`m` suffixes.
+    pub fn parse(s: &str) -> Result<ScenarioSpec> {
+        let mut spec = ScenarioSpec::default();
+        for tok in s.split_whitespace() {
+            let Some((k, v)) = tok.split_once('=') else {
+                bail!("scenario token {tok:?} is not key=value");
+            };
+            spec.set(k, v)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a `.scenario` file (spec-string grammar over any whitespace;
+    /// `#` starts a comment). The file stem is the default name.
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read scenario file {path:?}"))?;
+        let stripped: String = text
+            .lines()
+            .map(|l| l.split('#').next().unwrap_or(""))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let mut spec = ScenarioSpec::parse(&stripped)
+            .with_context(|| format!("parse scenario file {path:?}"))?;
+        if spec.name == ScenarioSpec::default().name {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                spec.name = stem.to_string();
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Resolve a `--scenario` argument: an inline spec string when it
+    /// contains `=`, otherwise a name looked up as
+    /// `<registry>/<name>.scenario`.
+    pub fn resolve(arg: &str, registry: &Path) -> Result<ScenarioSpec> {
+        if arg.contains('=') {
+            ScenarioSpec::parse(arg)
+        } else {
+            let path = registry.join(format!("{arg}.scenario"));
+            if !path.exists() {
+                let known = registry_list(registry).unwrap_or_default();
+                bail!(
+                    "scenario {arg:?} not found in registry {registry:?} \
+                     (known: {known:?}); pass an inline spec like \
+                     \"name=maze task=pointnav tris=20k..80k stages=3\""
+                );
+            }
+            ScenarioSpec::load(&path)
+        }
+    }
+
+    fn set(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "name" => {
+                if v.is_empty()
+                    || !v
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+                {
+                    bail!("scenario name {v:?} must be [A-Za-z0-9_-]+");
+                }
+                self.name = v.to_string();
+            }
+            "task" => {
+                self.task = Task::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad task {v:?} (pointnav|flee|explore)"))?
+            }
+            "stages" => self.stages = parse_num(v)? as u32,
+            "tris" => self.tris = parse_span(v)?,
+            "extent" => self.extent = parse_span(v)?,
+            "clutter" => self.clutter = parse_span(v)?,
+            "mats" => self.mats = parse_span(v)?,
+            "tex" | "tex-res" | "tex_res" => self.tex_res = parse_num(v)? as usize,
+            "light" => self.light = parse_span(v)?,
+            "min-geo" | "min_geo" | "min-geodesic" | "min_geodesic" => {
+                self.min_geodesic = parse_num(v)?
+            }
+            "max-steps" | "max_steps" => self.max_steps = parse_num(v)? as u32,
+            other => bail!(
+                "unknown scenario key {other:?} (name task stages tris extent \
+                 clutter mats tex light min-geo max-steps)"
+            ),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.stages == 0 || self.stages > 32 {
+            bail!("stages must be in 1..=32, got {}", self.stages);
+        }
+        for (name, s) in [
+            ("tris", self.tris),
+            ("extent", self.extent),
+            ("clutter", self.clutter),
+            ("mats", self.mats),
+            ("light", self.light),
+        ] {
+            if !s.lo.is_finite() || !s.hi.is_finite() || s.lo > s.hi || s.lo < 0.0 {
+                bail!("scenario {name} range [{}, {}] is invalid", s.lo, s.hi);
+            }
+        }
+        if self.extent.lo < 5.0 {
+            bail!(
+                "extent floor {} m is too small for episode sampling (>= 5)",
+                self.extent.lo
+            );
+        }
+        if self.tris.hi > 5_000_000.0 {
+            bail!("tris ceiling {} exceeds the 5M sanity cap", self.tris.hi);
+        }
+        if self.max_steps == 0 {
+            bail!("max-steps must be positive");
+        }
+        if !(self.min_geodesic.is_finite() && self.min_geodesic >= 0.0) {
+            bail!("min-geo must be a non-negative number");
+        }
+        if !(8..=1024).contains(&self.tex_res) {
+            bail!("tex resolution {} out of 8..=1024", self.tex_res);
+        }
+        Ok(())
+    }
+
+    /// The stage's band within `[0, 1]`: stage `s` of `S` covers
+    /// `[s/S, (s+1)/S]`, so the last stage samples the hardest fraction
+    /// of every range. A single-stage spec covers the full range.
+    pub fn stage_band(&self, stage: u32) -> (f32, f32) {
+        let s = self.stages.max(1) as f32;
+        let i = stage.min(self.stages.saturating_sub(1)) as f32;
+        (i / s, (i + 1.0) / s)
+    }
+
+    /// Sample a concrete [`Complexity`] for one scene at `stage`.
+    /// Deterministic given the `rng` state: the stream derives `rng` from
+    /// `(seed, scene index)`, so scene content is a pure function of
+    /// `(spec, seed, index, stage)`.
+    pub fn complexity_at(&self, stage: u32, rng: &mut Rng) -> Complexity {
+        let (b0, b1) = self.stage_band(stage);
+        let tris = self.tris.sample_band(b0, b1, rng);
+        let extent = self.extent.sample_band(b0, b1, rng).clamp(5.0, 64.0);
+        let clutter = self.clutter.sample_band(b0, b1, rng).round().max(0.0) as usize;
+        let mats = (self.mats.sample_band(b0, b1, rng).round() as usize).clamp(1, 16);
+        // The floor quad dominates the triangle count: subdiv (8·detail)
+        // gives ~2·(8·detail)² = 128·detail² tris, plus wall/clutter boxes
+        // — calibrate detail ≈ sqrt(tris / 150).
+        let detail = ((tris / 150.0).sqrt().round() as usize).clamp(1, 24);
+        Complexity {
+            extent,
+            min_room: (extent / 4.0).clamp(2.0, 4.0),
+            clutter_per_room: clutter,
+            detail,
+            tex_res: self.tex_res,
+            tex_count: mats,
+        }
+    }
+
+    /// Lighting-proxy brightness for one scene at `stage`.
+    pub fn light_at(&self, stage: u32, rng: &mut Rng) -> f32 {
+        let (b0, b1) = self.stage_band(stage);
+        self.light.sample_band(b0, b1, rng).clamp(0.05, 4.0)
+    }
+
+    /// The simulator config this scenario's episode constraints imply.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            max_steps: self.max_steps,
+            min_geodesic: self.min_geodesic,
+            ..SimConfig::for_task(self.task)
+        }
+    }
+
+    /// Compact single-line round-trippable form (registry listings, logs).
+    pub fn summary(&self) -> String {
+        let span = |s: Span| {
+            if s.is_point() {
+                format!("{}", s.lo)
+            } else {
+                format!("{}..{}", s.lo, s.hi)
+            }
+        };
+        format!(
+            "name={} task={} stages={} tris={} extent={} clutter={} \
+             mats={} tex={} light={} min-geo={} max-steps={}",
+            self.name,
+            self.task.name(),
+            self.stages,
+            span(self.tris),
+            span(self.extent),
+            span(self.clutter),
+            span(self.mats),
+            self.tex_res,
+            span(self.light),
+            self.min_geodesic,
+            self.max_steps,
+        )
+    }
+}
+
+/// Scenario names available in a registry directory (`*.scenario` files),
+/// sorted for stable listings.
+pub fn registry_list(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(names), // missing registry = empty registry
+    };
+    for entry in entries {
+        let path: PathBuf = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("scenario") {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                names.push(stem.to_string());
+            }
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Parse a number with optional `k` (×10³) / `m` (×10⁶) suffix.
+fn parse_num(s: &str) -> Result<f32> {
+    let (body, mult) = match s.strip_suffix(&['k', 'K'][..]) {
+        Some(b) => (b, 1_000.0),
+        None => match s.strip_suffix(&['m', 'M'][..]) {
+            Some(b) => (b, 1_000_000.0),
+            None => (s, 1.0),
+        },
+    };
+    let x: f32 = body
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?;
+    Ok(x * mult)
+}
+
+/// Parse `lo..hi` (or a single point) with `k`/`m` suffixes.
+fn parse_span(s: &str) -> Result<Span> {
+    match s.split_once("..") {
+        Some((lo, hi)) => Ok(Span::new(parse_num(lo)?, parse_num(hi)?)),
+        None => Ok(Span::point(parse_num(s)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_string_with_ranges_and_suffixes() {
+        let s = ScenarioSpec::parse(
+            "name=maze task=pointnav tris=20k..80k stages=3 extent=8..14 \
+             clutter=0..6 mats=2..8 tex=32 light=0.5..1.5 min-geo=2.5 max-steps=400",
+        )
+        .unwrap();
+        assert_eq!(s.name, "maze");
+        assert_eq!(s.task, Task::PointNav);
+        assert_eq!(s.stages, 3);
+        assert_eq!(s.tris, Span::new(20_000.0, 80_000.0));
+        assert_eq!(s.extent, Span::new(8.0, 14.0));
+        assert_eq!(s.mats, Span::new(2.0, 8.0));
+        assert_eq!(s.tex_res, 32);
+        assert_eq!(s.light, Span::new(0.5, 1.5));
+        assert!((s.min_geodesic - 2.5).abs() < 1e-6);
+        assert_eq!(s.max_steps, 400);
+        // round-trips through the summary form verbatim
+        let back = ScenarioSpec::parse(&s.summary()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        assert!(ScenarioSpec::parse("tris").is_err()); // not key=value
+        assert!(ScenarioSpec::parse("warp=9").is_err()); // unknown key
+        assert!(ScenarioSpec::parse("task=swim").is_err());
+        assert!(ScenarioSpec::parse("stages=0").is_err());
+        assert!(ScenarioSpec::parse("tris=80k..20k").is_err()); // inverted
+        assert!(ScenarioSpec::parse("extent=1..3").is_err()); // too small
+        assert!(ScenarioSpec::parse("name=bad name").is_err());
+    }
+
+    #[test]
+    fn stage_bands_partition_the_range() {
+        let s = ScenarioSpec::parse("stages=4").unwrap();
+        assert_eq!(s.stage_band(0), (0.0, 0.25));
+        assert_eq!(s.stage_band(3), (0.75, 1.0));
+        // out-of-range stages clamp to the last band
+        assert_eq!(s.stage_band(9), (0.75, 1.0));
+        let single = ScenarioSpec::default();
+        assert_eq!(single.stage_band(0), (0.0, 1.0));
+    }
+
+    #[test]
+    fn complexity_scales_with_stage() {
+        let s = ScenarioSpec::parse("tris=1k..100k extent=6..16 clutter=0..8 stages=4").unwrap();
+        let mut lo_rng = Rng::new(1);
+        let mut hi_rng = Rng::new(1);
+        let lo = s.complexity_at(0, &mut lo_rng);
+        let hi = s.complexity_at(3, &mut hi_rng);
+        assert!(hi.detail > lo.detail, "{} vs {}", hi.detail, lo.detail);
+        assert!(hi.extent > lo.extent);
+        assert!(hi.clutter_per_room >= lo.clutter_per_room);
+        // deterministic for equal rng state
+        let mut again = Rng::new(1);
+        assert_eq!(s.complexity_at(0, &mut again), lo);
+    }
+
+    #[test]
+    fn file_and_registry_resolution() {
+        let dir = std::env::temp_dir().join("bps_scenario_spec_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("warehouse.scenario"),
+            "# a big cluttered scenario\ntask=explore\ntris=10k..40k  stages=2\n",
+        )
+        .unwrap();
+        let by_name = ScenarioSpec::resolve("warehouse", &dir).unwrap();
+        assert_eq!(by_name.name, "warehouse"); // stem becomes the name
+        assert_eq!(by_name.task, Task::Explore);
+        assert_eq!(by_name.stages, 2);
+        assert_eq!(registry_list(&dir).unwrap(), vec!["warehouse".to_string()]);
+        // inline strings bypass the registry
+        let inline = ScenarioSpec::resolve("task=flee", &dir).unwrap();
+        assert_eq!(inline.task, Task::Flee);
+        // unknown names fail with the registry listing in the message
+        let err = ScenarioSpec::resolve("nope", &dir).unwrap_err().to_string();
+        assert!(err.contains("warehouse"), "{err}");
+    }
+
+    #[test]
+    fn sim_config_carries_episode_constraints() {
+        let s = ScenarioSpec::parse("task=pointnav min-geo=3 max-steps=123").unwrap();
+        let cfg = s.sim_config();
+        assert_eq!(cfg.max_steps, 123);
+        assert!((cfg.min_geodesic - 3.0).abs() < 1e-6);
+        assert_eq!(cfg.task, Task::PointNav);
+    }
+}

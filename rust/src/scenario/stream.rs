@@ -1,0 +1,418 @@
+//! [`ScenarioStream`]: streaming procgen — scenes generated ahead of
+//! demand into a bounded prefetch queue.
+//!
+//! The eager `generate_dataset` path synthesizes every scene up front;
+//! this stream instead amortizes synthesis the way the paper amortizes
+//! data loading: a generator thread drains pending requests, builds the
+//! batch **in parallel on the shared [`WorkerPool`]**, and delivers
+//! finished [`SceneAsset`]s in request order. The consumer (the scene
+//! rotation, possibly on the env driver thread) keeps the queue topped up
+//! to `prefetch` scenes, so a warm rotation never waits on synthesis —
+//! [`stalls`](ScenarioStream::stalls) counts the times it did.
+//!
+//! Determinism: every request is derived consumer-side from
+//! `(spec, seed, scene index, stage at request time)` and results are
+//! delivered FIFO, so the scene sequence is a pure function of the
+//! consumer's call order — curriculum stage changes take effect exactly
+//! `queued + in-flight` scenes later, independent of wall clock.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::scene::procgen::generate;
+use crate::scene::{Complexity, SceneAsset};
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Rng;
+
+use super::spec::ScenarioSpec;
+
+/// Generator-thread batching cap: at most this many queued requests are
+/// drained into one `parallel_for` round.
+const GEN_BATCH: usize = 8;
+
+/// One scene-synthesis request (fully determined consumer-side).
+struct GenRequest {
+    id: String,
+    seed: u64,
+    cx: Complexity,
+    /// Lighting-proxy brightness applied to every material's albedo.
+    light: f32,
+    with_textures: bool,
+}
+
+impl GenRequest {
+    /// The one derivation of scene parameters from `(spec, stage, seed)`
+    /// — shared by the stream's requests and by off-stream synthesis
+    /// (eval), so every consumer applies identical DR.
+    fn derive(
+        spec: &ScenarioSpec,
+        stage: u32,
+        id: String,
+        seed: u64,
+        with_textures: bool,
+    ) -> GenRequest {
+        let mut rng = Rng::new(seed ^ 0xD1FF);
+        let cx = spec.complexity_at(stage, &mut rng);
+        let light = spec.light_at(stage, &mut rng);
+        GenRequest {
+            id,
+            seed,
+            cx,
+            light,
+            with_textures,
+        }
+    }
+}
+
+/// Synthesize one scene for `spec` at `stage` from `(id, seed)`, with the
+/// full domain-randomization pipeline (complexity + lighting proxy +
+/// texture stripping) — exactly what the stream generates, without the
+/// stream. Evaluation uses this for unseen val layouts.
+pub fn synthesize_scene(
+    spec: &ScenarioSpec,
+    stage: u32,
+    id: &str,
+    seed: u64,
+    with_textures: bool,
+) -> SceneAsset {
+    synthesize(&GenRequest::derive(spec, stage, id.to_string(), seed, with_textures))
+}
+
+/// The streaming procgen pipeline (see module docs).
+pub struct ScenarioStream {
+    spec: ScenarioSpec,
+    seed: u64,
+    with_textures: bool,
+    stage: u32,
+    next_index: u64,
+    prefetch: usize,
+    /// Requests sent but not yet received back.
+    outstanding: usize,
+    /// Delivered scenes awaiting consumption (the warm queue).
+    ready: VecDeque<Arc<SceneAsset>>,
+    req_tx: Option<Sender<GenRequest>>,
+    ready_rx: Receiver<Arc<SceneAsset>>,
+    stalls: u64,
+    delivered: u64,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ScenarioStream {
+    /// Start the generator thread and kick the initial prefetch.
+    /// `prefetch` bounds the queue (clamped to at least 1);
+    /// `with_textures = false` strips texture payloads (Depth agents).
+    pub fn new(
+        spec: ScenarioSpec,
+        seed: u64,
+        prefetch: usize,
+        with_textures: bool,
+        pool: Arc<WorkerPool>,
+    ) -> ScenarioStream {
+        let (req_tx, req_rx) = channel::<GenRequest>();
+        let (ready_tx, ready_rx) = channel();
+        let thread = std::thread::Builder::new()
+            .name("scenario-procgen".into())
+            .spawn(move || gen_loop(pool, req_rx, ready_tx))
+            .expect("spawn scenario procgen thread");
+        let mut stream = ScenarioStream {
+            spec,
+            seed,
+            with_textures,
+            stage: 0,
+            next_index: 0,
+            prefetch: prefetch.max(1),
+            outstanding: 0,
+            ready: VecDeque::new(),
+            req_tx: Some(req_tx),
+            ready_rx,
+            stalls: 0,
+            delivered: 0,
+            thread: Some(thread),
+        };
+        stream.top_up();
+        stream
+    }
+
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    pub fn stage(&self) -> u32 {
+        self.stage
+    }
+
+    /// Set the curriculum stage for *future* requests. Scenes already
+    /// queued or in flight still deliver at their request-time stage
+    /// (bounded by `prefetch`), keeping the sequence deterministic.
+    pub fn set_stage(&mut self, stage: u32) {
+        self.stage = stage.min(self.spec.stages.saturating_sub(1));
+    }
+
+    /// Times a blocking take found the queue cold (post-startup). The
+    /// "never synchronously generates when warm" property in tests.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Scenes handed to the consumer so far.
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Ready scenes currently queued (drains the delivery channel first).
+    pub fn ready_len(&mut self) -> usize {
+        self.pump();
+        self.ready.len()
+    }
+
+    /// Block until every outstanding request has been delivered — the
+    /// queue is as warm as it gets. Used at startup and by tests.
+    pub fn wait_warm(&mut self) {
+        self.pump();
+        while self.outstanding > 0 {
+            match self.ready_rx.recv() {
+                Ok(s) => {
+                    self.outstanding -= 1;
+                    self.ready.push_back(s);
+                }
+                Err(_) => break, // generator died; degrade gracefully
+            }
+        }
+    }
+
+    /// Issue requests until `queued + in-flight` reaches the prefetch
+    /// bound. Non-blocking.
+    pub fn top_up(&mut self) {
+        self.pump();
+        while self.outstanding + self.ready.len() < self.prefetch {
+            let req = self.make_request();
+            let sent = match &self.req_tx {
+                Some(tx) => tx.send(req).is_ok(),
+                None => false,
+            };
+            if !sent {
+                break; // generator died; consumers see an empty queue
+            }
+            self.outstanding += 1;
+        }
+    }
+
+    /// Non-blocking take; `None` when the queue is cold. Tops the queue
+    /// back up after a successful take.
+    pub fn try_next(&mut self) -> Option<Arc<SceneAsset>> {
+        self.pump();
+        let scene = self.ready.pop_front()?;
+        self.delivered += 1;
+        self.top_up();
+        Some(scene)
+    }
+
+    /// Blocking take (pinned rotation / startup). Counts a stall when the
+    /// queue was cold. `None` only if the generator thread died.
+    pub fn next_blocking(&mut self) -> Option<Arc<SceneAsset>> {
+        if let Some(scene) = self.try_next() {
+            return Some(scene);
+        }
+        if self.outstanding == 0 {
+            self.top_up();
+        }
+        if self.outstanding == 0 {
+            return None; // generator unreachable
+        }
+        self.stalls += 1;
+        match self.ready_rx.recv() {
+            Ok(scene) => {
+                self.outstanding -= 1;
+                self.delivered += 1;
+                self.top_up();
+                Some(scene)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Forget startup stalls so the counter reflects steady state only.
+    pub fn reset_stalls(&mut self) {
+        self.stalls = 0;
+    }
+
+    /// Drain completed deliveries into the ready queue.
+    fn pump(&mut self) {
+        loop {
+            match self.ready_rx.try_recv() {
+                Ok(s) => {
+                    self.outstanding -= 1;
+                    self.ready.push_back(s);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+    }
+
+    /// Derive the next request — a pure function of
+    /// `(spec, seed, index, stage)`.
+    fn make_request(&mut self) -> GenRequest {
+        let idx = self.next_index;
+        self.next_index += 1;
+        let seed = self
+            .seed
+            .wrapping_add(0x5CE0)
+            .wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let id = format!("{}_s{}_{idx:05}", self.spec.name, self.stage);
+        GenRequest::derive(&self.spec, self.stage, id, seed, self.with_textures)
+    }
+}
+
+impl Drop for ScenarioStream {
+    fn drop(&mut self) {
+        drop(self.req_tx.take()); // close the request channel
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Synthesize one scene per request, applying the domain-randomization
+/// post-passes (lighting proxy, texture stripping).
+fn synthesize(req: &GenRequest) -> SceneAsset {
+    let mut scene = generate(&req.id, req.seed, req.cx);
+    if req.light != 1.0 {
+        for m in scene.materials.iter_mut() {
+            for c in m.albedo.iter_mut() {
+                *c = (*c * req.light).clamp(0.0, 1.0);
+            }
+        }
+    }
+    if !req.with_textures {
+        scene.textures.clear();
+    }
+    scene
+}
+
+/// Generator-thread loop: drain pending requests into a batch, build the
+/// batch in parallel on the shared pool, deliver in request order.
+fn gen_loop(
+    pool: Arc<WorkerPool>,
+    req_rx: Receiver<GenRequest>,
+    ready_tx: Sender<Arc<SceneAsset>>,
+) {
+    while let Ok(first) = req_rx.recv() {
+        let mut batch = vec![first];
+        while batch.len() < GEN_BATCH {
+            match req_rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        if batch.len() == 1 {
+            // common steady-state case: skip the slot machinery
+            if ready_tx.send(Arc::new(synthesize(&batch[0]))).is_err() {
+                return;
+            }
+            continue;
+        }
+        let slots: Vec<Mutex<Option<SceneAsset>>> =
+            batch.iter().map(|_| Mutex::new(None)).collect();
+        pool.parallel_for(batch.len(), 1, |i| {
+            *slots[i].lock().unwrap() = Some(synthesize(&batch[i]));
+        });
+        for slot in slots {
+            let scene = slot
+                .into_inner()
+                .unwrap()
+                .expect("parallel_for filled every slot");
+            if ready_tx.send(Arc::new(scene)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(stages: u32) -> ScenarioSpec {
+        ScenarioSpec::parse(&format!(
+            "name=st task=pointnav stages={stages} tris=400..1200 extent=6..8 \
+             clutter=0..1 mats=1..2 tex=16"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn delivers_in_request_order_and_deterministically() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let take = |n: usize| -> Vec<(String, usize)> {
+            let mut st = ScenarioStream::new(tiny_spec(1), 9, 2, false, Arc::clone(&pool));
+            (0..n)
+                .map(|_| {
+                    let s = st.next_blocking().unwrap();
+                    (s.id.clone(), s.mesh.num_tris())
+                })
+                .collect()
+        };
+        let a = take(5);
+        let b = take(5);
+        assert_eq!(a, b, "scene sequence must be a pure function of the seed");
+        assert_eq!(a[0].0, "st_s0_00000");
+        assert_eq!(a[4].0, "st_s0_00004");
+    }
+
+    #[test]
+    fn warm_queue_takes_do_not_stall() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut st = ScenarioStream::new(tiny_spec(1), 4, 3, false, pool);
+        st.wait_warm();
+        assert_eq!(st.ready_len(), 3);
+        st.reset_stalls();
+        let s = st.next_blocking().unwrap();
+        assert!(s.mesh.num_tris() > 0);
+        assert_eq!(st.stalls(), 0, "warm take must not wait on synthesis");
+        assert!(st.try_next().is_some());
+        assert_eq!(st.stalls(), 0);
+    }
+
+    #[test]
+    fn stage_change_applies_after_pipeline_latency() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let prefetch = 2;
+        let mut st = ScenarioStream::new(tiny_spec(3), 4, prefetch, false, pool);
+        st.set_stage(2);
+        // the first `prefetch` scenes were requested at stage 0
+        for _ in 0..prefetch {
+            let s = st.next_blocking().unwrap();
+            assert!(s.id.contains("_s0_"), "{}", s.id);
+        }
+        let s = st.next_blocking().unwrap();
+        assert!(s.id.contains("_s2_"), "{}", s.id);
+        // stage clamps to the spec's last stage
+        st.set_stage(99);
+        assert_eq!(st.stage(), 2);
+    }
+
+    #[test]
+    fn textures_stripped_for_depth_and_light_applied() {
+        let pool = Arc::new(WorkerPool::new(0));
+        let spec = ScenarioSpec::parse(
+            "name=dr stages=1 tris=400..400 extent=6..6 clutter=0..0 \
+             mats=1..1 tex=16 light=0.5..0.5",
+        )
+        .unwrap();
+        let mut depth = ScenarioStream::new(spec.clone(), 7, 1, false, Arc::clone(&pool));
+        let d = depth.next_blocking().unwrap();
+        assert!(d.textures.is_empty());
+        let mut rgb = ScenarioStream::new(spec.clone(), 7, 1, true, pool);
+        let r = rgb.next_blocking().unwrap();
+        assert!(!r.textures.is_empty());
+        // lighting proxy halved every albedo vs a light=1 generation
+        let unlit = {
+            let mut rng = Rng::new((7u64.wrapping_add(0x5CE0)) ^ 0xD1FF);
+            let cx = spec.complexity_at(0, &mut rng);
+            crate::scene::procgen::generate("dr_s0_00000", 7u64.wrapping_add(0x5CE0), cx)
+        };
+        assert!((d.materials[0].albedo[0] - unlit.materials[0].albedo[0] * 0.5).abs() < 1e-6);
+    }
+}

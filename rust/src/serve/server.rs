@@ -95,6 +95,12 @@ pub(crate) struct ShardShared {
     pub task: Task,
     pub slots: usize,
     pub obs_floats: usize,
+    /// Resident scene-asset footprint of the shard's `EnvBatch` (the
+    /// admission-control input; fixed at build time).
+    pub resident_bytes: usize,
+    /// Completed rotation swaps (mirrors `EnvBatch::rotations` across
+    /// the driver-thread ownership boundary).
+    pub rotations: Arc<AtomicU64>,
     pub state: Mutex<ShardState>,
     /// Clients → driver: actions buffered / leases changed / shutdown.
     pub submitted: Condvar,
@@ -112,8 +118,10 @@ impl ShardShared {
     }
 }
 
-/// The shard driver loop: coalesce → step → publish, until shutdown.
-fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch) {
+/// The shard driver loop: coalesce → step → publish — and, for shards
+/// with a scenario/rotation assignment, stream fresh scenes in by driving
+/// `rotate_scenes` every `rotate_every` steps — until shutdown.
+fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Option<u64>) {
     let mut actions: Vec<u8> = Vec::with_capacity(shared.slots);
     let mut spare: Option<StepResult> = None;
     loop {
@@ -168,6 +176,17 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch) {
         if let Ok(r) = Arc::try_unwrap(prev) {
             spare = Some(r);
         }
+        // Phase 4: scene streaming for served shards (the training loop's
+        // once-per-iteration rotate, at the shard's own cadence). A no-op
+        // for shards built over a fixed scene assignment.
+        if let Some(every) = rotate_every {
+            if step_no % every == 0 {
+                if let Err(e) = env.rotate_scenes() {
+                    shared.fail(format!("shard rotate failed: {e:#}"));
+                    return;
+                }
+            }
+        }
     }
 }
 
@@ -176,8 +195,9 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch) {
 pub enum SceneSource {
     /// Explicit env → scene assignment; the batch size is `scenes.len()`.
     Scenes(Vec<Arc<SceneAsset>>),
-    /// `n` envs over a K-slot rotation. The serve layer does not drive
-    /// `rotate_scenes` yet — the rotation provides the initial residency.
+    /// `n` envs over a K-slot rotation (dataset- or scenario-fed). Pair
+    /// with [`ShardSpec::rotate_every`] so the shard driver streams fresh
+    /// scenes in; without it the rotation only provides initial residency.
     Rotation { rotation: SceneRotation, n: usize },
 }
 
@@ -186,6 +206,11 @@ pub struct ShardSpec {
     pub cfg: EnvBatchConfig,
     pub source: SceneSource,
     pub straggler: StragglerPolicy,
+    /// `Some(k)`: the shard driver calls `rotate_scenes` every k batch
+    /// steps, so served shards stream scenes exactly like training
+    /// shards. Gated on a rotation assignment — fixed-scene shards have
+    /// nothing to rotate and leave this `None`.
+    pub rotate_every: Option<u64>,
 }
 
 impl ShardSpec {
@@ -196,6 +221,7 @@ impl ShardSpec {
             cfg,
             source: SceneSource::Scenes(scenes),
             straggler: StragglerPolicy::Wait,
+            rotate_every: None,
         }
     }
 
@@ -205,12 +231,20 @@ impl ShardSpec {
             cfg,
             source: SceneSource::Rotation { rotation, n },
             straggler: StragglerPolicy::Wait,
+            rotate_every: None,
         }
     }
 
     /// Override the straggler policy for this shard's coalescer.
     pub fn straggler(mut self, policy: StragglerPolicy) -> ShardSpec {
         self.straggler = policy;
+        self
+    }
+
+    /// Stream scenes from the shard driver: one `rotate_scenes` call
+    /// every `every` batch steps (requires a rotation scene source).
+    pub fn rotate_every(mut self, every: u64) -> ShardSpec {
+        self.rotate_every = Some(every.max(1));
         self
     }
 }
@@ -229,6 +263,10 @@ pub struct ShardStats {
     pub steps: u64,
     /// Leased slots the straggler policy had to fill, cumulative.
     pub straggler_fills: u64,
+    /// Scene-rotation swaps the shard driver has performed.
+    pub rotations: u64,
+    /// Resident scene-asset footprint (admission-control input).
+    pub resident_bytes: usize,
     /// Submit→result latency percentiles over recent steps (seconds).
     pub latency_p50: f32,
     pub latency_p95: f32,
@@ -249,13 +287,34 @@ pub struct SimServer {
     shards: Vec<Arc<ShardShared>>,
     drivers: Vec<JoinHandle<()>>,
     next_session: AtomicU64,
+    /// Admission control: reject leases whose projected active resident
+    /// bytes across shards would exceed this budget (`None` = unlimited).
+    mem_budget: Option<usize>,
+    /// Serializes `connect` so the activation snapshot admission reads
+    /// cannot race another admission decision.
+    admission: Mutex<()>,
 }
 
 impl SimServer {
     /// Build every shard's `EnvBatch` and start one driver thread per
     /// shard. Shards may be heterogeneous (different tasks / render
-    /// configs); they share `pool`.
+    /// configs); they share `pool`. No admission budget — see
+    /// [`with_budget`](SimServer::with_budget).
     pub fn start(specs: Vec<ShardSpec>, pool: Arc<WorkerPool>) -> Result<SimServer> {
+        SimServer::with_budget(specs, pool, None)
+    }
+
+    /// [`start`](SimServer::start) with admission control: a lease is
+    /// rejected when the resident scene-asset bytes of *active* shards
+    /// (shards with at least one leased slot, plus the candidate) would
+    /// exceed `mem_budget` bytes. An idle shard's assets are treated as
+    /// evictable, so tenants can still be steered onto already-active
+    /// shards under memory pressure.
+    pub fn with_budget(
+        specs: Vec<ShardSpec>,
+        pool: Arc<WorkerPool>,
+        mem_budget: Option<usize>,
+    ) -> Result<SimServer> {
         if specs.is_empty() {
             bail!("SimServer needs at least one shard");
         }
@@ -266,6 +325,7 @@ impl SimServer {
                 cfg,
                 source,
                 straggler,
+                rotate_every,
             } = spec;
             // The shard driver always submits and immediately waits, so
             // the EnvBatch's own pipelined driver thread would add a
@@ -287,6 +347,8 @@ impl SimServer {
                 task: env.task(),
                 slots,
                 obs_floats: env.obs_floats(),
+                resident_bytes: env.resident_bytes(),
+                rotations: env.rotations_counter(),
                 state: Mutex::new(ShardState {
                     coal: Coalescer::new(slots, straggler),
                     result: Arc::new(initial),
@@ -301,7 +363,7 @@ impl SimServer {
             let for_driver = Arc::clone(&shared);
             let driver = std::thread::Builder::new()
                 .name("sim-serve-shard".into())
-                .spawn(move || shard_driver(for_driver, env))
+                .spawn(move || shard_driver(for_driver, env, rotate_every))
                 .map_err(|e| anyhow!("spawn shard driver thread: {e}"))?;
             shards.push(shared);
             drivers.push(driver);
@@ -310,20 +372,49 @@ impl SimServer {
             shards,
             drivers,
             next_session: AtomicU64::new(1),
+            mem_budget,
+            admission: Mutex::new(()),
         })
     }
 
     /// Lease `n_envs` slots on the first `task` shard with room and open
     /// a session. Fails when no shard can host the lease — detach other
-    /// sessions (freeing their slots) or add shards.
+    /// sessions (freeing their slots) or add shards — or when admitting
+    /// it would blow the server's memory budget (see
+    /// [`with_budget`](SimServer::with_budget)).
     pub fn connect(&self, task: Task, n_envs: usize) -> Result<Session> {
         if n_envs == 0 {
             bail!("connect: a session needs at least one env slot");
         }
+        // One admission decision at a time: the activation snapshot below
+        // must not race another connect's lease.
+        let _admission = self.admission.lock().unwrap();
+        // Which shards are active (hold at least one lease)? Their assets
+        // are pinned resident; idle shards count only once admitted.
+        let active: Vec<bool> = self
+            .shards
+            .iter()
+            .map(|sh| sh.state.lock().unwrap().coal.leased() > 0)
+            .collect();
+        let active_bytes: usize = self
+            .shards
+            .iter()
+            .zip(&active)
+            .filter(|(_, &a)| a)
+            .map(|(sh, _)| sh.resident_bytes)
+            .sum();
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        for shard in &self.shards {
+        let mut over_budget = None;
+        for (shard, &was_active) in self.shards.iter().zip(&active) {
             if shard.task != task {
                 continue;
+            }
+            if let (Some(budget), false) = (self.mem_budget, was_active) {
+                let projected = active_bytes + shard.resident_bytes;
+                if projected > budget {
+                    over_budget = Some(projected);
+                    continue;
+                }
             }
             let slots = {
                 let mut st = shard.state.lock().unwrap();
@@ -335,6 +426,15 @@ impl SimServer {
             if let Some(slots) = slots {
                 return Ok(Session::open(Arc::clone(shard), id, slots));
             }
+        }
+        if let (Some(projected), Some(budget)) = (over_budget, self.mem_budget) {
+            bail!(
+                "connect: admitting a {n_envs}-env {task:?} lease would put \
+                 {} MB of scene assets resident, over the {} MB budget — \
+                 detach sessions on other shards or raise --mem-budget",
+                projected / (1024 * 1024),
+                budget / (1024 * 1024)
+            );
         }
         bail!(
             "connect: no {task:?} shard with {n_envs} free slots \
@@ -361,6 +461,8 @@ impl SimServer {
                     queued_actions: st.coal.pending(),
                     steps: st.result.step,
                     straggler_fills: st.coal.straggler_fills,
+                    rotations: sh.rotations.load(Ordering::Relaxed),
+                    resident_bytes: sh.resident_bytes,
                     latency_p50: st.latency.percentile(0.5),
                     latency_p95: st.latency.percentile(0.95),
                 }

@@ -34,6 +34,10 @@ pub struct SimConfig {
     pub success_reward: f32,
     /// Explore task: edge length of visitation cells (meters).
     pub explore_cell: f32,
+    /// Episode difficulty floor: minimum start→goal geodesic distance in
+    /// meters (PointNav). Scenario specs raise it per difficulty stage;
+    /// the sampler relaxes it when a scene cannot host it.
+    pub min_geodesic: f32,
 }
 
 impl SimConfig {
@@ -47,6 +51,7 @@ impl SimConfig {
             slack_reward: -0.01,
             success_reward: 2.5,
             explore_cell: 0.5,
+            min_geodesic: 1.0,
         }
     }
 
@@ -276,7 +281,7 @@ fn reset_env(cfg: &SimConfig, env: &mut EnvState) {
         env.scene = next;
     }
     let nav = &env.scene.navmesh;
-    let episode = sample_episode(nav, &mut env.rng, cfg.task)
+    let episode = sample_episode(nav, &mut env.rng, cfg.task, cfg.min_geodesic)
         .expect("scene has no valid episodes (navmesh too small)");
     // Dijkstra flood once per episode: PointNav floods from the goal
     // (reward shaping + success), Flee floods from the start (score).

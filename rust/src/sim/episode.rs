@@ -25,6 +25,16 @@ impl Task {
             _ => None,
         }
     }
+
+    /// The lowercase CLI/spec name — the exact inverse of
+    /// [`parse`](Task::parse), so printed specs re-parse.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::PointNav => "pointnav",
+            Task::Flee => "flee",
+            Task::Explore => "explore",
+        }
+    }
 }
 
 /// One episode: start pose, goal, and the shortest-path length (for reward
@@ -39,17 +49,33 @@ pub struct Episode {
 
 /// Episode difficulty filter, Habitat-style: geodesic distance within
 /// bounds, and (when possible) a non-trivial geodesic/euclidean ratio so
-/// straight-line policies do not solve everything.
-pub fn sample_episode(nav: &GridNav, rng: &mut Rng, task: Task) -> Option<Episode> {
-    let min_d = 1.0f32;
+/// straight-line policies do not solve everything. `min_geodesic` is the
+/// episode-difficulty floor (meters); scenario specs raise it to demand
+/// longer paths (`SimConfig::min_geodesic`). Scenes whose navmesh cannot
+/// host it degrade gracefully: after half the attempts the floor relaxes
+/// toward the baseline so generation never livelocks on a small layout.
+pub fn sample_episode(
+    nav: &GridNav,
+    rng: &mut Rng,
+    task: Task,
+    min_geodesic: f32,
+) -> Option<Episode> {
+    let base_min = 1.0f32;
     for attempt in 0..64 {
+        // relax a too-ambitious difficulty floor once half the attempts
+        // have failed, bottoming out at the baseline
+        let min_d = if attempt < 32 {
+            min_geodesic.max(base_min)
+        } else {
+            base_min
+        };
         let start = nav.random_point(rng)?;
         let heading = rng.range_f32(0.0, std::f32::consts::TAU);
         match task {
             Task::PointNav => {
                 let goal = nav.random_point(rng)?;
                 let euclid = (goal - start).length();
-                if euclid < min_d {
+                if euclid < base_min {
                     continue;
                 }
                 let Some(geo) = nav.geodesic(start, goal) else {
@@ -93,7 +119,7 @@ mod tests {
         let scene = generate("e", 21, Complexity::test());
         let mut rng = Rng::new(0);
         for _ in 0..20 {
-            let ep = sample_episode(&scene.navmesh, &mut rng, Task::PointNav).unwrap();
+            let ep = sample_episode(&scene.navmesh, &mut rng, Task::PointNav, 1.0).unwrap();
             assert!(scene.navmesh.is_walkable(ep.start));
             assert!(scene.navmesh.is_walkable(ep.goal));
             assert!(ep.geodesic_dist >= 1.0);
@@ -108,8 +134,33 @@ mod tests {
     fn flee_episode_goal_is_start() {
         let scene = generate("f", 22, Complexity::test());
         let mut rng = Rng::new(0);
-        let ep = sample_episode(&scene.navmesh, &mut rng, Task::Flee).unwrap();
+        let ep = sample_episode(&scene.navmesh, &mut rng, Task::Flee, 1.0).unwrap();
         assert_eq!(ep.goal, ep.start);
+    }
+
+    #[test]
+    fn min_geodesic_raises_difficulty() {
+        let scene = generate("g", 23, Complexity::test());
+        let mut rng = Rng::new(4);
+        let mut raised = 0usize;
+        for _ in 0..20 {
+            let ep = sample_episode(&scene.navmesh, &mut rng, Task::PointNav, 3.0).unwrap();
+            if ep.geodesic_dist >= 3.0 {
+                raised += 1;
+            }
+        }
+        // the floor may relax on a small navmesh, but most episodes honor it
+        assert!(raised >= 15, "only {raised}/20 episodes above the floor");
+    }
+
+    #[test]
+    fn unreachable_floor_relaxes_instead_of_failing() {
+        // a 6m test scene cannot host a 50m geodesic; sampling must still
+        // succeed by relaxing toward the baseline
+        let scene = generate("r", 24, Complexity::test());
+        let mut rng = Rng::new(9);
+        let ep = sample_episode(&scene.navmesh, &mut rng, Task::PointNav, 50.0);
+        assert!(ep.is_some(), "sampler livelocked on an unreachable floor");
     }
 
     #[test]
@@ -118,5 +169,9 @@ mod tests {
         assert_eq!(Task::parse("flee"), Some(Task::Flee));
         assert_eq!(Task::parse("explore"), Some(Task::Explore));
         assert_eq!(Task::parse("x"), None);
+        // name() is the exact inverse of parse()
+        for t in [Task::PointNav, Task::Flee, Task::Explore] {
+            assert_eq!(Task::parse(t.name()), Some(t));
+        }
     }
 }

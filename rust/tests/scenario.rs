@@ -1,0 +1,277 @@
+//! Integration tests for the scenario engine (`bps::scenario`).
+//!
+//! The acceptance gates: procgen is bitwise deterministic (same
+//! `(id, seed, Complexity)` → identical `.bsc` bytes); dataset splits
+//! stay disjoint with stable ordering; a warm procgen prefetch queue
+//! makes `rotate_scenes` non-blocking (zero feed stalls); and a
+//! curriculum-driven `EnvBatch` run advances ≥ 2 difficulty stages
+//! *bitwise-reproducibly* across two runs under a fixed seed — in both
+//! the synchronous and pipelined stepping modes. When AOT artifacts are
+//! present, `bps train --scenario` (via the coordinator) must be equally
+//! reproducible end to end.
+
+use std::sync::Arc;
+
+use bps::env::{EnvBatch, EnvBatchConfig};
+use bps::render::{RenderConfig, SceneRotation};
+use bps::scenario::{sensor_policy, Curriculum, ScenarioSpec, ScenarioStream};
+use bps::scene::procgen::{generate, Complexity};
+use bps::sim::{BatchSim, SimConfig, SimOutputs, ACTION_LEFT};
+use bps::util::pool::WorkerPool;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("bps_scenario_test").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn easy_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        "name=curr task=pointnav stages=3 tris=400..2k extent=6..9 \
+         clutter=0..2 mats=1..3 tex=16 min-geo=1 max-steps=100",
+    )
+    .unwrap()
+}
+
+/// Same `(id, seed, Complexity)` must produce bitwise-identical scene
+/// assets — geometry, materials, textures, navmesh — verified on the
+/// serialized `.bsc` bytes, the strongest equality the format offers.
+#[test]
+fn procgen_bitwise_deterministic() {
+    let dir = tmpdir("bitwise");
+    for (seed, cx) in [
+        (7u64, Complexity::test()),
+        (7u64, Complexity::thor_like()),
+        (1234u64, Complexity::test()),
+    ] {
+        let a = generate("det", seed, cx);
+        let b = generate("det", seed, cx);
+        let pa = dir.join("a.bsc");
+        let pb = dir.join("b.bsc");
+        a.save(&pa).unwrap();
+        b.save(&pb).unwrap();
+        let ba = std::fs::read(&pa).unwrap();
+        let bb = std::fs::read(&pb).unwrap();
+        assert_eq!(ba, bb, "seed {seed}: regeneration changed the bytes");
+        // a different seed must change them
+        let c = generate("det", seed ^ 1, cx);
+        c.save(&pb).unwrap();
+        assert_ne!(ba, std::fs::read(&pb).unwrap());
+    }
+}
+
+/// Dataset split integrity: train/val/test are disjoint id sets, every
+/// id resolves to a file, and reopening preserves the exact ordering.
+#[test]
+fn dataset_splits_disjoint_and_stable() {
+    let dir = tmpdir("splits");
+    let ds = bps::scene::generate_dataset(&dir, 4, 2, 2, Complexity::test(), 33).unwrap();
+    let all: Vec<&String> = ds
+        .train
+        .iter()
+        .chain(ds.val.iter())
+        .chain(ds.test.iter())
+        .collect();
+    assert_eq!(all.len(), 8);
+    let unique: std::collections::BTreeSet<&&String> = all.iter().collect();
+    assert_eq!(unique.len(), all.len(), "split ids must be disjoint");
+    for id in &all {
+        assert!(ds.scene_path(id).exists(), "{id} missing on disk");
+    }
+    // reopen: identical membership *and* ordering
+    let re = bps::scene::Dataset::open(&dir).unwrap();
+    assert_eq!(re.train, ds.train);
+    assert_eq!(re.val, ds.val);
+    assert_eq!(re.test, ds.test);
+    assert_eq!(re.split("train").unwrap(), &ds.train[..]);
+}
+
+/// The prefetch-queue guarantee: with a warm queue, a pinned rotation
+/// never synchronously generates — its blocking take pops a finished
+/// scene (zero stalls), and the swapped-in scenes follow the
+/// deterministic request order.
+#[test]
+fn warm_prefetch_keeps_rotation_non_blocking() {
+    let pool = Arc::new(WorkerPool::new(2));
+    let stream = ScenarioStream::new(easy_spec(), 5, 3, false, Arc::clone(&pool));
+    let mut rot = SceneRotation::streaming(stream, 2).unwrap();
+    let mut sim = BatchSim::new(
+        SimConfig {
+            max_steps: 2,
+            ..SimConfig::pointnav()
+        },
+        rot.assign(4),
+        11,
+    );
+    let mut swapped = Vec::new();
+    for _ in 0..6 {
+        // deterministic warmth: never rotate against a half-filled queue
+        rot.wait_feed_warm();
+        rot.rotate_pinned(&mut sim);
+        swapped.push(rot.active[(rot.rotations as usize + 1) % 2].id.clone());
+    }
+    assert_eq!(rot.rotations, 6);
+    assert_eq!(rot.feed_stalls(), 0, "warm takes must not wait on procgen");
+    // scene ids continue the request sequence started by the initial K
+    let ids: Vec<String> = (0..6).map(|i| format!("curr_s0_{:05}", i + 2)).collect();
+    assert_eq!(swapped, ids);
+    // and the queued swaps actually reach the sim at episode resets
+    let pool0 = WorkerPool::new(0);
+    let mut out = SimOutputs::with_capacity(4);
+    sim.step_batch(&pool0, &[ACTION_LEFT; 4], &mut out);
+    sim.step_batch(&pool0, &[ACTION_LEFT; 4], &mut out);
+    assert!(out.dones.iter().all(|&d| d));
+    assert!(sim.env(0).scene.id.starts_with("curr_s0_"));
+}
+
+/// Everything observable from one curriculum run, for bitwise A/B.
+#[derive(PartialEq, Debug)]
+struct RunTrace {
+    rewards: Vec<f32>,
+    advances: Vec<(usize, u32)>,
+    obs: Vec<f32>,
+    rotations: u64,
+}
+
+/// One curriculum-driven run over the public `EnvBatch` seam: scripted
+/// GPS+compass policy, streaming procgen scenes, pinned rotation.
+fn curriculum_run(overlap: bool, steps: usize) -> RunTrace {
+    let spec = easy_spec();
+    let n = 8;
+    let pool = Arc::new(WorkerPool::new(2));
+    let stream = ScenarioStream::new(spec.clone(), 21, 2, false, Arc::clone(&pool));
+    let rot = SceneRotation::streaming(stream, 2).unwrap();
+    let mut env: EnvBatch = EnvBatchConfig::new(spec.task, RenderConfig::depth(16))
+        .sim(spec.sim_config())
+        .seed(0xCAFE)
+        .overlap(overlap)
+        .pin_rotation(4)
+        .build_with_rotation(rot, n, pool)
+        .unwrap();
+    // lenient advance rule: the scripted policy only has to land *some*
+    // successes per window; the machinery under test is the scheduling
+    let mut cur = Curriculum::new(spec.stages, 8, 0.05);
+    let mut actions = vec![0u8; n];
+    let mut rewards = Vec::with_capacity(steps);
+    let mut advances = Vec::new();
+    for t in 0..steps {
+        sensor_policy(env.view().goal, 0.15, t, &mut actions);
+        let v = env.step(&actions).unwrap();
+        rewards.push(v.rewards.iter().sum());
+        cur.observe(v.dones, v.successes, v.spl);
+        if let Some(stage) = cur.advance_if_ready() {
+            env.set_stage(stage).unwrap();
+            advances.push((t, stage));
+        }
+        env.rotate_scenes().unwrap();
+    }
+    let obs = env.view().obs.to_vec();
+    RunTrace {
+        rewards,
+        advances,
+        obs,
+        rotations: env.rotations(),
+    }
+}
+
+/// The tentpole acceptance gate: under a fixed seed the curriculum
+/// deterministically advances >= 2 stages, and the entire run — rewards,
+/// advance schedule, final observations, rotation count — is bitwise
+/// reproducible across two runs *and* across sync vs pipelined stepping.
+#[test]
+fn curriculum_advances_two_stages_bitwise_reproducibly() {
+    let steps = 900;
+    let a = curriculum_run(false, steps);
+    let b = curriculum_run(false, steps);
+    assert_eq!(a, b, "two identical runs diverged");
+    assert!(
+        a.advances.len() >= 2,
+        "curriculum advanced only {} stage(s): {:?}",
+        a.advances.len(),
+        a.advances
+    );
+    assert_eq!(a.advances.last().unwrap().1, 2, "must reach the hardest stage");
+
+    // pipelined stepping replays the identical run (set_stage and rotate
+    // execute in request order on the driver thread); the rotation count
+    // is read while the driver may still be draining, so compare the
+    // deterministic fields
+    let c = curriculum_run(true, steps);
+    assert_eq!(a.rewards, c.rewards, "pipelined rewards diverged");
+    assert_eq!(a.advances, c.advances, "pipelined advance schedule diverged");
+    assert_eq!(a.obs, c.obs, "pipelined observations diverged");
+}
+
+/// Full-stack gate (needs `make artifacts`): two scenario training runs
+/// through the coordinator — `bps train --scenario …` — must produce
+/// bitwise-identical parameters and stage schedules.
+#[test]
+fn train_scenario_reproducible_when_artifacts_present() {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if !root.join("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mk = || bps::config::Config {
+        variant: "test".into(),
+        artifacts_dir: root.join("artifacts"),
+        scenario: Some(
+            "name=trainspec task=pointnav stages=2 tris=400..1500 extent=6..8 \
+             clutter=0..1 tex=16 max-steps=64"
+                .into(),
+        ),
+        num_envs: 4,
+        rollout_len: 4,
+        num_minibatches: 2,
+        k_scenes: 2,
+        prefetch_scenes: 2,
+        curriculum_window: 4,
+        curriculum_threshold: 0.25,
+        rotate_every: Some(2),
+        total_frames: 64,
+        seed: 5,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut a = bps::coordinator::Coordinator::new(mk()).unwrap();
+    let mut b = bps::coordinator::Coordinator::new(mk()).unwrap();
+    for _ in 0..4 {
+        a.train_iteration().unwrap();
+        b.train_iteration().unwrap();
+    }
+    assert_eq!(a.params.flat, b.params.flat, "scenario training diverged");
+    assert_eq!(a.stages(), b.stages(), "curriculum schedules diverged");
+}
+
+/// Heterogeneous scenario check: a goal-free task spec runs through the
+/// same machinery (zero goal sensor, scripted policy never stops).
+#[test]
+fn goal_free_scenario_runs() {
+    let spec = ScenarioSpec::parse(
+        "name=sweep task=explore stages=2 tris=400..1200 extent=6..8 \
+         clutter=0..1 tex=16 max-steps=50",
+    )
+    .unwrap();
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let stream = ScenarioStream::new(spec.clone(), 3, 2, false, Arc::clone(&pool));
+    let rot = SceneRotation::streaming(stream, 2).unwrap();
+    let mut env = EnvBatchConfig::new(spec.task, RenderConfig::depth(16))
+        .sim(spec.sim_config())
+        .seed(1)
+        .pin_rotation(4)
+        .build_with_rotation(rot, n, pool)
+        .unwrap();
+    assert!(env.view().goal.iter().all(|&g| g == 0.0));
+    let mut actions = vec![0u8; n];
+    let mut episodes = 0u32;
+    for t in 0..120 {
+        sensor_policy(env.view().goal, 0.15, t, &mut actions);
+        let v = env.step(&actions).unwrap();
+        episodes += v.dones.iter().filter(|&&d| d).count() as u32;
+        env.rotate_scenes().unwrap();
+    }
+    // max-steps=50 guarantees episode turnover for the goal-free script
+    assert!(episodes >= n as u32 * 2, "only {episodes} episodes");
+}

@@ -223,6 +223,105 @@ fn api_misuse_rejected() {
     assert_eq!(v.step, 1);
 }
 
+/// Admission control: with a memory budget that fits only one shard's
+/// resident assets, leases that would activate a second shard are
+/// rejected until the first is vacated.
+#[test]
+fn admission_control_enforces_memory_budget() {
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let s = scene();
+    let one_shard = s.footprint_bytes(false) * n;
+    let specs: Vec<ShardSpec> = (0..2)
+        .map(|i| {
+            let cfg = env_cfg().seed(SEED + i as u64);
+            ShardSpec::with_scenes(cfg, (0..n).map(|_| Arc::clone(&s)).collect())
+        })
+        .collect();
+    // budget: one shard resident, not two
+    let srv = SimServer::with_budget(specs, Arc::clone(&pool), Some(one_shard + 1)).unwrap();
+    for st in srv.stats() {
+        assert_eq!(st.resident_bytes, one_shard);
+    }
+
+    // first lease activates shard 0 and fits the budget
+    let mut a = srv.connect(Task::PointNav, n).unwrap();
+    // shard 0 is full; shard 1 has room but activating it would go over
+    let err = match srv.connect(Task::PointNav, 1) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("lease admitted over the memory budget"),
+    };
+    assert!(err.contains("budget"), "expected a budget rejection: {err}");
+
+    // sessions on the active shard keep working
+    let acts = vec![ACTION_FORWARD; n];
+    let v = a.step(&acts).unwrap();
+    assert_eq!(v.step, 1);
+
+    // vacating shard 0 frees the budget; the next lease is admitted
+    a.detach();
+    let b = srv.connect(Task::PointNav, 1).unwrap();
+    assert_eq!(b.num_envs(), 1);
+
+    // without a budget, both shards admit freely
+    let s2 = scene();
+    let specs: Vec<ShardSpec> = (0..2)
+        .map(|i| {
+            let cfg = env_cfg().seed(SEED + i as u64);
+            ShardSpec::with_scenes(cfg, (0..n).map(|_| Arc::clone(&s2)).collect())
+        })
+        .collect();
+    let open = SimServer::start(specs, pool).unwrap();
+    let _c = open.connect(Task::PointNav, n).unwrap();
+    let _d = open.connect(Task::PointNav, n).unwrap();
+}
+
+/// Served shards stream scenes like training shards: the shard driver
+/// drives `rotate_scenes` on its own cadence, gated on the shard's
+/// rotation (scenario) assignment, and the swaps show up in the stats.
+#[test]
+fn shard_driver_streams_scene_rotation() {
+    use bps::render::SceneRotation;
+
+    let dir = std::env::temp_dir().join("bps_serve_rot");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = bps::scene::generate_dataset(&dir, 4, 0, 0, Complexity::test(), 61).unwrap();
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let rot = SceneRotation::new(ds.clone(), ds.train.clone(), 2, false).unwrap();
+    // pin_rotation(1): every driver-side rotate call performs one
+    // blocking swap, so the rotation count is deterministic in steps
+    let spec = ShardSpec::with_rotation(env_cfg().pin_rotation(1), rot, n).rotate_every(2);
+    let srv = SimServer::start(vec![spec], Arc::clone(&pool)).unwrap();
+
+    let mut session = srv.connect(Task::PointNav, n).unwrap();
+    let acts = vec![ACTION_FORWARD; n];
+    let steps = 10u64;
+    for _ in 0..steps {
+        let v = session.step(&acts).unwrap();
+        assert!(v.rewards.iter().all(|r| r.is_finite()));
+    }
+    assert_eq!(srv.stats()[0].steps, steps);
+    // the driver rotates *after* publishing a step, so give the final
+    // swap a moment to land before asserting the exact count
+    let want = steps / 2;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while srv.stats()[0].rotations < want && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let got = srv.stats()[0].rotations;
+    assert_eq!(got, want, "driver must rotate every 2 steps (got {got})");
+
+    // fixed-scene shards never rotate
+    let fixed = server(n, StragglerPolicy::Wait, &pool);
+    let mut fs = fixed.connect(Task::PointNav, n).unwrap();
+    for _ in 0..4 {
+        fs.step(&acts).unwrap();
+    }
+    assert_eq!(fixed.stats()[0].rotations, 0);
+}
+
 /// Multi-threaded smoke: M client threads drive one server concurrently
 /// (sessions are Send); every client sees every one of its steps.
 #[test]
