@@ -1,19 +1,27 @@
 //! Micro-bench + ablation: renderer pipeline modes and frustum culling —
-//! the §3.2 design choices in isolation (DESIGN.md ablation index).
+//! the §3.2 design choices in isolation (DESIGN.md ablation index), with
+//! the per-stage breakdown (transform / cull / raster / resolve) from
+//! `BatchRenderer::take_stats` and p50/p95 megaframe latency.
+//!
+//! Knobs: `BPS_BENCH_ITERS=warmup,reps`; `BPS_BENCH_QUICK=1` shrinks to
+//! CI-smoke size (test-complexity scenes, N=8). The `bps bench --json`
+//! subcommand is the machine-readable face of this bench.
 
 use std::sync::Arc;
 
-use bps::bench::dataset;
+use bps::bench::{bench_iters, bench_quick, dataset, measure_render};
 use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
 use bps::util::pool::WorkerPool;
 use bps::util::rng::Rng;
 
 fn main() {
-    let ds = dataset("gibson").expect("dataset");
+    let quick = bench_quick();
+    let ds = dataset(if quick { "test" } else { "gibson" }).expect("dataset");
     let scene = Arc::new(ds.load_scene(&ds.train[0], true).expect("scene"));
     let pool = WorkerPool::new(WorkerPool::default_size());
     let mut rng = Rng::new(5);
-    let n = 64;
+    let n = if quick { 8 } else { 64 };
+    let (warmup, reps) = bench_iters(1, if quick { 3 } else { 10 });
     let items: Vec<RenderItem> = (0..n)
         .map(|_| RenderItem {
             scene: Arc::clone(&scene),
@@ -22,8 +30,13 @@ fn main() {
         })
         .collect();
     println!(
-        "# renderer ablations (N={n}, 64px, {} tris/scene)",
-        scene.mesh.num_tris()
+        "# renderer ablations (N={n}, 64px, {} tris/scene, {} workers)",
+        scene.mesh.num_tris(),
+        pool.num_workers()
+    );
+    println!(
+        "{:<16} {:>9} {:>8} {:>8} {:>6} | {:>9} {:>7} {:>9} {:>8}  us/frame",
+        "config", "FPS", "p50 ms", "p95 ms", "cull%", "transform", "cull", "raster", "resolve"
     );
     for (label, mode, sensor) in [
         ("depth fused", PipelineMode::Fused, Sensor::Depth),
@@ -34,15 +47,11 @@ fn main() {
         let cfg = RenderConfig { res: 64, sensor, scale: 1, mode };
         let renderer = BatchRenderer::new(cfg, n);
         let mut obs = vec![0.0f32; n * cfg.obs_floats()];
-        renderer.render_batch(&pool, &items, &mut obs);
-        let reps = 10;
-        let t0 = std::time::Instant::now();
-        for _ in 0..reps {
-            renderer.render_batch(&pool, &items, &mut obs);
-        }
-        let fps = (n * reps) as f64 / t0.elapsed().as_secs_f64();
-        let s = renderer.stats();
-        let cullpct = 100.0 * s.chunks_culled as f64 / s.chunks_total.max(1) as f64;
-        println!("{label:<16} {fps:>9.0} FPS  ({cullpct:>4.1}% chunks culled)");
+        let r = measure_render(&renderer, &pool, &items, &mut obs, warmup, reps);
+        let [tx, cu, ra, re] = r.stage_us;
+        println!(
+            "{label:<16} {:>9.0} {:>8.2} {:>8.2} {:>5.1}% | {tx:>9.1} {cu:>7.1} {ra:>9.1} {re:>8.1}",
+            r.fps, r.p50_ms, r.p95_ms, r.cull_pct,
+        );
     }
 }

@@ -36,6 +36,14 @@ fn main() {
                         "{sensor:<8} {:<10} {:<11} {s:>10.1} {i:>10.1} {l:>10.1} {dnn:>6.0}%",
                         row.system, row.cnn
                     );
+                    // renderer stage sub-breakdown (reset-on-read per run,
+                    // worker-summed — can exceed the wall-clock render row)
+                    let (tx, cu, ra, re) = r.render_stages;
+                    println!(
+                        "{:<31} transform {tx:>7.1}  cull {cu:>7.1}  \
+                         raster {ra:>7.1}  resolve {re:>7.1}",
+                        ""
+                    );
                 }
                 Err(e) => println!("{sensor:<8} {:<10} error: {e:#}", row.system),
             }

@@ -109,6 +109,9 @@ pub struct FpsResult {
     pub frames: u64,
     /// µs/frame: (simulation+rendering, inference, learning)
     pub breakdown: (f64, f64, f64),
+    /// µs/frame inside the renderer, worker-summed:
+    /// (transform, cull, raster, resolve)
+    pub render_stages: (f64, f64, f64, f64),
 }
 
 /// Run `iters` training iterations (after `warmup`) and report FPS +
@@ -138,6 +141,12 @@ pub fn measure_fps(mut cfg: Config, dataset_dir: &Path, warmup: usize, iters: us
         fps: frames as f64 / secs,
         frames,
         breakdown: (get("sim") + get("render"), get("inference"), get("learn")),
+        render_stages: (
+            get("render.transform"),
+            get("render.cull"),
+            get("render.raster"),
+            get("render.resolve"),
+        ),
     })
 }
 
@@ -186,4 +195,89 @@ pub fn artifacts_dir() -> PathBuf {
 /// BPS_BENCH_FULL=1 — on small CPU testbeds they dominate bench time.
 pub fn bench_full() -> bool {
     std::env::var("BPS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One measured renderer configuration — shared by `bench_render` and the
+/// `bps bench` subcommand so the human-readable and machine-readable
+/// reports can never diverge on what they measure.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderBenchResult {
+    pub fps: f64,
+    pub p50_ms: f32,
+    pub p95_ms: f32,
+    pub tris_per_s: f64,
+    /// µs/frame per stage (worker-summed): transform, cull, raster, resolve.
+    pub stage_us: [f64; 4],
+    pub cull_pct: f64,
+}
+
+/// Measure one renderer configuration: warm up, drain the reset-on-read
+/// counters, then time `reps` megaframes (per-rep latency feeds p50/p95).
+pub fn measure_render(
+    renderer: &crate::render::BatchRenderer,
+    pool: &crate::util::pool::WorkerPool,
+    items: &[crate::render::RenderItem],
+    obs: &mut [f32],
+    warmup: usize,
+    reps: usize,
+) -> RenderBenchResult {
+    use crate::metrics::Window;
+    let reps = reps.max(1);
+    // warmup = 0 is honored: cold first-megaframe latency is measurable
+    for _ in 0..warmup {
+        renderer.render_batch(pool, items, obs);
+    }
+    let _ = renderer.take_stats(); // reset-on-read: drop warmup counters
+    let mut lat = Window::new(reps);
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        renderer.render_batch(pool, items, obs);
+        lat.push(t.elapsed().as_secs_f32() * 1e3);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let st = renderer.take_stats();
+    let frames = (items.len() * reps) as f64;
+    let us = |ns: u64| ns as f64 / 1e3 / frames;
+    RenderBenchResult {
+        fps: frames / secs,
+        p50_ms: lat.percentile(0.5),
+        p95_ms: lat.percentile(0.95),
+        tris_per_s: st.tris_rasterized as f64 / secs,
+        stage_us: [
+            us(st.transform_ns),
+            us(st.cull_ns),
+            us(st.raster_ns),
+            us(st.resolve_ns),
+        ],
+        cull_pct: 100.0 * st.chunks_culled as f64 / st.chunks_total.max(1) as f64,
+    }
+}
+
+/// Quick mode (BPS_BENCH_QUICK=1): benches shrink to CI-smoke size —
+/// test-complexity scenes, small batches, a couple of reps.
+pub fn bench_quick() -> bool {
+    std::env::var("BPS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Append `record` to a JSON-array benchmark trajectory file (e.g.
+/// `BENCH_render.json`), creating it when missing. Each record is one
+/// measured configuration; the array accumulates the perf trajectory
+/// across PRs.
+pub fn append_bench_record(path: &Path, record: crate::util::json::Json) -> Result<()> {
+    use crate::util::json::Json;
+    let mut arr = match std::fs::read_to_string(path) {
+        Ok(text) if !text.trim().is_empty() => match Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?
+        {
+            Json::Arr(v) => v,
+            other => vec![other],
+        },
+        _ => Vec::new(),
+    };
+    arr.push(record);
+    let mut text = Json::Arr(arr).to_string();
+    text.push('\n');
+    std::fs::write(path, text).map_err(|e| anyhow::anyhow!("write {path:?}: {e}"))?;
+    Ok(())
 }

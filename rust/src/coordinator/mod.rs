@@ -24,6 +24,7 @@
 
 use std::rc::Rc;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -251,6 +252,16 @@ impl Coordinator {
             let (sim_d, render_d) = shard.env.drain_timings();
             self.prof.add("sim", sim_d);
             self.prof.add("render", render_d);
+            // renderer stage breakdown (transform/cull/raster/resolve) —
+            // worker-summed wall time, so stages can exceed "render"
+            let rs = shard.env.take_render_stats();
+            self.prof
+                .add("render.transform", Duration::from_nanos(rs.transform_ns));
+            self.prof.add("render.cull", Duration::from_nanos(rs.cull_ns));
+            self.prof
+                .add("render.raster", Duration::from_nanos(rs.raster_ns));
+            self.prof
+                .add("render.resolve", Duration::from_nanos(rs.resolve_ns));
         }
         // learning (DD-PPO gradient averaging across shards inside)
         let losses = {

@@ -35,7 +35,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::render::{BatchRenderer, RenderItem, SceneRotation, Sensor};
+use crate::render::batch::RenderCounters;
+use crate::render::{BatchRenderer, RenderItem, RenderStats, SceneRotation, Sensor};
 use crate::scene::SceneAsset;
 use crate::sim::{BatchSim, SimOutputs, Task};
 use crate::util::pool::WorkerPool;
@@ -206,6 +207,9 @@ pub struct EnvBatch {
     actions_scratch: Option<Vec<u8>>,
     inflight: bool,
     timings: Arc<StepTimings>,
+    /// Renderer work/stage counters, shared with the `BatchRenderer` that
+    /// lives on the driver thread in pipelined mode.
+    render_counters: Arc<RenderCounters>,
     rotations: Arc<AtomicU64>,
     feed_stalls: Arc<AtomicU64>,
     resident_bytes: usize,
@@ -237,6 +241,7 @@ impl EnvBatch {
         let task = cfg.sim.task;
         let sim = BatchSim::new(cfg.sim, scenes, cfg.seed);
         let renderer = BatchRenderer::new(cfg.render, n);
+        let render_counters = renderer.counters();
         let timings = Arc::new(StepTimings::default());
         let rotations = Arc::new(AtomicU64::new(0));
         let feed_stalls = Arc::new(AtomicU64::new(0));
@@ -277,6 +282,7 @@ impl EnvBatch {
             actions_scratch: Some(Vec::with_capacity(n)),
             inflight: false,
             timings,
+            render_counters,
             rotations,
             feed_stalls,
             resident_bytes,
@@ -451,6 +457,14 @@ impl EnvBatch {
         self.timings.drain()
     }
 
+    /// Drain the renderer's per-stage statistics (reset-on-read): triangle
+    /// and chunk counts plus transform/cull/raster/resolve wall time since
+    /// the last take — the Table A2 renderer breakdown. In pipelined mode
+    /// this reflects steps the driver has completed.
+    pub fn take_render_stats(&self) -> RenderStats {
+        self.render_counters.take()
+    }
+
     /// Receive the in-flight step and rotate it in as the new front.
     fn finish_step(&mut self) -> Result<()> {
         debug_assert!(self.inflight, "finish_step without an in-flight step");
@@ -581,6 +595,21 @@ mod tests {
         let _ = env.submit(&[ACTION_FORWARD]).unwrap(); // dropped unconsumed
         let v = env.step(&[ACTION_FORWARD]).unwrap();
         assert_eq!(v.rewards.len(), 1);
+    }
+
+    #[test]
+    fn render_stats_drain_through_env() {
+        for overlap in [false, true] {
+            let mut env = batch(2, overlap);
+            let _ = env.step(&[ACTION_FORWARD, ACTION_FORWARD]).unwrap();
+            // initial render + one completed step have been counted
+            let rs = env.take_render_stats();
+            assert!(rs.tris_rasterized > 0, "overlap={overlap}");
+            assert!(rs.stage_ns_total() > 0, "overlap={overlap}");
+            // reset-on-read: nothing ran since the take
+            let rs2 = env.take_render_stats();
+            assert_eq!(rs2.tris_rasterized, 0, "overlap={overlap}");
+        }
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!   eval           evaluate a checkpoint on a dataset split
 //!   serve-demo     multi-client serving demo over the SimServer layer
 //!   scenario-demo  scenario engine demo: streaming procgen + curriculum
+//!   bench          standalone batch-renderer benchmark (--json appends the
+//!                  machine-readable perf trajectory to BENCH_render.json)
 //!   info           print manifest / artifact information
 //!   help           describe the batched environment API + all options
 //!
@@ -45,6 +47,7 @@ fn run() -> Result<()> {
         Some("eval") => eval(&mut args),
         Some("serve-demo") => serve_demo(&mut args),
         Some("scenario-demo") => scenario_demo(&mut args),
+        Some("bench") => bench(&mut args),
         Some("info") => info(&mut args),
         Some("help") | None => {
             print_help();
@@ -53,7 +56,7 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|serve-demo|scenario-demo|info|help> \
+                 usage: bps <gen-dataset|train|eval|serve-demo|scenario-demo|bench|info|help> \
                  [--key value ...]"
             )
         }
@@ -87,6 +90,15 @@ SUBCOMMANDS
                (--scenario SPEC|NAME --scenario-dir DIR --envs N --steps T
                 --k K --prefetch P --rotate-every K --res R --seed S
                 --threads T --window E --threshold F --list)
+  bench        standalone batch-renderer benchmark across pipeline modes
+               and sensors: FPS, p50/p95 megaframe latency, triangle
+               throughput, and the per-stage breakdown (transform / cull /
+               raster / resolve). --json appends one record per measured
+               configuration to a JSON-array trajectory file, so renderer
+               perf is tracked across PRs
+               (--complexity gibson|thor|test --n N --res R --warmup W
+                --reps K --threads T --json --out BENCH_render.json;
+                BPS_BENCH_QUICK=1 shrinks everything to CI-smoke size)
   info         print the AOT artifact manifest (--artifacts-dir PATH)
   help         this text
 
@@ -494,6 +506,118 @@ fn scenario_demo(args: &mut Args) -> Result<()> {
         spec.stages - 1,
         env.rotations()
     );
+    Ok(())
+}
+
+/// Standalone batch-renderer benchmark (the `bench_render` ablation as a
+/// first-class subcommand): measures FPS, p50/p95 megaframe latency,
+/// triangle throughput, and the per-stage wall-time breakdown for every
+/// pipeline-mode × sensor configuration. With `--json`, appends one record
+/// per configuration to a JSON-array trajectory file (`BENCH_render.json`)
+/// so the renderer's perf history is machine-readable across PRs.
+fn bench(args: &mut Args) -> Result<()> {
+    use bps::bench::{append_bench_record, bench_iters, bench_quick, dataset, measure_render};
+    use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
+    use bps::util::json::{num, obj, s};
+    use bps::util::pool::WorkerPool;
+    use bps::util::rng::Rng;
+    use std::sync::Arc;
+
+    let quick = bench_quick();
+    let complexity = args.opt_or("complexity", if quick { "test" } else { "gibson" });
+    let n = args.usize_or("n", if quick { 8 } else { 64 })?.max(1);
+    let res = args.usize_or("res", 64)?.max(4);
+    let (dw, dr) = bench_iters(if quick { 1 } else { 3 }, if quick { 3 } else { 20 });
+    let warmup = args.usize_or("warmup", dw)?;
+    let reps = args.usize_or("reps", dr)?.max(1);
+    let threads = args.usize_or("threads", 0)?;
+    let json = args.flag("json");
+    let out_path = PathBuf::from(args.opt_or("out", "BENCH_render.json"));
+
+    let ds = dataset(&complexity)?;
+    let scene = Arc::new(ds.load_scene(&ds.train[0], true)?);
+    let pool = WorkerPool::new(if threads == 0 {
+        WorkerPool::default_size()
+    } else {
+        threads
+    });
+    let mut rng = Rng::new(5);
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = scene
+            .navmesh
+            .random_point(&mut rng)
+            .ok_or_else(|| anyhow::anyhow!("scene has no navigable point"))?;
+        items.push(RenderItem {
+            scene: Arc::clone(&scene),
+            pos,
+            heading: rng.range_f32(0.0, std::f32::consts::TAU),
+        });
+    }
+    println!(
+        "# bench render: N={n} res={res} complexity={complexity} tris/scene={} \
+         workers={} warmup={warmup} reps={reps}",
+        scene.mesh.num_tris(),
+        pool.num_workers(),
+    );
+    println!(
+        "{:<18} {:>9} {:>9} {:>9} {:>11} | {:>9} {:>8} {:>9} {:>8}  us/frame",
+        "config", "FPS", "p50 ms", "p95 ms", "Mtris/s", "transform", "cull", "raster", "resolve"
+    );
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    for (mode, mode_name) in [
+        (PipelineMode::Fused, "fused"),
+        (PipelineMode::Pipelined, "pipelined"),
+    ] {
+        for (sensor, sensor_name) in [(Sensor::Depth, "depth"), (Sensor::Rgb, "rgb")] {
+            let cfg = RenderConfig { res, sensor, scale: 1, mode };
+            let renderer = BatchRenderer::new(cfg, n);
+            let mut obs = vec![0.0f32; n * cfg.obs_floats()];
+            let r = measure_render(&renderer, &pool, &items, &mut obs, warmup, reps);
+            let [tx, cu, ra, re] = r.stage_us;
+            println!(
+                "{:<18} {:>9.0} {:>9.2} {:>9.2} {:>11.2} | {tx:>9.1} {cu:>8.1} {ra:>9.1} {re:>8.1}",
+                format!("{sensor_name} {mode_name}"),
+                r.fps,
+                r.p50_ms,
+                r.p95_ms,
+                r.tris_per_s / 1e6,
+            );
+            if json {
+                let record = obj(vec![
+                    ("bench", s("render")),
+                    ("ts", num(ts as f64)),
+                    ("complexity", s(&complexity)),
+                    ("n", num(n as f64)),
+                    ("res", num(res as f64)),
+                    ("mode", s(mode_name)),
+                    ("sensor", s(sensor_name)),
+                    ("reps", num(reps as f64)),
+                    ("threads", num(pool.num_workers() as f64)),
+                    ("fps", num(r.fps)),
+                    ("p50_ms", num(r.p50_ms as f64)),
+                    ("p95_ms", num(r.p95_ms as f64)),
+                    ("tris_per_s", num(r.tris_per_s)),
+                    (
+                        "stage_us_per_frame",
+                        obj(vec![
+                            ("transform", num(tx)),
+                            ("cull", num(cu)),
+                            ("raster", num(ra)),
+                            ("resolve", num(re)),
+                        ]),
+                    ),
+                ]);
+                append_bench_record(&out_path, record)?;
+            }
+        }
+    }
+    if json {
+        println!("appended 4 records to {out_path:?}");
+    }
     Ok(())
 }
 

@@ -5,21 +5,32 @@
 //!
 //! Two execution modes reproduce the paper's pipelined-culling design and
 //! its ablation: `Fused` runs cull+raster per environment inside one pass;
-//! `Pipelined` runs frustum culling on a dedicated stage that feeds raster
-//! workers through a queue, overlapping the two (the GPU analog: compute-
-//! shader culling concurrent with rasterization).
+//! `Pipelined` runs frustum culling as a stage that feeds rasterization
+//! through `WorkerPool::staged_for` — an atomic ticket cursor plus a
+//! lock-free readiness counter on the *persistent* worker pool, so a batch
+//! costs no thread spawns, channels, or mutexes (the GPU analog:
+//! compute-shader culling concurrent with rasterization).
+//!
+//! Dispatch is **cost-aware**: environments are issued heaviest-first
+//! (LPT) by their previous-frame `tris_rasterized`, so one heavy
+//! scenario-stage env no longer straggles a batch of light ones. Tiles are
+//! disjoint, so dispatch order never affects output (asserted in
+//! `rust/tests/render_golden.rs`).
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::geom::Vec2;
 use crate::scene::SceneAsset;
 use crate::util::pool::WorkerPool;
 
 use super::camera::Camera;
-use super::raster::{cull_chunks, raster_tile, RasterStats, Sensor, TileScratch};
+use super::raster::{
+    cull_chunks, raster_zbuf, resolve_depth_into, resolve_rgb_into, RasterStats, Sensor,
+    StageTimes, TileScratch,
+};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PipelineMode {
@@ -75,22 +86,89 @@ pub struct RenderItem {
 struct EnvScratch {
     tile: TileScratch,
     visible: Vec<u32>,
-    depth: Vec<f32>,
+    /// Full-resolution shaded buffer (RGB sensors only); depth resolves
+    /// straight from the tile z-buffer, no intermediate copy.
     rgb: Vec<f32>,
 }
 
 struct ScratchSlots(Vec<UnsafeCell<EnvScratch>>);
 
-// SAFETY: one env index per worker per batch.
+// SAFETY: one env index per worker per batch; in pipelined mode the cull
+// stage's writes to a slot are published through `staged_for`'s readiness
+// counter (Release/Acquire) before the raster stage reads them.
 unsafe impl Sync for ScratchSlots {}
+
+/// Work + per-stage wall-time counters, `Arc`-shared so `EnvBatch` (and
+/// the serve layer) can read them after the renderer moves onto a driver
+/// thread.
+#[derive(Default)]
+pub struct RenderCounters {
+    tris: AtomicUsize,
+    chunks_culled: AtomicUsize,
+    chunks_total: AtomicUsize,
+    transform_ns: AtomicU64,
+    cull_ns: AtomicU64,
+    raster_ns: AtomicU64,
+    resolve_ns: AtomicU64,
+}
+
+/// Snapshot of renderer work: triangle/chunk counts plus the per-stage
+/// wall-time breakdown (transform / cull / raster / resolve) the Table A2
+/// benches report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RenderStats {
+    pub tris_rasterized: usize,
+    pub chunks_culled: usize,
+    pub chunks_total: usize,
+    pub transform_ns: u64,
+    pub cull_ns: u64,
+    pub raster_ns: u64,
+    pub resolve_ns: u64,
+}
+
+impl RenderStats {
+    /// Total wall time attributed to renderer stages (summed across
+    /// workers, so it exceeds elapsed time under parallelism).
+    pub fn stage_ns_total(&self) -> u64 {
+        self.transform_ns + self.cull_ns + self.raster_ns + self.resolve_ns
+    }
+}
+
+impl RenderCounters {
+    fn peek(&self) -> RenderStats {
+        RenderStats {
+            tris_rasterized: self.tris.load(Ordering::Relaxed),
+            chunks_culled: self.chunks_culled.load(Ordering::Relaxed),
+            chunks_total: self.chunks_total.load(Ordering::Relaxed),
+            transform_ns: self.transform_ns.load(Ordering::Relaxed),
+            cull_ns: self.cull_ns.load(Ordering::Relaxed),
+            raster_ns: self.raster_ns.load(Ordering::Relaxed),
+            resolve_ns: self.resolve_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain the counters (reset-on-read).
+    pub(crate) fn take(&self) -> RenderStats {
+        RenderStats {
+            tris_rasterized: self.tris.swap(0, Ordering::Relaxed),
+            chunks_culled: self.chunks_culled.swap(0, Ordering::Relaxed),
+            chunks_total: self.chunks_total.swap(0, Ordering::Relaxed),
+            transform_ns: self.transform_ns.swap(0, Ordering::Relaxed),
+            cull_ns: self.cull_ns.swap(0, Ordering::Relaxed),
+            raster_ns: self.raster_ns.swap(0, Ordering::Relaxed),
+            resolve_ns: self.resolve_ns.swap(0, Ordering::Relaxed),
+        }
+    }
+}
 
 /// Batch renderer with reusable per-environment scratch buffers.
 pub struct BatchRenderer {
     pub cfg: RenderConfig,
     scratch: ScratchSlots,
-    pub stats_tris: AtomicUsize,
-    pub stats_chunks_culled: AtomicUsize,
-    pub stats_chunks_total: AtomicUsize,
+    counters: Arc<RenderCounters>,
+    /// Previous-frame triangle count per env slot — the cost signal for
+    /// the LPT (heaviest-first) dispatch order.
+    prev_cost: Vec<AtomicUsize>,
 }
 
 impl BatchRenderer {
@@ -101,7 +179,6 @@ impl BatchRenderer {
                 UnsafeCell::new(EnvScratch {
                     tile: TileScratch::new(rr),
                     visible: Vec::new(),
-                    depth: vec![0.0; rr * rr],
                     rgb: if cfg.sensor == Sensor::Rgb {
                         vec![0.0; rr * rr * 3]
                     } else {
@@ -113,9 +190,8 @@ impl BatchRenderer {
         BatchRenderer {
             cfg,
             scratch: ScratchSlots(scratch),
-            stats_tris: AtomicUsize::new(0),
-            stats_chunks_culled: AtomicUsize::new(0),
-            stats_chunks_total: AtomicUsize::new(0),
+            counters: Arc::new(RenderCounters::default()),
+            prev_cost: (0..max_envs).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
 
@@ -126,135 +202,126 @@ impl BatchRenderer {
         assert!(obs.len() >= n * of, "obs buffer too small");
         assert!(n <= self.scratch.0.len(), "more envs than scratch slots");
         let obs_base = obs.as_mut_ptr() as usize;
+        let order = self.dispatch_order(n);
         match self.cfg.mode {
             PipelineMode::Fused => {
-                pool.parallel_for(n, 1, |i| {
-                    self.render_one(items, i, obs_base);
+                pool.parallel_for(n, 1, |k| {
+                    let i = order[k];
+                    self.cull_one(items, i);
+                    self.raster_one(items, i, obs_base);
                 });
             }
             PipelineMode::Pipelined => {
-                // Stage 1 (cull) feeds stage 2 (raster) through a queue so
-                // culling for env i+1 overlaps rasterization of env i.
-                let (tx, rx) = mpsc::channel::<usize>();
-                let rx = std::sync::Mutex::new(rx);
-                std::thread::scope(|s| {
-                    s.spawn(move || {
-                        for i in 0..n {
-                            // SAFETY: writes only env i's scratch slot.
-                            let sc = unsafe { &mut *self.scratch.0[i].get() };
-                            let cam = Camera::from_agent(items[i].pos, items[i].heading, 1.0);
-                            let cstats =
-                                cull_chunks(&items[i].scene, &cam.frustum, &mut sc.visible);
-                            self.stats_chunks_culled
-                                .fetch_add(cstats.chunks_culled, Ordering::Relaxed);
-                            self.stats_chunks_total
-                                .fetch_add(cstats.chunks_total, Ordering::Relaxed);
-                            if tx.send(i).is_err() {
-                                return;
-                            }
-                        }
-                    });
-                    let workers = pool.num_workers().max(1);
-                    for _ in 0..workers {
-                        s.spawn(|| loop {
-                            let i = {
-                                let rx = rx.lock().unwrap();
-                                match rx.recv() {
-                                    Ok(i) => i,
-                                    Err(_) => return,
-                                }
-                            };
-                            self.raster_one(items, i, obs_base, /*cull=*/ false);
-                        });
-                    }
-                });
+                // Cull (stage 1) overlaps raster (stage 2) on the shared
+                // persistent pool: tickets claim culls, a readiness prefix
+                // counter releases tiles to raster workers.
+                pool.staged_for(
+                    n,
+                    |t| self.cull_one(items, order[t]),
+                    |k| self.raster_one(items, order[k], obs_base),
+                );
             }
         }
     }
 
-    fn render_one(&self, items: &[RenderItem], i: usize, obs_base: usize) {
-        self.raster_one(items, i, obs_base, true);
+    /// LPT dispatch: heaviest environments (by previous-frame triangle
+    /// count) first. Stable sort keeps ties — and the whole first frame —
+    /// in env order. Output is order-invariant; only tail latency moves.
+    fn dispatch_order(&self, n: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(self.prev_cost[i].load(Ordering::Relaxed)));
+        order
     }
 
-    fn raster_one(&self, items: &[RenderItem], i: usize, obs_base: usize, cull: bool) {
+    fn cull_one(&self, items: &[RenderItem], i: usize) {
+        // SAFETY: env-indexed scratch slot; published to the raster stage
+        // via staged_for's readiness counter in pipelined mode.
+        let sc = unsafe { &mut *self.scratch.0[i].get() };
+        let item = &items[i];
+        let cam = Camera::from_agent(item.pos, item.heading, 1.0);
+        let t0 = Instant::now();
+        let cstats = cull_chunks(&item.scene, &cam.frustum, &mut sc.visible);
+        self.counters
+            .cull_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.counters
+            .chunks_culled
+            .fetch_add(cstats.chunks_culled, Ordering::Relaxed);
+        self.counters
+            .chunks_total
+            .fetch_add(cstats.chunks_total, Ordering::Relaxed);
+    }
+
+    fn raster_one(&self, items: &[RenderItem], i: usize, obs_base: usize) {
         // SAFETY: env-indexed scratch; obs tile slices are disjoint.
         let sc = unsafe { &mut *self.scratch.0[i].get() };
         let item = &items[i];
         let cam = Camera::from_agent(item.pos, item.heading, 1.0);
-        if cull {
-            let cstats = cull_chunks(&item.scene, &cam.frustum, &mut sc.visible);
-            self.stats_chunks_culled
-                .fetch_add(cstats.chunks_culled, Ordering::Relaxed);
-            self.stats_chunks_total
-                .fetch_add(cstats.chunks_total, Ordering::Relaxed);
-        }
         let rr = self.cfg.render_res();
         let rgb_slice = if self.cfg.sensor == Sensor::Rgb {
             Some(&mut sc.rgb[..])
         } else {
             None
         };
-        let stats = raster_tile(
+        let mut times = StageTimes::default();
+        let t0 = Instant::now();
+        let stats = raster_zbuf(
             &item.scene,
             &cam,
             &sc.visible,
             rr,
-            &mut sc.depth,
             rgb_slice,
             &mut sc.tile,
+            &mut times,
         );
-        self.stats_tris
+        let raster_total = t0.elapsed().as_nanos() as u64;
+        self.counters
+            .tris
             .fetch_add(stats.tris_rasterized, Ordering::Relaxed);
-        // write (downsampled) tile into the megaframe observation buffer
+        self.counters
+            .transform_ns
+            .fetch_add(times.transform_ns, Ordering::Relaxed);
+        self.counters
+            .raster_ns
+            .fetch_add(raster_total.saturating_sub(times.transform_ns), Ordering::Relaxed);
+        self.prev_cost[i].store(stats.tris_rasterized, Ordering::Relaxed);
+
+        // fused resolve: normalize + box-downsample straight into this
+        // env's tile of the megaframe observation buffer
         let of = self.cfg.obs_floats();
         let out =
             unsafe { std::slice::from_raw_parts_mut((obs_base as *mut f32).add(i * of), of) };
-        let res = self.cfg.res;
-        let s = self.cfg.scale.max(1);
-        let inv = 1.0 / (s * s) as f32;
+        let t1 = Instant::now();
         match self.cfg.sensor {
-            Sensor::Depth => {
-                for y in 0..res {
-                    for x in 0..res {
-                        let mut acc = 0.0;
-                        for dy in 0..s {
-                            for dx in 0..s {
-                                acc += sc.depth[(y * s + dy) * rr + (x * s + dx)];
-                            }
-                        }
-                        out[y * res + x] = acc * inv;
-                    }
-                }
-            }
-            Sensor::Rgb => {
-                for y in 0..res {
-                    for x in 0..res {
-                        let mut acc = [0.0f32; 3];
-                        for dy in 0..s {
-                            for dx in 0..s {
-                                let p = ((y * s + dy) * rr + (x * s + dx)) * 3;
-                                acc[0] += sc.rgb[p];
-                                acc[1] += sc.rgb[p + 1];
-                                acc[2] += sc.rgb[p + 2];
-                            }
-                        }
-                        let o = (y * res + x) * 3;
-                        out[o] = acc[0] * inv;
-                        out[o + 1] = acc[1] * inv;
-                        out[o + 2] = acc[2] * inv;
-                    }
-                }
-            }
+            Sensor::Depth => resolve_depth_into(sc.tile.zbuf(), rr, self.cfg.scale, out),
+            Sensor::Rgb => resolve_rgb_into(&sc.rgb, rr, self.cfg.scale, out),
+        }
+        self.counters
+            .resolve_ns
+            .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Aggregate statistics since construction (or the last
+    /// [`take_stats`](BatchRenderer::take_stats)): (tris, culled, total).
+    pub fn stats(&self) -> RasterStats {
+        let s = self.counters.peek();
+        RasterStats {
+            tris_rasterized: s.tris_rasterized,
+            chunks_culled: s.chunks_culled,
+            chunks_total: s.chunks_total,
         }
     }
 
-    /// Aggregate statistics (since construction); (tris, culled, total).
-    pub fn stats(&self) -> RasterStats {
-        RasterStats {
-            tris_rasterized: self.stats_tris.load(Ordering::Relaxed),
-            chunks_culled: self.stats_chunks_culled.load(Ordering::Relaxed),
-            chunks_total: self.stats_chunks_total.load(Ordering::Relaxed),
-        }
+    /// Per-batch statistics, reset on read — counts plus the per-stage
+    /// wall-time breakdown (transform / cull / raster / resolve).
+    pub fn take_stats(&self) -> RenderStats {
+        self.counters.take()
+    }
+
+    /// The shared counters (cloned by `EnvBatch` before the renderer moves
+    /// onto its driver thread).
+    pub(crate) fn counters(&self) -> Arc<RenderCounters> {
+        Arc::clone(&self.counters)
     }
 }
 
@@ -353,5 +420,49 @@ mod tests {
         let s = r.stats();
         assert!(s.tris_rasterized > 0);
         assert!(s.chunks_total >= s.chunks_culled);
+    }
+
+    #[test]
+    fn take_stats_resets_and_reports_stages() {
+        let its = items(4);
+        let pool = WorkerPool::new(2);
+        let cfg = RenderConfig::depth(16);
+        let r = BatchRenderer::new(cfg, 4);
+        let mut obs = vec![0.0f32; 4 * cfg.obs_floats()];
+        r.render_batch(&pool, &its, &mut obs);
+        let s1 = r.take_stats();
+        assert!(s1.tris_rasterized > 0);
+        assert!(s1.stage_ns_total() > 0);
+        // reset-on-read: a second take with no work in between reads zero
+        let s2 = r.take_stats();
+        assert_eq!(s2.tris_rasterized, 0);
+        assert_eq!(s2.stage_ns_total(), 0);
+        // per-batch deltas line up across repeated identical batches
+        r.render_batch(&pool, &its, &mut obs);
+        let s3 = r.take_stats();
+        assert_eq!(s3.tris_rasterized, s1.tris_rasterized);
+        assert_eq!(s3.chunks_total, s1.chunks_total);
+    }
+
+    #[test]
+    fn lpt_order_is_heaviest_first_and_stable() {
+        let its = items(4);
+        let pool = WorkerPool::new(2);
+        let cfg = RenderConfig::depth(16);
+        let r = BatchRenderer::new(cfg, 4);
+        // frame 0: no cost signal yet -> identity order
+        assert_eq!(r.dispatch_order(4), vec![0, 1, 2, 3]);
+        let mut obs = vec![0.0f32; 4 * cfg.obs_floats()];
+        r.render_batch(&pool, &its, &mut obs);
+        // frame 1: order sorts by recorded cost, heaviest first
+        let order = r.dispatch_order(4);
+        let cost =
+            |i: usize| r.prev_cost[i].load(Ordering::Relaxed);
+        for w in order.windows(2) {
+            assert!(
+                cost(w[0]) > cost(w[1]) || (cost(w[0]) == cost(w[1]) && w[0] < w[1]),
+                "order {order:?} not heaviest-first stable"
+            );
+        }
     }
 }

@@ -7,7 +7,7 @@ pub mod camera;
 pub mod raster;
 pub mod stream;
 
-pub use batch::{BatchRenderer, PipelineMode, RenderConfig, RenderItem};
+pub use batch::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, RenderStats};
 pub use camera::Camera;
 pub use raster::{RasterStats, Sensor, DEPTH_MAX_M};
 pub use stream::{AssetStreamer, SceneRotation, MAX_N_TO_K};

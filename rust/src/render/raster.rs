@@ -1,8 +1,21 @@
 //! Software triangle rasterizer — the CPU stand-in for the paper's Vulkan
-//! batch renderer (DESIGN.md §1). Z-buffered edge-function rasterization
-//! with perspective-correct UV interpolation, near-plane clipping, frustum
-//! chunk culling (paper §3.2), point-sampled procedural textures, and both
-//! sensor modalities (Depth in meters / shaded RGB).
+//! batch renderer (DESIGN.md §1, §0.7). Z-buffered edge-function
+//! rasterization with perspective-correct UV interpolation, near-plane
+//! clipping, frustum chunk culling (paper §3.2), point-sampled procedural
+//! textures, and both sensor modalities (Depth in meters / shaded RGB).
+//!
+//! Hot-path structure (DESIGN.md §0.7):
+//! - **Amortized transforms**: each chunk's vertex range is transformed to
+//!   clip space once per (env, frame) into SoA scratch, instead of ~6× per
+//!   shared vertex through a per-triangle `Mat4::mul_vec4`.
+//! - **Incremental rasterization**: per-triangle setup reduces the three
+//!   edge functions to affine row-start values plus per-pixel increments;
+//!   the inner loop is add + compare, no cross products.
+//! - **Fused resolve**: depth normalization and the supersampling
+//!   box-downsample run as one pass straight from the z-buffer into the
+//!   megaframe tile (`resolve_depth_into` / `resolve_rgb_into`).
+
+use std::time::Instant;
 
 use crate::geom::vec::{v2, Vec3};
 use crate::geom::{Frustum, Vec2};
@@ -39,29 +52,58 @@ pub struct RasterStats {
     pub tris_rasterized: usize,
 }
 
-/// Reusable per-tile scratch (z-buffer) — allocation-free hot path.
+/// Wall time a raster call spent in sub-stages that only the callee can
+/// separate (currently the vertex-transform stage; cull/raster/resolve are
+/// timed at the call sites in `BatchRenderer`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub transform_ns: u64,
+}
+
+/// Reusable per-tile scratch: z-buffer plus the SoA clip-space transform
+/// cache — allocation-free hot path after warm-up.
 pub struct TileScratch {
     zbuf: Vec<f32>,
+    clip_x: Vec<f32>,
+    clip_y: Vec<f32>,
+    clip_w: Vec<f32>,
 }
 
 impl TileScratch {
     pub fn new(res: usize) -> TileScratch {
         TileScratch {
             zbuf: vec![f32::INFINITY; res * res],
+            clip_x: Vec::new(),
+            clip_y: Vec::new(),
+            clip_w: Vec::new(),
         }
+    }
+
+    /// The raw z-buffer (view-space meters) filled by [`raster_zbuf`].
+    pub fn zbuf(&self) -> &[f32] {
+        &self.zbuf
     }
 }
 
 #[derive(Clone, Copy)]
 struct ClipVert {
-    /// clip-space position (x, y, z, w) with w = view-space distance
+    /// clip-space position (x, y) with w = view-space distance. The clip z
+    /// is never consumed downstream (depth resolves from w), so it is not
+    /// transformed or stored.
     x: f32,
     y: f32,
-    z: f32,
     w: f32,
     u: f32,
     v: f32,
 }
+
+const CLIP_ZERO: ClipVert = ClipVert {
+    x: 0.0,
+    y: 0.0,
+    w: 0.0,
+    u: 0.0,
+    v: 0.0,
+};
 
 /// Cull a scene's chunks against a frustum; visible chunk indices into
 /// `out`. This is the compute-shader stage of the paper's pipelined culling.
@@ -81,22 +123,22 @@ pub fn cull_chunks(scene: &SceneAsset, frustum: &Frustum, out: &mut Vec<u32>) ->
     stats
 }
 
-/// Rasterize the visible chunks of `scene` into one `res`×`res` tile.
-///
-/// `depth_out`: `res*res` floats (normalized [0,1] meters/10).
-/// `rgb_out`: `Some(res*res*3)` floats in [0,1] for RGB sensors.
-/// Returns triangle statistics.
-#[allow(clippy::too_many_arguments)]
-pub fn raster_tile(
+/// Rasterize the visible chunks of `scene` into the scratch z-buffer
+/// (`res`×`res`, view-space meters) and, for RGB sensors, `rgb_out`
+/// (`res*res*3` floats in [0,1]). Depth is *not* resolved here — callers
+/// run [`resolve_depth_into`], which fuses normalization with the
+/// box-downsample. Returns triangle statistics; `times.transform_ns`
+/// accumulates the vertex-transform stage (two clock reads per visible
+/// chunk, ≲1% of a chunk's transform+raster work at bench complexities).
+pub fn raster_zbuf(
     scene: &SceneAsset,
     cam: &Camera,
     visible: &[u32],
     res: usize,
-    depth_out: &mut [f32],
     mut rgb_out: Option<&mut [f32]>,
     scratch: &mut TileScratch,
+    times: &mut StageTimes,
 ) -> RasterStats {
-    debug_assert_eq!(depth_out.len(), res * res);
     let zbuf = &mut scratch.zbuf[..res * res];
     zbuf.fill(f32::INFINITY);
     if let Some(rgb) = rgb_out.as_deref_mut() {
@@ -104,7 +146,7 @@ pub fn raster_tile(
     }
     let mut stats = RasterStats::default();
 
-    let vp = &cam.view_proj;
+    let m = &cam.view_proj.m;
     let mesh = &scene.mesh;
     let light = Vec3 {
         x: 0.35,
@@ -113,38 +155,51 @@ pub fn raster_tile(
     }
     .normalized();
 
-    let mut poly = [ClipVert {
-        x: 0.0,
-        y: 0.0,
-        z: 0.0,
-        w: 0.0,
-        u: 0.0,
-        v: 0.0,
-    }; 4];
+    let mut poly = [CLIP_ZERO; 4];
 
     for &ci in visible {
         let chunk = &mesh.chunks[ci as usize];
+
+        // Amortized transform: every vertex in the chunk's index range is
+        // pushed through the view-projection once into SoA scratch. Shared
+        // vertices (~6 triangle references each on procgen grids) no
+        // longer pay a Mat4 multiply per reference.
+        let (v0, v_end) = mesh.chunk_vert_range(ci as usize);
+        let count = v_end - v0;
+        let t_tx = Instant::now();
+        if scratch.clip_x.len() < count {
+            scratch.clip_x.resize(count, 0.0);
+            scratch.clip_y.resize(count, 0.0);
+            scratch.clip_w.resize(count, 0.0);
+        }
+        for (k, p) in mesh.positions[v0..v_end].iter().enumerate() {
+            // rows 0, 1, 3 of column-major view_proj * (p, 1); the z row is
+            // dead weight here (see ClipVert)
+            scratch.clip_x[k] = m[0][0] * p.x + m[1][0] * p.y + m[2][0] * p.z + m[3][0];
+            scratch.clip_y[k] = m[0][1] * p.x + m[1][1] * p.y + m[2][1] * p.z + m[3][1];
+            scratch.clip_w[k] = m[0][3] * p.x + m[1][3] * p.y + m[2][3] * p.z + m[3][3];
+        }
+        times.transform_ns += t_tx.elapsed().as_nanos() as u64;
+
         let t0 = chunk.tri_start as usize;
         let t1 = t0 + chunk.tri_count as usize;
         for t in t0..t1 {
             let ia = mesh.indices[t * 3] as usize;
             let ib = mesh.indices[t * 3 + 1] as usize;
             let ic = mesh.indices[t * 3 + 2] as usize;
-            let (pa, pb, pc) = (mesh.positions[ia], mesh.positions[ib], mesh.positions[ic]);
-            let (ua, ub, uc) = (mesh.uvs[ia], mesh.uvs[ib], mesh.uvs[ic]);
 
-            let mk = |p: Vec3, uv: Vec2| {
-                let c = vp.mul_vec4(p.extend(1.0));
+            let mk = |vi: usize| {
+                let k = vi - v0;
+                let uv = mesh.uvs[vi];
                 ClipVert {
-                    x: c.x,
-                    y: c.y,
-                    z: c.z,
-                    w: c.w,
+                    x: scratch.clip_x[k],
+                    y: scratch.clip_y[k],
+                    w: scratch.clip_w[k],
                     u: uv.x,
                     v: uv.y,
                 }
             };
-            let tri = [mk(pa, ua), mk(pb, ub), mk(pc, uc)];
+            let tri = [mk(ia), mk(ib), mk(ic)];
 
             // near-plane clip (w >= NEAR): Sutherland-Hodgman, <= 4 verts out
             let n = clip_near(&tri, &mut poly);
@@ -155,6 +210,7 @@ pub fn raster_tile(
             // shading inputs shared by the fan
             let shade = if rgb_out.is_some() {
                 let mat = &scene.materials[mesh.tri_material[t] as usize];
+                let (pa, pb, pc) = (mesh.positions[ia], mesh.positions[ib], mesh.positions[ic]);
                 let normal = (pb - pa).cross(pc - pa).normalized();
                 let ndl = normal.dot(light).abs(); // double-sided
                 let lit = 0.45 + 0.55 * ndl;
@@ -171,7 +227,6 @@ pub fn raster_tile(
                     &poly[k + 1],
                     res,
                     zbuf,
-                    depth_out,
                     rgb_out.as_deref_mut(),
                     scene,
                     shade,
@@ -179,15 +234,84 @@ pub fn raster_tile(
             }
         }
     }
+    stats
+}
 
-    // resolve: meters -> normalized depth; untouched pixels read as max range
-    for i in 0..res * res {
-        depth_out[i] = if zbuf[i].is_finite() {
-            (zbuf[i] / DEPTH_MAX_M).clamp(0.0, 1.0)
-        } else {
-            1.0
-        };
+/// Fused resolve for the Depth sensor: normalize the z-buffer (view-space
+/// meters → [0, 1], untouched pixels read as max range) and box-downsample
+/// `scale`× into `out` (side `rr / scale`) in one pass.
+pub fn resolve_depth_into(zbuf: &[f32], rr: usize, scale: usize, out: &mut [f32]) {
+    let s = scale.max(1);
+    let res = rr / s;
+    debug_assert!(out.len() >= res * res);
+    let inv = 1.0 / (s * s) as f32;
+    for y in 0..res {
+        for x in 0..res {
+            let mut acc = 0.0;
+            for dy in 0..s {
+                let row = (y * s + dy) * rr + x * s;
+                for dx in 0..s {
+                    let z = zbuf[row + dx];
+                    acc += if z.is_finite() {
+                        (z / DEPTH_MAX_M).clamp(0.0, 1.0)
+                    } else {
+                        1.0
+                    };
+                }
+            }
+            out[y * res + x] = acc * inv;
+        }
     }
+}
+
+/// Fused resolve for the RGB sensor: box-downsample the full-resolution
+/// shaded buffer `scale`× into `out` (side `rr / scale`, 3 channels).
+pub fn resolve_rgb_into(rgb: &[f32], rr: usize, scale: usize, out: &mut [f32]) {
+    let s = scale.max(1);
+    let res = rr / s;
+    debug_assert!(out.len() >= res * res * 3);
+    let inv = 1.0 / (s * s) as f32;
+    for y in 0..res {
+        for x in 0..res {
+            let mut acc = [0.0f32; 3];
+            for dy in 0..s {
+                let row = ((y * s + dy) * rr + x * s) * 3;
+                for dx in 0..s {
+                    let p = row + dx * 3;
+                    acc[0] += rgb[p];
+                    acc[1] += rgb[p + 1];
+                    acc[2] += rgb[p + 2];
+                }
+            }
+            let o = (y * res + x) * 3;
+            out[o] = acc[0] * inv;
+            out[o + 1] = acc[1] * inv;
+            out[o + 2] = acc[2] * inv;
+        }
+    }
+}
+
+/// Rasterize the visible chunks of `scene` into one `res`×`res` tile with
+/// the depth resolved in place (no downsampling) — the convenience single-
+/// tile entry point; the batch path uses [`raster_zbuf`] + the fused
+/// resolves directly.
+///
+/// `depth_out`: `res*res` floats (normalized [0,1] meters/10).
+/// `rgb_out`: `Some(res*res*3)` floats in [0,1] for RGB sensors.
+/// Returns triangle statistics.
+pub fn raster_tile(
+    scene: &SceneAsset,
+    cam: &Camera,
+    visible: &[u32],
+    res: usize,
+    depth_out: &mut [f32],
+    rgb_out: Option<&mut [f32]>,
+    scratch: &mut TileScratch,
+) -> RasterStats {
+    debug_assert_eq!(depth_out.len(), res * res);
+    let mut times = StageTimes::default();
+    let stats = raster_zbuf(scene, cam, visible, res, rgb_out, scratch, &mut times);
+    resolve_depth_into(&scratch.zbuf[..res * res], res, 1, depth_out);
     stats
 }
 
@@ -210,7 +334,6 @@ fn clip_near(tri: &[ClipVert; 3], out: &mut [ClipVert; 4]) -> usize {
             out[n] = ClipVert {
                 x: a.x + (b.x - a.x) * t,
                 y: a.y + (b.y - a.y) * t,
-                z: a.z + (b.z - a.z) * t,
                 w: NEAR,
                 u: a.u + (b.u - a.u) * t,
                 v: a.v + (b.v - a.v) * t,
@@ -224,6 +347,13 @@ fn clip_near(tri: &[ClipVert; 3], out: &mut [ClipVert; 4]) -> usize {
     n
 }
 
+/// Affine edge-function coefficients for directed edge (p, q):
+/// `E(v) = C + v.x * A + v.y * B` equals the 2D cross `(p - v) × (q - v)`.
+#[inline]
+fn edge_coeffs(p: Vec2, q: Vec2) -> (f32, f32, f32) {
+    (p.y - q.y, q.x - p.x, p.x * q.y - p.y * q.x)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn fill_triangle(
     a: &ClipVert,
@@ -231,7 +361,6 @@ fn fill_triangle(
     c: &ClipVert,
     res: usize,
     zbuf: &mut [f32],
-    _depth_out: &mut [f32],
     mut rgb_out: Option<&mut [f32]>,
     scene: &SceneAsset,
     shade: Option<(&crate::scene::Material, f32)>,
@@ -260,19 +389,30 @@ fn fill_triangle(
         return;
     }
 
+    // Incremental setup: the barycentric weights are affine in screen
+    // space, so each row starts from a closed-form edge value (no y-drift)
+    // and each pixel advances by a constant — the three per-pixel `cross()`
+    // calls this replaced are now one add + compare per edge.
+    let (a0, b0, c0) = edge_coeffs(sb, sc); // -> w0
+    let (a1, b1, c1) = edge_coeffs(sc, sa); // -> w1
+
     // perspective-correct attributes: interpolate (1/w, u/w, v/w)
     let (iwa, iwb, iwc) = (1.0 / a.w, 1.0 / b.w, 1.0 / c.w);
     let (uwa, uwb, uwc) = (a.u * iwa, b.u * iwb, c.u * iwc);
     let (vwa, vwb, vwc) = (a.v * iwa, b.v * iwb, c.v * iwc);
 
+    let x0 = min_x as f32 + 0.5;
     for py in min_y..max_y {
         let row = py * res;
         let pyf = py as f32 + 0.5;
+        let mut e0 = c0 + a0 * x0 + b0 * pyf;
+        let mut e1 = c1 + a1 * x0 + b1 * pyf;
         for px in min_x..max_x {
-            let p = v2(px as f32 + 0.5, pyf);
-            let w0 = (sb - p).cross(sc - p) * inv_area;
-            let w1 = (sc - p).cross(sa - p) * inv_area;
+            let w0 = e0 * inv_area;
+            let w1 = e1 * inv_area;
             let w2 = 1.0 - w0 - w1;
+            e0 += a0;
+            e1 += a1;
             if w0 < 0.0 || w1 < 0.0 || w2 < 0.0 {
                 continue;
             }
@@ -453,5 +593,58 @@ mod tests {
         let center = depth[16 * 32 + 16] * DEPTH_MAX_M;
         // the near box face is at x=3.0, agent at x=1.0 -> 2.0m
         assert!((center - 2.0).abs() < 0.3, "center depth {center}m");
+    }
+
+    #[test]
+    fn raster_zbuf_fills_view_space_meters() {
+        let s = scene();
+        let mut rng = Rng::new(8);
+        let pos = s.navmesh.random_point(&mut rng).unwrap();
+        let cam = Camera::from_agent(pos, 0.2, 1.0);
+        let mut vis = Vec::new();
+        cull_chunks(&s, &cam.frustum, &mut vis);
+        let res = 32;
+        let mut scratch = TileScratch::new(res);
+        let mut times = StageTimes::default();
+        let stats = raster_zbuf(&s, &cam, &vis, res, None, &mut scratch, &mut times);
+        assert!(stats.tris_rasterized > 0);
+        // z-buffer holds meters: finite hits must be below the far plane
+        assert!(scratch
+            .zbuf()
+            .iter()
+            .filter(|z| z.is_finite())
+            .all(|&z| z > 0.0 && z < super::super::camera::FAR));
+    }
+
+    #[test]
+    fn fused_resolve_matches_two_pass_downsample() {
+        // resolve_depth_into at scale=2 must equal normalize-then-average
+        let rr = 8;
+        let mut zbuf = vec![f32::INFINITY; rr * rr];
+        for (i, z) in zbuf.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *z = (i % 13) as f32;
+            }
+        }
+        let norm: Vec<f32> = zbuf
+            .iter()
+            .map(|&z| if z.is_finite() { (z / DEPTH_MAX_M).clamp(0.0, 1.0) } else { 1.0 })
+            .collect();
+        let res = rr / 2;
+        let mut two_pass = vec![0.0f32; res * res];
+        for y in 0..res {
+            for x in 0..res {
+                let mut acc = 0.0;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        acc += norm[(y * 2 + dy) * rr + (x * 2 + dx)];
+                    }
+                }
+                two_pass[y * res + x] = acc * 0.25;
+            }
+        }
+        let mut fused = vec![0.0f32; res * res];
+        resolve_depth_into(&zbuf, rr, 2, &mut fused);
+        assert_eq!(fused, two_pass);
     }
 }

@@ -162,6 +162,9 @@ impl SceneAsset {
         let bits = r.take(nbits)?;
         let mut navmesh = GridNav::new(origin, cell, w, h);
         navmesh.walkable = unpack_bits(bits, w * h);
+        // derived data: chunk vertex ranges (the renderer's transform-cache
+        // granule) are not serialized
+        mesh.rebuild_chunk_vert_ranges();
         let mut textures = Vec::new();
         if with_textures {
             let nt = r.u32()? as usize;

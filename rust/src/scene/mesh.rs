@@ -61,6 +61,10 @@ pub struct Mesh {
     pub indices: Vec<u32>,      // 3 per triangle
     pub tri_material: Vec<u32>, // 1 per triangle
     pub chunks: Vec<Chunk>,
+    /// Per-chunk vertex index range `[start, end)` — the renderer's
+    /// transform-cache granule. Maintained by `close_chunk`, rebuilt after
+    /// deserialization; derived data, never serialized.
+    chunk_verts: Vec<(u32, u32)>,
 }
 
 impl Mesh {
@@ -87,9 +91,13 @@ impl Mesh {
             return;
         }
         let mut aabb = Aabb::EMPTY;
+        let (mut v_lo, mut v_hi) = (u32::MAX, 0u32);
         for t in tri_start..tri_start + tri_count {
             for k in 0..3 {
-                aabb.grow(self.positions[self.indices[t * 3 + k] as usize]);
+                let vi = self.indices[t * 3 + k];
+                v_lo = v_lo.min(vi);
+                v_hi = v_hi.max(vi);
+                aabb.grow(self.positions[vi as usize]);
             }
         }
         self.chunks.push(Chunk {
@@ -97,6 +105,47 @@ impl Mesh {
             tri_start: tri_start as u32,
             tri_count: tri_count as u32,
         });
+        self.chunk_verts.push((v_lo, v_hi + 1));
+    }
+
+    /// Vertex index range `[start, end)` referenced by chunk `ci`. Uses the
+    /// range recorded at build time; falls back to an index scan for meshes
+    /// whose chunks were assembled by hand.
+    pub fn chunk_vert_range(&self, ci: usize) -> (usize, usize) {
+        if let Some(&(s, e)) = self.chunk_verts.get(ci) {
+            return (s as usize, e as usize);
+        }
+        self.scan_vert_range(&self.chunks[ci])
+    }
+
+    fn scan_vert_range(&self, c: &Chunk) -> (usize, usize) {
+        let (mut lo, mut hi) = (u32::MAX, 0u32);
+        for t in c.tri_start..c.tri_start + c.tri_count {
+            for k in 0..3 {
+                let vi = self.indices[t as usize * 3 + k];
+                lo = lo.min(vi);
+                hi = hi.max(vi);
+            }
+        }
+        if lo == u32::MAX {
+            (0, 0)
+        } else {
+            (lo as usize, hi as usize + 1)
+        }
+    }
+
+    /// Recompute every chunk's vertex range (after deserialization, where
+    /// chunks arrive without their build-time ranges).
+    pub fn rebuild_chunk_vert_ranges(&mut self) {
+        let ranges: Vec<(u32, u32)> = self
+            .chunks
+            .iter()
+            .map(|c| {
+                let (s, e) = self.scan_vert_range(c);
+                (s as u32, e as u32)
+            })
+            .collect();
+        self.chunk_verts = ranges;
     }
 
     fn push_vert(&mut self, p: Vec3, uv: Vec2) -> u32 {
@@ -271,6 +320,37 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn chunk_vert_ranges_cover_indices() {
+        let mut m = Mesh::default();
+        m.add_box(Vec3::ZERO, v3(1.0, 1.0, 1.0), 0, 2);
+        m.add_cylinder(v3(3.0, 0.0, 0.0), 0.3, 1.0, 6, 1);
+        assert_eq!(m.chunk_verts.len(), m.chunks.len());
+        for (ci, c) in m.chunks.iter().enumerate() {
+            let (lo, hi) = m.chunk_vert_range(ci);
+            assert!(lo < hi);
+            for t in c.tri_start..c.tri_start + c.tri_count {
+                for k in 0..3 {
+                    let vi = m.indices[t as usize * 3 + k] as usize;
+                    assert!((lo..hi).contains(&vi), "chunk {ci} vert {vi} outside [{lo},{hi})");
+                }
+            }
+        }
+        // rebuild (the deserialization path) must agree with build-time ranges
+        let built = m.chunk_verts.clone();
+        m.rebuild_chunk_vert_ranges();
+        assert_eq!(m.chunk_verts, built);
+    }
+
+    #[test]
+    fn chunk_vert_range_fallback_scans() {
+        let mut m = Mesh::default();
+        m.add_box(Vec3::ZERO, v3(1.0, 1.0, 1.0), 0, 1);
+        let built = m.chunk_vert_range(0);
+        m.chunk_verts.clear(); // hand-assembled mesh: no recorded ranges
+        assert_eq!(m.chunk_vert_range(0), built);
     }
 
     #[test]

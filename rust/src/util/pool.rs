@@ -142,6 +142,49 @@ impl WorkerPool {
         let mut slot = self.shared.slot.lock().unwrap();
         slot.1 = None;
     }
+
+    /// Two-stage pipelined loop on the persistent workers (paper §3.2's
+    /// overlapped cull→raster, generalized): `stage1` runs exactly once per
+    /// index — tickets are claimed from an atomic cursor and *published* in
+    /// index order through a lock-free readiness counter — and `stage2(k)`
+    /// runs once `stage1(0..=k)` have all been published. A worker whose
+    /// stage-2 item is not ready yet helps drain the stage-1 ticket queue
+    /// instead of blocking, so the two stages overlap with no extra
+    /// threads, channels, or locks. Blocks until every `stage2` returned;
+    /// the caller thread participates, so 0 workers still completes.
+    pub fn staged_for<F1, F2>(&self, n: usize, stage1: F1, stage2: F2)
+    where
+        F1: Fn(usize) + Sync,
+        F2: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let cursor = AtomicUsize::new(0); // next stage-1 ticket
+        let ready = AtomicUsize::new(0); // published stage-1 prefix length
+        self.parallel_for(n, 1, |k| {
+            while ready.load(Ordering::Acquire) <= k {
+                // once every ticket is claimed, wait without hammering the
+                // cursor cache line with RMWs (the cullers still need it)
+                if cursor.load(Ordering::Relaxed) >= n {
+                    std::hint::spin_loop();
+                    continue;
+                }
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t < n {
+                    stage1(t);
+                    // publish in ticket order so `ready` stays a prefix
+                    while ready.load(Ordering::Acquire) != t {
+                        std::hint::spin_loop();
+                    }
+                    ready.store(t + 1, Ordering::Release);
+                } else {
+                    std::hint::spin_loop();
+                }
+            }
+            stage2(k);
+        });
+    }
 }
 
 impl Drop for WorkerPool {
@@ -237,6 +280,69 @@ mod tests {
     fn empty_batch_is_noop() {
         let pool = WorkerPool::new(2);
         pool.parallel_for(0, 8, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn staged_for_runs_each_stage_once_in_order() {
+        use std::sync::atomic::AtomicBool;
+        let pool = WorkerPool::new(4);
+        let n = 500;
+        let s1: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let s1_count: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let s2_count: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.staged_for(
+            n,
+            |t| {
+                s1_count[t].fetch_add(1, Ordering::Relaxed);
+                s1[t].store(true, Ordering::Release);
+            },
+            |k| {
+                // contract: stage1 of every index <= k has been published
+                for flag in &s1[..=k] {
+                    assert!(flag.load(Ordering::Acquire), "stage2({k}) before stage1");
+                }
+                s2_count[k].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        for i in 0..n {
+            assert_eq!(s1_count[i].load(Ordering::Relaxed), 1, "stage1 {i}");
+            assert_eq!(s2_count[i].load(Ordering::Relaxed), 1, "stage2 {i}");
+        }
+    }
+
+    #[test]
+    fn staged_for_zero_workers_and_empty() {
+        let pool = WorkerPool::new(0);
+        pool.staged_for(0, |_| panic!("stage1"), |_| panic!("stage2"));
+        let sum = AtomicU64::new(0);
+        pool.staged_for(
+            64,
+            |t| {
+                sum.fetch_add(t as u64, Ordering::Relaxed);
+            },
+            |k| {
+                sum.fetch_add(k as u64 * 1000, Ordering::Relaxed);
+            },
+        );
+        let base = (0..64u64).sum::<u64>();
+        assert_eq!(sum.load(Ordering::Relaxed), base + base * 1000);
+    }
+
+    #[test]
+    fn staged_for_imbalanced_stage2_overlaps() {
+        // stage1 is cheap; a slow stage-2 item must not serialize the rest
+        let pool = WorkerPool::new(4);
+        let start = std::time::Instant::now();
+        pool.staged_for(
+            32,
+            |_| {},
+            |k| {
+                if k == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                }
+            },
+        );
+        assert!(start.elapsed().as_millis() < 80, "took {:?}", start.elapsed());
     }
 
     #[test]

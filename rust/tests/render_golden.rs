@@ -1,0 +1,188 @@
+//! Raster-refactor guard rails (ISSUE 4): heterogeneous batches must be
+//! bitwise-identical across pipeline modes and dispatch orders, repeated
+//! megaframes must be deterministic, and per-sensor golden-image checksums
+//! pin the raster output against silent drift.
+//!
+//! The golden file (`tests/goldens/render_golden.json`) bootstraps on
+//! first run: when missing it is written from the current output and the
+//! test passes; once committed, any change to the rendered bits fails.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bps::geom::vec::v2;
+use bps::render::{BatchRenderer, PipelineMode, RenderConfig, RenderItem, Sensor};
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::util::json::{obj, s, Json};
+use bps::util::pool::WorkerPool;
+use bps::util::rng::Rng;
+
+/// FNV-1a over the f32 bit patterns — stable, order-sensitive.
+fn checksum(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in data {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// One heavy env + seven light ones: the straggler shape that cost-aware
+/// (LPT) dispatch targets.
+fn hetero_items(frame: u32) -> Vec<RenderItem> {
+    let heavy: Arc<SceneAsset> = Arc::new(generate(
+        "golden_heavy",
+        9,
+        Complexity {
+            extent: 8.0,
+            clutter_per_room: 4,
+            detail: 8,
+            ..Complexity::test()
+        },
+    ));
+    let light = Arc::new(generate("golden_light", 11, Complexity::test()));
+    let mut rng = Rng::new(13);
+    (0..8)
+        .map(|i| {
+            let scene = if i == 0 { &heavy } else { &light };
+            RenderItem {
+                scene: Arc::clone(scene),
+                pos: scene.navmesh.random_point(&mut rng).unwrap(),
+                heading: rng.range_f32(0.0, std::f32::consts::TAU) + frame as f32 * 0.37,
+            }
+        })
+        .collect()
+}
+
+fn render(renderer: &BatchRenderer, pool: &WorkerPool, items: &[RenderItem]) -> Vec<f32> {
+    let mut obs = vec![0.0f32; items.len() * renderer.cfg.obs_floats()];
+    renderer.render_batch(pool, items, &mut obs);
+    obs
+}
+
+#[test]
+fn hetero_batch_bitwise_across_modes_and_frames() {
+    let pool = WorkerPool::new(3);
+    let mut cfg = RenderConfig::depth(32);
+    cfg.mode = PipelineMode::Fused;
+    let fused = BatchRenderer::new(cfg, 8);
+    cfg.mode = PipelineMode::Pipelined;
+    let pipelined = BatchRenderer::new(cfg, 8);
+    // frame 0 runs in env order; later frames run LPT (heavy env first in
+    // both renderers) — every frame must still match bitwise
+    for frame in 0..3 {
+        let items = hetero_items(frame);
+        let of = render(&fused, &pool, &items);
+        let op = render(&pipelined, &pool, &items);
+        assert_eq!(of, op, "fused vs pipelined diverged at frame {frame}");
+    }
+}
+
+#[test]
+fn dispatch_order_does_not_change_output() {
+    let pool = WorkerPool::new(3);
+    let cfg = RenderConfig::depth(24); // Pipelined default
+    let frame_a = hetero_items(0);
+    let frame_b = hetero_items(5);
+    // renderer 1 sees frame_b cold (identity dispatch order)
+    let r1 = BatchRenderer::new(cfg, 8);
+    let cold = render(&r1, &pool, &frame_b);
+    // renderer 2 renders frame_a first, so its LPT order for frame_b is
+    // driven by recorded costs — a different dispatch order
+    let r2 = BatchRenderer::new(cfg, 8);
+    let _ = render(&r2, &pool, &frame_a);
+    let warm = render(&r2, &pool, &frame_b);
+    assert_eq!(cold, warm, "dispatch order leaked into the image");
+}
+
+#[test]
+fn repeated_megaframes_deterministic() {
+    let pool = WorkerPool::new(3);
+    let cfg = RenderConfig::rgb(24);
+    let items = hetero_items(2);
+    let r1 = BatchRenderer::new(cfg, 8);
+    let r2 = BatchRenderer::new(cfg, 8);
+    for round in 0..3 {
+        let a = render(&r1, &pool, &items);
+        let b = render(&r2, &pool, &items);
+        assert_eq!(a, b, "round {round} not run-to-run deterministic");
+        assert_eq!(checksum(&a), checksum(&b));
+    }
+}
+
+#[test]
+fn golden_image_checksums_per_sensor() {
+    let pool = WorkerPool::new(2);
+    let scene = Arc::new(generate("golden", 7, Complexity::test()));
+    // fixed literal poses: decoupled from RNG/navmesh changes
+    let poses = [
+        (v2(3.0, 3.0), 0.0f32),
+        (v2(1.5, 2.0), 1.3),
+        (v2(4.2, 4.5), 2.7),
+        (v2(2.5, 4.0), 4.2),
+    ];
+    let items: Vec<RenderItem> = poses
+        .iter()
+        .map(|&(pos, heading)| RenderItem {
+            scene: Arc::clone(&scene),
+            pos,
+            heading,
+        })
+        .collect();
+    let mut hashes = Vec::new();
+    for (sensor, name) in [(Sensor::Depth, "depth"), (Sensor::Rgb, "rgb")] {
+        let cfg = RenderConfig {
+            res: 32,
+            sensor,
+            scale: 1,
+            mode: PipelineMode::Fused,
+        };
+        let renderer = BatchRenderer::new(cfg, items.len());
+        let obs = render(&renderer, &pool, &items);
+        assert!(obs.iter().all(|v| v.is_finite()));
+        // in-process determinism regardless of the golden file
+        let again = render(&renderer, &pool, &items);
+        assert_eq!(obs, again, "{name} render not deterministic");
+        hashes.push((name, format!("{:016x}", checksum(&obs))));
+    }
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/goldens/render_golden.json");
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let golden = Json::parse(&text).expect("golden file parses");
+            for (name, hash) in &hashes {
+                let want = golden
+                    .req(name)
+                    .and_then(|v| v.as_str().map(str::to_string))
+                    .unwrap_or_else(|e| panic!("golden key {name}: {e}"));
+                assert_eq!(
+                    *hash, want,
+                    "{name} image checksum drifted from the pinned golden \
+                     ({path:?}); if the raster change is intentional, delete \
+                     the file and re-run to re-bless"
+                );
+            }
+        }
+        // only a *missing* file may bootstrap; any other read failure (perms,
+        // truncation, …) must not silently re-bless
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            assert!(
+                std::env::var("BPS_GOLDEN_STRICT").map(|v| v != "1").unwrap_or(true),
+                "golden file {path:?} missing and BPS_GOLDEN_STRICT=1 — \
+                 generate and commit it (run this test once without strict mode)"
+            );
+            std::fs::create_dir_all(path.parent().unwrap()).expect("goldens dir");
+            let record = obj(hashes.iter().map(|(n, h)| (*n, s(h))).collect());
+            std::fs::write(&path, record.to_string() + "\n").expect("write golden");
+            eprintln!(
+                "WARNING: bootstrapped golden checksums at {path:?} — the guard \
+                 is inert until this file is committed (set BPS_GOLDEN_STRICT=1 \
+                 to fail instead)"
+            );
+        }
+        Err(e) => panic!("golden file {path:?} unreadable: {e}"),
+    }
+}
