@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in three acts.
+//! Quickstart: the smallest end-to-end BPS run, in five acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -18,7 +18,14 @@
 //! `Curriculum` advances the spec's difficulty stages while a scripted
 //! GPS+compass policy drives the batch.
 //!
-//! Act 4 needs the AOT artifacts (`make artifacts`): it loads the `test`
+//! Act 4 shows the wire transport (`bps::serve::wire`): the same
+//! `SimServer` goes behind a TCP listener, and two clients drive
+//! `RemoteSession`s over loopback sockets through the identical
+//! `submit → wait → view` cycle — observation streams are bitwise
+//! identical to in-process serving. A real deployment runs `bps serve
+//! --listen` and `bps connect` in separate processes.
+//!
+//! Act 5 needs the AOT artifacts (`make artifacts`): it loads the `test`
 //! model variant, trains a handful of PPO iterations through the
 //! coordinator (a pure client of the same `EnvBatch` API), and prints the
 //! FPS + runtime breakdown.
@@ -151,7 +158,62 @@ fn main() -> anyhow::Result<()> {
     );
     drop(env);
 
-    // -- Act 4: PPO training through the same API (needs `make artifacts`) --
+    // -- Act 4: remote clients — the same sessions over loopback TCP -------
+    println!("== Wire quickstart: RemoteSessions on a TCP SimServer ==");
+    use bps::serve::{RemoteClient, WireServer};
+    let wire_pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+    let shard = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(7),
+        (0..8).map(|_| Arc::clone(&scene)).collect(),
+    );
+    let wire_server = Arc::new(SimServer::start(vec![shard], wire_pool)?);
+    // the wire layer fronts an existing SimServer; port 0 = ephemeral
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&wire_server))?;
+    let addr = wire.local_addr().to_string();
+    println!("serving on {addr}");
+    // a remote process would do exactly this, minus the loopback: dial,
+    // lease, then drive the same submit -> wait -> view cycle as Act 2.
+    // Lease both sessions before any thread submits (see Act 2's note).
+    let mut remotes = Vec::new();
+    for _ in 0..2usize {
+        let client = RemoteClient::connect(&addr)?;
+        let session = client.open_session(Task::PointNav, 4)?;
+        remotes.push((client, session));
+    }
+    std::thread::scope(|sc| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for (c, (client, mut session)) in remotes.into_iter().enumerate() {
+            handles.push(sc.spawn(move || -> anyhow::Result<f32> {
+                let mut reward = 0.0f32;
+                for t in 0..16usize {
+                    let actions: Vec<u8> = (0..4).map(|i| (1 + (t + c + i) % 3) as u8).collect();
+                    // the frames cross a socket; observations are bitwise
+                    // identical to in-process serving
+                    let view = session.step(&actions)?;
+                    reward += view.rewards.iter().sum::<f32>();
+                }
+                session.detach()?;
+                drop(client);
+                Ok(reward)
+            }));
+        }
+        for (c, h) in handles.into_iter().enumerate() {
+            let reward = h.join().expect("remote client thread")?;
+            println!("remote client {c}: 16 steps x 4 envs, reward {reward:+.2}");
+        }
+        Ok(())
+    })?;
+    for conn in wire.conn_stats() {
+        println!(
+            "conn {}: {} frames in, {} frames out, {} bytes out",
+            conn.id, conn.frames_in, conn.frames_out, conn.bytes_out
+        );
+    }
+    drop(wire);
+    drop(wire_server);
+    println!();
+
+    // -- Act 5: PPO training through the same API (needs `make artifacts`) --
     let cfg = Config {
         variant: "test".into(),
         artifacts_dir: bps::bench::artifacts_dir(),

@@ -3,13 +3,19 @@
 //! swept over client count × envs-per-client, plus per-client step
 //! latency percentiles (p50/p95). The coalescer + snapshot-publish cost
 //! is bounded when `ratio` stays near 1.0.
+//!
+//! A third phase runs the same full-occupancy workload through the TCP
+//! wire transport (`bps::serve::wire`) over loopback — every client a
+//! `RemoteSession` on its own connection — so the serialization +
+//! socket cost of going remote is measured against the same direct
+//! baseline (`wire_fps` / `w_ratio` / worst-client `w_p95`).
 
 use std::sync::Arc;
 
 use bps::bench::{bench_iters, dataset};
 use bps::env::EnvBatchConfig;
 use bps::render::RenderConfig;
-use bps::serve::{ShardSpec, SimServer, StragglerPolicy};
+use bps::serve::{RemoteClient, ShardSpec, SimServer, StragglerPolicy, WireServer};
 use bps::sim::{Task, NUM_ACTIONS};
 use bps::util::pool::WorkerPool;
 
@@ -26,11 +32,24 @@ fn main() {
     let ds = dataset("gibson").expect("dataset");
     let scene = Arc::new(ds.load_scene(&ds.train[0], false).expect("scene"));
     let steps = warmup + iters;
-    println!("# SimServer coalescing overhead vs direct EnvBatch ({steps} steps, depth {RES})");
+    println!(
+        "# SimServer coalescing + wire-transport overhead vs direct EnvBatch \
+         ({steps} steps, depth {RES})"
+    );
     // avg_p50 = mean of per-client p50s; max_p95 = worst client's p95
     println!(
-        "{:>8} {:>7} {:>6} {:>11} {:>11} {:>7} {:>10} {:>10}",
-        "clients", "envs/c", "N", "direct_fps", "served_fps", "ratio", "avg_p50_ms", "max_p95_ms"
+        "{:>8} {:>7} {:>6} {:>11} {:>11} {:>7} {:>10} {:>10} {:>11} {:>8} {:>10}",
+        "clients",
+        "envs/c",
+        "N",
+        "direct_fps",
+        "served_fps",
+        "ratio",
+        "avg_p50_ms",
+        "max_p95_ms",
+        "wire_fps",
+        "w_ratio",
+        "w_p95_ms"
     );
     for clients in [1usize, 2, 4, 8] {
         for epc in [8usize, 32] {
@@ -83,12 +102,55 @@ fn main() {
             let served_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
             let p50 = lats.iter().map(|l| l.0).sum::<f32>() / lats.len() as f32;
             let p95 = lats.iter().map(|l| l.1).fold(0.0f32, f32::max);
+            drop(srv);
+
+            // Loopback wire: a fresh same-seeded server behind the TCP
+            // front-end; every client a RemoteSession on its own socket.
+            let spec = ShardSpec::with_scenes(cfg, (0..n).map(|_| Arc::clone(&scene)).collect())
+                .straggler(StragglerPolicy::Wait);
+            let srv = Arc::new(SimServer::start(vec![spec], Arc::clone(&pool)).expect("server"));
+            let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).expect("listen");
+            let addr = wire.local_addr().to_string();
+            let remotes: Vec<_> = (0..clients)
+                .map(|_| {
+                    let client = RemoteClient::connect(&addr).expect("connect");
+                    let session = client
+                        .open_session(Task::PointNav, epc)
+                        .expect("open_session");
+                    (client, session)
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let wire_lats: Vec<(f32, f32)> = std::thread::scope(|sc| {
+                let handles: Vec<_> = remotes
+                    .into_iter()
+                    .enumerate()
+                    .map(|(c, (client, mut session))| {
+                        sc.spawn(move || {
+                            for t in 0..steps {
+                                session
+                                    .step(&actions_at(t, c, epc))
+                                    .expect("wire step");
+                            }
+                            let lat = session.latency();
+                            drop(session);
+                            drop(client);
+                            lat
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let wire_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
+            let w_p95 = wire_lats.iter().map(|l| l.1).fold(0.0f32, f32::max);
             println!(
                 "{clients:>8} {epc:>7} {n:>6} {direct_fps:>11.0} {served_fps:>11.0} \
-                 {:>7.3} {:>10.2} {:>10.2}",
+                 {:>7.3} {:>10.2} {:>10.2} {wire_fps:>11.0} {:>8.3} {:>10.2}",
                 served_fps / direct_fps,
                 p50 * 1e3,
-                p95 * 1e3
+                p95 * 1e3,
+                wire_fps / direct_fps,
+                w_p95 * 1e3
             );
         }
     }

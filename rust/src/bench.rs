@@ -239,10 +239,11 @@ pub fn measure_render(
     let st = renderer.take_stats();
     let frames = (items.len() * reps) as f64;
     let us = |ns: u64| ns as f64 / 1e3 / frames;
+    let [p50_ms, p95_ms] = lat.percentiles([0.5, 0.95]);
     RenderBenchResult {
         fps: frames / secs,
-        p50_ms: lat.percentile(0.5),
-        p95_ms: lat.percentile(0.95),
+        p50_ms,
+        p95_ms,
         tris_per_s: st.tris_rasterized as f64 / secs,
         stage_us: [
             us(st.transform_ns),

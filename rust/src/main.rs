@@ -4,6 +4,8 @@
 //!   gen-dataset    generate a procedural scene dataset with splits
 //!   train          end-to-end RL training (paper Fig. 2 loop)
 //!   eval           evaluate a checkpoint on a dataset split
+//!   serve          front a SimServer with the TCP wire transport
+//!   connect        remote demo client for a `bps serve` server
 //!   serve-demo     multi-client serving demo over the SimServer layer
 //!   scenario-demo  scenario engine demo: streaming procgen + curriculum
 //!   bench          standalone batch-renderer benchmark (--json appends the
@@ -37,14 +39,22 @@ fn main() {
 
 fn run() -> Result<()> {
     let mut args = Args::from_env()?;
-    if args.flag("help") {
+    if args.flag("help")? {
         print_help();
         return Ok(());
     }
-    match args.subcommand.as_deref() {
+    // Only serve/connect take a positional operand (the address); every
+    // other subcommand rejects strays up front — `bps train cfg.toml`
+    // must fail immediately, not after a defaults-run finishes.
+    if !matches!(args.subcommand.as_deref(), Some("serve") | Some("connect")) {
+        args.ensure_no_operands()?;
+    }
+    let result = match args.subcommand.as_deref() {
         Some("gen-dataset") => gen_dataset(&mut args),
         Some("train") => train(&mut args),
         Some("eval") => eval(&mut args),
+        Some("serve") => serve(&mut args),
+        Some("connect") => connect(&mut args),
         Some("serve-demo") => serve_demo(&mut args),
         Some("scenario-demo") => scenario_demo(&mut args),
         Some("bench") => bench(&mut args),
@@ -56,11 +66,14 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|serve-demo|scenario-demo|bench|info|help> \
-                 [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|serve|connect|serve-demo|scenario-demo|\
+                 bench|info|help> [--key value ...]"
             )
         }
-    }
+    };
+    // Subcommands consume their operands (serve/connect take an address);
+    // anything left over is a typo, rejected like before operands existed.
+    result.and_then(|()| args.ensure_no_operands())
 }
 
 fn print_help() {
@@ -77,6 +90,21 @@ SUBCOMMANDS
                (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K)
   eval         greedy evaluation on a dataset split
                (--checkpoint ckpt.bin --split val --episodes N)
+  serve        front a SimServer with the TCP wire transport
+               (bps::serve::wire, DESIGN.md §0.8) so remote processes can
+               lease env slots: bps serve --listen 127.0.0.1:7447
+               (--shards S --slots N --res R --task NAME --seed S
+                --straggler noop|repeat|wait --deadline-ticks K
+                --threads T --mem-budget MB --outbox FRAMES  per-conn
+                outbox bound before the slow-reader disconnect fires
+                --inbox SUBMITS  per-session submit queue bound before
+                the flood disconnect fires
+                --stats-every SECS --once  exit once every accepted
+                connection has closed (at least one), for smoke tests)
+  connect      remote demo client: lease slots on a `bps serve` server,
+               drive them with a scripted policy, report FPS + latency
+               p50/p95: bps connect 127.0.0.1:7447 --task pointnav
+               (--addr A --task NAME --envs N --steps T)
   serve-demo   drive M concurrent synthetic clients through the SimServer
                multi-tenant serving layer (bps::serve) and report aggregate
                FPS, occupancy, and per-client step-latency p50/p95
@@ -130,7 +158,10 @@ ENVIRONMENT API
   connect(task, n_envs) to lease env slots, submit partial action
   batches, and wait on tickets for their slice of each coalesced batch
   step — so one EnvBatch step serves many tenants and the paper's
-  amortization survives multi-tenancy.
+  amortization survives multi-tenancy. Remote processes reach the same
+  surface over TCP via `bps serve` / `bps connect` (bps::serve::wire):
+  RemoteSession speaks the identical submit -> wait -> view cycle with
+  bitwise-identical observation streams.
 
 SHARED TRAINING OPTIONS (CLI overrides the TOML config)
   --variant NAME        AOT model variant (depth64, rgb64, r50_depth128, ...)
@@ -290,6 +321,195 @@ fn eval(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Print the serve-layer stats the wire front-end exposes: per-shard
+/// rows (incl. `bad_submits`, the hostile-slot-index counter) and the
+/// per-connection wire rows. The `--once` smoke job greps these.
+fn print_serve_stats(server: &bps::serve::SimServer, conns: &[bps::serve::ConnStats]) {
+    for (i, st) in server.stats().iter().enumerate() {
+        println!(
+            "shard {i}: task {:?} leased {}/{} steps {} straggler_fills={} bad_submits={} \
+             latency p50 {:.2} ms p95 {:.2} ms",
+            st.task,
+            st.leased,
+            st.slots,
+            st.steps,
+            st.straggler_fills,
+            st.bad_submits,
+            st.latency_p50 * 1e3,
+            st.latency_p95 * 1e3
+        );
+    }
+    for c in conns {
+        println!(
+            "conn {} {}: sessions {}/{} frames in/out {}/{} bytes in/out {}/{} bad_frames={}{}{}",
+            c.id,
+            c.peer,
+            c.sessions_open,
+            c.sessions_opened,
+            c.frames_in,
+            c.frames_out,
+            c.bytes_in,
+            c.bytes_out,
+            c.bad_frames,
+            if c.dropped_slow { " dropped-slow" } else { "" },
+            if c.closed { " closed" } else { "" }
+        );
+    }
+}
+
+/// Front a `SimServer` with the TCP wire transport (`bps::serve::wire`):
+/// remote processes lease env slots with `bps connect` and drive them
+/// through the same coalesced batch steps as in-process tenants.
+fn serve(args: &mut Args) -> Result<()> {
+    use bps::env::EnvBatchConfig;
+    use bps::render::RenderConfig;
+    use bps::scene::procgen::{generate, Complexity};
+    use bps::serve::{FillAction, ShardSpec, SimServer, StragglerPolicy, WireConfig, WireServer};
+    use bps::sim::Task;
+    use bps::util::pool::WorkerPool;
+    use std::sync::Arc;
+
+    let listen = args
+        .operand()
+        .or_else(|| args.opt("listen"))
+        .unwrap_or_else(|| "127.0.0.1:7447".into());
+    args.ensure_no_operands()?; // a second address is a typo; fail now
+    let shards = args.usize_or("shards", 1)?.max(1);
+    let slots = args.usize_or("slots", 16)?.max(1);
+    let res = args.usize_or("res", 32)?.max(4);
+    let seed = args.u64_or("seed", 7)?;
+    let threads = args.usize_or("threads", 0)?;
+    let ticks = args.usize_or("deadline-ticks", 2)? as u32;
+    let outbox = args.usize_or("outbox", 256)?.max(1);
+    let inbox = args.usize_or("inbox", 64)?.max(1);
+    let mem_budget_mb = args.usize_or("mem-budget", 0)?;
+    let stats_every = args.f64_or("stats-every", 10.0)?.max(0.2);
+    let once = args.flag("once")?;
+    let task = {
+        let name = args.opt_or("task", "pointnav");
+        Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
+    };
+    // Hardened default: deadline coalescing, so a remote tenant that
+    // vanishes (or turns hostile) cannot stall its co-tenants the way a
+    // silent `Wait` tenant would.
+    let straggler = match args.opt_or("straggler", "noop").as_str() {
+        "wait" => StragglerPolicy::Wait,
+        "noop" => StragglerPolicy::Deadline {
+            ticks,
+            fill: FillAction::NoOp,
+        },
+        "repeat" => StragglerPolicy::Deadline {
+            ticks,
+            fill: FillAction::Repeat,
+        },
+        other => bail!("bad straggler policy {other:?} (wait|noop|repeat)"),
+    };
+
+    let scene = Arc::new(generate("serve_wire", seed, Complexity::test()));
+    let pool = Arc::new(WorkerPool::new(if threads == 0 {
+        WorkerPool::default_size()
+    } else {
+        threads
+    }));
+    let mut specs = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let cfg = EnvBatchConfig::new(task, RenderConfig::depth(res))
+            .seed(seed.wrapping_add(s as u64 * 7919));
+        let scenes = (0..slots).map(|_| Arc::clone(&scene)).collect();
+        specs.push(ShardSpec::with_scenes(cfg, scenes).straggler(straggler));
+    }
+    let budget = match mem_budget_mb {
+        0 => None,
+        mb => Some(mb * 1024 * 1024),
+    };
+    let server = Arc::new(SimServer::with_budget(specs, pool, budget)?);
+    let wire = WireServer::listen_with(
+        &listen,
+        Arc::clone(&server),
+        WireConfig {
+            outbox_frames: outbox,
+            inbox_submits: inbox,
+        },
+    )?;
+    println!(
+        "serving {shards} shard(s) x {slots} slots ({task:?}, res {res}) on {}",
+        wire.local_addr()
+    );
+    if once {
+        println!("--once: exiting after all accepted connections close");
+    }
+
+    let mut last_stats = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let conns = wire.conn_stats();
+        if once && wire.accepted() > 0 && conns.iter().all(|c| c.closed) {
+            break;
+        }
+        if last_stats.elapsed().as_secs_f64() >= stats_every {
+            print_serve_stats(&server, &conns);
+            last_stats = std::time::Instant::now();
+        }
+    }
+    // Final report (the smoke job asserts bad_submits=0 on these rows).
+    print_serve_stats(&server, &wire.conn_stats());
+    println!("serve: clean shutdown");
+    Ok(())
+}
+
+/// Remote demo client for `bps serve`: lease slots over TCP, drive them
+/// with the scripted turn/forward policy, and report FPS + latency.
+fn connect(args: &mut Args) -> Result<()> {
+    use bps::serve::RemoteClient;
+    use bps::sim::Task;
+
+    let addr = args
+        .operand()
+        .or_else(|| args.opt("addr"))
+        .unwrap_or_else(|| "127.0.0.1:7447".into());
+    args.ensure_no_operands()?; // a second address is a typo; fail now
+    let envs = args.usize_or("envs", 8)?.max(1);
+    let steps = args.usize_or("steps", 256)?.max(1);
+    let task = {
+        let name = args.opt_or("task", "pointnav");
+        Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
+    };
+
+    let client = RemoteClient::connect(&addr)?;
+    let mut session = client.open_session(task, envs)?;
+    println!(
+        "connected to {addr}: {} shard(s), leased {} x {task:?} slots {:?}",
+        client.num_shards(),
+        session.num_envs(),
+        session.slots()
+    );
+    let mut actions = vec![0u8; envs];
+    let mut reward = 0.0f32;
+    let mut episodes = 0u32;
+    let t0 = std::time::Instant::now();
+    for t in 0..steps {
+        for (j, a) in actions.iter_mut().enumerate() {
+            // turn/forward script, never STOP
+            *a = (1 + (t + j) % 3) as u8;
+        }
+        let v = session.step(&actions)?;
+        reward += v.rewards.iter().sum::<f32>();
+        episodes += v.dones.iter().filter(|&&d| d).count() as u32;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, p95) = session.latency();
+    session.detach()?;
+    println!(
+        "{steps} steps x {envs} envs in {wall:.2}s = {:.0} FPS | reward {reward:+.2} \
+         episodes {episodes} | step latency p50 {:.2} ms p95 {:.2} ms",
+        (steps * envs) as f64 / wall,
+        p50 * 1e3,
+        p95 * 1e3
+    );
+    println!("connect: detached cleanly");
+    Ok(())
+}
+
 /// Drive M concurrent synthetic clients (threads with scripted policies)
 /// through the `bps::serve` multi-tenant layer and report aggregate FPS,
 /// occupancy, and step-latency percentiles.
@@ -407,11 +627,12 @@ fn serve_demo(args: &mut Args) -> Result<()> {
     );
     for (i, st) in server.stats().iter().enumerate() {
         println!(
-            "  shard {i}: task {:?} steps {} straggler-fills {} \
+            "  shard {i}: task {:?} steps {} straggler-fills {} bad-submits {} \
              resident {:.1} MB latency p50 {:.2} ms p95 {:.2} ms",
             st.task,
             st.steps,
             st.straggler_fills,
+            st.bad_submits,
             st.resident_bytes as f64 / 1e6,
             st.latency_p50 * 1e3,
             st.latency_p95 * 1e3
@@ -434,7 +655,7 @@ fn scenario_demo(args: &mut Args) -> Result<()> {
     use std::sync::Arc;
 
     let dir = args.opt_or("scenario-dir", "scenarios");
-    if args.flag("list") {
+    if args.flag("list")? {
         for name in registry_list(Path::new(&dir))? {
             let spec = ScenarioSpec::resolve(&name, Path::new(&dir))?;
             println!("{name}: {}", spec.summary());
@@ -531,7 +752,7 @@ fn bench(args: &mut Args) -> Result<()> {
     let warmup = args.usize_or("warmup", dw)?;
     let reps = args.usize_or("reps", dr)?.max(1);
     let threads = args.usize_or("threads", 0)?;
-    let json = args.flag("json");
+    let json = args.flag("json")?;
     let out_path = PathBuf::from(args.opt_or("out", "BENCH_render.json"));
 
     let ds = dataset(&complexity)?;

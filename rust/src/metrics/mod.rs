@@ -37,19 +37,51 @@ impl Window {
         self.buf.iter().sum::<f32>() / self.buf.len() as f32
     }
 
+    /// Nearest-rank index for quantile `q` into a window of `len` samples.
+    fn rank_index(len: usize, q: f32) -> usize {
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * len as f32).ceil() as usize;
+        rank.clamp(1, len) - 1
+    }
+
     /// Nearest-rank percentile of the windowed samples (`q` in `[0, 1]`;
     /// `percentile(0.5)` is the median, `percentile(0.95)` the p95). Used
     /// by the serve layer's step-latency stats, where a mean hides the
     /// tail a straggling co-tenant inflicts. Returns 0.0 when empty.
+    ///
+    /// O(n) via `select_nth_unstable_by` — the server stats path polls
+    /// this per shard per tick, so a full sort per call adds up. For
+    /// several quantiles of the same window use [`percentiles`]
+    /// (one sort, K rank reads).
+    ///
+    /// [`percentiles`]: Window::percentiles
     pub fn percentile(&self, q: f32) -> f32 {
         if self.buf.is_empty() {
             return 0.0;
         }
+        let mut scratch: Vec<f32> = self.buf.iter().copied().collect();
+        let idx = Self::rank_index(scratch.len(), q);
+        let (_, nth, _) = scratch.select_nth_unstable_by(idx, |a, b| {
+            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        *nth
+    }
+
+    /// Several nearest-rank percentiles of the same window: sorts the
+    /// samples once and reads each rank, so multi-quantile consumers
+    /// (p50+p95 in every stats row) don't re-scan per quantile. Bitwise
+    /// identical to calling [`percentile`](Window::percentile) per `q`.
+    pub fn percentiles<const K: usize>(&self, qs: [f32; K]) -> [f32; K] {
+        let mut out = [0.0f32; K];
+        if self.buf.is_empty() {
+            return out;
+        }
         let mut sorted: Vec<f32> = self.buf.iter().copied().collect();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let q = q.clamp(0.0, 1.0);
-        let rank = (q * sorted.len() as f32).ceil() as usize;
-        sorted[rank.clamp(1, sorted.len()) - 1]
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        for (o, q) in out.iter_mut().zip(qs) {
+            *o = sorted[Self::rank_index(sorted.len(), q)];
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -193,6 +225,25 @@ mod tests {
         };
         assert!((single.percentile(0.5) - 2.5).abs() < 1e-6);
         assert_eq!(Window::new(4).percentile(0.5), 0.0);
+    }
+
+    /// The single-sort multi-quantile read must agree with per-call
+    /// nearest-rank selection at every rank, including the clamps.
+    #[test]
+    fn percentiles_match_percentile_per_quantile() {
+        let mut w = Window::new(64);
+        let mut x = 7u32;
+        for _ in 0..50 {
+            // small deterministic LCG so ranks land on unordered data
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            w.push((x % 1000) as f32 / 10.0);
+        }
+        let qs = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0, 2.0];
+        let multi = w.percentiles(qs);
+        for (q, m) in qs.iter().zip(multi) {
+            assert_eq!(m, w.percentile(*q), "q={q}");
+        }
+        assert_eq!(Window::new(4).percentiles([0.5, 0.95]), [0.0, 0.0]);
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub(crate) struct Coalescer {
     waited: u32,
     /// Leased slots filled by the straggler policy, cumulative.
     pub straggler_fills: u64,
+    /// Submissions rejected for a bad slot index (out of range, unleased,
+    /// or leased to another session), cumulative. Nonzero only under
+    /// hostile or buggy clients — slot indices arrive off the wire.
+    pub bad_submits: u64,
 }
 
 impl Coalescer {
@@ -65,6 +69,7 @@ impl Coalescer {
             slots: (0..n).map(|_| None).collect(),
             waited: 0,
             straggler_fills: 0,
+            bad_submits: 0,
         }
     }
 
@@ -103,18 +108,32 @@ impl Coalescer {
                 *s = None;
             }
         }
+        // If the detaching session held the only pending actions, the
+        // straggler-deadline clock must not keep ticking into the *next*
+        // step (only `assemble` resets it otherwise): a stale `waited`
+        // silently shortens the co-tenants' deadline window.
+        if !self.has_pending() {
+            self.waited = 0;
+        }
     }
 
-    /// Buffer `actions[j]` for `slots[j]`. Slots no longer leased to the
-    /// session (should not happen through the public API) are skipped.
-    pub fn submit(&mut self, session: u64, slots: &[usize], actions: &[u8]) {
+    /// Buffer `actions[j]` for `slots[j]`. Returns how many submissions
+    /// were accepted; slots out of range or not leased to `session` are
+    /// skipped and counted in `bad_submits` — slot indices arrive off the
+    /// wire, so a bad index must never panic the shard driver (which
+    /// calls into the coalescer while holding the shard mutex).
+    pub fn submit(&mut self, session: u64, slots: &[usize], actions: &[u8]) -> usize {
+        let mut accepted = 0;
         for (&i, &a) in slots.iter().zip(actions.iter()) {
-            if let Some(l) = self.slots[i].as_mut() {
-                if l.session == session {
+            match self.slots.get_mut(i) {
+                Some(Some(l)) if l.session == session => {
                     l.pending = Some(a);
+                    accepted += 1;
                 }
+                _ => self.bad_submits += 1,
             }
         }
+        accepted
     }
 
     /// Number of leased slots (occupancy numerator).
@@ -263,6 +282,64 @@ mod tests {
         let mut out = Vec::new();
         c.assemble(&mut out);
         assert_eq!(out, vec![ACTION_FORWARD, ACTION_STOP]);
+    }
+
+    /// Regression: a slot index >= batch size (or aimed at a free or
+    /// foreign slot) must be skipped and counted, never panic — these
+    /// indices arrive off the wire and the caller holds the shard mutex.
+    #[test]
+    fn bad_slot_indices_are_skipped_and_counted() {
+        let mut c = Coalescer::new(4, StragglerPolicy::Wait);
+        let a = c.lease(1, 2).unwrap(); // slots 0,1
+        // out-of-range index: skipped, counted, no panic
+        assert_eq!(c.submit(1, &[usize::MAX], &[ACTION_FORWARD]), 0);
+        assert_eq!(c.bad_submits, 1);
+        // free slot (2) and a foreign lease's slot are equally rejected
+        let _b = c.lease(2, 1).unwrap(); // slot 2
+        assert_eq!(
+            c.submit(1, &[a[0], 2, 9999], &[ACTION_FORWARD; 3]),
+            1,
+            "only the owned in-range slot is accepted"
+        );
+        assert_eq!(c.bad_submits, 3);
+        assert_eq!(c.pending(), 1, "rejected submissions buffer nothing");
+        // the accepted action still assembles normally
+        c.submit(1, &a[1..], &[ACTION_LEFT]);
+        c.submit(2, &[2], &[ACTION_LEFT]);
+        let mut out = Vec::new();
+        c.assemble(&mut out);
+        assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_LEFT, ACTION_STOP]);
+    }
+
+    /// Regression: when the only session with pending actions detaches,
+    /// the straggler-deadline clock must reset — a stale `waited` would
+    /// silently shorten the next step's deadline window for co-tenants.
+    #[test]
+    fn deadline_clock_resets_when_detach_drains_pending() {
+        let policy = StragglerPolicy::Deadline {
+            ticks: 5,
+            fill: FillAction::NoOp,
+        };
+        let mut c = Coalescer::new(4, policy);
+        let a = c.lease(1, 2).unwrap();
+        let _b = c.lease(2, 2).unwrap();
+        c.submit(1, &a, &[ACTION_FORWARD, ACTION_FORWARD]);
+        c.tick();
+        c.tick();
+        assert_eq!(c.waited(), 2);
+        // session 1 detaches with its actions still buffered: the clock
+        // must reset, or session 2's next step gets a 3-tick window
+        c.release(1);
+        assert!(!c.has_pending());
+        assert_eq!(c.waited(), 0, "stale deadline clock after detach");
+        // a detach that does NOT drain the last pending action keeps the
+        // clock: the in-flight step's window is still being measured
+        let a2 = c.lease(3, 2).unwrap();
+        c.submit(3, &a2, &[ACTION_FORWARD, ACTION_FORWARD]);
+        c.tick();
+        c.release(2);
+        assert!(c.has_pending());
+        assert_eq!(c.waited(), 1, "clock keeps running for live pendings");
     }
 
     #[test]

@@ -32,14 +32,23 @@
 //! through verbatim (`rust/tests/serve.rs`).
 //!
 //! Observability: [`SimServer::stats`] reports per-shard occupancy,
-//! queue depth, step counts, straggler fills, and submit→result latency
-//! percentiles ([`metrics::Window::percentile`](crate::metrics::Window));
+//! queue depth, step counts, straggler fills, bad submits, and
+//! submit→result latency percentiles
+//! ([`metrics::Window::percentile`](crate::metrics::Window));
 //! [`Session::latency`] reports the same percentiles per client.
+//!
+//! Remote clients: the [`wire`] module puts this whole surface on the
+//! network — [`WireServer::listen`] fronts a `SimServer` with a
+//! length-prefixed TCP protocol, and [`RemoteClient`] /
+//! [`RemoteSession`] mirror `connect`/`Session` with bitwise-identical
+//! observation streams (DESIGN.md §0.8).
 
 pub mod coalescer;
 pub mod server;
 pub mod session;
+pub mod wire;
 
 pub use coalescer::{FillAction, StragglerPolicy};
 pub use server::{SceneSource, ShardSpec, ShardStats, SimServer, TICK};
 pub use session::{Session, SessionView, Ticket};
+pub use wire::{ConnStats, RemoteClient, RemoteSession, WireConfig, WireServer};

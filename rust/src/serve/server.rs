@@ -263,6 +263,10 @@ pub struct ShardStats {
     pub steps: u64,
     /// Leased slots the straggler policy had to fill, cumulative.
     pub straggler_fills: u64,
+    /// Submissions rejected for a bad slot index (out of range, unleased,
+    /// or foreign), cumulative. Nonzero only under hostile or buggy
+    /// clients — slot indices arrive off the wire (`serve::wire`).
+    pub bad_submits: u64,
     /// Scene-rotation swaps the shard driver has performed.
     pub rotations: u64,
     /// Resident scene-asset footprint (admission-control input).
@@ -454,6 +458,7 @@ impl SimServer {
             .iter()
             .map(|sh| {
                 let st = sh.state.lock().unwrap();
+                let [latency_p50, latency_p95] = st.latency.percentiles([0.5, 0.95]);
                 ShardStats {
                     task: sh.task,
                     slots: sh.slots,
@@ -461,10 +466,11 @@ impl SimServer {
                     queued_actions: st.coal.pending(),
                     steps: st.result.step,
                     straggler_fills: st.coal.straggler_fills,
+                    bad_submits: st.coal.bad_submits,
                     rotations: sh.rotations.load(Ordering::Relaxed),
                     resident_bytes: sh.resident_bytes,
-                    latency_p50: st.latency.percentile(0.5),
-                    latency_p95: st.latency.percentile(0.95),
+                    latency_p50,
+                    latency_p95,
                 }
             })
             .collect()

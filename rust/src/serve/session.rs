@@ -143,6 +143,51 @@ impl Session {
         })
     }
 
+    /// Wire-transport submit: buffer `actions[j]` for *shard-absolute*
+    /// slot index `slots[j]`, which arrives off the wire and is therefore
+    /// untrusted — out-of-range, unleased, or foreign slots are skipped
+    /// by the coalescer (counted in the shard's `bad_submits`) instead of
+    /// panicking the driver. Returns the number of accepted submissions
+    /// plus the [`Ticket`] for the step that will consume them; with
+    /// `accepted == 0` nothing was buffered, so the caller should *not*
+    /// wait on the ticket (the step it names may never be provoked).
+    pub(crate) fn submit_at(
+        &mut self,
+        slots: &[usize],
+        actions: &[u8],
+    ) -> Result<(usize, Ticket<'_>)> {
+        if self.detached {
+            bail!("submit on a detached session");
+        }
+        if slots.len() != actions.len() {
+            bail!(
+                "submit_at: {} slots for {} actions",
+                slots.len(),
+                actions.len()
+            );
+        }
+        let (accepted, target) = {
+            let mut st = self.shard.state.lock().unwrap();
+            if st.shutdown {
+                let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
+                bail!("serve: {msg}");
+            }
+            let accepted = st.coal.submit(self.id, slots, actions);
+            if accepted > 0 {
+                self.shard.submitted.notify_all();
+            }
+            (accepted, st.issued + 1)
+        };
+        Ok((
+            accepted,
+            Ticket {
+                session: self,
+                target,
+                submitted: Instant::now(),
+            },
+        ))
+    }
+
     /// Convenience: submit and immediately wait.
     pub fn step(&mut self, actions: &[u8]) -> Result<SessionView<'_>> {
         self.submit(actions)?.wait()
@@ -166,7 +211,8 @@ impl Session {
     /// Submit→result latency percentiles (p50, p95) over this session's
     /// recent steps, in seconds.
     pub fn latency(&self) -> (f32, f32) {
-        (self.latency.percentile(0.5), self.latency.percentile(0.95))
+        let [p50, p95] = self.latency.percentiles([0.5, 0.95]);
+        (p50, p95)
     }
 
     /// Copy this session's slots out of a published shard snapshot.

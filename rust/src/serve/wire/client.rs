@@ -1,0 +1,518 @@
+//! [`RemoteClient`] / [`RemoteSession`]: the in-process session API over
+//! TCP.
+//!
+//! A `RemoteClient` owns one connection to a
+//! [`WireServer`](super::WireServer) and multiplexes any number of
+//! [`RemoteSession`]s over it
+//! (a background reader thread routes incoming frames to per-session
+//! mailboxes). A `RemoteSession` mirrors the in-process
+//! [`Session`](crate::serve::Session) shape exactly — `submit(actions) →
+//! RemoteTicket → wait() → SessionView` — and because observation floats
+//! cross the wire as raw IEEE-754 bits, the views it returns are
+//! *bitwise identical* to in-process serving of the same-seeded shard
+//! (`rust/tests/serve_remote.rs`).
+//!
+//! Sessions are `Send` and independent of the `RemoteClient` value
+//! (both hold the same `Arc`ed connection state): open them on one
+//! thread, drive them from others. Dropping the client closes the
+//! socket, which errors out all of its sessions and — server-side —
+//! detaches their leases.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Window;
+use crate::serve::session::SessionView;
+use crate::sim::Task;
+
+use super::frame::{self, Frame, ReadError, StepFrame, ERR_LEASE};
+
+/// How many latency samples a remote session keeps for its p50/p95.
+const REMOTE_LATENCY_WINDOW: usize = 1024;
+
+/// What the reader routes into a session's mailbox.
+enum SessMsg {
+    Step { step: u64, view: StepFrame },
+    Detached,
+    Error(String),
+}
+
+/// A granted lease, delivered from the reader to `open_session`.
+struct GrantMsg {
+    session: u64,
+    task: Task,
+    obs_floats: u32,
+    slots: Vec<u32>,
+    mailbox: Receiver<SessMsg>,
+}
+
+type LeaseReply = std::result::Result<GrantMsg, String>;
+
+#[derive(Default)]
+struct Routes {
+    leases: HashMap<u64, Sender<LeaseReply>>,
+    sessions: HashMap<u64, Sender<SessMsg>>,
+}
+
+struct ClientShared {
+    /// All client→server frames are written under this lock.
+    writer: Mutex<TcpStream>,
+    routes: Mutex<Routes>,
+    /// Why the connection died, once it has.
+    dead: Mutex<Option<String>>,
+    next_req: AtomicU64,
+}
+
+fn death(shared: &ClientShared) -> String {
+    shared
+        .dead
+        .lock()
+        .unwrap()
+        .clone()
+        .unwrap_or_else(|| "connection closed".into())
+}
+
+fn send_frame(shared: &ClientShared, f: &Frame) -> Result<()> {
+    if let Some(msg) = shared.dead.lock().unwrap().clone() {
+        bail!("connection lost: {msg}");
+    }
+    let mut w = shared.writer.lock().unwrap();
+    frame::write_frame(&mut *w, f).context("write frame")
+}
+
+/// One TCP connection to a `WireServer` (see module docs).
+pub struct RemoteClient {
+    shared: Arc<ClientShared>,
+    /// Shutdown handle; closing it unblocks the reader thread.
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+    shards: u32,
+}
+
+impl RemoteClient {
+    /// Dial `addr` (e.g. `"127.0.0.1:7447"`) and perform the
+    /// hello/welcome handshake.
+    pub fn connect(addr: &str) -> Result<RemoteClient> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        frame::write_frame(&mut stream, &Frame::Hello).context("send hello")?;
+        let shards = match frame::read_frame_dir(&mut stream, false) {
+            Ok(Frame::Welcome { shards }) => shards,
+            Ok(other) => bail!("handshake: unexpected frame {other:?}"),
+            Err(e) => bail!("handshake with {addr} failed: {e}"),
+        };
+        let shutdown_handle = stream.try_clone().context("clone socket")?;
+        let writer = stream.try_clone().context("clone socket")?;
+        let shared = Arc::new(ClientShared {
+            writer: Mutex::new(writer),
+            routes: Mutex::new(Routes::default()),
+            dead: Mutex::new(None),
+            next_req: AtomicU64::new(0),
+        });
+        let for_reader = Arc::clone(&shared);
+        let reader = std::thread::Builder::new()
+            .name("bps-wire-client".into())
+            .spawn(move || client_reader(stream, for_reader))
+            .context("spawn client reader")?;
+        Ok(RemoteClient {
+            shared,
+            stream: shutdown_handle,
+            reader: Some(reader),
+            shards,
+        })
+    }
+
+    /// Shards the server advertised in its welcome.
+    pub fn num_shards(&self) -> usize {
+        self.shards as usize
+    }
+
+    /// Lease `n_envs` slots of `task` on the server — the remote
+    /// counterpart of `SimServer::connect`. Blocks until the server
+    /// grants (or rejects) the lease and the initial observations have
+    /// arrived, so `view()` works immediately.
+    pub fn open_session(&self, task: Task, n_envs: usize) -> Result<RemoteSession> {
+        if n_envs > frame::MAX_SESSION_ENVS {
+            bail!(
+                "open_session: {n_envs} envs exceeds the wire transport's \
+                 per-session cap of {} (lease several sessions instead)",
+                frame::MAX_SESSION_ENVS
+            );
+        }
+        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        self.shared.routes.lock().unwrap().leases.insert(req, tx);
+        let lease = Frame::Lease {
+            req,
+            task,
+            n_envs: n_envs as u32,
+        };
+        if let Err(e) = send_frame(&self.shared, &lease) {
+            // the reply can never arrive; don't leak the route entry
+            self.shared.routes.lock().unwrap().leases.remove(&req);
+            return Err(e);
+        }
+        let grant = match rx.recv() {
+            Ok(Ok(g)) => g,
+            Ok(Err(msg)) => bail!("lease rejected: {msg}"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        };
+        let n = grant.slots.len();
+        let of = grant.obs_floats as usize;
+        let mut session = RemoteSession {
+            shared: Arc::clone(&self.shared),
+            id: grant.session,
+            task: grant.task,
+            obs_floats: of,
+            slots: grant.slots.iter().map(|&s| s as usize).collect(),
+            mailbox: grant.mailbox,
+            obs: vec![0.0; n * of],
+            goal: vec![0.0; n * 3],
+            rewards: vec![0.0; n],
+            dones: vec![false; n],
+            successes: vec![false; n],
+            spl: vec![0.0; n],
+            scores: vec![0.0; n],
+            synced: 0,
+            submitted_seq: 0,
+            delivered_seq: 0,
+            latency: Window::new(REMOTE_LATENCY_WINDOW),
+            detached: false,
+        };
+        // The server sends the latest published observations right after
+        // the grant; adopt them so `view()` matches the in-process seed.
+        session.recv_step().context("initial observation")?;
+        Ok(session)
+    }
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Route incoming frames to lease waiters and session mailboxes until
+/// the connection dies, then fail everything that is still waiting.
+fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
+    let mut why: Option<String> = None;
+    let mut src = &stream;
+    loop {
+        let f = match frame::read_frame_dir(&mut src, false) {
+            Ok(f) => f,
+            Err(ReadError::Eof) => break,
+            Err(e) => {
+                why = Some(e.to_string());
+                break;
+            }
+        };
+        match f {
+            Frame::Grant {
+                req,
+                session,
+                task,
+                obs_floats,
+                slots,
+            } => {
+                let mut r = shared.routes.lock().unwrap();
+                let (tx, mailbox) = channel();
+                r.sessions.insert(session, tx);
+                match r.leases.remove(&req) {
+                    Some(reply) => {
+                        let _ = reply.send(Ok(GrantMsg {
+                            session,
+                            task,
+                            obs_floats,
+                            slots,
+                            mailbox,
+                        }));
+                    }
+                    None => {
+                        r.sessions.remove(&session); // unsolicited grant
+                    }
+                }
+            }
+            Frame::Step {
+                session, step, view, ..
+            } => {
+                let r = shared.routes.lock().unwrap();
+                if let Some(tx) = r.sessions.get(&session) {
+                    let _ = tx.send(SessMsg::Step { step, view });
+                }
+            }
+            Frame::Detached { session } => {
+                let mut r = shared.routes.lock().unwrap();
+                if let Some(tx) = r.sessions.remove(&session) {
+                    let _ = tx.send(SessMsg::Detached);
+                }
+            }
+            Frame::Error { re, code, msg } => {
+                if re == 0 {
+                    why = Some(format!("server error: {msg}"));
+                    break;
+                }
+                // Route by code, not by id: lease req ids (client-chosen)
+                // and wire session ids (server-chosen) are separate
+                // namespaces that can collide numerically.
+                let mut r = shared.routes.lock().unwrap();
+                if code == ERR_LEASE {
+                    if let Some(reply) = r.leases.remove(&re) {
+                        let _ = reply.send(Err(msg));
+                    }
+                } else if let Some(tx) = r.sessions.get(&re) {
+                    let _ = tx.send(SessMsg::Error(msg));
+                }
+            }
+            Frame::Hello
+            | Frame::Welcome { .. }
+            | Frame::Lease { .. }
+            | Frame::Submit { .. }
+            | Frame::Detach { .. } => {
+                why = Some("unexpected client-bound frame".into());
+                break;
+            }
+        }
+    }
+    *shared.dead.lock().unwrap() = Some(why.unwrap_or_else(|| "connection closed".into()));
+    // Dropping the senders errors out every blocked lease/step wait.
+    let mut r = shared.routes.lock().unwrap();
+    r.leases.clear();
+    r.sessions.clear();
+}
+
+/// A lease on a remote shard, driven through the same
+/// `submit → wait → view` cycle as the in-process `Session`.
+pub struct RemoteSession {
+    shared: Arc<ClientShared>,
+    id: u64,
+    task: Task,
+    obs_floats: usize,
+    slots: Vec<usize>,
+    mailbox: Receiver<SessMsg>,
+    // Session-local SoA buffers, adopted from Step frames.
+    obs: Vec<f32>,
+    goal: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    successes: Vec<bool>,
+    spl: Vec<f32>,
+    scores: Vec<f32>,
+    /// Shard step the buffers were last synced to.
+    synced: u64,
+    /// Submits sent so far; each produces exactly one `Step` frame.
+    submitted_seq: u64,
+    /// Step frames consumed from the mailbox so far. Tracking both lets
+    /// `RemoteTicket::wait` drain frames left behind by tickets that
+    /// were dropped without waiting, instead of desyncing one-behind.
+    delivered_seq: u64,
+    latency: Window,
+    detached: bool,
+}
+
+impl RemoteSession {
+    /// Envs leased by this session.
+    pub fn num_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Floats per env observation tile (shard render config).
+    pub fn obs_floats(&self) -> usize {
+        self.obs_floats
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// The shard-absolute slot indices backing this lease, in view order.
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    /// This session's view of the last step it received.
+    pub fn view(&self) -> SessionView<'_> {
+        SessionView {
+            step: self.synced,
+            obs: &self.obs,
+            goal: &self.goal,
+            rewards: &self.rewards,
+            dones: &self.dones,
+            successes: &self.successes,
+            spl: &self.spl,
+            scores: &self.scores,
+        }
+    }
+
+    /// Submit one action per leased slot (`actions[j]` steps
+    /// `self.slots()[j]`), exactly like `Session::submit`.
+    pub fn submit(&mut self, actions: &[u8]) -> Result<RemoteTicket<'_>> {
+        if self.detached {
+            bail!("submit on a detached session");
+        }
+        if actions.len() != self.slots.len() {
+            bail!(
+                "submit: {} actions for a {}-env session",
+                actions.len(),
+                self.slots.len()
+            );
+        }
+        let pairs: Vec<(u32, u8)> = self
+            .slots
+            .iter()
+            .zip(actions)
+            .map(|(&s, &a)| (s as u32, a))
+            .collect();
+        let submit = Frame::Submit {
+            session: self.id,
+            pairs,
+        };
+        send_frame(&self.shared, &submit)?;
+        self.submitted_seq += 1;
+        let seq = self.submitted_seq;
+        Ok(RemoteTicket {
+            session: self,
+            seq,
+            submitted: Instant::now(),
+        })
+    }
+
+    /// Convenience: submit and immediately wait.
+    pub fn step(&mut self, actions: &[u8]) -> Result<SessionView<'_>> {
+        self.submit(actions)?.wait()
+    }
+
+    /// Release the lease and wait for the server's acknowledgement, so
+    /// the freed slots are provably re-leasable when this returns.
+    /// Idempotent; `Drop` sends a best-effort detach without waiting.
+    pub fn detach(&mut self) -> Result<()> {
+        if self.detached {
+            return Ok(());
+        }
+        self.detached = true;
+        let send = send_frame(&self.shared, &Frame::Detach { session: self.id });
+        if send.is_ok() {
+            loop {
+                match self.mailbox.recv() {
+                    Ok(SessMsg::Detached) => break,
+                    // drain late step views still in flight
+                    Ok(SessMsg::Step { .. }) => continue,
+                    // A session error here means the pump is dead or
+                    // dying (shard failure / unknown session) — it
+                    // released the lease on exit and will never send
+                    // `Detached`, so waiting longer would hang forever.
+                    Ok(SessMsg::Error(_)) => break,
+                    // connection died — the server detaches on close
+                    Err(_) => break,
+                }
+            }
+        }
+        // The reader only prunes the route on a `Detached` frame; drop
+        // it ourselves so the dead id cannot collect stray messages.
+        self.shared.routes.lock().unwrap().sessions.remove(&self.id);
+        send
+    }
+
+    /// Submit→view latency percentiles (p50, p95) over this session's
+    /// recent steps, in seconds — includes the wire round trip.
+    pub fn latency(&self) -> (f32, f32) {
+        let [p50, p95] = self.latency.percentiles([0.5, 0.95]);
+        (p50, p95)
+    }
+
+    /// Block for the next `Step` frame and adopt its arrays.
+    fn recv_step(&mut self) -> Result<()> {
+        match self.mailbox.recv() {
+            Ok(SessMsg::Step { step, view }) => {
+                let n = self.slots.len();
+                let of = self.obs_floats;
+                if view.obs.len() != n * of
+                    || view.goal.len() != n * 3
+                    || view.rewards.len() != n
+                    || view.dones.len() != n
+                    || view.successes.len() != n
+                    || view.spl.len() != n
+                    || view.scores.len() != n
+                {
+                    bail!("server sent a mis-shaped step view");
+                }
+                self.obs = view.obs;
+                self.goal = view.goal;
+                self.rewards = view.rewards;
+                self.dones = view.dones;
+                self.successes = view.successes;
+                self.spl = view.spl;
+                self.scores = view.scores;
+                self.synced = step;
+                Ok(())
+            }
+            Ok(SessMsg::Detached) => bail!("session detached by the server"),
+            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        }
+    }
+}
+
+impl Drop for RemoteSession {
+    fn drop(&mut self) {
+        if !self.detached {
+            self.detached = true;
+            let _ = send_frame(&self.shared, &Frame::Detach { session: self.id });
+        }
+    }
+}
+
+/// An in-flight remote step: resolves at this submit's `Step` frame
+/// (servers send exactly one per accepted submit).
+/// [`current`](RemoteTicket::current) still serves the previous step
+/// meanwhile, mirroring `Ticket::current`. A ticket dropped without
+/// waiting leaves its frame in the mailbox; the next `wait` drains past
+/// it, so the session never goes one-behind.
+pub struct RemoteTicket<'a> {
+    session: &'a mut RemoteSession,
+    /// This submit's position in the one-`Step`-per-submit stream.
+    seq: u64,
+    submitted: Instant,
+}
+
+impl<'a> RemoteTicket<'a> {
+    /// The session's previous view (valid while the step is in flight).
+    pub fn current(&self) -> SessionView<'_> {
+        self.session.view()
+    }
+
+    /// Block until this submit's view arrives (draining any earlier
+    /// unwaited frames), adopt it, and return it. Same latest-wins
+    /// semantics as `Ticket::wait` under a `Deadline` policy: the view
+    /// is the shard's most recent published step.
+    pub fn wait(self) -> Result<SessionView<'a>> {
+        let RemoteTicket {
+            session,
+            seq,
+            submitted,
+        } = self;
+        while session.delivered_seq < seq {
+            match session.recv_step() {
+                Ok(()) => session.delivered_seq += 1,
+                Err(e) => {
+                    // An error frame also answers exactly one submit:
+                    // count it, or a later wait would block forever on
+                    // a step view the server never owed us.
+                    session.delivered_seq += 1;
+                    return Err(e);
+                }
+            }
+        }
+        session.latency.push(submitted.elapsed().as_secs_f32());
+        Ok(session.view())
+    }
+}

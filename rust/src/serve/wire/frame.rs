@@ -1,0 +1,903 @@
+//! The wire frame grammar: length-prefixed binary frames, no external
+//! dependencies (see DESIGN.md §0.8 for the full table).
+//!
+//! Every frame is an 8-byte header followed by `len` payload bytes, all
+//! little-endian:
+//!
+//! ```text
+//! [magic u16 = 0xB50C][version u8 = 1][type u8][len u32]  payload[len]
+//! ```
+//!
+//! The header is validated *before* any payload byte is read or any
+//! buffer is allocated, so a hostile length field cannot balloon memory:
+//! bad magic, unknown version, unknown frame type, and `len > MAX_FRAME`
+//! are all rejected from the fixed-size header alone. Payload decoding is
+//! pure slice arithmetic over the already-bounded buffer — every count
+//! field is checked against the remaining bytes, so truncated or
+//! internally inconsistent payloads produce [`WireError`]s, never panics
+//! or over-reads.
+//!
+//! Decoding is the exact inverse of encoding (round-trip asserted in the
+//! unit tests below); observation floats travel as raw IEEE-754 bits, so
+//! a remote view is bitwise identical to the in-process one
+//! (`rust/tests/serve_remote.rs`).
+
+use std::io::{Read, Write};
+
+use crate::sim::Task;
+
+/// First two bytes of every frame.
+pub const MAGIC: u16 = 0xB50C;
+/// Protocol version carried in every header.
+pub const VERSION: u8 = 1;
+/// Header bytes before the payload.
+pub const HEADER_LEN: usize = 8;
+/// Upper bound on a payload; larger length fields are hostile (a 64-env
+/// RGB-128 step view is ~12 MB, so 64 MiB leaves generous headroom).
+pub const MAX_FRAME: usize = 64 << 20;
+
+// Frame types.
+pub const FT_HELLO: u8 = 1;
+pub const FT_WELCOME: u8 = 2;
+pub const FT_LEASE: u8 = 3;
+pub const FT_GRANT: u8 = 4;
+pub const FT_SUBMIT: u8 = 5;
+pub const FT_STEP: u8 = 6;
+pub const FT_DETACH: u8 = 7;
+pub const FT_DETACHED: u8 = 8;
+pub const FT_ERROR: u8 = 9;
+
+// Error-frame codes (the `code` field of `Frame::Error`). The code also
+// disambiguates what the `re` field names: `ERR_LEASE` refers to a
+// client-chosen lease `req` id; `ERR_SESSION`/`ERR_SUBMIT`/`ERR_SHARD`
+// refer to a server-chosen wire session id (the two id spaces can
+// collide numerically). Codes 1–2 are connection-level (`re` = 0).
+// A slow-reader disconnect carries no code: a full outbox cannot carry
+// a farewell frame, so the policy is just a closed connection.
+/// Malformed frame; the server closes the connection after sending this.
+pub const ERR_PROTOCOL: u16 = 1;
+/// Header carried an unsupported protocol version; connection closed.
+pub const ERR_VERSION: u16 = 2;
+/// Lease rejected (no capacity / unknown task / admission control).
+pub const ERR_LEASE: u16 = 3;
+/// Frame referenced a session id this connection never leased.
+pub const ERR_SESSION: u16 = 4;
+/// Submit carried no acceptable slot/action pairs; nothing was buffered.
+pub const ERR_SUBMIT: u16 = 5;
+/// The shard backing the session failed; the session is gone.
+pub const ERR_SHARD: u16 = 6;
+
+/// A frame-grammar violation. The server answers with an
+/// [`ERR_PROTOCOL`]/[`ERR_VERSION`] error frame (best effort) and closes
+/// the connection; co-tenant sessions on other connections are untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// First two header bytes were not [`MAGIC`] (mid-stream garbage).
+    BadMagic,
+    /// Unsupported protocol version.
+    BadVersion(u8),
+    /// Length field exceeds [`MAX_FRAME`].
+    Oversized(u32),
+    /// Unknown frame type byte.
+    UnknownType(u8),
+    /// Stream or payload ended before the announced length.
+    Truncated,
+    /// Payload bytes do not decode as the announced frame type.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+            WireError::Oversized(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::UnknownType(t) => write!(f, "unknown frame type {t}"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl WireError {
+    /// The error-frame code a server reports this violation as.
+    pub fn code(&self) -> u16 {
+        match self {
+            WireError::BadVersion(_) => ERR_VERSION,
+            _ => ERR_PROTOCOL,
+        }
+    }
+}
+
+/// Why reading one frame off a stream stopped.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean end of stream on a frame boundary.
+    Eof,
+    /// Transport error (timeouts, resets).
+    Io(std::io::Error),
+    /// The bytes violate the frame grammar (includes mid-frame EOF).
+    Wire(WireError),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Eof => write!(f, "connection closed"),
+            ReadError::Io(e) => write!(f, "transport error: {e}"),
+            ReadError::Wire(e) => write!(f, "protocol error: {e}"),
+        }
+    }
+}
+
+/// The SoA step-view arrays of a [`Frame::Step`], same shapes as
+/// `serve::SessionView` restricted to the session's `n` leased slots
+/// (`obs` is `n * obs_floats`, `goal` is `n * 3`, the rest are `n`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StepFrame {
+    pub obs: Vec<f32>,
+    pub goal: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<bool>,
+    pub successes: Vec<bool>,
+    pub spl: Vec<f32>,
+    pub scores: Vec<f32>,
+}
+
+/// One protocol frame (see module docs for the grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server, first frame on every connection.
+    Hello,
+    /// Server → client, answers `Hello`.
+    Welcome { shards: u32 },
+    /// Client → server: lease `n_envs` slots of `task`. `req` correlates
+    /// the `Grant`/`Error` answer when leases are pipelined.
+    Lease { req: u64, task: Task, n_envs: u32 },
+    /// Server → client: the lease was granted. `slots` are the
+    /// shard-absolute env slot indices, in view order; `session` names
+    /// the lease in every later frame. An initial `Step` with the
+    /// current observations follows immediately.
+    Grant {
+        req: u64,
+        session: u64,
+        task: Task,
+        obs_floats: u32,
+        slots: Vec<u32>,
+    },
+    /// Client → server: buffer `action` for shard-absolute slot index
+    /// `slot`, for each pair. Bad indices are skipped server-side and
+    /// counted in the shard's `bad_submits` — they never panic the shard.
+    Submit { session: u64, pairs: Vec<(u32, u8)> },
+    /// Server → client: the session's slice of one completed batch step.
+    /// Exactly one per accepted `Submit`, plus one right after `Grant`.
+    Step {
+        session: u64,
+        step: u64,
+        obs_floats: u32,
+        view: StepFrame,
+    },
+    /// Client → server: release the lease.
+    Detach { session: u64 },
+    /// Server → client: the lease is released (answers `Detach`).
+    Detached { session: u64 },
+    /// Server → client: request- or connection-level failure. `re` is
+    /// the `req` or `session` it refers to (0 = the connection itself).
+    Error { re: u64, code: u16, msg: String },
+}
+
+impl Frame {
+    fn ftype(&self) -> u8 {
+        match self {
+            Frame::Hello => FT_HELLO,
+            Frame::Welcome { .. } => FT_WELCOME,
+            Frame::Lease { .. } => FT_LEASE,
+            Frame::Grant { .. } => FT_GRANT,
+            Frame::Submit { .. } => FT_SUBMIT,
+            Frame::Step { .. } => FT_STEP,
+            Frame::Detach { .. } => FT_DETACH,
+            Frame::Detached { .. } => FT_DETACHED,
+            Frame::Error { .. } => FT_ERROR,
+        }
+    }
+}
+
+fn task_to_wire(t: Task) -> u8 {
+    match t {
+        Task::PointNav => 0,
+        Task::Flee => 1,
+        Task::Explore => 2,
+    }
+}
+
+fn task_from_wire(b: u8) -> Result<Task, WireError> {
+    match b {
+        0 => Ok(Task::PointNav),
+        1 => Ok(Task::Flee),
+        2 => Ok(Task::Explore),
+        _ => Err(WireError::Malformed("unknown task")),
+    }
+}
+
+// ---- encoding ---------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+fn put_bools(out: &mut Vec<u8>, xs: &[bool]) {
+    out.extend(xs.iter().map(|&b| b as u8));
+}
+
+fn begin_frame(out: &mut Vec<u8>, ftype: u8) {
+    out.clear();
+    put_u16(out, MAGIC);
+    out.push(VERSION);
+    out.push(ftype);
+    put_u32(out, 0); // length, patched by finish_frame
+}
+
+fn finish_frame(out: &mut Vec<u8>) {
+    let len = (out.len() - HEADER_LEN) as u32;
+    out[4..8].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Borrowed step-view arrays for [`encode_step`] — the server's send
+/// path serializes straight from the session's slices instead of
+/// cloning them into an owned [`StepFrame`] first (the observation
+/// megaframe dominates wire traffic, so the extra copy would double
+/// the hot path's memory traffic). `StepFrame` remains the decode type.
+#[derive(Clone, Copy)]
+pub struct StepRef<'a> {
+    pub obs: &'a [f32],
+    pub goal: &'a [f32],
+    pub rewards: &'a [f32],
+    pub dones: &'a [bool],
+    pub successes: &'a [bool],
+    pub spl: &'a [f32],
+    pub scores: &'a [f32],
+}
+
+fn put_step_body(out: &mut Vec<u8>, session: u64, step: u64, obs_floats: u32, v: StepRef<'_>) {
+    put_u64(out, session);
+    put_u64(out, step);
+    put_u32(out, v.rewards.len() as u32);
+    put_u32(out, obs_floats);
+    put_f32s(out, v.obs);
+    put_f32s(out, v.goal);
+    put_f32s(out, v.rewards);
+    put_bools(out, v.dones);
+    put_bools(out, v.successes);
+    put_f32s(out, v.spl);
+    put_f32s(out, v.scores);
+}
+
+/// Serialize a `STEP` frame directly from borrowed slices into `out`
+/// (replacing its contents). Byte-identical to encoding the equivalent
+/// [`Frame::Step`] — asserted in the unit tests.
+pub fn encode_step(out: &mut Vec<u8>, session: u64, step: u64, obs_floats: u32, v: StepRef<'_>) {
+    begin_frame(out, FT_STEP);
+    put_step_body(out, session, step, obs_floats, v);
+    finish_frame(out);
+}
+
+/// Serialize `f` (header + payload) into `out`, replacing its contents.
+pub fn encode(f: &Frame, out: &mut Vec<u8>) {
+    begin_frame(out, f.ftype());
+    match f {
+        Frame::Hello => {}
+        Frame::Welcome { shards } => put_u32(out, *shards),
+        Frame::Lease { req, task, n_envs } => {
+            put_u64(out, *req);
+            out.push(task_to_wire(*task));
+            put_u32(out, *n_envs);
+        }
+        Frame::Grant {
+            req,
+            session,
+            task,
+            obs_floats,
+            slots,
+        } => {
+            put_u64(out, *req);
+            put_u64(out, *session);
+            out.push(task_to_wire(*task));
+            put_u32(out, *obs_floats);
+            put_u32(out, slots.len() as u32);
+            for &s in slots {
+                put_u32(out, s);
+            }
+        }
+        Frame::Submit { session, pairs } => {
+            put_u64(out, *session);
+            put_u32(out, pairs.len() as u32);
+            for &(slot, action) in pairs {
+                put_u32(out, slot);
+                out.push(action);
+            }
+        }
+        Frame::Step {
+            session,
+            step,
+            obs_floats,
+            view,
+        } => {
+            let v = StepRef {
+                obs: &view.obs,
+                goal: &view.goal,
+                rewards: &view.rewards,
+                dones: &view.dones,
+                successes: &view.successes,
+                spl: &view.spl,
+                scores: &view.scores,
+            };
+            put_step_body(out, *session, *step, *obs_floats, v);
+        }
+        Frame::Detach { session } => put_u64(out, *session),
+        Frame::Detached { session } => put_u64(out, *session),
+        Frame::Error { re, code, msg } => {
+            put_u64(out, *re);
+            put_u16(out, *code);
+            put_u32(out, msg.len() as u32);
+            out.extend_from_slice(msg.as_bytes());
+        }
+    }
+    finish_frame(out);
+}
+
+// ---- decoding ---------------------------------------------------------
+
+/// A validated frame header: the payload is `len` bytes of `ftype`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub ftype: u8,
+    pub len: usize,
+}
+
+/// Validate the fixed 8-byte header. All hostile-length/type/version
+/// checks happen here, before any payload allocation.
+pub fn decode_header(b: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
+    let magic = u16::from_le_bytes([b[0], b[1]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if b[2] != VERSION {
+        return Err(WireError::BadVersion(b[2]));
+    }
+    let ftype = b[3];
+    if !(FT_HELLO..=FT_ERROR).contains(&ftype) {
+        return Err(WireError::UnknownType(ftype));
+    }
+    let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+    if len as usize > MAX_FRAME {
+        return Err(WireError::Oversized(len));
+    }
+    Ok(Header {
+        ftype,
+        len: len as usize,
+    })
+}
+
+/// Bounds-checked payload reader: every `take` is validated against the
+/// remaining bytes, so count fields from the wire cannot over-read.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: u64) -> Result<&'a [u8], WireError> {
+        let rem = (self.b.len() - self.pos) as u64;
+        if n > rem {
+            return Err(WireError::Truncated);
+        }
+        let n = n as usize; // n <= rem <= MAX_FRAME, fits usize
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32s(&mut self, n: u64) -> Result<Vec<f32>, WireError> {
+        // checked: n can be a product of two wire u32s, so n*4 could wrap
+        let bytes = n.checked_mul(4).ok_or(WireError::Truncated)?;
+        let b = self.take(bytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn bools(&mut self, n: u64) -> Result<Vec<bool>, WireError> {
+        Ok(self.take(n)?.iter().map(|&b| b != 0).collect())
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes"))
+        }
+    }
+}
+
+/// Decode a payload whose header announced `ftype`.
+pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut r = Reader { b: payload, pos: 0 };
+    let f = match ftype {
+        FT_HELLO => Frame::Hello,
+        FT_WELCOME => Frame::Welcome { shards: r.u32()? },
+        FT_LEASE => Frame::Lease {
+            req: r.u64()?,
+            task: task_from_wire(r.u8()?)?,
+            n_envs: r.u32()?,
+        },
+        FT_GRANT => {
+            let req = r.u64()?;
+            let session = r.u64()?;
+            let task = task_from_wire(r.u8()?)?;
+            let obs_floats = r.u32()?;
+            let n = r.u32()? as u64;
+            let bytes = r.take(n * 4)?;
+            let slots = bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Frame::Grant {
+                req,
+                session,
+                task,
+                obs_floats,
+                slots,
+            }
+        }
+        FT_SUBMIT => {
+            let session = r.u64()?;
+            let n = r.u32()? as u64;
+            let bytes = r.take(n * 5)?;
+            let pairs = bytes
+                .chunks_exact(5)
+                .map(|c| (u32::from_le_bytes([c[0], c[1], c[2], c[3]]), c[4]))
+                .collect();
+            Frame::Submit { session, pairs }
+        }
+        FT_STEP => {
+            let session = r.u64()?;
+            let step = r.u64()?;
+            let n = r.u32()? as u64;
+            let obs_floats = r.u32()?;
+            let view = StepFrame {
+                obs: r.f32s(n * obs_floats as u64)?,
+                goal: r.f32s(n * 3)?,
+                rewards: r.f32s(n)?,
+                dones: r.bools(n)?,
+                successes: r.bools(n)?,
+                spl: r.f32s(n)?,
+                scores: r.f32s(n)?,
+            };
+            Frame::Step {
+                session,
+                step,
+                obs_floats,
+                view,
+            }
+        }
+        FT_DETACH => Frame::Detach { session: r.u64()? },
+        FT_DETACHED => Frame::Detached { session: r.u64()? },
+        FT_ERROR => {
+            let re = r.u64()?;
+            let code = r.u16()?;
+            let len = r.u32()? as u64;
+            let msg = String::from_utf8_lossy(r.take(len)?).into_owned();
+            Frame::Error { re, code, msg }
+        }
+        other => return Err(WireError::UnknownType(other)),
+    };
+    r.done()?;
+    Ok(f)
+}
+
+/// Most envs one wire session may lease. Derived from the frame caps:
+/// a session's `SUBMIT` (`12 + 5n` ≤ [`SUBMIT_CAP`]) and `GRANT`
+/// (`25 + 4n` ≤ [`GRANT_CAP`]) must stay encodable, and its `STEP`
+/// view must fit [`MAX_FRAME`] (also obs-size dependent — the server
+/// checks that at lease time). Both ends enforce this so an over-sized
+/// lease fails diagnosably instead of bricking the session on its
+/// first submit.
+pub const MAX_SESSION_ENVS: usize = 8192;
+
+/// Generous bound for the variable-length client→server `SUBMIT`
+/// payload (`12 + 5n` bytes — 64 KiB covers >13k slot/action pairs).
+const SUBMIT_CAP: usize = 64 << 10;
+/// Bound for the server→client `GRANT` payload (`25 + 4n` bytes).
+const GRANT_CAP: usize = 64 << 10;
+/// Bound for an `ERROR` payload (`14 + msg` bytes).
+const ERROR_CAP: usize = 16 << 10;
+
+/// Largest legal payload for `ftype` in one direction (`from_client` =
+/// the reader is a server). `None` means the type never flows that way.
+/// Checked against the header *before* the payload buffer is allocated:
+/// every client→server frame is small, so an unauthenticated peer
+/// cannot pin [`MAX_FRAME`]-sized allocations with an 8-byte header —
+/// only the server→client `STEP` direction legitimately carries
+/// megabytes (the observation megaframe).
+pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
+    match (ftype, from_client) {
+        (FT_HELLO, true) => Some(0),
+        (FT_LEASE, true) => Some(13),
+        (FT_SUBMIT, true) => Some(SUBMIT_CAP),
+        (FT_DETACH, true) => Some(8),
+        (FT_WELCOME, false) => Some(4),
+        (FT_GRANT, false) => Some(GRANT_CAP),
+        (FT_STEP, false) => Some(MAX_FRAME),
+        (FT_DETACHED, false) => Some(8),
+        (FT_ERROR, false) => Some(ERROR_CAP),
+        _ => None,
+    }
+}
+
+/// Read exactly one frame off a blocking stream. Distinguishes a clean
+/// close on a frame boundary ([`ReadError::Eof`]) from a mid-frame close
+/// ([`WireError::Truncated`]) so the server can count the latter as a
+/// protocol violation. Applies only the generic [`MAX_FRAME`] bound —
+/// endpoints should prefer [`read_frame_dir`], which also enforces the
+/// per-type, per-direction payload caps.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, ReadError> {
+    read_frame_capped(r, |_| Some(MAX_FRAME))
+}
+
+/// [`read_frame`] with the direction-aware payload caps of
+/// [`payload_cap`]: wrong-direction frames and oversized-for-their-type
+/// length fields are rejected from the header alone, allocation-free.
+pub fn read_frame_dir(r: &mut impl Read, from_client: bool) -> Result<Frame, ReadError> {
+    read_frame_capped(r, |ftype| payload_cap(ftype, from_client))
+}
+
+fn read_frame_capped(
+    r: &mut impl Read,
+    cap: impl Fn(u8) -> Option<usize>,
+) -> Result<Frame, ReadError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    read_fully(r, &mut hdr, true)?;
+    let h = decode_header(&hdr).map_err(ReadError::Wire)?;
+    match cap(h.ftype) {
+        None => {
+            return Err(ReadError::Wire(WireError::Malformed(
+                "frame type not allowed in this direction",
+            )))
+        }
+        Some(limit) if h.len > limit => {
+            return Err(ReadError::Wire(WireError::Oversized(h.len as u32)))
+        }
+        Some(_) => {}
+    }
+    let mut payload = vec![0u8; h.len];
+    read_fully(r, &mut payload, false)?;
+    decode_payload(h.ftype, &payload).map_err(ReadError::Wire)
+}
+
+/// Fill `buf` from the stream. `at_boundary` marks the read as starting
+/// on a frame boundary, where 0 bytes is a clean close rather than a
+/// truncated frame.
+fn read_fully(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> Result<(), ReadError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if at_boundary && got == 0 {
+                    ReadError::Eof
+                } else {
+                    ReadError::Wire(WireError::Truncated)
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Serialize and write one frame.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + 64);
+    encode(f, &mut buf);
+    w.write_all(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        encode(&f, &mut buf);
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&buf[..HEADER_LEN]);
+        let h = decode_header(&hdr).unwrap();
+        assert_eq!(h.len, buf.len() - HEADER_LEN, "length prefix");
+        let out = decode_payload(h.ftype, &buf[HEADER_LEN..]).unwrap();
+        assert_eq!(out, f);
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        roundtrip(Frame::Hello);
+        roundtrip(Frame::Welcome { shards: 3 });
+        roundtrip(Frame::Lease {
+            req: 7,
+            task: Task::Flee,
+            n_envs: 16,
+        });
+        roundtrip(Frame::Grant {
+            req: 7,
+            session: 42,
+            task: Task::PointNav,
+            obs_floats: 400,
+            slots: vec![0, 1, 5, 9],
+        });
+        roundtrip(Frame::Submit {
+            session: 42,
+            pairs: vec![(0, 1), (5, 3), (u32::MAX, 0)],
+        });
+        roundtrip(Frame::Step {
+            session: 42,
+            step: 99,
+            obs_floats: 2,
+            view: StepFrame {
+                obs: vec![0.25, -1.5, f32::MIN_POSITIVE, 3.0],
+                goal: vec![1.0; 6],
+                rewards: vec![-0.01, 2.5],
+                dones: vec![true, false],
+                successes: vec![false, true],
+                spl: vec![0.0, 0.9],
+                scores: vec![1.0, 0.0],
+            },
+        });
+        roundtrip(Frame::Detach { session: 42 });
+        roundtrip(Frame::Detached { session: 42 });
+        roundtrip(Frame::Error {
+            re: 42,
+            code: ERR_LEASE,
+            msg: "no capacity".into(),
+        });
+    }
+
+    /// The zero-copy server send path must emit exactly the bytes the
+    /// general encoder would.
+    #[test]
+    fn encode_step_matches_frame_encode() {
+        let view = StepFrame {
+            obs: vec![0.5, -2.0, 3.25, 0.0],
+            goal: vec![1.0; 6],
+            rewards: vec![0.1, -0.2],
+            dones: vec![true, false],
+            successes: vec![false, true],
+            spl: vec![0.9, 0.0],
+            scores: vec![0.0, 7.5],
+        };
+        let f = Frame::Step {
+            session: 11,
+            step: 42,
+            obs_floats: 2,
+            view: view.clone(),
+        };
+        let mut via_frame = Vec::new();
+        encode(&f, &mut via_frame);
+        let mut direct = Vec::new();
+        encode_step(
+            &mut direct,
+            11,
+            42,
+            2,
+            StepRef {
+                obs: &view.obs,
+                goal: &view.goal,
+                rewards: &view.rewards,
+                dones: &view.dones,
+                successes: &view.successes,
+                spl: &view.spl,
+                scores: &view.scores,
+            },
+        );
+        assert_eq!(via_frame, direct);
+    }
+
+    #[test]
+    fn observation_bits_survive_the_wire() {
+        // exact IEEE bit patterns, including negative zero and subnormals
+        let xs = [0.0f32, -0.0, 1.0e-42, f32::MAX, -f32::MIN_POSITIVE];
+        let f = Frame::Step {
+            session: 1,
+            step: 1,
+            obs_floats: xs.len() as u32,
+            view: StepFrame {
+                obs: xs.to_vec(),
+                goal: vec![0.0; 3],
+                rewards: vec![0.0],
+                dones: vec![false],
+                successes: vec![false],
+                spl: vec![0.0],
+                scores: vec![0.0],
+            },
+        };
+        let mut buf = Vec::new();
+        encode(&f, &mut buf);
+        let out = decode_payload(FT_STEP, &buf[HEADER_LEN..]).unwrap();
+        if let Frame::Step { view, .. } = out {
+            for (a, b) in xs.iter().zip(&view.obs) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        } else {
+            panic!("wrong frame type");
+        }
+    }
+
+    #[test]
+    fn hostile_headers_rejected_before_allocation() {
+        // bad magic
+        let h = [0xFFu8, 0xFF, VERSION, FT_HELLO, 0, 0, 0, 0];
+        assert_eq!(decode_header(&h), Err(WireError::BadMagic));
+        // wrong version
+        let m = MAGIC.to_le_bytes();
+        let h = [m[0], m[1], 99, FT_HELLO, 0, 0, 0, 0];
+        assert_eq!(decode_header(&h), Err(WireError::BadVersion(99)));
+        // unknown type
+        let h = [m[0], m[1], VERSION, 0xEE, 0, 0, 0, 0];
+        assert_eq!(decode_header(&h), Err(WireError::UnknownType(0xEE)));
+        // oversized length field
+        let h = [m[0], m[1], VERSION, FT_STEP, 0xFF, 0xFF, 0xFF, 0xFF];
+        assert_eq!(decode_header(&h), Err(WireError::Oversized(u32::MAX)));
+    }
+
+    #[test]
+    fn hostile_payloads_rejected_without_panic() {
+        // truncated: LEASE needs 13 bytes
+        assert_eq!(
+            decode_payload(FT_LEASE, &[0u8; 4]),
+            Err(WireError::Truncated)
+        );
+        // count field larger than the payload it announces
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Submit {
+                session: 1,
+                pairs: vec![(0, 1)],
+            },
+            &mut buf,
+        );
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[8..12].copy_from_slice(&u32::MAX.to_le_bytes()); // pairs count
+        assert_eq!(decode_payload(FT_SUBMIT, &payload), Err(WireError::Truncated));
+        // trailing garbage after a valid body
+        let mut buf = Vec::new();
+        encode(&Frame::Detach { session: 9 }, &mut buf);
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload.push(0xAB);
+        assert_eq!(
+            decode_payload(FT_DETACH, &payload),
+            Err(WireError::Malformed("trailing bytes"))
+        );
+        // unknown task byte
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Lease {
+                req: 1,
+                task: Task::PointNav,
+                n_envs: 1,
+            },
+            &mut buf,
+        );
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[8] = 77;
+        assert_eq!(
+            decode_payload(FT_LEASE, &payload),
+            Err(WireError::Malformed("unknown task"))
+        );
+    }
+
+    /// Direction-aware reads reject wrong-direction and
+    /// oversized-for-their-type frames from the header alone.
+    #[test]
+    fn direction_caps_reject_before_allocation() {
+        use std::io::Cursor;
+        // a "STEP" aimed at the server: legal type, wrong direction —
+        // the 32 MiB length must never be allocated
+        let m = MAGIC.to_le_bytes();
+        let mut hdr = vec![m[0], m[1], VERSION, FT_STEP];
+        hdr.extend_from_slice(&((32u32 << 20).to_le_bytes()));
+        match read_frame_dir(&mut Cursor::new(hdr), true) {
+            Err(ReadError::Wire(WireError::Malformed(_))) => {}
+            other => panic!("want direction rejection, got {other:?}"),
+        }
+        // a SUBMIT whose length field exceeds the per-type cap
+        let mut hdr = vec![m[0], m[1], VERSION, FT_SUBMIT];
+        hdr.extend_from_slice(&((1u32 << 20).to_le_bytes()));
+        match read_frame_dir(&mut Cursor::new(hdr), true) {
+            Err(ReadError::Wire(WireError::Oversized(_))) => {}
+            other => panic!("want per-type oversize rejection, got {other:?}"),
+        }
+        // every legitimate direction still round-trips
+        let mut buf = Vec::new();
+        encode(
+            &Frame::Lease {
+                req: 1,
+                task: Task::PointNav,
+                n_envs: 4,
+            },
+            &mut buf,
+        );
+        assert!(read_frame_dir(&mut Cursor::new(buf), true).is_ok());
+        let mut buf = Vec::new();
+        encode(&Frame::Welcome { shards: 2 }, &mut buf);
+        assert!(read_frame_dir(&mut Cursor::new(buf), false).is_ok());
+        // and the caps agree with what encode actually produces
+        assert_eq!(payload_cap(FT_HELLO, true), Some(0));
+        assert_eq!(payload_cap(FT_LEASE, true), Some(13));
+        assert_eq!(payload_cap(FT_DETACH, true), Some(8));
+        assert_eq!(payload_cap(FT_STEP, true), None);
+        assert_eq!(payload_cap(FT_SUBMIT, false), None);
+    }
+
+    #[test]
+    fn read_frame_distinguishes_clean_close_from_truncation() {
+        use std::io::Cursor;
+        // empty stream: clean EOF
+        match read_frame(&mut Cursor::new(Vec::<u8>::new())) {
+            Err(ReadError::Eof) => {}
+            other => panic!("want Eof, got {other:?}"),
+        }
+        // half a header: truncated
+        let mut buf = Vec::new();
+        encode(&Frame::Hello, &mut buf);
+        match read_frame(&mut Cursor::new(buf[..4].to_vec())) {
+            Err(ReadError::Wire(WireError::Truncated)) => {}
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        // header announcing more payload than the stream carries
+        let mut buf = Vec::new();
+        encode(&Frame::Welcome { shards: 1 }, &mut buf);
+        match read_frame(&mut Cursor::new(buf[..HEADER_LEN + 2].to_vec())) {
+            Err(ReadError::Wire(WireError::Truncated)) => {}
+            other => panic!("want Truncated, got {other:?}"),
+        }
+        // a full frame reads back
+        match read_frame(&mut Cursor::new(buf)) {
+            Ok(Frame::Welcome { shards: 1 }) => {}
+            other => panic!("want Welcome, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Wire transport for the serve layer: remote sessions over TCP.
+//!
+//! The in-process session API (`SimServer::connect → Session`) is
+//! deliberately transport-agnostic; this module is the first transport
+//! in front of it — a dependency-free, length-prefixed binary protocol
+//! (see [`frame`] and DESIGN.md §0.8) carried over blocking TCP:
+//!
+//! ```text
+//!  client process                     server process
+//!  RemoteSession::submit ──SUBMIT──►  reader thread ──► session pump
+//!       │                                                │ Session::submit_at
+//!       │                                                ▼
+//!       │                                       Coalescer / shard driver
+//!       │                                                │ one batch step
+//!  RemoteTicket::wait  ◄──STEP─────  outbox ◄── pump ◄───┘  for all tenants
+//! ```
+//!
+//! [`WireServer::listen`] serves an existing
+//! [`SimServer`](crate::serve::SimServer); [`RemoteClient::connect`] /
+//! [`RemoteClient::open_session`] give remote processes the exact
+//! `submit → wait → view` shape of the in-process `Session`, with
+//! bitwise-identical observation streams (`rust/tests/serve_remote.rs`).
+//! The paper's whole-batch amortization is preserved because remote
+//! submissions still coalesce into single shard steps — the wire layer
+//! adds tenants, not step paths.
+//!
+//! `bps serve --listen ADDR` and `bps connect ADDR` drive both ends from
+//! the CLI; `benches/bench_serve.rs` measures loopback-vs-direct
+//! overhead.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{RemoteClient, RemoteSession, RemoteTicket};
+pub use server::{ConnStats, WireConfig, WireServer};

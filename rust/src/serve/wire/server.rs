@@ -1,0 +1,769 @@
+//! [`WireServer`]: the blocking TCP front-end that puts a
+//! [`SimServer`](crate::serve::SimServer) on the network.
+//!
+//! One accept thread hands each connection to a dedicated **reader
+//! thread** that parses frames off the socket and a **writer thread**
+//! that drains a bounded outbox onto it; every granted lease gets a
+//! **session pump** thread that owns the in-process
+//! [`Session`](crate::serve::Session) and turns `Submit` frames into
+//! `submit_at → wait → Step` cycles. A single socket therefore
+//! multiplexes any number of sessions: the reader routes `Submit` /
+//! `Detach` frames to pumps by wire session id, and all server→client
+//! frames (grants, step views, errors) funnel through the one outbox so
+//! the socket is written from exactly one thread.
+//!
+//! **Backpressure / slow readers.** The outbox is a bounded channel
+//! ([`WireConfig::outbox_frames`]). A client that stops draining its
+//! socket eventually fills it; the next frame *disconnects* the
+//! connection instead of blocking a shard's pump behind one slow peer
+//! (`dropped_slow` in the [`ConnStats`] row). Inbound is bounded too:
+//! each session's submit queue holds at most
+//! [`WireConfig::inbox_submits`], and a peer flooding submits faster
+//! than the shard steps is likewise disconnected. Disconnect — slow,
+//! flooding, hostile, or crashed — detaches the connection's sessions,
+//! so their slots fall back to the auto-reset filler and co-tenants
+//! keep stepping.
+//!
+//! **Hostile input.** Frame validation happens before allocation (see
+//! [`frame`](super::frame)); a malformed frame earns a best-effort error
+//! frame and a closed connection, counted in `bad_frames`. Slot indices
+//! inside well-formed `Submit` frames are untrusted too — the coalescer
+//! bounds-checks them (shard `bad_submits` stat) rather than indexing
+//! blindly while holding the shard mutex. One caveat is inherited from
+//! the in-process layer: on a `StragglerPolicy::Wait` shard, a tenant
+//! that leases slots and then never submits stalls its co-tenants —
+//! serve open traffic with a `Deadline` policy, which also guarantees
+//! pump threads cannot block forever on a vanished peer's last step.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::session::{Session, SessionView};
+use crate::serve::SimServer;
+
+use super::frame::{
+    self, Frame, ReadError, StepRef, ERR_LEASE, ERR_PROTOCOL, ERR_SESSION, ERR_SHARD, ERR_SUBMIT,
+};
+
+/// Wire front-end knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WireConfig {
+    /// Server→client frames buffered per connection before the
+    /// slow-reader disconnect policy fires.
+    pub outbox_frames: usize,
+    /// Client→server submits buffered per *session* before the flood
+    /// policy disconnects the connection. A well-behaved client
+    /// pipelines one or two submits; without this bound a peer writing
+    /// submits faster than the shard steps would grow server memory at
+    /// line rate.
+    pub inbox_submits: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig {
+            outbox_frames: 256,
+            inbox_submits: 64,
+        }
+    }
+}
+
+/// Point-in-time counters for one connection (alive or closed); closed
+/// rows are kept for post-mortems up to a retention cap, then pruned
+/// oldest-first ([`WireServer::conn_stats`]).
+#[derive(Clone, Debug)]
+pub struct ConnStats {
+    pub id: u64,
+    pub peer: String,
+    /// Sessions currently leased through this connection.
+    pub sessions_open: u64,
+    /// Sessions ever granted on this connection, cumulative.
+    pub sessions_opened: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Frame-grammar violations received from this peer.
+    pub bad_frames: u64,
+    /// True when the slow-reader policy disconnected the peer.
+    pub dropped_slow: bool,
+    pub closed: bool,
+}
+
+/// Shared per-connection state (stats + the shutdown handle).
+struct ConnShared {
+    id: u64,
+    peer: String,
+    /// A clone of the connection socket kept for `close`: shutting it
+    /// down unblocks the reader and writer wherever they are. Taken
+    /// (freeing the fd) on close — stats rows outlive the connection,
+    /// and must not pin a descriptor each.
+    stream: Mutex<Option<TcpStream>>,
+    frames_in: AtomicU64,
+    bytes_in: AtomicU64,
+    frames_out: AtomicU64,
+    bytes_out: AtomicU64,
+    bad_frames: AtomicU64,
+    sessions_open: AtomicU64,
+    sessions_opened: AtomicU64,
+    dropped_slow: AtomicBool,
+    closed: AtomicBool,
+}
+
+impl ConnShared {
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        // shutdown() reaches the reader's and writer's clones through
+        // the shared socket; dropping the handle then frees this fd.
+        if let Some(s) = self.stream.lock().unwrap().take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn stats(&self) -> ConnStats {
+        ConnStats {
+            id: self.id,
+            peer: self.peer.clone(),
+            sessions_open: self.sessions_open.load(Ordering::Relaxed),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            dropped_slow: self.dropped_slow.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct WireShared {
+    sim: Arc<SimServer>,
+    cfg: WireConfig,
+    conns: Mutex<Vec<Arc<ConnShared>>>,
+    next_conn: AtomicU64,
+    next_session: AtomicU64,
+    shutting_down: AtomicBool,
+}
+
+/// Closed connections whose stats rows are kept for post-mortems; older
+/// closed rows are pruned so a churny long-running server doesn't grow
+/// (open connections are never pruned).
+const RETAINED_CLOSED_CONNS: usize = 256;
+
+/// The TCP front-end (see module docs). Dropping it stops accepting,
+/// closes every connection, and thereby detaches all remote sessions.
+pub struct WireServer {
+    shared: Arc<WireShared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7447"`, port 0 for ephemeral) and
+    /// serve `sim` with the default [`WireConfig`].
+    pub fn listen(addr: &str, sim: Arc<SimServer>) -> Result<WireServer> {
+        WireServer::listen_with(addr, sim, WireConfig::default())
+    }
+
+    /// [`listen`](WireServer::listen) with explicit backpressure knobs.
+    pub fn listen_with(addr: &str, sim: Arc<SimServer>, cfg: WireConfig) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        // Nonblocking accept + poll: shutdown must never depend on one
+        // more connection arriving (a blocked accept has no other
+        // reliable wake-up path).
+        listener
+            .set_nonblocking(true)
+            .context("listener nonblocking")?;
+        let local = listener.local_addr().context("local_addr")?;
+        let shared = Arc::new(WireShared {
+            sim,
+            cfg,
+            conns: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            next_session: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+        });
+        let for_accept = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("bps-wire-accept".into())
+            .spawn(move || accept_loop(listener, for_accept))
+            .context("spawn accept thread")?;
+        Ok(WireServer {
+            shared,
+            addr: local,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stats rows for every open connection plus the most recent closed
+    /// ones (older closed rows are pruned past a retention cap) — the
+    /// wire-level counterpart of `SimServer::stats`.
+    pub fn conn_stats(&self) -> Vec<ConnStats> {
+        self.shared
+            .conns
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| c.stats())
+            .collect()
+    }
+
+    /// Connections accepted over the server's lifetime (not subject to
+    /// the closed-row pruning, so "has anyone ever connected" checks —
+    /// e.g. `bps serve --once` — stay exact).
+    pub fn accepted(&self) -> u64 {
+        self.shared.next_conn.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        // The accept loop polls the flag (nonblocking listener), so the
+        // join is bounded by one poll interval.
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for c in self.shared.conns.lock().unwrap().iter() {
+            c.close();
+        }
+    }
+}
+
+/// How often the (nonblocking) accept loop re-checks for connections
+/// and the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
+    loop {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            // WouldBlock (no pending connection) or a transient error:
+            // sleep one poll interval and re-check the shutdown flag.
+            Err(_) => {
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+        };
+        // Accepted sockets can inherit the listener's nonblocking mode
+        // on some platforms; the per-connection threads use blocking IO.
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        // One clone for the shutdown handle, one for the writer; the
+        // reader owns the original.
+        let (shutdown_handle, writer_stream) = match (stream.try_clone(), stream.try_clone()) {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => continue,
+        };
+        let id = shared.next_conn.fetch_add(1, Ordering::Relaxed) + 1;
+        let conn = Arc::new(ConnShared {
+            id,
+            peer: peer.to_string(),
+            stream: Mutex::new(Some(shutdown_handle)),
+            frames_in: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            bad_frames: AtomicU64::new(0),
+            sessions_open: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            dropped_slow: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+        });
+        {
+            let mut conns = shared.conns.lock().unwrap();
+            // prune the oldest closed rows past the retention cap
+            let closed = conns
+                .iter()
+                .filter(|c| c.closed.load(Ordering::Relaxed))
+                .count();
+            if closed > RETAINED_CLOSED_CONNS {
+                let mut to_drop = closed - RETAINED_CLOSED_CONNS;
+                conns.retain(|c| {
+                    if to_drop > 0 && c.closed.load(Ordering::Relaxed) {
+                        to_drop -= 1;
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            conns.push(Arc::clone(&conn));
+        }
+        let (outbox_tx, outbox_rx) = sync_channel::<Vec<u8>>(shared.cfg.outbox_frames);
+        let writer_conn = Arc::clone(&conn);
+        let writer = std::thread::Builder::new()
+            .name("bps-wire-writer".into())
+            .spawn(move || writer_loop(writer_stream, outbox_rx, writer_conn));
+        if writer.is_err() {
+            conn.close();
+            continue;
+        }
+        let reader_shared = Arc::clone(&shared);
+        let reader_conn = Arc::clone(&conn);
+        let reader = std::thread::Builder::new()
+            .name("bps-wire-conn".into())
+            .spawn(move || reader_loop(stream, outbox_tx, reader_conn, reader_shared));
+        if reader.is_err() {
+            // writer exits once the outbox sender is gone
+            conn.close();
+        }
+    }
+}
+
+/// Drain the outbox onto the socket. The periodic timeout lets the
+/// writer notice a closed connection even while pumps still hold
+/// outbox senders (e.g. blocked on an in-flight step).
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShared>) {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(500)) {
+            Ok(buf) => {
+                if std::io::Write::write_all(&mut stream, &buf).is_err() {
+                    conn.close();
+                    return;
+                }
+                conn.frames_out.fetch_add(1, Ordering::Relaxed);
+                conn.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if conn.closed.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Push an already-encoded frame into the connection's bounded outbox.
+/// `false` means the connection is gone — either it already closed, or
+/// it just earned a slow-reader disconnect because the outbox is full.
+fn enqueue_buf(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, buf: Vec<u8>) -> bool {
+    match outbox.try_send(buf) {
+        Ok(()) => true,
+        Err(TrySendError::Full(_)) => {
+            conn.dropped_slow.store(true, Ordering::Relaxed);
+            conn.close();
+            false
+        }
+        Err(TrySendError::Disconnected(_)) => false,
+    }
+}
+
+/// Serialize `f` into the connection's bounded outbox (see
+/// [`enqueue_buf`] for the return contract).
+fn enqueue(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, f: &Frame) -> bool {
+    let mut buf = Vec::new();
+    frame::encode(f, &mut buf);
+    enqueue_buf(conn, outbox, buf)
+}
+
+/// Serialize a session's step view straight into the outbox — the wire
+/// hot path: the observation megaframe is copied exactly once, from the
+/// session's slices into the frame bytes (no intermediate owned view).
+fn enqueue_step(
+    conn: &ConnShared,
+    outbox: &SyncSender<Vec<u8>>,
+    wire_id: u64,
+    obs_floats: usize,
+    v: SessionView<'_>,
+) -> bool {
+    let mut buf = Vec::new();
+    frame::encode_step(
+        &mut buf,
+        wire_id,
+        v.step,
+        obs_floats as u32,
+        StepRef {
+            obs: v.obs,
+            goal: v.goal,
+            rewards: v.rewards,
+            dones: v.dones,
+            successes: v.successes,
+            spl: v.spl,
+            scores: v.scores,
+        },
+    );
+    enqueue_buf(conn, outbox, buf)
+}
+
+/// Byte-counting shim over the connection socket for `frame::read_frame`.
+struct Metered<'a> {
+    s: &'a TcpStream,
+    bytes: &'a AtomicU64,
+}
+
+impl Read for Metered<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut s = self.s;
+        let n = s.read(buf)?;
+        self.bytes.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+enum PumpMsg {
+    Submit(Vec<(u32, u8)>),
+    Detach,
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    outbox: SyncSender<Vec<u8>>,
+    conn: Arc<ConnShared>,
+    shared: Arc<WireShared>,
+) {
+    let mut sessions: HashMap<u64, SyncSender<PumpMsg>> = HashMap::new();
+    let mut greeted = false;
+    let mut metered = Metered {
+        s: &stream,
+        bytes: &conn.bytes_in,
+    };
+    loop {
+        // Direction-aware read: client→server frames are all small, so
+        // a hostile length field cannot make this end allocate big.
+        let f = match frame::read_frame_dir(&mut metered, true) {
+            Ok(f) => f,
+            Err(ReadError::Eof) | Err(ReadError::Io(_)) => break,
+            Err(ReadError::Wire(e)) => {
+                // Malformed traffic: courtesy error frame, then hang up.
+                conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+                let _ = enqueue(
+                    &conn,
+                    &outbox,
+                    &Frame::Error {
+                        re: 0,
+                        code: e.code(),
+                        msg: e.to_string(),
+                    },
+                );
+                break;
+            }
+        };
+        conn.frames_in.fetch_add(1, Ordering::Relaxed);
+        if !greeted && !matches!(&f, Frame::Hello) {
+            conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+            let _ = enqueue(
+                &conn,
+                &outbox,
+                &Frame::Error {
+                    re: 0,
+                    code: ERR_PROTOCOL,
+                    msg: "expected HELLO".into(),
+                },
+            );
+            break;
+        }
+        match f {
+            Frame::Hello => {
+                if greeted {
+                    conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+                    let _ = enqueue(
+                        &conn,
+                        &outbox,
+                        &Frame::Error {
+                            re: 0,
+                            code: ERR_PROTOCOL,
+                            msg: "duplicate HELLO".into(),
+                        },
+                    );
+                    break;
+                }
+                greeted = true;
+                let welcome = Frame::Welcome {
+                    shards: shared.sim.num_shards() as u32,
+                };
+                if !enqueue(&conn, &outbox, &welcome) {
+                    break;
+                }
+            }
+            Frame::Lease { req, task, n_envs } => {
+                match shared.sim.connect(task, n_envs as usize) {
+                    Ok(session) => {
+                        // Wire-level size guard: the session's submit,
+                        // grant, and step frames must all fit the
+                        // per-type caps, or every later exchange would
+                        // be rejected as hostile — fail the lease now,
+                        // diagnosably, instead.
+                        let n = session.num_envs();
+                        let step_bytes = 24 + n * (4 * session.obs_floats() + 26);
+                        if n > frame::MAX_SESSION_ENVS || step_bytes > frame::MAX_FRAME {
+                            drop(session); // releases the lease
+                            let err = Frame::Error {
+                                re: req,
+                                code: ERR_LEASE,
+                                msg: format!(
+                                    "lease of {n} envs exceeds the wire transport's \
+                                     frame caps (max {} envs and a {} MiB step view)",
+                                    frame::MAX_SESSION_ENVS,
+                                    frame::MAX_FRAME >> 20
+                                ),
+                            };
+                            if !enqueue(&conn, &outbox, &err) {
+                                break;
+                            }
+                            continue;
+                        }
+                        let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                        let (tx, rx) = sync_channel(shared.cfg.inbox_submits.max(1));
+                        conn.sessions_open.fetch_add(1, Ordering::Relaxed);
+                        conn.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                        let ctx = PumpCtx {
+                            session,
+                            rx,
+                            conn: Arc::clone(&conn),
+                            outbox: outbox.clone(),
+                            wire_id,
+                            req,
+                        };
+                        let spawned = std::thread::Builder::new()
+                            .name("bps-wire-session".into())
+                            .spawn(move || session_pump(ctx));
+                        match spawned {
+                            Ok(_) => {
+                                sessions.insert(wire_id, tx);
+                            }
+                            Err(e) => {
+                                // ctx (and the lease) died with the failed
+                                // spawn; tell the client
+                                conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                                if !enqueue(
+                                    &conn,
+                                    &outbox,
+                                    &Frame::Error {
+                                        re: req,
+                                        code: ERR_LEASE,
+                                        msg: format!("spawn session pump: {e}"),
+                                    },
+                                ) {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: req,
+                                code: ERR_LEASE,
+                                msg: format!("{e:#}"),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
+            Frame::Submit { session, pairs } => {
+                let outcome = match sessions.get(&session) {
+                    Some(tx) => tx.try_send(PumpMsg::Submit(pairs)),
+                    None => Err(TrySendError::Disconnected(PumpMsg::Detach)),
+                };
+                match outcome {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // Flood policy, mirror of the outbox bound: a
+                        // peer pipelining submits faster than the shard
+                        // steps is disconnected before it can grow the
+                        // queue at line rate.
+                        let _ = enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_PROTOCOL,
+                                msg: "submit pipeline overflow".into(),
+                            },
+                        );
+                        break;
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        sessions.remove(&session);
+                        // Well-formed frame, dead or unknown session id:
+                        // report and keep the connection — other
+                        // sessions on it are healthy.
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_SESSION,
+                                msg: "unknown session".into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
+            Frame::Detach { session } => {
+                let sent = match sessions.remove(&session) {
+                    // Full can only mean the peer flooded the inbox and
+                    // now wants out; teardown below detaches anyway.
+                    Some(tx) => match tx.try_send(PumpMsg::Detach) {
+                        Ok(()) => true,
+                        Err(TrySendError::Full(_)) => break,
+                        Err(TrySendError::Disconnected(_)) => false,
+                    },
+                    None => false,
+                };
+                if !sent
+                    && !enqueue(
+                        &conn,
+                        &outbox,
+                        &Frame::Error {
+                            re: session,
+                            code: ERR_SESSION,
+                            msg: "unknown session".into(),
+                        },
+                    )
+                {
+                    break;
+                }
+            }
+            Frame::Welcome { .. }
+            | Frame::Grant { .. }
+            | Frame::Step { .. }
+            | Frame::Detached { .. }
+            | Frame::Error { .. } => {
+                conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+                let _ = enqueue(
+                    &conn,
+                    &outbox,
+                    &Frame::Error {
+                        re: 0,
+                        code: ERR_PROTOCOL,
+                        msg: "client sent a server-only frame".into(),
+                    },
+                );
+                break;
+            }
+        }
+    }
+    // Dropping the pump senders detaches every session this connection
+    // leased; their slots fall back to the auto-reset filler.
+    drop(sessions);
+    conn.close();
+}
+
+struct PumpCtx {
+    session: Session,
+    rx: Receiver<PumpMsg>,
+    conn: Arc<ConnShared>,
+    outbox: SyncSender<Vec<u8>>,
+    wire_id: u64,
+    req: u64,
+}
+
+/// Owns one remote session server-side: grants the lease, then turns
+/// each routed `Submit` into a `submit_at → wait → Step` cycle. Exits —
+/// detaching the session — when the client detaches, the connection
+/// dies, or the shard fails.
+fn session_pump(ctx: PumpCtx) {
+    let PumpCtx {
+        mut session,
+        rx,
+        conn,
+        outbox,
+        wire_id,
+        req,
+    } = ctx;
+    let of = session.obs_floats();
+    let grant = Frame::Grant {
+        req,
+        session: wire_id,
+        task: session.task(),
+        obs_floats: of as u32,
+        slots: session.slots().iter().map(|&s| s as u32).collect(),
+    };
+    // Grant, then seed the client's buffers with the latest published
+    // step so its `view()` works before the first submit.
+    let mut alive = enqueue(&conn, &outbox, &grant)
+        && enqueue_step(&conn, &outbox, wire_id, of, session.view());
+    let mut clean_detach = false;
+    while alive {
+        match rx.recv() {
+            Ok(PumpMsg::Submit(pairs)) => {
+                let slots: Vec<usize> = pairs.iter().map(|&(s, _)| s as usize).collect();
+                let actions: Vec<u8> = pairs.iter().map(|&(_, a)| a).collect();
+                match session.submit_at(&slots, &actions) {
+                    Ok((0, _ticket)) => {
+                        // Nothing was buffered (every slot index was bad):
+                        // waiting could hang forever, so report instead.
+                        alive = enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: wire_id,
+                                code: ERR_SUBMIT,
+                                msg: "no acceptable slots in submit".into(),
+                            },
+                        );
+                    }
+                    Ok((_accepted, ticket)) => match ticket.wait() {
+                        Ok(v) => {
+                            alive = enqueue_step(&conn, &outbox, wire_id, of, v);
+                        }
+                        Err(e) => {
+                            let _ = enqueue(
+                                &conn,
+                                &outbox,
+                                &Frame::Error {
+                                    re: wire_id,
+                                    code: ERR_SHARD,
+                                    msg: format!("{e:#}"),
+                                },
+                            );
+                            alive = false;
+                        }
+                    },
+                    Err(e) => {
+                        let _ = enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: wire_id,
+                                code: ERR_SHARD,
+                                msg: format!("{e:#}"),
+                            },
+                        );
+                        alive = false;
+                    }
+                }
+            }
+            Ok(PumpMsg::Detach) => {
+                clean_detach = true;
+                break;
+            }
+            Err(_) => break, // connection reader is gone
+        }
+    }
+    session.detach();
+    if clean_detach {
+        // Acked *after* the release, so a client that waits for this can
+        // immediately re-lease the freed slots.
+        let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
+    }
+    conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+}

@@ -1,8 +1,10 @@
 //! Tiny argv parser for the CLI (no `clap` in the offline vendor set).
 //!
-//! Grammar: `bps <subcommand> [--key value | --key=value | --flag] ...`.
-//! Typed getters consume recognized options; `finish()` errors on leftovers
-//! so typos are caught instead of silently ignored.
+//! Grammar: `bps <subcommand> [operand ...] [--key value | --key=value |
+//! --flag] ...`. Positional operands after the subcommand (e.g. the
+//! address in `bps connect 127.0.0.1:7447`) are consumed in order via
+//! `operand()`. Typed getters consume recognized options; `finish()`
+//! errors on leftovers so typos are caught instead of silently ignored.
 
 use std::collections::BTreeMap;
 
@@ -11,6 +13,7 @@ use anyhow::{anyhow, bail, Result};
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    operands: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
@@ -33,7 +36,7 @@ impl Args {
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(a.clone());
             } else {
-                bail!("unexpected positional argument {a:?}");
+                out.operands.push(a.clone());
             }
             i += 1;
         }
@@ -43,6 +46,15 @@ impl Args {
     pub fn from_env() -> Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv)
+    }
+
+    /// Consume the next positional operand (in argv order).
+    pub fn operand(&mut self) -> Option<String> {
+        if self.operands.is_empty() {
+            None
+        } else {
+            Some(self.operands.remove(0))
+        }
     }
 
     /// Consume a string option.
@@ -86,23 +98,47 @@ impl Args {
         }
     }
 
-    /// Consume a boolean flag (`--verbose`).
-    pub fn flag(&mut self, name: &str) -> bool {
+    /// Consume a boolean flag (`--verbose`; explicit `--verbose=true` /
+    /// `=false` also accepted). A flag followed by a bare token parses
+    /// as `--flag value` — when that happens the captured value was
+    /// almost certainly a positional operand (`bps serve --once ADDR`),
+    /// so it is an error here rather than a silently swallowed address.
+    pub fn flag(&mut self, name: &str) -> Result<bool> {
         if let Some(pos) = self.flags.iter().position(|f| f == name) {
             self.flags.remove(pos);
-            true
-        } else {
-            false
+            return Ok(true);
+        }
+        match self.opt(name).as_deref() {
+            None => Ok(false),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => bail!(
+                "--{name} is a flag and takes no value (got {v:?}); \
+                 put positional arguments before flags, or write --{name}=true"
+            ),
         }
     }
 
-    /// Error if any option/flag was not consumed (catches typos).
+    /// Error if any positional operand was not consumed — subcommands
+    /// that take no operands call this (via `main`) so a stray
+    /// positional is rejected like it was before operands existed.
+    pub fn ensure_no_operands(&self) -> Result<()> {
+        if let Some(o) = self.operands.first() {
+            bail!("unexpected positional argument {o:?}");
+        }
+        Ok(())
+    }
+
+    /// Error if any option/flag/operand was not consumed (catches typos).
     pub fn finish(self) -> Result<()> {
         if let Some(k) = self.opts.keys().next() {
             bail!("unknown option --{k}");
         }
         if let Some(f) = self.flags.first() {
             bail!("unknown flag --{f}");
+        }
+        if let Some(o) = self.operands.first() {
+            bail!("unexpected positional argument {o:?}");
         }
         Ok(())
     }
@@ -122,7 +158,7 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.opt("preset").as_deref(), Some("depth64"));
         assert_eq!(a.usize_or("iters", 0).unwrap(), 10);
-        assert!(a.flag("verbose"));
+        assert!(a.flag("verbose").unwrap());
         a.finish().unwrap();
     }
 
@@ -146,7 +182,30 @@ mod tests {
     }
 
     #[test]
-    fn double_positional_rejected() {
-        assert!(Args::parse(&argv("a b")).is_err());
+    fn operands_consumed_in_order_or_rejected() {
+        let mut a = Args::parse(&argv("connect 127.0.0.1:7447 --envs 4")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("connect"));
+        assert_eq!(a.operand().as_deref(), Some("127.0.0.1:7447"));
+        assert!(a.operand().is_none());
+        assert_eq!(a.usize_or("envs", 0).unwrap(), 4);
+        a.finish().unwrap();
+        // an unconsumed operand is caught by ensure_no_operands/finish
+        let a = Args::parse(&argv("a b")).unwrap();
+        assert!(a.ensure_no_operands().is_err());
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_that_swallowed_an_operand_is_an_error() {
+        // `--once 0.0.0.0:9000` parses as a key/value pair; flag() must
+        // surface the mistake instead of silently dropping the address
+        let mut a = Args::parse(&argv("serve --once 0.0.0.0:9000")).unwrap();
+        let err = a.flag("once").unwrap_err().to_string();
+        assert!(err.contains("takes no value"), "got: {err}");
+        // explicit boolean values stay accepted
+        let mut a = Args::parse(&argv("serve --once=true --list=false")).unwrap();
+        assert!(a.flag("once").unwrap());
+        assert!(!a.flag("list").unwrap());
+        assert!(!a.flag("absent").unwrap());
     }
 }

@@ -90,6 +90,7 @@ fn single_session_bitwise_equals_direct() {
     assert_eq!(stats[0].leased, n);
     assert!((stats[0].occupancy() - 1.0).abs() < 1e-6);
     assert_eq!(stats[0].straggler_fills, 0);
+    assert_eq!(stats[0].bad_submits, 0);
     assert!(stats[0].latency_p95 >= stats[0].latency_p50);
     let (p50, p95) = session.latency();
     assert!(p50 > 0.0 && p95 >= p50);

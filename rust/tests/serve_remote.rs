@@ -1,0 +1,627 @@
+//! Integration tests for the wire transport (`bps::serve::wire`).
+//!
+//! Acceptance gates: a `RemoteSession` over loopback TCP must produce
+//! the *bitwise identical* per-step observation/reward stream as an
+//! in-process `Session` on an identically seeded `SimServer` (including
+//! a two-client interleave and a detach/re-lease cycle), and hostile
+//! input — malformed frames, bad slot indices, slow readers — must
+//! error cleanly without panicking the shard driver or disturbing
+//! co-tenant sessions.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bps::env::{EnvBatch, EnvBatchConfig};
+use bps::render::RenderConfig;
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::serve::wire::frame::{self, Frame, ERR_SESSION, ERR_SUBMIT};
+use bps::serve::{
+    FillAction, RemoteClient, ShardSpec, SimServer, StragglerPolicy, WireConfig, WireServer,
+};
+use bps::sim::{Task, ACTION_FORWARD, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const SEED: u64 = 0xB17_0E5;
+
+fn scene() -> Arc<SceneAsset> {
+    Arc::new(generate("serve_wire_eqv", 93, Complexity::test()))
+}
+
+fn env_cfg() -> EnvBatchConfig {
+    EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16)).seed(SEED)
+}
+
+fn direct_batch(n: usize, pool: &Arc<WorkerPool>) -> EnvBatch {
+    let s = scene();
+    env_cfg()
+        .overlap(false)
+        .build_with_scenes((0..n).map(|_| Arc::clone(&s)).collect(), Arc::clone(pool))
+        .unwrap()
+}
+
+fn server(n: usize, policy: StragglerPolicy, pool: &Arc<WorkerPool>) -> Arc<SimServer> {
+    let s = scene();
+    let spec = ShardSpec::with_scenes(env_cfg(), (0..n).map(|_| Arc::clone(&s)).collect())
+        .straggler(policy);
+    Arc::new(SimServer::start(vec![spec], Arc::clone(pool)).unwrap())
+}
+
+fn actions_at(t: usize, n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((5 * t + 3 * i) % NUM_ACTIONS) as u8).collect()
+}
+
+/// Poll until `cond` holds (10s cap) so socket teardown races can't
+/// flake the assertions.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A `RemoteSession` leasing the whole shard over loopback TCP must be
+/// bitwise identical to direct `EnvBatch` stepping at every step,
+/// starting from the pre-submit initial observation.
+#[test]
+fn remote_single_session_bitwise_equals_direct() {
+    let n = 8;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    assert_eq!(client.num_shards(), 1);
+    let mut session = client.open_session(Task::PointNav, n).unwrap();
+    assert_eq!(session.num_envs(), n);
+    assert_eq!(session.obs_floats(), direct.obs_floats());
+    assert_eq!(session.task(), Task::PointNav);
+    assert_eq!(session.slots(), (0..n).collect::<Vec<_>>().as_slice());
+
+    // the initial observation crossed the wire bit-for-bit
+    assert_eq!(session.view().step, 0);
+    assert_eq!(session.view().obs, direct.view().obs);
+    assert_eq!(session.view().goal, direct.view().goal);
+
+    for t in 0..40 {
+        let actions = actions_at(t, n);
+        let dv = direct.step(&actions).unwrap();
+        let (obs, goal, rewards, dones, successes, spl, scores) = (
+            dv.obs.to_vec(),
+            dv.goal.to_vec(),
+            dv.rewards.to_vec(),
+            dv.dones.to_vec(),
+            dv.successes.to_vec(),
+            dv.spl.to_vec(),
+            dv.scores.to_vec(),
+        );
+        let sv = session.step(&actions).unwrap();
+        assert_eq!(sv.step, (t + 1) as u64, "shard step counter");
+        assert_eq!(obs, sv.obs, "obs diverged at step {t}");
+        assert_eq!(goal, sv.goal, "goal diverged at step {t}");
+        assert_eq!(rewards, sv.rewards, "rewards diverged at step {t}");
+        assert_eq!(dones, sv.dones, "dones diverged at step {t}");
+        assert_eq!(successes, sv.successes, "successes diverged at step {t}");
+        assert_eq!(spl, sv.spl, "spl diverged at step {t}");
+        assert_eq!(scores, sv.scores, "scores diverged at step {t}");
+    }
+    let stats = srv.stats();
+    assert_eq!(stats[0].steps, 40);
+    assert_eq!(stats[0].leased, n);
+    assert_eq!(stats[0].bad_submits, 0);
+    let (p50, p95) = session.latency();
+    assert!(p50 > 0.0 && p95 >= p50);
+
+    // per-connection wire stats: hello + lease + 40 submits in,
+    // welcome + grant + initial step + 40 step views out. The writer
+    // thread counts *after* write_all, so the 43rd outbound tick can
+    // land a beat after the client sees the step — poll for it.
+    wait_until("writer counter", || wire.conn_stats()[0].frames_out == 43);
+    let conns = wire.conn_stats();
+    assert_eq!(conns.len(), 1);
+    assert_eq!(conns[0].sessions_open, 1);
+    assert_eq!(conns[0].sessions_opened, 1);
+    assert_eq!(conns[0].frames_in, 42);
+    assert_eq!(conns[0].frames_out, 43);
+    assert_eq!(conns[0].bad_frames, 0);
+    assert!(conns[0].bytes_in > 0 && conns[0].bytes_out > 0);
+    assert!(!conns[0].dropped_slow && !conns[0].closed);
+}
+
+/// Two remote clients (separate connections) interleaving partial
+/// submissions on one shard must jointly reproduce the direct
+/// full-batch step; a detach / re-lease cycle then hands the freed
+/// slots to a third session without disturbing the survivor.
+#[test]
+fn remote_two_clients_interleave_detach_and_re_lease() {
+    let n = 8;
+    let half = n / 2;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let addr = wire.local_addr().to_string();
+    let ca = RemoteClient::connect(&addr).unwrap();
+    let cb = RemoteClient::connect(&addr).unwrap();
+    let mut a = ca.open_session(Task::PointNav, half).unwrap();
+    let mut b = cb.open_session(Task::PointNav, half).unwrap();
+    assert_eq!(a.slots(), &[0, 1, 2, 3]);
+    assert_eq!(b.slots(), &[4, 5, 6, 7]);
+    let of = a.obs_floats();
+
+    for t in 0..20 {
+        let actions = actions_at(t, n);
+        let dv = direct.step(&actions).unwrap();
+        let (d_obs, d_rewards, d_dones) =
+            (dv.obs.to_vec(), dv.rewards.to_vec(), dv.dones.to_vec());
+        // alternate submission order; the step only fires once both land
+        let (va, vb) = if t % 2 == 0 {
+            let ta = a.submit(&actions[..half]).unwrap();
+            let tb = b.submit(&actions[half..]).unwrap();
+            let vb = tb.wait().unwrap();
+            let va = ta.wait().unwrap();
+            (va, vb)
+        } else {
+            let tb = b.submit(&actions[half..]).unwrap();
+            let ta = a.submit(&actions[..half]).unwrap();
+            let va = ta.wait().unwrap();
+            let vb = tb.wait().unwrap();
+            (va, vb)
+        };
+        assert_eq!(va.step, vb.step, "both clients see the same batch step");
+        assert_eq!(va.obs, &d_obs[..half * of], "client A obs at step {t}");
+        assert_eq!(vb.obs, &d_obs[half * of..], "client B obs at step {t}");
+        assert_eq!(va.rewards, &d_rewards[..half]);
+        assert_eq!(vb.rewards, &d_rewards[half..]);
+        assert_eq!(va.dones, &d_dones[..half]);
+        assert_eq!(vb.dones, &d_dones[half..]);
+    }
+
+    // detach is acked after the release, so the slots are immediately
+    // re-leasable — lowest-first, like the in-process path
+    a.detach().unwrap();
+    assert_eq!(srv.stats()[0].leased, half);
+    let mut c = ca.open_session(Task::PointNav, half).unwrap();
+    assert_eq!(c.slots(), &[0, 1, 2, 3]);
+    assert_eq!(srv.stats()[0].leased, n);
+
+    // both tenants step together again, on the same batch step
+    let acts = vec![ACTION_FORWARD; half];
+    let tc = c.submit(&acts).unwrap();
+    let tb = b.submit(&acts).unwrap();
+    let vc = tc.wait().unwrap();
+    let vb = tb.wait().unwrap();
+    assert_eq!(vc.step, vb.step);
+    assert!(vc.rewards.iter().all(|r| r.is_finite()));
+
+    // a detached session refuses further submits, client-side
+    assert!(a.submit(&acts).is_err());
+    assert_eq!(srv.stats()[0].bad_submits, 0);
+}
+
+/// One socket multiplexes several sessions: two leases on one
+/// `RemoteClient` jointly reproduce the direct full-batch step.
+#[test]
+fn remote_sessions_multiplex_over_one_socket() {
+    let n = 6;
+    let half = n / 2;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut a = client.open_session(Task::PointNav, half).unwrap();
+    let mut b = client.open_session(Task::PointNav, half).unwrap();
+    assert_eq!(a.slots(), &[0, 1, 2]);
+    assert_eq!(b.slots(), &[3, 4, 5]);
+
+    for t in 0..10 {
+        let actions = actions_at(t, n);
+        let dv = direct.step(&actions).unwrap();
+        let (d_rewards, d_obs) = (dv.rewards.to_vec(), dv.obs.to_vec());
+        let ta = a.submit(&actions[..half]).unwrap();
+        let tb = b.submit(&actions[half..]).unwrap();
+        let va = ta.wait().unwrap();
+        let vb = tb.wait().unwrap();
+        assert_eq!(va.step, vb.step);
+        assert_eq!(va.obs, &d_obs[..half * a.obs_floats()]);
+        assert_eq!(vb.obs, &d_obs[half * a.obs_floats()..]);
+        assert_eq!(va.rewards, &d_rewards[..half]);
+        assert_eq!(vb.rewards, &d_rewards[half..]);
+    }
+    // wrong action count is rejected client-side without poisoning
+    assert!(a.submit(&[ACTION_FORWARD]).is_err());
+    let fwd = vec![ACTION_FORWARD; half];
+    let ta = a.submit(&fwd).unwrap();
+    let tb = b.submit(&fwd).unwrap();
+    tb.wait().unwrap();
+    let v = ta.wait().unwrap();
+    assert!(v.step > 10);
+
+    // a ticket dropped without waiting leaves its Step frame queued; the
+    // next wait must drain past it instead of going one-behind forever
+    let tb = b.submit(&fwd).unwrap();
+    let ta = a.submit(&fwd).unwrap();
+    drop(ta); // never waited
+    tb.wait().unwrap();
+    let ta2 = a.submit(&fwd).unwrap();
+    let tb2 = b.submit(&fwd).unwrap();
+    let va = ta2.wait().unwrap();
+    let step_a = va.step;
+    let vb = tb2.wait().unwrap();
+    assert_eq!(step_a, vb.step, "dropped ticket desynced the session");
+
+    let conns = wire.conn_stats();
+    assert_eq!(conns.len(), 1, "one socket for both sessions");
+    assert_eq!(conns[0].sessions_opened, 2);
+}
+
+/// Fuzz-style table test: truncated, oversized-length, wrong-version,
+/// and mid-stream-garbage frames each error the *connection* cleanly —
+/// the co-tenant session on the same shard keeps stepping and the shard
+/// driver never panics.
+#[test]
+fn hostile_frames_error_cleanly_and_co_tenants_survive() {
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(n, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let addr = wire.local_addr();
+    // in-process co-tenant holds the whole shard and must never notice
+    let mut tenant = srv.connect(Task::PointNav, n).unwrap();
+    let acts = vec![ACTION_FORWARD; n];
+    tenant.step(&acts).unwrap();
+
+    let magic = frame::MAGIC.to_le_bytes();
+    let hostile: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated header", vec![magic[0], magic[1], frame::VERSION]),
+        (
+            "bad magic",
+            vec![0xDE, 0xAD, frame::VERSION, frame::FT_HELLO, 0, 0, 0, 0],
+        ),
+        (
+            "wrong version",
+            vec![magic[0], magic[1], 99, frame::FT_HELLO, 0, 0, 0, 0],
+        ),
+        (
+            "oversized length",
+            vec![
+                magic[0],
+                magic[1],
+                frame::VERSION,
+                frame::FT_SUBMIT,
+                0xFF,
+                0xFF,
+                0xFF,
+                0xFF,
+            ],
+        ),
+        ("server-only frame type from a client", {
+            // a 32 MiB "STEP" aimed at the server: rejected from the
+            // header alone, allocation-free (wrong direction)
+            let mut b = vec![magic[0], magic[1], frame::VERSION, frame::FT_STEP];
+            b.extend_from_slice(&(32u32 << 20).to_le_bytes());
+            b
+        }),
+        ("submit length over the per-type cap", {
+            let mut b = vec![magic[0], magic[1], frame::VERSION, frame::FT_SUBMIT];
+            b.extend_from_slice(&(1u32 << 20).to_le_bytes());
+            b
+        }),
+        ("mid-stream garbage", {
+            let mut b = Vec::new();
+            let mut hello = Vec::new();
+            frame::encode(&Frame::Hello, &mut hello);
+            b.extend_from_slice(&hello);
+            b.extend_from_slice(&[0x5A; 64]); // garbage after a valid HELLO
+            b
+        }),
+        ("truncated payload then close", {
+            let mut b = Vec::new();
+            let mut lease = Vec::new();
+            frame::encode(
+                &Frame::Lease {
+                    req: 1,
+                    task: Task::PointNav,
+                    n_envs: 1,
+                },
+                &mut lease,
+            );
+            let mut hello = Vec::new();
+            frame::encode(&Frame::Hello, &mut hello);
+            b.extend_from_slice(&hello);
+            b.extend_from_slice(&lease[..lease.len() - 3]); // cut mid-payload
+            b
+        }),
+    ];
+    let before = wire.conn_stats().len();
+    for (what, bytes) in &hostile {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(bytes).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        // drain whatever courtesy frames the server sends until EOF —
+        // the point is that the server hangs up without panicking
+        while frame::read_frame(&mut s).is_ok() {}
+        drop(s);
+        // the co-tenant's shard is untouched by the hostile connection
+        let v = tenant.step(&acts).unwrap();
+        assert!(
+            v.rewards.iter().all(|r| r.is_finite()),
+            "co-tenant wobbled after {what}"
+        );
+    }
+    wait_until("hostile conns to close", || {
+        wire.conn_stats().iter().skip(before).all(|c| c.closed)
+    });
+    let conns = wire.conn_stats();
+    assert_eq!(conns.len(), before + hostile.len());
+    let flagged = conns.iter().skip(before).filter(|c| c.bad_frames > 0).count();
+    assert_eq!(flagged, hostile.len(), "every hostile conn counted a bad frame");
+    assert_eq!(srv.stats()[0].bad_submits, 0, "no lease, no submits");
+    assert_eq!(srv.stats()[0].leased, n, "tenant lease untouched");
+}
+
+/// Well-formed frames with hostile *content*: bad slot indices are
+/// skipped and counted (never panicking the driver), an all-bad submit
+/// earns an error frame instead of a hung wait, and unknown session ids
+/// are reported without killing the connection.
+#[test]
+fn bad_slot_indices_are_counted_not_fatal() {
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let policy = StragglerPolicy::Deadline {
+        ticks: 2,
+        fill: FillAction::NoOp,
+    };
+    let srv = server(n, policy, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    // in-process co-tenant on half the shard
+    let mut tenant = srv.connect(Task::PointNav, 2).unwrap();
+    let acts = vec![ACTION_FORWARD; 2];
+
+    // hand-rolled wire client so we control the exact slot indices
+    let mut s = TcpStream::connect(wire.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut s, &Frame::Hello).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Welcome { shards } => assert_eq!(shards, 1),
+        other => panic!("want WELCOME, got {other:?}"),
+    }
+    frame::write_frame(
+        &mut s,
+        &Frame::Lease {
+            req: 1,
+            task: Task::PointNav,
+            n_envs: 2,
+        },
+    )
+    .unwrap();
+    let (session, slots) = match frame::read_frame(&mut s).unwrap() {
+        Frame::Grant { session, slots, .. } => (session, slots),
+        other => panic!("want GRANT, got {other:?}"),
+    };
+    assert_eq!(slots, vec![2, 3], "co-tenant holds 0,1");
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Step { step, .. } => assert_eq!(step, 0, "initial observation"),
+        other => panic!("want initial STEP, got {other:?}"),
+    }
+
+    // one valid pair + one insane index: the insane one is skipped and
+    // counted, the valid one steps (deadline fills the rest)
+    frame::write_frame(
+        &mut s,
+        &Frame::Submit {
+            session,
+            pairs: vec![(slots[0], ACTION_FORWARD), (u32::MAX, ACTION_FORWARD)],
+        },
+    )
+    .unwrap();
+    let tv = tenant.step(&acts).unwrap();
+    assert!(tv.step >= 1);
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Step { step, .. } => assert!(step >= 1),
+        other => panic!("want STEP, got {other:?}"),
+    }
+    assert_eq!(srv.stats()[0].bad_submits, 1);
+
+    // an all-bad submit must not hang the session in an unprovokable
+    // wait: the server answers with ERR_SUBMIT and keeps the session
+    frame::write_frame(
+        &mut s,
+        &Frame::Submit {
+            session,
+            pairs: vec![(999_999, 1), (0, 1)], // slot 0 is the tenant's!
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Error { re, code, .. } => {
+            assert_eq!(re, session);
+            assert_eq!(code, ERR_SUBMIT);
+        }
+        other => panic!("want ERROR, got {other:?}"),
+    }
+    assert_eq!(srv.stats()[0].bad_submits, 3, "foreign slot counted too");
+
+    // unknown session ids are reported without killing the connection
+    frame::write_frame(
+        &mut s,
+        &Frame::Submit {
+            session: 0xDEAD,
+            pairs: vec![(0, 1)],
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Error { re, code, .. } => {
+            assert_eq!(re, 0xDEAD);
+            assert_eq!(code, ERR_SESSION);
+        }
+        other => panic!("want ERROR, got {other:?}"),
+    }
+
+    // the session (and the shard) are still healthy after all of it
+    frame::write_frame(
+        &mut s,
+        &Frame::Submit {
+            session,
+            pairs: vec![(slots[0], ACTION_FORWARD), (slots[1], ACTION_FORWARD)],
+        },
+    )
+    .unwrap();
+    let tv = tenant.step(&acts).unwrap();
+    assert!(tv.rewards.iter().all(|r| r.is_finite()));
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Step { .. } => {}
+        other => panic!("want STEP, got {other:?}"),
+    }
+    assert_eq!(srv.stats()[0].leased, n, "all leases intact");
+}
+
+/// Backpressure: a client that submits but never drains its socket
+/// overflows the bounded per-connection outbox and is disconnected by
+/// the slow-reader policy; its lease is released for re-use.
+#[test]
+fn slow_reader_is_disconnected_and_lease_released() {
+    let n = 1;
+    let pool = Arc::new(WorkerPool::new(2));
+    let s = scene();
+    let spec = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(SEED),
+        vec![Arc::clone(&s)],
+    );
+    let srv = Arc::new(SimServer::start(vec![spec], Arc::clone(&pool)).unwrap());
+    // huge inbox so this test isolates the *outbox* (slow-reader) bound;
+    // the inbox (flood) bound gets its own test below
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            outbox_frames: 1,
+            inbox_submits: 1 << 20,
+        },
+    )
+    .unwrap();
+
+    let mut sock = TcpStream::connect(wire.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+    assert!(matches!(
+        frame::read_frame(&mut sock).unwrap(),
+        Frame::Welcome { .. }
+    ));
+    frame::write_frame(
+        &mut sock,
+        &Frame::Lease {
+            req: 1,
+            task: Task::PointNav,
+            n_envs: n as u32,
+        },
+    )
+    .unwrap();
+    let session = match frame::read_frame(&mut sock).unwrap() {
+        Frame::Grant { session, .. } => session,
+        other => panic!("want GRANT, got {other:?}"),
+    };
+    wait_until("lease to register", || srv.stats()[0].leased == n);
+
+    // flood submits without ever reading a step view: the kernel socket
+    // buffers fill, the writer blocks, the 1-frame outbox overflows,
+    // and the slow-reader policy hangs up
+    let mut submit = Vec::new();
+    frame::encode(
+        &Frame::Submit {
+            session,
+            pairs: vec![(0, ACTION_FORWARD)],
+        },
+        &mut submit,
+    );
+    for _ in 0..200_000 {
+        if sock.write_all(&submit).is_err() {
+            break; // server already hung up on us
+        }
+        let stats = wire.conn_stats();
+        if stats[0].dropped_slow {
+            break;
+        }
+    }
+    wait_until("slow-reader disconnect", || wire.conn_stats()[0].dropped_slow);
+    wait_until("conn to close", || wire.conn_stats()[0].closed);
+    // the dead connection's lease is released; a fresh client can lease
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut fresh = client.open_session(Task::PointNav, n).unwrap();
+    let fwd = vec![ACTION_FORWARD; n];
+    let v = fresh.step(&fwd).unwrap();
+    assert!(v.rewards.iter().all(|r| r.is_finite()));
+}
+
+/// Backpressure, inbound direction: a client pipelining submits faster
+/// than the shard steps overflows the bounded per-session inbox and is
+/// disconnected instead of growing server memory at line rate.
+#[test]
+fn submit_flood_is_disconnected_and_lease_released() {
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(2, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            outbox_frames: 256,
+            inbox_submits: 4,
+        },
+    )
+    .unwrap();
+
+    let mut sock = TcpStream::connect(wire.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+    assert!(matches!(
+        frame::read_frame(&mut sock).unwrap(),
+        Frame::Welcome { .. }
+    ));
+    frame::write_frame(
+        &mut sock,
+        &Frame::Lease {
+            req: 1,
+            task: Task::PointNav,
+            n_envs: 1,
+        },
+    )
+    .unwrap();
+    let session = match frame::read_frame(&mut sock).unwrap() {
+        Frame::Grant { session, .. } => session,
+        other => panic!("want GRANT, got {other:?}"),
+    };
+    // the sole tenant's submit provokes one coalesced step each, but
+    // the flood arrives far faster than the shard can step, so the
+    // 4-deep inbox overflows and the flood policy hangs up
+    let mut submit = Vec::new();
+    frame::encode(
+        &Frame::Submit {
+            session,
+            pairs: vec![(0, ACTION_FORWARD)],
+        },
+        &mut submit,
+    );
+    for _ in 0..100_000 {
+        if sock.write_all(&submit).is_err() {
+            break; // already disconnected
+        }
+        if wire.conn_stats()[0].closed {
+            break;
+        }
+    }
+    wait_until("flood disconnect", || wire.conn_stats()[0].closed);
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+    // the shard is healthy: a fresh client leases and steps
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut fresh = client.open_session(Task::PointNav, 2).unwrap();
+    let fwd = vec![ACTION_FORWARD; 2];
+    let v = fresh.step(&fwd).unwrap();
+    assert!(v.rewards.iter().all(|r| r.is_finite()));
+}
