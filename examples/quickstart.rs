@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in five acts.
+//! Quickstart: the smallest end-to-end BPS run, in six acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -29,6 +29,13 @@
 //! model variant, trains a handful of PPO iterations through the
 //! coordinator (a pure client of the same `EnvBatch` API), and prints the
 //! FPS + runtime breakdown.
+//!
+//! Act 6 (also artifact-gated) serves *agents*, not just envs: a
+//! `SimServer` with a `PolicyVault` leases env slots plus a policy
+//! (`connect_with_policy`), runs one coalesced inference per tick for
+//! every tenant of the shard, and the client only sets a goal and
+//! streams the server-chosen trajectory. Remotely that's `bps serve`
+//! plus `bps agent ADDR`.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -249,5 +256,49 @@ fn main() -> anyhow::Result<()> {
     for (name, us) in coord.prof.breakdown(coord.frames()) {
         println!("  {name:<10} {us:>8.1} us/frame");
     }
+    drop(coord);
+
+    // -- Act 6: serve agents, not just envs (policy tenancy) ---------------
+    println!("\n== Tenant quickstart: the server runs the policy too ==");
+    use bps::serve::PolicyVault;
+    // a 4-slot shard matches the `test` variant's infer_n4 AOT artifact
+    let shard = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(7),
+        (0..4).map(|_| Arc::clone(&scene)).collect(),
+    );
+    let vault = PolicyVault::open(&bps::bench::artifacts_dir(), None, 1)?;
+    println!("vault: {}", vault.describe());
+    let tenant_server = Arc::new(SimServer::with_vault(
+        vec![shard],
+        Arc::new(WorkerPool::new(WorkerPool::default_size())),
+        None,
+        Some(vault),
+    )?);
+    // lease env slots *plus* a policy: the server closes the
+    // act -> observe loop; this client only sets a goal and streams the
+    // trajectory (remotely: `bps serve` + `bps agent ADDR`)
+    let mut agent = tenant_server.connect_with_policy(Task::PointNav, 4, "test")?;
+    agent.set_goal(16)?;
+    let mut reward = 0.0f32;
+    let mut stops = 0usize;
+    for _ in 0..16usize {
+        let ts = agent.next_step()?.expect("goal ended early");
+        reward += ts.rewards.iter().sum::<f32>();
+        stops += ts
+            .actions
+            .iter()
+            .filter(|&&a| a == bps::sim::ACTION_STOP)
+            .count();
+    }
+    let st = &tenant_server.stats()[0];
+    let ten = st.tenant.as_ref().expect("tenant stats");
+    println!(
+        "16 server-driven steps x 4 envs: reward {reward:+.2}, {stops} STOPs, \
+         {} coalesced forwards at batch {} (infer p50 {:.2} ms)",
+        ten.infer_runs,
+        ten.infer_batch_size,
+        ten.infer_p50 * 1e3
+    );
+    agent.detach();
     Ok(())
 }

@@ -9,17 +9,92 @@
 //! `RemoteSession` on its own connection — so the serialization +
 //! socket cost of going remote is measured against the same direct
 //! baseline (`wire_fps` / `w_ratio` / worst-client `w_p95`).
+//!
+//! A fourth, artifact-gated phase flips the clients into policy
+//! tenants (`RemoteAgent`: the server runs inference and drives the
+//! envs, clients only stream trajectories) and reports agent-steps/s
+//! (`agent_sps`, "-" when no artifact variant matches the geometry).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use bps::bench::{bench_iters, dataset};
 use bps::env::EnvBatchConfig;
 use bps::render::RenderConfig;
-use bps::serve::{RemoteClient, ShardSpec, SimServer, StragglerPolicy, WireServer};
+use bps::runtime::Manifest;
+use bps::scene::SceneAsset;
+use bps::serve::{
+    PolicyVault, RemoteClient, ShardSpec, SimServer, StragglerPolicy, WireServer,
+};
 use bps::sim::{Task, NUM_ACTIONS};
 use bps::util::pool::WorkerPool;
 
 const RES: usize = 64;
+
+/// Artifact-gated fourth phase: the same full-occupancy workload as
+/// policy tenants — `clients` RemoteAgents over loopback, the server
+/// running one coalesced forward per tick — reported as agent-steps/s.
+/// Returns `None` (printed as "-") without artifacts or when no
+/// variant matches the bench geometry (res 64 depth, `infer_n{N}`).
+fn agent_sps(
+    clients: usize,
+    epc: usize,
+    steps: usize,
+    scene: &Arc<SceneAsset>,
+    pool: &Arc<WorkerPool>,
+    cfg: EnvBatchConfig,
+) -> Option<f64> {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        return None;
+    }
+    let n = clients * epc;
+    let man = Manifest::load(&artifacts).ok()?;
+    let variant = man
+        .variants
+        .values()
+        .find(|v| v.res == RES && v.in_ch == 1 && v.infer_ns.contains(&n))?
+        .name
+        .clone();
+    let spec = ShardSpec::with_scenes(cfg, (0..n).map(|_| Arc::clone(scene)).collect())
+        .straggler(StragglerPolicy::Wait);
+    let vault = PolicyVault::open(&artifacts, None, 1).expect("vault");
+    let srv = Arc::new(
+        SimServer::with_vault(vec![spec], Arc::clone(pool), None, Some(vault)).expect("server"),
+    );
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).expect("listen");
+    let addr = wire.local_addr().to_string();
+    let agents: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = RemoteClient::connect(&addr).expect("connect");
+            let agent = client
+                .open_agent(Task::PointNav, epc, &variant, false, c as u64)
+                .expect("open_agent");
+            (client, agent)
+        })
+        .collect();
+    // Goals first (a Wait-policy tick needs every tenant active), then
+    // time the concurrent drain.
+    for (_, agent) in &agents {
+        agent.set_goal(steps as u32).expect("set_goal");
+    }
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|sc| {
+        for (client, mut agent) in agents {
+            sc.spawn(move || {
+                for _ in 0..steps {
+                    agent
+                        .next_traj()
+                        .expect("next_traj")
+                        .expect("goal ended early");
+                }
+                agent.detach().expect("detach");
+                drop(client);
+            });
+        }
+    });
+    Some((n * steps) as f64 / t0.elapsed().as_secs_f64())
+}
 
 fn actions_at(t: usize, offset: usize, n: usize) -> Vec<u8> {
     (0..n)
@@ -38,7 +113,7 @@ fn main() {
     );
     // avg_p50 = mean of per-client p50s; max_p95 = worst client's p95
     println!(
-        "{:>8} {:>7} {:>6} {:>11} {:>11} {:>7} {:>10} {:>10} {:>11} {:>8} {:>10}",
+        "{:>8} {:>7} {:>6} {:>11} {:>11} {:>7} {:>10} {:>10} {:>11} {:>8} {:>10} {:>10}",
         "clients",
         "envs/c",
         "N",
@@ -49,7 +124,8 @@ fn main() {
         "max_p95_ms",
         "wire_fps",
         "w_ratio",
-        "w_p95_ms"
+        "w_p95_ms",
+        "agent_sps"
     );
     for clients in [1usize, 2, 4, 8] {
         for epc in [8usize, 32] {
@@ -143,9 +219,14 @@ fn main() {
             });
             let wire_fps = (n * steps) as f64 / t0.elapsed().as_secs_f64();
             let w_p95 = wire_lats.iter().map(|l| l.1).fold(0.0f32, f32::max);
+
+            // Policy tenancy: server-driven agents over the same wire
+            // ("-" without artifacts or a variant exporting infer_n{N}).
+            let asps = agent_sps(clients, epc, steps, &scene, &pool, cfg)
+                .map_or_else(|| format!("{:>10}", "-"), |s| format!("{s:>10.0}"));
             println!(
                 "{clients:>8} {epc:>7} {n:>6} {direct_fps:>11.0} {served_fps:>11.0} \
-                 {:>7.3} {:>10.2} {:>10.2} {wire_fps:>11.0} {:>8.3} {:>10.2}",
+                 {:>7.3} {:>10.2} {:>10.2} {wire_fps:>11.0} {:>8.3} {:>10.2} {asps}",
                 served_fps / direct_fps,
                 p50 * 1e3,
                 p95 * 1e3,

@@ -6,6 +6,8 @@
 //!   eval           evaluate a checkpoint on a dataset split
 //!   serve          front a SimServer with the TCP wire transport
 //!   connect        remote demo client for a `bps serve` server
+//!   agent          remote policy-tenant client: lease slots + a
+//!                  server-side policy, post a goal, stream trajectories
 //!   serve-demo     multi-client serving demo over the SimServer layer
 //!   scenario-demo  scenario engine demo: streaming procgen + curriculum
 //!   bench          standalone batch-renderer benchmark (--json appends the
@@ -43,10 +45,13 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     }
-    // Only serve/connect take a positional operand (the address); every
-    // other subcommand rejects strays up front — `bps train cfg.toml`
-    // must fail immediately, not after a defaults-run finishes.
-    if !matches!(args.subcommand.as_deref(), Some("serve") | Some("connect")) {
+    // Only serve/connect/agent take a positional operand (the address);
+    // every other subcommand rejects strays up front — `bps train
+    // cfg.toml` must fail immediately, not after a defaults-run finishes.
+    if !matches!(
+        args.subcommand.as_deref(),
+        Some("serve") | Some("connect") | Some("agent")
+    ) {
         args.ensure_no_operands()?;
     }
     let result = match args.subcommand.as_deref() {
@@ -55,6 +60,7 @@ fn run() -> Result<()> {
         Some("eval") => eval(&mut args),
         Some("serve") => serve(&mut args),
         Some("connect") => connect(&mut args),
+        Some("agent") => agent(&mut args),
         Some("serve-demo") => serve_demo(&mut args),
         Some("scenario-demo") => scenario_demo(&mut args),
         Some("bench") => bench(&mut args),
@@ -66,8 +72,8 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|serve|connect|serve-demo|scenario-demo|\
-                 bench|info|help> [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|serve|connect|agent|serve-demo|\
+                 scenario-demo|bench|info|help> [--key value ...]"
             )
         }
     };
@@ -99,12 +105,23 @@ SUBCOMMANDS
                 outbox bound before the slow-reader disconnect fires
                 --inbox SUBMITS  per-session submit queue bound before
                 the flood disconnect fires
+                --idle-timeout SECS  reap connections idle this long,
+                releasing their leases (0 = never, the default)
+                --artifacts-dir PATH --checkpoint CKPT --policy-seed S
+                with AOT artifacts present, also serve *policies*: agents
+                lease slots + a server-side checkpoint (bps agent below)
                 --stats-every SECS --once  exit once every accepted
                 connection has closed (at least one), for smoke tests)
   connect      remote demo client: lease slots on a `bps serve` server,
                drive them with a scripted policy, report FPS + latency
                p50/p95: bps connect 127.0.0.1:7447 --task pointnav
                (--addr A --task NAME --envs N --steps T)
+  agent        remote policy-tenant client: lease slots *plus* a
+               server-side policy, post a goal, and stream the
+               server-driven trajectory back (obs/action/reward/done per
+               step): bps agent 127.0.0.1:7447 --envs 4 --steps 64
+               (--addr A --task NAME --envs N --steps T --variant NAME
+                --sample --seed S  sample actions instead of greedy)
   serve-demo   drive M concurrent synthetic clients through the SimServer
                multi-tenant serving layer (bps::serve) and report aggregate
                FPS, occupancy, and per-client step-latency p50/p95
@@ -338,10 +355,23 @@ fn print_serve_stats(server: &bps::serve::SimServer, conns: &[bps::serve::ConnSt
             st.latency_p50 * 1e3,
             st.latency_p95 * 1e3
         );
+        if let Some(t) = &st.tenant {
+            println!(
+                "  tenants {}: agent_steps {} infer_runs {} infer_batch {} idle_fills {} \
+                 infer p50 {:.2} ms p95 {:.2} ms",
+                t.tenants,
+                t.agent_steps,
+                t.infer_runs,
+                t.infer_batch_size,
+                t.idle_fills,
+                t.infer_p50 * 1e3,
+                t.infer_p95 * 1e3
+            );
+        }
     }
     for c in conns {
         println!(
-            "conn {} {}: sessions {}/{} frames in/out {}/{} bytes in/out {}/{} bad_frames={}{}{}",
+            "conn {} {}: sessions {}/{} frames in/out {}/{} bytes in/out {}/{} bad_frames={}{}{}{}",
             c.id,
             c.peer,
             c.sessions_open,
@@ -352,6 +382,7 @@ fn print_serve_stats(server: &bps::serve::SimServer, conns: &[bps::serve::ConnSt
             c.bytes_out,
             c.bad_frames,
             if c.dropped_slow { " dropped-slow" } else { "" },
+            if c.reaped { " reaped" } else { "" },
             if c.closed { " closed" } else { "" }
         );
     }
@@ -364,7 +395,9 @@ fn serve(args: &mut Args) -> Result<()> {
     use bps::env::EnvBatchConfig;
     use bps::render::RenderConfig;
     use bps::scene::procgen::{generate, Complexity};
-    use bps::serve::{FillAction, ShardSpec, SimServer, StragglerPolicy, WireConfig, WireServer};
+    use bps::serve::{
+        FillAction, PolicyVault, ShardSpec, SimServer, StragglerPolicy, WireConfig, WireServer,
+    };
     use bps::sim::Task;
     use bps::util::pool::WorkerPool;
     use std::sync::Arc;
@@ -382,9 +415,13 @@ fn serve(args: &mut Args) -> Result<()> {
     let ticks = args.usize_or("deadline-ticks", 2)? as u32;
     let outbox = args.usize_or("outbox", 256)?.max(1);
     let inbox = args.usize_or("inbox", 64)?.max(1);
+    let idle_timeout = args.f64_or("idle-timeout", 0.0)?.max(0.0);
     let mem_budget_mb = args.usize_or("mem-budget", 0)?;
     let stats_every = args.f64_or("stats-every", 10.0)?.max(0.2);
     let once = args.flag("once")?;
+    let artifacts_dir = PathBuf::from(args.opt_or("artifacts-dir", "artifacts"));
+    let checkpoint = args.opt("checkpoint").map(PathBuf::from);
+    let policy_seed = args.u64_or("policy-seed", 1)?;
     let task = {
         let name = args.opt_or("task", "pointnav");
         Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
@@ -422,19 +459,37 @@ fn serve(args: &mut Args) -> Result<()> {
         0 => None,
         mb => Some(mb * 1024 * 1024),
     };
-    let server = Arc::new(SimServer::with_budget(specs, pool, budget)?);
+    // Policy tenancy is gated on the AOT manifest exactly like the
+    // coordinator's eval: without artifacts the server still serves
+    // envs, but LEASE_POLICY requests are declined diagnosably.
+    let vault = PolicyVault::open_if_present(&artifacts_dir, checkpoint, policy_seed)?;
+    let vault_banner = vault.as_ref().map(|v| v.describe());
+    let server = Arc::new(SimServer::with_vault(specs, pool, budget, vault)?);
     let wire = WireServer::listen_with(
         &listen,
         Arc::clone(&server),
         WireConfig {
             outbox_frames: outbox,
             inbox_submits: inbox,
+            // TICK is 1 ms, so seconds → ticks is a factor of 1000.
+            idle_timeout_ticks: if idle_timeout > 0.0 {
+                Some((idle_timeout * 1000.0) as u64)
+            } else {
+                None
+            },
         },
     )?;
     println!(
         "serving {shards} shard(s) x {slots} slots ({task:?}, res {res}) on {}",
         wire.local_addr()
     );
+    match &vault_banner {
+        Some(d) => println!("policy tenancy: {d}"),
+        None => println!(
+            "policy tenancy: off (no {} — env leases only)",
+            artifacts_dir.join("manifest.json").display()
+        ),
+    }
     if once {
         println!("--once: exiting after all accepted connections close");
     }
@@ -507,6 +562,63 @@ fn connect(args: &mut Args) -> Result<()> {
         p95 * 1e3
     );
     println!("connect: detached cleanly");
+    Ok(())
+}
+
+/// Remote policy-tenant client: lease env slots *plus* a server-side
+/// policy on a `bps serve` server (started with AOT artifacts), post one
+/// goal, and stream the server-driven trajectory back. The client never
+/// runs the policy — it only reads (obs, action, reward, done) steps.
+fn agent(args: &mut Args) -> Result<()> {
+    use bps::serve::RemoteClient;
+    use bps::sim::Task;
+
+    let addr = args
+        .operand()
+        .or_else(|| args.opt("addr"))
+        .unwrap_or_else(|| "127.0.0.1:7447".into());
+    args.ensure_no_operands()?; // a second address is a typo; fail now
+    let envs = args.usize_or("envs", 4)?.max(1);
+    let steps = args.usize_or("steps", 64)?.max(1);
+    let variant = args.opt_or("variant", "test");
+    let sample = args.flag("sample")?;
+    let seed = args.u64_or("seed", 7)?;
+    let task = {
+        let name = args.opt_or("task", "pointnav");
+        Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
+    };
+
+    let client = RemoteClient::connect(&addr)?;
+    let mut agent = client.open_agent(task, envs, &variant, !sample, seed)?;
+    println!(
+        "connected to {addr}: leased {} x {task:?} slots {:?} + policy {variant:?} ({})",
+        agent.num_envs(),
+        agent.slots(),
+        if sample { "sampled" } else { "greedy" }
+    );
+    agent.set_goal(steps as u32)?;
+    let mut reward = 0.0f32;
+    let mut episodes = 0u32;
+    let mut stops = 0u64;
+    let t0 = std::time::Instant::now();
+    while agent.steps() < steps as u64 {
+        match agent.next_traj()? {
+            Some(tr) => {
+                reward += tr.view.rewards.iter().sum::<f32>();
+                episodes += tr.view.dones.iter().filter(|&&d| d).count() as u32;
+                stops += tr.actions.iter().filter(|&&a| a == 0).count() as u64;
+            }
+            None => bail!("server ended the trajectory stream early"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    agent.detach()?;
+    println!(
+        "{steps} server-driven steps x {envs} envs in {wall:.2}s = {:.0} agent-steps/s | \
+         reward {reward:+.2} episodes {episodes} stop-actions {stops}",
+        (steps * envs) as f64 / wall
+    );
+    println!("agent: detached cleanly");
     Ok(())
 }
 

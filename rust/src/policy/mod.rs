@@ -10,6 +10,17 @@ use anyhow::{bail, Result};
 use crate::runtime::{lit_f32, to_f32, Exec, Manifest, Runtime, Variant};
 use crate::util::rng::Rng;
 
+/// Argmax over one row of action logits. Factored out so the greedy
+/// eval loop and the serve-tenant driver pick bitwise-identical actions
+/// from identical logits (ties and NaN handling included).
+pub fn argmax_action(row: &[f32]) -> u8 {
+    row.iter()
+        .enumerate()
+        .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+        .map(|(k, _)| k as u8)
+        .unwrap_or(0)
+}
+
 /// Batched recurrent policy bound to one `infer_n{N}` executable.
 pub struct Policy {
     infer: Rc<Exec>,
@@ -114,20 +125,22 @@ impl Policy {
 
     /// Greedy step (evaluation): argmax actions, recurrent state advances.
     pub fn step_greedy(&mut self, params: &[f32], obs: &[f32], goal: &[f32]) -> Result<Vec<u8>> {
+        let logits = self.logits_step(params, obs, goal)?;
+        let a = self.num_actions;
+        Ok((0..self.n)
+            .map(|i| argmax_action(&logits[i * a..(i + 1) * a]))
+            .collect())
+    }
+
+    /// Forward with recurrent-state advance, returning the raw logits.
+    /// The serve-tenant driver selects from these per tenant (each
+    /// tenant samples on its own RNG stream, so co-tenancy never
+    /// perturbs a tenant's action sequence).
+    pub fn logits_step(&mut self, params: &[f32], obs: &[f32], goal: &[f32]) -> Result<Vec<f32>> {
         let (logits, _, h2, c2) = self.forward(params, obs, goal)?;
         self.h = h2;
         self.c = c2;
-        let a = self.num_actions;
-        Ok((0..self.n)
-            .map(|i| {
-                let row = &logits[i * a..(i + 1) * a];
-                row.iter()
-                    .enumerate()
-                    .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
-                    .map(|(k, _)| k as u8)
-                    .unwrap_or(0)
-            })
-            .collect())
+        Ok(logits)
     }
 
     /// Value estimate WITHOUT advancing the recurrent state (rollout

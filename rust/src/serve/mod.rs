@@ -42,13 +42,24 @@
 //! length-prefixed TCP protocol, and [`RemoteClient`] /
 //! [`RemoteSession`] mirror `connect`/`Session` with bitwise-identical
 //! observation streams (DESIGN.md §0.8).
+//!
+//! Policy tenancy: the [`tenant`] module moves the *policy* server-side
+//! too — [`SimServer::connect_with_policy`] leases env slots plus a
+//! checkpoint, an `InferenceCoalescer` batches one `Exec::run` per tick
+//! across all tenants of a shard, and clients only set goals and stream
+//! trajectories ([`TenantSession`]; `RemoteAgent`/`bps agent` on the
+//! wire; DESIGN.md §0.9).
 
 pub mod coalescer;
 pub mod server;
 pub mod session;
+pub mod tenant;
 pub mod wire;
 
 pub use coalescer::{FillAction, StragglerPolicy};
-pub use server::{SceneSource, ShardSpec, ShardStats, SimServer, TICK};
+pub use server::{SceneSource, ShardSpec, ShardStats, SimServer, TenantStats, TICK};
 pub use session::{Session, SessionView, Ticket};
-pub use wire::{ConnStats, RemoteClient, RemoteSession, WireConfig, WireServer};
+pub use tenant::{ActionMode, PolicyVault, TenantControl, TenantSession, TrajStep};
+pub use wire::{
+    ConnStats, RemoteAgent, RemoteClient, RemoteSession, RemoteTraj, WireConfig, WireServer,
+};

@@ -32,6 +32,9 @@ use crate::util::pool::WorkerPool;
 
 use super::coalescer::{Coalescer, StragglerPolicy};
 use super::session::Session;
+use super::tenant::driver::{tenant_driver, Join, TenantShared, TRAJ_QUEUE};
+use super::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
+use super::tenant::vault::PolicyVault;
 
 /// Driver wakeup granularity while waiting out a straggler deadline
 /// (`StragglerPolicy::Deadline { ticks, .. }` waits `ticks` of these).
@@ -249,6 +252,33 @@ impl ShardSpec {
     }
 }
 
+/// Point-in-time counters for a shard's policy tenancy (present once a
+/// shard has hosted a policy lease; see [`SimServer::stats`]).
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    /// Policy tenants currently registered on the shard.
+    pub tenants: usize,
+    /// Server-driven env steps, cumulative (the agent-steps/sec
+    /// numerator).
+    pub agent_steps: u64,
+    /// Coalesced `Exec::run` invocations, cumulative — with every tenant
+    /// on one variant this equals the tick count regardless of tenant
+    /// count, which is the whole point.
+    pub infer_runs: u64,
+    /// Rows per coalesced forward (the shard width: tenants are rows of
+    /// one batched inference).
+    pub infer_batch_size: usize,
+    /// Registered-but-idle member-ticks the straggler policy filled.
+    pub idle_fills: u64,
+    // Per-stage tick latency percentiles (seconds).
+    pub infer_p50: f32,
+    pub infer_p95: f32,
+    pub gather_p50: f32,
+    pub gather_p95: f32,
+    pub step_p50: f32,
+    pub step_p95: f32,
+}
+
 /// Point-in-time counters for one shard (see [`SimServer::stats`]).
 #[derive(Clone, Debug)]
 pub struct ShardStats {
@@ -274,6 +304,8 @@ pub struct ShardStats {
     /// Submit→result latency percentiles over recent steps (seconds).
     pub latency_p50: f32,
     pub latency_p95: f32,
+    /// Policy-tenancy counters, once the shard has hosted a policy lease.
+    pub tenant: Option<TenantStats>,
 }
 
 impl ShardStats {
@@ -297,6 +329,14 @@ pub struct SimServer {
     /// Serializes `connect` so the activation snapshot admission reads
     /// cannot race another admission decision.
     admission: Mutex<()>,
+    /// Policy checkpoints for tenant leases (`None`: the server serves
+    /// envs only and `connect_with_policy` is declined — the artifact
+    /// gate).
+    vault: Option<Arc<PolicyVault>>,
+    /// Per-shard tenant registries, created with the shard's first
+    /// policy lease (each spawns one tenant driver thread).
+    tenancy: Mutex<Vec<Option<Arc<TenantShared>>>>,
+    tenant_drivers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl SimServer {
@@ -318,6 +358,21 @@ impl SimServer {
         specs: Vec<ShardSpec>,
         pool: Arc<WorkerPool>,
         mem_budget: Option<usize>,
+    ) -> Result<SimServer> {
+        SimServer::with_vault(specs, pool, mem_budget, None)
+    }
+
+    /// [`with_budget`](SimServer::with_budget) plus a [`PolicyVault`]:
+    /// with one, sessions may lease a policy alongside their env slots
+    /// ([`connect_with_policy`](SimServer::connect_with_policy)) and the
+    /// server closes the act→observe loop itself. Without one, policy
+    /// leases are declined with a clear error — exactly the
+    /// `artifacts/manifest.json` gate the coordinator's eval uses.
+    pub fn with_vault(
+        specs: Vec<ShardSpec>,
+        pool: Arc<WorkerPool>,
+        mem_budget: Option<usize>,
+        vault: Option<PolicyVault>,
     ) -> Result<SimServer> {
         if specs.is_empty() {
             bail!("SimServer needs at least one shard");
@@ -372,13 +427,22 @@ impl SimServer {
             shards.push(shared);
             drivers.push(driver);
         }
+        let n_shards = shards.len();
         Ok(SimServer {
             shards,
             drivers,
             next_session: AtomicU64::new(1),
             mem_budget,
             admission: Mutex::new(()),
+            vault: vault.map(Arc::new),
+            tenancy: Mutex::new((0..n_shards).map(|_| None).collect()),
+            tenant_drivers: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Whether this server holds a policy vault (policy leases possible).
+    pub fn has_vault(&self) -> bool {
+        self.vault.is_some()
     }
 
     /// Lease `n_envs` slots on the first `task` shard with room and open
@@ -447,14 +511,138 @@ impl SimServer {
         )
     }
 
+    /// Lease `n_envs` slots *plus* the server-side policy `variant`, and
+    /// let the server drive them: the returned [`TenantSession`] only
+    /// sets goals and streams back trajectories. Greedy actions — see
+    /// [`connect_with_policy_mode`](SimServer::connect_with_policy_mode)
+    /// for sampled ones. Fails without a vault (no artifacts), for
+    /// unknown variants, and when the variant's geometry cannot drive
+    /// this shard (obs shape mismatch, or no `infer_n{slots}` artifact —
+    /// tenant inference always runs at full shard width).
+    pub fn connect_with_policy(
+        &self,
+        task: Task,
+        n_envs: usize,
+        variant: &str,
+    ) -> Result<TenantSession> {
+        self.connect_with_policy_mode(task, n_envs, variant, ActionMode::Greedy)
+    }
+
+    /// [`connect_with_policy`](SimServer::connect_with_policy) with an
+    /// explicit [`ActionMode`].
+    pub fn connect_with_policy_mode(
+        &self,
+        task: Task,
+        n_envs: usize,
+        variant_name: &str,
+        mode: ActionMode,
+    ) -> Result<TenantSession> {
+        let Some(vault) = &self.vault else {
+            bail!(
+                "connect_with_policy: no policy artifacts on this server — \
+                 start it over a directory holding artifacts/manifest.json \
+                 (run `make artifacts`), or serve envs only via connect()"
+            );
+        };
+        let variant = vault.variant(variant_name)?;
+        let session = self.connect(task, n_envs)?;
+        let obs_floats = session.obs_floats();
+        if variant.res * variant.res * variant.in_ch != obs_floats {
+            bail!(
+                "connect_with_policy: variant {variant_name:?} expects \
+                 {}x{}x{} observations but the shard renders {obs_floats} \
+                 floats per env — serve with --res {}",
+                variant.res,
+                variant.res,
+                variant.in_ch,
+                variant.res
+            );
+        }
+        let shard_idx = self
+            .shards
+            .iter()
+            .position(|s| Arc::ptr_eq(s, session.shard()))
+            .expect("session maps to a shard");
+        let width = self.shards[shard_idx].slots;
+        if !variant.infer_ns.contains(&width) {
+            bail!(
+                "connect_with_policy: tenant inference runs at full shard \
+                 width, but variant {variant_name:?} exports no \
+                 infer_n{width} artifact (exported: {:?}) — size the shard \
+                 to match (--slots) or re-export the preset",
+                variant.infer_ns
+            );
+        }
+        // First policy lease on the shard stands up its tenant registry
+        // + driver thread.
+        let tshared = {
+            let mut tenancy = self.tenancy.lock().unwrap();
+            if tenancy[shard_idx].is_none() {
+                let straggler = self.shards[shard_idx].state.lock().unwrap().coal.policy();
+                let shared = Arc::new(TenantShared::new(width, straggler));
+                let for_driver = Arc::clone(&shared);
+                let shard = Arc::clone(&self.shards[shard_idx]);
+                let vault = Arc::clone(vault);
+                let driver = std::thread::Builder::new()
+                    .name("sim-serve-tenant".into())
+                    .spawn(move || tenant_driver(for_driver, shard, vault))
+                    .map_err(|e| anyhow!("spawn tenant driver thread: {e}"))?;
+                self.tenant_drivers.lock().unwrap().push(driver);
+                tenancy[shard_idx] = Some(shared);
+            }
+            Arc::clone(tenancy[shard_idx].as_ref().unwrap())
+        };
+        let tenant_id = session.id();
+        let slots = session.slots().to_vec();
+        let v = session.view();
+        let initial = TrajStep {
+            step: v.step,
+            actions: Vec::new(),
+            obs: v.obs.to_vec(),
+            goal: v.goal.to_vec(),
+            rewards: v.rewards.to_vec(),
+            dones: v.dones.to_vec(),
+            successes: v.successes.to_vec(),
+            spl: v.spl.to_vec(),
+            scores: v.scores.to_vec(),
+        };
+        let (tx, rx) = std::sync::mpsc::sync_channel(TRAJ_QUEUE);
+        {
+            let mut st = tshared.state.lock().unwrap();
+            if st.shutdown {
+                let msg = st.error.clone().unwrap_or_else(|| "tenant driver stopped".into());
+                bail!("connect_with_policy: {msg}");
+            }
+            st.coal.register(tenant_id);
+            st.joins.push(Join {
+                tenant: tenant_id,
+                session,
+                mode,
+                variant: variant_name.to_string(),
+                tx,
+            });
+            tshared.posted.notify_all();
+        }
+        Ok(TenantSession::new(
+            TenantControl::new(tshared, tenant_id),
+            task,
+            obs_floats,
+            slots,
+            rx,
+            initial,
+        ))
+    }
+
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
     /// Point-in-time stats for every shard: occupancy, queue depth,
-    /// step counts, straggler fills, and latency percentiles.
+    /// step counts, straggler fills, latency percentiles, and — for
+    /// shards hosting policy tenants — inference-coalescing counters.
     pub fn stats(&self) -> Vec<ShardStats> {
-        self.shards
+        let mut out: Vec<ShardStats> = self
+            .shards
             .iter()
             .map(|sh| {
                 let st = sh.state.lock().unwrap();
@@ -471,16 +659,51 @@ impl SimServer {
                     resident_bytes: sh.resident_bytes,
                     latency_p50,
                     latency_p95,
+                    tenant: None,
                 }
             })
-            .collect()
+            .collect();
+        let tenancy = self.tenancy.lock().unwrap();
+        for (stats, tshared) in out.iter_mut().zip(tenancy.iter()) {
+            let Some(ts) = tshared else { continue };
+            let st = ts.state.lock().unwrap();
+            let [infer_p50, infer_p95] = st.infer_lat.percentiles([0.5, 0.95]);
+            let [gather_p50, gather_p95] = st.gather_lat.percentiles([0.5, 0.95]);
+            let [step_p50, step_p95] = st.step_lat.percentiles([0.5, 0.95]);
+            stats.tenant = Some(TenantStats {
+                tenants: st.coal.registered(),
+                agent_steps: st.agent_steps,
+                infer_runs: st.infer_runs,
+                infer_batch_size: ts.width,
+                idle_fills: st.coal.idle_fills,
+                infer_p50,
+                infer_p95,
+                gather_p50,
+                gather_p95,
+                step_p50,
+                step_p95,
+            });
+        }
+        out
     }
 }
 
 impl Drop for SimServer {
     fn drop(&mut self) {
+        // Shards first: a tenant driver blocked in a ticket wait (e.g. a
+        // Wait-policy co-tenant never submitted) unblocks with an error
+        // once its shard fails; then the tenant drivers can be joined
+        // before the shard threads are.
         for sh in &self.shards {
             sh.fail("server shut down".into());
+        }
+        for ts in self.tenancy.lock().unwrap().iter().flatten() {
+            let mut st = ts.state.lock().unwrap();
+            st.shutdown = true;
+            ts.posted.notify_all();
+        }
+        for d in self.tenant_drivers.lock().unwrap().drain(..) {
+            let _ = d.join();
         }
         for d in self.drivers.drain(..) {
             let _ = d.join();

@@ -80,6 +80,16 @@ impl Session {
         self.slots.len()
     }
 
+    /// The shard backing this lease (tenant-driver plumbing).
+    pub(crate) fn shard(&self) -> &Arc<ShardShared> {
+        &self.shard
+    }
+
+    /// This session's lease id on the shard coalescer.
+    pub(crate) fn id(&self) -> u64 {
+        self.id
+    }
+
     /// Floats per env observation tile (shard render config).
     pub fn obs_floats(&self) -> usize {
         self.shard.obs_floats

@@ -1,0 +1,295 @@
+//! Per-shard **inference** coalescer: decides when the tenant driver runs
+//! one batched policy forward for every tenant session sharing the shard.
+//!
+//! This mirrors [`serve::coalescer`](crate::serve::coalescer) one level
+//! up the stack. The action coalescer reconciles "many clients, each
+//! owning a few env slots" with "one batch step for everyone"; this one
+//! reconciles "many tenants, each with its own goal" with "one `Exec::run`
+//! per tick for everyone". The analogy is exact:
+//!
+//! | action coalescer            | inference coalescer                |
+//! |-----------------------------|------------------------------------|
+//! | leased slot                 | registered tenant                  |
+//! | pending action              | active goal (steps remaining > 0)  |
+//! | `assemble` → action vector  | `begin_tick` → per-tenant shares   |
+//! | straggler fill              | idle-tenant fill (`STOP`/repeat)   |
+//!
+//! The same [`StragglerPolicy`] drives readiness: `Wait` runs a tick only
+//! when *every* registered tenant has an active goal (deterministic —
+//! tick membership never depends on timing); `Deadline` runs once at
+//! least one tenant is active and the deadline passes, filling idle
+//! tenants' slots per the policy's [`FillAction`].
+//!
+//! Like its sibling, this is plain data guarded by the tenant mutex in
+//! `serve::tenant::driver`; it does no locking, inference, or stepping
+//! itself, which is what keeps it unit-testable without AOT artifacts.
+
+use super::super::coalescer::StragglerPolicy;
+
+/// Cap on a tenant's buffered goal steps — goals accumulate
+/// (`set_goal` while active extends the horizon), and an unbounded
+/// horizon from a hostile client would pin the driver forever.
+pub const MAX_GOAL_STEPS: u32 = 1 << 20;
+
+/// One registered tenant's coalescing state.
+struct Member {
+    tenant: u64,
+    /// Goal steps still to drive. Zero = idle.
+    remaining: u32,
+    /// The next tick is this tenant's first after idling: the driver
+    /// must zero its recurrent-state rows so every goal starts from the
+    /// same `h = c = 0` a fresh client-side `Policy` would.
+    fresh: bool,
+}
+
+/// One tenant's share of a tick (returned by
+/// [`InferenceCoalescer::begin_tick`], registration order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TickShare {
+    pub tenant: u64,
+    /// Participates in this tick (goal active). Idle members' slots are
+    /// filled by the driver instead (STOP or repeat, per the policy).
+    pub active: bool,
+    /// First tick of a goal posted while idle — reset recurrent rows.
+    pub fresh: bool,
+}
+
+/// Goal + tick-assembly state for one shard's tenants (see module docs).
+pub struct InferenceCoalescer {
+    policy: StragglerPolicy,
+    /// Registration order; order is stable so tick plans are too.
+    members: Vec<Member>,
+    /// Driver ticks waited since the first active goal of this tick.
+    waited: u32,
+    /// Member-ticks the straggler policy filled (tenant registered but
+    /// idle while the tick ran), cumulative.
+    pub idle_fills: u64,
+}
+
+impl InferenceCoalescer {
+    pub fn new(policy: StragglerPolicy) -> InferenceCoalescer {
+        InferenceCoalescer {
+            policy,
+            members: Vec::new(),
+            waited: 0,
+            idle_fills: 0,
+        }
+    }
+
+    pub fn policy(&self) -> StragglerPolicy {
+        self.policy
+    }
+
+    /// Register a tenant (starts idle — no goal).
+    pub fn register(&mut self, tenant: u64) {
+        debug_assert!(self.members.iter().all(|m| m.tenant != tenant));
+        self.members.push(Member {
+            tenant,
+            remaining: 0,
+            fresh: false,
+        });
+    }
+
+    /// Drop a tenant's registration. Returns whether it was registered.
+    /// Mirrors `Coalescer::release`: if the departure drains the last
+    /// active goal, the deadline clock resets.
+    pub fn unregister(&mut self, tenant: u64) -> bool {
+        let before = self.members.len();
+        self.members.retain(|m| m.tenant != tenant);
+        if !self.has_active() {
+            self.waited = 0;
+        }
+        self.members.len() != before
+    }
+
+    /// Extend `tenant`'s goal by `steps` (saturating at
+    /// [`MAX_GOAL_STEPS`]). Returns `false` for an unknown tenant. A goal
+    /// posted while idle marks the member fresh (recurrent reset).
+    pub fn set_goal(&mut self, tenant: u64, steps: u32) -> bool {
+        let Some(m) = self.members.iter_mut().find(|m| m.tenant == tenant) else {
+            return false;
+        };
+        if m.remaining == 0 && steps > 0 {
+            m.fresh = true;
+        }
+        m.remaining = m.remaining.saturating_add(steps).min(MAX_GOAL_STEPS);
+        true
+    }
+
+    /// Registered tenants.
+    pub fn registered(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Tenants with an active goal.
+    pub fn active(&self) -> usize {
+        self.members.iter().filter(|m| m.remaining > 0).count()
+    }
+
+    pub fn has_active(&self) -> bool {
+        self.members.iter().any(|m| m.remaining > 0)
+    }
+
+    /// A full tick can run: at least one tenant, and every registered
+    /// tenant has an active goal.
+    pub fn ready(&self) -> bool {
+        !self.members.is_empty() && self.members.iter().all(|m| m.remaining > 0)
+    }
+
+    /// One driver tick elapsed while waiting on idle tenants.
+    pub fn tick(&mut self) {
+        self.waited += 1;
+    }
+
+    pub fn waited(&self) -> u32 {
+        self.waited
+    }
+
+    /// Commit to running a tick: returns each member's share (active
+    /// members' goals are decremented, idle members are counted as
+    /// straggler fills) and resets the deadline clock. The driver calls
+    /// this exactly once per coalesced forward, under the tenant lock.
+    pub fn begin_tick(&mut self) -> Vec<TickShare> {
+        self.waited = 0;
+        self.members
+            .iter_mut()
+            .map(|m| {
+                let active = m.remaining > 0;
+                let fresh = active && m.fresh;
+                if active {
+                    m.remaining -= 1;
+                    m.fresh = false;
+                } else {
+                    self.idle_fills += 1;
+                }
+                TickShare {
+                    tenant: m.tenant,
+                    active,
+                    fresh,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::coalescer::FillAction;
+    use super::*;
+
+    fn deadline(ticks: u32) -> StragglerPolicy {
+        StragglerPolicy::Deadline {
+            ticks,
+            fill: FillAction::NoOp,
+        }
+    }
+
+    #[test]
+    fn empty_coalescer_is_never_ready() {
+        let c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        assert!(!c.ready());
+        assert!(!c.has_active());
+        assert_eq!(c.registered(), 0);
+    }
+
+    #[test]
+    fn wait_policy_needs_every_member_active() {
+        let mut c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        c.register(1);
+        c.register(2);
+        assert!(!c.ready());
+        assert!(c.set_goal(1, 4));
+        assert!(!c.ready(), "one idle member must hold the tick");
+        assert!(c.set_goal(2, 4));
+        assert!(c.ready());
+    }
+
+    #[test]
+    fn goals_accumulate_and_decrement_per_tick() {
+        let mut c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        c.register(7);
+        c.set_goal(7, 2);
+        c.set_goal(7, 3); // extends the horizon
+        for _ in 0..5 {
+            assert!(c.ready());
+            let plan = c.begin_tick();
+            assert_eq!(plan.len(), 1);
+            assert!(plan[0].active);
+        }
+        assert!(!c.ready());
+        assert!(!c.has_active());
+    }
+
+    #[test]
+    fn first_tick_after_idle_is_fresh() {
+        let mut c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        c.register(1);
+        c.set_goal(1, 2);
+        let plan = c.begin_tick();
+        assert!(plan[0].fresh, "goal start must reset recurrent rows");
+        let plan = c.begin_tick();
+        assert!(!plan[0].fresh, "mid-goal ticks keep recurrent state");
+        // back to idle, then a new goal: fresh again
+        c.set_goal(1, 1);
+        let plan = c.begin_tick();
+        assert!(plan[0].fresh);
+    }
+
+    #[test]
+    fn goal_for_unknown_tenant_is_rejected() {
+        let mut c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        assert!(!c.set_goal(99, 4));
+    }
+
+    #[test]
+    fn idle_members_are_counted_as_fills() {
+        let mut c = InferenceCoalescer::new(deadline(2));
+        c.register(1);
+        c.register(2);
+        c.set_goal(1, 1);
+        assert!(!c.ready(), "member 2 idle");
+        assert!(c.has_active(), "deadline clock may start");
+        c.tick();
+        c.tick();
+        assert_eq!(c.waited(), 2);
+        let plan = c.begin_tick();
+        assert_eq!(c.waited(), 0, "begin_tick resets the deadline clock");
+        assert!(plan[0].active && !plan[1].active);
+        assert_eq!(c.idle_fills, 1);
+    }
+
+    #[test]
+    fn unregister_drains_and_resets_the_clock() {
+        let mut c = InferenceCoalescer::new(deadline(8));
+        c.register(1);
+        c.register(2);
+        c.set_goal(1, 3);
+        c.tick();
+        assert_eq!(c.waited(), 1);
+        assert!(c.unregister(1), "was registered");
+        assert!(!c.unregister(1), "idempotent");
+        assert_eq!(c.waited(), 0, "no active goal left: clock resets");
+        // the remaining idle member alone never fires a tick
+        assert!(!c.ready() && !c.has_active());
+        c.set_goal(2, 1);
+        assert!(c.ready());
+    }
+
+    #[test]
+    fn goal_steps_saturate_at_the_cap() {
+        let mut c = InferenceCoalescer::new(StragglerPolicy::Wait);
+        c.register(1);
+        c.set_goal(1, u32::MAX);
+        c.set_goal(1, u32::MAX);
+        let plan = c.begin_tick();
+        assert!(plan[0].active);
+        // still bounded: the horizon is MAX_GOAL_STEPS, not 2^32
+        let mut left = 1u64;
+        while c.has_active() {
+            c.begin_tick();
+            left += 1;
+            assert!(left <= MAX_GOAL_STEPS as u64);
+        }
+        assert_eq!(left, MAX_GOAL_STEPS as u64);
+    }
+}

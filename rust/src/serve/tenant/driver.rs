@@ -1,0 +1,479 @@
+//! The per-shard **tenant driver**: one thread that closes the
+//! act→observe loop for every policy tenant of a shard.
+//!
+//! Each tick is `observe → coalesced infer → pick actions → submit`:
+//!
+//! 1. Snapshot the shard's latest published [`StepResult`] — the full
+//!    batch observation, already resident (no gather: the policy runs at
+//!    shard width, so tenant slices are just rows of the batch).
+//! 2. One `Exec::run` per (shard, variant) group regardless of tenant
+//!    count — the [`InferenceCoalescer`] decides when the tick fires
+//!    (`Wait`: every tenant has an active goal; `Deadline`: at least one
+//!    does and the clock ran out), exactly like the action coalescer one
+//!    layer down.
+//! 3. Per tenant, slice its slots' logit rows: argmax for `Greedy`
+//!    tenants, categorical sampling on the tenant's own RNG stream for
+//!    `Sample` tenants. Idle tenants' slots are filled per the shard's
+//!    [`FillAction`] (STOP or repeat-last).
+//! 4. Submit every member's actions through its ordinary [`Session`] —
+//!    all submissions before any wait, or a `Wait`-policy shard would
+//!    deadlock against itself — then wait the tickets and stream each
+//!    active member one [`TrajStep`].
+//!
+//! `Exec` is `Rc`-held (not `Send`), so the driver builds its own
+//! `Runtime` and loads `infer_n{width}` itself; the [`PolicyVault`] only
+//! hands it paths and (`Send`) parameter vectors. Recurrent state lives
+//! here too, full-width per variant, with rows zeroed at goal start, on
+//! episode end, and for slots no tenant of that variant owns.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::metrics::Window;
+use crate::policy::{argmax_action, Policy};
+use crate::runtime::Runtime;
+use crate::serve::coalescer::{FillAction, StragglerPolicy};
+use crate::serve::server::{ShardShared, TICK};
+use crate::serve::session::Session;
+use crate::sim::ACTION_STOP;
+
+use super::coalescer::{InferenceCoalescer, TickShare};
+use super::session::{ActionMode, TrajMsg, TrajStep};
+use super::vault::PolicyVault;
+
+/// Trajectory steps buffered per tenant handle before the driver blocks
+/// on the consumer. A remote tenant's backpressure is the wire outbox
+/// (slow readers get disconnected there); an in-process tenant that
+/// stops reading stalls its co-tenants, same as a `Wait`-policy session
+/// that stops submitting.
+pub(crate) const TRAJ_QUEUE: usize = 8;
+
+/// How many per-stage latency samples the tenant window keeps.
+const TENANT_LATENCY_WINDOW: usize = 4096;
+
+/// A pending lease hand-off from `connect_with_policy` to the driver.
+pub(crate) struct Join {
+    pub tenant: u64,
+    pub session: Session,
+    pub mode: ActionMode,
+    pub variant: String,
+    pub tx: SyncSender<TrajMsg>,
+}
+
+/// Mutex-guarded tenant registry + counters for one shard.
+pub(crate) struct TenantState {
+    pub coal: InferenceCoalescer,
+    /// Leases accepted but not yet adopted by the driver.
+    pub joins: Vec<Join>,
+    /// Tenants detached since the driver last looked.
+    pub detached: Vec<u64>,
+    pub shutdown: bool,
+    pub error: Option<String>,
+    /// `Exec::run` invocations, cumulative.
+    pub infer_runs: u64,
+    /// Server-driven env steps (sum of active members' slot counts).
+    pub agent_steps: u64,
+    // Per-stage tick latency samples (seconds).
+    pub gather_lat: Window,
+    pub infer_lat: Window,
+    pub step_lat: Window,
+}
+
+/// One shard's tenant registry as seen by handles and the driver thread.
+pub(crate) struct TenantShared {
+    /// Inference batch width == the shard's slot count.
+    pub width: usize,
+    pub state: Mutex<TenantState>,
+    /// Handles → driver: goal posted / member joined / detached /
+    /// shutdown.
+    pub posted: Condvar,
+}
+
+impl TenantShared {
+    pub fn new(width: usize, policy: StragglerPolicy) -> TenantShared {
+        TenantShared {
+            width,
+            state: Mutex::new(TenantState {
+                coal: InferenceCoalescer::new(policy),
+                joins: Vec::new(),
+                detached: Vec::new(),
+                shutdown: false,
+                error: None,
+                infer_runs: 0,
+                agent_steps: 0,
+                gather_lat: Window::new(TENANT_LATENCY_WINDOW),
+                infer_lat: Window::new(TENANT_LATENCY_WINDOW),
+                step_lat: Window::new(TENANT_LATENCY_WINDOW),
+            }),
+            posted: Condvar::new(),
+        }
+    }
+}
+
+/// One adopted tenant, owned by the driver thread.
+struct MemberState {
+    tenant: u64,
+    session: Session,
+    slots: Vec<usize>,
+    variant: String,
+    greedy: bool,
+    rng: crate::util::rng::Rng,
+    tx: SyncSender<TrajMsg>,
+    /// Actions staged for the current tick; between ticks, the last
+    /// actions stepped (the `Repeat` idle fill).
+    staged: Vec<u8>,
+}
+
+/// One policy variant's executable + full-width recurrent state.
+struct Engine {
+    policy: Policy,
+    params: Arc<Vec<f32>>,
+}
+
+enum Wake {
+    Tick(Vec<TickShare>),
+    Membership { joins: Vec<Join>, detached: Vec<u64> },
+    Shutdown,
+}
+
+/// Driver entry point (one thread per shard with policy tenants).
+pub(crate) fn tenant_driver(
+    shared: Arc<TenantShared>,
+    shard: Arc<ShardShared>,
+    vault: Arc<PolicyVault>,
+) {
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            fail(&shared, &mut HashMap::new(), format!("tenant runtime: {e:#}"));
+            return;
+        }
+    };
+    let width = shared.width;
+    let mut members: HashMap<u64, MemberState> = HashMap::new();
+    let mut engines: HashMap<String, Engine> = HashMap::new();
+    loop {
+        // Phase 1: wait until a tick can fire (or membership changed).
+        let wake = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    break Wake::Shutdown;
+                }
+                if !st.joins.is_empty() || !st.detached.is_empty() {
+                    break Wake::Membership {
+                        joins: std::mem::take(&mut st.joins),
+                        detached: std::mem::take(&mut st.detached),
+                    };
+                }
+                if st.coal.ready() {
+                    break Wake::Tick(st.coal.begin_tick());
+                }
+                match st.coal.policy() {
+                    StragglerPolicy::Deadline { ticks, .. } if st.coal.has_active() => {
+                        if st.coal.waited() >= ticks {
+                            break Wake::Tick(st.coal.begin_tick());
+                        }
+                        let (guard, timeout) = shared.posted.wait_timeout(st, TICK).unwrap();
+                        st = guard;
+                        if timeout.timed_out() {
+                            st.coal.tick();
+                        }
+                    }
+                    _ => st = shared.posted.wait(st).unwrap(),
+                }
+            }
+        };
+        match wake {
+            Wake::Shutdown => {
+                let msg = {
+                    let st = shared.state.lock().unwrap();
+                    st.error.clone().unwrap_or_else(|| "server shut down".into())
+                };
+                for m in members.values() {
+                    let _ = m.tx.try_send(TrajMsg::Error(msg.clone()));
+                }
+                return;
+            }
+            Wake::Membership { joins, detached } => {
+                for id in detached {
+                    members.remove(&id); // Session drop releases the lease
+                }
+                for j in joins {
+                    adopt(&rt, &vault, &shared, &mut engines, &mut members, j, width);
+                }
+            }
+            Wake::Tick(plan) => {
+                if !run_tick(&shared, &shard, &mut engines, &mut members, &plan, width) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Load (or reuse) the variant engine and adopt a joined member. On
+/// engine failure the member alone is failed; co-tenants keep running.
+fn adopt(
+    rt: &Runtime,
+    vault: &PolicyVault,
+    shared: &TenantShared,
+    engines: &mut HashMap<String, Engine>,
+    members: &mut HashMap<u64, MemberState>,
+    j: Join,
+    width: usize,
+) {
+    if !engines.contains_key(&j.variant) {
+        let built = (|| -> anyhow::Result<Engine> {
+            let variant = vault.variant(&j.variant)?;
+            let params = vault.params_for(rt, &variant)?;
+            let policy = Policy::new(rt, vault.manifest(), &variant, width, 0)?;
+            Ok(Engine { policy, params })
+        })();
+        match built {
+            Ok(engine) => {
+                engines.insert(j.variant.clone(), engine);
+            }
+            Err(e) => {
+                let _ = j
+                    .tx
+                    .try_send(TrajMsg::Error(format!("policy engine: {e:#}")));
+                shared.state.lock().unwrap().coal.unregister(j.tenant);
+                return; // j.session drops here: lease released
+            }
+        }
+    }
+    let slots = j.session.slots().to_vec();
+    let n = slots.len();
+    members.insert(
+        j.tenant,
+        MemberState {
+            tenant: j.tenant,
+            session: j.session,
+            slots,
+            variant: j.variant,
+            greedy: matches!(j.mode, ActionMode::Greedy),
+            rng: crate::util::rng::Rng::new(match j.mode {
+                ActionMode::Sample { seed } => seed,
+                ActionMode::Greedy => 0,
+            }),
+            tx: j.tx,
+            staged: vec![ACTION_STOP; n],
+        },
+    );
+}
+
+/// One coalesced tick. Returns `false` when the shard died and the
+/// driver must exit.
+fn run_tick(
+    shared: &TenantShared,
+    shard: &ShardShared,
+    engines: &mut HashMap<String, Engine>,
+    members: &mut HashMap<u64, MemberState>,
+    plan: &[TickShare],
+    width: usize,
+) -> bool {
+    let fill = match shared.state.lock().unwrap().coal.policy() {
+        StragglerPolicy::Deadline { fill, .. } => fill,
+        StragglerPolicy::Wait => FillAction::NoOp,
+    };
+    // Observe: the shard's latest published step IS the batch input —
+    // tenants are rows of it, no gather needed.
+    let t0 = Instant::now();
+    let snapshot = Arc::clone(&shard.state.lock().unwrap().result);
+    // Fresh goals start from zeroed recurrent rows, like a fresh
+    // client-side Policy.
+    let mut reset = vec![false; width];
+    for share in plan.iter().filter(|s| s.fresh) {
+        if let Some(m) = members.get(&share.tenant) {
+            for &slot in &m.slots {
+                reset[slot] = true;
+            }
+        }
+    }
+    let gather_s = t0.elapsed().as_secs_f32();
+    // Coalesced infer: one Exec::run per variant with >=1 active member.
+    let t1 = Instant::now();
+    let mut logits: HashMap<String, Vec<f32>> = HashMap::new();
+    let mut runs = 0u64;
+    for share in plan.iter().filter(|s| s.active) {
+        let Some(m) = members.get(&share.tenant) else { continue };
+        if logits.contains_key(&m.variant) {
+            continue;
+        }
+        let variant = m.variant.clone();
+        let eng = engines.get_mut(&variant).unwrap();
+        eng.policy.reset_done(&reset);
+        match eng.policy.logits_step(&eng.params, &snapshot.obs, &snapshot.goal) {
+            Ok(l) => {
+                logits.insert(variant, l);
+                runs += 1;
+            }
+            Err(e) => {
+                fail(shared, members, format!("tenant inference: {e:#}"));
+                return false;
+            }
+        }
+    }
+    let infer_s = t1.elapsed().as_secs_f32();
+    // Pick actions: per-tenant rows of the batched logits; idle members
+    // get the straggler fill.
+    let mut agent_steps = 0u64;
+    for share in plan {
+        let Some(m) = members.get_mut(&share.tenant) else { continue };
+        if share.active {
+            let l = &logits[m.variant.as_str()];
+            let a = engines[&m.variant].policy.num_actions;
+            for (j, &slot) in m.slots.iter().enumerate() {
+                let row = &l[slot * a..(slot + 1) * a];
+                m.staged[j] = if m.greedy {
+                    argmax_action(row)
+                } else {
+                    m.rng.categorical(row).0 as u8
+                };
+            }
+            agent_steps += m.slots.len() as u64;
+        } else if fill == FillAction::NoOp {
+            m.staged.fill(ACTION_STOP);
+        } // Repeat: staged still holds the last stepped actions
+    }
+    // Submit every member, then wait — all submissions must land before
+    // any wait or a Wait-policy shard coalescer would never fire.
+    let t2 = Instant::now();
+    let active: HashMap<u64, bool> = plan.iter().map(|s| (s.tenant, s.active)).collect();
+    let mut stalled: Vec<u64> = Vec::new();
+    let mut resets: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut tick_err: Option<String> = None;
+    {
+        let mut inflight = Vec::with_capacity(members.len());
+        for m in members.values_mut() {
+            let MemberState {
+                tenant,
+                session,
+                slots,
+                variant,
+                tx,
+                staged,
+                ..
+            } = m;
+            match session.submit(staged) {
+                Ok(ticket) => inflight.push((*tenant, slots, variant, tx, staged, ticket)),
+                Err(e) => {
+                    tick_err = Some(format!("tenant submit: {e:#}"));
+                    break;
+                }
+            }
+        }
+        if tick_err.is_none() {
+            for (tenant, slots, variant, tx, staged, ticket) in inflight {
+                let view = match ticket.wait() {
+                    Ok(v) => v,
+                    Err(e) => {
+                        tick_err = Some(format!("tenant step: {e:#}"));
+                        break;
+                    }
+                };
+                let done_slots: Vec<usize> = slots
+                    .iter()
+                    .zip(view.dones)
+                    .filter(|(_, &d)| d)
+                    .map(|(&s, _)| s)
+                    .collect();
+                if !done_slots.is_empty() {
+                    resets.push((variant.clone(), done_slots));
+                }
+                if active.get(&tenant).copied().unwrap_or(false) {
+                    let ts = TrajStep {
+                        step: view.step,
+                        actions: staged.clone(),
+                        obs: view.obs.to_vec(),
+                        goal: view.goal.to_vec(),
+                        rewards: view.rewards.to_vec(),
+                        dones: view.dones.to_vec(),
+                        successes: view.successes.to_vec(),
+                        spl: view.spl.to_vec(),
+                        scores: view.scores.to_vec(),
+                    };
+                    // Blocking-send semantics (a stalled in-process
+                    // consumer stalls its co-tenants, like a Wait-policy
+                    // session that stops submitting) — but poll the
+                    // shutdown flag so server drop can't deadlock on a
+                    // full trajectory queue.
+                    let mut msg = TrajMsg::Step(ts);
+                    loop {
+                        match tx.try_send(msg) {
+                            Ok(()) => break,
+                            Err(TrySendError::Disconnected(_)) => {
+                                stalled.push(tenant);
+                                break;
+                            }
+                            Err(TrySendError::Full(m)) => {
+                                if shared.state.lock().unwrap().shutdown {
+                                    stalled.push(tenant);
+                                    break;
+                                }
+                                std::thread::sleep(TICK);
+                                msg = m;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(msg) = tick_err {
+        fail(shared, members, msg);
+        return false;
+    }
+    let step_s = t2.elapsed().as_secs_f32();
+    // Episode ends zero recurrent rows (matches Policy::reset_done on
+    // the client-side loop); so do rows no member of the variant owns,
+    // which keeps co-resident plain sessions' slots from accumulating
+    // recurrent garbage between leases.
+    for (variant, eng) in engines.iter_mut() {
+        let mut mask = vec![true; width];
+        for m in members.values().filter(|m| &m.variant == variant) {
+            for &slot in &m.slots {
+                mask[slot] = false;
+            }
+        }
+        for (v, slots) in &resets {
+            if v == variant {
+                for &slot in slots {
+                    mask[slot] = true;
+                }
+            }
+        }
+        eng.policy.reset_done(&mask);
+    }
+    // Publish counters; reap members whose handle hung up mid-stream.
+    {
+        let mut st = shared.state.lock().unwrap();
+        st.infer_runs += runs;
+        st.agent_steps += agent_steps;
+        st.gather_lat.push(gather_s);
+        st.infer_lat.push(infer_s);
+        st.step_lat.push(step_s);
+        for tenant in &stalled {
+            st.coal.unregister(*tenant);
+        }
+    }
+    for tenant in stalled {
+        members.remove(&tenant);
+    }
+    true
+}
+
+/// Terminal failure: tell every member, poison the registry, exit.
+fn fail(shared: &TenantShared, members: &mut HashMap<u64, MemberState>, msg: String) {
+    for m in members.values() {
+        let _ = m.tx.try_send(TrajMsg::Error(msg.clone()));
+    }
+    members.clear();
+    let mut st = shared.state.lock().unwrap();
+    st.shutdown = true;
+    st.error = Some(msg);
+    shared.posted.notify_all();
+}

@@ -1,0 +1,55 @@
+//! In-server policy tenant: batched inference-as-a-service behind the
+//! session API.
+//!
+//! The serve layer up to here amortizes *simulation* across tenants; the
+//! act→observe loop still crossed the wire twice per step because every
+//! client ran its own policy. This module closes that loop server-side —
+//! the paper's batching principle applied one layer up: a session leases
+//! env slots *plus* a policy checkpoint
+//! ([`SimServer::connect_with_policy`](crate::serve::SimServer::connect_with_policy)),
+//! and the server drives `observe → coalesced infer → pick action →
+//! submit` itself. Tenant clients only set goals and stream back
+//! trajectories:
+//!
+//! ```ignore
+//! let server = SimServer::with_vault(specs, pool, None, Some(vault))?;
+//! let mut agent = server.connect_with_policy(Task::PointNav, 4, "test")?;
+//! agent.set_goal(64)?;                       // "drive me for 64 steps"
+//! while let Some(step) = agent.next_step()? { // obs/action/reward/done
+//!     train_or_log(step);
+//! }
+//! ```
+//!
+//! ```text
+//!  tenant A ──set_goal──┐                       ┌─► TrajStep stream A
+//!  tenant B ──set_goal──┤  InferenceCoalescer   ├─► TrajStep stream B
+//!  tenant C ──(idle)────┤  (Wait/Deadline tick) │   (C's slots: STOP
+//!                       ▼                       │    or repeat fill)
+//!              one Exec::run per tick ──────────┘
+//!              (full shard width, per variant)
+//! ```
+//!
+//! The pieces mirror the env-serving stack one-for-one: [`PolicyVault`]
+//! resolves variants/checkpoints through the same `runtime/` manifest the
+//! coordinator's eval uses (and gates on `artifacts/manifest.json` the
+//! same way); the [`InferenceCoalescer`](coalescer::InferenceCoalescer)
+//! is the tenant-granularity sibling of the per-shard action
+//! `Coalescer` (`serve::coalescer`); the driver thread
+//! in [`driver`] plays the shard driver's role for inference. Inference
+//! always runs at full shard width with the `infer_n{slots}` artifact —
+//! tenants are *rows* of the one batched forward, which is what makes a
+//! whole-shard tenant bitwise-identical to a client-side
+//! `Policy::step_greedy` loop (`rust/tests/tenant.rs`).
+//!
+//! On the wire, tenants appear as `LEASE_POLICY`/`GOAL`/`TRAJ` frames
+//! (DESIGN.md §0.8–0.9), `RemoteClient::open_agent`, and the `bps agent`
+//! CLI verb.
+
+pub mod coalescer;
+pub(crate) mod driver;
+pub mod session;
+pub mod vault;
+
+pub use coalescer::{InferenceCoalescer, TickShare, MAX_GOAL_STEPS};
+pub use session::{ActionMode, TenantControl, TenantSession, TrajStep};
+pub use vault::PolicyVault;

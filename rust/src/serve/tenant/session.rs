@@ -1,0 +1,248 @@
+//! [`TenantSession`]: a client's lease of env slots *plus* a server-side
+//! policy — the client sets goals and streams trajectories back; the
+//! server closes the act→observe loop itself.
+//!
+//! Where a plain [`Session`](crate::serve::Session) hands the client an
+//! observation and waits for actions, a tenant session inverts control:
+//! [`set_goal`](TenantSession::set_goal) asks the shard's tenant driver
+//! to drive the lease for N steps, and [`next_step`](
+//! TenantSession::next_step) receives one [`TrajStep`] per server-driven
+//! step (actions chosen, rewards earned, next observation). The handle
+//! never touches the policy or the shard directly; everything flows
+//! through the per-shard `TenantShared` registry (`tenant::driver`) and
+//! a bounded trajectory channel.
+//!
+//! [`TenantControl`] is the handle's cheap, cloneable control plane
+//! (goal posting + detach). The wire layer keeps a clone per remote
+//! tenant so the connection reader can route `GOAL` frames without
+//! owning the trajectory stream.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::sim::Task;
+
+use super::driver::TenantShared;
+
+/// How the server picks actions for a tenant lease.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActionMode {
+    /// Argmax actions — deterministic, and bitwise-comparable to a
+    /// client-side `Policy::step_greedy` loop (the equivalence tests).
+    Greedy,
+    /// Categorical sampling from the policy, on a per-tenant RNG stream
+    /// seeded here — co-tenants never perturb each other's draws.
+    Sample { seed: u64 },
+}
+
+/// One server-driven step of a tenant lease: the actions the policy
+/// chose for the leased slots plus the resulting step slice (same SoA
+/// shape as [`SessionView`](crate::serve::SessionView), owned).
+#[derive(Clone, Debug, Default)]
+pub struct TrajStep {
+    /// Shard batch step these results belong to.
+    pub step: u64,
+    /// Action stepped per leased slot (empty in the initial snapshot).
+    pub actions: Vec<u8>,
+    pub obs: Vec<f32>,
+    pub goal: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<bool>,
+    pub successes: Vec<bool>,
+    pub spl: Vec<f32>,
+    pub scores: Vec<f32>,
+}
+
+/// Driver → handle trajectory stream payload.
+pub(crate) enum TrajMsg {
+    Step(TrajStep),
+    Error(String),
+}
+
+pub(crate) struct ControlInner {
+    shared: Arc<TenantShared>,
+    tenant: u64,
+    detached: AtomicBool,
+}
+
+impl ControlInner {
+    fn detach(&self) {
+        if self.detached.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.coal.unregister(self.tenant);
+        st.detached.push(self.tenant);
+        // Wake the driver: it may now have a complete tick (every
+        // remaining tenant active), or a member to reap.
+        self.shared.posted.notify_all();
+    }
+}
+
+impl Drop for ControlInner {
+    fn drop(&mut self) {
+        self.detach();
+    }
+}
+
+/// Cloneable control plane of a [`TenantSession`] (goal posting and
+/// detach, no trajectory stream). Dropping the last clone detaches.
+#[derive(Clone)]
+pub struct TenantControl {
+    inner: Arc<ControlInner>,
+}
+
+impl TenantControl {
+    pub(crate) fn new(shared: Arc<TenantShared>, tenant: u64) -> TenantControl {
+        TenantControl {
+            inner: Arc::new(ControlInner {
+                shared,
+                tenant,
+                detached: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Ask the server to drive this lease for `steps` more steps. Goals
+    /// accumulate; each goal posted from idle starts with fresh recurrent
+    /// state. One [`TrajStep`] arrives per step on the session stream.
+    pub fn set_goal(&self, steps: u32) -> Result<()> {
+        if steps == 0 {
+            bail!("set_goal: a goal needs at least one step");
+        }
+        if self.inner.detached.load(Ordering::SeqCst) {
+            bail!("set_goal on a detached tenant session");
+        }
+        let mut st = self.inner.shared.state.lock().unwrap();
+        if st.shutdown {
+            let msg = st.error.clone().unwrap_or_else(|| "server shut down".into());
+            bail!("serve: {msg}");
+        }
+        if !st.coal.set_goal(self.inner.tenant, steps) {
+            bail!("set_goal on a detached tenant session");
+        }
+        self.inner.shared.posted.notify_all();
+        Ok(())
+    }
+
+    /// Free the lease: the driver drops the member's slots back to the
+    /// shard (auto-reset filler) and ends the trajectory stream.
+    /// Idempotent; also runs when the last control clone drops.
+    pub fn detach(&self) {
+        self.inner.detach();
+    }
+
+    pub fn detached(&self) -> bool {
+        self.inner.detached.load(Ordering::SeqCst)
+    }
+}
+
+/// A policy-tenant lease (see module docs). `Send`: connect on one
+/// thread, stream from another.
+pub struct TenantSession {
+    control: TenantControl,
+    task: Task,
+    obs_floats: usize,
+    slots: Vec<usize>,
+    rx: Receiver<TrajMsg>,
+    /// The lease's initial observation snapshot (`actions` empty),
+    /// gathered before the driver stepped anything — what a plain
+    /// session's first `view()` would show.
+    initial: TrajStep,
+    steps: u64,
+}
+
+impl TenantSession {
+    pub(crate) fn new(
+        control: TenantControl,
+        task: Task,
+        obs_floats: usize,
+        slots: Vec<usize>,
+        rx: Receiver<TrajMsg>,
+        initial: TrajStep,
+    ) -> TenantSession {
+        TenantSession {
+            control,
+            task,
+            obs_floats,
+            slots,
+            rx,
+            initial,
+            steps: 0,
+        }
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// Floats per env observation tile (shard render config).
+    pub fn obs_floats(&self) -> usize {
+        self.obs_floats
+    }
+
+    /// The shard slot indices backing this lease (ascending).
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    /// The initial observation snapshot (before any server-driven step).
+    pub fn initial(&self) -> &TrajStep {
+        &self.initial
+    }
+
+    /// Server-driven steps streamed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// A cloneable control-plane handle (see [`TenantControl`]).
+    pub fn control(&self) -> TenantControl {
+        self.control.clone()
+    }
+
+    /// See [`TenantControl::set_goal`].
+    pub fn set_goal(&self, steps: u32) -> Result<()> {
+        self.control.set_goal(steps)
+    }
+
+    /// Block for the next server-driven step. `Ok(None)` means the
+    /// session detached cleanly (no more steps will arrive); `Err` means
+    /// the shard or the policy failed mid-goal.
+    pub fn next_step(&mut self) -> Result<Option<TrajStep>> {
+        match self.rx.recv() {
+            Ok(TrajMsg::Step(ts)) => {
+                self.steps += 1;
+                Ok(Some(ts))
+            }
+            Ok(TrajMsg::Error(msg)) => bail!("serve: {msg}"),
+            Err(_) => {
+                // Driver hung up: detached, server shut down, or the
+                // driver dropped us after this handle stalled.
+                if self.control.detached() {
+                    return Ok(None);
+                }
+                let st = self.control.inner.shared.state.lock().unwrap();
+                if let Some(msg) = &st.error {
+                    bail!("serve: {msg}");
+                }
+                if st.shutdown {
+                    bail!("serve: server shut down");
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// See [`TenantControl::detach`]. Idempotent; also runs on drop.
+    pub fn detach(&self) {
+        self.control.detach();
+    }
+}

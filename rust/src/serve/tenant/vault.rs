@@ -1,0 +1,126 @@
+//! [`PolicyVault`]: the server's checkpoint store — resolves a variant
+//! name to (manifest entry, flat parameter vector) for tenant leases.
+//!
+//! The vault reuses exactly the artifact plumbing `coordinator::eval`
+//! uses: `artifacts/manifest.json` names the variants and their AOT
+//! `infer_n{N}` executables, and parameters come from either a
+//! `ParamStore` checkpoint (`bps train` output) or, absent one, the
+//! deterministic `init` artifact seeded with the vault seed — which is
+//! what makes the tenant-vs-local equivalence tests possible: both sides
+//! init from the same seed and must produce the same bits.
+//!
+//! Everything here is metadata plus a params cache; no XLA executable is
+//! loaded on vault threads. Executables are `Rc`-held and not `Send`, so
+//! all `Exec` work (including running `init`) happens on the per-shard
+//! tenant driver thread, which passes its own `Runtime` into
+//! [`params_for`](PolicyVault::params_for).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Manifest, ParamStore, Runtime, Variant};
+
+/// Server-side policy checkpoint store (see module docs).
+pub struct PolicyVault {
+    man: Manifest,
+    checkpoint: Option<PathBuf>,
+    seed: u64,
+    /// variant name → resolved flat params. Filled lazily by driver
+    /// threads; init is deterministic, so a racing double-resolve costs
+    /// compute but never disagrees.
+    params: Mutex<HashMap<String, Arc<Vec<f32>>>>,
+}
+
+impl PolicyVault {
+    /// Open a vault over `artifacts_dir` (must hold `manifest.json`).
+    /// With a checkpoint, leases serve its trained parameters; without
+    /// one, each variant's `init` artifact is run with `seed`.
+    pub fn open(artifacts_dir: &Path, checkpoint: Option<PathBuf>, seed: u64) -> Result<PolicyVault> {
+        let man = Manifest::load(artifacts_dir)
+            .with_context(|| format!("policy vault: open {}", artifacts_dir.display()))?;
+        if let Some(ckpt) = &checkpoint {
+            if !ckpt.exists() {
+                bail!("policy vault: checkpoint {} not found", ckpt.display());
+            }
+        }
+        Ok(PolicyVault {
+            man,
+            checkpoint,
+            seed,
+            params: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// [`open`](PolicyVault::open), but absent artifacts is not an error:
+    /// returns `Ok(None)` when `manifest.json` is missing, which is how
+    /// every tenant path stays gated exactly like the coordinator's eval
+    /// (CI without artifacts serves envs but declines policy leases).
+    pub fn open_if_present(
+        artifacts_dir: &Path,
+        checkpoint: Option<PathBuf>,
+        seed: u64,
+    ) -> Result<Option<PolicyVault>> {
+        if !artifacts_dir.join("manifest.json").exists() {
+            return Ok(None);
+        }
+        PolicyVault::open(artifacts_dir, checkpoint, seed).map(Some)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.man
+    }
+
+    /// Resolve a variant by name (cloned so callers don't borrow the
+    /// vault across lease bookkeeping).
+    pub fn variant(&self, name: &str) -> Result<Variant> {
+        self.man.variant(name).cloned()
+    }
+
+    /// One-line description for the serve banner.
+    pub fn describe(&self) -> String {
+        let variants: Vec<&str> = self.man.variants.keys().map(String::as_str).collect();
+        match &self.checkpoint {
+            Some(p) => format!("variants {variants:?}, checkpoint {}", p.display()),
+            None => format!("variants {variants:?}, init seed {}", self.seed),
+        }
+    }
+
+    /// Flat parameters for `variant`, resolved once and cached. Called
+    /// from tenant driver threads with the driver's own `Runtime`.
+    pub(crate) fn params_for(&self, rt: &Runtime, variant: &Variant) -> Result<Arc<Vec<f32>>> {
+        if let Some(p) = self.params.lock().unwrap().get(&variant.name) {
+            return Ok(Arc::clone(p));
+        }
+        let flat = match &self.checkpoint {
+            Some(ckpt) => {
+                let store = ParamStore::load(ckpt)
+                    .with_context(|| format!("policy vault: load {}", ckpt.display()))?;
+                if store.flat.len() != variant.num_params {
+                    bail!(
+                        "policy vault: checkpoint {} holds {} params but variant {:?} \
+                         needs {} — it was trained for a different variant",
+                        ckpt.display(),
+                        store.flat.len(),
+                        variant.name,
+                        variant.num_params
+                    );
+                }
+                store.flat
+            }
+            None => {
+                let init = rt.load(&self.man.artifact_path(variant, "init")?)?;
+                ParamStore::init(&init, variant.num_params, self.seed as i32)?.flat
+            }
+        };
+        let flat = Arc::new(flat);
+        self.params
+            .lock()
+            .unwrap()
+            .entry(variant.name.clone())
+            .or_insert_with(|| Arc::clone(&flat));
+        Ok(flat)
+    }
+}

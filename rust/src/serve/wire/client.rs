@@ -39,7 +39,16 @@ const REMOTE_LATENCY_WINDOW: usize = 1024;
 
 /// What the reader routes into a session's mailbox.
 enum SessMsg {
-    Step { step: u64, view: StepFrame },
+    Step {
+        step: u64,
+        view: StepFrame,
+    },
+    /// One server-driven trajectory step of a policy tenancy.
+    Traj {
+        step: u64,
+        actions: Vec<u8>,
+        view: StepFrame,
+    },
     Detached,
     Error(String),
 }
@@ -191,6 +200,80 @@ impl RemoteClient {
         session.recv_step().context("initial observation")?;
         Ok(session)
     }
+
+    /// Lease `n_envs` slots of `task` *plus* the named policy `variant`,
+    /// server-driven — the remote counterpart of
+    /// `SimServer::connect_with_policy`. `greedy = false` samples
+    /// actions server-side from a per-tenant RNG seeded with `seed`
+    /// (ignored when greedy). Blocks until the server grants (or
+    /// rejects) the lease and the initial observations have arrived.
+    pub fn open_agent(
+        &self,
+        task: Task,
+        n_envs: usize,
+        variant: &str,
+        greedy: bool,
+        seed: u64,
+    ) -> Result<RemoteAgent> {
+        if n_envs > frame::MAX_SESSION_ENVS {
+            bail!(
+                "open_agent: {n_envs} envs exceeds the wire transport's \
+                 per-session cap of {} (lease several agents instead)",
+                frame::MAX_SESSION_ENVS
+            );
+        }
+        if variant.len() > frame::MAX_VARIANT_NAME {
+            bail!(
+                "open_agent: variant name exceeds {} bytes",
+                frame::MAX_VARIANT_NAME
+            );
+        }
+        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        self.shared.routes.lock().unwrap().leases.insert(req, tx);
+        let lease = Frame::LeasePolicy {
+            req,
+            task,
+            n_envs: n_envs as u32,
+            greedy,
+            seed,
+            variant: variant.into(),
+        };
+        if let Err(e) = send_frame(&self.shared, &lease) {
+            self.shared.routes.lock().unwrap().leases.remove(&req);
+            return Err(e);
+        }
+        let grant = match rx.recv() {
+            Ok(Ok(g)) => g,
+            Ok(Err(msg)) => bail!("policy lease rejected: {msg}"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        };
+        let mut agent = RemoteAgent {
+            shared: Arc::clone(&self.shared),
+            id: grant.session,
+            task: grant.task,
+            obs_floats: grant.obs_floats as usize,
+            slots: grant.slots.iter().map(|&s| s as usize).collect(),
+            mailbox: grant.mailbox,
+            initial_step: 0,
+            initial: StepFrame::default(),
+            steps: 0,
+            detached: false,
+        };
+        // The initial snapshot arrives as a plain Step frame (nothing
+        // was stepped yet, so there are no actions to report).
+        match agent.mailbox.recv() {
+            Ok(SessMsg::Step { step, view }) => {
+                agent.check_shape(&view).context("initial observation")?;
+                agent.initial_step = step;
+                agent.initial = view;
+            }
+            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
+            Ok(_) => bail!("open_agent: unexpected frame before the initial observation"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        }
+        Ok(agent)
+    }
 }
 
 impl Drop for RemoteClient {
@@ -250,6 +333,22 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
                     let _ = tx.send(SessMsg::Step { step, view });
                 }
             }
+            Frame::Traj {
+                session,
+                step,
+                actions,
+                view,
+                ..
+            } => {
+                let r = shared.routes.lock().unwrap();
+                if let Some(tx) = r.sessions.get(&session) {
+                    let _ = tx.send(SessMsg::Traj {
+                        step,
+                        actions,
+                        view,
+                    });
+                }
+            }
             Frame::Detached { session } => {
                 let mut r = shared.routes.lock().unwrap();
                 if let Some(tx) = r.sessions.remove(&session) {
@@ -277,7 +376,9 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
             | Frame::Welcome { .. }
             | Frame::Lease { .. }
             | Frame::Submit { .. }
-            | Frame::Detach { .. } => {
+            | Frame::Detach { .. }
+            | Frame::LeasePolicy { .. }
+            | Frame::Goal { .. } => {
                 why = Some("unexpected client-bound frame".into());
                 break;
             }
@@ -400,17 +501,24 @@ impl RemoteSession {
         }
         self.detached = true;
         let send = send_frame(&self.shared, &Frame::Detach { session: self.id });
+        let mut errored: Option<String> = None;
         if send.is_ok() {
             loop {
                 match self.mailbox.recv() {
                     Ok(SessMsg::Detached) => break,
                     // drain late step views still in flight
-                    Ok(SessMsg::Step { .. }) => continue,
+                    Ok(SessMsg::Step { .. }) | Ok(SessMsg::Traj { .. }) => continue,
                     // A session error here means the pump is dead or
                     // dying (shard failure / unknown session) — it
                     // released the lease on exit and will never send
                     // `Detached`, so waiting longer would hang forever.
-                    Ok(SessMsg::Error(_)) => break,
+                    // Surface it: a caller that only detaches (e.g. the
+                    // CLI's clean-shutdown path) must still exit nonzero
+                    // when the server reported a failure mid-stream.
+                    Ok(SessMsg::Error(msg)) => {
+                        errored = Some(msg);
+                        break;
+                    }
                     // connection died — the server detaches on close
                     Err(_) => break,
                 }
@@ -419,6 +527,9 @@ impl RemoteSession {
         // The reader only prunes the route on a `Detached` frame; drop
         // it ourselves so the dead id cannot collect stray messages.
         self.shared.routes.lock().unwrap().sessions.remove(&self.id);
+        if let Some(msg) = errored {
+            bail!("serve: {msg}");
+        }
         send
     }
 
@@ -454,6 +565,9 @@ impl RemoteSession {
                 self.scores = view.scores;
                 self.synced = step;
                 Ok(())
+            }
+            Ok(SessMsg::Traj { .. }) => {
+                bail!("server sent a trajectory frame to a plain env session")
             }
             Ok(SessMsg::Detached) => bail!("session detached by the server"),
             Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
@@ -514,5 +628,173 @@ impl<'a> RemoteTicket<'a> {
         }
         session.latency.push(submitted.elapsed().as_secs_f32());
         Ok(session.view())
+    }
+}
+
+/// One server-driven step received by a [`RemoteAgent`]: the actions
+/// the server-side policy chose for the leased slots plus the resulting
+/// step slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RemoteTraj {
+    /// Shard batch step these results belong to.
+    pub step: u64,
+    /// Action stepped per leased slot, in view order.
+    pub actions: Vec<u8>,
+    pub view: StepFrame,
+}
+
+/// A remote policy tenancy: env slots leased together with a
+/// server-side policy ([`RemoteClient::open_agent`]). The client posts
+/// goals and drains the trajectory stream; the server runs the whole
+/// act→observe loop (`SimServer::connect_with_policy` behind the wire).
+pub struct RemoteAgent {
+    shared: Arc<ClientShared>,
+    id: u64,
+    task: Task,
+    obs_floats: usize,
+    slots: Vec<usize>,
+    mailbox: Receiver<SessMsg>,
+    initial_step: u64,
+    initial: StepFrame,
+    steps: u64,
+    detached: bool,
+}
+
+impl RemoteAgent {
+    /// Envs leased by this agent session.
+    pub fn num_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Floats per env observation tile (shard render config).
+    pub fn obs_floats(&self) -> usize {
+        self.obs_floats
+    }
+
+    pub fn task(&self) -> Task {
+        self.task
+    }
+
+    /// The shard-absolute slot indices backing this lease, in view order.
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    /// The initial observation snapshot (shard step, then the view) —
+    /// what the lease saw before the server drove anything.
+    pub fn initial(&self) -> (u64, &StepFrame) {
+        (self.initial_step, &self.initial)
+    }
+
+    /// Trajectory steps received so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Ask the server to drive this lease for `steps` more steps (goals
+    /// accumulate). One [`RemoteTraj`] arrives per step; rejection (zero
+    /// steps, detached tenancy) comes back asynchronously as an error on
+    /// [`next_traj`](RemoteAgent::next_traj).
+    pub fn set_goal(&self, steps: u32) -> Result<()> {
+        if self.detached {
+            bail!("set_goal on a detached agent session");
+        }
+        send_frame(
+            &self.shared,
+            &Frame::Goal {
+                session: self.id,
+                steps,
+            },
+        )
+    }
+
+    fn check_shape(&self, view: &StepFrame) -> Result<()> {
+        let n = self.slots.len();
+        let of = self.obs_floats;
+        if view.obs.len() != n * of
+            || view.goal.len() != n * 3
+            || view.rewards.len() != n
+            || view.dones.len() != n
+            || view.successes.len() != n
+            || view.spl.len() != n
+            || view.scores.len() != n
+        {
+            bail!("server sent a mis-shaped trajectory view");
+        }
+        Ok(())
+    }
+
+    /// Block for the next server-driven step. `Ok(None)` means the
+    /// tenancy ended cleanly (detached); `Err` means the shard or the
+    /// policy failed mid-goal, or the connection died.
+    pub fn next_traj(&mut self) -> Result<Option<RemoteTraj>> {
+        match self.mailbox.recv() {
+            Ok(SessMsg::Traj {
+                step,
+                actions,
+                view,
+            }) => {
+                self.check_shape(&view)?;
+                if actions.len() != self.slots.len() {
+                    bail!("server sent a mis-shaped trajectory view");
+                }
+                self.steps += 1;
+                Ok(Some(RemoteTraj {
+                    step,
+                    actions,
+                    view,
+                }))
+            }
+            Ok(SessMsg::Step { .. }) => {
+                bail!("server sent a plain step frame to an agent session")
+            }
+            Ok(SessMsg::Detached) => {
+                self.detached = true;
+                Ok(None)
+            }
+            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        }
+    }
+
+    /// Release the lease and wait for the server's acknowledgement,
+    /// draining trajectory frames still in flight. Like
+    /// [`RemoteSession::detach`], a server-reported failure encountered
+    /// during the drain is returned as an error so "detach at the end"
+    /// callers still observe mid-stream failures.
+    pub fn detach(&mut self) -> Result<()> {
+        if self.detached {
+            return Ok(());
+        }
+        self.detached = true;
+        let send = send_frame(&self.shared, &Frame::Detach { session: self.id });
+        let mut errored: Option<String> = None;
+        if send.is_ok() {
+            loop {
+                match self.mailbox.recv() {
+                    Ok(SessMsg::Detached) => break,
+                    Ok(SessMsg::Step { .. }) | Ok(SessMsg::Traj { .. }) => continue,
+                    Ok(SessMsg::Error(msg)) => {
+                        errored = Some(msg);
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        self.shared.routes.lock().unwrap().sessions.remove(&self.id);
+        if let Some(msg) = errored {
+            bail!("serve: {msg}");
+        }
+        send
+    }
+}
+
+impl Drop for RemoteAgent {
+    fn drop(&mut self) {
+        if !self.detached {
+            self.detached = true;
+            let _ = send_frame(&self.shared, &Frame::Detach { session: self.id });
+        }
     }
 }

@@ -46,6 +46,11 @@ pub const FT_STEP: u8 = 6;
 pub const FT_DETACH: u8 = 7;
 pub const FT_DETACHED: u8 = 8;
 pub const FT_ERROR: u8 = 9;
+// Policy-tenant frames (DESIGN.md §0.9): lease slots + a server-side
+// policy, post goals, stream server-driven trajectories back.
+pub const FT_LEASE_POLICY: u8 = 10;
+pub const FT_GOAL: u8 = 11;
+pub const FT_TRAJ: u8 = 12;
 
 // Error-frame codes (the `code` field of `Frame::Error`). The code also
 // disambiguates what the `re` field names: `ERR_LEASE` refers to a
@@ -188,6 +193,33 @@ pub enum Frame {
     /// Server → client: request- or connection-level failure. `re` is
     /// the `req` or `session` it refers to (0 = the connection itself).
     Error { re: u64, code: u16, msg: String },
+    /// Client → server: lease `n_envs` slots of `task` *plus* the named
+    /// policy `variant`, server-driven (a policy tenant). Answered like
+    /// `Lease` — `Grant` + initial `Step` — but afterwards the server
+    /// streams `Traj` frames instead of waiting for `Submit`s.
+    /// `greedy = false` samples actions on a per-tenant RNG seeded with
+    /// `seed`; the variant name is bounded utf-8 (≤ 256 bytes).
+    LeasePolicy {
+        req: u64,
+        task: Task,
+        n_envs: u32,
+        greedy: bool,
+        seed: u64,
+        variant: String,
+    },
+    /// Client → server: drive the tenant session for `steps` more steps
+    /// (goals accumulate; see `TenantControl::set_goal`).
+    Goal { session: u64, steps: u32 },
+    /// Server → client: one server-driven step of a policy tenancy —
+    /// the actions the policy chose for the leased slots (`actions`,
+    /// one per slot in view order) plus the resulting step slice.
+    Traj {
+        session: u64,
+        step: u64,
+        obs_floats: u32,
+        actions: Vec<u8>,
+        view: StepFrame,
+    },
 }
 
 impl Frame {
@@ -202,6 +234,9 @@ impl Frame {
             Frame::Detach { .. } => FT_DETACH,
             Frame::Detached { .. } => FT_DETACHED,
             Frame::Error { .. } => FT_ERROR,
+            Frame::LeasePolicy { .. } => FT_LEASE_POLICY,
+            Frame::Goal { .. } => FT_GOAL,
+            Frame::Traj { .. } => FT_TRAJ,
         }
     }
 }
@@ -295,6 +330,45 @@ pub fn encode_step(out: &mut Vec<u8>, session: u64, step: u64, obs_floats: u32, 
     finish_frame(out);
 }
 
+fn put_traj_body(
+    out: &mut Vec<u8>,
+    session: u64,
+    step: u64,
+    obs_floats: u32,
+    actions: &[u8],
+    v: StepRef<'_>,
+) {
+    put_u64(out, session);
+    put_u64(out, step);
+    put_u32(out, actions.len() as u32);
+    put_u32(out, obs_floats);
+    out.extend_from_slice(actions);
+    put_f32s(out, v.obs);
+    put_f32s(out, v.goal);
+    put_f32s(out, v.rewards);
+    put_bools(out, v.dones);
+    put_bools(out, v.successes);
+    put_f32s(out, v.spl);
+    put_f32s(out, v.scores);
+}
+
+/// Serialize a `TRAJ` frame directly from borrowed slices into `out`
+/// (replacing its contents) — the agent pump's zero-copy send path,
+/// mirroring [`encode_step`]. Byte-identical to encoding the equivalent
+/// [`Frame::Traj`] — asserted in the unit tests.
+pub fn encode_traj(
+    out: &mut Vec<u8>,
+    session: u64,
+    step: u64,
+    obs_floats: u32,
+    actions: &[u8],
+    v: StepRef<'_>,
+) {
+    begin_frame(out, FT_TRAJ);
+    put_traj_body(out, session, step, obs_floats, actions, v);
+    finish_frame(out);
+}
+
 /// Serialize `f` (header + payload) into `out`, replacing its contents.
 pub fn encode(f: &Frame, out: &mut Vec<u8>) {
     begin_frame(out, f.ftype());
@@ -355,6 +429,44 @@ pub fn encode(f: &Frame, out: &mut Vec<u8>) {
             put_u32(out, msg.len() as u32);
             out.extend_from_slice(msg.as_bytes());
         }
+        Frame::LeasePolicy {
+            req,
+            task,
+            n_envs,
+            greedy,
+            seed,
+            variant,
+        } => {
+            put_u64(out, *req);
+            out.push(task_to_wire(*task));
+            put_u32(out, *n_envs);
+            out.push(*greedy as u8);
+            put_u64(out, *seed);
+            put_u32(out, variant.len() as u32);
+            out.extend_from_slice(variant.as_bytes());
+        }
+        Frame::Goal { session, steps } => {
+            put_u64(out, *session);
+            put_u32(out, *steps);
+        }
+        Frame::Traj {
+            session,
+            step,
+            obs_floats,
+            actions,
+            view,
+        } => {
+            let v = StepRef {
+                obs: &view.obs,
+                goal: &view.goal,
+                rewards: &view.rewards,
+                dones: &view.dones,
+                successes: &view.successes,
+                spl: &view.spl,
+                scores: &view.scores,
+            };
+            put_traj_body(out, *session, *step, *obs_floats, actions, v);
+        }
     }
     finish_frame(out);
 }
@@ -379,7 +491,7 @@ pub fn decode_header(b: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::BadVersion(b[2]));
     }
     let ftype = b[3];
-    if !(FT_HELLO..=FT_ERROR).contains(&ftype) {
+    if !(FT_HELLO..=FT_TRAJ).contains(&ftype) {
         return Err(WireError::UnknownType(ftype));
     }
     let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
@@ -524,6 +636,55 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             let msg = String::from_utf8_lossy(r.take(len)?).into_owned();
             Frame::Error { re, code, msg }
         }
+        FT_LEASE_POLICY => {
+            let req = r.u64()?;
+            let task = task_from_wire(r.u8()?)?;
+            let n_envs = r.u32()?;
+            let greedy = r.u8()? != 0;
+            let seed = r.u64()?;
+            let vlen = r.u32()? as u64;
+            if vlen > MAX_VARIANT_NAME as u64 {
+                return Err(WireError::Malformed("variant name too long"));
+            }
+            let variant = std::str::from_utf8(r.take(vlen)?)
+                .map_err(|_| WireError::Malformed("variant name not utf-8"))?
+                .to_owned();
+            Frame::LeasePolicy {
+                req,
+                task,
+                n_envs,
+                greedy,
+                seed,
+                variant,
+            }
+        }
+        FT_GOAL => Frame::Goal {
+            session: r.u64()?,
+            steps: r.u32()?,
+        },
+        FT_TRAJ => {
+            let session = r.u64()?;
+            let step = r.u64()?;
+            let n = r.u32()? as u64;
+            let obs_floats = r.u32()?;
+            let actions = r.take(n)?.to_vec();
+            let view = StepFrame {
+                obs: r.f32s(n * obs_floats as u64)?,
+                goal: r.f32s(n * 3)?,
+                rewards: r.f32s(n)?,
+                dones: r.bools(n)?,
+                successes: r.bools(n)?,
+                spl: r.f32s(n)?,
+                scores: r.f32s(n)?,
+            };
+            Frame::Traj {
+                session,
+                step,
+                obs_floats,
+                actions,
+                view,
+            }
+        }
         other => return Err(WireError::UnknownType(other)),
     };
     r.done()?;
@@ -546,6 +707,11 @@ const SUBMIT_CAP: usize = 64 << 10;
 const GRANT_CAP: usize = 64 << 10;
 /// Bound for an `ERROR` payload (`14 + msg` bytes).
 const ERROR_CAP: usize = 16 << 10;
+/// Longest policy-variant name a `LEASE_POLICY` may carry.
+pub const MAX_VARIANT_NAME: usize = 256;
+/// Bound for the client→server `LEASE_POLICY` payload
+/// (`26 + vlen` bytes with `vlen` ≤ [`MAX_VARIANT_NAME`]).
+const LEASE_POLICY_CAP: usize = 26 + MAX_VARIANT_NAME;
 
 /// Largest legal payload for `ftype` in one direction (`from_client` =
 /// the reader is a server). `None` means the type never flows that way.
@@ -560,11 +726,14 @@ pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
         (FT_LEASE, true) => Some(13),
         (FT_SUBMIT, true) => Some(SUBMIT_CAP),
         (FT_DETACH, true) => Some(8),
+        (FT_LEASE_POLICY, true) => Some(LEASE_POLICY_CAP),
+        (FT_GOAL, true) => Some(12),
         (FT_WELCOME, false) => Some(4),
         (FT_GRANT, false) => Some(GRANT_CAP),
         (FT_STEP, false) => Some(MAX_FRAME),
         (FT_DETACHED, false) => Some(8),
         (FT_ERROR, false) => Some(ERROR_CAP),
+        (FT_TRAJ, false) => Some(MAX_FRAME),
         _ => None,
     }
 }
@@ -694,6 +863,33 @@ mod tests {
             code: ERR_LEASE,
             msg: "no capacity".into(),
         });
+        roundtrip(Frame::LeasePolicy {
+            req: 3,
+            task: Task::PointNav,
+            n_envs: 4,
+            greedy: true,
+            seed: 0xDEAD_BEEF,
+            variant: "test".into(),
+        });
+        roundtrip(Frame::Goal {
+            session: 42,
+            steps: 128,
+        });
+        roundtrip(Frame::Traj {
+            session: 42,
+            step: 7,
+            obs_floats: 2,
+            actions: vec![0, 3],
+            view: StepFrame {
+                obs: vec![0.25, -1.5, f32::MIN_POSITIVE, 3.0],
+                goal: vec![1.0; 6],
+                rewards: vec![-0.01, 2.5],
+                dones: vec![true, false],
+                successes: vec![false, true],
+                spl: vec![0.0, 0.9],
+                scores: vec![1.0, 0.0],
+            },
+        });
     }
 
     /// The zero-copy server send path must emit exactly the bytes the
@@ -734,6 +930,104 @@ mod tests {
             },
         );
         assert_eq!(via_frame, direct);
+    }
+
+    /// Same guarantee for the agent pump's zero-copy `TRAJ` path.
+    #[test]
+    fn encode_traj_matches_frame_encode() {
+        let view = StepFrame {
+            obs: vec![0.5, -2.0, 3.25, 0.0],
+            goal: vec![1.0; 6],
+            rewards: vec![0.1, -0.2],
+            dones: vec![true, false],
+            successes: vec![false, true],
+            spl: vec![0.9, 0.0],
+            scores: vec![0.0, 7.5],
+        };
+        let actions = vec![1u8, 2];
+        let f = Frame::Traj {
+            session: 11,
+            step: 42,
+            obs_floats: 2,
+            actions: actions.clone(),
+            view: view.clone(),
+        };
+        let mut via_frame = Vec::new();
+        encode(&f, &mut via_frame);
+        let mut direct = Vec::new();
+        encode_traj(
+            &mut direct,
+            11,
+            42,
+            2,
+            &actions,
+            StepRef {
+                obs: &view.obs,
+                goal: &view.goal,
+                rewards: &view.rewards,
+                dones: &view.dones,
+                successes: &view.successes,
+                spl: &view.spl,
+                scores: &view.scores,
+            },
+        );
+        assert_eq!(via_frame, direct);
+    }
+
+    #[test]
+    fn hostile_lease_policy_payloads_rejected() {
+        let mut buf = Vec::new();
+        encode(
+            &Frame::LeasePolicy {
+                req: 1,
+                task: Task::PointNav,
+                n_envs: 4,
+                greedy: true,
+                seed: 0,
+                variant: "ab".into(),
+            },
+            &mut buf,
+        );
+        // variant length field larger than the cap
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[22..26].copy_from_slice(&(MAX_VARIANT_NAME as u32 + 1).to_le_bytes());
+        assert_eq!(
+            decode_payload(FT_LEASE_POLICY, &payload),
+            Err(WireError::Malformed("variant name too long"))
+        );
+        // variant length field overruns the actual payload
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[22..26].copy_from_slice(&200u32.to_le_bytes());
+        assert_eq!(
+            decode_payload(FT_LEASE_POLICY, &payload),
+            Err(WireError::Truncated)
+        );
+        // non-utf8 variant bytes
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[26] = 0xFF;
+        payload[27] = 0xFE;
+        assert_eq!(
+            decode_payload(FT_LEASE_POLICY, &payload),
+            Err(WireError::Malformed("variant name not utf-8"))
+        );
+        // and the per-type cap bounds what a client may even announce
+        assert_eq!(payload_cap(FT_LEASE_POLICY, true), Some(26 + MAX_VARIANT_NAME));
+        assert_eq!(payload_cap(FT_GOAL, true), Some(12));
+        // tenant frames never flow the other way
+        assert_eq!(payload_cap(FT_TRAJ, true), None);
+        assert_eq!(payload_cap(FT_LEASE_POLICY, false), None);
+        assert_eq!(payload_cap(FT_GOAL, false), None);
+    }
+
+    #[test]
+    fn header_range_covers_tenant_frames() {
+        let m = MAGIC.to_le_bytes();
+        for ft in [FT_LEASE_POLICY, FT_GOAL, FT_TRAJ] {
+            let h = [m[0], m[1], VERSION, ft, 0, 0, 0, 0];
+            assert!(decode_header(&h).is_ok(), "type {ft} must validate");
+        }
+        let h = [m[0], m[1], VERSION, FT_TRAJ + 1, 0, 0, 0, 0];
+        assert_eq!(decode_header(&h), Err(WireError::UnknownType(FT_TRAJ + 1)));
     }
 
     #[test]

@@ -27,10 +27,18 @@
 //! `bps serve --listen ADDR` and `bps connect ADDR` drive both ends from
 //! the CLI; `benches/bench_serve.rs` measures loopback-vs-direct
 //! overhead.
+//!
+//! Policy tenants ride the same socket: `LEASE_POLICY` leases env slots
+//! plus a server-side policy, `GOAL` asks the server to drive them, and
+//! `TRAJ` frames stream the server-chosen actions and results back
+//! ([`RemoteClient::open_agent`] / [`RemoteAgent`]; `bps agent ADDR` on
+//! the CLI; DESIGN.md §0.9). Connections idle past
+//! [`WireConfig::idle_timeout_ticks`] are reaped, releasing their
+//! leases.
 
 pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{RemoteClient, RemoteSession, RemoteTicket};
+pub use client::{RemoteAgent, RemoteClient, RemoteSession, RemoteTicket, RemoteTraj};
 pub use server::{ConnStats, WireConfig, WireServer};

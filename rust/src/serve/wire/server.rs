@@ -42,11 +42,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::serve::session::{Session, SessionView};
+use crate::serve::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
 use crate::serve::SimServer;
 
 use super::frame::{
@@ -65,6 +66,14 @@ pub struct WireConfig {
     /// submits faster than the shard steps would grow server memory at
     /// line rate.
     pub inbox_submits: usize,
+    /// Reap a connection after this many idle ticks (units of
+    /// [`TICK`](crate::serve::TICK), i.e. milliseconds) with no frame
+    /// read from *or* written to the peer. A reaped connection is closed
+    /// like any other disconnect — its leases release, its slots fall
+    /// back to the auto-reset filler — and its [`ConnStats`] row is
+    /// flagged `reaped`. `None` (the default) never reaps: a legitimate
+    /// client may idle-hold a lease indefinitely.
+    pub idle_timeout_ticks: Option<u64>,
 }
 
 impl Default for WireConfig {
@@ -72,6 +81,7 @@ impl Default for WireConfig {
         WireConfig {
             outbox_frames: 256,
             inbox_submits: 64,
+            idle_timeout_ticks: None,
         }
     }
 }
@@ -95,6 +105,9 @@ pub struct ConnStats {
     pub bad_frames: u64,
     /// True when the slow-reader policy disconnected the peer.
     pub dropped_slow: bool,
+    /// True when the idle-timeout reaper closed the connection
+    /// ([`WireConfig::idle_timeout_ticks`]).
+    pub reaped: bool,
     pub closed: bool,
 }
 
@@ -115,10 +128,23 @@ struct ConnShared {
     sessions_open: AtomicU64,
     sessions_opened: AtomicU64,
     dropped_slow: AtomicBool,
+    reaped: AtomicBool,
     closed: AtomicBool,
+    /// Server-wide epoch the activity clock counts from.
+    epoch: Instant,
+    /// Milliseconds-since-`epoch` of the last frame read from or
+    /// written to this peer — the idle reaper's clock. Outbound counts
+    /// too: a streaming policy tenant legitimately sends nothing after
+    /// its goal, but the `TRAJ` frames it drains prove it alive.
+    last_activity_ms: AtomicU64,
 }
 
 impl ConnShared {
+    fn touch(&self) {
+        self.last_activity_ms
+            .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+
     fn close(&self) {
         self.closed.store(true, Ordering::Relaxed);
         // shutdown() reaches the reader's and writer's clones through
@@ -140,6 +166,7 @@ impl ConnShared {
             bytes_out: self.bytes_out.load(Ordering::Relaxed),
             bad_frames: self.bad_frames.load(Ordering::Relaxed),
             dropped_slow: self.dropped_slow.load(Ordering::Relaxed),
+            reaped: self.reaped.load(Ordering::Relaxed),
             closed: self.closed.load(Ordering::Relaxed),
         }
     }
@@ -152,6 +179,8 @@ struct WireShared {
     next_conn: AtomicU64,
     next_session: AtomicU64,
     shutting_down: AtomicBool,
+    /// Epoch of every connection's idle clock.
+    epoch: Instant,
 }
 
 /// Closed connections whose stats rows are kept for post-mortems; older
@@ -191,6 +220,7 @@ impl WireServer {
             next_conn: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
+            epoch: Instant::now(),
         });
         let for_accept = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
@@ -253,6 +283,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
         if shared.shutting_down.load(Ordering::SeqCst) {
             return;
         }
+        reap_idle_conns(&shared);
         let (stream, peer) = match listener.accept() {
             Ok(x) => x,
             // WouldBlock (no pending connection) or a transient error:
@@ -287,7 +318,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             sessions_open: AtomicU64::new(0),
             sessions_opened: AtomicU64::new(0),
             dropped_slow: AtomicBool::new(false),
+            reaped: AtomicBool::new(false),
             closed: AtomicBool::new(false),
+            epoch: shared.epoch,
+            last_activity_ms: AtomicU64::new(shared.epoch.elapsed().as_millis() as u64),
         });
         {
             let mut conns = shared.conns.lock().unwrap();
@@ -330,6 +364,24 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
     }
 }
 
+/// Close connections idle past [`WireConfig::idle_timeout_ticks`]
+/// (checked once per accept-loop iteration). The close unblocks the
+/// reader, whose teardown releases every lease the peer held.
+fn reap_idle_conns(shared: &Arc<WireShared>) {
+    let Some(ticks) = shared.cfg.idle_timeout_ticks else {
+        return;
+    };
+    let now_ms = shared.epoch.elapsed().as_millis() as u64;
+    for c in shared.conns.lock().unwrap().iter() {
+        if !c.closed.load(Ordering::Relaxed)
+            && now_ms.saturating_sub(c.last_activity_ms.load(Ordering::Relaxed)) > ticks
+        {
+            c.reaped.store(true, Ordering::Relaxed);
+            c.close();
+        }
+    }
+}
+
 /// Drain the outbox onto the socket. The periodic timeout lets the
 /// writer notice a closed connection even while pumps still hold
 /// outbox senders (e.g. blocked on an in-flight step).
@@ -343,6 +395,7 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
                 }
                 conn.frames_out.fetch_add(1, Ordering::Relaxed);
                 conn.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+                conn.touch();
             }
             Err(RecvTimeoutError::Timeout) => {
                 if conn.closed.load(Ordering::Relaxed) {
@@ -426,13 +479,21 @@ enum PumpMsg {
     Detach,
 }
 
+/// What a wire session id routes to: a plain env session's pump inbox,
+/// or a policy tenant's control plane (the agent pump owns the
+/// trajectory stream; the reader only posts goals and detaches).
+enum Route {
+    Env(SyncSender<PumpMsg>),
+    Agent(TenantControl),
+}
+
 fn reader_loop(
     stream: TcpStream,
     outbox: SyncSender<Vec<u8>>,
     conn: Arc<ConnShared>,
     shared: Arc<WireShared>,
 ) {
-    let mut sessions: HashMap<u64, SyncSender<PumpMsg>> = HashMap::new();
+    let mut sessions: HashMap<u64, Route> = HashMap::new();
     let mut greeted = false;
     let mut metered = Metered {
         s: &stream,
@@ -460,6 +521,7 @@ fn reader_loop(
             }
         };
         conn.frames_in.fetch_add(1, Ordering::Relaxed);
+        conn.touch();
         if !greeted && !matches!(&f, Frame::Hello) {
             conn.bad_frames.fetch_add(1, Ordering::Relaxed);
             let _ = enqueue(
@@ -540,7 +602,7 @@ fn reader_loop(
                             .spawn(move || session_pump(ctx));
                         match spawned {
                             Ok(_) => {
-                                sessions.insert(wire_id, tx);
+                                sessions.insert(wire_id, Route::Env(tx));
                             }
                             Err(e) => {
                                 // ctx (and the lease) died with the failed
@@ -576,13 +638,25 @@ fn reader_loop(
                 }
             }
             Frame::Submit { session, pairs } => {
+                enum SubmitOutcome {
+                    Sent,
+                    Flood,
+                    Dead,
+                    AgentRoute,
+                    Unknown,
+                }
                 let outcome = match sessions.get(&session) {
-                    Some(tx) => tx.try_send(PumpMsg::Submit(pairs)),
-                    None => Err(TrySendError::Disconnected(PumpMsg::Detach)),
+                    Some(Route::Env(tx)) => match tx.try_send(PumpMsg::Submit(pairs)) {
+                        Ok(()) => SubmitOutcome::Sent,
+                        Err(TrySendError::Full(_)) => SubmitOutcome::Flood,
+                        Err(TrySendError::Disconnected(_)) => SubmitOutcome::Dead,
+                    },
+                    Some(Route::Agent(_)) => SubmitOutcome::AgentRoute,
+                    None => SubmitOutcome::Unknown,
                 };
                 match outcome {
-                    Ok(()) => {}
-                    Err(TrySendError::Full(_)) => {
+                    SubmitOutcome::Sent => {}
+                    SubmitOutcome::Flood => {
                         // Flood policy, mirror of the outbox bound: a
                         // peer pipelining submits faster than the shard
                         // steps is disconnected before it can grow the
@@ -598,7 +672,24 @@ fn reader_loop(
                         );
                         break;
                     }
-                    Err(TrySendError::Disconnected(_)) => {
+                    SubmitOutcome::AgentRoute => {
+                        // Server-driven lease: the client has no actions
+                        // to submit. Report and keep the connection.
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_SUBMIT,
+                                msg: "submit on a policy-tenant session \
+                                      (the server drives it; post GOAL instead)"
+                                    .into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                    SubmitOutcome::Dead | SubmitOutcome::Unknown => {
                         sessions.remove(&session);
                         // Well-formed frame, dead or unknown session id:
                         // report and keep the connection — other
@@ -617,15 +708,179 @@ fn reader_loop(
                     }
                 }
             }
+            Frame::Goal { session, steps } => {
+                enum GoalOutcome {
+                    Ok,
+                    Rejected(String),
+                    EnvRoute,
+                    Unknown,
+                }
+                let outcome = match sessions.get(&session) {
+                    Some(Route::Agent(control)) => match control.set_goal(steps) {
+                        Ok(()) => GoalOutcome::Ok,
+                        Err(e) => GoalOutcome::Rejected(format!("{e:#}")),
+                    },
+                    Some(Route::Env(_)) => GoalOutcome::EnvRoute,
+                    None => GoalOutcome::Unknown,
+                };
+                // All goal failures keep the connection: the frame was
+                // well-formed, and co-sessions on it are healthy.
+                match outcome {
+                    GoalOutcome::Ok => {}
+                    GoalOutcome::Rejected(msg) => {
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_SUBMIT,
+                                msg,
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                    GoalOutcome::EnvRoute => {
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_SUBMIT,
+                                msg: "goal on a plain env session \
+                                      (lease with LEASE_POLICY to be server-driven)"
+                                    .into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                    GoalOutcome::Unknown => {
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: session,
+                                code: ERR_SESSION,
+                                msg: "unknown session".into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
+            Frame::LeasePolicy {
+                req,
+                task,
+                n_envs,
+                greedy,
+                seed,
+                variant,
+            } => {
+                let mode = if greedy {
+                    ActionMode::Greedy
+                } else {
+                    ActionMode::Sample { seed }
+                };
+                match shared
+                    .sim
+                    .connect_with_policy_mode(task, n_envs as usize, &variant, mode)
+                {
+                    Ok(ts) => {
+                        // Same wire-level size guard as a plain lease,
+                        // against the TRAJ frame this lease will stream
+                        // (one action byte per slot on top of the step
+                        // view).
+                        let n = ts.num_envs();
+                        let traj_bytes = 24 + n * (4 * ts.obs_floats() + 27);
+                        if n > frame::MAX_SESSION_ENVS || traj_bytes > frame::MAX_FRAME {
+                            ts.detach();
+                            let err = Frame::Error {
+                                re: req,
+                                code: ERR_LEASE,
+                                msg: format!(
+                                    "lease of {n} envs exceeds the wire transport's \
+                                     frame caps (max {} envs and a {} MiB traj view)",
+                                    frame::MAX_SESSION_ENVS,
+                                    frame::MAX_FRAME >> 20
+                                ),
+                            };
+                            if !enqueue(&conn, &outbox, &err) {
+                                break;
+                            }
+                            continue;
+                        }
+                        let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                        conn.sessions_open.fetch_add(1, Ordering::Relaxed);
+                        conn.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                        let control = ts.control();
+                        let ctx = AgentCtx {
+                            ts,
+                            conn: Arc::clone(&conn),
+                            outbox: outbox.clone(),
+                            wire_id,
+                            req,
+                        };
+                        let spawned = std::thread::Builder::new()
+                            .name("bps-wire-agent".into())
+                            .spawn(move || agent_pump(ctx));
+                        match spawned {
+                            Ok(_) => {
+                                sessions.insert(wire_id, Route::Agent(control));
+                            }
+                            Err(e) => {
+                                // ctx (and the lease) died with the
+                                // failed spawn; tell the client
+                                conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                                if !enqueue(
+                                    &conn,
+                                    &outbox,
+                                    &Frame::Error {
+                                        re: req,
+                                        code: ERR_LEASE,
+                                        msg: format!("spawn agent pump: {e}"),
+                                    },
+                                ) {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Includes the vault-less case: the message names
+                        // "no policy artifacts" so remote callers can
+                        // tell config-missing from capacity-missing.
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: req,
+                                code: ERR_LEASE,
+                                msg: format!("{e:#}"),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
             Frame::Detach { session } => {
                 let sent = match sessions.remove(&session) {
                     // Full can only mean the peer flooded the inbox and
                     // now wants out; teardown below detaches anyway.
-                    Some(tx) => match tx.try_send(PumpMsg::Detach) {
+                    Some(Route::Env(tx)) => match tx.try_send(PumpMsg::Detach) {
                         Ok(()) => true,
                         Err(TrySendError::Full(_)) => break,
                         Err(TrySendError::Disconnected(_)) => false,
                     },
+                    // The agent pump notices the detach when its
+                    // trajectory stream drains and sends the Detached
+                    // ack itself.
+                    Some(Route::Agent(control)) => {
+                        control.detach();
+                        true
+                    }
                     None => false,
                 };
                 if !sent
@@ -645,6 +900,7 @@ fn reader_loop(
             Frame::Welcome { .. }
             | Frame::Grant { .. }
             | Frame::Step { .. }
+            | Frame::Traj { .. }
             | Frame::Detached { .. }
             | Frame::Error { .. } => {
                 conn.bad_frames.fetch_add(1, Ordering::Relaxed);
@@ -661,10 +917,128 @@ fn reader_loop(
             }
         }
     }
-    // Dropping the pump senders detaches every session this connection
-    // leased; their slots fall back to the auto-reset filler.
+    // Dropping the pump senders detaches every env session this
+    // connection leased; agent routes are detached explicitly (their
+    // pumps hold control clones, so a plain drop would not release the
+    // lease). Slots fall back to the auto-reset filler either way.
+    for (_, route) in sessions.drain() {
+        if let Route::Agent(control) = route {
+            control.detach();
+        }
+    }
     drop(sessions);
     conn.close();
+}
+
+struct AgentCtx {
+    ts: TenantSession,
+    conn: Arc<ConnShared>,
+    outbox: SyncSender<Vec<u8>>,
+    wire_id: u64,
+    req: u64,
+}
+
+/// Serialize a tenant trajectory step straight into the outbox — the
+/// agent-route twin of [`enqueue_step`] (one copy, no owned frame).
+fn enqueue_traj(
+    conn: &ConnShared,
+    outbox: &SyncSender<Vec<u8>>,
+    wire_id: u64,
+    obs_floats: usize,
+    ts: &TrajStep,
+) -> bool {
+    let mut buf = Vec::new();
+    frame::encode_traj(
+        &mut buf,
+        wire_id,
+        ts.step,
+        obs_floats as u32,
+        &ts.actions,
+        StepRef {
+            obs: &ts.obs,
+            goal: &ts.goal,
+            rewards: &ts.rewards,
+            dones: &ts.dones,
+            successes: &ts.successes,
+            spl: &ts.spl,
+            scores: &ts.scores,
+        },
+    );
+    enqueue_buf(conn, outbox, buf)
+}
+
+/// Owns one remote policy tenancy server-side: grants the lease, seeds
+/// the client with the initial observation snapshot, then forwards the
+/// server-driven trajectory stream. The reader never blocks on this
+/// session — goals route through [`TenantControl`] inline.
+fn agent_pump(ctx: AgentCtx) {
+    let AgentCtx {
+        mut ts,
+        conn,
+        outbox,
+        wire_id,
+        req,
+    } = ctx;
+    let of = ts.obs_floats();
+    let grant = Frame::Grant {
+        req,
+        session: wire_id,
+        task: ts.task(),
+        obs_floats: of as u32,
+        slots: ts.slots().iter().map(|&s| s as u32).collect(),
+    };
+    // Grant, then the initial snapshot as a plain Step frame (no actions
+    // were stepped yet) — exactly what a plain lease's client sees.
+    let init = ts.initial();
+    let mut alive = enqueue(&conn, &outbox, &grant)
+        && {
+            let mut buf = Vec::new();
+            frame::encode_step(
+                &mut buf,
+                wire_id,
+                init.step,
+                of as u32,
+                StepRef {
+                    obs: &init.obs,
+                    goal: &init.goal,
+                    rewards: &init.rewards,
+                    dones: &init.dones,
+                    successes: &init.successes,
+                    spl: &init.spl,
+                    scores: &init.scores,
+                },
+            );
+            enqueue_buf(&conn, &outbox, buf)
+        };
+    let mut clean_detach = false;
+    while alive {
+        match ts.next_step() {
+            Ok(Some(step)) => {
+                alive = enqueue_traj(&conn, &outbox, wire_id, of, &step);
+            }
+            Ok(None) => {
+                clean_detach = true;
+                break;
+            }
+            Err(e) => {
+                let _ = enqueue(
+                    &conn,
+                    &outbox,
+                    &Frame::Error {
+                        re: wire_id,
+                        code: ERR_SHARD,
+                        msg: format!("{e:#}"),
+                    },
+                );
+                alive = false;
+            }
+        }
+    }
+    ts.detach();
+    if clean_detach {
+        let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
+    }
+    conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
 }
 
 struct PumpCtx {

@@ -1,0 +1,490 @@
+//! Integration tests for the in-server policy tenant layer
+//! (`bps::serve::tenant` + the `LEASE_POLICY`/`GOAL`/`TRAJ` wire frames).
+//!
+//! Acceptance gates: a greedy policy tenant driven by the server over
+//! loopback TCP must stream the *bitwise identical* trajectory a client
+//! would compute itself with `Policy::step_greedy` on a same-seeded
+//! direct `EnvBatch` (same manifest, same init seed); two concurrent
+//! tenants on one shard must share exactly one coalesced `Exec::run`
+//! per tick; hostile `GOAL`/`LEASE_POLICY` traffic must error cleanly
+//! without killing co-tenants; idle connections must be reaped and
+//! release their leases.
+//!
+//! The policy-execution tests are gated on `artifacts/manifest.json`
+//! exactly like the coordinator's end-to-end tests (run `make
+//! artifacts` first); the hostile-traffic and idle-reap tests run
+//! everywhere.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bps::env::{EnvBatch, EnvBatchConfig};
+use bps::policy::Policy;
+use bps::render::RenderConfig;
+use bps::runtime::{Manifest, ParamStore, Runtime};
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::serve::wire::frame::{self, Frame, ERR_LEASE, ERR_SESSION, ERR_SUBMIT};
+use bps::serve::{
+    ActionMode, FillAction, PolicyVault, RemoteClient, ShardSpec, SimServer, StragglerPolicy,
+    WireConfig, WireServer,
+};
+use bps::sim::{Task, ACTION_FORWARD};
+use bps::util::pool::WorkerPool;
+
+/// Env seed shared by the server shard and the direct replica.
+const SEED: u64 = 0x7E_4A47;
+/// Policy-init seed shared by the vault and the client-side replica.
+const PSEED: u64 = 40;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts` first)");
+        return None;
+    }
+    Some(d)
+}
+
+fn scene() -> Arc<SceneAsset> {
+    Arc::new(generate("tenant_eqv", 71, Complexity::test()))
+}
+
+/// The `test` artifact variant sees 32x32x1 observations and exports
+/// `infer_n4` only, so tenant shards are 4 slots of depth-32 renders.
+fn tenant_cfg() -> EnvBatchConfig {
+    EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(SEED)
+}
+
+fn direct_batch(n: usize, pool: &Arc<WorkerPool>) -> EnvBatch {
+    let s = scene();
+    tenant_cfg()
+        .overlap(false)
+        .build_with_scenes((0..n).map(|_| Arc::clone(&s)).collect(), Arc::clone(pool))
+        .unwrap()
+}
+
+/// A server whose vault inits every variant from `PSEED` (no
+/// checkpoint) — the same parameters the client-side replica derives.
+fn tenant_server(n: usize, artifacts: &Path, pool: &Arc<WorkerPool>) -> Arc<SimServer> {
+    let s = scene();
+    let spec = ShardSpec::with_scenes(tenant_cfg(), (0..n).map(|_| Arc::clone(&s)).collect())
+        .straggler(StragglerPolicy::Wait);
+    let vault = PolicyVault::open(artifacts, None, PSEED).unwrap();
+    Arc::new(SimServer::with_vault(vec![spec], Arc::clone(pool), None, Some(vault)).unwrap())
+}
+
+/// A vault-less server (env leases only) for the no-artifact tests.
+fn plain_server(n: usize, policy: StragglerPolicy, pool: &Arc<WorkerPool>) -> Arc<SimServer> {
+    let s = scene();
+    let spec = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16)).seed(SEED),
+        (0..n).map(|_| Arc::clone(&s)).collect(),
+    )
+    .straggler(policy);
+    Arc::new(SimServer::start(vec![spec], Arc::clone(pool)).unwrap())
+}
+
+/// Poll until `cond` holds (10s cap) so thread hand-off races can't
+/// flake the assertions.
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A greedy remote agent leasing the whole shard must stream exactly
+/// the trajectory the client would compute itself: same actions, same
+/// observations, bit for bit, starting from the initial snapshot. The
+/// client-side replica runs `Policy::step_greedy` on a same-seeded
+/// direct `EnvBatch` with params initialized from the vault's seed.
+#[test]
+fn tenant_traj_bitwise_equals_client_side_policy_loop() {
+    let Some(artifacts) = artifacts() else { return };
+    let n = 4;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mut direct = direct_batch(n, &pool);
+    let srv = tenant_server(n, &artifacts, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut agent = client
+        .open_agent(Task::PointNav, n, "test", true, 0)
+        .unwrap();
+    assert_eq!(agent.num_envs(), n);
+    assert_eq!(agent.obs_floats(), direct.obs_floats());
+    assert_eq!(agent.slots(), (0..n).collect::<Vec<_>>().as_slice());
+
+    // Client-side replica of the server's engine: same manifest, same
+    // width, same init seed => same flat params, same recurrent zeros.
+    let rt = Runtime::cpu().unwrap();
+    let man = Manifest::load(&artifacts).unwrap();
+    let variant = man.variant("test").unwrap().clone();
+    let init = rt
+        .load(&man.artifact_path(&variant, "init").unwrap())
+        .unwrap();
+    let params = ParamStore::init(&init, variant.num_params, PSEED as i32)
+        .unwrap()
+        .flat;
+    let mut policy = Policy::new(&rt, &man, &variant, n, 0).unwrap();
+
+    // The initial snapshot crossed the wire bit-for-bit.
+    let (step0, iv) = agent.initial();
+    assert_eq!(step0, 0);
+    assert_eq!(iv.obs, direct.view().obs);
+    assert_eq!(iv.goal, direct.view().goal);
+
+    const STEPS: u32 = 12;
+    agent.set_goal(STEPS).unwrap();
+    for t in 0..STEPS as usize {
+        let expect = policy
+            .step_greedy(&params, direct.view().obs, direct.view().goal)
+            .unwrap();
+        let dv = direct.step(&expect).unwrap();
+        let (obs, goal, rewards, dones, successes, spl, scores) = (
+            dv.obs.to_vec(),
+            dv.goal.to_vec(),
+            dv.rewards.to_vec(),
+            dv.dones.to_vec(),
+            dv.successes.to_vec(),
+            dv.spl.to_vec(),
+            dv.scores.to_vec(),
+        );
+        policy.reset_done(&dones);
+        let tr = agent.next_traj().unwrap().expect("goal ended early");
+        assert_eq!(tr.step, (t + 1) as u64, "shard step counter");
+        assert_eq!(tr.actions, expect, "actions diverged at step {t}");
+        assert_eq!(tr.view.obs, obs, "obs diverged at step {t}");
+        assert_eq!(tr.view.goal, goal, "goal diverged at step {t}");
+        assert_eq!(tr.view.rewards, rewards, "rewards diverged at step {t}");
+        assert_eq!(tr.view.dones, dones, "dones diverged at step {t}");
+        assert_eq!(tr.view.successes, successes, "successes diverged at step {t}");
+        assert_eq!(tr.view.spl, spl, "spl diverged at step {t}");
+        assert_eq!(tr.view.scores, scores, "scores diverged at step {t}");
+    }
+    assert_eq!(agent.steps(), STEPS as u64);
+
+    let st = &srv.stats()[0];
+    assert_eq!(st.steps, STEPS as u64);
+    assert_eq!(st.bad_submits, 0);
+    let ten = st.tenant.as_ref().expect("tenant stats present");
+    assert_eq!(ten.infer_runs, STEPS as u64, "one forward per tick");
+    assert_eq!(ten.infer_batch_size, n, "inference at full shard width");
+    assert_eq!(ten.agent_steps, STEPS as u64 * n as u64);
+
+    agent.detach().unwrap();
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+    // The pump decrements its session counter after acking the detach.
+    wait_until("session close", || wire.conn_stats()[0].sessions_open == 0);
+    let conns = wire.conn_stats();
+    assert_eq!(conns[0].bad_frames, 0);
+    assert_eq!(conns[0].sessions_opened, 1);
+}
+
+/// Two concurrent tenants (one greedy, one sampling) on one shard:
+/// every tick runs exactly ONE coalesced `Exec::run` for both — that
+/// is the whole point of the inference coalescer — and each tenant
+/// streams its own slots' rows of the shared forward.
+#[test]
+fn two_tenants_share_one_coalesced_forward_per_tick() {
+    let Some(artifacts) = artifacts() else { return };
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = tenant_server(4, &artifacts, &pool);
+    let mut a = srv.connect_with_policy(Task::PointNav, 2, "test").unwrap();
+    let mut b = srv
+        .connect_with_policy_mode(Task::PointNav, 2, "test", ActionMode::Sample { seed: 11 })
+        .unwrap();
+    assert_eq!(a.slots(), &[0, 1]);
+    assert_eq!(b.slots(), &[2, 3]);
+    assert_eq!(a.initial().obs.len(), 2 * a.obs_floats());
+
+    // Both goals posted before draining: under the Wait policy the
+    // first tick fires only once every registered tenant is active.
+    const GOAL: u32 = 10;
+    a.set_goal(GOAL).unwrap();
+    b.set_goal(GOAL).unwrap();
+    // Drain both streams concurrently — the trajectory queue is
+    // shorter than the goal, so a sequential drain would stall the
+    // driver on the undrained co-tenant.
+    std::thread::scope(|s| {
+        for sess in [&mut a, &mut b] {
+            s.spawn(move || {
+                for t in 0..GOAL as u64 {
+                    let ts = sess.next_step().unwrap().expect("stream ended early");
+                    assert_eq!(ts.step, t + 1);
+                    assert_eq!(ts.actions.len(), 2);
+                    assert!(ts.rewards.iter().all(|r| r.is_finite()));
+                }
+            });
+        }
+    });
+    assert_eq!(a.steps(), GOAL as u64);
+    assert_eq!(b.steps(), GOAL as u64);
+
+    // Counters publish after the tick's trajectory sends — poll.
+    wait_until("tick counters", || {
+        srv.stats()[0]
+            .tenant
+            .as_ref()
+            .is_some_and(|t| t.infer_runs == GOAL as u64)
+    });
+    let st = &srv.stats()[0];
+    assert_eq!(st.steps, GOAL as u64, "ticks are shard steps, 1:1");
+    assert_eq!(st.bad_submits, 0);
+    let ten = st.tenant.as_ref().unwrap();
+    assert_eq!(ten.tenants, 2);
+    assert_eq!(
+        ten.infer_runs,
+        GOAL as u64,
+        "one Exec::run per tick regardless of tenant count"
+    );
+    assert_eq!(ten.infer_batch_size, 4);
+    assert_eq!(ten.agent_steps, 2 * 2 * GOAL as u64);
+    a.detach();
+    b.detach();
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+}
+
+/// Hostile `GOAL`/`LEASE_POLICY` content on a well-formed connection
+/// earns error frames without killing it; malformed tenant frames kill
+/// the connection like any other wire garbage. Runs vault-less, so it
+/// also pins the no-artifact behavior: `LEASE_POLICY` is declined with
+/// a diagnosable error, never a panic.
+#[test]
+fn hostile_goal_and_lease_policy_frames_error_cleanly() {
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = plain_server(4, StragglerPolicy::Wait, &pool);
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let addr = wire.local_addr();
+
+    // --- One connection surviving a gauntlet of content errors. ---
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut s, &Frame::Hello).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Welcome { .. } => {}
+        other => panic!("want WELCOME, got {other:?}"),
+    }
+    // GOAL for a session that never existed.
+    frame::write_frame(&mut s, &Frame::Goal { session: 0xDEAD, steps: 4 }).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ERR_SESSION),
+        other => panic!("want ERROR, got {other:?}"),
+    }
+    // A plain env lease, then a GOAL aimed at it: wrong session kind.
+    frame::write_frame(
+        &mut s,
+        &Frame::Lease { req: 7, task: Task::PointNav, n_envs: 4 },
+    )
+    .unwrap();
+    let (session, slots) = match frame::read_frame(&mut s).unwrap() {
+        Frame::Grant { session, slots, .. } => (session, slots),
+        other => panic!("want GRANT, got {other:?}"),
+    };
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Step { step, .. } => assert_eq!(step, 0, "initial observation"),
+        other => panic!("want initial STEP, got {other:?}"),
+    }
+    frame::write_frame(&mut s, &Frame::Goal { session, steps: 4 }).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Error { code, msg, .. } => {
+            assert_eq!(code, ERR_SUBMIT);
+            assert!(msg.contains("plain env session"), "got: {msg}");
+        }
+        other => panic!("want ERROR, got {other:?}"),
+    }
+    // LEASE_POLICY on a vault-less server: declined, diagnosably.
+    frame::write_frame(
+        &mut s,
+        &Frame::LeasePolicy {
+            req: 8,
+            task: Task::PointNav,
+            n_envs: 2,
+            greedy: true,
+            seed: 0,
+            variant: "test".into(),
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Error { code, msg, .. } => {
+            assert_eq!(code, ERR_LEASE);
+            assert!(msg.contains("no policy artifacts"), "got: {msg}");
+        }
+        other => panic!("want ERROR, got {other:?}"),
+    }
+    // After all that, the connection still serves its env session.
+    frame::write_frame(
+        &mut s,
+        &Frame::Submit {
+            session,
+            pairs: slots.iter().map(|&sl| (sl, ACTION_FORWARD)).collect(),
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Step { step, .. } => assert_eq!(step, 1),
+        other => panic!("want STEP, got {other:?}"),
+    }
+    frame::write_frame(&mut s, &Frame::Detach { session }).unwrap();
+    match frame::read_frame(&mut s).unwrap() {
+        Frame::Detached { .. } => {}
+        other => panic!("want DETACHED, got {other:?}"),
+    }
+    drop(s);
+
+    // --- Malformed tenant frames: connection-fatal, counted. ---
+    let magic = frame::MAGIC.to_le_bytes();
+    let raw = |ftype: u8, payload: &[u8]| -> Vec<u8> {
+        let mut b = vec![magic[0], magic[1], frame::VERSION, ftype];
+        b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        b.extend_from_slice(payload);
+        b
+    };
+    let mut hello = Vec::new();
+    frame::encode(&Frame::Hello, &mut hello);
+    let hostile: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated GOAL payload", {
+            let mut b = hello.clone();
+            b.extend_from_slice(&raw(frame::FT_GOAL, &[0u8; 8])); // needs 12
+            b
+        }),
+        ("GOAL length over the per-type cap", {
+            let mut b = hello.clone();
+            let mut h = vec![magic[0], magic[1], frame::VERSION, frame::FT_GOAL];
+            h.extend_from_slice(&64u32.to_le_bytes());
+            b.extend_from_slice(&h);
+            b
+        }),
+        ("LEASE_POLICY with a lying variant length", {
+            // header says 28 payload bytes, vlen field claims 300
+            let mut p = Vec::new();
+            p.extend_from_slice(&8u64.to_le_bytes()); // req
+            p.push(0); // task
+            p.extend_from_slice(&2u32.to_le_bytes()); // n_envs
+            p.push(1); // greedy
+            p.extend_from_slice(&0u64.to_le_bytes()); // seed
+            p.extend_from_slice(&300u32.to_le_bytes()); // vlen (lie)
+            p.extend_from_slice(b"ab");
+            let mut b = hello.clone();
+            b.extend_from_slice(&raw(frame::FT_LEASE_POLICY, &p));
+            b
+        }),
+        ("LEASE_POLICY length over the per-type cap", {
+            // 26 + 300 > the 26 + MAX_VARIANT_NAME cap: header-level kill
+            let mut b = hello.clone();
+            let mut h = vec![magic[0], magic[1], frame::VERSION, frame::FT_LEASE_POLICY];
+            h.extend_from_slice(&((26 + 300) as u32).to_le_bytes());
+            b.extend_from_slice(&h);
+            b
+        }),
+        ("TRAJ from a client (server-only direction)", {
+            let mut b = hello.clone();
+            let mut h = vec![magic[0], magic[1], frame::VERSION, frame::FT_TRAJ];
+            h.extend_from_slice(&64u32.to_le_bytes());
+            b.extend_from_slice(&h);
+            b
+        }),
+    ];
+    let before = wire.conn_stats().len();
+    for (_what, bytes) in &hostile {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(bytes).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        // drain courtesy frames until the server hangs up
+        while frame::read_frame(&mut s).is_ok() {}
+        drop(s);
+    }
+    wait_until("hostile conns to close", || {
+        wire.conn_stats().iter().skip(before).all(|c| c.closed)
+    });
+    let conns = wire.conn_stats();
+    assert_eq!(conns.len(), before + hostile.len());
+    let flagged = conns.iter().skip(before).filter(|c| c.bad_frames > 0).count();
+    assert_eq!(flagged, hostile.len(), "every hostile conn counted a bad frame");
+    assert_eq!(srv.stats()[0].bad_submits, 0);
+    assert_eq!(srv.stats()[0].leased, 0, "nothing leaked a lease");
+}
+
+/// `open_agent` against a vault-less server fails with the diagnosable
+/// no-artifacts error on both the in-process and remote paths, without
+/// leaking slots or poisoning the connection for env leases.
+#[test]
+fn policy_lease_without_artifacts_fails_cleanly() {
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = plain_server(4, StragglerPolicy::Wait, &pool);
+    assert!(!srv.has_vault());
+    let err = srv
+        .connect_with_policy(Task::PointNav, 2, "test")
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no policy artifacts"),
+        "got: {err:#}"
+    );
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let err = client
+        .open_agent(Task::PointNav, 2, "test", true, 0)
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no policy artifacts"),
+        "got: {err:#}"
+    );
+    assert_eq!(srv.stats()[0].leased, 0, "failed lease released its slots");
+    // The same connection still serves plain env leases.
+    let mut sess = client.open_session(Task::PointNav, 4).unwrap();
+    sess.step(&vec![ACTION_FORWARD; 4]).unwrap();
+    sess.detach().unwrap();
+}
+
+/// With `idle_timeout_ticks` set, a silent connection holding a lease
+/// is reaped — flagged in `conn_stats`, closed, lease released — while
+/// an actively stepping connection sails past the timeout untouched.
+#[test]
+fn idle_connections_are_reaped_and_release_leases() {
+    let pool = Arc::new(WorkerPool::new(2));
+    // Deadline policy: the busy session's steps never wait on the idle
+    // co-tenant, so its wire stays active the whole test.
+    let srv = plain_server(
+        4,
+        StragglerPolicy::Deadline { ticks: 5, fill: FillAction::NoOp },
+        &pool,
+    );
+    let cfg = WireConfig {
+        idle_timeout_ticks: Some(400), // ticks are milliseconds
+        ..WireConfig::default()
+    };
+    let wire = WireServer::listen_with("127.0.0.1:0", Arc::clone(&srv), cfg).unwrap();
+    let addr = wire.local_addr().to_string();
+
+    let idle_client = RemoteClient::connect(&addr).unwrap();
+    let _idle_sess = idle_client.open_session(Task::PointNav, 2).unwrap();
+    let busy_client = RemoteClient::connect(&addr).unwrap();
+    let mut busy = busy_client.open_session(Task::PointNav, 2).unwrap();
+    assert_eq!(srv.stats()[0].leased, 4);
+
+    // Step continuously for 3x the timeout: the idle conn goes quiet
+    // and gets reaped mid-loop, the busy conn's traffic keeps it alive.
+    let acts = vec![ACTION_FORWARD; 2];
+    let deadline = Instant::now() + Duration::from_millis(1200);
+    while Instant::now() < deadline {
+        busy.step(&acts).unwrap();
+    }
+    wait_until("idle conn reaped", || {
+        wire.conn_stats().iter().any(|c| c.reaped && c.closed)
+    });
+    wait_until("idle lease released", || srv.stats()[0].leased == 2);
+    assert_eq!(
+        wire.conn_stats().iter().filter(|c| c.reaped).count(),
+        1,
+        "only the silent connection was reaped"
+    );
+    // The survivor is still fully functional.
+    busy.step(&acts).unwrap();
+    busy.detach().unwrap();
+}
