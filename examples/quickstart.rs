@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in six acts.
+//! Quickstart: the smallest end-to-end BPS run, in seven acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -36,6 +36,14 @@
 //! every tenant of the shard, and the client only sets a goal and
 //! streams the server-chosen trajectory. Remotely that's `bps serve`
 //! plus `bps agent ADDR`.
+//!
+//! Act 7 needs no artifacts again: observability (`bps::obs`,
+//! DESIGN.md §0.10). One metrics registry backs every view of a number
+//! — `SimServer::stats()`, a Prometheus `GET /metrics` scrape, and the
+//! in-band STATS wire frame all read the *same* atomic cells — while a
+//! span ring records the per-tick pipeline timeline (Chrome trace JSON)
+//! and a JSONL event log records lease lifecycle. Remotely that's `bps
+//! serve --metrics-addr --trace-out --event-log` plus `bps stats ADDR`.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -239,7 +247,8 @@ fn main() -> anyhow::Result<()> {
         Err(e) => {
             println!("(training act skipped: {e:#})");
             println!("run `make artifacts` to export the test AOT variant");
-            return Ok(());
+            // Acts 5 and 6 need artifacts; observability doesn't.
+            return observability_act(&scene);
         }
     };
     while coord.frames() < coord.cfg.total_frames {
@@ -300,5 +309,62 @@ fn main() -> anyhow::Result<()> {
         ten.infer_p50 * 1e3
     );
     agent.detach();
+    drop(tenant_server);
+
+    observability_act(&scene)
+}
+
+// -- Act 7: observability — one registry behind every surface --------------
+fn observability_act(scene: &Arc<bps::scene::SceneAsset>) -> anyhow::Result<()> {
+    println!("\n== Obs quickstart: registry, scrape, trace, events ==");
+    use bps::obs::MetricsServer;
+    let shard = ShardSpec::with_scenes(
+        EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(32)).seed(7),
+        (0..8).map(|_| Arc::clone(scene)).collect(),
+    );
+    let server = Arc::new(SimServer::start(
+        vec![shard],
+        Arc::new(WorkerPool::new(WorkerPool::default_size())),
+    )?);
+    // All three sinks are disarmed by default (one atomic load per
+    // producer); arm them before the session so its lease events land.
+    server.trace().enable();
+    let events_path = std::env::temp_dir().join("bps_quickstart_events.jsonl");
+    server.events().arm(&events_path, 1 << 20)?;
+    let metrics = MetricsServer::listen("127.0.0.1:0", server.registry())?;
+
+    let mut session = server.connect(Task::PointNav, 8)?;
+    let mut actions = vec![0u8; 8];
+    for t in 0..32usize {
+        for (j, a) in actions.iter_mut().enumerate() {
+            *a = (1 + (t + j) % 3) as u8;
+        }
+        session.step(&actions)?;
+    }
+    drop(session); // -> lease.release in the event log
+
+    // The registry snapshot, SimServer::stats(), and any scrape all read
+    // the same cells — compare one counter across two of the views.
+    let snap = server.registry().snapshot();
+    let steps = snap.counter("serve.shard.steps", &[("shard", "0")]).unwrap();
+    assert_eq!(steps, server.stats()[0].steps);
+    println!(
+        "registry: {steps} shard steps; latency histogram holds {} samples",
+        snap.histogram("serve.shard.latency_us", &[("shard", "0")])
+            .unwrap()
+            .count
+    );
+    println!(
+        "scrape:   curl http://{}/metrics   (a wire server also answers `bps stats ADDR`)",
+        metrics.local_addr()
+    );
+    let trace_path = std::env::temp_dir().join("bps_quickstart_trace.json");
+    std::fs::write(&trace_path, server.trace().to_chrome_json())?;
+    println!(
+        "trace:    {} pipeline spans -> {} (open in chrome://tracing or Perfetto)",
+        server.trace().spans().len(),
+        trace_path.display()
+    );
+    println!("events:   lease lifecycle in {}", events_path.display());
     Ok(())
 }

@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Config, SimArch};
 use crate::env::{EnvBatch, EnvBatchConfig};
 use crate::metrics::EpisodeStats;
+use crate::obs::EventLog;
 use crate::optim::{scale_lr, Losses, LrSchedule, Trainer};
 use crate::policy::Policy;
 use crate::render::{RenderConfig, SceneRotation, Sensor};
@@ -68,6 +69,9 @@ pub struct Coordinator {
     pub prof: Profiler,
     pub stats: EpisodeStats,
     pub fps: FpsMeter,
+    /// Lifecycle event sink (curriculum stage advances). Disarmed by
+    /// default — `bps train --event-log FILE` arms it.
+    pub events: Arc<EventLog>,
     variant: Variant,
     pool: Arc<WorkerPool>,
     shards: Vec<Shard>,
@@ -181,6 +185,7 @@ impl Coordinator {
             prof: Profiler::new(),
             stats,
             fps: FpsMeter::start(),
+            events: Arc::new(EventLog::disabled()),
             variant,
             pool,
             shards,
@@ -202,7 +207,7 @@ impl Coordinator {
     /// the outcomes.
     pub fn train_iteration(&mut self) -> Result<IterStats> {
         let l = self.cfg.rollout_len;
-        for shard in self.shards.iter_mut() {
+        for (si, shard) in self.shards.iter_mut().enumerate() {
             shard
                 .rollout
                 .begin(&shard.policy.h, &shard.policy.c, &shard.last_dones);
@@ -246,6 +251,17 @@ impl Coordinator {
             if let Some(cur) = shard.curriculum.as_mut() {
                 if let Some(stage) = cur.advance_if_ready() {
                     shard.env.set_stage(stage)?;
+                    self.events.emit(
+                        "curriculum.stage_advance",
+                        &[
+                            ("shard", crate::util::json::Json::Num(si as f64)),
+                            ("stage", crate::util::json::Json::Num(stage as f64)),
+                            (
+                                "episodes",
+                                crate::util::json::Json::Num(cur.episodes() as f64),
+                            ),
+                        ],
+                    );
                 }
             }
             shard.env.rotate_scenes()?;

@@ -451,6 +451,13 @@ impl EnvBatch {
         Arc::clone(&self.rotations)
     }
 
+    /// Shared feed-stall counter: the serve layer attaches it to the obs
+    /// registry (`scenario.feed_stalls{shard}`) so scrapes read the very
+    /// cell [`feed_stalls`](Self::feed_stalls) reads.
+    pub(crate) fn feed_stalls_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.feed_stalls)
+    }
+
     /// Drain accumulated (simulation, rendering) wall time since the last
     /// drain. In pipelined mode this reflects completed steps only.
     pub fn drain_timings(&self) -> (Duration, Duration) {

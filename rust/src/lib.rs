@@ -16,6 +16,7 @@ pub mod optim;
 pub mod policy;
 pub mod rollout;
 pub mod navmesh;
+pub mod obs;
 pub mod render;
 pub mod runtime;
 pub mod scenario;

@@ -6,6 +6,10 @@
 //!   eval           evaluate a checkpoint on a dataset split
 //!   serve          front a SimServer with the TCP wire transport
 //!   connect        remote demo client for a `bps serve` server
+//!   stats          scrape a `bps serve` server's metrics registry over
+//!                  the wire (STATS frame) and print the Prometheus text
+//!   trace          run an in-process serve pipeline with tracing on and
+//!                  write a Chrome trace_event JSON (chrome://tracing)
 //!   agent          remote policy-tenant client: lease slots + a
 //!                  server-side policy, post a goal, stream trajectories
 //!   serve-demo     multi-client serving demo over the SimServer layer
@@ -45,12 +49,13 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     }
-    // Only serve/connect/agent take a positional operand (the address);
-    // every other subcommand rejects strays up front — `bps train
-    // cfg.toml` must fail immediately, not after a defaults-run finishes.
+    // Only serve/connect/agent/stats take a positional operand (the
+    // address); every other subcommand rejects strays up front — `bps
+    // train cfg.toml` must fail immediately, not after a defaults-run
+    // finishes.
     if !matches!(
         args.subcommand.as_deref(),
-        Some("serve") | Some("connect") | Some("agent")
+        Some("serve") | Some("connect") | Some("agent") | Some("stats")
     ) {
         args.ensure_no_operands()?;
     }
@@ -61,6 +66,8 @@ fn run() -> Result<()> {
         Some("serve") => serve(&mut args),
         Some("connect") => connect(&mut args),
         Some("agent") => agent(&mut args),
+        Some("stats") => stats(&mut args),
+        Some("trace") => trace_cmd(&mut args),
         Some("serve-demo") => serve_demo(&mut args),
         Some("scenario-demo") => scenario_demo(&mut args),
         Some("bench") => bench(&mut args),
@@ -72,8 +79,8 @@ fn run() -> Result<()> {
         other => {
             bail!(
                 "unknown subcommand {other:?}\n\
-                 usage: bps <gen-dataset|train|eval|serve|connect|agent|serve-demo|\
-                 scenario-demo|bench|info|help> [--key value ...]"
+                 usage: bps <gen-dataset|train|eval|serve|connect|agent|stats|trace|\
+                 serve-demo|scenario-demo|bench|info|help> [--key value ...]"
             )
         }
     };
@@ -93,7 +100,8 @@ SUBCOMMANDS
   gen-dataset  generate a procedural scene dataset with train/val/test splits
                (--dir PATH --train N --val N --test N --complexity gibson|thor|test --seed S)
   train        end-to-end RL training, the paper's Fig. 2 loop
-               (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K)
+               (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K
+                --event-log FILE  curriculum stage advances as JSONL)
   eval         greedy evaluation on a dataset split
                (--checkpoint ckpt.bin --split val --episodes N)
   serve        front a SimServer with the TCP wire transport
@@ -110,6 +118,14 @@ SUBCOMMANDS
                 --artifacts-dir PATH --checkpoint CKPT --policy-seed S
                 with AOT artifacts present, also serve *policies*: agents
                 lease slots + a server-side checkpoint (bps agent below)
+                --metrics-addr A  plaintext scrape endpoint: GET /metrics
+                serves the registry's Prometheus text, /healthz liveness
+                --trace-out FILE  record per-tick pipeline spans and write
+                Chrome trace_event JSON on clean shutdown (--once runs)
+                --event-log FILE  append lifecycle events as JSONL
+                (lease grant/release, idle reap, slow-reader disconnect,
+                bad submits, error frames), rotating at --event-log-bytes
+                (default 8 MiB)
                 --stats-every SECS --once  exit once every accepted
                 connection has closed (at least one), for smoke tests)
   connect      remote demo client: lease slots on a `bps serve` server,
@@ -122,6 +138,14 @@ SUBCOMMANDS
                step): bps agent 127.0.0.1:7447 --envs 4 --steps 64
                (--addr A --task NAME --envs N --steps T --variant NAME
                 --sample --seed S  sample actions instead of greedy)
+  stats        scrape a `bps serve` server's metrics over the wire (the
+               STATS frame) and print the Prometheus text — byte-identical
+               to the server's own /metrics endpoint:
+               bps stats 127.0.0.1:7447  (--addr A)
+  trace        run an in-process serve pipeline with span tracing enabled
+               and write Chrome trace_event JSON for chrome://tracing or
+               Perfetto (--out trace.json --steps T --envs N --res R
+                --task NAME --seed S --threads T)
   serve-demo   drive M concurrent synthetic clients through the SimServer
                multi-tenant serving layer (bps::serve) and report aggregate
                FPS, occupancy, and per-client step-latency p50/p95
@@ -134,7 +158,7 @@ SUBCOMMANDS
                demand and a success-driven curriculum advances difficulty
                (--scenario SPEC|NAME --scenario-dir DIR --envs N --steps T
                 --k K --prefetch P --rotate-every K --res R --seed S
-                --threads T --window E --threshold F --list)
+                --threads T --window E --threshold F --event-log FILE --list)
   bench        standalone batch-renderer benchmark across pipeline modes
                and sensors: FPS, p50/p95 megaframe latency, triangle
                throughput, and the per-stage breakdown (transform / cull /
@@ -239,6 +263,7 @@ fn train(args: &mut Args) -> Result<()> {
     let curve_path = args.opt("curve").map(PathBuf::from);
     let ckpt_out = args.opt("checkpoint-out").map(PathBuf::from);
     let log_every = args.usize_or("log-every", 5)?;
+    let event_log = args.opt("event-log").map(PathBuf::from);
     let cfg = Config::load(cfg_path.as_deref(), args)?;
     println!(
         "training: variant={} arch={:?} N={} L={} shards={} optimizer={} frames={}",
@@ -251,6 +276,10 @@ fn train(args: &mut Args) -> Result<()> {
         cfg.total_frames
     );
     let mut coord = Coordinator::new(cfg)?;
+    if let Some(p) = &event_log {
+        // Lifecycle events (curriculum stage advances) as size-capped JSONL.
+        coord.events.arm(p, bps::obs::DEFAULT_EVENT_LOG_BYTES)?;
+    }
     let mut curve = match &curve_path {
         Some(p) => Some(CsvLogger::create(
             p,
@@ -299,6 +328,11 @@ fn train(args: &mut Args) -> Result<()> {
                 l.entropy as f64,
                 l.lr as f64,
             ])?;
+            // Rows buffer in-process now; land them at the log cadence so
+            // a tail -f of the curve stays fresh without per-row syscalls.
+            if iter % log_every as u64 == 0 {
+                c.flush()?;
+            }
         }
     }
     println!(
@@ -419,6 +453,10 @@ fn serve(args: &mut Args) -> Result<()> {
     let mem_budget_mb = args.usize_or("mem-budget", 0)?;
     let stats_every = args.f64_or("stats-every", 10.0)?.max(0.2);
     let once = args.flag("once")?;
+    let metrics_addr = args.opt("metrics-addr");
+    let trace_out = args.opt("trace-out").map(PathBuf::from);
+    let event_log = args.opt("event-log").map(PathBuf::from);
+    let event_log_bytes = args.u64_or("event-log-bytes", bps::obs::DEFAULT_EVENT_LOG_BYTES)?;
     let artifacts_dir = PathBuf::from(args.opt_or("artifacts-dir", "artifacts"));
     let checkpoint = args.opt("checkpoint").map(PathBuf::from);
     let policy_seed = args.u64_or("policy-seed", 1)?;
@@ -465,6 +503,23 @@ fn serve(args: &mut Args) -> Result<()> {
     let vault = PolicyVault::open_if_present(&artifacts_dir, checkpoint, policy_seed)?;
     let vault_banner = vault.as_ref().map(|v| v.describe());
     let server = Arc::new(SimServer::with_vault(specs, pool, budget, vault)?);
+    // Arm the obs sinks before the listener: the first connection's
+    // lease events and spans must land, not race the setup.
+    if let Some(p) = &event_log {
+        server.events().arm(p, event_log_bytes)?;
+        println!("event log: {} (rotating at {event_log_bytes} bytes)", p.display());
+    }
+    if trace_out.is_some() {
+        server.trace().enable();
+    }
+    let _metrics = match &metrics_addr {
+        Some(a) => {
+            let m = bps::obs::MetricsServer::listen(a.as_str(), server.registry())?;
+            println!("metrics: http://{}/metrics", m.local_addr());
+            Some(m)
+        }
+        None => None,
+    };
     let wire = WireServer::listen_with(
         &listen,
         Arc::clone(&server),
@@ -508,7 +563,84 @@ fn serve(args: &mut Args) -> Result<()> {
     }
     // Final report (the smoke job asserts bad_submits=0 on these rows).
     print_serve_stats(&server, &wire.conn_stats());
+    if let Some(p) = &trace_out {
+        let spans = server.trace().spans().len();
+        std::fs::write(p, server.trace().to_chrome_json())?;
+        println!("trace: {spans} spans -> {}", p.display());
+    }
     println!("serve: clean shutdown");
+    Ok(())
+}
+
+/// Scrape a `bps serve` server's metrics registry over the wire (the
+/// STATS frame) and print the Prometheus text. The header goes to stderr
+/// so stdout is the exact snapshot rendering — byte-identical to the
+/// server's own `/metrics` endpoint, pipeable into files or graders.
+fn stats(args: &mut Args) -> Result<()> {
+    use bps::serve::RemoteClient;
+
+    let addr = args
+        .operand()
+        .or_else(|| args.opt("addr"))
+        .unwrap_or_else(|| "127.0.0.1:7447".into());
+    args.ensure_no_operands()?; // a second address is a typo; fail now
+    let client = RemoteClient::connect(&addr)?;
+    let (version, text) = client.stats_text()?;
+    eprintln!("# scrape of {addr} (snapshot version {version})");
+    print!("{text}");
+    Ok(())
+}
+
+/// Run an in-process serve pipeline with span tracing enabled and write
+/// the Chrome `trace_event` JSON: the quickest way to look at one tick's
+/// submit → coalesce → sim → render-stage → publish timeline without
+/// standing up a server (load the file in chrome://tracing or Perfetto).
+fn trace_cmd(args: &mut Args) -> Result<()> {
+    use bps::env::EnvBatchConfig;
+    use bps::render::RenderConfig;
+    use bps::scene::procgen::{generate, Complexity};
+    use bps::serve::{ShardSpec, SimServer};
+    use bps::sim::Task;
+    use bps::util::pool::WorkerPool;
+    use std::sync::Arc;
+
+    let out = PathBuf::from(args.opt_or("out", "trace.json"));
+    let envs = args.usize_or("envs", 8)?.max(1);
+    let steps = args.usize_or("steps", 32)?.max(1);
+    let res = args.usize_or("res", 32)?.max(4);
+    let seed = args.u64_or("seed", 7)?;
+    let threads = args.usize_or("threads", 0)?;
+    let task = {
+        let name = args.opt_or("task", "pointnav");
+        Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
+    };
+
+    let scene = Arc::new(generate("trace", seed, Complexity::test()));
+    let pool = Arc::new(WorkerPool::new(if threads == 0 {
+        WorkerPool::default_size()
+    } else {
+        threads
+    }));
+    let cfg = EnvBatchConfig::new(task, RenderConfig::depth(res)).seed(seed);
+    let scenes = (0..envs).map(|_| Arc::clone(&scene)).collect();
+    let server = SimServer::start(vec![ShardSpec::with_scenes(cfg, scenes)], pool)?;
+    server.trace().enable();
+    let mut session = server.connect(task, envs)?;
+    let mut actions = vec![0u8; envs];
+    for t in 0..steps {
+        for (j, a) in actions.iter_mut().enumerate() {
+            // turn/forward script, never STOP
+            *a = (1 + (t + j) % 3) as u8;
+        }
+        session.step(&actions)?;
+    }
+    drop(session);
+    let spans = server.trace().spans().len();
+    std::fs::write(&out, server.trace().to_chrome_json())?;
+    println!(
+        "trace: {spans} spans over {steps} steps x {envs} envs -> {}",
+        out.display()
+    );
     Ok(())
 }
 
@@ -790,6 +922,10 @@ fn scenario_demo(args: &mut Args) -> Result<()> {
     let threads = args.usize_or("threads", 0)?;
     let window = args.usize_or("window", 12)?.max(1);
     let threshold = args.f64_or("threshold", 0.6)? as f32;
+    let events = bps::obs::EventLog::disabled();
+    if let Some(p) = args.opt("event-log").map(PathBuf::from) {
+        events.arm(&p, bps::obs::DEFAULT_EVENT_LOG_BYTES)?;
+    }
 
     println!("scenario: {}", spec.summary());
     let pool = Arc::new(WorkerPool::new(if threads == 0 {
@@ -817,6 +953,13 @@ fn scenario_demo(args: &mut Args) -> Result<()> {
         successes += v.successes.iter().filter(|&&s| s).count() as u64;
         if let Some(stage) = cur.advance_if_ready() {
             env.set_stage(stage)?;
+            events.emit(
+                "curriculum.stage_advance",
+                &[
+                    ("stage", bps::util::json::Json::Num(stage as f64)),
+                    ("episodes", bps::util::json::Json::Num(cur.episodes() as f64)),
+                ],
+            );
             println!(
                 "  step {t:>5}: stage -> {stage}/{} ({} episodes so far)",
                 spec.stages - 1,

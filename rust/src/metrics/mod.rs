@@ -2,6 +2,7 @@
 //! evaluation metrics), FPS accounting per the paper's methodology, and
 //! CSV/JSONL logging for the figure-regeneration benches.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::io::Write;
 use std::path::Path;
@@ -13,6 +14,12 @@ use anyhow::Result;
 pub struct Window {
     buf: VecDeque<f32>,
     cap: usize,
+    /// Reused selection/sort scratch for the percentile reads: the serve
+    /// stats path polls percentiles per shard per tick, and a fresh
+    /// `Vec` per call was measurable allocator churn. `RefCell` (not a
+    /// lock): every `Window` sits behind a mutex or is single-owner, so
+    /// the window needs `Send`, never `Sync`.
+    scratch: RefCell<Vec<f32>>,
 }
 
 impl Window {
@@ -20,6 +27,7 @@ impl Window {
         Window {
             buf: VecDeque::with_capacity(cap),
             cap,
+            scratch: RefCell::new(Vec::new()),
         }
     }
 
@@ -50,16 +58,19 @@ impl Window {
     /// tail a straggling co-tenant inflicts. Returns 0.0 when empty.
     ///
     /// O(n) via `select_nth_unstable_by` — the server stats path polls
-    /// this per shard per tick, so a full sort per call adds up. For
-    /// several quantiles of the same window use [`percentiles`]
-    /// (one sort, K rank reads).
+    /// this per shard per tick, so a full sort per call adds up, and the
+    /// selection runs in a reused scratch buffer (no allocation after
+    /// the first call at a given window size). For several quantiles of
+    /// the same window use [`percentiles`] (one sort, K rank reads).
     ///
     /// [`percentiles`]: Window::percentiles
     pub fn percentile(&self, q: f32) -> f32 {
         if self.buf.is_empty() {
             return 0.0;
         }
-        let mut scratch: Vec<f32> = self.buf.iter().copied().collect();
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.clear();
+        scratch.extend(self.buf.iter().copied());
         let idx = Self::rank_index(scratch.len(), q);
         let (_, nth, _) = scratch.select_nth_unstable_by(idx, |a, b| {
             a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
@@ -76,7 +87,9 @@ impl Window {
         if self.buf.is_empty() {
             return out;
         }
-        let mut sorted: Vec<f32> = self.buf.iter().copied().collect();
+        let mut sorted = self.scratch.borrow_mut();
+        sorted.clear();
+        sorted.extend(self.buf.iter().copied());
         sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         for (o, q) in out.iter_mut().zip(qs) {
             *o = sorted[Self::rank_index(sorted.len(), q)];
@@ -166,6 +179,11 @@ impl CsvLogger {
         Ok(CsvLogger { file })
     }
 
+    /// Buffer one row. Rows are NOT synced per call — that cost a
+    /// syscall per training step; call [`flush`](Self::flush) at a
+    /// checkpoint cadence, and `Drop` flushes whatever remains (the
+    /// `BufWriter` flushes on drop, so a cleanly dropped logger loses
+    /// nothing).
     pub fn row(&mut self, values: &[f64]) -> Result<()> {
         let line = values
             .iter()
@@ -173,6 +191,11 @@ impl CsvLogger {
             .collect::<Vec<_>>()
             .join(",");
         writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    /// Push buffered rows to the OS (crash-visibility checkpoint).
+    pub fn flush(&mut self) -> Result<()> {
         self.file.flush()?;
         Ok(())
     }
@@ -260,6 +283,51 @@ mod tests {
         assert_eq!(s.episodes, 2);
         assert!((s.reward.mean() - (3.0 + 2.0) / 2.0).abs() < 1e-6);
         assert!((s.success.mean() - 0.5).abs() < 1e-6);
+    }
+
+    /// Regression for the scratch-buffer reuse: repeated percentile
+    /// reads interleaved with pushes must return exactly what a fresh
+    /// sort-and-rank over the window computes every time (the reused
+    /// scratch must never leak stale samples between calls).
+    #[test]
+    fn percentile_scratch_reuse_results_unchanged() {
+        let mut w = Window::new(32);
+        let mut x = 42u32;
+        for step in 0..100 {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+            w.push((x % 512) as f32);
+            // shrinking window sizes exercise scratch longer than buf
+            if step == 60 {
+                w.clear();
+            }
+            if w.is_empty() {
+                continue;
+            }
+            for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+                let mut fresh: Vec<f32> = w.buf.iter().copied().collect();
+                fresh.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                let expect = fresh[Window::rank_index(fresh.len(), q)];
+                assert_eq!(w.percentile(q), expect, "step={step} q={q}");
+                assert_eq!(w.percentiles([q])[0], expect, "step={step} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_logger_buffers_until_flush() {
+        let dir = std::env::temp_dir().join("bps_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("buffered.csv");
+        let mut log = CsvLogger::create(&path, "a").unwrap();
+        // small rows sit in the BufWriter until an explicit flush
+        log.row(&[1.0]).unwrap();
+        log.flush().unwrap();
+        let after_flush = std::fs::read_to_string(&path).unwrap();
+        assert!(after_flush.contains("\n1\n"), "{after_flush:?}");
+        log.row(&[2.0]).unwrap();
+        drop(log); // flush-on-drop lands the tail
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a\n1\n2\n");
     }
 
     #[test]

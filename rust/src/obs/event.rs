@@ -1,0 +1,199 @@
+//! Structured event log: bounded JSONL for discrete lifecycle events
+//! (lease grant/release, policy-lease decline, curriculum stage advance,
+//! idle reap, slow-reader disconnect, bad submits, error frames).
+//!
+//! Unlike metrics (rates) and traces (per-tick timing), events answer
+//! "what happened to session 17?" — low-volume, high-information
+//! records. Each line is a self-contained JSON object:
+//!
+//! ```json
+//! {"event":"lease.grant","ts_ms":1723111845123,"session":3,"shard":0,"n_envs":8}
+//! ```
+//!
+//! The log is size-capped: when a write would push the file past
+//! `max_bytes` it rotates to `<path>.1` (replacing any previous `.1`),
+//! so a long-running server holds at most ~2x the cap on disk. Write
+//! errors are swallowed (a full disk must not take down serving); the
+//! `dropped` counter records how many events failed to land.
+//!
+//! Like the trace sink, an unarmed log is a single atomic load per
+//! `emit` — no allocation, no formatting, no syscalls.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Default rotation cap: 8 MiB per file.
+pub const DEFAULT_EVENT_LOG_BYTES: u64 = 8 << 20;
+
+struct LogState {
+    path: PathBuf,
+    file: File,
+    written: u64,
+    max_bytes: u64,
+}
+
+/// Shared, initially-disarmed event sink. See module docs.
+pub struct EventLog {
+    enabled: AtomicBool,
+    dropped: AtomicU64,
+    state: Mutex<Option<LogState>>,
+}
+
+impl EventLog {
+    /// A disarmed log: every `emit` is a no-op until [`arm`](Self::arm).
+    pub fn disabled() -> EventLog {
+        EventLog {
+            enabled: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+            state: Mutex::new(None),
+        }
+    }
+
+    /// Open (truncate) `path` and start accepting events, rotating to
+    /// `<path>.1` when the file would exceed `max_bytes`.
+    pub fn arm(&self, path: &Path, max_bytes: u64) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = File::create(path)?;
+        *self.state.lock().unwrap() = Some(LogState {
+            path: path.to_path_buf(),
+            file,
+            written: 0,
+            max_bytes: max_bytes.max(1024),
+        });
+        self.enabled.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Events that failed to land (I/O error on write or rotate).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Append one event line. No-op when disarmed.
+    pub fn emit(&self, event: &str, fields: &[(&str, Json)]) {
+        if !self.enabled() {
+            return;
+        }
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("event".to_string(), Json::Str(event.to_string()));
+        obj.insert("ts_ms".to_string(), Json::Num(ts_ms as f64));
+        for (k, v) in fields {
+            obj.insert(k.to_string(), v.clone());
+        }
+        let mut line = Json::Obj(obj).to_string();
+        line.push('\n');
+
+        let mut guard = self.state.lock().unwrap();
+        let Some(st) = guard.as_mut() else { return };
+        if st.written + line.len() as u64 > st.max_bytes && st.written > 0 {
+            if Self::rotate(st).is_err() {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        let ok = st
+            .file
+            .write_all(line.as_bytes())
+            .and_then(|()| st.file.flush())
+            .is_ok();
+        if ok {
+            st.written += line.len() as u64;
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn rotate(st: &mut LogState) -> std::io::Result<()> {
+        let mut rotated = st.path.as_os_str().to_owned();
+        rotated.push(".1");
+        // Rename replaces any previous .1: at most ~2x max_bytes on disk.
+        std::fs::rename(&st.path, PathBuf::from(rotated))?;
+        st.file = File::create(&st.path)?;
+        st.written = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("bps_obs_event_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn disarmed_log_is_a_noop() {
+        let log = EventLog::disabled();
+        log.emit("x", &[]);
+        assert!(!log.enabled());
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn emits_parseable_jsonl_with_fields() {
+        let path = tmp("basic.jsonl");
+        let log = EventLog::disabled();
+        log.arm(&path, 1 << 20).unwrap();
+        log.emit(
+            "lease.grant",
+            &[("session", Json::Num(3.0)), ("shard", Json::Num(0.0))],
+        );
+        log.emit("lease.release", &[("session", Json::Num(3.0))]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.req("event").unwrap().as_str().unwrap(), "lease.grant");
+        assert_eq!(first.req("session").unwrap().as_f64().unwrap(), 3.0);
+        assert!(first.req("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rotates_at_size_cap() {
+        let path = tmp("rotate.jsonl");
+        let log = EventLog::disabled();
+        log.arm(&path, 1024).unwrap(); // min cap
+        for i in 0..64 {
+            log.emit("tick", &[("i", Json::Num(i as f64))]);
+        }
+        let rotated = PathBuf::from({
+            let mut s = path.as_os_str().to_owned();
+            s.push(".1");
+            s
+        });
+        assert!(rotated.exists(), "rotation file missing");
+        assert!(std::fs::metadata(&rotated).unwrap().len() <= 1024);
+        // both files still hold only whole, parseable lines
+        for p in [&path, &rotated] {
+            let text = std::fs::read_to_string(p).unwrap();
+            assert!(!text.is_empty());
+            for line in text.lines() {
+                Json::parse(line).unwrap();
+            }
+        }
+        assert_eq!(log.dropped(), 0);
+    }
+}

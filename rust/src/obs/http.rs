@@ -1,0 +1,164 @@
+//! Minimal plaintext exposition endpoint: `GET /metrics` serves the
+//! registry's Prometheus text, `GET /healthz` a liveness line.
+//!
+//! Hand-rolled HTTP/1.1 like the wire layer — no new dependencies. One
+//! accept thread handles connections serially (scrapes are rare and the
+//! response is a single pre-rendered string); requests are read with a
+//! short timeout and every response closes the connection, so a stuck
+//! scraper cannot wedge the endpoint for more than the read timeout.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::registry::Registry;
+
+/// How often the accept loop polls for shutdown.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Per-request read deadline and cap on the request head we will buffer.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+const MAX_REQUEST_HEAD: usize = 4096;
+
+/// Background `/metrics` + `/healthz` server. Dropping it stops the
+/// accept thread.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn listen<A: ToSocketAddrs>(addr: A, registry: Arc<Registry>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr).context("bind metrics addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("metrics listener nonblocking")?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("bps-metrics-http".into())
+                .spawn(move || accept_loop(listener, registry, shutdown))
+                .context("spawn metrics thread")?
+        };
+        Ok(MetricsServer {
+            addr,
+            shutdown,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, registry: Arc<Registry>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline: the response is one pre-rendered string.
+                let _ = handle(stream, &registry);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    // Read until the end of the request head; the body (none expected
+    // for GET) is ignored.
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < MAX_REQUEST_HEAD {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    let line = head
+        .split(|&b| b == b'\r' || b == b'\n')
+        .next()
+        .unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    } else {
+        match path {
+            "/metrics" => (
+                "200 OK",
+                // version=0.0.4 is the Prometheus text-format content type
+                "text/plain; version=0.0.4; charset=utf-8",
+                registry.snapshot().to_prometheus(),
+            ),
+            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        }
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        let (head, body) = out.split_once("\r\n\r\n").unwrap();
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_metrics_healthz_and_404() {
+        let registry = Registry::new();
+        registry.counter("serve.shard.steps", &[("shard", "0")]).add(3);
+        let srv = MetricsServer::listen("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+        let addr = srv.local_addr();
+
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("serve_shard_steps{shard=\"0\"} 3"), "{body}");
+        // scrape matches the registry's own canonical rendering exactly
+        assert_eq!(body, registry.snapshot().to_prometheus());
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "ok\n");
+
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    }
+}

@@ -1,0 +1,43 @@
+//! `bps::obs` — the unified observability layer (DESIGN.md §0.10).
+//!
+//! The paper's headline throughput (19k FPS single-GPU, 72k on eight)
+//! exists because every pipeline stage was measured and the stragglers
+//! amortized; this module is the measuring side for our serve tier. Four
+//! surfaces, one substrate:
+//!
+//! - [`Registry`] — typed [`Counter`]/[`Gauge`]/[`Histogram`] handles
+//!   (atomics on the hot path, no registry lock after registration)
+//!   under dotted names with small label sets (`shard`, `stage`,
+//!   `conn`). Every stats producer (coalescers, render counters, wire
+//!   conn accounting, curriculum) reports into this; `SimServer::stats`
+//!   and every scrape read out of it — the *same* atomic cells, so all
+//!   views agree bitwise.
+//! - [`TraceSink`] — per-tick megaframe spans (coalesce wait → sim →
+//!   render transform/cull/raster/resolve → tenant infer → wire
+//!   encode/flush) in a bounded ring, exportable as Chrome
+//!   `trace_event` JSON (`bps serve --trace-out`, `bps trace`).
+//! - [`MetricsServer`] — hand-rolled `GET /metrics` (Prometheus text) +
+//!   `/healthz` endpoint (`bps serve --metrics-addr`), and the `STATS`
+//!   wire frame which returns the identical rendering in-band
+//!   (`bps stats ADDR`).
+//! - [`EventLog`] — size-capped JSONL of lifecycle events
+//!   (`--event-log`): lease grant/release, policy decline, curriculum
+//!   advance, idle reap, slow-reader disconnect, bad submits, error
+//!   frames.
+//!
+//! All four are disabled-by-default and gate on one atomic load, so the
+//! sync stepping path with obs compiled in is bitwise-identical to a
+//! build without it.
+
+pub mod event;
+pub mod http;
+pub mod registry;
+pub mod trace;
+
+pub use event::{EventLog, DEFAULT_EVENT_LOG_BYTES};
+pub use http::MetricsServer;
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricSnapshot, MetricValue, Registry, Snapshot,
+    HIST_BUCKETS, SNAPSHOT_VERSION,
+};
+pub use trace::{Span, TraceSink, DEFAULT_TRACE_SPANS, TENANT_PID, WIRE_PID};

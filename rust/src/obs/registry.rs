@@ -1,0 +1,607 @@
+//! Metrics registry: typed `Counter`/`Gauge`/`Histogram` handles under
+//! dotted names with small static label sets.
+//!
+//! Design constraints (DESIGN.md §0.10):
+//!
+//! - **Lock-light hot path.** A handle is an `Arc`'d atomic cell;
+//!   `inc`/`add`/`observe`/`set` are single `fetch_add`/`store`s with no
+//!   registry lock. The registry's own mutex is touched only at
+//!   registration time and when a scrape takes a [`Snapshot`].
+//! - **Shared cells, not shadow copies.** Producers that already keep an
+//!   atomic (e.g. `EnvBatch`'s rotation counter) attach *that* cell via
+//!   [`Registry::attach_counter`], so a scrape and the legacy
+//!   `SimServer::stats()` read the very same memory — the bitwise-match
+//!   acceptance criterion falls out by construction instead of by
+//!   sampling discipline.
+//! - **Deterministic, mergeable snapshots.** Histograms use fixed log2
+//!   buckets ([`Histogram::bucket_index`]), so two snapshots from
+//!   different shards/processes merge by plain element-wise addition
+//!   ([`HistogramSnapshot::merge`]) and the same samples always land in
+//!   the same buckets. Snapshot iteration order is the registry's
+//!   `BTreeMap` order: sorted by name, then by label set.
+//!
+//! The text exposition ([`Snapshot::to_prometheus`]) is the *single*
+//! canonical rendering: the `/metrics` HTTP endpoint, the `STATS` wire
+//! frame, and `bps stats` all emit exactly this string, so every scrape
+//! path agrees byte-for-byte on the same snapshot.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Version stamped into every [`Snapshot`] (and the `STATS` wire reply).
+/// Bump when metric semantics change incompatibly.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Fixed bucket count for every histogram: bucket `i < 31` counts values
+/// in `[2^i, 2^(i+1))` (bucket 0 also takes 0), bucket 31 is overflow.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Monotonic counter. Cheap to clone; clones share the cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Wrap an existing atomic as a counter handle, so a producer's
+    /// legacy cell and the registry share storage (see module docs).
+    pub fn from_cell(cell: Arc<AtomicU64>) -> Counter {
+        Counter(cell)
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value (occupancy, queue depth). Stores `f64` bits in an
+/// `AtomicU64`; `add` is a CAS loop but gauges are off the per-step hot
+/// path (they change on lease/release, not per tick).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: f64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+                Some((f64::from_bits(bits) + delta).to_bits())
+            });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug, Default)]
+struct HistCore {
+    count: AtomicU64,
+    /// Sum of observed values (integer units, e.g. microseconds).
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Log2-bucketed histogram over non-negative integer samples
+/// (microseconds, bytes). Fixed buckets keep snapshots deterministic and
+/// mergeable across shards; ~2x relative resolution is plenty for
+/// latency tails.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket for value `v`: 0 for `v <= 1`, else `floor(log2 v)`,
+    /// saturating into the overflow bucket (`HIST_BUCKETS - 1`).
+    pub fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            return 0;
+        }
+        ((63 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper edge of bucket `i`, or `None` for the overflow
+    /// bucket (rendered as `le="+Inf"`).
+    pub fn bucket_le(i: usize) -> Option<u64> {
+        if i + 1 >= HIST_BUCKETS {
+            None
+        } else {
+            Some((1u64 << (i + 1)) - 1)
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let c = &self.0;
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let c = &self.0;
+        let mut s = HistogramSnapshot {
+            count: c.count.load(Ordering::Relaxed),
+            sum: c.sum.load(Ordering::Relaxed),
+            buckets: [0; HIST_BUCKETS],
+        };
+        for (o, b) in s.buckets.iter_mut().zip(c.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// Frozen histogram state. Element-wise addable: merging per-shard
+/// snapshots gives exactly the histogram a single global recorder would
+/// have produced (same fixed buckets).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: 0,
+            sum: 0,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// One metric's frozen value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// One registered series in a [`Snapshot`].
+#[derive(Clone, Debug)]
+pub struct MetricSnapshot {
+    pub name: String,
+    /// Sorted by label key (canonical order).
+    pub labels: Vec<(String, String)>,
+    pub value: MetricValue,
+}
+
+/// A versioned, ordered freeze of every registered series.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub version: u32,
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+#[derive(Clone)]
+enum Cell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+type Key = (String, Vec<(String, String)>);
+
+/// The process-wide (or server-wide) series table. See module docs.
+#[derive(Default)]
+pub struct Registry {
+    cells: Mutex<BTreeMap<Key, Cell>>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut l: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get-or-create the counter `name{labels}`. Returns a shared handle:
+    /// registering the same series twice yields the same cell.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut cells = self.cells.lock().unwrap();
+        match cells
+            .entry(key(name, labels))
+            .or_insert_with(|| Cell::Counter(Counter::new()))
+        {
+            Cell::Counter(c) => c.clone(),
+            _ => Counter::new(), // type clash: detached handle, never scraped
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let mut cells = self.cells.lock().unwrap();
+        match cells
+            .entry(key(name, labels))
+            .or_insert_with(|| Cell::Gauge(Gauge::new()))
+        {
+            Cell::Gauge(g) => g.clone(),
+            _ => Gauge::new(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let mut cells = self.cells.lock().unwrap();
+        match cells
+            .entry(key(name, labels))
+            .or_insert_with(|| Cell::Histogram(Histogram::new()))
+        {
+            Cell::Histogram(h) => h.clone(),
+            _ => Histogram::new(),
+        }
+    }
+
+    /// Register an existing counter handle under `name{labels}` (replaces
+    /// any prior cell for the series). This is how legacy producer
+    /// atomics become scrapeable without a shadow copy.
+    pub fn attach_counter(&self, name: &str, labels: &[(&str, &str)], c: &Counter) {
+        let mut cells = self.cells.lock().unwrap();
+        cells.insert(key(name, labels), Cell::Counter(c.clone()));
+    }
+
+    pub fn attach_gauge(&self, name: &str, labels: &[(&str, &str)], g: &Gauge) {
+        let mut cells = self.cells.lock().unwrap();
+        cells.insert(key(name, labels), Cell::Gauge(g.clone()));
+    }
+
+    pub fn attach_histogram(&self, name: &str, labels: &[(&str, &str)], h: &Histogram) {
+        let mut cells = self.cells.lock().unwrap();
+        cells.insert(key(name, labels), Cell::Histogram(h.clone()));
+    }
+
+    /// Freeze every series. Holds the registry mutex only while cloning
+    /// handles; the atomic loads happen outside it.
+    pub fn snapshot(&self) -> Snapshot {
+        let frozen: Vec<(Key, Cell)> = {
+            let cells = self.cells.lock().unwrap();
+            cells.iter().map(|(k, c)| (k.clone(), c.clone())).collect()
+        };
+        let metrics = frozen
+            .into_iter()
+            .map(|((name, labels), cell)| MetricSnapshot {
+                name,
+                labels,
+                value: match cell {
+                    Cell::Counter(c) => MetricValue::Counter(c.get()),
+                    Cell::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Cell::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect();
+        Snapshot {
+            version: SNAPSHOT_VERSION,
+            metrics,
+        }
+    }
+}
+
+impl Snapshot {
+    fn find(&self, name: &str, labels: &[(&str, &str)]) -> Option<&MetricSnapshot> {
+        let (_, want) = key(name, labels);
+        self.metrics
+            .iter()
+            .find(|m| m.name == name && m.labels == want)
+    }
+
+    /// Counter value, or `None` if the series is absent or not a counter.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        match self.find(name, labels)?.value {
+            MetricValue::Counter(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        match self.find(name, labels)?.value {
+            MetricValue::Gauge(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<&HistogramSnapshot> {
+        match &self.find(name, labels)?.value {
+            MetricValue::Histogram(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Render Prometheus text format (the canonical exposition — see
+    /// module docs). Dotted names sanitize `.` → `_`; label values get
+    /// the standard `\\` / `\"` / `\n` escapes.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# bps snapshot v{}", self.version);
+        let mut last_name = "";
+        for m in &self.metrics {
+            let pname = sanitize_name(&m.name);
+            if m.name != last_name {
+                let kind = match m.value {
+                    MetricValue::Counter(_) => "counter",
+                    MetricValue::Gauge(_) => "gauge",
+                    MetricValue::Histogram(_) => "histogram",
+                };
+                let _ = writeln!(out, "# TYPE {pname} {kind}");
+                last_name = &m.name;
+            }
+            match &m.value {
+                MetricValue::Counter(v) => {
+                    let _ = writeln!(out, "{pname}{} {v}", label_block(&m.labels, None));
+                }
+                MetricValue::Gauge(v) => {
+                    let _ = writeln!(out, "{pname}{} {v}", label_block(&m.labels, None));
+                }
+                MetricValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, b) in h.buckets.iter().enumerate() {
+                        cum += b;
+                        // Elide interior empty-prefix noise? No: Prometheus
+                        // requires every bucket to be cumulative, but emitting
+                        // all 32 per series bloats the page. Emit a bucket
+                        // line only when its cumulative count changes, plus
+                        // the final +Inf line — still a valid cumulative
+                        // histogram, much smaller.
+                        let le = match Histogram::bucket_le(i) {
+                            Some(edge) => edge.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        let is_last = i + 1 == HIST_BUCKETS;
+                        if *b > 0 || is_last {
+                            let _ = writeln!(
+                                out,
+                                "{pname}_bucket{} {cum}",
+                                label_block(&m.labels, Some(&le))
+                            );
+                        }
+                    }
+                    let _ = writeln!(out, "{pname}_sum{} {}", label_block(&m.labels, None), h.sum);
+                    let _ = writeln!(
+                        out,
+                        "{pname}_count{} {}",
+                        label_block(&m.labels, None),
+                        h.count
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; everything else
+/// (notably the `.` in our dotted names) maps to `_`.
+fn sanitize_name(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{}=\"{}\"", sanitize_name(k), escape_label_value(v));
+    }
+    if let Some(le) = le {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "le=\"{le}\"");
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("a.b", &[("shard", "0")]);
+        c.inc();
+        c.add(4);
+        // same series -> same cell
+        assert_eq!(r.counter("a.b", &[("shard", "0")]).get(), 5);
+        // different labels -> different cell
+        assert_eq!(r.counter("a.b", &[("shard", "1")]).get(), 0);
+        let g = r.gauge("occ", &[]);
+        g.set(0.5);
+        g.add(0.25);
+        assert!((r.gauge("occ", &[]).get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attach_shares_the_cell() {
+        let r = Registry::new();
+        let cell = Arc::new(AtomicU64::new(7));
+        let c = Counter::from_cell(Arc::clone(&cell));
+        r.attach_counter("env.rotations", &[("shard", "0")], &c);
+        cell.fetch_add(3, Ordering::Relaxed);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("env.rotations", &[("shard", "0")]), Some(10));
+    }
+
+    #[test]
+    fn histogram_log2_bucket_edges() {
+        // Boundary cases: 0 and 1 share bucket 0; each power of two
+        // starts a new bucket; the top bucket absorbs everything huge.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 1);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(7), 2);
+        assert_eq!(Histogram::bucket_index(8), 3);
+        assert_eq!(Histogram::bucket_index((1 << 31) - 1), 30);
+        assert_eq!(Histogram::bucket_index(1 << 31), 31);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 31);
+        // inclusive upper edges match the index rule exactly
+        for i in 0..HIST_BUCKETS - 1 {
+            let le = Histogram::bucket_le(i).unwrap();
+            assert_eq!(Histogram::bucket_index(le), i, "le of bucket {i}");
+            assert_eq!(Histogram::bucket_index(le + 1), i + 1);
+        }
+        assert_eq!(Histogram::bucket_le(HIST_BUCKETS - 1), None);
+    }
+
+    #[test]
+    fn histogram_observe_and_snapshot() {
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3, 1000, u64::MAX] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 0u64.wrapping_add(1 + 2 + 3 + 1000).wrapping_add(u64::MAX));
+        assert_eq!(s.buckets[0], 2);
+        assert_eq!(s.buckets[1], 2);
+        assert_eq!(s.buckets[9], 1); // 1000 in [512, 1024)
+        assert_eq!(s.buckets[HIST_BUCKETS - 1], 1);
+    }
+
+    /// Merge must be associative and commutative: merging per-shard
+    /// snapshots in any grouping equals one global recorder.
+    #[test]
+    fn histogram_merge_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.observe(v);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(&[1, 5, 9]), mk(&[2, 1 << 20]), mk(&[0, 7, 7, 4096]));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+        let global = mk(&[1, 5, 9, 2, 1 << 20, 0, 7, 7, 4096]);
+        assert_eq!(ab_c, global);
+    }
+
+    #[test]
+    fn snapshot_order_is_deterministic() {
+        let r = Registry::new();
+        r.counter("z.last", &[]).inc();
+        r.counter("a.first", &[("shard", "1")]).inc();
+        r.counter("a.first", &[("shard", "0")]).inc();
+        let names: Vec<String> = r
+            .snapshot()
+            .metrics
+            .iter()
+            .map(|m| format!("{}{:?}", m.name, m.labels))
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                "a.first[(\"shard\", \"0\")]",
+                "a.first[(\"shard\", \"1\")]",
+                "z.last[]"
+            ]
+        );
+        // twice in a row: identical text
+        assert_eq!(r.snapshot().to_prometheus(), r.snapshot().to_prometheus());
+    }
+
+    #[test]
+    fn prometheus_text_escaping_and_names() {
+        let r = Registry::new();
+        r.counter("wire.bad_frames", &[("conn", "a\\b\"c\nd")]).add(2);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE wire_bad_frames counter"), "{text}");
+        assert!(
+            text.contains("wire_bad_frames{conn=\"a\\\\b\\\"c\\nd\"} 2"),
+            "{text}"
+        );
+        // dotted name sanitized, dots gone
+        assert!(!text.contains("wire.bad_frames"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_histogram_rendering() {
+        let r = Registry::new();
+        let h = r.histogram("lat.us", &[("shard", "0")]);
+        h.observe(1);
+        h.observe(3);
+        h.observe(3);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE lat_us histogram"), "{text}");
+        assert!(text.contains("lat_us_bucket{shard=\"0\",le=\"1\"} 1"), "{text}");
+        assert!(text.contains("lat_us_bucket{shard=\"0\",le=\"3\"} 3"), "{text}");
+        assert!(text.contains("lat_us_bucket{shard=\"0\",le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("lat_us_sum{shard=\"0\"} 7"), "{text}");
+        assert!(text.contains("lat_us_count{shard=\"0\"} 3"), "{text}");
+    }
+}

@@ -1,0 +1,277 @@
+//! Megaframe tracing: a bounded per-tick span recorder exportable as
+//! Chrome `trace_event` JSON (load the file in Perfetto / `chrome://tracing`).
+//!
+//! Every pipeline stage of a served tick records a [`Span`]: coalesce
+//! wait, sim step, render transform/cull/raster/resolve, tenant
+//! gather/infer/step, wire encode/flush. Spans land in a bounded ring
+//! (oldest evicted first), so a long-running server keeps the most
+//! recent window of ticks and one Perfetto load shows exactly where a
+//! straggler megaframe went.
+//!
+//! Recording is gated on an `AtomicBool`: with tracing disabled (the
+//! default), `record` is a single relaxed load and the pipeline does not
+//! even construct spans — observability must never perturb the
+//! simulation (the sync stepping path stays bitwise-identical).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Default ring capacity: ~64k spans ≈ several thousand ticks.
+pub const DEFAULT_TRACE_SPANS: usize = 1 << 16;
+
+/// Chrome-trace "process id" used for spans that belong to the wire
+/// layer rather than to a shard.
+pub const WIRE_PID: u32 = 9999;
+
+/// Chrome-trace pid for the tenant (in-server policy) layer.
+pub const TENANT_PID: u32 = 9000;
+
+/// One completed pipeline stage. `lane` groups spans onto a Perfetto
+/// track (a Chrome-trace "thread") within the `pid` process row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Microseconds since the sink's epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Shard index, or [`WIRE_PID`] / [`TENANT_PID`].
+    pub pid: u32,
+    pub lane: &'static str,
+    pub name: &'static str,
+    /// Driver tick / step number the span belongs to.
+    pub tick: u64,
+}
+
+struct Ring {
+    spans: VecDeque<Span>,
+    cap: usize,
+    /// Spans evicted since enable (ring overflow), for the export footer.
+    dropped: u64,
+}
+
+/// Shared span recorder (one per `SimServer`). See module docs.
+pub struct TraceSink {
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl TraceSink {
+    pub fn new(cap: usize) -> TraceSink {
+        TraceSink {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                spans: VecDeque::with_capacity(cap.min(4096)),
+                cap: cap.max(1),
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Hot-path gate: producers skip span construction entirely when
+    /// this is false.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since this sink's epoch (span timestamp base).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn record(&self, span: Span) {
+        if !self.enabled() {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.spans.len() == ring.cap {
+            ring.spans.pop_front();
+            ring.dropped += 1;
+        }
+        ring.spans.push_back(span);
+    }
+
+    /// Convenience: record a span from a start timestamp and a duration.
+    pub fn span(
+        &self,
+        pid: u32,
+        lane: &'static str,
+        name: &'static str,
+        start_us: u64,
+        dur: Duration,
+        tick: u64,
+    ) {
+        self.record(Span {
+            ts_us: start_us,
+            dur_us: dur.as_micros() as u64,
+            pid,
+            lane,
+            name,
+            tick,
+        });
+    }
+
+    /// Current ring contents, oldest first.
+    pub fn spans(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().spans.iter().cloned().collect()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// Export the ring as Chrome `trace_event` JSON (the object form,
+    /// `{"traceEvents": [...]}`), with process/thread name metadata so
+    /// Perfetto shows "shard 0 / render" instead of bare pids.
+    pub fn to_chrome_json(&self) -> String {
+        let spans = self.spans();
+        let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 16);
+
+        let mut pids: Vec<u32> = spans.iter().map(|s| s.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        let mut lanes: Vec<(u32, &'static str)> = spans.iter().map(|s| (s.pid, s.lane)).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+
+        let meta = |name: &str, pid: u32, tid: u64, arg_name: &str| {
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(arg_name.to_string()));
+            let mut ev = std::collections::BTreeMap::new();
+            ev.insert("ph".to_string(), Json::Str("M".to_string()));
+            ev.insert("name".to_string(), Json::Str(name.to_string()));
+            ev.insert("pid".to_string(), Json::Num(pid as f64));
+            ev.insert("tid".to_string(), Json::Num(tid as f64));
+            ev.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(ev)
+        };
+        for &pid in &pids {
+            let pname = match pid {
+                WIRE_PID => "wire".to_string(),
+                TENANT_PID => "tenant".to_string(),
+                i => format!("shard {i}"),
+            };
+            events.push(meta("process_name", pid, 0, &pname));
+        }
+        // tid = 1 + index of the lane within its pid (0 is the meta row)
+        let tid_of = |pid: u32, lane: &str| -> u64 {
+            1 + lanes
+                .iter()
+                .filter(|(p, _)| *p == pid)
+                .position(|(_, l)| *l == lane)
+                .unwrap_or(0) as u64
+        };
+        for &(pid, lane) in &lanes {
+            events.push(meta("thread_name", pid, tid_of(pid, lane), lane));
+        }
+
+        for s in &spans {
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("tick".to_string(), Json::Num(s.tick as f64));
+            let mut ev = std::collections::BTreeMap::new();
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("name".to_string(), Json::Str(s.name.to_string()));
+            ev.insert("cat".to_string(), Json::Str(s.lane.to_string()));
+            ev.insert("pid".to_string(), Json::Num(s.pid as f64));
+            ev.insert("tid".to_string(), Json::Num(tid_of(s.pid, s.lane) as f64));
+            ev.insert("ts".to_string(), Json::Num(s.ts_us as f64));
+            ev.insert("dur".to_string(), Json::Num(s.dur_us as f64));
+            ev.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(ev));
+        }
+
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("traceEvents".to_string(), Json::Arr(events));
+        root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        root.insert(
+            "bpsDroppedSpans".to_string(),
+            Json::Num(self.dropped() as f64),
+        );
+        Json::Obj(root).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(name: &'static str, ts: u64) -> Span {
+        Span {
+            ts_us: ts,
+            dur_us: 5,
+            pid: 0,
+            lane: "driver",
+            name,
+            tick: ts,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let t = TraceSink::new(8);
+        t.record(sp("a", 1));
+        assert!(t.spans().is_empty());
+        t.enable();
+        t.record(sp("a", 1));
+        assert_eq!(t.spans().len(), 1);
+    }
+
+    /// Ring eviction is strictly oldest-first and counts drops.
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let t = TraceSink::new(3);
+        t.enable();
+        for i in 0..5 {
+            t.record(sp("s", i));
+        }
+        let got: Vec<u64> = t.spans().iter().map(|s| s.ts_us).collect();
+        assert_eq!(got, vec![2, 3, 4]);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_metadata() {
+        let t = TraceSink::new(16);
+        t.enable();
+        t.record(Span {
+            ts_us: 10,
+            dur_us: 3,
+            pid: 0,
+            lane: "render",
+            name: "raster",
+            tick: 1,
+        });
+        t.record(Span {
+            ts_us: 14,
+            dur_us: 2,
+            pid: WIRE_PID,
+            lane: "wire",
+            name: "encode",
+            tick: 1,
+        });
+        let text = t.to_chrome_json();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name + 2 thread_name + 2 spans
+        assert_eq!(events.len(), 6);
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        assert_eq!(xs[0].req("name").unwrap().as_str().unwrap(), "raster");
+        assert_eq!(xs[0].req("ts").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(xs[0].req("dur").unwrap().as_f64().unwrap(), 3.0);
+        assert!(text.contains("\"process_name\""));
+        assert!(text.contains("\"shard 0\""));
+        assert!(text.contains("\"wire\""));
+    }
+}

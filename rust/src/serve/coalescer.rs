@@ -15,6 +15,7 @@
 //! The coalescer is plain data guarded by the shard mutex in
 //! `serve::server`; it does no locking or stepping itself.
 
+use crate::obs::{Counter, Gauge};
 use crate::sim::ACTION_STOP;
 
 /// What a straggler's slots step with once the deadline passes.
@@ -54,12 +55,20 @@ pub(crate) struct Coalescer {
     slots: Vec<Option<SlotLease>>,
     /// Driver ticks waited since the first pending action of this step.
     waited: u32,
-    /// Leased slots filled by the straggler policy, cumulative.
-    pub straggler_fills: u64,
+    /// Leased slots filled by the straggler policy, cumulative. A
+    /// registry [`Counter`] so `SimServer::stats()` and a scrape read
+    /// the *same* cell (bitwise-identical views; DESIGN.md §0.10).
+    pub straggler_fills: Counter,
     /// Submissions rejected for a bad slot index (out of range, unleased,
     /// or leased to another session), cumulative. Nonzero only under
     /// hostile or buggy clients — slot indices arrive off the wire.
-    pub bad_submits: u64,
+    pub bad_submits: Counter,
+    /// Occupancy gauges mirrored on every mutation (lease/release/
+    /// submit/assemble), so a lock-free scrape sees exactly the value a
+    /// locked `stats()` scan would compute at the same instant.
+    pub obs_leased: Gauge,
+    pub obs_queued: Gauge,
+    pub obs_occupancy: Gauge,
 }
 
 impl Coalescer {
@@ -68,9 +77,23 @@ impl Coalescer {
             policy,
             slots: (0..n).map(|_| None).collect(),
             waited: 0,
-            straggler_fills: 0,
-            bad_submits: 0,
+            straggler_fills: Counter::new(),
+            bad_submits: Counter::new(),
+            obs_leased: Gauge::new(),
+            obs_queued: Gauge::new(),
+            obs_occupancy: Gauge::new(),
         }
+    }
+
+    /// Re-derive the occupancy gauges from the slot table. Called at the
+    /// end of every mutating method; O(slots) scans are noise next to a
+    /// batch step.
+    fn sync_obs(&self) {
+        let leased = self.leased();
+        self.obs_leased.set(leased as f64);
+        self.obs_queued.set(self.pending() as f64);
+        self.obs_occupancy
+            .set(leased as f64 / self.slots.len().max(1) as f64);
     }
 
     pub fn policy(&self) -> StragglerPolicy {
@@ -98,6 +121,7 @@ impl Coalescer {
                 last: ACTION_STOP,
             });
         }
+        self.sync_obs();
         Some(free)
     }
 
@@ -115,6 +139,7 @@ impl Coalescer {
         if !self.has_pending() {
             self.waited = 0;
         }
+        self.sync_obs();
     }
 
     /// Buffer `actions[j]` for `slots[j]`. Returns how many submissions
@@ -130,9 +155,10 @@ impl Coalescer {
                     l.pending = Some(a);
                     accepted += 1;
                 }
-                _ => self.bad_submits += 1,
+                _ => self.bad_submits.inc(),
             }
         }
+        self.sync_obs();
         accepted
     }
 
@@ -191,7 +217,7 @@ impl Coalescer {
                         a
                     }
                     None => {
-                        self.straggler_fills += 1;
+                        self.straggler_fills.inc();
                         match self.policy {
                             StragglerPolicy::Deadline {
                                 fill: FillAction::Repeat,
@@ -206,6 +232,7 @@ impl Coalescer {
             out.push(a);
         }
         self.waited = 0;
+        self.sync_obs();
     }
 }
 
@@ -244,7 +271,7 @@ mod tests {
         c.assemble(&mut out);
         assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_LEFT, ACTION_LEFT]);
         assert!(!c.has_pending(), "assemble drains the buffer");
-        assert_eq!(c.straggler_fills, 0);
+        assert_eq!(c.straggler_fills.get(), 0);
     }
 
     #[test]
@@ -261,12 +288,12 @@ mod tests {
         let mut out = Vec::new();
         c.assemble(&mut out);
         assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_STOP, ACTION_STOP]);
-        assert_eq!(c.straggler_fills, 0, "free slots are not straggler fills");
+        assert_eq!(c.straggler_fills.get(), 0, "free slots are not straggler fills");
         // next step: session 2 straggles -> its slot repeats ACTION_LEFT
         c.submit(1, &a, &[ACTION_FORWARD]);
         c.assemble(&mut out);
         assert_eq!(out, vec![ACTION_FORWARD, ACTION_LEFT, ACTION_STOP, ACTION_STOP]);
-        assert_eq!(c.straggler_fills, 1);
+        assert_eq!(c.straggler_fills.get(), 1);
     }
 
     #[test]
@@ -293,7 +320,7 @@ mod tests {
         let a = c.lease(1, 2).unwrap(); // slots 0,1
         // out-of-range index: skipped, counted, no panic
         assert_eq!(c.submit(1, &[usize::MAX], &[ACTION_FORWARD]), 0);
-        assert_eq!(c.bad_submits, 1);
+        assert_eq!(c.bad_submits.get(), 1);
         // free slot (2) and a foreign lease's slot are equally rejected
         let _b = c.lease(2, 1).unwrap(); // slot 2
         assert_eq!(
@@ -301,7 +328,7 @@ mod tests {
             1,
             "only the owned in-range slot is accepted"
         );
-        assert_eq!(c.bad_submits, 3);
+        assert_eq!(c.bad_submits.get(), 3);
         assert_eq!(c.pending(), 1, "rejected submissions buffer nothing");
         // the accepted action still assembles normally
         c.submit(1, &a[1..], &[ACTION_LEFT]);

@@ -31,11 +31,18 @@
 //! same-seeded `EnvBatch` directly — the coalescer passes its actions
 //! through verbatim (`rust/tests/serve.rs`).
 //!
-//! Observability: [`SimServer::stats`] reports per-shard occupancy,
-//! queue depth, step counts, straggler fills, bad submits, and
-//! submit→result latency percentiles
+//! Observability: every shard's counters live on the [`SimServer`]'s
+//! metrics [`Registry`](crate::obs::Registry) — [`SimServer::stats`]
+//! and a Prometheus scrape (`bps serve --metrics-addr`, the `STATS`
+//! wire frame, `bps stats ADDR`) read the *same cells*, so their
+//! numbers can never disagree. [`SimServer::stats`] additionally
+//! derives submit→result latency percentiles
 //! ([`metrics::Window::percentile`](crate::metrics::Window));
 //! [`Session::latency`] reports the same percentiles per client.
+//! Per-tick pipeline spans land on the server's
+//! [`TraceSink`](crate::obs::TraceSink) when tracing is enabled
+//! (`bps serve --trace-out`), and lease lifecycle events on its
+//! [`EventLog`](crate::obs::EventLog) (DESIGN.md §0.10).
 //!
 //! Remote clients: the [`wire`] module puts this whole surface on the
 //! network — [`WireServer::listen`] fronts a `SimServer` with a

@@ -25,9 +25,11 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::env::{EnvBatch, EnvBatchConfig, StepView};
 use crate::metrics::Window;
+use crate::obs::{Counter, EventLog, Histogram, Registry, TraceSink, DEFAULT_TRACE_SPANS};
 use crate::render::SceneRotation;
 use crate::scene::SceneAsset;
 use crate::sim::Task;
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
 use super::coalescer::{Coalescer, StragglerPolicy};
@@ -93,8 +95,33 @@ pub(crate) struct ShardState {
     pub latency: Window,
 }
 
+/// Registry handles the shard driver feeds every tick (DESIGN.md §0.10
+/// metric table). All counters, all labeled `{shard=<idx>}`.
+pub(crate) struct ShardObs {
+    /// `serve.shard.steps` — batch steps published.
+    pub steps: Counter,
+    /// `env.sim_us` / `env.render_us` — wall time per pipeline half.
+    pub sim_us: Counter,
+    pub render_us: Counter,
+    /// `render.{transform,cull,raster,resolve}_us` — per-stage CPU time
+    /// summed across render workers (`RenderCounters`).
+    pub transform_us: Counter,
+    pub cull_us: Counter,
+    pub raster_us: Counter,
+    pub resolve_us: Counter,
+    /// `render.tris` / `render.chunks_{culled,total}`.
+    pub tris: Counter,
+    pub chunks_culled: Counter,
+    pub chunks_total: Counter,
+    /// `serve.shard.latency_us` — submit→result latency histogram
+    /// (observed by `Ticket::wait` alongside the percentile windows).
+    pub latency_us: Histogram,
+}
+
 /// One shard as seen by sessions and the driver thread.
 pub(crate) struct ShardShared {
+    /// Shard index (stats row, metric label, trace pid).
+    pub idx: usize,
     pub task: Task,
     pub slots: usize,
     pub obs_floats: usize,
@@ -109,6 +136,11 @@ pub(crate) struct ShardShared {
     pub submitted: Condvar,
     /// Driver → clients: `state.result` advanced (or shard failed).
     pub stepped: Condvar,
+    pub obs: ShardObs,
+    /// Server-wide megaframe span recorder (off until enabled).
+    pub trace: Arc<TraceSink>,
+    /// Server-wide lifecycle event log (disarmed until `--event-log`).
+    pub events: Arc<EventLog>,
 }
 
 impl ShardShared {
@@ -128,6 +160,7 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
     let mut actions: Vec<u8> = Vec::with_capacity(shared.slots);
     let mut spare: Option<StepResult> = None;
     loop {
+        let wait_from = shared.trace.now_us();
         // Phase 1: wait until a full batch can be assembled.
         let step_no = {
             let mut st = shared.state.lock().unwrap();
@@ -157,6 +190,7 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
             st.issued
         };
         // Phase 2: step the batch outside the lock (sim + render).
+        let step_from = shared.trace.now_us();
         let result = match env.step(&actions) {
             Ok(view) => {
                 let mut r = spare.take().unwrap_or_default();
@@ -168,14 +202,62 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
                 return;
             }
         };
+        // Producer drains happen every tick (the underlying cells are
+        // reset-on-read), feeding the registry counters; none of this
+        // touches the step data, so serving stays bitwise-identical
+        // with obs on or off.
+        let (sim_d, render_d) = env.drain_timings();
+        let rs = env.take_render_stats();
+        let o = &shared.obs;
+        o.sim_us.add(sim_d.as_micros() as u64);
+        o.render_us.add(render_d.as_micros() as u64);
+        o.transform_us.add(rs.transform_ns / 1_000);
+        o.cull_us.add(rs.cull_ns / 1_000);
+        o.raster_us.add(rs.raster_ns / 1_000);
+        o.resolve_us.add(rs.resolve_ns / 1_000);
+        o.tris.add(rs.tris_rasterized as u64);
+        o.chunks_culled.add(rs.chunks_culled as u64);
+        o.chunks_total.add(rs.chunks_total as u64);
+        if shared.trace.enabled() {
+            let pid = shared.idx as u32;
+            let t = &shared.trace;
+            let wait = Duration::from_micros(step_from.saturating_sub(wait_from));
+            t.span(pid, "driver", "coalesce", wait_from, wait, step_no);
+            t.span(pid, "driver", "sim", step_from, sim_d, step_no);
+            let render_from = step_from + sim_d.as_micros() as u64;
+            t.span(pid, "driver", "render", render_from, render_d, step_no);
+            // Stage durations are CPU time summed across render workers
+            // (can exceed the render wall span); they are laid out
+            // sequentially from the render start on their own lane.
+            let mut at = render_from;
+            for (name, ns) in [
+                ("render.transform", rs.transform_ns),
+                ("render.cull", rs.cull_ns),
+                ("render.raster", rs.raster_ns),
+                ("render.resolve", rs.resolve_ns),
+            ] {
+                t.span(pid, "render-stages", name, at, Duration::from_nanos(ns), step_no);
+                at += (ns / 1_000).max(1);
+            }
+        }
         // Phase 3: publish, then reclaim the old snapshot's buffers if no
         // session still holds it.
+        let publish_from = shared.trace.now_us();
         let prev = {
             let mut st = shared.state.lock().unwrap();
+            // Counter inc and snapshot swap share the critical section,
+            // so a locked stats() read always sees them agree.
+            shared.obs.steps.inc();
             let prev = std::mem::replace(&mut st.result, result);
             shared.stepped.notify_all();
             prev
         };
+        if shared.trace.enabled() {
+            let dur = Duration::from_micros(shared.trace.now_us().saturating_sub(publish_from));
+            shared
+                .trace
+                .span(shared.idx as u32, "driver", "publish", publish_from, dur, step_no);
+        }
         if let Ok(r) = Arc::try_unwrap(prev) {
             spare = Some(r);
         }
@@ -337,6 +419,12 @@ pub struct SimServer {
     /// policy lease (each spawns one tenant driver thread).
     tenancy: Mutex<Vec<Option<Arc<TenantShared>>>>,
     tenant_drivers: Mutex<Vec<JoinHandle<()>>>,
+    /// The obs substrate (DESIGN.md §0.10): every producer on this server
+    /// registers here; every scrape (HTTP, `STATS` frame, `stats()`)
+    /// reads from here.
+    registry: Arc<Registry>,
+    trace: Arc<TraceSink>,
+    events: Arc<EventLog>,
 }
 
 impl SimServer {
@@ -377,6 +465,9 @@ impl SimServer {
         if specs.is_empty() {
             bail!("SimServer needs at least one shard");
         }
+        let registry = Registry::new();
+        let trace = Arc::new(TraceSink::new(DEFAULT_TRACE_SPANS));
+        let events = Arc::new(EventLog::disabled());
         let mut shards = Vec::with_capacity(specs.len());
         let mut drivers = Vec::with_capacity(specs.len());
         for spec in specs {
@@ -402,14 +493,51 @@ impl SimServer {
             // read a view before their first submit.
             let mut initial = StepResult::default();
             initial.fill(0, env.view());
+            // Register this shard's series. The coalescer's counters and
+            // gauges are attached (not copied), so `stats()` and a scrape
+            // read identical cells.
+            let idx = shards.len();
+            let sid = idx.to_string();
+            let l: &[(&str, &str)] = &[("shard", &sid)];
+            let coal = Coalescer::new(slots, straggler);
+            registry.attach_counter("serve.shard.straggler_fills", l, &coal.straggler_fills);
+            registry.attach_counter("serve.shard.bad_submits", l, &coal.bad_submits);
+            registry.attach_gauge("serve.shard.leased", l, &coal.obs_leased);
+            registry.attach_gauge("serve.shard.queued_actions", l, &coal.obs_queued);
+            registry.attach_gauge("serve.shard.occupancy", l, &coal.obs_occupancy);
+            registry.gauge("serve.shard.slots", l).set(slots as f64);
+            registry.attach_counter(
+                "env.rotations",
+                l,
+                &Counter::from_cell(env.rotations_counter()),
+            );
+            registry.attach_counter(
+                "scenario.feed_stalls",
+                l,
+                &Counter::from_cell(env.feed_stalls_counter()),
+            );
+            let obs = ShardObs {
+                steps: registry.counter("serve.shard.steps", l),
+                sim_us: registry.counter("env.sim_us", l),
+                render_us: registry.counter("env.render_us", l),
+                transform_us: registry.counter("render.transform_us", l),
+                cull_us: registry.counter("render.cull_us", l),
+                raster_us: registry.counter("render.raster_us", l),
+                resolve_us: registry.counter("render.resolve_us", l),
+                tris: registry.counter("render.tris", l),
+                chunks_culled: registry.counter("render.chunks_culled", l),
+                chunks_total: registry.counter("render.chunks_total", l),
+                latency_us: registry.histogram("serve.shard.latency_us", l),
+            };
             let shared = Arc::new(ShardShared {
+                idx,
                 task: env.task(),
                 slots,
                 obs_floats: env.obs_floats(),
                 resident_bytes: env.resident_bytes(),
                 rotations: env.rotations_counter(),
                 state: Mutex::new(ShardState {
-                    coal: Coalescer::new(slots, straggler),
+                    coal,
                     result: Arc::new(initial),
                     issued: 0,
                     shutdown: false,
@@ -418,6 +546,9 @@ impl SimServer {
                 }),
                 submitted: Condvar::new(),
                 stepped: Condvar::new(),
+                obs,
+                trace: Arc::clone(&trace),
+                events: Arc::clone(&events),
             });
             let for_driver = Arc::clone(&shared);
             let driver = std::thread::Builder::new()
@@ -437,12 +568,32 @@ impl SimServer {
             vault: vault.map(Arc::new),
             tenancy: Mutex::new((0..n_shards).map(|_| None).collect()),
             tenant_drivers: Mutex::new(Vec::new()),
+            registry,
+            trace,
+            events,
         })
     }
 
     /// Whether this server holds a policy vault (policy leases possible).
     pub fn has_vault(&self) -> bool {
         self.vault.is_some()
+    }
+
+    /// The server's metrics registry (scrape surface substrate).
+    pub fn registry(&self) -> Arc<Registry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// The server's megaframe span recorder. Disabled until
+    /// [`TraceSink::enable`]; export via [`TraceSink::to_chrome_json`].
+    pub fn trace(&self) -> Arc<TraceSink> {
+        Arc::clone(&self.trace)
+    }
+
+    /// The server's lifecycle event log. Disarmed until
+    /// [`EventLog::arm`].
+    pub fn events(&self) -> Arc<EventLog> {
+        Arc::clone(&self.events)
     }
 
     /// Lease `n_envs` slots on the first `task` shard with room and open
@@ -492,6 +643,15 @@ impl SimServer {
                 st.coal.lease(id, n_envs)
             };
             if let Some(slots) = slots {
+                shard.events.emit(
+                    "lease.grant",
+                    &[
+                        ("session", Json::Num(id as f64)),
+                        ("shard", Json::Num(shard.idx as f64)),
+                        ("task", Json::Str(format!("{task:?}"))),
+                        ("n_envs", Json::Num(n_envs as f64)),
+                    ],
+                );
                 return Ok(Session::open(Arc::clone(shard), id, slots));
             }
         }
@@ -531,6 +691,28 @@ impl SimServer {
     /// [`connect_with_policy`](SimServer::connect_with_policy) with an
     /// explicit [`ActionMode`].
     pub fn connect_with_policy_mode(
+        &self,
+        task: Task,
+        n_envs: usize,
+        variant_name: &str,
+        mode: ActionMode,
+    ) -> Result<TenantSession> {
+        let r = self.connect_with_policy_inner(task, n_envs, variant_name, mode);
+        if let Err(e) = &r {
+            self.events.emit(
+                "lease.policy_decline",
+                &[
+                    ("variant", Json::Str(variant_name.to_string())),
+                    ("task", Json::Str(format!("{task:?}"))),
+                    ("n_envs", Json::Num(n_envs as f64)),
+                    ("reason", Json::Str(format!("{e:#}"))),
+                ],
+            );
+        }
+        r
+    }
+
+    fn connect_with_policy_inner(
         &self,
         task: Task,
         n_envs: usize,
@@ -580,6 +762,18 @@ impl SimServer {
             if tenancy[shard_idx].is_none() {
                 let straggler = self.shards[shard_idx].state.lock().unwrap().coal.policy();
                 let shared = Arc::new(TenantShared::new(width, straggler));
+                {
+                    // Attach the tenant registry's cells (same-cell
+                    // discipline as the shard coalescer above).
+                    let sid = shard_idx.to_string();
+                    let l: &[(&str, &str)] = &[("shard", &sid)];
+                    let st = shared.state.lock().unwrap();
+                    self.registry.attach_counter("tenant.infer_runs", l, &st.infer_runs);
+                    self.registry.attach_counter("tenant.agent_steps", l, &st.agent_steps);
+                    self.registry.attach_counter("tenant.idle_fills", l, &st.coal.idle_fills);
+                    self.registry.attach_gauge("tenant.registered", l, &st.coal.obs_registered);
+                    self.registry.attach_gauge("tenant.active", l, &st.coal.obs_active);
+                }
                 let for_driver = Arc::clone(&shared);
                 let shard = Arc::clone(&self.shards[shard_idx]);
                 let vault = Arc::clone(vault);
@@ -640,6 +834,8 @@ impl SimServer {
     /// Point-in-time stats for every shard: occupancy, queue depth,
     /// step counts, straggler fills, latency percentiles, and — for
     /// shards hosting policy tenants — inference-coalescing counters.
+    /// Every counter here is a read of the registry cell a scrape
+    /// renders, so the two views agree bitwise at any quiescent instant.
     pub fn stats(&self) -> Vec<ShardStats> {
         let mut out: Vec<ShardStats> = self
             .shards
@@ -652,9 +848,9 @@ impl SimServer {
                     slots: sh.slots,
                     leased: st.coal.leased(),
                     queued_actions: st.coal.pending(),
-                    steps: st.result.step,
-                    straggler_fills: st.coal.straggler_fills,
-                    bad_submits: st.coal.bad_submits,
+                    steps: sh.obs.steps.get(),
+                    straggler_fills: st.coal.straggler_fills.get(),
+                    bad_submits: st.coal.bad_submits.get(),
                     rotations: sh.rotations.load(Ordering::Relaxed),
                     resident_bytes: sh.resident_bytes,
                     latency_p50,
@@ -672,10 +868,10 @@ impl SimServer {
             let [step_p50, step_p95] = st.step_lat.percentiles([0.5, 0.95]);
             stats.tenant = Some(TenantStats {
                 tenants: st.coal.registered(),
-                agent_steps: st.agent_steps,
-                infer_runs: st.infer_runs,
+                agent_steps: st.agent_steps.get(),
+                infer_runs: st.infer_runs.get(),
                 infer_batch_size: ts.width,
-                idle_fills: st.coal.idle_fills,
+                idle_fills: st.coal.idle_fills.get(),
                 infer_p50,
                 infer_p95,
                 gather_p50,

@@ -211,11 +211,20 @@ impl Session {
             return;
         }
         self.detached = true;
-        let mut st = self.shard.state.lock().unwrap();
-        st.coal.release(self.id);
-        // A waiting driver may now have a complete batch (every remaining
-        // leased slot already submitted).
-        self.shard.submitted.notify_all();
+        {
+            let mut st = self.shard.state.lock().unwrap();
+            st.coal.release(self.id);
+            // A waiting driver may now have a complete batch (every
+            // remaining leased slot already submitted).
+            self.shard.submitted.notify_all();
+        }
+        self.shard.events.emit(
+            "lease.release",
+            &[
+                ("session", crate::util::json::Json::Num(self.id as f64)),
+                ("shard", crate::util::json::Json::Num(self.shard.idx as f64)),
+            ],
+        );
     }
 
     /// Submit→result latency percentiles (p50, p95) over this session's
@@ -298,9 +307,11 @@ impl<'a> Ticket<'a> {
                 }
                 st = shard.stepped.wait(st).unwrap();
             }
-            let lat = submitted.elapsed().as_secs_f32();
+            let elapsed = submitted.elapsed();
+            let lat = elapsed.as_secs_f32();
             st.latency.push(lat);
             session.latency.push(lat);
+            shard.obs.latency_us.observe(elapsed.as_micros() as u64);
             Arc::clone(&st.result)
         };
         session.gather(&res);

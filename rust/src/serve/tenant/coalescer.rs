@@ -25,6 +25,7 @@
 //! itself, which is what keeps it unit-testable without AOT artifacts.
 
 use super::super::coalescer::StragglerPolicy;
+use crate::obs::{Counter, Gauge};
 
 /// Cap on a tenant's buffered goal steps — goals accumulate
 /// (`set_goal` while active extends the horizon), and an unbounded
@@ -62,8 +63,13 @@ pub struct InferenceCoalescer {
     /// Driver ticks waited since the first active goal of this tick.
     waited: u32,
     /// Member-ticks the straggler policy filled (tenant registered but
-    /// idle while the tick ran), cumulative.
-    pub idle_fills: u64,
+    /// idle while the tick ran), cumulative. A registry [`Counter`] so
+    /// `SimServer::stats()` and a scrape read the same cell.
+    pub idle_fills: Counter,
+    /// Registered/active tenant gauges, mirrored on every mutation (same
+    /// discipline as `Coalescer::sync_obs`).
+    pub obs_registered: Gauge,
+    pub obs_active: Gauge,
 }
 
 impl InferenceCoalescer {
@@ -72,8 +78,15 @@ impl InferenceCoalescer {
             policy,
             members: Vec::new(),
             waited: 0,
-            idle_fills: 0,
+            idle_fills: Counter::new(),
+            obs_registered: Gauge::new(),
+            obs_active: Gauge::new(),
         }
+    }
+
+    fn sync_obs(&self) {
+        self.obs_registered.set(self.registered() as f64);
+        self.obs_active.set(self.active() as f64);
     }
 
     pub fn policy(&self) -> StragglerPolicy {
@@ -88,6 +101,7 @@ impl InferenceCoalescer {
             remaining: 0,
             fresh: false,
         });
+        self.sync_obs();
     }
 
     /// Drop a tenant's registration. Returns whether it was registered.
@@ -99,6 +113,7 @@ impl InferenceCoalescer {
         if !self.has_active() {
             self.waited = 0;
         }
+        self.sync_obs();
         self.members.len() != before
     }
 
@@ -113,6 +128,7 @@ impl InferenceCoalescer {
             m.fresh = true;
         }
         m.remaining = m.remaining.saturating_add(steps).min(MAX_GOAL_STEPS);
+        self.sync_obs();
         true
     }
 
@@ -151,7 +167,8 @@ impl InferenceCoalescer {
     /// this exactly once per coalesced forward, under the tenant lock.
     pub fn begin_tick(&mut self) -> Vec<TickShare> {
         self.waited = 0;
-        self.members
+        let plan: Vec<TickShare> = self
+            .members
             .iter_mut()
             .map(|m| {
                 let active = m.remaining > 0;
@@ -160,7 +177,7 @@ impl InferenceCoalescer {
                     m.remaining -= 1;
                     m.fresh = false;
                 } else {
-                    self.idle_fills += 1;
+                    self.idle_fills.inc();
                 }
                 TickShare {
                     tenant: m.tenant,
@@ -168,7 +185,9 @@ impl InferenceCoalescer {
                     fresh,
                 }
             })
-            .collect()
+            .collect();
+        self.sync_obs();
+        plan
     }
 }
 
@@ -255,7 +274,7 @@ mod tests {
         let plan = c.begin_tick();
         assert_eq!(c.waited(), 0, "begin_tick resets the deadline clock");
         assert!(plan[0].active && !plan[1].active);
-        assert_eq!(c.idle_fills, 1);
+        assert_eq!(c.idle_fills.get(), 1);
     }
 
     #[test]

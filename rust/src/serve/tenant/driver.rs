@@ -32,6 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::metrics::Window;
+use crate::obs::Counter;
 use crate::policy::{argmax_action, Policy};
 use crate::runtime::Runtime;
 use crate::serve::coalescer::{FillAction, StragglerPolicy};
@@ -71,10 +72,11 @@ pub(crate) struct TenantState {
     pub detached: Vec<u64>,
     pub shutdown: bool,
     pub error: Option<String>,
-    /// `Exec::run` invocations, cumulative.
-    pub infer_runs: u64,
+    /// `Exec::run` invocations, cumulative. Registry [`Counter`]s so
+    /// `SimServer::stats()` and scrapes read the same cells.
+    pub infer_runs: Counter,
     /// Server-driven env steps (sum of active members' slot counts).
-    pub agent_steps: u64,
+    pub agent_steps: Counter,
     // Per-stage tick latency samples (seconds).
     pub gather_lat: Window,
     pub infer_lat: Window,
@@ -101,8 +103,8 @@ impl TenantShared {
                 detached: Vec::new(),
                 shutdown: false,
                 error: None,
-                infer_runs: 0,
-                agent_steps: 0,
+                infer_runs: Counter::new(),
+                agent_steps: Counter::new(),
                 gather_lat: Window::new(TENANT_LATENCY_WINDOW),
                 infer_lat: Window::new(TENANT_LATENCY_WINDOW),
                 step_lat: Window::new(TENANT_LATENCY_WINDOW),
@@ -293,7 +295,8 @@ fn run_tick(
             }
         }
     }
-    let gather_s = t0.elapsed().as_secs_f32();
+    let gather_d = t0.elapsed();
+    let gather_s = gather_d.as_secs_f32();
     // Coalesced infer: one Exec::run per variant with >=1 active member.
     let t1 = Instant::now();
     let mut logits: HashMap<String, Vec<f32>> = HashMap::new();
@@ -317,7 +320,8 @@ fn run_tick(
             }
         }
     }
-    let infer_s = t1.elapsed().as_secs_f32();
+    let infer_d = t1.elapsed();
+    let infer_s = infer_d.as_secs_f32();
     // Pick actions: per-tenant rows of the batched logits; idle members
     // get the straggler fill.
     let mut agent_steps = 0u64;
@@ -427,7 +431,25 @@ fn run_tick(
         fail(shared, members, msg);
         return false;
     }
-    let step_s = t2.elapsed().as_secs_f32();
+    let step_d = t2.elapsed();
+    let step_s = step_d.as_secs_f32();
+    if shard.trace.enabled() {
+        // The three tenant phases, on the shard's process row so a
+        // Perfetto load lines them up against that tick's sim/render
+        // spans. Start = now - dur (phases ran back-to-back just above).
+        let pid = shard.idx as u32;
+        let now = shard.trace.now_us();
+        let step_us = step_d.as_micros() as u64;
+        let infer_us = infer_d.as_micros() as u64;
+        let gather_us = gather_d.as_micros() as u64;
+        let tick = snapshot.step + 1;
+        let t = &shard.trace;
+        t.span(pid, "tenant", "tenant.gather",
+            now.saturating_sub(step_us + infer_us + gather_us), gather_d, tick);
+        t.span(pid, "tenant", "tenant.infer",
+            now.saturating_sub(step_us + infer_us), infer_d, tick);
+        t.span(pid, "tenant", "tenant.step", now.saturating_sub(step_us), step_d, tick);
+    }
     // Episode ends zero recurrent rows (matches Policy::reset_done on
     // the client-side loop); so do rows no member of the variant owns,
     // which keeps co-resident plain sessions' slots from accumulating
@@ -451,8 +473,8 @@ fn run_tick(
     // Publish counters; reap members whose handle hung up mid-stream.
     {
         let mut st = shared.state.lock().unwrap();
-        st.infer_runs += runs;
-        st.agent_steps += agent_steps;
+        st.infer_runs.add(runs);
+        st.agent_steps.add(agent_steps);
         st.gather_lat.push(gather_s);
         st.infer_lat.push(infer_s);
         st.step_lat.push(step_s);

@@ -64,10 +64,14 @@ struct GrantMsg {
 
 type LeaseReply = std::result::Result<GrantMsg, String>;
 
+/// Answer to a `Stats` scrape: snapshot version + Prometheus text.
+type StatsReply = (u32, String);
+
 #[derive(Default)]
 struct Routes {
     leases: HashMap<u64, Sender<LeaseReply>>,
     sessions: HashMap<u64, Sender<SessMsg>>,
+    stats: HashMap<u64, Sender<StatsReply>>,
 }
 
 struct ClientShared {
@@ -274,6 +278,24 @@ impl RemoteClient {
         }
         Ok(agent)
     }
+
+    /// Scrape the server's metrics registry over the session connection:
+    /// returns the snapshot version and the Prometheus text exposition —
+    /// byte-identical to what the server's `GET /metrics` endpoint would
+    /// serve at the same instant. Blocks until the reply arrives.
+    pub fn stats_text(&self) -> Result<(u32, String)> {
+        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        self.shared.routes.lock().unwrap().stats.insert(req, tx);
+        if let Err(e) = send_frame(&self.shared, &Frame::Stats { req }) {
+            self.shared.routes.lock().unwrap().stats.remove(&req);
+            return Err(e);
+        }
+        match rx.recv() {
+            Ok((version, text)) => Ok((version, text)),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        }
+    }
 }
 
 impl Drop for RemoteClient {
@@ -372,13 +394,20 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
                     let _ = tx.send(SessMsg::Error(msg));
                 }
             }
+            Frame::StatsReply { req, version, text } => {
+                let mut r = shared.routes.lock().unwrap();
+                if let Some(reply) = r.stats.remove(&req) {
+                    let _ = reply.send((version, text));
+                }
+            }
             Frame::Hello
             | Frame::Welcome { .. }
             | Frame::Lease { .. }
             | Frame::Submit { .. }
             | Frame::Detach { .. }
             | Frame::LeasePolicy { .. }
-            | Frame::Goal { .. } => {
+            | Frame::Goal { .. }
+            | Frame::Stats { .. } => {
                 why = Some("unexpected client-bound frame".into());
                 break;
             }
@@ -389,6 +418,7 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
     let mut r = shared.routes.lock().unwrap();
     r.leases.clear();
     r.sessions.clear();
+    r.stats.clear();
 }
 
 /// A lease on a remote shard, driven through the same

@@ -51,6 +51,10 @@ pub const FT_ERROR: u8 = 9;
 pub const FT_LEASE_POLICY: u8 = 10;
 pub const FT_GOAL: u8 = 11;
 pub const FT_TRAJ: u8 = 12;
+// Observability frames (DESIGN.md §0.10): scrape the server's metrics
+// registry over the session connection.
+pub const FT_STATS: u8 = 13;
+pub const FT_STATS_REPLY: u8 = 14;
 
 // Error-frame codes (the `code` field of `Frame::Error`). The code also
 // disambiguates what the `re` field names: `ERR_LEASE` refers to a
@@ -220,6 +224,18 @@ pub enum Frame {
         actions: Vec<u8>,
         view: StepFrame,
     },
+    /// Client → server: request a registry snapshot. `req` correlates
+    /// the [`Frame::StatsReply`] when requests are pipelined.
+    Stats { req: u64 },
+    /// Server → client: answers `Stats` with the snapshot `version`
+    /// (see `obs::SNAPSHOT_VERSION`) and the Prometheus text exposition
+    /// of the registry — the same bytes `GET /metrics` would serve at
+    /// that instant.
+    StatsReply {
+        req: u64,
+        version: u32,
+        text: String,
+    },
 }
 
 impl Frame {
@@ -237,6 +253,8 @@ impl Frame {
             Frame::LeasePolicy { .. } => FT_LEASE_POLICY,
             Frame::Goal { .. } => FT_GOAL,
             Frame::Traj { .. } => FT_TRAJ,
+            Frame::Stats { .. } => FT_STATS,
+            Frame::StatsReply { .. } => FT_STATS_REPLY,
         }
     }
 }
@@ -467,6 +485,13 @@ pub fn encode(f: &Frame, out: &mut Vec<u8>) {
             };
             put_traj_body(out, *session, *step, *obs_floats, actions, v);
         }
+        Frame::Stats { req } => put_u64(out, *req),
+        Frame::StatsReply { req, version, text } => {
+            put_u64(out, *req);
+            put_u32(out, *version);
+            put_u32(out, text.len() as u32);
+            out.extend_from_slice(text.as_bytes());
+        }
     }
     finish_frame(out);
 }
@@ -491,7 +516,7 @@ pub fn decode_header(b: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::BadVersion(b[2]));
     }
     let ftype = b[3];
-    if !(FT_HELLO..=FT_TRAJ).contains(&ftype) {
+    if !(FT_HELLO..=FT_STATS_REPLY).contains(&ftype) {
         return Err(WireError::UnknownType(ftype));
     }
     let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
@@ -685,6 +710,14 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
                 view,
             }
         }
+        FT_STATS => Frame::Stats { req: r.u64()? },
+        FT_STATS_REPLY => {
+            let req = r.u64()?;
+            let version = r.u32()?;
+            let len = r.u32()? as u64;
+            let text = String::from_utf8_lossy(r.take(len)?).into_owned();
+            Frame::StatsReply { req, version, text }
+        }
         other => return Err(WireError::UnknownType(other)),
     };
     r.done()?;
@@ -712,6 +745,11 @@ pub const MAX_VARIANT_NAME: usize = 256;
 /// Bound for the client→server `LEASE_POLICY` payload
 /// (`26 + vlen` bytes with `vlen` ≤ [`MAX_VARIANT_NAME`]).
 const LEASE_POLICY_CAP: usize = 26 + MAX_VARIANT_NAME;
+/// Bound for the server→client `STATS_REPLY` payload (`16 + text`
+/// bytes). A registry exposition is a few KiB per shard; 1 MiB leaves
+/// room for hundreds of shards without letting a hostile server pin
+/// [`MAX_FRAME`]-sized allocations on a stats client.
+pub const STATS_CAP: usize = 1 << 20;
 
 /// Largest legal payload for `ftype` in one direction (`from_client` =
 /// the reader is a server). `None` means the type never flows that way.
@@ -728,12 +766,14 @@ pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
         (FT_DETACH, true) => Some(8),
         (FT_LEASE_POLICY, true) => Some(LEASE_POLICY_CAP),
         (FT_GOAL, true) => Some(12),
+        (FT_STATS, true) => Some(8),
         (FT_WELCOME, false) => Some(4),
         (FT_GRANT, false) => Some(GRANT_CAP),
         (FT_STEP, false) => Some(MAX_FRAME),
         (FT_DETACHED, false) => Some(8),
         (FT_ERROR, false) => Some(ERROR_CAP),
         (FT_TRAJ, false) => Some(MAX_FRAME),
+        (FT_STATS_REPLY, false) => Some(STATS_CAP),
         _ => None,
     }
 }
@@ -874,6 +914,12 @@ mod tests {
         roundtrip(Frame::Goal {
             session: 42,
             steps: 128,
+        });
+        roundtrip(Frame::Stats { req: 5 });
+        roundtrip(Frame::StatsReply {
+            req: 5,
+            version: 1,
+            text: "# bps registry snapshot v1\nserve_shard_steps{shard=\"0\"} 7\n".into(),
         });
         roundtrip(Frame::Traj {
             session: 42,
@@ -1020,14 +1066,44 @@ mod tests {
     }
 
     #[test]
-    fn header_range_covers_tenant_frames() {
+    fn header_range_covers_tenant_and_stats_frames() {
         let m = MAGIC.to_le_bytes();
-        for ft in [FT_LEASE_POLICY, FT_GOAL, FT_TRAJ] {
+        for ft in [FT_LEASE_POLICY, FT_GOAL, FT_TRAJ, FT_STATS, FT_STATS_REPLY] {
             let h = [m[0], m[1], VERSION, ft, 0, 0, 0, 0];
             assert!(decode_header(&h).is_ok(), "type {ft} must validate");
         }
-        let h = [m[0], m[1], VERSION, FT_TRAJ + 1, 0, 0, 0, 0];
-        assert_eq!(decode_header(&h), Err(WireError::UnknownType(FT_TRAJ + 1)));
+        let h = [m[0], m[1], VERSION, FT_STATS_REPLY + 1, 0, 0, 0, 0];
+        assert_eq!(
+            decode_header(&h),
+            Err(WireError::UnknownType(FT_STATS_REPLY + 1))
+        );
+    }
+
+    /// Stats frames are asymmetric: the request is a tiny fixed-size
+    /// client frame, the reply is server-only and capped well below
+    /// [`MAX_FRAME`].
+    #[test]
+    fn stats_frames_direction_and_caps() {
+        assert_eq!(payload_cap(FT_STATS, true), Some(8));
+        assert_eq!(payload_cap(FT_STATS, false), None);
+        assert_eq!(payload_cap(FT_STATS_REPLY, false), Some(STATS_CAP));
+        assert_eq!(payload_cap(FT_STATS_REPLY, true), None);
+        // a reply whose text length field overruns the payload
+        let mut buf = Vec::new();
+        encode(
+            &Frame::StatsReply {
+                req: 1,
+                version: 1,
+                text: "ok".into(),
+            },
+            &mut buf,
+        );
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(
+            decode_payload(FT_STATS_REPLY, &payload),
+            Err(WireError::Truncated)
+        );
     }
 
     #[test]

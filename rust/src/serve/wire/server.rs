@@ -46,9 +46,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::obs::{Counter, EventLog, Gauge, Registry, TraceSink, SNAPSHOT_VERSION, WIRE_PID};
 use crate::serve::session::{Session, SessionView};
 use crate::serve::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
 use crate::serve::SimServer;
+use crate::util::json::Json;
 
 use super::frame::{
     self, Frame, ReadError, StepRef, ERR_LEASE, ERR_PROTOCOL, ERR_SESSION, ERR_SHARD, ERR_SUBMIT,
@@ -111,6 +113,47 @@ pub struct ConnStats {
     pub closed: bool,
 }
 
+/// Server-wide wire counters on the [`SimServer`]'s metrics registry
+/// (`wire.*` metric family). Per-connection rows keep their own exact
+/// atomics in [`ConnShared`] — these cells aggregate across connections
+/// (including ones whose closed rows were pruned), so a scrape sees the
+/// transport's lifetime totals. Cheap to clone: every cell is an `Arc`.
+#[derive(Clone)]
+struct WireObs {
+    conns_accepted: Counter,
+    conns_open: Gauge,
+    sessions_open: Gauge,
+    sessions_opened: Counter,
+    frames_in: Counter,
+    bytes_in: Counter,
+    frames_out: Counter,
+    bytes_out: Counter,
+    bad_frames: Counter,
+    errors_out: Counter,
+    dropped_slow: Counter,
+    reaped: Counter,
+}
+
+impl WireObs {
+    fn new(reg: &Registry) -> WireObs {
+        let no_labels: &[(&str, &str)] = &[];
+        WireObs {
+            conns_accepted: reg.counter("wire.conns_accepted", no_labels),
+            conns_open: reg.gauge("wire.conns_open", no_labels),
+            sessions_open: reg.gauge("wire.sessions_open", no_labels),
+            sessions_opened: reg.counter("wire.sessions_opened", no_labels),
+            frames_in: reg.counter("wire.frames_in", no_labels),
+            bytes_in: reg.counter("wire.bytes_in", no_labels),
+            frames_out: reg.counter("wire.frames_out", no_labels),
+            bytes_out: reg.counter("wire.bytes_out", no_labels),
+            bad_frames: reg.counter("wire.bad_frames", no_labels),
+            errors_out: reg.counter("wire.errors_out", no_labels),
+            dropped_slow: reg.counter("wire.dropped_slow", no_labels),
+            reaped: reg.counter("wire.reaped", no_labels),
+        }
+    }
+}
+
 /// Shared per-connection state (stats + the shutdown handle).
 struct ConnShared {
     id: u64,
@@ -137,6 +180,12 @@ struct ConnShared {
     /// too: a streaming policy tenant legitimately sends nothing after
     /// its goal, but the `TRAJ` frames it drains prove it alive.
     last_activity_ms: AtomicU64,
+    /// Server-wide aggregate cells this connection also feeds.
+    obs: WireObs,
+    /// Lifecycle event sink (shared with the backing [`SimServer`]).
+    events: Arc<EventLog>,
+    /// Megaframe trace sink, for the wire encode/flush spans.
+    trace: Arc<TraceSink>,
 }
 
 impl ConnShared {
@@ -145,8 +194,43 @@ impl ConnShared {
             .store(self.epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
     }
 
+    /// Count one frame-grammar violation from this peer, on both the
+    /// per-connection row and the aggregate `wire.bad_frames` cell.
+    fn bad_frame(&self, what: &str) {
+        self.bad_frames.fetch_add(1, Ordering::Relaxed);
+        self.obs.bad_frames.inc();
+        self.events.emit(
+            "conn.bad_frame",
+            &[
+                ("conn", Json::Num(self.id as f64)),
+                ("peer", Json::Str(self.peer.clone())),
+                ("what", Json::Str(what.into())),
+            ],
+        );
+    }
+
+    /// A session was granted over this connection.
+    fn session_opened(&self) {
+        self.sessions_open.fetch_add(1, Ordering::Relaxed);
+        self.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        self.obs.sessions_open.add(1.0);
+        self.obs.sessions_opened.inc();
+    }
+
+    /// A session on this connection ended (detach, disconnect, or a
+    /// failed pump spawn that never ran).
+    fn session_closed(&self) {
+        self.sessions_open.fetch_sub(1, Ordering::Relaxed);
+        self.obs.sessions_open.add(-1.0);
+    }
+
     fn close(&self) {
-        self.closed.store(true, Ordering::Relaxed);
+        // Swap-gated: close() has several racing callers (reader
+        // teardown, writer errors, slow-reader policy, the reaper, server
+        // drop) and the open-connection gauge must move exactly once.
+        if !self.closed.swap(true, Ordering::Relaxed) {
+            self.obs.conns_open.add(-1.0);
+        }
         // shutdown() reaches the reader's and writer's clones through
         // the shared socket; dropping the handle then frees this fd.
         if let Some(s) = self.stream.lock().unwrap().take() {
@@ -181,6 +265,10 @@ struct WireShared {
     shutting_down: AtomicBool,
     /// Epoch of every connection's idle clock.
     epoch: Instant,
+    /// Aggregate wire cells on the sim server's registry.
+    obs: WireObs,
+    events: Arc<EventLog>,
+    trace: Arc<TraceSink>,
 }
 
 /// Closed connections whose stats rows are kept for post-mortems; older
@@ -213,6 +301,9 @@ impl WireServer {
             .set_nonblocking(true)
             .context("listener nonblocking")?;
         let local = listener.local_addr().context("local_addr")?;
+        let obs = WireObs::new(&sim.registry());
+        let events = sim.events();
+        let trace = sim.trace();
         let shared = Arc::new(WireShared {
             sim,
             cfg,
@@ -221,6 +312,9 @@ impl WireServer {
             next_session: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             epoch: Instant::now(),
+            obs,
+            events,
+            trace,
         });
         let for_accept = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
@@ -306,6 +400,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             _ => continue,
         };
         let id = shared.next_conn.fetch_add(1, Ordering::Relaxed) + 1;
+        shared.obs.conns_accepted.inc();
+        shared.obs.conns_open.add(1.0);
         let conn = Arc::new(ConnShared {
             id,
             peer: peer.to_string(),
@@ -322,6 +418,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             closed: AtomicBool::new(false),
             epoch: shared.epoch,
             last_activity_ms: AtomicU64::new(shared.epoch.elapsed().as_millis() as u64),
+            obs: shared.obs.clone(),
+            events: Arc::clone(&shared.events),
+            trace: Arc::clone(&shared.trace),
         });
         {
             let mut conns = shared.conns.lock().unwrap();
@@ -376,7 +475,17 @@ fn reap_idle_conns(shared: &Arc<WireShared>) {
         if !c.closed.load(Ordering::Relaxed)
             && now_ms.saturating_sub(c.last_activity_ms.load(Ordering::Relaxed)) > ticks
         {
-            c.reaped.store(true, Ordering::Relaxed);
+            if !c.reaped.swap(true, Ordering::Relaxed) {
+                c.obs.reaped.inc();
+                c.events.emit(
+                    "conn.idle_reap",
+                    &[
+                        ("conn", Json::Num(c.id as f64)),
+                        ("peer", Json::Str(c.peer.clone())),
+                        ("idle_ticks", Json::Num(ticks as f64)),
+                    ],
+                );
+            }
             c.close();
         }
     }
@@ -389,12 +498,24 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
     loop {
         match rx.recv_timeout(Duration::from_millis(500)) {
             Ok(buf) => {
+                let flush_from = if conn.trace.enabled() {
+                    Some(conn.trace.now_us())
+                } else {
+                    None
+                };
+                let wrote_at = Instant::now();
                 if std::io::Write::write_all(&mut stream, &buf).is_err() {
                     conn.close();
                     return;
                 }
+                if let Some(from) = flush_from {
+                    conn.trace
+                        .span(WIRE_PID, "flush", "wire.flush", from, wrote_at.elapsed(), 0);
+                }
                 conn.frames_out.fetch_add(1, Ordering::Relaxed);
                 conn.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
+                conn.obs.frames_out.inc();
+                conn.obs.bytes_out.add(buf.len() as u64);
                 conn.touch();
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -414,7 +535,16 @@ fn enqueue_buf(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, buf: Vec<u8>) ->
     match outbox.try_send(buf) {
         Ok(()) => true,
         Err(TrySendError::Full(_)) => {
-            conn.dropped_slow.store(true, Ordering::Relaxed);
+            if !conn.dropped_slow.swap(true, Ordering::Relaxed) {
+                conn.obs.dropped_slow.inc();
+                conn.events.emit(
+                    "conn.slow_reader",
+                    &[
+                        ("conn", Json::Num(conn.id as f64)),
+                        ("peer", Json::Str(conn.peer.clone())),
+                    ],
+                );
+            }
             conn.close();
             false
         }
@@ -423,8 +553,21 @@ fn enqueue_buf(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, buf: Vec<u8>) ->
 }
 
 /// Serialize `f` into the connection's bounded outbox (see
-/// [`enqueue_buf`] for the return contract).
+/// [`enqueue_buf`] for the return contract). Error frames are counted
+/// and logged here so every send site feeds the same cells.
 fn enqueue(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, f: &Frame) -> bool {
+    if let Frame::Error { re, code, msg } = f {
+        conn.obs.errors_out.inc();
+        conn.events.emit(
+            "conn.error_frame",
+            &[
+                ("conn", Json::Num(conn.id as f64)),
+                ("re", Json::Num(*re as f64)),
+                ("code", Json::Num(*code as f64)),
+                ("msg", Json::Str(msg.clone())),
+            ],
+        );
+    }
     let mut buf = Vec::new();
     frame::encode(f, &mut buf);
     enqueue_buf(conn, outbox, buf)
@@ -440,6 +583,11 @@ fn enqueue_step(
     obs_floats: usize,
     v: SessionView<'_>,
 ) -> bool {
+    let encode_from = if conn.trace.enabled() {
+        Some((conn.trace.now_us(), Instant::now()))
+    } else {
+        None
+    };
     let mut buf = Vec::new();
     frame::encode_step(
         &mut buf,
@@ -456,20 +604,25 @@ fn enqueue_step(
             scores: v.scores,
         },
     );
+    if let Some((from, at)) = encode_from {
+        conn.trace
+            .span(WIRE_PID, "encode", "wire.encode", from, at.elapsed(), v.step);
+    }
     enqueue_buf(conn, outbox, buf)
 }
 
 /// Byte-counting shim over the connection socket for `frame::read_frame`.
 struct Metered<'a> {
     s: &'a TcpStream,
-    bytes: &'a AtomicU64,
+    conn: &'a ConnShared,
 }
 
 impl Read for Metered<'_> {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         let mut s = self.s;
         let n = s.read(buf)?;
-        self.bytes.fetch_add(n as u64, Ordering::Relaxed);
+        self.conn.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+        self.conn.obs.bytes_in.add(n as u64);
         Ok(n)
     }
 }
@@ -497,7 +650,7 @@ fn reader_loop(
     let mut greeted = false;
     let mut metered = Metered {
         s: &stream,
-        bytes: &conn.bytes_in,
+        conn: &conn,
     };
     loop {
         // Direction-aware read: client→server frames are all small, so
@@ -507,7 +660,7 @@ fn reader_loop(
             Err(ReadError::Eof) | Err(ReadError::Io(_)) => break,
             Err(ReadError::Wire(e)) => {
                 // Malformed traffic: courtesy error frame, then hang up.
-                conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+                conn.bad_frame(&e.to_string());
                 let _ = enqueue(
                     &conn,
                     &outbox,
@@ -521,9 +674,10 @@ fn reader_loop(
             }
         };
         conn.frames_in.fetch_add(1, Ordering::Relaxed);
+        conn.obs.frames_in.inc();
         conn.touch();
         if !greeted && !matches!(&f, Frame::Hello) {
-            conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+            conn.bad_frame("expected HELLO");
             let _ = enqueue(
                 &conn,
                 &outbox,
@@ -538,7 +692,7 @@ fn reader_loop(
         match f {
             Frame::Hello => {
                 if greeted {
-                    conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+                    conn.bad_frame("duplicate HELLO");
                     let _ = enqueue(
                         &conn,
                         &outbox,
@@ -587,8 +741,7 @@ fn reader_loop(
                         }
                         let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
                         let (tx, rx) = sync_channel(shared.cfg.inbox_submits.max(1));
-                        conn.sessions_open.fetch_add(1, Ordering::Relaxed);
-                        conn.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                        conn.session_opened();
                         let ctx = PumpCtx {
                             session,
                             rx,
@@ -607,7 +760,7 @@ fn reader_loop(
                             Err(e) => {
                                 // ctx (and the lease) died with the failed
                                 // spawn; tell the client
-                                conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                                conn.session_closed();
                                 if !enqueue(
                                     &conn,
                                     &outbox,
@@ -812,8 +965,7 @@ fn reader_loop(
                             continue;
                         }
                         let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
-                        conn.sessions_open.fetch_add(1, Ordering::Relaxed);
-                        conn.sessions_opened.fetch_add(1, Ordering::Relaxed);
+                        conn.session_opened();
                         let control = ts.control();
                         let ctx = AgentCtx {
                             ts,
@@ -832,7 +984,7 @@ fn reader_loop(
                             Err(e) => {
                                 // ctx (and the lease) died with the
                                 // failed spawn; tell the client
-                                conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                                conn.session_closed();
                                 if !enqueue(
                                     &conn,
                                     &outbox,
@@ -897,13 +1049,31 @@ fn reader_loop(
                     break;
                 }
             }
+            Frame::Stats { req } => {
+                // A registry snapshot, rendered exactly as the
+                // plaintext endpoint would serve it — remote scrapes
+                // and `GET /metrics` see byte-identical expositions.
+                let text = shared.sim.registry().snapshot().to_prometheus();
+                if !enqueue(
+                    &conn,
+                    &outbox,
+                    &Frame::StatsReply {
+                        req,
+                        version: SNAPSHOT_VERSION,
+                        text,
+                    },
+                ) {
+                    break;
+                }
+            }
             Frame::Welcome { .. }
             | Frame::Grant { .. }
             | Frame::Step { .. }
             | Frame::Traj { .. }
             | Frame::Detached { .. }
-            | Frame::Error { .. } => {
-                conn.bad_frames.fetch_add(1, Ordering::Relaxed);
+            | Frame::Error { .. }
+            | Frame::StatsReply { .. } => {
+                conn.bad_frame("client sent a server-only frame");
                 let _ = enqueue(
                     &conn,
                     &outbox,
@@ -947,6 +1117,11 @@ fn enqueue_traj(
     obs_floats: usize,
     ts: &TrajStep,
 ) -> bool {
+    let encode_from = if conn.trace.enabled() {
+        Some((conn.trace.now_us(), Instant::now()))
+    } else {
+        None
+    };
     let mut buf = Vec::new();
     frame::encode_traj(
         &mut buf,
@@ -964,6 +1139,10 @@ fn enqueue_traj(
             scores: &ts.scores,
         },
     );
+    if let Some((from, at)) = encode_from {
+        conn.trace
+            .span(WIRE_PID, "encode", "wire.encode", from, at.elapsed(), ts.step);
+    }
     enqueue_buf(conn, outbox, buf)
 }
 
@@ -1038,7 +1217,7 @@ fn agent_pump(ctx: AgentCtx) {
     if clean_detach {
         let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
     }
-    conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+    conn.session_closed();
 }
 
 struct PumpCtx {
@@ -1082,7 +1261,39 @@ fn session_pump(ctx: PumpCtx) {
                 let slots: Vec<usize> = pairs.iter().map(|&(s, _)| s as usize).collect();
                 let actions: Vec<u8> = pairs.iter().map(|&(_, a)| a).collect();
                 match session.submit_at(&slots, &actions) {
-                    Ok((0, _ticket)) => {
+                    Ok((accepted, _ticket)) if accepted < slots.len() => {
+                        // Some slot indices were bad (out of range,
+                        // unleased, or foreign) — the coalescer skipped
+                        // them. Log what the peer tried.
+                        conn.events.emit(
+                            "conn.bad_submit",
+                            &[
+                                ("conn", Json::Num(conn.id as f64)),
+                                ("session", Json::Num(wire_id as f64)),
+                                ("requested", Json::Num(slots.len() as f64)),
+                                ("accepted", Json::Num(accepted as f64)),
+                            ],
+                        );
+                        if accepted > 0 {
+                            match _ticket.wait() {
+                                Ok(v) => {
+                                    alive = enqueue_step(&conn, &outbox, wire_id, of, v);
+                                }
+                                Err(e) => {
+                                    let _ = enqueue(
+                                        &conn,
+                                        &outbox,
+                                        &Frame::Error {
+                                            re: wire_id,
+                                            code: ERR_SHARD,
+                                            msg: format!("{e:#}"),
+                                        },
+                                    );
+                                    alive = false;
+                                }
+                            }
+                            continue;
+                        }
                         // Nothing was buffered (every slot index was bad):
                         // waiting could hang forever, so report instead.
                         alive = enqueue(
@@ -1139,5 +1350,5 @@ fn session_pump(ctx: PumpCtx) {
         // immediately re-lease the freed slots.
         let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
     }
-    conn.sessions_open.fetch_sub(1, Ordering::Relaxed);
+    conn.session_closed();
 }

@@ -1,0 +1,240 @@
+//! Observability integration tests (DESIGN.md §0.10).
+//!
+//! Acceptance gates: the STATS wire scrape, the HTTP `/metrics`
+//! endpoint, and `SimServer::stats()` must *agree exactly* — all three
+//! read the same registry cells, so a remote scrape can never drift
+//! from the server's own accounting. Also: enabling every obs sink must
+//! not perturb the simulation (bitwise-identical observation streams),
+//! and the event log must record the session lifecycle.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bps::env::EnvBatchConfig;
+use bps::obs::{MetricsServer, SNAPSHOT_VERSION};
+use bps::render::RenderConfig;
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::serve::{RemoteClient, ShardSpec, SimServer, WireServer};
+use bps::sim::{Task, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const SEED: u64 = 0x0B5_CA5E;
+const ENVS: usize = 4;
+const STEPS: usize = 6;
+
+fn scene() -> Arc<SceneAsset> {
+    Arc::new(generate("obs_loopback", 29, Complexity::test()))
+}
+
+fn server() -> Arc<SimServer> {
+    let s = scene();
+    let cfg = EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16)).seed(SEED);
+    let spec = ShardSpec::with_scenes(cfg, (0..ENVS).map(|_| Arc::clone(&s)).collect());
+    Arc::new(SimServer::start(vec![spec], Arc::new(WorkerPool::new(2))).unwrap())
+}
+
+fn actions_at(t: usize) -> Vec<u8> {
+    (0..ENVS)
+        .map(|i| (1 + (5 * t + 3 * i) % (NUM_ACTIONS - 1)) as u8)
+        .collect()
+}
+
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Value of one series in a Prometheus text page (`name{labels...}` or
+/// a bare `name` line).
+fn scrape(text: &str, series: &str) -> f64 {
+    let line = text
+        .lines()
+        .find(|l| l.strip_prefix(series).is_some_and(|r| r.starts_with(' ')))
+        .unwrap_or_else(|| panic!("series {series:?} missing from scrape:\n{text}"));
+    line.rsplit(' ').next().unwrap().parse().unwrap()
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    let (head, body) = out.split_once("\r\n\r\n").unwrap();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    body.to_string()
+}
+
+/// The core agreement gate: drive a remote session over loopback, then
+/// check the in-band STATS scrape against `SimServer::stats()`, and —
+/// after the connection quiesces — the HTTP `/metrics` page against the
+/// registry's own rendering and the wire aggregates against
+/// `conn_stats()`.
+#[test]
+fn loopback_scrape_matches_server_stats() {
+    let srv = server();
+    let metrics = MetricsServer::listen("127.0.0.1:0", srv.registry()).unwrap();
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut session = client.open_session(Task::PointNav, ENVS).unwrap();
+    for t in 0..STEPS {
+        session.step(&actions_at(t)).unwrap();
+    }
+
+    // In-band scrape while the lease is live. Nothing is stepping (the
+    // only session is idle), so shard counters cannot move between the
+    // remote render and the local read.
+    let (version, text) = client.stats_text().unwrap();
+    assert_eq!(version, SNAPSHOT_VERSION);
+    assert!(text.starts_with(&format!("# bps snapshot v{SNAPSHOT_VERSION}\n")));
+    let st = &srv.stats()[0];
+    assert_eq!(st.steps, STEPS as u64);
+    assert_eq!(
+        scrape(&text, "serve_shard_steps{shard=\"0\"}") as u64,
+        st.steps
+    );
+    assert_eq!(
+        scrape(&text, "serve_shard_leased{shard=\"0\"}") as usize,
+        st.leased
+    );
+    assert_eq!(scrape(&text, "serve_shard_leased{shard=\"0\"}") as usize, ENVS);
+    assert_eq!(
+        scrape(&text, "serve_shard_straggler_fills{shard=\"0\"}") as u64,
+        st.straggler_fills
+    );
+    assert_eq!(
+        scrape(&text, "serve_shard_bad_submits{shard=\"0\"}") as u64,
+        st.bad_submits
+    );
+    // one latency sample per session step landed in the histogram
+    assert_eq!(
+        scrape(&text, "serve_shard_latency_us_count{shard=\"0\"}") as u64,
+        STEPS as u64
+    );
+    assert!(scrape(&text, "env_sim_us{shard=\"0\"}") > 0.0);
+    assert!(scrape(&text, "render_raster_us{shard=\"0\"}") > 0.0);
+    assert_eq!(scrape(&text, "wire_sessions_opened") as u64, 1);
+    assert_eq!(scrape(&text, "wire_conns_open") as u64, 1);
+
+    // Tear the connection down and let the server notice, then scrape
+    // out-of-band over HTTP: with no wire traffic in flight the page is
+    // stable and must equal the registry's canonical rendering and the
+    // per-conn accounting exactly.
+    session.detach().unwrap();
+    drop(client);
+    wait_until("conn close", || {
+        wire.conn_stats().iter().all(|c| c.closed)
+    });
+    let page = http_get(metrics.local_addr(), "/metrics");
+    assert_eq!(page, srv.registry().snapshot().to_prometheus());
+    assert_eq!(page, http_get(metrics.local_addr(), "/metrics"));
+
+    let conns = wire.conn_stats();
+    assert_eq!(conns.len(), 1);
+    let c = &conns[0];
+    assert_eq!(scrape(&page, "wire_frames_in") as u64, c.frames_in);
+    assert_eq!(scrape(&page, "wire_frames_out") as u64, c.frames_out);
+    assert_eq!(scrape(&page, "wire_bytes_in") as u64, c.bytes_in);
+    assert_eq!(scrape(&page, "wire_bytes_out") as u64, c.bytes_out);
+    assert_eq!(scrape(&page, "wire_bad_frames") as u64, c.bad_frames);
+    assert_eq!(scrape(&page, "wire_bad_frames") as u64, 0);
+    assert_eq!(scrape(&page, "wire_conns_accepted") as u64, 1);
+    assert_eq!(scrape(&page, "wire_conns_open") as u64, 0);
+    assert_eq!(scrape(&page, "wire_sessions_open") as u64, 0);
+    assert_eq!(scrape(&page, "serve_shard_leased{shard=\"0\"}") as usize, 0);
+
+    assert_eq!(http_get(metrics.local_addr(), "/healthz"), "ok\n");
+}
+
+/// Obs sinks must be pure observers: a session driven with tracing +
+/// events enabled yields the bitwise-identical reward stream as one on
+/// an identically-seeded server with everything disarmed.
+#[test]
+fn obs_sinks_do_not_perturb_stepping() {
+    let run = |armed: bool| -> (Vec<f32>, Vec<bool>) {
+        let srv = server();
+        let dir = std::env::temp_dir().join("bps_obs_integration");
+        std::fs::create_dir_all(&dir).unwrap();
+        if armed {
+            srv.trace().enable();
+            srv.events()
+                .arm(&dir.join("events.jsonl"), 1 << 20)
+                .unwrap();
+        }
+        let mut session = srv.connect(Task::PointNav, ENVS).unwrap();
+        let mut rewards = Vec::new();
+        let mut dones = Vec::new();
+        for t in 0..STEPS {
+            let v = session.step(&actions_at(t)).unwrap();
+            rewards.extend_from_slice(v.rewards);
+            dones.extend_from_slice(v.dones);
+        }
+        (rewards, dones)
+    };
+    assert_eq!(run(false), run(true));
+}
+
+/// Spans from every pipeline stage reach the ring, and the Chrome
+/// export is valid JSON naming each stage.
+#[test]
+fn trace_covers_pipeline_stages() {
+    let srv = server();
+    srv.trace().enable();
+    let mut session = srv.connect(Task::PointNav, ENVS).unwrap();
+    for t in 0..STEPS {
+        session.step(&actions_at(t)).unwrap();
+    }
+    let spans = srv.trace().spans();
+    for stage in [
+        "coalesce",
+        "sim",
+        "render",
+        "render.transform",
+        "render.cull",
+        "render.raster",
+        "render.resolve",
+        "publish",
+    ] {
+        assert!(
+            spans.iter().filter(|s| s.name == stage).count() >= STEPS,
+            "missing spans for stage {stage}"
+        );
+    }
+    let json = srv.trace().to_chrome_json();
+    let root = bps::util::json::Json::parse(&json).unwrap();
+    let events = root.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() >= spans.len());
+}
+
+/// Lease lifecycle events land in the JSONL log as parseable lines.
+#[test]
+fn event_log_records_lease_lifecycle() {
+    let dir = std::env::temp_dir().join("bps_obs_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lease_events.jsonl");
+    let srv = server();
+    srv.events().arm(&path, 1 << 20).unwrap();
+    let mut session = srv.connect(Task::PointNav, ENVS).unwrap();
+    session.step(&actions_at(0)).unwrap();
+    session.detach();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let events: Vec<String> = text
+        .lines()
+        .map(|l| {
+            bps::util::json::Json::parse(l)
+                .unwrap()
+                .req("event")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert!(events.contains(&"lease.grant".to_string()), "{events:?}");
+    assert!(events.contains(&"lease.release".to_string()), "{events:?}");
+}
