@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in seven acts.
+//! Quickstart: the smallest end-to-end BPS run, in eight acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -44,6 +44,14 @@
 //! span ring records the per-tick pipeline timeline (Chrome trace JSON)
 //! and a JSONL event log records lease lifecycle. Remotely that's `bps
 //! serve --metrics-addr --trace-out --event-log` plus `bps stats ADDR`.
+//!
+//! Act 8 (also artifact-free) is the diagnosis layer on top (DESIGN.md
+//! §0.11): a health watchdog classifies every long-lived thread from
+//! cheap heartbeats (`GET /healthz` = real readiness), a flight
+//! recorder writes self-contained incident bundles on stall / slow
+//! tick / panic / demand (`bps serve --dump-dir`, `bps stats ADDR
+//! --dump`), and per-phase latency attribution says *where* each
+//! session's submit→result time went.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -366,5 +374,65 @@ fn observability_act(scene: &Arc<bps::scene::SceneAsset>) -> anyhow::Result<()> 
         trace_path.display()
     );
     println!("events:   lease lifecycle in {}", events_path.display());
+
+    health_act(&server)
+}
+
+// -- Act 8: diagnosis — watchdog, flight recorder, phase attribution -------
+fn health_act(server: &Arc<SimServer>) -> anyhow::Result<()> {
+    println!("\n== Health quickstart: watchdog, incident bundle, phases ==");
+    use bps::obs::Trigger;
+    // Every long-lived thread heartbeats; the watchdog classifies each
+    // role (Healthy/Degraded/Stalled) and `GET /healthz` answers from
+    // the same table — 503 names the stalled role.
+    let report = server.watchdog().report();
+    println!(
+        "watchdog: healthy={} -> /healthz would answer {} {}",
+        report.healthy(),
+        if report.healthy() { 200 } else { 503 },
+        report.to_json()
+    );
+
+    // Arm the flight recorder (remotely: `bps serve --dump-dir DIR`) and
+    // pull a manual incident bundle — the same bundle a watchdog stall,
+    // a slow tick, or a panic would have written automatically.
+    let dump_dir = std::env::temp_dir().join("bps_quickstart_incidents");
+    let recorder = server.arm_recorder(&dump_dir)?;
+    let bundle = recorder
+        .trigger(Trigger::Manual)?
+        .expect("manual dumps bypass the rate limit");
+    let mut artifacts: Vec<String> = std::fs::read_dir(&bundle)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    artifacts.sort();
+    println!("bundle:   {}", bundle.display());
+    println!("          [{}]", artifacts.join(", "));
+
+    // Where did submit->result latency go? The phase histograms split it
+    // into coalesce-wait / sim / render / publish (plus infer for tenant
+    // sessions and wire_encode/wire_flush on the wire) — and the
+    // in-process phases sum to the e2e figure by construction.
+    let snap = server.registry().snapshot();
+    let e2e = snap
+        .histogram("serve.shard.latency_us", &[("shard", "0")])
+        .expect("latency histogram");
+    print!("phases:   e2e {} us ->", e2e.sum);
+    for phase in ["coalesce", "sim", "render", "publish"] {
+        if let Some(h) = snap.histogram("serve.session.phase_us", &[("phase", phase)]) {
+            print!(" {phase} {} us", h.sum);
+        }
+    }
+    println!();
+    for row in server.slowest_sessions(4) {
+        println!(
+            "slowest:  session {} (shard {}): {} steps, mean {:.2} ms, max {:.2} ms",
+            row.session,
+            row.shard,
+            row.steps,
+            row.mean_us as f64 / 1e3,
+            row.max_us as f64 / 1e3
+        );
+    }
     Ok(())
 }

@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{Config, SimArch};
 use crate::env::{EnvBatch, EnvBatchConfig};
 use crate::metrics::EpisodeStats;
-use crate::obs::EventLog;
+use crate::obs::{EventLog, Registry, TraceSink};
 use crate::optim::{scale_lr, Losses, LrSchedule, Trainer};
 use crate::policy::Policy;
 use crate::render::{RenderConfig, SceneRotation, Sensor};
@@ -72,6 +72,10 @@ pub struct Coordinator {
     /// Lifecycle event sink (curriculum stage advances). Disarmed by
     /// default — `bps train --event-log FILE` arms it.
     pub events: Arc<EventLog>,
+    /// Metrics registry scraped by `bps train --metrics-addr`.
+    pub registry: Arc<Registry>,
+    /// Megaframe trace sink, armed by `bps train --trace-out`.
+    pub trace: Arc<TraceSink>,
     variant: Variant,
     pool: Arc<WorkerPool>,
     shards: Vec<Shard>,
@@ -186,6 +190,8 @@ impl Coordinator {
             stats,
             fps: FpsMeter::start(),
             events: Arc::new(EventLog::disabled()),
+            registry: Registry::new(),
+            trace: Arc::new(TraceSink::new(crate::obs::DEFAULT_TRACE_SPANS)),
             variant,
             pool,
             shards,

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::obs::Heartbeat;
 use crate::render::batch::RenderCounters;
 use crate::render::{BatchRenderer, RenderItem, RenderStats, SceneRotation, Sensor};
 use crate::scene::SceneAsset;
@@ -217,6 +218,10 @@ pub struct EnvBatch {
     /// call performs one blocking swap (`EnvBatchConfig::pin_rotation`).
     rotate_every: Option<u64>,
     rotate_calls: u64,
+    /// A scenario feed's generator-thread heartbeat, captured at build
+    /// time (the rotation itself moves onto the driver thread) so the
+    /// serve layer can adopt it into its watchdog.
+    procgen_hb: Option<Heartbeat>,
 }
 
 impl EnvBatch {
@@ -245,6 +250,7 @@ impl EnvBatch {
         let timings = Arc::new(StepTimings::default());
         let rotations = Arc::new(AtomicU64::new(0));
         let feed_stalls = Arc::new(AtomicU64::new(0));
+        let procgen_hb = rotation.as_ref().and_then(|r| r.procgen_heartbeat());
         let mut world = EnvWorld {
             sim,
             renderer,
@@ -288,6 +294,7 @@ impl EnvBatch {
             resident_bytes,
             rotate_every: cfg.rotate_every,
             rotate_calls: 0,
+            procgen_hb,
         })
     }
 
@@ -449,6 +456,13 @@ impl EnvBatch {
     /// after the batch moves onto its driver thread).
     pub(crate) fn rotations_counter(&self) -> Arc<AtomicU64> {
         Arc::clone(&self.rotations)
+    }
+
+    /// The scenario feed's generator-thread heartbeat, if this batch is
+    /// backed by streaming procgen (`None` for dataset feeds and static
+    /// scenes) — serve-layer watchdog plumbing.
+    pub(crate) fn procgen_heartbeat(&self) -> Option<Heartbeat> {
+        self.procgen_hb.clone()
     }
 
     /// Shared feed-stall counter: the serve layer attaches it to the obs

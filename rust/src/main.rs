@@ -101,7 +101,10 @@ SUBCOMMANDS
                (--dir PATH --train N --val N --test N --complexity gibson|thor|test --seed S)
   train        end-to-end RL training, the paper's Fig. 2 loop
                (--config cfg.toml --curve out.csv --checkpoint-out ckpt.bin --log-every K
-                --event-log FILE  curriculum stage advances as JSONL)
+                --event-log FILE  curriculum stage advances as JSONL
+                --metrics-addr A  scrape endpoint over the run's registry
+                (train.frames/fps/reward_mean/success_mean gauges)
+                --trace-out FILE  per-iteration spans as Chrome trace JSON)
   eval         greedy evaluation on a dataset split
                (--checkpoint ckpt.bin --split val --episodes N)
   serve        front a SimServer with the TCP wire transport
@@ -119,7 +122,14 @@ SUBCOMMANDS
                 with AOT artifacts present, also serve *policies*: agents
                 lease slots + a server-side checkpoint (bps agent below)
                 --metrics-addr A  plaintext scrape endpoint: GET /metrics
-                serves the registry's Prometheus text, /healthz liveness
+                serves the registry's Prometheus text; /healthz answers
+                real watchdog readiness (503 + the stalled role while any
+                registered thread is stalled); GET /debug/dump triggers a
+                flight-recorder bundle when --dump-dir is set
+                --dump-dir DIR  arm the flight recorder: stalls, slow
+                ticks, panics, and manual dumps write incident bundles
+                (metrics + trace + event tail + watchdog + sessions)
+                under DIR, rate-limited and retention-capped
                 --trace-out FILE  record per-tick pipeline spans and write
                 Chrome trace_event JSON on clean shutdown (--once runs)
                 --event-log FILE  append lifecycle events as JSONL
@@ -142,6 +152,8 @@ SUBCOMMANDS
                STATS frame) and print the Prometheus text — byte-identical
                to the server's own /metrics endpoint:
                bps stats 127.0.0.1:7447  (--addr A)
+               --dump  trigger a flight-recorder incident bundle instead
+               and print its server-local path (needs serve --dump-dir)
   trace        run an in-process serve pipeline with span tracing enabled
                and write Chrome trace_event JSON for chrome://tracing or
                Perfetto (--out trace.json --steps T --envs N --res R
@@ -264,6 +276,8 @@ fn train(args: &mut Args) -> Result<()> {
     let ckpt_out = args.opt("checkpoint-out").map(PathBuf::from);
     let log_every = args.usize_or("log-every", 5)?;
     let event_log = args.opt("event-log").map(PathBuf::from);
+    let metrics_addr = args.opt("metrics-addr");
+    let trace_out = args.opt("trace-out").map(PathBuf::from);
     let cfg = Config::load(cfg_path.as_deref(), args)?;
     println!(
         "training: variant={} arch={:?} N={} L={} shards={} optimizer={} frames={}",
@@ -280,6 +294,25 @@ fn train(args: &mut Args) -> Result<()> {
         // Lifecycle events (curriculum stage advances) as size-capped JSONL.
         coord.events.arm(p, bps::obs::DEFAULT_EVENT_LOG_BYTES)?;
     }
+    if trace_out.is_some() {
+        coord.trace.enable();
+    }
+    // Scrape surface for long runs: the listener holds the registry for
+    // the whole loop and drops with this binding at fn exit.
+    let _metrics = match &metrics_addr {
+        Some(a) => {
+            let m = bps::obs::MetricsServer::listen(a.as_str(), coord.registry.clone())?;
+            println!("metrics: http://{}/metrics", m.local_addr());
+            Some(m)
+        }
+        None => None,
+    };
+    let train_gauges = (
+        coord.registry.gauge("train.frames", &[]),
+        coord.registry.gauge("train.fps", &[]),
+        coord.registry.gauge("train.reward_mean", &[]),
+        coord.registry.gauge("train.success_mean", &[]),
+    );
     let mut curve = match &curve_path {
         Some(p) => Some(CsvLogger::create(
             p,
@@ -289,8 +322,20 @@ fn train(args: &mut Args) -> Result<()> {
     };
     let mut iter = 0u64;
     while coord.frames() < coord.cfg.total_frames {
+        let iter_from = if coord.trace.enabled() {
+            Some((coord.trace.now_us(), std::time::Instant::now()))
+        } else {
+            None
+        };
         let it = coord.train_iteration()?;
         iter += 1;
+        if let Some((from, at)) = iter_from {
+            coord.trace.span(0, "train", "train.iteration", from, at.elapsed(), iter);
+        }
+        train_gauges.0.set(coord.frames() as f64);
+        train_gauges.1.set(coord.fps());
+        train_gauges.2.set(coord.stats.reward.mean() as f64);
+        train_gauges.3.set(coord.stats.success.mean() as f64);
         if iter % log_every as u64 == 0 {
             let l = it.losses;
             let stage = if coord.cfg.scenario.is_some() {
@@ -343,6 +388,11 @@ fn train(args: &mut Args) -> Result<()> {
     );
     for (name, us) in coord.prof.breakdown(coord.frames()) {
         println!("  {name:<10} {us:>9.1} us/frame");
+    }
+    if let Some(p) = &trace_out {
+        let spans = coord.trace.spans().len();
+        std::fs::write(p, coord.trace.to_chrome_json())?;
+        println!("trace: {spans} spans -> {}", p.display());
     }
     if let Some(p) = ckpt_out {
         coord.params.save(&p)?;
@@ -403,6 +453,20 @@ fn print_serve_stats(server: &bps::serve::SimServer, conns: &[bps::serve::ConnSt
             );
         }
     }
+    let slow = server.slowest_sessions(8);
+    if !slow.is_empty() {
+        println!("slowest sessions (by max submit->result latency):");
+        for s in &slow {
+            println!(
+                "  session {} shard {}: steps {} mean {:.2} ms max {:.2} ms",
+                s.session,
+                s.shard,
+                s.steps,
+                s.mean_us as f64 / 1e3,
+                s.max_us as f64 / 1e3
+            );
+        }
+    }
     for c in conns {
         println!(
             "conn {} {}: sessions {}/{} frames in/out {}/{} bytes in/out {}/{} bad_frames={}{}{}{}",
@@ -457,6 +521,7 @@ fn serve(args: &mut Args) -> Result<()> {
     let trace_out = args.opt("trace-out").map(PathBuf::from);
     let event_log = args.opt("event-log").map(PathBuf::from);
     let event_log_bytes = args.u64_or("event-log-bytes", bps::obs::DEFAULT_EVENT_LOG_BYTES)?;
+    let dump_dir = args.opt("dump-dir").map(PathBuf::from);
     let artifacts_dir = PathBuf::from(args.opt_or("artifacts-dir", "artifacts"));
     let checkpoint = args.opt("checkpoint").map(PathBuf::from);
     let policy_seed = args.u64_or("policy-seed", 1)?;
@@ -512,9 +577,52 @@ fn serve(args: &mut Args) -> Result<()> {
     if trace_out.is_some() {
         server.trace().enable();
     }
+    if let Some(dir) = &dump_dir {
+        let rec = server.arm_recorder(dir)?;
+        println!("flight recorder: {}", rec.dir().display());
+        // Panic anywhere in the process snapshots an incident bundle
+        // before the default hook prints the backtrace — the post-mortem
+        // exists even if the process dies right after.
+        let prev = std::panic::take_hook();
+        let panic_rec = Arc::clone(&rec);
+        std::panic::set_hook(Box::new(move |info| {
+            let _ = panic_rec.trigger(bps::obs::Trigger::Panic(info.to_string()));
+            prev(info);
+        }));
+    }
+    // Fault injection for drills and the CI health smoke: pin a watchdog
+    // role to Stalled so /healthz flips without a real hang.
+    if let Ok(role) = std::env::var("BPS_FAULT_STALL") {
+        if !role.is_empty() {
+            server.watchdog().inject_stall(&role);
+            println!("fault injection: role {role:?} pinned to Stalled (BPS_FAULT_STALL)");
+        }
+    }
     let _metrics = match &metrics_addr {
         Some(a) => {
-            let m = bps::obs::MetricsServer::listen(a.as_str(), server.registry())?;
+            let mut hooks = bps::obs::HttpHooks::default();
+            let wd = server.watchdog();
+            hooks.health = Some(Arc::new(move || {
+                let r = wd.report();
+                (r.healthy(), r.to_json())
+            }));
+            if let Some(rec) = server.recorder() {
+                hooks.dump = Some(Arc::new(move || {
+                    match rec.trigger(bps::obs::Trigger::Manual) {
+                        Ok(Some(path)) => {
+                            let mut obj = std::collections::BTreeMap::new();
+                            obj.insert(
+                                "bundle".to_string(),
+                                bps::util::json::Json::Str(path.display().to_string()),
+                            );
+                            Ok(bps::util::json::Json::Obj(obj).to_string())
+                        }
+                        Ok(None) => Err("dump suppressed (rate limit)".into()),
+                        Err(e) => Err(format!("dump failed: {e}")),
+                    }
+                }));
+            }
+            let m = bps::obs::MetricsServer::listen_with(a.as_str(), server.registry(), hooks)?;
             println!("metrics: http://{}/metrics", m.local_addr());
             Some(m)
         }
@@ -583,8 +691,16 @@ fn stats(args: &mut Args) -> Result<()> {
         .operand()
         .or_else(|| args.opt("addr"))
         .unwrap_or_else(|| "127.0.0.1:7447".into());
+    let dump = args.flag("dump")?;
     args.ensure_no_operands()?; // a second address is a typo; fail now
     let client = RemoteClient::connect(&addr)?;
+    if dump {
+        // Manual flight-recorder trigger: the server writes an incident
+        // bundle and replies with its path (server-local).
+        let bundle = client.dump()?;
+        println!("incident bundle (server-local): {bundle}");
+        return Ok(());
+    }
     let (version, text) = client.stats_text()?;
     eprintln!("# scrape of {addr} (snapshot version {version})");
     print!("{text}");

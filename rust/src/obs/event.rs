@@ -123,6 +123,28 @@ impl EventLog {
         }
     }
 
+    /// Read back up to `max_bytes` of the current file's tail (whole
+    /// lines — a cut line at the window edge is dropped). `None` when
+    /// disarmed. Used by the flight recorder's `events.tail.jsonl`.
+    pub fn tail(&self, max_bytes: u64) -> Option<String> {
+        let mut guard = self.state.lock().unwrap();
+        let st = guard.as_mut()?;
+        let _ = st.file.flush();
+        let text = std::fs::read_to_string(&st.path).ok()?;
+        if text.len() as u64 <= max_bytes {
+            return Some(text);
+        }
+        let start = text.len() - max_bytes as usize;
+        let from = text
+            .as_bytes()
+            .iter()
+            .skip(start)
+            .position(|&b| b == b'\n')
+            .map(|p| start + p + 1)
+            .unwrap_or(text.len());
+        Some(text.get(from..).unwrap_or_default().to_string())
+    }
+
     fn rotate(st: &mut LogState) -> std::io::Result<()> {
         let mut rotated = st.path.as_os_str().to_owned();
         rotated.push(".1");
@@ -169,6 +191,27 @@ mod tests {
         assert_eq!(first.req("event").unwrap().as_str().unwrap(), "lease.grant");
         assert_eq!(first.req("session").unwrap().as_f64().unwrap(), 3.0);
         assert!(first.req("ts_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn tail_returns_whole_recent_lines() {
+        let path = tmp("tail.jsonl");
+        let log = EventLog::disabled();
+        assert!(log.tail(1024).is_none(), "disarmed log has no tail");
+        log.arm(&path, 1 << 20).unwrap();
+        for i in 0..32 {
+            log.emit("tick", &[("i", Json::Num(i as f64))]);
+        }
+        let full = log.tail(1 << 20).unwrap();
+        assert_eq!(full.lines().count(), 32);
+        let tail = log.tail(128).unwrap();
+        assert!(tail.len() <= 128);
+        assert!(!tail.is_empty());
+        for line in tail.lines() {
+            Json::parse(line).unwrap();
+        }
+        // the tail ends where the log ends
+        assert!(full.ends_with(&tail));
     }
 
     #[test]

@@ -1,15 +1,22 @@
 //! Minimal plaintext exposition endpoint: `GET /metrics` serves the
-//! registry's Prometheus text, `GET /healthz` a liveness line.
+//! registry's Prometheus text, `GET /healthz` a readiness answer, and
+//! `GET /debug/dump` a manual flight-recorder trigger.
 //!
-//! Hand-rolled HTTP/1.1 like the wire layer — no new dependencies. One
-//! accept thread handles connections serially (scrapes are rare and the
-//! response is a single pre-rendered string); requests are read with a
-//! short timeout and every response closes the connection, so a stuck
-//! scraper cannot wedge the endpoint for more than the read timeout.
+//! Hand-rolled HTTP/1.1 like the wire layer — no new dependencies. The
+//! accept thread hands each connection to a short-lived worker thread
+//! (capped at [`MAX_CONNS`]; excess connections get an immediate 503),
+//! so one slow-loris scraper can no longer delay a health probe — the
+//! exact property a watchdog-driven `/healthz` needs. Requests are read
+//! with a short timeout and every response closes the connection.
+//!
+//! The dynamic endpoints are wired through [`HttpHooks`]: without hooks
+//! (`bps train --metrics-addr`, unit tests) `/healthz` degenerates to
+//! the legacy static `ok` and `/debug/dump` to 404; `bps serve` installs
+//! watchdog + recorder backed hooks.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -23,9 +30,23 @@ const ACCEPT_POLL: Duration = Duration::from_millis(25);
 /// Per-request read deadline and cap on the request head we will buffer.
 const READ_TIMEOUT: Duration = Duration::from_secs(2);
 const MAX_REQUEST_HEAD: usize = 4096;
+/// Concurrent connection cap; connection 33 gets an inline 503.
+pub const MAX_CONNS: usize = 32;
 
-/// Background `/metrics` + `/healthz` server. Dropping it stops the
-/// accept thread.
+/// Dynamic answers for the active endpoints. `Default` keeps the legacy
+/// static behaviour (`/healthz` → `ok`, `/debug/dump` → 404).
+#[derive(Clone, Default)]
+pub struct HttpHooks {
+    /// `(healthy, json_body)` — unhealthy renders as 503 so a router or
+    /// orchestrator stops placing leases on a sick server.
+    pub health: Option<Arc<dyn Fn() -> (bool, String) + Send + Sync>>,
+    /// Manual flight-recorder trigger; `Ok(json_body)` names the bundle.
+    pub dump: Option<Arc<dyn Fn() -> std::result::Result<String, String> + Send + Sync>>,
+}
+
+/// Background `/metrics` + `/healthz` + `/debug/dump` server. Dropping
+/// it stops the accept thread (in-flight connection workers finish on
+/// their own; they hold only `Arc`s).
 pub struct MetricsServer {
     addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
@@ -33,7 +54,17 @@ pub struct MetricsServer {
 }
 
 impl MetricsServer {
+    /// Listen with the legacy static endpoints only.
     pub fn listen<A: ToSocketAddrs>(addr: A, registry: Arc<Registry>) -> Result<MetricsServer> {
+        Self::listen_with(addr, registry, HttpHooks::default())
+    }
+
+    /// Listen with dynamic `/healthz` and `/debug/dump` hooks.
+    pub fn listen_with<A: ToSocketAddrs>(
+        addr: A,
+        registry: Arc<Registry>,
+        hooks: HttpHooks,
+    ) -> Result<MetricsServer> {
         let listener = TcpListener::bind(addr).context("bind metrics addr")?;
         listener
             .set_nonblocking(true)
@@ -44,7 +75,7 @@ impl MetricsServer {
             let shutdown = Arc::clone(&shutdown);
             std::thread::Builder::new()
                 .name("bps-metrics-http".into())
-                .spawn(move || accept_loop(listener, registry, shutdown))
+                .spawn(move || accept_loop(listener, registry, hooks, shutdown))
                 .context("spawn metrics thread")?
         };
         Ok(MetricsServer {
@@ -68,12 +99,40 @@ impl Drop for MetricsServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, registry: Arc<Registry>, shutdown: Arc<AtomicBool>) {
+/// RAII slot in the connection cap: decrements on drop, so a worker that
+/// panics (or a closure dropped by a failed spawn) still frees its slot.
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    hooks: HttpHooks,
+    shutdown: Arc<AtomicBool>,
+) {
+    let active = Arc::new(AtomicUsize::new(0));
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
-                // Serve inline: the response is one pre-rendered string.
-                let _ = handle(stream, &registry);
+                if active.fetch_add(1, Ordering::SeqCst) >= MAX_CONNS {
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    let _ = reply_overloaded(stream);
+                    continue;
+                }
+                let slot = ConnSlot(Arc::clone(&active));
+                let registry = Arc::clone(&registry);
+                let hooks = hooks.clone();
+                let _ = std::thread::Builder::new()
+                    .name("bps-metrics-conn".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        let _ = handle(stream, &registry, &hooks);
+                    });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
@@ -83,13 +142,26 @@ fn accept_loop(listener: TcpListener, registry: Arc<Registry>, shutdown: Arc<Ato
     }
 }
 
-fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
+fn reply_overloaded(mut stream: TcpStream) -> std::io::Result<()> {
+    // Over the cap: answer without reading the request at all, so the
+    // flood cannot cost us a read timeout per connection.
+    let body = "overloaded\n";
+    let header = format!(
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn handle(mut stream: TcpStream, registry: &Registry, hooks: &HttpHooks) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(READ_TIMEOUT))?;
     let mut head = Vec::with_capacity(256);
     let mut buf = [0u8; 512];
     // Read until the end of the request head; the body (none expected
-    // for GET) is ignored.
+    // for GET/HEAD) is ignored.
     while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < MAX_REQUEST_HEAD {
         match stream.read(&mut buf) {
             Ok(0) => break,
@@ -105,8 +177,12 @@ fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
     let mut parts = line.split_whitespace();
     let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
 
-    let (status, ctype, body) = if method != "GET" {
-        ("405 Method Not Allowed", "text/plain", "method not allowed\n".to_string())
+    let (status, ctype, body) = if method != "GET" && method != "HEAD" {
+        (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed\n".to_string(),
+        )
     } else {
         match path {
             "/metrics" => (
@@ -115,7 +191,21 @@ fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
                 "text/plain; version=0.0.4; charset=utf-8",
                 registry.snapshot().to_prometheus(),
             ),
-            "/healthz" => ("200 OK", "text/plain", "ok\n".to_string()),
+            "/healthz" => match &hooks.health {
+                Some(h) => {
+                    let (ok, body) = h();
+                    let status = if ok { "200 OK" } else { "503 Service Unavailable" };
+                    (status, "application/json", body)
+                }
+                None => ("200 OK", "text/plain", "ok\n".to_string()),
+            },
+            "/debug/dump" => match &hooks.dump {
+                Some(d) => match d() {
+                    Ok(body) => ("200 OK", "application/json", body),
+                    Err(msg) => ("503 Service Unavailable", "application/json", msg),
+                },
+                None => ("404 Not Found", "text/plain", "not found\n".to_string()),
+            },
             _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
         }
     };
@@ -124,7 +214,11 @@ fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
         body.len()
     );
     stream.write_all(header.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    // HEAD gets the same status and headers (including the true
+    // Content-Length) with no body bytes.
+    if method != "HEAD" {
+        stream.write_all(body.as_bytes())?;
+    }
     stream.flush()
 }
 
@@ -132,13 +226,26 @@ fn handle(mut stream: TcpStream, registry: &Registry) -> std::io::Result<()> {
 mod tests {
     use super::*;
 
-    fn get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    fn request(addr: std::net::SocketAddr, method: &str, path: &str) -> (String, String) {
         let mut s = TcpStream::connect(addr).unwrap();
-        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        write!(s, "{method} {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         let (head, body) = out.split_once("\r\n\r\n").unwrap();
         (head.to_string(), body.to_string())
+    }
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+        request(addr, "GET", path)
+    }
+
+    /// Drop the uptime line before exact-compare: it may tick across a
+    /// second boundary between two renders.
+    fn strip_uptime(s: &str) -> String {
+        s.lines()
+            .filter(|l| !l.starts_with("process_uptime_seconds"))
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 
     #[test]
@@ -152,7 +259,10 @@ mod tests {
         assert!(head.starts_with("HTTP/1.1 200"), "{head}");
         assert!(body.contains("serve_shard_steps{shard=\"0\"} 3"), "{body}");
         // scrape matches the registry's own canonical rendering exactly
-        assert_eq!(body, registry.snapshot().to_prometheus());
+        assert_eq!(
+            strip_uptime(&body),
+            strip_uptime(&registry.snapshot().to_prometheus())
+        );
 
         let (head, body) = get(addr, "/healthz");
         assert!(head.starts_with("HTTP/1.1 200"), "{head}");
@@ -160,5 +270,63 @@ mod tests {
 
         let (head, _) = get(addr, "/nope");
         assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        // without a hook the dump endpoint does not exist
+        let (head, _) = get(addr, "/debug/dump");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    }
+
+    #[test]
+    fn head_gets_headers_and_no_body() {
+        let registry = Registry::new();
+        let srv = MetricsServer::listen("127.0.0.1:0", Arc::clone(&registry)).unwrap();
+        let addr = srv.local_addr();
+
+        let (head, body) = request(addr, "HEAD", "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.is_empty(), "HEAD must not carry a body: {body:?}");
+        // ...but the advertised length is the real one
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(len > 0);
+
+        let (head, _) = request(addr, "POST", "/metrics");
+        assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+    }
+
+    #[test]
+    fn hooks_drive_healthz_and_dump() {
+        let registry = Registry::new();
+        let healthy = Arc::new(AtomicBool::new(true));
+        let h = Arc::clone(&healthy);
+        let hooks = HttpHooks {
+            health: Some(Arc::new(move || {
+                if h.load(Ordering::SeqCst) {
+                    (true, "{\"status\":\"ok\"}".to_string())
+                } else {
+                    (false, "{\"status\":\"stalled\",\"stalled\":[\"shard-driver\"]}".to_string())
+                }
+            })),
+            dump: Some(Arc::new(|| Ok("{\"bundle\":\"/tmp/x\"}".to_string()))),
+        };
+        let srv = MetricsServer::listen_with("127.0.0.1:0", registry, hooks).unwrap();
+        let addr = srv.local_addr();
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("\"ok\""), "{body}");
+
+        healthy.store(false, Ordering::SeqCst);
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert!(body.contains("shard-driver"), "{body}");
+
+        let (head, body) = get(addr, "/debug/dump");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(body.contains("bundle"), "{body}");
     }
 }

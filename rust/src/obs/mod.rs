@@ -25,17 +25,31 @@
 //!   advance, idle reap, slow-reader disconnect, bad submits, error
 //!   frames.
 //!
-//! All four are disabled-by-default and gate on one atomic load, so the
-//! sync stepping path with obs compiled in is bitwise-identical to a
-//! build without it.
+//! PR 8 adds the *active* layer on the same substrate (DESIGN.md §0.11):
+//!
+//! - [`Watchdog`] — per-thread [`Heartbeat`]s classified Healthy /
+//!   Degraded / Stalled, backing a real `/healthz` readiness answer,
+//!   `obs.watchdog.*` gauges, and `watchdog.stall`/`recover` events.
+//! - [`Recorder`] — the flight recorder: anomaly-triggered (stall,
+//!   slow tick, panic, manual `GET /debug/dump`) incident bundles of
+//!   metrics + trace + event tail + watchdog table, rate-limited and
+//!   retention-capped (`bps serve --dump-dir`).
+//!
+//! All of it is disabled-by-default and gates on one atomic load (a
+//! heartbeat is one relaxed store), so the sync stepping path with obs
+//! compiled in is bitwise-identical to a build without it.
 
 pub mod event;
 pub mod http;
+pub mod recorder;
 pub mod registry;
 pub mod trace;
+pub mod watchdog;
 
 pub use event::{EventLog, DEFAULT_EVENT_LOG_BYTES};
-pub use http::MetricsServer;
+pub use http::{HttpHooks, MetricsServer};
+pub use recorder::{Recorder, Trigger, MIN_AUTO_INTERVAL, RETAIN_BUNDLES};
+pub use watchdog::{HealthReport, Heartbeat, Level, Watchdog};
 pub use registry::{
     Counter, Gauge, Histogram, HistogramSnapshot, MetricSnapshot, MetricValue, Registry, Snapshot,
     HIST_BUCKETS, SNAPSHOT_VERSION,

@@ -1,0 +1,331 @@
+//! Flight recorder: anomaly-triggered incident bundles (DESIGN.md §0.11).
+//!
+//! A [`Recorder`] owns a bundle directory (`--dump-dir`). When
+//! [`trigger`](Recorder::trigger)ed — by a watchdog stall, a slow-tick
+//! anomaly, a panic hook, or a manual `GET /debug/dump` / `bps stats
+//! ADDR --dump` — it freezes the evidence that already exists in memory
+//! into `incident-NNNN-<reason>/`:
+//!
+//! | file               | contents                                      |
+//! |--------------------|-----------------------------------------------|
+//! | `manifest.json`    | reason, seq, snapshot version, build version  |
+//! | `metrics.prom`     | full registry snapshot (text exposition)      |
+//! | `trace.json`       | Chrome-trace JSON of the span ring            |
+//! | `events.tail.jsonl`| last 64 KiB of the event log (armed only)     |
+//! | *extra artifacts*  | e.g. `watchdog.json`, `sessions.json`         |
+//!
+//! Automatic triggers are rate-limited ([`MIN_AUTO_INTERVAL`]) so a
+//! stall storm cannot fill the disk, and the directory keeps only the
+//! newest [`RETAIN_BUNDLES`] incidents. Manual triggers bypass the rate
+//! limit (a human asked) but still count against retention.
+//!
+//! Everything here runs off the hot path: a trigger costs a registry
+//! snapshot plus a few file writes, and nothing in this module is
+//! touched by the stepping loop, preserving the disarmed-is-bitwise-
+//! identical invariant.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::util::json::Json;
+
+use super::event::EventLog;
+use super::registry::{Counter, Registry, SNAPSHOT_VERSION};
+use super::trace::TraceSink;
+
+/// Minimum spacing between *automatic* bundles (stall / slow-tick /
+/// panic). Closer triggers are counted in `obs.recorder.suppressed`.
+pub const MIN_AUTO_INTERVAL: Duration = Duration::from_secs(5);
+
+/// Newest incident directories kept; older ones are deleted after each
+/// new bundle lands.
+pub const RETAIN_BUNDLES: usize = 8;
+
+/// How much of the event log's tail each bundle carries.
+pub const EVENT_TAIL_BYTES: u64 = 64 << 10;
+
+/// Why a bundle was written. The slug becomes part of the directory
+/// name; the detail lands in `manifest.json`.
+#[derive(Clone, Debug)]
+pub enum Trigger {
+    /// `GET /debug/dump` or `bps stats ADDR --dump`.
+    Manual,
+    /// The watchdog committed a role to Stalled.
+    Stall(String),
+    /// A shard tick ran anomalously long versus its trailing window.
+    SlowTick { tick_us: u64, p95_us: u64 },
+    /// A thread panicked (`bps serve` installs the hook).
+    Panic(String),
+}
+
+impl Trigger {
+    fn slug(&self) -> &'static str {
+        match self {
+            Trigger::Manual => "manual",
+            Trigger::Stall(_) => "stall",
+            Trigger::SlowTick { .. } => "slowtick",
+            Trigger::Panic(_) => "panic",
+        }
+    }
+
+    fn detail(&self) -> String {
+        match self {
+            Trigger::Manual => String::new(),
+            Trigger::Stall(role) => format!("stalled role: {role}"),
+            Trigger::SlowTick { tick_us, p95_us } => {
+                format!("tick {tick_us}us vs trailing p95 {p95_us}us")
+            }
+            Trigger::Panic(msg) => msg.clone(),
+        }
+    }
+
+    fn is_auto(&self) -> bool {
+        !matches!(self, Trigger::Manual)
+    }
+}
+
+type Provider = Box<dyn Fn() -> String + Send + Sync>;
+
+/// The flight recorder. See module docs.
+pub struct Recorder {
+    dir: PathBuf,
+    registry: Arc<Registry>,
+    trace: Arc<TraceSink>,
+    events: Arc<EventLog>,
+    /// Extra bundle artifacts: (file name, producer). Producers must not
+    /// hold strong references back to anything that owns the recorder.
+    providers: Mutex<Vec<(&'static str, Provider)>>,
+    seq: AtomicU64,
+    last_auto: Mutex<Option<Instant>>,
+    bundles: Counter,
+    suppressed: Counter,
+}
+
+impl Recorder {
+    /// Create (or reuse) the bundle directory `dir`.
+    pub fn new(
+        dir: &Path,
+        registry: Arc<Registry>,
+        trace: Arc<TraceSink>,
+        events: Arc<EventLog>,
+    ) -> io::Result<Recorder> {
+        fs::create_dir_all(dir)?;
+        let bundles = registry.counter("obs.recorder.bundles", &[]);
+        let suppressed = registry.counter("obs.recorder.suppressed", &[]);
+        Ok(Recorder {
+            dir: dir.to_path_buf(),
+            registry,
+            trace,
+            events,
+            providers: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            last_auto: Mutex::new(None),
+            bundles,
+            suppressed,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Register an extra per-bundle artifact, e.g. the watchdog state
+    /// table. `name` is the file name inside each bundle directory.
+    pub fn add_artifact(&self, name: &'static str, f: impl Fn() -> String + Send + Sync + 'static) {
+        self.providers.lock().unwrap().push((name, Box::new(f)));
+    }
+
+    /// Write a bundle for `trigger`. Returns `Ok(None)` when an
+    /// automatic trigger was rate-limited, otherwise the bundle path.
+    pub fn trigger(&self, trigger: Trigger) -> io::Result<Option<PathBuf>> {
+        if trigger.is_auto() {
+            let mut last = self.last_auto.lock().unwrap();
+            if let Some(t) = *last {
+                if t.elapsed() < MIN_AUTO_INTERVAL {
+                    self.suppressed.inc();
+                    return Ok(None);
+                }
+            }
+            *last = Some(Instant::now());
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let dir = self.dir.join(format!("incident-{seq:05}-{}", trigger.slug()));
+        fs::create_dir_all(&dir)?;
+
+        fs::write(dir.join("metrics.prom"), self.registry.snapshot().to_prometheus())?;
+        fs::write(dir.join("trace.json"), self.trace.to_chrome_json())?;
+        fs::write(
+            dir.join("events.tail.jsonl"),
+            self.events.tail(EVENT_TAIL_BYTES).unwrap_or_default(),
+        )?;
+        let mut artifacts = vec![
+            "manifest.json".to_string(),
+            "metrics.prom".to_string(),
+            "trace.json".to_string(),
+            "events.tail.jsonl".to_string(),
+        ];
+        {
+            let providers = self.providers.lock().unwrap();
+            for (name, f) in providers.iter() {
+                fs::write(dir.join(name), f())?;
+                artifacts.push((*name).to_string());
+            }
+        }
+
+        let unix_ms = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let mut manifest = BTreeMap::new();
+        manifest.insert(
+            "snapshot_version".to_string(),
+            Json::Num(SNAPSHOT_VERSION as f64),
+        );
+        manifest.insert("seq".to_string(), Json::Num(seq as f64));
+        manifest.insert(
+            "reason".to_string(),
+            Json::Str(trigger.slug().to_string()),
+        );
+        manifest.insert("detail".to_string(), Json::Str(trigger.detail()));
+        manifest.insert(
+            "bps_version".to_string(),
+            Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+        );
+        manifest.insert("unix_ms".to_string(), Json::Num(unix_ms));
+        manifest.insert(
+            "artifacts".to_string(),
+            Json::Arr(artifacts.into_iter().map(Json::Str).collect()),
+        );
+        fs::write(dir.join("manifest.json"), Json::Obj(manifest).to_string())?;
+
+        self.bundles.inc();
+        self.events.emit(
+            "recorder.bundle",
+            &[
+                ("reason", Json::Str(trigger.slug().to_string())),
+                ("path", Json::Str(dir.display().to_string())),
+            ],
+        );
+        self.prune()?;
+        Ok(Some(dir))
+    }
+
+    /// Delete all but the newest [`RETAIN_BUNDLES`] incident dirs. Seq
+    /// numbers are zero-padded, so lexicographic order is creation order.
+    fn prune(&self) -> io::Result<()> {
+        let mut dirs: Vec<PathBuf> = fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.is_dir()
+                    && p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.starts_with("incident-"))
+            })
+            .collect();
+        dirs.sort();
+        while dirs.len() > RETAIN_BUNDLES {
+            fs::remove_dir_all(dirs.remove(0))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recorder(dir: &Path) -> Recorder {
+        Recorder::new(
+            dir,
+            Registry::new(),
+            Arc::new(TraceSink::new(16)),
+            Arc::new(EventLog::disabled()),
+        )
+        .unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bps-recorder-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn manual_bundle_has_parseable_artifacts() {
+        let dir = tmpdir("manual");
+        let rec = recorder(&dir);
+        rec.add_artifact("extra.json", || "{\"x\":1}".to_string());
+        let path = rec.trigger(Trigger::Manual).unwrap().expect("bundle");
+
+        let manifest =
+            Json::parse(&fs::read_to_string(path.join("manifest.json")).unwrap()).unwrap();
+        assert_eq!(
+            manifest.get("reason").and_then(|j| j.as_str().ok()),
+            Some("manual")
+        );
+        assert_eq!(
+            manifest.get("snapshot_version").and_then(|j| j.as_f64().ok()),
+            Some(SNAPSHOT_VERSION as f64)
+        );
+        let metrics = fs::read_to_string(path.join("metrics.prom")).unwrap();
+        assert!(metrics.starts_with("# bps snapshot v"));
+        let trace = Json::parse(&fs::read_to_string(path.join("trace.json")).unwrap()).unwrap();
+        assert!(trace.get("traceEvents").is_some());
+        // disabled event log → empty (but present) tail
+        assert_eq!(
+            fs::read_to_string(path.join("events.tail.jsonl")).unwrap(),
+            ""
+        );
+        let extra = Json::parse(&fs::read_to_string(path.join("extra.json")).unwrap()).unwrap();
+        assert_eq!(extra.get("x").and_then(|j| j.as_f64().ok()), Some(1.0));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_triggers_are_rate_limited_but_manual_is_not() {
+        let dir = tmpdir("rate");
+        let rec = recorder(&dir);
+        let first = rec.trigger(Trigger::Stall("role".to_string())).unwrap();
+        assert!(first.is_some());
+        let second = rec
+            .trigger(Trigger::SlowTick {
+                tick_us: 9000,
+                p95_us: 1000,
+            })
+            .unwrap();
+        assert!(second.is_none(), "back-to-back auto trigger must be dropped");
+        assert_eq!(rec.suppressed.get(), 1);
+        let manual = rec.trigger(Trigger::Manual).unwrap();
+        assert!(manual.is_some(), "manual bypasses the rate limit");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_keeps_only_newest_bundles() {
+        let dir = tmpdir("retain");
+        let rec = recorder(&dir);
+        for _ in 0..(RETAIN_BUNDLES + 4) {
+            rec.trigger(Trigger::Manual).unwrap().expect("bundle");
+        }
+        let n = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .is_some_and(|n| n.starts_with("incident-"))
+            })
+            .count();
+        assert_eq!(n, RETAIN_BUNDLES);
+        // the survivors are the newest ones
+        let last = dir.join(format!("incident-{:05}-manual", RETAIN_BUNDLES + 4));
+        assert!(last.is_dir());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

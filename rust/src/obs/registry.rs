@@ -29,6 +29,7 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Version stamped into every [`Snapshot`] (and the `STATS` wire reply).
 /// Bump when metric semantics change incompatibly.
@@ -218,9 +219,20 @@ enum Cell {
 type Key = (String, Vec<(String, String)>);
 
 /// The process-wide (or server-wide) series table. See module docs.
-#[derive(Default)]
 pub struct Registry {
     cells: Mutex<BTreeMap<Key, Cell>>,
+    /// Registry creation time, exported as `process_uptime_seconds` so
+    /// scrapes and incident bundles are self-dating.
+    epoch: Instant,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry {
+            cells: Mutex::new(BTreeMap::new()),
+            epoch: Instant::now(),
+        }
+    }
 }
 
 fn key(name: &str, labels: &[(&str, &str)]) -> Key {
@@ -292,7 +304,16 @@ impl Registry {
 
     /// Freeze every series. Holds the registry mutex only while cloning
     /// handles; the atomic loads happen outside it.
+    ///
+    /// Every snapshot is self-identifying: `bps_build_info{version=...}`
+    /// names the build and `process_uptime_seconds` (whole seconds, so
+    /// the page is stable across back-to-back scrapes within a second)
+    /// dates it.
     pub fn snapshot(&self) -> Snapshot {
+        self.gauge("bps_build_info", &[("version", env!("CARGO_PKG_VERSION"))])
+            .set(1.0);
+        self.gauge("process.uptime_seconds", &[])
+            .set(self.epoch.elapsed().as_secs() as f64);
         let frozen: Vec<(Key, Cell)> = {
             let cells = self.cells.lock().unwrap();
             cells.iter().map(|(k, c)| (k.clone(), c.clone())).collect()
@@ -566,13 +587,42 @@ mod tests {
         assert_eq!(
             names,
             vec![
-                "a.first[(\"shard\", \"0\")]",
-                "a.first[(\"shard\", \"1\")]",
-                "z.last[]"
+                "a.first[(\"shard\", \"0\")]".to_string(),
+                "a.first[(\"shard\", \"1\")]".to_string(),
+                format!(
+                    "bps_build_info[(\"version\", \"{}\")]",
+                    env!("CARGO_PKG_VERSION")
+                ),
+                "process.uptime_seconds[]".to_string(),
+                "z.last[]".to_string(),
             ]
         );
-        // twice in a row: identical text
-        assert_eq!(r.snapshot().to_prometheus(), r.snapshot().to_prometheus());
+        // twice in a row: identical text modulo the uptime line (which
+        // may legitimately tick across a second boundary)
+        let strip = |s: String| -> String {
+            s.lines()
+                .filter(|l| !l.starts_with("process_uptime_seconds"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            strip(r.snapshot().to_prometheus()),
+            strip(r.snapshot().to_prometheus())
+        );
+    }
+
+    #[test]
+    fn snapshot_is_self_identifying() {
+        let r = Registry::new();
+        let text = r.snapshot().to_prometheus();
+        assert!(
+            text.contains(&format!(
+                "bps_build_info{{version=\"{}\"}} 1",
+                env!("CARGO_PKG_VERSION")
+            )),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE process_uptime_seconds gauge"), "{text}");
     }
 
     #[test]

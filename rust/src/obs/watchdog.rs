@@ -1,0 +1,605 @@
+//! Health watchdog: liveness classification for every long-lived thread
+//! (DESIGN.md §0.11).
+//!
+//! Each driver/pump thread registers a [`Heartbeat`] and calls
+//! [`Heartbeat::beat`] once per loop iteration — a relaxed atomic store,
+//! nothing else. Threads that legitimately park for unbounded time (a
+//! `Wait`-policy shard driver between submits, a wire reader on a quiet
+//! peer) call [`Heartbeat::idle`] *before* blocking, so silence while
+//! parked classifies Healthy instead of Stalled; the next `beat` clears
+//! the marker.
+//!
+//! A background thread ([`Watchdog::start`]) rescans the table every
+//! [`SCAN_INTERVAL`] and classifies each instance Healthy / Degraded /
+//! Stalled against its per-role thresholds. Transitions are debounced
+//! (two consecutive scans must agree) and then acted on:
+//!
+//! - `obs.watchdog.state{role}` gauges (0 = healthy, 1 = degraded,
+//!   2 = stalled) and the `obs.watchdog.stalls` counter on the registry;
+//! - `watchdog.stall` / `watchdog.recover` events on the event log;
+//! - an incident bundle via the flight [`Recorder`] when one is armed;
+//! - [`Watchdog::report`], which backs `GET /healthz`: a stalled role
+//!   flips the endpoint to 503 with a JSON body naming the role, so a
+//!   router can stop placing leases on a sick server.
+//!
+//! Heartbeats deregister themselves: when every clone outside the
+//! watchdog is dropped (thread exited, cleanly or by panic-unwind while
+//! holding its only clone), the next scan reaps the entry. A thread that
+//! dies while its heartbeat is still reachable (e.g. a shard driver
+//! whose handle lives in `ShardShared`) keeps its entry and goes Stalled
+//! — a dead driver *is* a sick server.
+//!
+//! Test hooks: [`Watchdog::inject_stall`] forces a role to report
+//! Stalled (also reachable via the `BPS_FAULT_STALL` environment
+//! variable in `bps serve`), and [`Watchdog::scan_once`] runs one scan
+//! at an explicit instant for sleep-free unit tests.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+use super::event::EventLog;
+use super::recorder::{Recorder, Trigger};
+use super::registry::{Counter, Registry};
+
+/// Background rescan cadence. Detection latency is roughly
+/// `threshold + 2 * SCAN_INTERVAL` (two scans of debounce).
+pub const SCAN_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Consecutive scans that must agree before a level change commits, so
+/// one delayed scan cannot flap `/healthz`.
+const DEBOUNCE_SCANS: u32 = 2;
+
+/// Health classification of one heartbeat (or the worst of a role).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Healthy,
+    Degraded,
+    Stalled,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Healthy => "healthy",
+            Level::Degraded => "degraded",
+            Level::Stalled => "stalled",
+        }
+    }
+
+    fn gauge_value(self) -> f64 {
+        self as i32 as f64
+    }
+}
+
+struct Cell {
+    role: &'static str,
+    degraded: Duration,
+    stalled: Duration,
+    ticks: AtomicU64,
+    idle: AtomicBool,
+}
+
+/// A per-thread liveness handle. Cheap to clone; clones share the cell.
+/// Constructible before any watchdog exists (the procgen generator
+/// spawns before the `SimServer` does) and adopted later via
+/// [`Watchdog::adopt`].
+#[derive(Clone)]
+pub struct Heartbeat {
+    cell: Arc<Cell>,
+}
+
+impl Heartbeat {
+    pub fn new(role: &'static str, degraded: Duration, stalled: Duration) -> Heartbeat {
+        Heartbeat {
+            cell: Arc::new(Cell {
+                role,
+                degraded,
+                stalled: stalled.max(degraded),
+                ticks: AtomicU64::new(0),
+                idle: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Record one loop iteration of progress (and clear any idle
+    /// marker). One relaxed store + one relaxed add — hot-path safe.
+    pub fn beat(&self) {
+        self.cell.idle.store(false, Ordering::Relaxed);
+        self.cell.ticks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark the thread as deliberately parked (about to block for
+    /// unbounded time on a condvar / channel / socket read). Idle
+    /// instances classify Healthy until the next [`beat`](Self::beat).
+    pub fn idle(&self) {
+        self.cell.idle.store(true, Ordering::Relaxed);
+    }
+
+    pub fn role(&self) -> &'static str {
+        self.cell.role
+    }
+}
+
+struct Tracked {
+    cell: Arc<Cell>,
+    last_ticks: u64,
+    last_progress: Instant,
+    committed: Level,
+    pending: Level,
+    pending_scans: u32,
+}
+
+struct Inner {
+    registry: Arc<Registry>,
+    events: Arc<EventLog>,
+    tracked: Mutex<Vec<Tracked>>,
+    /// Roles forced to Stalled (tests / `BPS_FAULT_STALL`); the bool
+    /// records whether the stall event has been announced.
+    injected: Mutex<BTreeMap<String, bool>>,
+    /// Every role ever tracked, so its state gauge keeps rendering
+    /// (Healthy) after all instances retire.
+    roles: Mutex<BTreeSet<&'static str>>,
+    recorder: Mutex<Option<Arc<Recorder>>>,
+    stalls: Counter,
+    stop: AtomicBool,
+}
+
+/// What `/healthz` answers: stalled/degraded role names, deduplicated.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    pub stalled: Vec<String>,
+    pub degraded: Vec<String>,
+}
+
+impl HealthReport {
+    pub fn healthy(&self) -> bool {
+        self.stalled.is_empty()
+    }
+
+    /// JSON body for the health endpoint, e.g.
+    /// `{"status":"stalled","stalled":["shard-driver"],"degraded":[]}`.
+    pub fn to_json(&self) -> String {
+        let status = if !self.stalled.is_empty() {
+            "stalled"
+        } else if !self.degraded.is_empty() {
+            "degraded"
+        } else {
+            "ok"
+        };
+        let arr = |v: &[String]| Json::Arr(v.iter().map(|r| Json::Str(r.clone())).collect());
+        let mut obj = BTreeMap::new();
+        obj.insert("status".to_string(), Json::Str(status.to_string()));
+        obj.insert("stalled".to_string(), arr(&self.stalled));
+        obj.insert("degraded".to_string(), arr(&self.degraded));
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// The watchdog itself. See module docs.
+pub struct Watchdog {
+    inner: Arc<Inner>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Watchdog {
+    /// Build without a background thread (unit tests drive
+    /// [`scan_once`](Self::scan_once) explicitly).
+    pub fn unstarted(registry: Arc<Registry>, events: Arc<EventLog>) -> Watchdog {
+        let stalls = registry.counter("obs.watchdog.stalls", &[]);
+        Watchdog {
+            inner: Arc::new(Inner {
+                registry,
+                events,
+                tracked: Mutex::new(Vec::new()),
+                injected: Mutex::new(BTreeMap::new()),
+                roles: Mutex::new(BTreeSet::new()),
+                recorder: Mutex::new(None),
+                stalls,
+                stop: AtomicBool::new(false),
+            }),
+            thread: Mutex::new(None),
+        }
+    }
+
+    /// Build and spawn the background scan thread (stopped by
+    /// [`stop`](Self::stop) or `Drop`).
+    pub fn start(registry: Arc<Registry>, events: Arc<EventLog>) -> Arc<Watchdog> {
+        let wd = Watchdog::unstarted(registry, events);
+        let inner = Arc::clone(&wd.inner);
+        let handle = std::thread::Builder::new()
+            .name("bps-watchdog".into())
+            .spawn(move || {
+                while !inner.stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(SCAN_INTERVAL);
+                    scan(&inner, Instant::now());
+                }
+            })
+            .expect("spawn watchdog thread");
+        *wd.thread.lock().unwrap() = Some(handle);
+        Arc::new(wd)
+    }
+
+    /// Register a fresh heartbeat for `role` with the given thresholds.
+    pub fn register(
+        &self,
+        role: &'static str,
+        degraded: Duration,
+        stalled: Duration,
+    ) -> Heartbeat {
+        let hb = Heartbeat::new(role, degraded, stalled);
+        self.adopt(&hb);
+        hb
+    }
+
+    /// Track an externally-created heartbeat (e.g. the scenario
+    /// generator's, created before the server existed).
+    pub fn adopt(&self, hb: &Heartbeat) {
+        let mut t = self.inner.tracked.lock().unwrap();
+        t.push(Tracked {
+            last_ticks: hb.cell.ticks.load(Ordering::Relaxed),
+            last_progress: Instant::now(),
+            committed: Level::Healthy,
+            pending: Level::Healthy,
+            pending_scans: 0,
+            cell: Arc::clone(&hb.cell),
+        });
+    }
+
+    /// Wire the flight recorder: committed stalls trigger an incident
+    /// bundle (rate-limited by the recorder itself).
+    pub fn set_recorder(&self, rec: Arc<Recorder>) {
+        *self.inner.recorder.lock().unwrap() = Some(rec);
+    }
+
+    /// Force `role` to report Stalled until [`clear_stall`]
+    /// (Self::clear_stall)] — the test/CI fault-injection hook. Takes
+    /// effect on `report()` immediately and on gauges/events/bundles at
+    /// the next scan.
+    pub fn inject_stall(&self, role: &str) {
+        self.inner
+            .injected
+            .lock()
+            .unwrap()
+            .entry(role.to_string())
+            .or_insert(false);
+    }
+
+    /// Lift an injected stall; emits `watchdog.recover` if the stall had
+    /// been announced.
+    pub fn clear_stall(&self, role: &str) {
+        let announced = self.inner.injected.lock().unwrap().remove(role);
+        if announced == Some(true) {
+            self.inner.events.emit(
+                "watchdog.recover",
+                &[
+                    ("role", Json::Str(role.to_string())),
+                    ("injected", Json::Bool(true)),
+                ],
+            );
+        }
+    }
+
+    /// Current health: worst committed level per role, plus injected
+    /// stalls. Reads committed state only — no scan, no blocking beyond
+    /// two short mutexes — so a health probe stays cheap.
+    pub fn report(&self) -> HealthReport {
+        let mut stalled: BTreeSet<String> = BTreeSet::new();
+        let mut degraded: BTreeSet<String> = BTreeSet::new();
+        {
+            let t = self.inner.tracked.lock().unwrap();
+            for e in t.iter() {
+                match e.committed {
+                    Level::Stalled => {
+                        stalled.insert(e.cell.role.to_string());
+                    }
+                    Level::Degraded => {
+                        degraded.insert(e.cell.role.to_string());
+                    }
+                    Level::Healthy => {}
+                }
+            }
+        }
+        for role in self.inner.injected.lock().unwrap().keys() {
+            stalled.insert(role.clone());
+        }
+        let degraded = degraded.difference(&stalled).cloned().collect();
+        HealthReport {
+            stalled: stalled.into_iter().collect(),
+            degraded,
+        }
+    }
+
+    /// The full per-instance state table as JSON — one of the flight
+    /// recorder's bundle artifacts.
+    pub fn table_json(&self) -> String {
+        let now = Instant::now();
+        let rows: Vec<Json> = {
+            let t = self.inner.tracked.lock().unwrap();
+            t.iter()
+                .map(|e| {
+                    let silent = now.saturating_duration_since(e.last_progress);
+                    let mut row = BTreeMap::new();
+                    row.insert("role".to_string(), Json::Str(e.cell.role.to_string()));
+                    row.insert(
+                        "level".to_string(),
+                        Json::Str(e.committed.name().to_string()),
+                    );
+                    row.insert(
+                        "silent_ms".to_string(),
+                        Json::Num(silent.as_millis() as f64),
+                    );
+                    row.insert(
+                        "idle".to_string(),
+                        Json::Bool(e.cell.idle.load(Ordering::Relaxed)),
+                    );
+                    Json::Obj(row)
+                })
+                .collect()
+        };
+        let injected: Vec<Json> = self
+            .inner
+            .injected
+            .lock()
+            .unwrap()
+            .keys()
+            .map(|r| Json::Str(r.clone()))
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("roles".to_string(), Json::Arr(rows));
+        obj.insert("injected".to_string(), Json::Arr(injected));
+        Json::Obj(obj).to_string()
+    }
+
+    /// Run exactly one scan at `now` (unit-test hook; the background
+    /// thread calls the same code with `Instant::now()`).
+    pub fn scan_once(&self, now: Instant) {
+        scan(&self.inner, now);
+    }
+
+    /// Stop and join the background thread (idempotent).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn scan(inner: &Inner, now: Instant) {
+    // (role, from, to, silent) per committed transition this scan.
+    let mut transitions: Vec<(&'static str, Level, Level, Duration)> = Vec::new();
+    let mut worst: BTreeMap<String, Level> = BTreeMap::new();
+    {
+        let mut t = inner.tracked.lock().unwrap();
+        // Reap heartbeats whose every outside clone is gone: the thread
+        // exited (cleanly or by unwinding) and can never beat again.
+        t.retain(|e| Arc::strong_count(&e.cell) > 1);
+        for e in t.iter_mut() {
+            let ticks = e.cell.ticks.load(Ordering::Relaxed);
+            if ticks != e.last_ticks || e.cell.idle.load(Ordering::Relaxed) {
+                e.last_ticks = ticks;
+                e.last_progress = now;
+            }
+            let silent = now.saturating_duration_since(e.last_progress);
+            let raw = if silent >= e.cell.stalled {
+                Level::Stalled
+            } else if silent >= e.cell.degraded {
+                Level::Degraded
+            } else {
+                Level::Healthy
+            };
+            if raw == e.committed {
+                e.pending = raw;
+                e.pending_scans = 0;
+            } else if raw == e.pending {
+                e.pending_scans += 1;
+                if e.pending_scans >= DEBOUNCE_SCANS {
+                    transitions.push((e.cell.role, e.committed, raw, silent));
+                    e.committed = raw;
+                    e.pending_scans = 0;
+                }
+            } else {
+                e.pending = raw;
+                e.pending_scans = 1;
+            }
+            let w = worst
+                .entry(e.cell.role.to_string())
+                .or_insert(Level::Healthy);
+            if e.committed > *w {
+                *w = e.committed;
+            }
+        }
+    }
+    {
+        // Roles whose instances all retired keep a Healthy gauge, so a
+        // scrape's series set stays stable across connection churn.
+        let mut roles = inner.roles.lock().unwrap();
+        let t = inner.tracked.lock().unwrap();
+        for e in t.iter() {
+            roles.insert(e.cell.role);
+        }
+        drop(t);
+        for role in roles.iter() {
+            worst.entry((*role).to_string()).or_insert(Level::Healthy);
+        }
+    }
+    // Injected stalls override their role and announce once.
+    let mut injected_now: Vec<String> = Vec::new();
+    {
+        let mut inj = inner.injected.lock().unwrap();
+        for (role, announced) in inj.iter_mut() {
+            worst.insert(role.clone(), Level::Stalled);
+            if !*announced {
+                *announced = true;
+                injected_now.push(role.clone());
+            }
+        }
+    }
+    for (role, level) in &worst {
+        inner
+            .registry
+            .gauge("obs.watchdog.state", &[("role", role)])
+            .set(level.gauge_value());
+    }
+    for (role, from, to, silent) in transitions {
+        if to == Level::Stalled {
+            inner.stalls.inc();
+            inner.events.emit(
+                "watchdog.stall",
+                &[
+                    ("role", Json::Str(role.to_string())),
+                    ("silent_ms", Json::Num(silent.as_millis() as f64)),
+                ],
+            );
+            trigger_recorder(inner, role);
+        } else if from == Level::Stalled {
+            inner.events.emit(
+                "watchdog.recover",
+                &[
+                    ("role", Json::Str(role.to_string())),
+                    ("level", Json::Str(to.name().to_string())),
+                ],
+            );
+        }
+    }
+    for role in injected_now {
+        inner.stalls.inc();
+        inner.events.emit(
+            "watchdog.stall",
+            &[
+                ("role", Json::Str(role.clone())),
+                ("injected", Json::Bool(true)),
+            ],
+        );
+        trigger_recorder(inner, &role);
+    }
+}
+
+fn trigger_recorder(inner: &Inner, role: &str) {
+    let rec = inner.recorder.lock().unwrap().clone();
+    if let Some(rec) = rec {
+        let _ = rec.trigger(Trigger::Stall(role.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wd() -> Watchdog {
+        Watchdog::unstarted(Registry::new(), Arc::new(EventLog::disabled()))
+    }
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn classifies_against_thresholds_with_debounce() {
+        let w = wd();
+        let hb = w.register("role-a", 50 * MS, 200 * MS);
+        let t0 = Instant::now();
+        w.scan_once(t0);
+        assert!(w.report().healthy());
+
+        // Past the stall threshold: one scan is pending, two commit.
+        w.scan_once(t0 + 300 * MS);
+        assert!(w.report().healthy(), "single scan must not commit");
+        w.scan_once(t0 + 310 * MS);
+        let r = w.report();
+        assert!(!r.healthy());
+        assert_eq!(r.stalled, vec!["role-a".to_string()]);
+        assert!(r.to_json().contains("\"stalled\""));
+        drop(hb);
+    }
+
+    #[test]
+    fn degraded_band_sits_between_thresholds() {
+        let w = wd();
+        let _hb = w.register("role-b", 50 * MS, 200 * MS);
+        let t0 = Instant::now();
+        w.scan_once(t0);
+        w.scan_once(t0 + 100 * MS);
+        w.scan_once(t0 + 110 * MS);
+        let r = w.report();
+        assert!(r.healthy(), "degraded still answers healthy");
+        assert_eq!(r.degraded, vec!["role-b".to_string()]);
+    }
+
+    #[test]
+    fn beat_recovers_a_stalled_role() {
+        let registry = Registry::new();
+        let w = Watchdog::unstarted(Arc::clone(&registry), Arc::new(EventLog::disabled()));
+        let hb = w.register("role-c", 50 * MS, 200 * MS);
+        let t0 = Instant::now();
+        w.scan_once(t0);
+        w.scan_once(t0 + 300 * MS);
+        w.scan_once(t0 + 310 * MS);
+        assert!(!w.report().healthy());
+        assert_eq!(
+            registry.snapshot().counter("obs.watchdog.stalls", &[]),
+            Some(1)
+        );
+        assert_eq!(
+            registry
+                .snapshot()
+                .gauge("obs.watchdog.state", &[("role", "role-c")]),
+            Some(2.0)
+        );
+
+        hb.beat();
+        w.scan_once(t0 + 320 * MS);
+        w.scan_once(t0 + 330 * MS);
+        assert!(w.report().healthy());
+        assert_eq!(
+            registry
+                .snapshot()
+                .gauge("obs.watchdog.state", &[("role", "role-c")]),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn idle_instances_stay_healthy_forever() {
+        let w = wd();
+        let hb = w.register("role-d", 50 * MS, 200 * MS);
+        hb.idle();
+        let t0 = Instant::now();
+        w.scan_once(t0);
+        w.scan_once(t0 + 10_000 * MS);
+        w.scan_once(t0 + 20_000 * MS);
+        assert!(w.report().healthy());
+    }
+
+    #[test]
+    fn dropped_heartbeats_are_reaped() {
+        let w = wd();
+        let hb = w.register("role-e", 50 * MS, 200 * MS);
+        drop(hb);
+        let t0 = Instant::now();
+        w.scan_once(t0 + 10_000 * MS);
+        w.scan_once(t0 + 10_010 * MS);
+        assert!(w.report().healthy(), "a retired thread is not a stall");
+    }
+
+    #[test]
+    fn injected_stall_flips_report_and_clears() {
+        let w = wd();
+        w.inject_stall("wire-reader");
+        let r = w.report();
+        assert!(!r.healthy());
+        assert_eq!(r.stalled, vec!["wire-reader".to_string()]);
+        assert!(w.table_json().contains("wire-reader"));
+        w.clear_stall("wire-reader");
+        assert!(w.report().healthy());
+    }
+}

@@ -14,6 +14,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::obs::Heartbeat;
 use crate::scenario::ScenarioStream;
 use crate::scene::{Dataset, SceneAsset};
 use crate::sim::BatchSim;
@@ -174,6 +175,15 @@ impl SceneRotation {
         match &self.feed {
             Feed::Scenario(stream) => stream.stalls(),
             Feed::Dataset { .. } => 0,
+        }
+    }
+
+    /// The generator thread's heartbeat for a scenario feed (`None` for
+    /// dataset feeds), so a serving stack can adopt it into its watchdog.
+    pub(crate) fn procgen_heartbeat(&self) -> Option<Heartbeat> {
+        match &self.feed {
+            Feed::Scenario(stream) => Some(stream.heartbeat()),
+            Feed::Dataset { .. } => None,
         }
     }
 

@@ -20,7 +20,9 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::obs::Heartbeat;
 use crate::scene::procgen::generate;
 use crate::scene::{Complexity, SceneAsset};
 use crate::util::pool::WorkerPool;
@@ -31,6 +33,13 @@ use super::spec::ScenarioSpec;
 /// Generator-thread batching cap: at most this many queued requests are
 /// drained into one `parallel_for` round.
 const GEN_BATCH: usize = 8;
+
+// Watchdog thresholds for the generator thread. Scene synthesis is
+// seconds-scale at the largest curriculum stages, so the bounds are
+// generous; the thread marks itself idle while parked on an empty
+// request queue.
+const GEN_DEGRADED: Duration = Duration::from_secs(10);
+const GEN_STALLED: Duration = Duration::from_secs(60);
 
 /// One scene-synthesis request (fully determined consumer-side).
 struct GenRequest {
@@ -97,6 +106,10 @@ pub struct ScenarioStream {
     stalls: u64,
     delivered: u64,
     thread: Option<JoinHandle<()>>,
+    /// The generator thread's liveness heartbeat. Standalone until a
+    /// serving stack adopts it into its watchdog
+    /// ([`heartbeat`](ScenarioStream::heartbeat)).
+    heartbeat: Heartbeat,
 }
 
 impl ScenarioStream {
@@ -112,9 +125,11 @@ impl ScenarioStream {
     ) -> ScenarioStream {
         let (req_tx, req_rx) = channel::<GenRequest>();
         let (ready_tx, ready_rx) = channel();
+        let heartbeat = Heartbeat::new("procgen", GEN_DEGRADED, GEN_STALLED);
+        let gen_hb = heartbeat.clone();
         let thread = std::thread::Builder::new()
             .name("scenario-procgen".into())
-            .spawn(move || gen_loop(pool, req_rx, ready_tx))
+            .spawn(move || gen_loop(pool, req_rx, ready_tx, gen_hb))
             .expect("spawn scenario procgen thread");
         let mut stream = ScenarioStream {
             spec,
@@ -130,6 +145,7 @@ impl ScenarioStream {
             stalls: 0,
             delivered: 0,
             thread: Some(thread),
+            heartbeat,
         };
         stream.top_up();
         stream
@@ -159,6 +175,12 @@ impl ScenarioStream {
     /// Scenes handed to the consumer so far.
     pub fn delivered(&self) -> u64 {
         self.delivered
+    }
+
+    /// A clone of the generator thread's heartbeat, for adoption into a
+    /// serving stack's watchdog (`Watchdog::adopt`).
+    pub fn heartbeat(&self) -> Heartbeat {
+        self.heartbeat.clone()
     }
 
     /// Ready scenes currently queued (drains the delivery channel first).
@@ -297,8 +319,16 @@ fn gen_loop(
     pool: Arc<WorkerPool>,
     req_rx: Receiver<GenRequest>,
     ready_tx: Sender<Arc<SceneAsset>>,
+    hb: Heartbeat,
 ) {
-    while let Ok(first) = req_rx.recv() {
+    loop {
+        // Parked on an empty request queue: deliberate, possibly forever
+        // (a fully-warm prefetch queue issues nothing until consumed).
+        hb.idle();
+        let Ok(first) = req_rx.recv() else {
+            return;
+        };
+        hb.beat();
         let mut batch = vec![first];
         while batch.len() < GEN_BATCH {
             match req_rx.try_recv() {

@@ -64,7 +64,9 @@ pub mod tenant;
 pub mod wire;
 
 pub use coalescer::{FillAction, StragglerPolicy};
-pub use server::{SceneSource, ShardSpec, ShardStats, SimServer, TenantStats, TICK};
+pub use server::{
+    SceneSource, SessionLatency, ShardSpec, ShardStats, SimServer, TenantStats, TICK,
+};
 pub use session::{Session, SessionView, Ticket};
 pub use tenant::{ActionMode, PolicyVault, TenantControl, TenantSession, TrajStep};
 pub use wire::{

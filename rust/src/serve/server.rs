@@ -16,16 +16,21 @@
 //! `StepResult` buffers through `Arc::try_unwrap`, so the steady-state
 //! serving loop allocates nothing.
 
+use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::env::{EnvBatch, EnvBatchConfig, StepView};
 use crate::metrics::Window;
-use crate::obs::{Counter, EventLog, Histogram, Registry, TraceSink, DEFAULT_TRACE_SPANS};
+use crate::obs::{
+    Counter, EventLog, Heartbeat, Histogram, Recorder, Registry, TraceSink, Trigger, Watchdog,
+    DEFAULT_TRACE_SPANS,
+};
 use crate::render::SceneRotation;
 use crate::scene::SceneAsset;
 use crate::sim::Task;
@@ -45,6 +50,28 @@ pub const TICK: Duration = Duration::from_millis(1);
 /// How many latency samples the per-shard window keeps for p50/p95.
 const LATENCY_WINDOW: usize = 4096;
 
+/// Watchdog thresholds for the shard and tenant driver threads: they
+/// beat once per published tick, so seconds of silence means the pipe
+/// is wedged (a hung `env.step`, a deadlocked publish) — not idle
+/// (idle drivers park in `submitted.wait` behind a [`Heartbeat::idle`]
+/// marker and classify Healthy).
+pub(crate) const DRIVER_DEGRADED: Duration = Duration::from_secs(2);
+pub(crate) const DRIVER_STALLED: Duration = Duration::from_secs(10);
+
+/// Slow-tick anomaly gate for the flight recorder: a tick is an
+/// incident when it exceeds `SLOW_TICK_FACTOR` x the trailing p95 over
+/// a `SLOW_TICK_WINDOW`-sample window — once at least
+/// `SLOW_TICK_MIN_SAMPLES` ticks have established a baseline and the
+/// tick clears an absolute floor (tiny shards jitter in the noise).
+const SLOW_TICK_WINDOW: usize = 512;
+const SLOW_TICK_MIN_SAMPLES: usize = 64;
+const SLOW_TICK_FACTOR: f32 = 4.0;
+const SLOW_TICK_FLOOR: Duration = Duration::from_millis(5);
+
+/// Most expensive sessions tracked per shard for latency attribution
+/// (beyond the cap, the cheapest row is evicted).
+pub(crate) const SESS_LAT_CAP: usize = 1024;
+
 /// One completed batch step, published to every session of a shard.
 /// Same SoA shape as [`StepView`], but owned, so tenants on other
 /// threads can hold it while the `EnvBatch` reuses its step buffers.
@@ -58,6 +85,14 @@ pub(crate) struct StepResult {
     pub successes: Vec<bool>,
     pub spl: Vec<f32>,
     pub scores: Vec<f32>,
+    /// Phase timings of the tick that produced this result (latency
+    /// attribution: `Ticket::wait` splits its end-to-end latency into
+    /// these plus a coalesce-wait residual). `publish_us` is the
+    /// *previous* tick's measured publish duration — the current one
+    /// cannot know its own publish cost before being published.
+    pub sim_us: u64,
+    pub render_us: u64,
+    pub publish_us: u64,
 }
 
 impl StepResult {
@@ -93,6 +128,57 @@ pub(crate) struct ShardState {
     pub error: Option<String>,
     /// Shard-wide submit→result latency samples (seconds).
     pub latency: Window,
+    /// Per-session submit→result accumulators (the slowest-sessions
+    /// table). Capped at [`SESS_LAT_CAP`] rows; the cheapest row is
+    /// evicted so long-running offenders survive session churn.
+    pub sess_lat: HashMap<u64, SessLat>,
+}
+
+/// Per-session latency accumulator (one row of the slowest-sessions
+/// table; see [`SimServer::slowest_sessions`]).
+#[derive(Clone, Copy, Default)]
+pub(crate) struct SessLat {
+    pub steps: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+/// One row of the slowest-sessions table: a session's submit→result
+/// latency profile, worst first.
+#[derive(Clone, Debug)]
+pub struct SessionLatency {
+    pub session: u64,
+    pub shard: usize,
+    pub steps: u64,
+    pub mean_us: u64,
+    pub max_us: u64,
+}
+
+/// The `serve.session.phase_us{phase=...}` histograms: one per pipeline
+/// phase of a session step. `sim`/`render`/`publish` come from the
+/// driver's measured durations, `infer` from the tenant driver, and
+/// `coalesce` is the residual of the end-to-end ticket latency — so for
+/// in-process sessions the four non-infer phases sum to the e2e
+/// histogram by construction.
+pub(crate) struct PhaseObs {
+    pub coalesce: Histogram,
+    pub sim: Histogram,
+    pub render: Histogram,
+    pub infer: Histogram,
+    pub publish: Histogram,
+}
+
+impl PhaseObs {
+    fn new(registry: &Registry) -> PhaseObs {
+        let h = |p: &str| registry.histogram("serve.session.phase_us", &[("phase", p)]);
+        PhaseObs {
+            coalesce: h("coalesce"),
+            sim: h("sim"),
+            render: h("render"),
+            infer: h("infer"),
+            publish: h("publish"),
+        }
+    }
 }
 
 /// Registry handles the shard driver feeds every tick (DESIGN.md §0.10
@@ -141,6 +227,16 @@ pub(crate) struct ShardShared {
     pub trace: Arc<TraceSink>,
     /// Server-wide lifecycle event log (disarmed until `--event-log`).
     pub events: Arc<EventLog>,
+    /// The driver thread's liveness beacon (watchdog role
+    /// `shard-driver`). Lives here so a dead driver keeps reporting
+    /// Stalled instead of silently vanishing from `/healthz`.
+    pub heartbeat: Heartbeat,
+    /// Server-wide per-phase latency histograms (shared across shards;
+    /// labeled by phase, not shard, to bound cardinality).
+    pub phase: Arc<PhaseObs>,
+    /// The flight recorder, once armed (`SimServer::arm_recorder`).
+    /// Disarmed servers pay one `OnceLock` load per slow-tick check.
+    pub recorder: Arc<OnceLock<Arc<Recorder>>>,
 }
 
 impl ShardShared {
@@ -159,6 +255,11 @@ impl ShardShared {
 fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Option<u64>) {
     let mut actions: Vec<u8> = Vec::with_capacity(shared.slots);
     let mut spare: Option<StepResult> = None;
+    // Publish cost of the previous tick (stamped into the next result's
+    // `publish_us` — see `StepResult`) and the trailing tick-duration
+    // window backing the slow-tick anomaly trigger.
+    let mut last_publish_us: u64 = 0;
+    let mut ticks = Window::new(SLOW_TICK_WINDOW);
     loop {
         let wait_from = shared.trace.now_us();
         // Phase 1: wait until a full batch can be assembled.
@@ -182,20 +283,28 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
                             st.coal.tick();
                         }
                     }
-                    _ => st = shared.submitted.wait(st).unwrap(),
+                    _ => {
+                        // Deliberate unbounded park: tell the watchdog
+                        // this silence is idleness, not a stall.
+                        shared.heartbeat.idle();
+                        st = shared.submitted.wait(st).unwrap();
+                    }
                 }
             }
             st.coal.assemble(&mut actions);
             st.issued += 1;
             st.issued
         };
+        // Beat *after* assembly so a tick wedged in sim/render/publish
+        // below goes silent and trips the watchdog.
+        shared.heartbeat.beat();
         // Phase 2: step the batch outside the lock (sim + render).
         let step_from = shared.trace.now_us();
-        let result = match env.step(&actions) {
+        let mut r = match env.step(&actions) {
             Ok(view) => {
                 let mut r = spare.take().unwrap_or_default();
                 r.fill(step_no, view);
-                Arc::new(r)
+                r
             }
             Err(e) => {
                 shared.fail(format!("shard step failed: {e:#}"));
@@ -207,6 +316,10 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
         // touches the step data, so serving stays bitwise-identical
         // with obs on or off.
         let (sim_d, render_d) = env.drain_timings();
+        r.sim_us = sim_d.as_micros() as u64;
+        r.render_us = render_d.as_micros() as u64;
+        r.publish_us = last_publish_us;
+        let result = Arc::new(r);
         let rs = env.take_render_stats();
         let o = &shared.obs;
         o.sim_us.add(sim_d.as_micros() as u64);
@@ -241,8 +354,11 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
             }
         }
         // Phase 3: publish, then reclaim the old snapshot's buffers if no
-        // session still holds it.
+        // session still holds it. Publish is timed unconditionally (an
+        // `Instant` pair, not a trace read) because the next tick stamps
+        // it into `StepResult::publish_us` for latency attribution.
         let publish_from = shared.trace.now_us();
+        let publish_started = Instant::now();
         let prev = {
             let mut st = shared.state.lock().unwrap();
             // Counter inc and snapshot swap share the critical section,
@@ -252,15 +368,33 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
             shared.stepped.notify_all();
             prev
         };
+        let publish_d = publish_started.elapsed();
+        last_publish_us = publish_d.as_micros() as u64;
         if shared.trace.enabled() {
-            let dur = Duration::from_micros(shared.trace.now_us().saturating_sub(publish_from));
             shared
                 .trace
-                .span(shared.idx as u32, "driver", "publish", publish_from, dur, step_no);
+                .span(shared.idx as u32, "driver", "publish", publish_from, publish_d, step_no);
         }
         if let Ok(r) = Arc::try_unwrap(prev) {
             spare = Some(r);
         }
+        // Slow-tick anomaly: only evaluated with a flight recorder armed
+        // (the p95 scan costs a sort; disarmed servers pay one `OnceLock`
+        // load and one window push). Checked against the *trailing*
+        // window, before this tick joins it.
+        let tick_d = sim_d + render_d + publish_d;
+        if let Some(rec) = shared.recorder.get() {
+            if ticks.len() >= SLOW_TICK_MIN_SAMPLES && tick_d > SLOW_TICK_FLOOR {
+                let [p95] = ticks.percentiles([0.95]);
+                if tick_d.as_secs_f32() > SLOW_TICK_FACTOR * p95 {
+                    let _ = rec.trigger(Trigger::SlowTick {
+                        tick_us: tick_d.as_micros() as u64,
+                        p95_us: (p95 * 1e6) as u64,
+                    });
+                }
+            }
+        }
+        ticks.push(tick_d.as_secs_f32());
         // Phase 4: scene streaming for served shards (the training loop's
         // once-per-iteration rotate, at the shard's own cadence). A no-op
         // for shards built over a fixed scene assignment.
@@ -273,6 +407,37 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
             }
         }
     }
+}
+
+/// JSON rendering of the slowest-sessions table over `shards` (the
+/// flight recorder's `sessions.json` artifact; same rows as
+/// [`SimServer::slowest_sessions`]).
+pub(crate) fn sessions_json(shards: &[Arc<ShardShared>], n: usize) -> Json {
+    let mut rows: Vec<(u64, usize, SessLat)> = Vec::new();
+    for sh in shards {
+        let st = sh.state.lock().unwrap();
+        for (&session, lat) in &st.sess_lat {
+            rows.push((session, sh.idx, *lat));
+        }
+    }
+    rows.sort_by(|a, b| b.2.max_us.cmp(&a.2.max_us).then(a.0.cmp(&b.0)));
+    rows.truncate(n);
+    let arr = rows
+        .into_iter()
+        .map(|(session, shard, lat)| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("session".to_string(), Json::Num(session as f64));
+            o.insert("shard".to_string(), Json::Num(shard as f64));
+            o.insert("steps".to_string(), Json::Num(lat.steps as f64));
+            let mean = if lat.steps == 0 { 0 } else { lat.sum_us / lat.steps };
+            o.insert("mean_us".to_string(), Json::Num(mean as f64));
+            o.insert("max_us".to_string(), Json::Num(lat.max_us as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("slowest_sessions".to_string(), Json::Arr(arr));
+    Json::Obj(top)
 }
 
 /// Where a shard's environments get their scenes (mirrors the two
@@ -425,6 +590,13 @@ pub struct SimServer {
     registry: Arc<Registry>,
     trace: Arc<TraceSink>,
     events: Arc<EventLog>,
+    /// Liveness monitor over every long-lived thread of this server
+    /// (shard/tenant drivers, wire pumps, procgen). Backs `/healthz`.
+    watchdog: Arc<Watchdog>,
+    /// The flight recorder slot, empty until [`arm_recorder`]
+    /// (`SimServer::arm_recorder`) — shared with every shard so the
+    /// drivers' slow-tick checks see the same armed state.
+    recorder: Arc<OnceLock<Arc<Recorder>>>,
 }
 
 impl SimServer {
@@ -468,6 +640,9 @@ impl SimServer {
         let registry = Registry::new();
         let trace = Arc::new(TraceSink::new(DEFAULT_TRACE_SPANS));
         let events = Arc::new(EventLog::disabled());
+        let watchdog = Watchdog::start(Arc::clone(&registry), Arc::clone(&events));
+        let recorder: Arc<OnceLock<Arc<Recorder>>> = Arc::new(OnceLock::new());
+        let phase = Arc::new(PhaseObs::new(&registry));
         let mut shards = Vec::with_capacity(specs.len());
         let mut drivers = Vec::with_capacity(specs.len());
         for spec in specs {
@@ -529,6 +704,13 @@ impl SimServer {
                 chunks_total: registry.counter("render.chunks_total", l),
                 latency_us: registry.histogram("serve.shard.latency_us", l),
             };
+            // Liveness: the driver thread beats per tick; a scenario-fed
+            // shard also carries its procgen generator's heartbeat
+            // (created with the stream, adopted here).
+            let heartbeat = watchdog.register("shard-driver", DRIVER_DEGRADED, DRIVER_STALLED);
+            if let Some(hb) = env.procgen_heartbeat() {
+                watchdog.adopt(&hb);
+            }
             let shared = Arc::new(ShardShared {
                 idx,
                 task: env.task(),
@@ -543,12 +725,16 @@ impl SimServer {
                     shutdown: false,
                     error: None,
                     latency: Window::new(LATENCY_WINDOW),
+                    sess_lat: HashMap::new(),
                 }),
                 submitted: Condvar::new(),
                 stepped: Condvar::new(),
                 obs,
                 trace: Arc::clone(&trace),
                 events: Arc::clone(&events),
+                heartbeat,
+                phase: Arc::clone(&phase),
+                recorder: Arc::clone(&recorder),
             });
             let for_driver = Arc::clone(&shared);
             let driver = std::thread::Builder::new()
@@ -571,6 +757,8 @@ impl SimServer {
             registry,
             trace,
             events,
+            watchdog,
+            recorder,
         })
     }
 
@@ -594,6 +782,71 @@ impl SimServer {
     /// [`EventLog::arm`].
     pub fn events(&self) -> Arc<EventLog> {
         Arc::clone(&self.events)
+    }
+
+    /// The server's health watchdog (readiness source for `/healthz`,
+    /// fault injection for tests and drills).
+    pub fn watchdog(&self) -> Arc<Watchdog> {
+        Arc::clone(&self.watchdog)
+    }
+
+    /// The flight recorder, if armed.
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.recorder.get().cloned()
+    }
+
+    /// Arm the flight recorder: incident bundles land under `dir`.
+    /// From here on stalls, slow ticks, panics (if hooked), and manual
+    /// dumps each produce a bundle — rate-limited and retention-capped
+    /// (see [`Recorder`]). One-shot: arming twice is an error.
+    pub fn arm_recorder(&self, dir: &Path) -> Result<Arc<Recorder>> {
+        let rec = Arc::new(Recorder::new(
+            dir,
+            Arc::clone(&self.registry),
+            Arc::clone(&self.trace),
+            Arc::clone(&self.events),
+        )?);
+        // Bundle extras capture weak refs: the recorder must not keep
+        // the server (or the watchdog that holds the recorder) alive.
+        let wd = Arc::downgrade(&self.watchdog);
+        rec.add_artifact("watchdog.json", move || {
+            wd.upgrade()
+                .map(|w| w.table_json().to_string())
+                .unwrap_or_else(|| "{}".to_string())
+        });
+        let shards: Vec<Weak<ShardShared>> = self.shards.iter().map(Arc::downgrade).collect();
+        rec.add_artifact("sessions.json", move || {
+            let shards: Vec<Arc<ShardShared>> =
+                shards.iter().filter_map(Weak::upgrade).collect();
+            sessions_json(&shards, 16).to_string()
+        });
+        if self.recorder.set(Arc::clone(&rec)).is_err() {
+            bail!("flight recorder already armed");
+        }
+        self.watchdog.set_recorder(Arc::clone(&rec));
+        Ok(rec)
+    }
+
+    /// The `n` slowest sessions by peak submit→result latency, across
+    /// all shards (the latency-attribution table surfaced in shutdown
+    /// stats and incident bundles).
+    pub fn slowest_sessions(&self, n: usize) -> Vec<SessionLatency> {
+        let mut rows: Vec<SessionLatency> = Vec::new();
+        for sh in &self.shards {
+            let st = sh.state.lock().unwrap();
+            for (&session, lat) in &st.sess_lat {
+                rows.push(SessionLatency {
+                    session,
+                    shard: sh.idx,
+                    steps: lat.steps,
+                    mean_us: if lat.steps == 0 { 0 } else { lat.sum_us / lat.steps },
+                    max_us: lat.max_us,
+                });
+            }
+        }
+        rows.sort_by(|a, b| b.max_us.cmp(&a.max_us).then(a.session.cmp(&b.session)));
+        rows.truncate(n);
+        rows
     }
 
     /// Lease `n_envs` slots on the first `task` shard with room and open
@@ -777,9 +1030,12 @@ impl SimServer {
                 let for_driver = Arc::clone(&shared);
                 let shard = Arc::clone(&self.shards[shard_idx]);
                 let vault = Arc::clone(vault);
+                let hb = self
+                    .watchdog
+                    .register("tenant-driver", DRIVER_DEGRADED, DRIVER_STALLED);
                 let driver = std::thread::Builder::new()
                     .name("sim-serve-tenant".into())
-                    .spawn(move || tenant_driver(for_driver, shard, vault))
+                    .spawn(move || tenant_driver(for_driver, shard, vault, hb))
                     .map_err(|e| anyhow!("spawn tenant driver thread: {e}"))?;
                 self.tenant_drivers.lock().unwrap().push(driver);
                 tenancy[shard_idx] = Some(shared);
@@ -886,6 +1142,9 @@ impl SimServer {
 
 impl Drop for SimServer {
     fn drop(&mut self) {
+        // Watchdog first: otherwise the joins below read as silence and
+        // a shutdown would log spurious stall events.
+        self.watchdog.stop();
         // Shards first: a tenant driver blocked in a ticket wait (e.g. a
         // Wait-policy co-tenant never submitted) unblocks with an error
         // once its shard fails; then the tenant drivers can be joined

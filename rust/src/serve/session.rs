@@ -311,7 +311,35 @@ impl<'a> Ticket<'a> {
             let lat = elapsed.as_secs_f32();
             st.latency.push(lat);
             session.latency.push(lat);
-            shard.obs.latency_us.observe(elapsed.as_micros() as u64);
+            let elapsed_us = elapsed.as_micros() as u64;
+            shard.obs.latency_us.observe(elapsed_us);
+            // Latency attribution: split the end-to-end wait into the
+            // driver-measured phases of the step that resolved it, with
+            // coalesce-wait as the residual — the four phases sum to the
+            // e2e latency by construction.
+            let r = &st.result;
+            let known = r.sim_us + r.render_us + r.publish_us;
+            shard.phase.sim.observe(r.sim_us);
+            shard.phase.render.observe(r.render_us);
+            shard.phase.publish.observe(r.publish_us);
+            shard.phase.coalesce.observe(elapsed_us.saturating_sub(known));
+            // Slowest-sessions table row (capped; cheapest row evicted).
+            if !st.sess_lat.contains_key(&session.id)
+                && st.sess_lat.len() >= super::server::SESS_LAT_CAP
+            {
+                let evict = st
+                    .sess_lat
+                    .iter()
+                    .min_by_key(|(_, v)| v.max_us)
+                    .map(|(&k, _)| k);
+                if let Some(k) = evict {
+                    st.sess_lat.remove(&k);
+                }
+            }
+            let row = st.sess_lat.entry(session.id).or_default();
+            row.steps += 1;
+            row.sum_us += elapsed_us;
+            row.max_us = row.max_us.max(elapsed_us);
             Arc::clone(&st.result)
         };
         session.gather(&res);

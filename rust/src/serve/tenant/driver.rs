@@ -32,7 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::metrics::Window;
-use crate::obs::Counter;
+use crate::obs::{Counter, Heartbeat};
 use crate::policy::{argmax_action, Policy};
 use crate::runtime::Runtime;
 use crate::serve::coalescer::{FillAction, StragglerPolicy};
@@ -145,6 +145,7 @@ pub(crate) fn tenant_driver(
     shared: Arc<TenantShared>,
     shard: Arc<ShardShared>,
     vault: Arc<PolicyVault>,
+    hb: Heartbeat,
 ) {
     let rt = match Runtime::cpu() {
         Ok(rt) => rt,
@@ -184,10 +185,16 @@ pub(crate) fn tenant_driver(
                             st.coal.tick();
                         }
                     }
-                    _ => st = shared.posted.wait(st).unwrap(),
+                    _ => {
+                        // Deliberate unbounded park, not a stall.
+                        hb.idle();
+                        st = shared.posted.wait(st).unwrap();
+                    }
                 }
             }
         };
+        // Beat after every wake so a tick wedged below goes silent.
+        hb.beat();
         match wake {
             Wake::Shutdown => {
                 let msg = {
@@ -322,6 +329,10 @@ fn run_tick(
     }
     let infer_d = t1.elapsed();
     let infer_s = infer_d.as_secs_f32();
+    // Latency attribution: inference happens *before* submit, so the
+    // ticket's end-to-end wait never contains it — observe it directly
+    // into the phase histogram here instead of via `Ticket::wait`.
+    shard.phase.infer.observe(infer_d.as_micros() as u64);
     // Pick actions: per-tenant rows of the batched logits; idle members
     // get the straggler fill.
     let mut agent_steps = 0u64;

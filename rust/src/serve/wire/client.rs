@@ -67,11 +67,15 @@ type LeaseReply = std::result::Result<GrantMsg, String>;
 /// Answer to a `Stats` scrape: snapshot version + Prometheus text.
 type StatsReply = (u32, String);
 
+/// Answer to a `Dump` request: ok flag + bundle path or decline reason.
+type DumpReply = (bool, String);
+
 #[derive(Default)]
 struct Routes {
     leases: HashMap<u64, Sender<LeaseReply>>,
     sessions: HashMap<u64, Sender<SessMsg>>,
     stats: HashMap<u64, Sender<StatsReply>>,
+    dumps: HashMap<u64, Sender<DumpReply>>,
 }
 
 struct ClientShared {
@@ -296,6 +300,26 @@ impl RemoteClient {
             Err(_) => bail!("connection lost: {}", death(&self.shared)),
         }
     }
+
+    /// Ask the server to write a manual flight-recorder incident bundle
+    /// (`bps stats ADDR --dump`). Returns the server-side bundle
+    /// directory path; fails when the server's recorder is not armed
+    /// (no `--dump-dir`) or the bundle write failed. Blocks until the
+    /// reply arrives.
+    pub fn dump(&self) -> Result<String> {
+        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let (tx, rx) = channel();
+        self.shared.routes.lock().unwrap().dumps.insert(req, tx);
+        if let Err(e) = send_frame(&self.shared, &Frame::Dump { req }) {
+            self.shared.routes.lock().unwrap().dumps.remove(&req);
+            return Err(e);
+        }
+        match rx.recv() {
+            Ok((true, path)) => Ok(path),
+            Ok((false, msg)) => bail!("dump declined: {msg}"),
+            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+        }
+    }
 }
 
 impl Drop for RemoteClient {
@@ -400,6 +424,12 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
                     let _ = reply.send((version, text));
                 }
             }
+            Frame::DumpReply { req, ok, msg } => {
+                let mut r = shared.routes.lock().unwrap();
+                if let Some(reply) = r.dumps.remove(&req) {
+                    let _ = reply.send((ok, msg));
+                }
+            }
             Frame::Hello
             | Frame::Welcome { .. }
             | Frame::Lease { .. }
@@ -407,7 +437,8 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
             | Frame::Detach { .. }
             | Frame::LeasePolicy { .. }
             | Frame::Goal { .. }
-            | Frame::Stats { .. } => {
+            | Frame::Stats { .. }
+            | Frame::Dump { .. } => {
                 why = Some("unexpected client-bound frame".into());
                 break;
             }
@@ -419,6 +450,7 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
     r.leases.clear();
     r.sessions.clear();
     r.stats.clear();
+    r.dumps.clear();
 }
 
 /// A lease on a remote shard, driven through the same

@@ -55,6 +55,10 @@ pub const FT_TRAJ: u8 = 12;
 // registry over the session connection.
 pub const FT_STATS: u8 = 13;
 pub const FT_STATS_REPLY: u8 = 14;
+// Flight-recorder frames (DESIGN.md §0.11): ask the server to write an
+// incident bundle (`bps stats ADDR --dump`).
+pub const FT_DUMP: u8 = 15;
+pub const FT_DUMP_REPLY: u8 = 16;
 
 // Error-frame codes (the `code` field of `Frame::Error`). The code also
 // disambiguates what the `re` field names: `ERR_LEASE` refers to a
@@ -236,6 +240,13 @@ pub enum Frame {
         version: u32,
         text: String,
     },
+    /// Client → server: trigger a manual flight-recorder incident
+    /// bundle. `req` correlates the [`Frame::DumpReply`].
+    Dump { req: u64 },
+    /// Server → client: answers `Dump`. With `ok`, `msg` is the
+    /// server-side bundle directory path; without, the reason the dump
+    /// was declined (most commonly: no `--dump-dir`, recorder unarmed).
+    DumpReply { req: u64, ok: bool, msg: String },
 }
 
 impl Frame {
@@ -255,6 +266,8 @@ impl Frame {
             Frame::Traj { .. } => FT_TRAJ,
             Frame::Stats { .. } => FT_STATS,
             Frame::StatsReply { .. } => FT_STATS_REPLY,
+            Frame::Dump { .. } => FT_DUMP,
+            Frame::DumpReply { .. } => FT_DUMP_REPLY,
         }
     }
 }
@@ -492,6 +505,13 @@ pub fn encode(f: &Frame, out: &mut Vec<u8>) {
             put_u32(out, text.len() as u32);
             out.extend_from_slice(text.as_bytes());
         }
+        Frame::Dump { req } => put_u64(out, *req),
+        Frame::DumpReply { req, ok, msg } => {
+            put_u64(out, *req);
+            out.push(*ok as u8);
+            put_u32(out, msg.len() as u32);
+            out.extend_from_slice(msg.as_bytes());
+        }
     }
     finish_frame(out);
 }
@@ -516,7 +536,7 @@ pub fn decode_header(b: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::BadVersion(b[2]));
     }
     let ftype = b[3];
-    if !(FT_HELLO..=FT_STATS_REPLY).contains(&ftype) {
+    if !(FT_HELLO..=FT_DUMP_REPLY).contains(&ftype) {
         return Err(WireError::UnknownType(ftype));
     }
     let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
@@ -718,6 +738,14 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             let text = String::from_utf8_lossy(r.take(len)?).into_owned();
             Frame::StatsReply { req, version, text }
         }
+        FT_DUMP => Frame::Dump { req: r.u64()? },
+        FT_DUMP_REPLY => {
+            let req = r.u64()?;
+            let ok = r.u8()? != 0;
+            let len = r.u32()? as u64;
+            let msg = String::from_utf8_lossy(r.take(len)?).into_owned();
+            Frame::DumpReply { req, ok, msg }
+        }
         other => return Err(WireError::UnknownType(other)),
     };
     r.done()?;
@@ -750,6 +778,9 @@ const LEASE_POLICY_CAP: usize = 26 + MAX_VARIANT_NAME;
 /// room for hundreds of shards without letting a hostile server pin
 /// [`MAX_FRAME`]-sized allocations on a stats client.
 pub const STATS_CAP: usize = 1 << 20;
+/// Bound for the server→client `DUMP_REPLY` payload (`13 + msg` bytes —
+/// a bundle path or a short decline reason).
+pub const DUMP_REPLY_CAP: usize = 16 << 10;
 
 /// Largest legal payload for `ftype` in one direction (`from_client` =
 /// the reader is a server). `None` means the type never flows that way.
@@ -767,6 +798,7 @@ pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
         (FT_LEASE_POLICY, true) => Some(LEASE_POLICY_CAP),
         (FT_GOAL, true) => Some(12),
         (FT_STATS, true) => Some(8),
+        (FT_DUMP, true) => Some(8),
         (FT_WELCOME, false) => Some(4),
         (FT_GRANT, false) => Some(GRANT_CAP),
         (FT_STEP, false) => Some(MAX_FRAME),
@@ -774,6 +806,7 @@ pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
         (FT_ERROR, false) => Some(ERROR_CAP),
         (FT_TRAJ, false) => Some(MAX_FRAME),
         (FT_STATS_REPLY, false) => Some(STATS_CAP),
+        (FT_DUMP_REPLY, false) => Some(DUMP_REPLY_CAP),
         _ => None,
     }
 }
@@ -916,6 +949,17 @@ mod tests {
             steps: 128,
         });
         roundtrip(Frame::Stats { req: 5 });
+        roundtrip(Frame::Dump { req: 9 });
+        roundtrip(Frame::DumpReply {
+            req: 9,
+            ok: true,
+            msg: "/tmp/bundles/incident-00001-manual".into(),
+        });
+        roundtrip(Frame::DumpReply {
+            req: 10,
+            ok: false,
+            msg: "flight recorder not armed".into(),
+        });
         roundtrip(Frame::StatsReply {
             req: 5,
             version: 1,
@@ -1068,15 +1112,28 @@ mod tests {
     #[test]
     fn header_range_covers_tenant_and_stats_frames() {
         let m = MAGIC.to_le_bytes();
-        for ft in [FT_LEASE_POLICY, FT_GOAL, FT_TRAJ, FT_STATS, FT_STATS_REPLY] {
+        for ft in [
+            FT_LEASE_POLICY,
+            FT_GOAL,
+            FT_TRAJ,
+            FT_STATS,
+            FT_STATS_REPLY,
+            FT_DUMP,
+            FT_DUMP_REPLY,
+        ] {
             let h = [m[0], m[1], VERSION, ft, 0, 0, 0, 0];
             assert!(decode_header(&h).is_ok(), "type {ft} must validate");
         }
-        let h = [m[0], m[1], VERSION, FT_STATS_REPLY + 1, 0, 0, 0, 0];
+        let h = [m[0], m[1], VERSION, FT_DUMP_REPLY + 1, 0, 0, 0, 0];
         assert_eq!(
             decode_header(&h),
-            Err(WireError::UnknownType(FT_STATS_REPLY + 1))
+            Err(WireError::UnknownType(FT_DUMP_REPLY + 1))
         );
+        // dump frames are asymmetric like stats frames
+        assert_eq!(payload_cap(FT_DUMP, true), Some(8));
+        assert_eq!(payload_cap(FT_DUMP, false), None);
+        assert_eq!(payload_cap(FT_DUMP_REPLY, false), Some(DUMP_REPLY_CAP));
+        assert_eq!(payload_cap(FT_DUMP_REPLY, true), None);
     }
 
     /// Stats frames are asymmetric: the request is a tiny fixed-size

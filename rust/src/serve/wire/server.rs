@@ -46,7 +46,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::obs::{Counter, EventLog, Gauge, Registry, TraceSink, SNAPSHOT_VERSION, WIRE_PID};
+use crate::obs::{
+    Counter, EventLog, Gauge, Heartbeat, Histogram, Registry, TraceSink, Trigger,
+    SNAPSHOT_VERSION, WIRE_PID,
+};
 use crate::serve::session::{Session, SessionView};
 use crate::serve::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
 use crate::serve::SimServer;
@@ -132,6 +135,11 @@ struct WireObs {
     errors_out: Counter,
     dropped_slow: Counter,
     reaped: Counter,
+    /// Latency-attribution phases owned by the wire layer: serializing a
+    /// step/traj view into frame bytes, and flushing those bytes onto
+    /// the socket (`serve.session.phase_us{phase=...}`).
+    encode_us: Histogram,
+    flush_us: Histogram,
 }
 
 impl WireObs {
@@ -150,6 +158,8 @@ impl WireObs {
             errors_out: reg.counter("wire.errors_out", no_labels),
             dropped_slow: reg.counter("wire.dropped_slow", no_labels),
             reaped: reg.counter("wire.reaped", no_labels),
+            encode_us: reg.histogram("serve.session.phase_us", &[("phase", "wire_encode")]),
+            flush_us: reg.histogram("serve.session.phase_us", &[("phase", "wire_flush")]),
         }
     }
 }
@@ -372,8 +382,25 @@ impl Drop for WireServer {
 /// and the shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
 
+// Watchdog thresholds per wire role. The accept loop beats every poll,
+// so it runs the tightest bounds; the writer beats at least once per
+// recv timeout; reader and pump threads legitimately park unboundedly
+// on an idle peer (they mark [`Heartbeat::idle`] first), so their
+// thresholds only police the *working* intervals between parks.
+const ACCEPT_DEGRADED: Duration = Duration::from_secs(1);
+const ACCEPT_STALLED: Duration = Duration::from_secs(5);
+const WRITER_DEGRADED: Duration = Duration::from_secs(2);
+const WRITER_STALLED: Duration = Duration::from_secs(10);
+const PUMP_DEGRADED: Duration = Duration::from_secs(5);
+const PUMP_STALLED: Duration = Duration::from_secs(30);
+
 fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
+    let hb = shared
+        .sim
+        .watchdog()
+        .register("wire-accept", ACCEPT_DEGRADED, ACCEPT_STALLED);
     loop {
+        hb.beat();
         if shared.shutting_down.load(Ordering::SeqCst) {
             return;
         }
@@ -444,9 +471,13 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
         }
         let (outbox_tx, outbox_rx) = sync_channel::<Vec<u8>>(shared.cfg.outbox_frames);
         let writer_conn = Arc::clone(&conn);
+        let writer_hb = shared
+            .sim
+            .watchdog()
+            .register("wire-writer", WRITER_DEGRADED, WRITER_STALLED);
         let writer = std::thread::Builder::new()
             .name("bps-wire-writer".into())
-            .spawn(move || writer_loop(writer_stream, outbox_rx, writer_conn));
+            .spawn(move || writer_loop(writer_stream, outbox_rx, writer_conn, writer_hb));
         if writer.is_err() {
             conn.close();
             continue;
@@ -494,8 +525,9 @@ fn reap_idle_conns(shared: &Arc<WireShared>) {
 /// Drain the outbox onto the socket. The periodic timeout lets the
 /// writer notice a closed connection even while pumps still hold
 /// outbox senders (e.g. blocked on an in-flight step).
-fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShared>) {
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShared>, hb: Heartbeat) {
     loop {
+        hb.beat();
         match rx.recv_timeout(Duration::from_millis(500)) {
             Ok(buf) => {
                 let flush_from = if conn.trace.enabled() {
@@ -508,9 +540,11 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
                     conn.close();
                     return;
                 }
+                let flush_d = wrote_at.elapsed();
+                conn.obs.flush_us.observe(flush_d.as_micros() as u64);
                 if let Some(from) = flush_from {
                     conn.trace
-                        .span(WIRE_PID, "flush", "wire.flush", from, wrote_at.elapsed(), 0);
+                        .span(WIRE_PID, "flush", "wire.flush", from, flush_d, 0);
                 }
                 conn.frames_out.fetch_add(1, Ordering::Relaxed);
                 conn.bytes_out.fetch_add(buf.len() as u64, Ordering::Relaxed);
@@ -584,10 +618,11 @@ fn enqueue_step(
     v: SessionView<'_>,
 ) -> bool {
     let encode_from = if conn.trace.enabled() {
-        Some((conn.trace.now_us(), Instant::now()))
+        Some(conn.trace.now_us())
     } else {
         None
     };
+    let started = Instant::now();
     let mut buf = Vec::new();
     frame::encode_step(
         &mut buf,
@@ -604,9 +639,11 @@ fn enqueue_step(
             scores: v.scores,
         },
     );
-    if let Some((from, at)) = encode_from {
+    let encode_d = started.elapsed();
+    conn.obs.encode_us.observe(encode_d.as_micros() as u64);
+    if let Some(from) = encode_from {
         conn.trace
-            .span(WIRE_PID, "encode", "wire.encode", from, at.elapsed(), v.step);
+            .span(WIRE_PID, "encode", "wire.encode", from, encode_d, v.step);
     }
     enqueue_buf(conn, outbox, buf)
 }
@@ -648,13 +685,20 @@ fn reader_loop(
 ) {
     let mut sessions: HashMap<u64, Route> = HashMap::new();
     let mut greeted = false;
+    let hb = shared
+        .sim
+        .watchdog()
+        .register("wire-reader", PUMP_DEGRADED, PUMP_STALLED);
     let mut metered = Metered {
         s: &stream,
         conn: &conn,
     };
     loop {
         // Direction-aware read: client→server frames are all small, so
-        // a hostile length field cannot make this end allocate big.
+        // a hostile length field cannot make this end allocate big. An
+        // idle peer parks this thread unboundedly — deliberate, so the
+        // watchdog must not read the park as a stall.
+        hb.idle();
         let f = match frame::read_frame_dir(&mut metered, true) {
             Ok(f) => f,
             Err(ReadError::Eof) | Err(ReadError::Io(_)) => break,
@@ -673,6 +717,7 @@ fn reader_loop(
                 break;
             }
         };
+        hb.beat();
         conn.frames_in.fetch_add(1, Ordering::Relaxed);
         conn.obs.frames_in.inc();
         conn.touch();
@@ -749,6 +794,11 @@ fn reader_loop(
                             outbox: outbox.clone(),
                             wire_id,
                             req,
+                            hb: shared.sim.watchdog().register(
+                                "wire-session-pump",
+                                PUMP_DEGRADED,
+                                PUMP_STALLED,
+                            ),
                         };
                         let spawned = std::thread::Builder::new()
                             .name("bps-wire-session".into())
@@ -973,6 +1023,11 @@ fn reader_loop(
                             outbox: outbox.clone(),
                             wire_id,
                             req,
+                            hb: shared.sim.watchdog().register(
+                                "wire-agent-pump",
+                                PUMP_DEGRADED,
+                                PUMP_STALLED,
+                            ),
                         };
                         let spawned = std::thread::Builder::new()
                             .name("bps-wire-agent".into())
@@ -1066,13 +1121,47 @@ fn reader_loop(
                     break;
                 }
             }
+            Frame::Dump { req } => {
+                // Manual flight-recorder trigger from a remote operator.
+                // Never fatal to the connection: an unarmed recorder or a
+                // bundle-write failure is reported in the reply so `bps
+                // stats ADDR --dump` can print a real diagnosis.
+                let reply = match shared.sim.recorder() {
+                    Some(rec) => match rec.trigger(Trigger::Manual) {
+                        Ok(Some(path)) => Frame::DumpReply {
+                            req,
+                            ok: true,
+                            msg: path.display().to_string(),
+                        },
+                        Ok(None) => Frame::DumpReply {
+                            req,
+                            ok: false,
+                            msg: "dump suppressed (rate limit)".into(),
+                        },
+                        Err(e) => Frame::DumpReply {
+                            req,
+                            ok: false,
+                            msg: format!("dump failed: {e}"),
+                        },
+                    },
+                    None => Frame::DumpReply {
+                        req,
+                        ok: false,
+                        msg: "flight recorder not armed (start bps serve with --dump-dir)".into(),
+                    },
+                };
+                if !enqueue(&conn, &outbox, &reply) {
+                    break;
+                }
+            }
             Frame::Welcome { .. }
             | Frame::Grant { .. }
             | Frame::Step { .. }
             | Frame::Traj { .. }
             | Frame::Detached { .. }
             | Frame::Error { .. }
-            | Frame::StatsReply { .. } => {
+            | Frame::StatsReply { .. }
+            | Frame::DumpReply { .. } => {
                 conn.bad_frame("client sent a server-only frame");
                 let _ = enqueue(
                     &conn,
@@ -1106,6 +1195,7 @@ struct AgentCtx {
     outbox: SyncSender<Vec<u8>>,
     wire_id: u64,
     req: u64,
+    hb: Heartbeat,
 }
 
 /// Serialize a tenant trajectory step straight into the outbox — the
@@ -1118,10 +1208,11 @@ fn enqueue_traj(
     ts: &TrajStep,
 ) -> bool {
     let encode_from = if conn.trace.enabled() {
-        Some((conn.trace.now_us(), Instant::now()))
+        Some(conn.trace.now_us())
     } else {
         None
     };
+    let started = Instant::now();
     let mut buf = Vec::new();
     frame::encode_traj(
         &mut buf,
@@ -1139,9 +1230,11 @@ fn enqueue_traj(
             scores: &ts.scores,
         },
     );
-    if let Some((from, at)) = encode_from {
+    let encode_d = started.elapsed();
+    conn.obs.encode_us.observe(encode_d.as_micros() as u64);
+    if let Some(from) = encode_from {
         conn.trace
-            .span(WIRE_PID, "encode", "wire.encode", from, at.elapsed(), ts.step);
+            .span(WIRE_PID, "encode", "wire.encode", from, encode_d, ts.step);
     }
     enqueue_buf(conn, outbox, buf)
 }
@@ -1157,6 +1250,7 @@ fn agent_pump(ctx: AgentCtx) {
         outbox,
         wire_id,
         req,
+        hb,
     } = ctx;
     let of = ts.obs_floats();
     let grant = Frame::Grant {
@@ -1191,7 +1285,14 @@ fn agent_pump(ctx: AgentCtx) {
         };
     let mut clean_detach = false;
     while alive {
-        match ts.next_step() {
+        // The stream blocks until the tenant driver's next tick (possibly
+        // forever if the goal is met and the peer holds the lease idle) —
+        // a stalled *driver* is attributed to its own heartbeat, not this
+        // pump's.
+        hb.idle();
+        let next = ts.next_step();
+        hb.beat();
+        match next {
             Ok(Some(step)) => {
                 alive = enqueue_traj(&conn, &outbox, wire_id, of, &step);
             }
@@ -1227,6 +1328,7 @@ struct PumpCtx {
     outbox: SyncSender<Vec<u8>>,
     wire_id: u64,
     req: u64,
+    hb: Heartbeat,
 }
 
 /// Owns one remote session server-side: grants the lease, then turns
@@ -1241,6 +1343,7 @@ fn session_pump(ctx: PumpCtx) {
         outbox,
         wire_id,
         req,
+        hb,
     } = ctx;
     let of = session.obs_floats();
     let grant = Frame::Grant {
@@ -1256,7 +1359,13 @@ fn session_pump(ctx: PumpCtx) {
         && enqueue_step(&conn, &outbox, wire_id, of, session.view());
     let mut clean_detach = false;
     while alive {
-        match rx.recv() {
+        // A lease held idle by the client parks here unboundedly — mark
+        // the park deliberate so the watchdog polices only the working
+        // submit→wait→encode interval.
+        hb.idle();
+        let msg = rx.recv();
+        hb.beat();
+        match msg {
             Ok(PumpMsg::Submit(pairs)) => {
                 let slots: Vec<usize> = pairs.iter().map(|&(s, _)| s as usize).collect();
                 let actions: Vec<u8> = pairs.iter().map(|&(_, a)| a).collect();
