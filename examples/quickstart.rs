@@ -1,4 +1,4 @@
-//! Quickstart: the smallest end-to-end BPS run, in eight acts.
+//! Quickstart: the smallest end-to-end BPS run, in nine acts.
 //!
 //! Act 1 needs nothing but this repo: it builds an `EnvBatch` — the
 //! batched request/response environment API at the heart of the system —
@@ -52,6 +52,18 @@
 //! tick / panic / demand (`bps serve --dump-dir`, `bps stats ADDR
 //! --dump`), and per-phase latency attribution says *where* each
 //! session's submit→result time went.
+//!
+//! Act 9 (also artifact-free) is a kill-and-resume drill through the
+//! fault-tolerance layer (DESIGN.md §0.12): a fault injector severs the
+//! client's TCP connection every few frames, the server parks the
+//! orphaned lease under `--park-ttl`, and a resume-capable client
+//! reconnects with capped exponential backoff and replays the one owed
+//! observation — the delivered stream stays bitwise intact. Then a
+//! shard panic quarantines one shard (its co-tenant gets a typed
+//! `retry_after_ms=` error, the other shard never notices) and
+//! `restart_shard` brings it back. Remotely that's `bps serve --fault
+//! conn_drop:every=6 --park-ttl 30 --heal-ms 500` plus `bps connect
+//! --retries 8`.
 //!
 //! Run: cargo run --release --example quickstart
 
@@ -375,7 +387,9 @@ fn observability_act(scene: &Arc<bps::scene::SceneAsset>) -> anyhow::Result<()> 
     );
     println!("events:   lease lifecycle in {}", events_path.display());
 
-    health_act(&server)
+    health_act(&server)?;
+
+    fault_act(scene)
 }
 
 // -- Act 8: diagnosis — watchdog, flight recorder, phase attribution -------
@@ -434,5 +448,109 @@ fn health_act(server: &Arc<SimServer>) -> anyhow::Result<()> {
             row.max_us as f64 / 1e3
         );
     }
+    Ok(())
+}
+
+// -- Act 9: kill-and-resume drill (DESIGN.md §0.12) -------------------------
+fn fault_act(scene: &Arc<bps::scene::SceneAsset>) -> anyhow::Result<()> {
+    println!("\n== Fault quickstart: conn kills, resume, shard panic+restart ==");
+    use bps::serve::{FaultSpec, Injector, RemoteClient, ResumeCfg, WireConfig, WireServer};
+    use std::sync::atomic::Ordering;
+
+    // Two identical shards: the remote session lands on shard 0, an
+    // in-process co-tenant on shard 1 — so we can panic shard 1 later
+    // without disturbing the remote stream.
+    let pool = Arc::new(WorkerPool::new(WorkerPool::default_size()));
+    let shards: Vec<ShardSpec> = (0..2)
+        .map(|_| {
+            ShardSpec::with_scenes(
+                EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16)).seed(7),
+                (0..4).map(|_| Arc::clone(scene)).collect(),
+            )
+        })
+        .collect();
+    let srv = Arc::new(SimServer::start(shards, pool)?);
+
+    // One injector, shared by both layers: the SimServer honors armed
+    // shard panics, the wire layer honors conn_drop/delay/corrupt. Here
+    // every 6th outbound frame write kills the connection mid-stream —
+    // remotely: `bps serve --fault conn_drop:every=6 --park-ttl 30`.
+    let inj = Arc::new(Injector::new(FaultSpec::parse("conn_drop:every=6")?));
+    srv.arm_faults(Arc::clone(&inj))?;
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            park_ttl_ticks: Some(30_000), // park orphaned leases 30 s
+            fault: Some(Arc::clone(&inj)),
+            ..WireConfig::default()
+        },
+    )?;
+
+    // A resume-capable client: on EOF it reconnects with capped
+    // exponential backoff, presents the session's resume token, and the
+    // server replays the one owed observation. `session.step` never
+    // returns an error for a survivable kill — the outage is invisible
+    // except in the resume counters. Remotely: `bps connect --retries 8`.
+    let client = RemoteClient::connect_with_resume(
+        &wire.local_addr().to_string(),
+        ResumeCfg {
+            max_retries: 8,
+            base_ms: 20,
+            cap_ms: 200,
+            seed: 1,
+        },
+    )?;
+    let mut session = client.open_session(Task::PointNav, 4)?;
+    let mut cotenant = srv.connect(Task::PointNav, 4)?;
+    let mut reward = 0.0f32;
+    for t in 0..12usize {
+        let actions: Vec<u8> = (0..4).map(|i| (1 + (t + i) % 3) as u8).collect();
+        let view = session.step(&actions)?; // survives the injected kills
+        reward += view.rewards.iter().sum::<f32>();
+        cotenant.step(&actions)?;
+    }
+    let kills = inj.fired_drops.load(Ordering::Relaxed);
+    let (resumes, backoff_ms) = client.resume_stats();
+    println!(
+        "12 steps x 4 envs, reward {reward:+.2} — stream survived {kills} \
+         connection kills: resumes={resumes} backoff_ms_total={backoff_ms}"
+    );
+    let snap = srv.registry().snapshot();
+    println!(
+        "server:   serve.park.parked={} serve.resume.ok={} (open parks back to {})",
+        snap.counter("serve.park.parked", &[]).unwrap_or(0),
+        snap.counter("serve.resume.ok", &[]).unwrap_or(0),
+        snap.gauge("serve.park.open", &[]).unwrap_or(0.0)
+    );
+
+    // Now the other failure class: a driver panic on shard 1. The shard
+    // quarantines — its tenant gets a typed error with a retry-after
+    // hint, never a hang or a poisoned mutex — while shard 0's stream
+    // continues untouched. `restart_shard` (or `bps serve --heal-ms`)
+    // rebuilds it in place.
+    inj.arm_panic(1);
+    let err = cotenant
+        .step(&[1u8; 4])
+        .expect_err("panicked shard must refuse the step");
+    println!("panic:    co-tenant got: {err}");
+    drop(cotenant); // release the dead lease before rebuilding
+    while !srv.shard_quarantined(1) {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    srv.restart_shard(1)?;
+    let mut healed = srv.connect(Task::PointNav, 4)?;
+    healed.step(&[1u8; 4])?;
+    println!("healed:   shard 1 restarted, fresh lease steps fine");
+    let view = session.step(&[1u8; 4])?; // shard 0 never noticed
+    println!(
+        "isolated: remote stream on shard 0 at step {} throughout",
+        view.step
+    );
+
+    session.detach()?;
+    drop(healed);
+    drop(client);
+    drop(wire);
     Ok(())
 }

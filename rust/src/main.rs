@@ -115,9 +115,19 @@ SUBCOMMANDS
                 --threads T --mem-budget MB --outbox FRAMES  per-conn
                 outbox bound before the slow-reader disconnect fires
                 --inbox SUBMITS  per-session submit queue bound before
-                the flood disconnect fires
+                the flood shed fires (ERR_RETRY_AFTER, not a disconnect)
                 --idle-timeout SECS  reap connections idle this long,
                 releasing their leases (0 = never, the default)
+                --park-ttl SECS  park dropped connections' env sessions
+                for resume (RESUME frame / bps connect --retries) instead
+                of releasing their leases immediately (0 = off)
+                --fault SPEC  arm the fault-injection plane, e.g.
+                conn_drop:p=0.01,panic:shard=0,delay_write:ms=50,
+                corrupt:every=100,stall:role=NAME,seed=N (also via the
+                BPS_FAULT env var; BPS_FAULT_STALL=role[,role...] folds
+                in as stall clauses)
+                --heal-ms MS  self-heal loop: restart quarantined shards
+                in place every MS milliseconds (0 = off)
                 --artifacts-dir PATH --checkpoint CKPT --policy-seed S
                 with AOT artifacts present, also serve *policies*: agents
                 lease slots + a server-side checkpoint (bps agent below)
@@ -141,13 +151,17 @@ SUBCOMMANDS
   connect      remote demo client: lease slots on a `bps serve` server,
                drive them with a scripted policy, report FPS + latency
                p50/p95: bps connect 127.0.0.1:7447 --task pointnav
-               (--addr A --task NAME --envs N --steps T)
+               (--addr A --task NAME --envs N --steps T
+                --retries N  resume dropped connections with capped
+                exponential backoff, up to N attempts per drop; the end
+                summary reports resumes=N backoff_ms_total=M)
   agent        remote policy-tenant client: lease slots *plus* a
                server-side policy, post a goal, and stream the
                server-driven trajectory back (obs/action/reward/done per
                step): bps agent 127.0.0.1:7447 --envs 4 --steps 64
                (--addr A --task NAME --envs N --steps T --variant NAME
-                --sample --seed S  sample actions instead of greedy)
+                --sample --seed S  sample actions instead of greedy
+                --retries N  reconnect/backoff budget, summary as connect)
   stats        scrape a `bps serve` server's metrics over the wire (the
                STATS frame) and print the Prometheus text — byte-identical
                to the server's own /metrics endpoint:
@@ -514,6 +528,9 @@ fn serve(args: &mut Args) -> Result<()> {
     let outbox = args.usize_or("outbox", 256)?.max(1);
     let inbox = args.usize_or("inbox", 64)?.max(1);
     let idle_timeout = args.f64_or("idle-timeout", 0.0)?.max(0.0);
+    let park_ttl = args.f64_or("park-ttl", 0.0)?.max(0.0);
+    let heal_ms = args.u64_or("heal-ms", 0)?;
+    let fault_arg = args.opt("fault");
     let mem_budget_mb = args.usize_or("mem-budget", 0)?;
     let stats_every = args.f64_or("stats-every", 10.0)?.max(0.2);
     let once = args.flag("once")?;
@@ -582,21 +599,68 @@ fn serve(args: &mut Args) -> Result<()> {
         println!("flight recorder: {}", rec.dir().display());
         // Panic anywhere in the process snapshots an incident bundle
         // before the default hook prints the backtrace — the post-mortem
-        // exists even if the process dies right after.
+        // exists even if the process dies right after. Shard and tenant
+        // driver panics are excluded: their supervisors quarantine and
+        // cut a richer `driver.panic` bundle, which this hook would
+        // pre-empt through the recorder's rate limit.
         let prev = std::panic::take_hook();
         let panic_rec = Arc::clone(&rec);
         std::panic::set_hook(Box::new(move |info| {
-            let _ = panic_rec.trigger(bps::obs::Trigger::Panic(info.to_string()));
+            let supervised = std::thread::current()
+                .name()
+                .is_some_and(|n| n == "sim-serve-shard" || n == "sim-serve-tenant");
+            if !supervised {
+                let _ = panic_rec.trigger(bps::obs::Trigger::Panic(info.to_string()));
+            }
             prev(info);
         }));
     }
-    // Fault injection for drills and the CI health smoke: pin a watchdog
-    // role to Stalled so /healthz flips without a real hang.
-    if let Ok(role) = std::env::var("BPS_FAULT_STALL") {
-        if !role.is_empty() {
-            server.watchdog().inject_stall(&role);
-            println!("fault injection: role {role:?} pinned to Stalled (BPS_FAULT_STALL)");
+    // The unified fault-injection plane (DESIGN.md §0.12): `--fault SPEC`
+    // or BPS_FAULT=SPEC, clauses like `conn_drop:p=0.01,panic:shard=0,
+    // delay_write:ms=50,corrupt:every=100,stall:role=NAME,seed=N`.
+    // BPS_FAULT_STALL=role[,role...] (the older health-smoke knob) folds
+    // into the same spec as `stall:` clauses.
+    let fault_spec = {
+        let base = match fault_arg.or_else(|| std::env::var("BPS_FAULT").ok().filter(|s| !s.is_empty())) {
+            Some(s) => bps::serve::FaultSpec::parse(&s)?,
+            None => bps::serve::FaultSpec::default(),
+        };
+        let mut spec = base;
+        if let Ok(roles) = std::env::var("BPS_FAULT_STALL") {
+            spec.add_stall_roles(&roles);
         }
+        spec
+    };
+    let injector = if fault_spec.is_empty() {
+        None
+    } else {
+        let inj = Arc::new(bps::serve::Injector::new(fault_spec));
+        server.arm_faults(Arc::clone(&inj))?;
+        println!("fault injection: {}", inj.spec().describe());
+        Some(inj)
+    };
+    // Self-healing drill loop: rebuild quarantined shards in place every
+    // `--heal-ms`, so an injected `panic:shard=` flows through
+    // quarantine → Dead watchdog → restart → healthy without operator
+    // action (the chaos smoke asserts /healthz recovers).
+    if heal_ms > 0 {
+        let healer = Arc::downgrade(&server);
+        std::thread::Builder::new()
+            .name("bps-serve-heal".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_millis(heal_ms.max(10)));
+                let Some(server) = healer.upgrade() else { break };
+                for idx in 0..server.num_shards() {
+                    if server.shard_quarantined(idx) {
+                        match server.restart_shard(idx) {
+                            Ok(()) => println!("heal: restarted quarantined shard {idx}"),
+                            Err(e) => eprintln!("heal: shard {idx}: {e:#}"),
+                        }
+                    }
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawn heal thread: {e}"))?;
+        println!("self-heal: scanning for quarantined shards every {heal_ms} ms");
     }
     let _metrics = match &metrics_addr {
         Some(a) => {
@@ -640,6 +704,12 @@ fn serve(args: &mut Args) -> Result<()> {
             } else {
                 None
             },
+            park_ttl_ticks: if park_ttl > 0.0 {
+                Some((park_ttl * 1000.0) as u64)
+            } else {
+                None
+            },
+            fault: injector.clone(),
         },
     )?;
     println!(
@@ -658,10 +728,22 @@ fn serve(args: &mut Args) -> Result<()> {
     }
 
     let mut last_stats = std::time::Instant::now();
+    // --once exit wants "all clients done", not "all sockets closed":
+    // with --park-ttl (or --fault conn_drop) a killed connection leaves
+    // every conn closed while the lease sits parked and the client backs
+    // off toward a resume. Hold the exit while anything is parked, and
+    // require the drained state on two consecutive polls so the
+    // microseconds between a conn closing and its session parking can't
+    // read as done.
+    let mut drained_polls = 0u32;
     loop {
         std::thread::sleep(std::time::Duration::from_millis(200));
         let conns = wire.conn_stats();
-        if once && wire.accepted() > 0 && conns.iter().all(|c| c.closed) {
+        let drained = wire.accepted() > 0
+            && conns.iter().all(|c| c.closed)
+            && wire.parked_open() == 0;
+        drained_polls = if drained { drained_polls + 1 } else { 0 };
+        if once && drained_polls >= 2 {
             break;
         }
         if last_stats.elapsed().as_secs_f64() >= stats_every {
@@ -763,7 +845,7 @@ fn trace_cmd(args: &mut Args) -> Result<()> {
 /// Remote demo client for `bps serve`: lease slots over TCP, drive them
 /// with the scripted turn/forward policy, and report FPS + latency.
 fn connect(args: &mut Args) -> Result<()> {
-    use bps::serve::RemoteClient;
+    use bps::serve::{RemoteClient, ResumeCfg};
     use bps::sim::Task;
 
     let addr = args
@@ -773,12 +855,27 @@ fn connect(args: &mut Args) -> Result<()> {
     args.ensure_no_operands()?; // a second address is a typo; fail now
     let envs = args.usize_or("envs", 8)?.max(1);
     let steps = args.usize_or("steps", 256)?.max(1);
+    let retries = args.u64_or("retries", 0)? as u32;
     let task = {
         let name = args.opt_or("task", "pointnav");
         Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
     };
 
-    let client = RemoteClient::connect(&addr)?;
+    // --retries N arms session resume: dropped connections reconnect
+    // with capped exponential backoff and the step stream continues
+    // bitwise-identically. Resume exhaustion propagates the server's
+    // last error out of step() and exits nonzero.
+    let client = if retries > 0 {
+        RemoteClient::connect_with_resume(
+            &addr,
+            ResumeCfg {
+                max_retries: retries,
+                ..Default::default()
+            },
+        )?
+    } else {
+        RemoteClient::connect(&addr)?
+    };
     let mut session = client.open_session(task, envs)?;
     println!(
         "connected to {addr}: {} shard(s), leased {} x {task:?} slots {:?}",
@@ -809,7 +906,8 @@ fn connect(args: &mut Args) -> Result<()> {
         p50 * 1e3,
         p95 * 1e3
     );
-    println!("connect: detached cleanly");
+    let (resumes, backoff_ms) = client.resume_stats();
+    println!("connect: detached cleanly | resumes={resumes} backoff_ms_total={backoff_ms}");
     Ok(())
 }
 
@@ -818,7 +916,7 @@ fn connect(args: &mut Args) -> Result<()> {
 /// goal, and stream the server-driven trajectory back. The client never
 /// runs the policy — it only reads (obs, action, reward, done) steps.
 fn agent(args: &mut Args) -> Result<()> {
-    use bps::serve::RemoteClient;
+    use bps::serve::{RemoteClient, ResumeCfg};
     use bps::sim::Task;
 
     let addr = args
@@ -828,6 +926,7 @@ fn agent(args: &mut Args) -> Result<()> {
     args.ensure_no_operands()?; // a second address is a typo; fail now
     let envs = args.usize_or("envs", 4)?.max(1);
     let steps = args.usize_or("steps", 64)?.max(1);
+    let retries = args.u64_or("retries", 0)? as u32;
     let variant = args.opt_or("variant", "test");
     let sample = args.flag("sample")?;
     let seed = args.u64_or("seed", 7)?;
@@ -836,7 +935,21 @@ fn agent(args: &mut Args) -> Result<()> {
         Task::parse(&name).ok_or_else(|| anyhow::anyhow!("bad task {name:?}"))?
     };
 
-    let client = RemoteClient::connect(&addr)?;
+    // Agent leases are never parked server-side (the server-driven
+    // rollout state is not reconstructible), but --retries still arms
+    // reconnect/backoff for the initial dial and surfaces the resume
+    // summary uniformly with `bps connect`.
+    let client = if retries > 0 {
+        RemoteClient::connect_with_resume(
+            &addr,
+            ResumeCfg {
+                max_retries: retries,
+                ..Default::default()
+            },
+        )?
+    } else {
+        RemoteClient::connect(&addr)?
+    };
     let mut agent = client.open_agent(task, envs, &variant, !sample, seed)?;
     println!(
         "connected to {addr}: leased {} x {task:?} slots {:?} + policy {variant:?} ({})",
@@ -866,7 +979,8 @@ fn agent(args: &mut Args) -> Result<()> {
          reward {reward:+.2} episodes {episodes} stop-actions {stops}",
         (steps * envs) as f64 / wall
     );
-    println!("agent: detached cleanly");
+    let (resumes, backoff_ms) = client.resume_stats();
+    println!("agent: detached cleanly | resumes={resumes} backoff_ms_total={backoff_ms}");
     Ok(())
 }
 

@@ -61,6 +61,10 @@ pub enum Trigger {
     SlowTick { tick_us: u64, p95_us: u64 },
     /// A thread panicked (`bps serve` installs the hook).
     Panic(String),
+    /// A shard or tenant driver panicked and its shard was quarantined
+    /// (`serve`'s `catch_unwind` isolation; DESIGN.md §0.12). Distinct
+    /// from [`Trigger::Panic`]: the server keeps running.
+    DriverPanic(String),
 }
 
 impl Trigger {
@@ -70,6 +74,7 @@ impl Trigger {
             Trigger::Stall(_) => "stall",
             Trigger::SlowTick { .. } => "slowtick",
             Trigger::Panic(_) => "panic",
+            Trigger::DriverPanic(_) => "driver.panic",
         }
     }
 
@@ -81,6 +86,7 @@ impl Trigger {
                 format!("tick {tick_us}us vs trailing p95 {p95_us}us")
             }
             Trigger::Panic(msg) => msg.clone(),
+            Trigger::DriverPanic(msg) => msg.clone(),
         }
     }
 

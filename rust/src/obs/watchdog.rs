@@ -15,7 +15,8 @@
 //! (two consecutive scans must agree) and then acted on:
 //!
 //! - `obs.watchdog.state{role}` gauges (0 = healthy, 1 = degraded,
-//!   2 = stalled) and the `obs.watchdog.stalls` counter on the registry;
+//!   2 = stalled, 3 = dead) and the `obs.watchdog.stalls` counter on
+//!   the registry;
 //! - `watchdog.stall` / `watchdog.recover` events on the event log;
 //! - an incident bundle via the flight [`Recorder`] when one is armed;
 //! - [`Watchdog::report`], which backs `GET /healthz`: a stalled role
@@ -55,11 +56,18 @@ pub const SCAN_INTERVAL: Duration = Duration::from_millis(50);
 const DEBOUNCE_SCANS: u32 = 2;
 
 /// Health classification of one heartbeat (or the worst of a role).
+///
+/// `Dead` is terminal and declared, not inferred: a supervisor that
+/// *caught* the thread's panic calls [`Heartbeat::dead`], and the next
+/// scan commits it immediately (no debounce — a confessed death needs
+/// no second opinion). Only [`Heartbeat::revive`] (shard restart)
+/// clears it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
     Healthy,
     Degraded,
     Stalled,
+    Dead,
 }
 
 impl Level {
@@ -68,6 +76,7 @@ impl Level {
             Level::Healthy => "healthy",
             Level::Degraded => "degraded",
             Level::Stalled => "stalled",
+            Level::Dead => "dead",
         }
     }
 
@@ -82,6 +91,7 @@ struct Cell {
     stalled: Duration,
     ticks: AtomicU64,
     idle: AtomicBool,
+    dead: AtomicBool,
 }
 
 /// A per-thread liveness handle. Cheap to clone; clones share the cell.
@@ -102,6 +112,7 @@ impl Heartbeat {
                 stalled: stalled.max(degraded),
                 ticks: AtomicU64::new(0),
                 idle: AtomicBool::new(false),
+                dead: AtomicBool::new(false),
             }),
         }
     }
@@ -118,6 +129,25 @@ impl Heartbeat {
     /// instances classify Healthy until the next [`beat`](Self::beat).
     pub fn idle(&self) {
         self.cell.idle.store(true, Ordering::Relaxed);
+    }
+
+    /// Declare the owning thread dead (its panic was caught by a
+    /// supervisor). Terminal until [`revive`](Self::revive); the next
+    /// scan commits [`Level::Dead`] with no debounce.
+    pub fn dead(&self) {
+        self.cell.dead.store(true, Ordering::Relaxed);
+    }
+
+    /// Lift a [`dead`](Self::dead) declaration after the thread has
+    /// been respawned (e.g. `SimServer::restart_shard`), counting one
+    /// beat so the fresh thread starts Healthy, not Stalled.
+    pub fn revive(&self) {
+        self.cell.dead.store(false, Ordering::Relaxed);
+        self.beat();
+    }
+
+    pub fn is_dead(&self) -> bool {
+        self.cell.dead.load(Ordering::Relaxed)
     }
 
     pub fn role(&self) -> &'static str {
@@ -149,22 +179,28 @@ struct Inner {
     stop: AtomicBool,
 }
 
-/// What `/healthz` answers: stalled/degraded role names, deduplicated.
+/// What `/healthz` answers: dead/stalled/degraded role names,
+/// deduplicated. A dead role (quarantined shard driver) is reported
+/// separately from a stalled one — the former needs `restart_shard`,
+/// the latter may recover on its own.
 #[derive(Clone, Debug, Default)]
 pub struct HealthReport {
+    pub dead: Vec<String>,
     pub stalled: Vec<String>,
     pub degraded: Vec<String>,
 }
 
 impl HealthReport {
     pub fn healthy(&self) -> bool {
-        self.stalled.is_empty()
+        self.dead.is_empty() && self.stalled.is_empty()
     }
 
     /// JSON body for the health endpoint, e.g.
-    /// `{"status":"stalled","stalled":["shard-driver"],"degraded":[]}`.
+    /// `{"status":"stalled","dead":[],"stalled":["shard-driver"],"degraded":[]}`.
     pub fn to_json(&self) -> String {
-        let status = if !self.stalled.is_empty() {
+        let status = if !self.dead.is_empty() {
+            "dead"
+        } else if !self.stalled.is_empty() {
             "stalled"
         } else if !self.degraded.is_empty() {
             "degraded"
@@ -174,6 +210,7 @@ impl HealthReport {
         let arr = |v: &[String]| Json::Arr(v.iter().map(|r| Json::Str(r.clone())).collect());
         let mut obj = BTreeMap::new();
         obj.insert("status".to_string(), Json::Str(status.to_string()));
+        obj.insert("dead".to_string(), arr(&self.dead));
         obj.insert("stalled".to_string(), arr(&self.stalled));
         obj.insert("degraded".to_string(), arr(&self.degraded));
         Json::Obj(obj).to_string()
@@ -288,12 +325,22 @@ impl Watchdog {
     /// stalls. Reads committed state only — no scan, no blocking beyond
     /// two short mutexes — so a health probe stays cheap.
     pub fn report(&self) -> HealthReport {
+        let mut dead: BTreeSet<String> = BTreeSet::new();
         let mut stalled: BTreeSet<String> = BTreeSet::new();
         let mut degraded: BTreeSet<String> = BTreeSet::new();
         {
             let t = self.inner.tracked.lock().unwrap();
             for e in t.iter() {
+                // A death declaration takes effect on report()
+                // immediately, even before the next scan commits it.
+                if e.cell.dead.load(Ordering::Relaxed) {
+                    dead.insert(e.cell.role.to_string());
+                    continue;
+                }
                 match e.committed {
+                    Level::Dead => {
+                        dead.insert(e.cell.role.to_string());
+                    }
                     Level::Stalled => {
                         stalled.insert(e.cell.role.to_string());
                     }
@@ -307,8 +354,16 @@ impl Watchdog {
         for role in self.inner.injected.lock().unwrap().keys() {
             stalled.insert(role.clone());
         }
-        let degraded = degraded.difference(&stalled).cloned().collect();
+        let stalled: BTreeSet<String> = stalled.difference(&dead).cloned().collect();
+        let degraded = degraded
+            .difference(&stalled)
+            .cloned()
+            .collect::<BTreeSet<String>>()
+            .difference(&dead)
+            .cloned()
+            .collect();
         HealthReport {
+            dead: dead.into_iter().collect(),
             stalled: stalled.into_iter().collect(),
             degraded,
         }
@@ -392,14 +447,29 @@ fn scan(inner: &Inner, now: Instant) {
                 e.last_progress = now;
             }
             let silent = now.saturating_duration_since(e.last_progress);
-            let raw = if silent >= e.cell.stalled {
+            let raw = if e.cell.dead.load(Ordering::Relaxed) {
+                Level::Dead
+            } else if silent >= e.cell.stalled {
                 Level::Stalled
             } else if silent >= e.cell.degraded {
                 Level::Degraded
             } else {
                 Level::Healthy
             };
-            if raw == e.committed {
+            // Dead is declared by a panic supervisor, not inferred from
+            // silence — commit immediately, no debounce, either way
+            // (revive() beats, so the way back starts Healthy).
+            if raw == Level::Dead && e.committed != Level::Dead {
+                transitions.push((e.cell.role, e.committed, raw, silent));
+                e.committed = raw;
+                e.pending = raw;
+                e.pending_scans = 0;
+            } else if e.committed == Level::Dead && raw != Level::Dead {
+                transitions.push((e.cell.role, e.committed, raw, silent));
+                e.committed = raw;
+                e.pending = raw;
+                e.pending_scans = 0;
+            } else if raw == e.committed {
                 e.pending = raw;
                 e.pending_scans = 0;
             } else if raw == e.pending {
@@ -453,7 +523,17 @@ fn scan(inner: &Inner, now: Instant) {
             .set(level.gauge_value());
     }
     for (role, from, to, silent) in transitions {
-        if to == Level::Stalled {
+        if to == Level::Dead {
+            // The panic supervisor already captured a `driver.panic`
+            // bundle; the watchdog just records the state flip.
+            inner.events.emit(
+                "watchdog.dead",
+                &[
+                    ("role", Json::Str(role.to_string())),
+                    ("from", Json::Str(from.name().to_string())),
+                ],
+            );
+        } else if to == Level::Stalled {
             inner.stalls.inc();
             inner.events.emit(
                 "watchdog.stall",
@@ -463,7 +543,7 @@ fn scan(inner: &Inner, now: Instant) {
                 ],
             );
             trigger_recorder(inner, role);
-        } else if from == Level::Stalled {
+        } else if from == Level::Stalled || from == Level::Dead {
             inner.events.emit(
                 "watchdog.recover",
                 &[
@@ -589,6 +669,47 @@ mod tests {
         w.scan_once(t0 + 10_000 * MS);
         w.scan_once(t0 + 10_010 * MS);
         assert!(w.report().healthy(), "a retired thread is not a stall");
+    }
+
+    #[test]
+    fn dead_commits_without_debounce_and_revive_recovers() {
+        let registry = Registry::new();
+        let w = Watchdog::unstarted(Arc::clone(&registry), Arc::new(EventLog::disabled()));
+        let hb = w.register("shard-driver", 50 * MS, 200 * MS);
+        let t0 = Instant::now();
+        w.scan_once(t0);
+        assert!(w.report().healthy());
+
+        // A declared death flips report() instantly and commits on the
+        // very next scan — no two-scan debounce for a caught panic.
+        hb.dead();
+        let r = w.report();
+        assert!(!r.healthy());
+        assert_eq!(r.dead, vec!["shard-driver".to_string()]);
+        assert!(r.to_json().contains("\"dead\""));
+        w.scan_once(t0 + 10 * MS);
+        assert_eq!(
+            registry
+                .snapshot()
+                .gauge("obs.watchdog.state", &[("role", "shard-driver")]),
+            Some(3.0)
+        );
+
+        // Silence never clears it: Dead is terminal until revive().
+        w.scan_once(t0 + 10_000 * MS);
+        assert!(!w.report().healthy());
+
+        // revive() beats, so the respawned thread scans Healthy at once.
+        hb.revive();
+        assert!(w.report().healthy());
+        w.scan_once(t0 + 10_020 * MS);
+        assert!(w.report().healthy());
+        assert_eq!(
+            registry
+                .snapshot()
+                .gauge("obs.watchdog.state", &[("role", "shard-driver")]),
+            Some(0.0)
+        );
     }
 
     #[test]

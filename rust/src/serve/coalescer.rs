@@ -125,6 +125,18 @@ impl Coalescer {
         Some(free)
     }
 
+    /// Drop every lease and buffered action (quarantine/restart: the
+    /// driver died mid-step, so the table may be mid-mutation — rebuild
+    /// it empty rather than trusting partial state). Straggler-fill and
+    /// bad-submit counters survive (they are cumulative diagnostics).
+    pub fn clear_leases(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.waited = 0;
+        self.sync_obs();
+    }
+
     /// Free every slot leased to `session` (detach).
     pub fn release(&mut self, session: u64) {
         for s in self.slots.iter_mut() {
@@ -367,6 +379,28 @@ mod tests {
         c.release(2);
         assert!(c.has_pending());
         assert_eq!(c.waited(), 1, "clock keeps running for live pendings");
+    }
+
+    /// Quarantine path: `clear_leases` empties the whole table (leases
+    /// *and* buffered actions), resets the deadline clock, and leaves
+    /// the gauges consistent, so a restarted shard starts coherent.
+    #[test]
+    fn clear_leases_resets_the_table_wholesale() {
+        let mut c = Coalescer::new(4, StragglerPolicy::Wait);
+        let a = c.lease(1, 2).unwrap();
+        let _b = c.lease(2, 1).unwrap();
+        c.submit(1, &a, &[ACTION_FORWARD, ACTION_LEFT]);
+        c.tick();
+        assert_eq!(c.leased(), 3);
+        assert!(c.has_pending());
+        c.clear_leases();
+        assert_eq!(c.leased(), 0);
+        assert!(!c.has_pending() && !c.ready());
+        assert_eq!(c.waited(), 0);
+        assert_eq!(c.obs_leased.get(), 0.0);
+        assert_eq!(c.obs_queued.get(), 0.0);
+        // the table is immediately re-leasable, lowest-first
+        assert_eq!(c.lease(3, 4).unwrap(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Unified fault-injection plane (DESIGN.md §0.12): a spec-driven
+//! [`Injector`] that exercises every recovery path in the serving layer
+//! deterministically.
+//!
+//! The spec grammar is a comma-separated clause list, each clause
+//! `name[:key=value[:key=value]]`:
+//!
+//! ```text
+//! conn_drop:p=0.01        drop a connection with probability p per
+//! conn_drop:every=50        outbound frame — or every Nth frame exactly
+//! panic:shard=0           panic the named shard driver at its next
+//!                           step (one-shot; repeatable per shard)
+//! delay_write:ms=50       sleep before every outbound frame write
+//! corrupt:p=0.001         corrupt an outbound frame's header with
+//! corrupt:every=100         probability p — or every Nth frame
+//! stall:role=NAME         pin the watchdog role stalled (repeatable;
+//!                           `role` may itself be a comma-free name)
+//! seed=1234               seed the injector RNG (default 0xFA417)
+//! ```
+//!
+//! The spec arrives via `bps serve --fault SPEC` or the `BPS_FAULT`
+//! environment variable. The legacy `BPS_FAULT_STALL` variable folds in
+//! as extra `stall` clauses and now accepts a comma-separated role list
+//! ([`FaultSpec::add_stall_roles`]).
+//!
+//! All randomized decisions come from one seeded xoshiro [`Rng`], so a
+//! chaos run is reproducible: the same spec against the same traffic
+//! sequence injects the same faults. `every=N` clauses are fully
+//! deterministic counters for tests that must know the exact fault
+//! count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+/// Default injector seed when the spec has no `seed=` clause.
+const DEFAULT_SEED: u64 = 0xFA417;
+
+/// How often a probabilistic fault fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rate {
+    /// Bernoulli per decision point, from the injector's seeded RNG.
+    P(f32),
+    /// Exactly every Nth decision point (deterministic).
+    Every(u64),
+}
+
+/// Parsed fault spec (see module docs for the grammar).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    pub seed: Option<u64>,
+    pub conn_drop: Option<Rate>,
+    /// Shard indices whose driver panics at its next step (one-shot
+    /// each). Duplicates are allowed: each entry arms one panic.
+    pub panic_shards: Vec<usize>,
+    pub delay_write: Option<Duration>,
+    pub corrupt: Option<Rate>,
+    /// Watchdog roles pinned stalled (the `BPS_FAULT_STALL` plane).
+    pub stall_roles: Vec<String>,
+}
+
+fn parse_rate(key: &str, val: &str) -> Result<Rate> {
+    match key {
+        "p" => {
+            let p: f32 = val.parse().with_context(|| format!("bad p={val}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("p={p} out of [0,1]");
+            }
+            Ok(Rate::P(p))
+        }
+        "every" => {
+            let n: u64 = val.parse().with_context(|| format!("bad every={val}"))?;
+            if n == 0 {
+                bail!("every=0 is meaningless");
+            }
+            Ok(Rate::Every(n))
+        }
+        _ => bail!("unknown rate key {key:?} (want p= or every=)"),
+    }
+}
+
+impl FaultSpec {
+    /// Parse the spec grammar. An empty string parses to the empty spec.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for clause in s.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let name = parts.next().unwrap_or("");
+            // `seed=N` is a bare key=value clause, not a fault name.
+            if let Some(v) = name.strip_prefix("seed=") {
+                spec.seed =
+                    Some(v.parse().with_context(|| format!("bad seed in {clause:?}"))?);
+                continue;
+            }
+            let mut kv = |part: &str| -> Result<(String, String)> {
+                let (k, v) = part
+                    .split_once('=')
+                    .with_context(|| format!("want key=value in {clause:?}"))?;
+                Ok((k.trim().to_owned(), v.trim().to_owned()))
+            };
+            match name {
+                "conn_drop" | "corrupt" => {
+                    let part = parts
+                        .next()
+                        .with_context(|| format!("{name} needs p= or every= ({clause:?})"))?;
+                    let (k, v) = kv(part)?;
+                    let rate = parse_rate(&k, &v)?;
+                    if name == "conn_drop" {
+                        spec.conn_drop = Some(rate);
+                    } else {
+                        spec.corrupt = Some(rate);
+                    }
+                }
+                "panic" => {
+                    let part = parts
+                        .next()
+                        .with_context(|| format!("panic needs shard= ({clause:?})"))?;
+                    let (k, v) = kv(part)?;
+                    if k != "shard" {
+                        bail!("panic wants shard=IDX, got {k}=");
+                    }
+                    spec.panic_shards
+                        .push(v.parse().with_context(|| format!("bad shard in {clause:?}"))?);
+                }
+                "delay_write" => {
+                    let part = parts
+                        .next()
+                        .with_context(|| format!("delay_write needs ms= ({clause:?})"))?;
+                    let (k, v) = kv(part)?;
+                    if k != "ms" {
+                        bail!("delay_write wants ms=N, got {k}=");
+                    }
+                    let ms: u64 = v.parse().with_context(|| format!("bad ms in {clause:?}"))?;
+                    spec.delay_write = Some(Duration::from_millis(ms));
+                }
+                "stall" => {
+                    let part = parts
+                        .next()
+                        .with_context(|| format!("stall needs role= ({clause:?})"))?;
+                    let (k, v) = kv(part)?;
+                    if k != "role" {
+                        bail!("stall wants role=NAME, got {k}=");
+                    }
+                    spec.stall_roles.push(v);
+                }
+                other => bail!("unknown fault clause {other:?}"),
+            }
+            if let Some(extra) = parts.next() {
+                bail!("trailing {extra:?} in clause {clause:?}");
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Fold in a `BPS_FAULT_STALL`-style comma-separated role list (the
+    /// legacy env var, kept as an alias for `stall:role=` clauses).
+    pub fn add_stall_roles(&mut self, roles: &str) {
+        for role in roles.split(',').map(str::trim).filter(|r| !r.is_empty()) {
+            if !self.stall_roles.iter().any(|r| r == role) {
+                self.stall_roles.push(role.to_owned());
+            }
+        }
+    }
+
+    /// Compact one-line rendering of the armed clauses, for the serve
+    /// startup banner. Round-trips through the grammar (modulo clause
+    /// order) so the printed string is itself a valid `--fault` spec.
+    pub fn describe(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let rate = |r: &Rate| match r {
+            Rate::P(p) => format!("p={p}"),
+            Rate::Every(n) => format!("every={n}"),
+        };
+        if let Some(r) = &self.conn_drop {
+            parts.push(format!("conn_drop:{}", rate(r)));
+        }
+        for s in &self.panic_shards {
+            parts.push(format!("panic:shard={s}"));
+        }
+        if let Some(d) = self.delay_write {
+            parts.push(format!("delay_write:ms={}", d.as_millis()));
+        }
+        if let Some(r) = &self.corrupt {
+            parts.push(format!("corrupt:{}", rate(r)));
+        }
+        for role in &self.stall_roles {
+            parts.push(format!("stall:role={role}"));
+        }
+        if let Some(seed) = self.seed {
+            parts.push(format!("seed={seed}"));
+        }
+        parts.join(",")
+    }
+
+    /// True when no clause was given (the injector would be inert).
+    pub fn is_empty(&self) -> bool {
+        self.conn_drop.is_none()
+            && self.panic_shards.is_empty()
+            && self.delay_write.is_none()
+            && self.corrupt.is_none()
+            && self.stall_roles.is_empty()
+    }
+}
+
+/// One `Rate`'s decision state: a deterministic counter for `Every`,
+/// the shared RNG for `P`.
+#[derive(Default)]
+struct RateState {
+    count: u64,
+}
+
+impl RateState {
+    fn fires(&mut self, rate: Rate, rng: &mut Rng) -> bool {
+        match rate {
+            Rate::P(p) => rng.chance(p),
+            Rate::Every(n) => {
+                self.count += 1;
+                self.count % n == 0
+            }
+        }
+    }
+}
+
+/// The armed fault plane. Shared (`Arc`) between the wire server's
+/// writer loops (conn_drop / delay_write / corrupt) and the shard
+/// drivers (panic); all methods take `&self`.
+pub struct Injector {
+    spec: FaultSpec,
+    rng: Mutex<Rng>,
+    drop_state: Mutex<RateState>,
+    corrupt_state: Mutex<RateState>,
+    /// Armed one-shot panics; `take_panic` consumes matching entries.
+    panics: Mutex<Vec<usize>>,
+    /// Faults actually fired, for logs/tests.
+    pub fired_drops: AtomicU64,
+    pub fired_corrupts: AtomicU64,
+    pub fired_panics: AtomicU64,
+}
+
+impl Injector {
+    pub fn new(spec: FaultSpec) -> Injector {
+        let seed = spec.seed.unwrap_or(DEFAULT_SEED);
+        let panics = spec.panic_shards.clone();
+        Injector {
+            spec,
+            rng: Mutex::new(Rng::new(seed)),
+            drop_state: Mutex::new(RateState::default()),
+            corrupt_state: Mutex::new(RateState::default()),
+            panics: Mutex::new(panics),
+            fired_drops: AtomicU64::new(0),
+            fired_corrupts: AtomicU64::new(0),
+            fired_panics: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Decision point: should this connection be dropped now? Called
+    /// once per outbound frame by the wire writer.
+    pub fn should_drop_conn(&self) -> bool {
+        let Some(rate) = self.spec.conn_drop else {
+            return false;
+        };
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        let fired = self
+            .drop_state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .fires(rate, &mut rng);
+        if fired {
+            self.fired_drops.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// Sleep to impose before an outbound frame write, if any.
+    pub fn write_delay(&self) -> Option<Duration> {
+        self.spec.delay_write
+    }
+
+    /// Decision point: corrupt this outbound frame? When it fires the
+    /// frame's magic bytes are flipped in place, which every client
+    /// rejects at the header check ([`super::frame::WireError::BadMagic`])
+    /// and counts — corruption is always *detectable*, never a silent
+    /// payload mutation.
+    pub fn corrupt_frame(&self, buf: &mut [u8]) -> bool {
+        let Some(rate) = self.spec.corrupt else {
+            return false;
+        };
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        let fired = self
+            .corrupt_state
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .fires(rate, &mut rng);
+        if fired && buf.len() >= 2 {
+            buf[0] ^= 0xFF;
+            buf[1] ^= 0xFF;
+            self.fired_corrupts.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// Consume one armed panic for `shard`, if any. The shard driver
+    /// polls this at the top of its step loop and panics when it
+    /// returns true — exercising the quarantine path end to end.
+    pub fn take_panic(&self, shard: usize) -> bool {
+        let mut p = self.panics.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(i) = p.iter().position(|&s| s == shard) {
+            p.swap_remove(i);
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-arm a one-shot panic at runtime (tests panic a shard while a
+    /// session is mid-stream without restarting the server).
+    pub fn arm_panic(&self, shard: usize) {
+        self.panics
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(shard);
+    }
+
+    /// Watchdog roles to pin stalled at startup.
+    pub fn stall_roles(&self) -> &[String] {
+        &self.spec.stall_roles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example_spec() {
+        let s = FaultSpec::parse("conn_drop:p=0.01,panic:shard=0,delay_write:ms=50").unwrap();
+        assert_eq!(s.conn_drop, Some(Rate::P(0.01)));
+        assert_eq!(s.panic_shards, vec![0]);
+        assert_eq!(s.delay_write, Some(Duration::from_millis(50)));
+        assert!(s.corrupt.is_none() && s.stall_roles.is_empty());
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn parses_every_seed_corrupt_and_stall() {
+        let s =
+            FaultSpec::parse("corrupt:every=100,seed=7,stall:role=sim-serve-shard,conn_drop:every=3")
+                .unwrap();
+        assert_eq!(s.corrupt, Some(Rate::Every(100)));
+        assert_eq!(s.seed, Some(7));
+        assert_eq!(s.stall_roles, vec!["sim-serve-shard".to_owned()]);
+        assert_eq!(s.conn_drop, Some(Rate::Every(3)));
+        // describe() round-trips through the grammar
+        assert_eq!(FaultSpec::parse(&s.describe()).unwrap(), s);
+        // empty spec parses to the inert default
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse("  ,  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn hostile_specs_are_rejected() {
+        for bad in [
+            "explode",
+            "conn_drop",
+            "conn_drop:q=1",
+            "conn_drop:p=2.0",
+            "conn_drop:every=0",
+            "panic:shard=x",
+            "panic:ms=5",
+            "delay_write:ms=abc",
+            "stall:name=x",
+            "seed=zzz",
+            "conn_drop:p=0.1:extra=1",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    /// The `BPS_FAULT_STALL` alias accepts a comma-separated role list
+    /// and merges (deduplicated) into any `stall:` clauses already
+    /// parsed — multi-role pinning through either plane.
+    #[test]
+    fn stall_alias_accepts_multiple_roles() {
+        let mut s = FaultSpec::parse("stall:role=sim-serve-shard").unwrap();
+        s.add_stall_roles("scenario-feed, sim-serve-shard,wire-accept,");
+        assert_eq!(
+            s.stall_roles,
+            vec![
+                "sim-serve-shard".to_owned(),
+                "scenario-feed".to_owned(),
+                "wire-accept".to_owned(),
+            ]
+        );
+        let mut empty = FaultSpec::default();
+        empty.add_stall_roles("a,b");
+        assert_eq!(empty.stall_roles, vec!["a".to_owned(), "b".to_owned()]);
+        assert!(!empty.is_empty());
+    }
+
+    #[test]
+    fn every_rates_are_exact_and_panics_one_shot() {
+        let inj = Injector::new(FaultSpec::parse("conn_drop:every=3,panic:shard=1").unwrap());
+        let fired: Vec<bool> = (0..9).map(|_| inj.should_drop_conn()).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(inj.fired_drops.load(Ordering::Relaxed), 3);
+        assert!(!inj.take_panic(0), "shard 0 was never armed");
+        assert!(inj.take_panic(1));
+        assert!(!inj.take_panic(1), "one-shot: consumed");
+        inj.arm_panic(1);
+        assert!(inj.take_panic(1), "re-armed at runtime");
+        assert_eq!(inj.fired_panics.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn corruption_flips_magic_and_is_seed_deterministic() {
+        let inj = Injector::new(FaultSpec::parse("corrupt:every=2").unwrap());
+        let mut frame = vec![0x0Cu8, 0xB5, 1, 1, 0, 0, 0, 0];
+        assert!(!inj.corrupt_frame(&mut frame));
+        assert_eq!(&frame[..2], &[0x0C, 0xB5], "non-firing check is a no-op");
+        assert!(inj.corrupt_frame(&mut frame));
+        assert_ne!(&frame[..2], &[0x0C, 0xB5], "magic flipped on fire");
+        // probabilistic decisions replay identically for equal seeds
+        let a = Injector::new(FaultSpec::parse("conn_drop:p=0.5,seed=42").unwrap());
+        let b = Injector::new(FaultSpec::parse("conn_drop:p=0.5,seed=42").unwrap());
+        let sa: Vec<bool> = (0..64).map(|_| a.should_drop_conn()).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.should_drop_conn()).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|&x| x) && !sa.iter().all(|&x| x));
+    }
+}

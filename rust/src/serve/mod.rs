@@ -58,17 +58,21 @@
 //! wire; DESIGN.md §0.9).
 
 pub mod coalescer;
+pub mod fault;
 pub mod server;
 pub mod session;
 pub mod tenant;
 pub mod wire;
 
 pub use coalescer::{FillAction, StragglerPolicy};
+pub use fault::{FaultSpec, Injector};
 pub use server::{
-    SceneSource, SessionLatency, ShardSpec, ShardStats, SimServer, TenantStats, TICK,
+    LeaseDecline, SceneSource, SessionLatency, ShardSpec, ShardStats, SimServer, TenantStats,
+    TICK,
 };
 pub use session::{Session, SessionView, Ticket};
 pub use tenant::{ActionMode, PolicyVault, TenantControl, TenantSession, TrajStep};
 pub use wire::{
-    ConnStats, RemoteAgent, RemoteClient, RemoteSession, RemoteTraj, WireConfig, WireServer,
+    ConnStats, RemoteAgent, RemoteClient, RemoteSession, RemoteTraj, ResumeCfg, WireConfig,
+    WireServer,
 };

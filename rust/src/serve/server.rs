@@ -17,9 +17,10 @@
 //! serving loop allocates nothing.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -28,8 +29,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::env::{EnvBatch, EnvBatchConfig, StepView};
 use crate::metrics::Window;
 use crate::obs::{
-    Counter, EventLog, Heartbeat, Histogram, Recorder, Registry, TraceSink, Trigger, Watchdog,
-    DEFAULT_TRACE_SPANS,
+    Counter, EventLog, Gauge, Heartbeat, Histogram, Recorder, Registry, TraceSink, Trigger,
+    Watchdog, DEFAULT_TRACE_SPANS,
 };
 use crate::render::SceneRotation;
 use crate::scene::SceneAsset;
@@ -38,8 +39,11 @@ use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
 use super::coalescer::{Coalescer, StragglerPolicy};
+use super::fault::Injector;
 use super::session::Session;
-use super::tenant::driver::{tenant_driver, Join, TenantShared, TRAJ_QUEUE};
+use super::tenant::driver::{
+    lock_tenants, quarantine_tenants, tenant_driver, Join, TenantShared, TRAJ_QUEUE,
+};
 use super::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
 use super::tenant::vault::PolicyVault;
 
@@ -125,6 +129,11 @@ pub(crate) struct ShardState {
     /// consumed by step `issued + 1`, which is what tickets wait for.
     pub issued: u64,
     pub shutdown: bool,
+    /// `shutdown` because the driver *panicked* (not a clean stop): the
+    /// lease table was rebuilt, waiters get a retry-after-hinted
+    /// `SHARD_DOWN` error, and [`SimServer::restart_shard`] may bring
+    /// the shard back (DESIGN.md §0.12).
+    pub quarantined: bool,
     pub error: Option<String>,
     /// Shard-wide submit→result latency samples (seconds).
     pub latency: Window,
@@ -202,6 +211,9 @@ pub(crate) struct ShardObs {
     /// `serve.shard.latency_us` — submit→result latency histogram
     /// (observed by `Ticket::wait` alongside the percentile windows).
     pub latency_us: Histogram,
+    /// `serve.quarantine` — 1 while the shard is quarantined after a
+    /// driver panic, 0 otherwise (cleared by `restart_shard`).
+    pub quarantined: Gauge,
 }
 
 /// One shard as seen by sessions and the driver thread.
@@ -237,15 +249,75 @@ pub(crate) struct ShardShared {
     /// The flight recorder, once armed (`SimServer::arm_recorder`).
     /// Disarmed servers pay one `OnceLock` load per slow-tick check.
     pub recorder: Arc<OnceLock<Arc<Recorder>>>,
+    /// The fault-injection plane, once armed (`SimServer::arm_faults`).
+    /// The driver polls it for one-shot `panic:shard=` clauses; unarmed
+    /// servers pay one `OnceLock` load per tick.
+    pub fault: Arc<OnceLock<Arc<Injector>>>,
+}
+
+/// Lock a shard's state, recovering from mutex poisoning: a panicking
+/// driver (or fault-injected panic) must never cascade `PoisonError`
+/// panics into every session thread — quarantine rebuilds the state
+/// coherently instead (DESIGN.md §0.12). Every shard-state lock site in
+/// `serve` goes through this.
+pub(crate) fn lock_state(m: &Mutex<ShardState>) -> MutexGuard<'_, ShardState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 impl ShardShared {
     pub fn fail(&self, msg: String) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         st.shutdown = true;
         st.error = Some(msg);
         self.submitted.notify_all();
         self.stepped.notify_all();
+    }
+
+    /// Panic isolation: the driver thread died mid-step. Mark the shard
+    /// quarantined, rebuild the lease table (every lease is gone — the
+    /// env state behind it is unrecoverable), wake all waiters with a
+    /// retry-after-hinted error, flip the watchdog role terminal, and
+    /// cut a `driver.panic` flight-recorder bundle.
+    pub(crate) fn quarantine(&self, what: &str) {
+        let msg = format!(
+            "shard {} quarantined: driver panicked: {what}",
+            self.idx
+        );
+        {
+            let mut st = lock_state(&self.state);
+            st.shutdown = true;
+            st.quarantined = true;
+            st.error = Some(msg.clone());
+            // The lease table may be mid-mutation from the panicking
+            // step: clear it wholesale so a later restart starts from a
+            // coherent, empty table (sessions are dead either way).
+            st.coal.clear_leases();
+            self.submitted.notify_all();
+            self.stepped.notify_all();
+        }
+        self.heartbeat.dead();
+        self.obs.quarantined.set(1.0);
+        self.events.emit(
+            "shard.quarantine",
+            &[
+                ("shard", Json::Num(self.idx as f64)),
+                ("reason", Json::Str(what.to_string())),
+            ],
+        );
+        if let Some(rec) = self.recorder.get() {
+            let _ = rec.trigger(Trigger::DriverPanic(msg));
+        }
+    }
+}
+
+/// Render a caught panic payload for error messages.
+pub(crate) fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -261,10 +333,19 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
     let mut last_publish_us: u64 = 0;
     let mut ticks = Window::new(SLOW_TICK_WINDOW);
     loop {
+        // Fault plane: an armed `panic:shard=IDX` clause fires here,
+        // outside the state lock, so injected panics exercise the same
+        // quarantine path as organic ones without poisoning the mutex
+        // (which quarantine tolerates anyway — see `lock_state`).
+        if let Some(inj) = shared.fault.get() {
+            if inj.take_panic(shared.idx) {
+                panic!("fault injection: panic:shard={}", shared.idx);
+            }
+        }
         let wait_from = shared.trace.now_us();
         // Phase 1: wait until a full batch can be assembled.
         let step_no = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_state(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -277,7 +358,10 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
                         if st.coal.waited() >= ticks {
                             break; // deadline passed: fill stragglers
                         }
-                        let (guard, timeout) = shared.submitted.wait_timeout(st, TICK).unwrap();
+                        let (guard, timeout) = shared
+                            .submitted
+                            .wait_timeout(st, TICK)
+                            .unwrap_or_else(|e| e.into_inner());
                         st = guard;
                         if timeout.timed_out() {
                             st.coal.tick();
@@ -287,7 +371,10 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
                         // Deliberate unbounded park: tell the watchdog
                         // this silence is idleness, not a stall.
                         shared.heartbeat.idle();
-                        st = shared.submitted.wait(st).unwrap();
+                        st = shared
+                            .submitted
+                            .wait(st)
+                            .unwrap_or_else(|e| e.into_inner());
                     }
                 }
             }
@@ -360,7 +447,7 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
         let publish_from = shared.trace.now_us();
         let publish_started = Instant::now();
         let prev = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_state(&shared.state);
             // Counter inc and snapshot swap share the critical section,
             // so a locked stats() read always sees them agree.
             shared.obs.steps.inc();
@@ -409,13 +496,46 @@ fn shard_driver(shared: Arc<ShardShared>, mut env: EnvBatch, rotate_every: Optio
     }
 }
 
+/// Spawn a shard-driver thread with panic isolation: a panic anywhere
+/// in the driver loop quarantines the shard (typed errors to its
+/// sessions, terminal watchdog state, `driver.panic` bundle) instead of
+/// unwinding into the process default and taking the server down.
+fn spawn_driver(
+    shared: &Arc<ShardShared>,
+    env: EnvBatch,
+    rotate_every: Option<u64>,
+) -> Result<JoinHandle<()>> {
+    let for_driver = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name("sim-serve-shard".into())
+        .spawn(move || {
+            let inner = Arc::clone(&for_driver);
+            let r = catch_unwind(AssertUnwindSafe(move || {
+                shard_driver(inner, env, rotate_every)
+            }));
+            if let Err(e) = r {
+                for_driver.quarantine(&panic_msg(e.as_ref()));
+            }
+        })
+        .map_err(|e| anyhow!("spawn shard driver thread: {e}"))
+}
+
+/// Retained build inputs for [`SimServer::restart_shard`]. Only
+/// fixed-scene shards are restartable: a [`SceneRotation`] is consumed
+/// by its `EnvBatch` at build time and cannot be re-split.
+struct ShardRebuild {
+    cfg: EnvBatchConfig,
+    scenes: Vec<Arc<SceneAsset>>,
+    rotate_every: Option<u64>,
+}
+
 /// JSON rendering of the slowest-sessions table over `shards` (the
 /// flight recorder's `sessions.json` artifact; same rows as
 /// [`SimServer::slowest_sessions`]).
 pub(crate) fn sessions_json(shards: &[Arc<ShardShared>], n: usize) -> Json {
     let mut rows: Vec<(u64, usize, SessLat)> = Vec::new();
     for sh in shards {
-        let st = sh.state.lock().unwrap();
+        let st = lock_state(&sh.state);
         for (&session, lat) in &st.sess_lat {
             rows.push((session, sh.idx, *lat));
         }
@@ -565,10 +685,40 @@ impl ShardStats {
     }
 }
 
+/// Why [`SimServer::try_connect`] declined a lease. The wire server
+/// maps `Overload` to a retry-after [`ERR_RETRY_AFTER`]
+/// (`super::wire::frame::ERR_RETRY_AFTER`) error frame — the client
+/// should back off and retry — and `NoCapacity` to a plain `ERR_LEASE`.
+#[derive(Debug)]
+pub enum LeaseDecline {
+    /// Admission control: granting now would blow the memory budget.
+    /// Retryable once sessions on other shards detach.
+    Overload(String),
+    /// No shard can host the lease (wrong task, not enough free slots,
+    /// or the matching shards are down).
+    NoCapacity(String),
+}
+
+impl LeaseDecline {
+    pub fn message(&self) -> &str {
+        match self {
+            LeaseDecline::Overload(m) | LeaseDecline::NoCapacity(m) => m,
+        }
+    }
+}
+
 /// The multi-tenant simulation server (see module docs).
 pub struct SimServer {
     shards: Vec<Arc<ShardShared>>,
-    drivers: Vec<JoinHandle<()>>,
+    /// Driver threads, including replacements spawned by
+    /// [`restart_shard`](SimServer::restart_shard) (a mutex so restart
+    /// takes `&self` like every other server entry point).
+    drivers: Mutex<Vec<JoinHandle<()>>>,
+    /// Per-shard retained build inputs (`None`: rotation-fed, not
+    /// restartable in place).
+    rebuilds: Vec<Option<ShardRebuild>>,
+    /// The shared worker pool, retained for shard rebuilds.
+    pool: Arc<WorkerPool>,
     next_session: AtomicU64,
     /// Admission control: reject leases whose projected active resident
     /// bytes across shards would exceed this budget (`None` = unlimited).
@@ -597,6 +747,12 @@ pub struct SimServer {
     /// (`SimServer::arm_recorder`) — shared with every shard so the
     /// drivers' slow-tick checks see the same armed state.
     recorder: Arc<OnceLock<Arc<Recorder>>>,
+    /// The fault-injection slot, empty until [`arm_faults`]
+    /// (`SimServer::arm_faults`) — shared with every shard driver.
+    fault: Arc<OnceLock<Arc<Injector>>>,
+    /// `serve.shed.admission` — leases declined by admission control
+    /// (answered with retry-after, never silently).
+    shed_admission: Counter,
 }
 
 impl SimServer {
@@ -642,9 +798,11 @@ impl SimServer {
         let events = Arc::new(EventLog::disabled());
         let watchdog = Watchdog::start(Arc::clone(&registry), Arc::clone(&events));
         let recorder: Arc<OnceLock<Arc<Recorder>>> = Arc::new(OnceLock::new());
+        let fault: Arc<OnceLock<Arc<Injector>>> = Arc::new(OnceLock::new());
         let phase = Arc::new(PhaseObs::new(&registry));
         let mut shards = Vec::with_capacity(specs.len());
         let mut drivers = Vec::with_capacity(specs.len());
+        let mut rebuilds = Vec::with_capacity(specs.len());
         for spec in specs {
             let ShardSpec {
                 cfg,
@@ -657,10 +815,16 @@ impl SimServer {
             // channel round-trip per step with zero overlap benefit:
             // force the (bitwise-identical) synchronous path.
             let cfg = cfg.overlap(false);
-            let env = match source {
-                SceneSource::Scenes(scenes) => cfg.build_with_scenes(scenes, Arc::clone(&pool))?,
+            // Fixed-scene shards retain their build inputs (the scene
+            // Arcs are shared, not copied) so `restart_shard` can
+            // rebuild the EnvBatch in place after a quarantine.
+            let (env, rebuild) = match source {
+                SceneSource::Scenes(scenes) => {
+                    let env = cfg.build_with_scenes(scenes.clone(), Arc::clone(&pool))?;
+                    (env, Some(ShardRebuild { cfg, scenes, rotate_every }))
+                }
                 SceneSource::Rotation { rotation, n } => {
-                    cfg.build_with_rotation(rotation, n, Arc::clone(&pool))?
+                    (cfg.build_with_rotation(rotation, n, Arc::clone(&pool))?, None)
                 }
             };
             let slots = env.num_envs();
@@ -703,6 +867,7 @@ impl SimServer {
                 chunks_culled: registry.counter("render.chunks_culled", l),
                 chunks_total: registry.counter("render.chunks_total", l),
                 latency_us: registry.histogram("serve.shard.latency_us", l),
+                quarantined: registry.gauge("serve.quarantine", l),
             };
             // Liveness: the driver thread beats per tick; a scenario-fed
             // shard also carries its procgen generator's heartbeat
@@ -723,6 +888,7 @@ impl SimServer {
                     result: Arc::new(initial),
                     issued: 0,
                     shutdown: false,
+                    quarantined: false,
                     error: None,
                     latency: Window::new(LATENCY_WINDOW),
                     sess_lat: HashMap::new(),
@@ -735,19 +901,20 @@ impl SimServer {
                 heartbeat,
                 phase: Arc::clone(&phase),
                 recorder: Arc::clone(&recorder),
+                fault: Arc::clone(&fault),
             });
-            let for_driver = Arc::clone(&shared);
-            let driver = std::thread::Builder::new()
-                .name("sim-serve-shard".into())
-                .spawn(move || shard_driver(for_driver, env, rotate_every))
-                .map_err(|e| anyhow!("spawn shard driver thread: {e}"))?;
+            let driver = spawn_driver(&shared, env, rotate_every)?;
             shards.push(shared);
             drivers.push(driver);
+            rebuilds.push(rebuild);
         }
         let n_shards = shards.len();
+        let shed_admission = registry.counter("serve.shed.admission", &[]);
         Ok(SimServer {
             shards,
-            drivers,
+            drivers: Mutex::new(drivers),
+            rebuilds,
+            pool,
             next_session: AtomicU64::new(1),
             mem_budget,
             admission: Mutex::new(()),
@@ -759,6 +926,8 @@ impl SimServer {
             events,
             watchdog,
             recorder,
+            fault,
+            shed_admission,
         })
     }
 
@@ -827,13 +996,90 @@ impl SimServer {
         Ok(rec)
     }
 
+    /// Arm the fault-injection plane (one-shot): shard drivers start
+    /// polling for `panic:shard=` clauses, and any `stall:role=` clauses
+    /// pin their watchdog roles immediately. The wire server shares the
+    /// same injector through its `WireConfig` for the connection-level
+    /// faults (drops, delays, corruption).
+    pub fn arm_faults(&self, inj: Arc<Injector>) -> Result<()> {
+        for role in inj.stall_roles() {
+            self.watchdog.inject_stall(role);
+        }
+        if self.fault.set(inj).is_err() {
+            bail!("fault plane already armed");
+        }
+        Ok(())
+    }
+
+    /// The armed fault injector, if any.
+    pub fn injector(&self) -> Option<Arc<Injector>> {
+        self.fault.get().cloned()
+    }
+
+    /// Whether shard `idx` is quarantined after a driver panic.
+    pub fn shard_quarantined(&self, idx: usize) -> bool {
+        self.shards
+            .get(idx)
+            .is_some_and(|sh| lock_state(&sh.state).quarantined)
+    }
+
+    /// Rebuild a quarantined shard in place: a fresh `EnvBatch` from the
+    /// retained build inputs, an already-cleared lease table, a revived
+    /// watchdog role, and a new driver thread. Geometry (slots, obs
+    /// shape, task) is unchanged, so every stats row and wire invariant
+    /// stays valid. Declines when the shard is healthy (never clobber a
+    /// live driver) or was rotation-fed (the rotation was consumed at
+    /// build time — restart the server instead).
+    pub fn restart_shard(&self, idx: usize) -> Result<()> {
+        let shard = self
+            .shards
+            .get(idx)
+            .ok_or_else(|| anyhow!("restart_shard: no shard {idx}"))?;
+        // Serialize with admission (and concurrent restarts): the
+        // quarantine check and the driver spawn must be atomic.
+        let _admission = self.admission.lock().unwrap();
+        if !lock_state(&shard.state).quarantined {
+            bail!("restart_shard: shard {idx} is not quarantined");
+        }
+        let rb = self.rebuilds[idx].as_ref().ok_or_else(|| {
+            anyhow!(
+                "restart_shard: shard {idx} was built over a scene rotation, \
+                 which is consumed at build time — restart the server"
+            )
+        })?;
+        let env = rb
+            .cfg
+            .overlap(false)
+            .build_with_scenes(rb.scenes.clone(), Arc::clone(&self.pool))?;
+        let mut initial = StepResult::default();
+        initial.fill(0, env.view());
+        {
+            let mut st = lock_state(&shard.state);
+            st.coal.clear_leases();
+            st.result = Arc::new(initial);
+            st.issued = 0;
+            st.shutdown = false;
+            st.quarantined = false;
+            st.error = None;
+            st.sess_lat.clear();
+        }
+        shard.heartbeat.revive();
+        shard.obs.quarantined.set(0.0);
+        shard
+            .events
+            .emit("shard.restart", &[("shard", Json::Num(idx as f64))]);
+        let driver = spawn_driver(shard, env, rb.rotate_every)?;
+        self.drivers.lock().unwrap().push(driver);
+        Ok(())
+    }
+
     /// The `n` slowest sessions by peak submit→result latency, across
     /// all shards (the latency-attribution table surfaced in shutdown
     /// stats and incident bundles).
     pub fn slowest_sessions(&self, n: usize) -> Vec<SessionLatency> {
         let mut rows: Vec<SessionLatency> = Vec::new();
         for sh in &self.shards {
-            let st = sh.state.lock().unwrap();
+            let st = lock_state(&sh.state);
             for (&session, lat) in &st.sess_lat {
                 rows.push(SessionLatency {
                     session,
@@ -855,8 +1101,19 @@ impl SimServer {
     /// it would blow the server's memory budget (see
     /// [`with_budget`](SimServer::with_budget)).
     pub fn connect(&self, task: Task, n_envs: usize) -> Result<Session> {
+        self.try_connect(task, n_envs)
+            .map_err(|d| anyhow!("{}", d.message()))
+    }
+
+    /// [`connect`](SimServer::connect) with a typed decline, so the wire
+    /// front door can distinguish overload (shed with retry-after) from
+    /// capacity (a plain lease error). Admission-control declines count
+    /// in `serve.shed.admission`.
+    pub fn try_connect(&self, task: Task, n_envs: usize) -> Result<Session, LeaseDecline> {
         if n_envs == 0 {
-            bail!("connect: a session needs at least one env slot");
+            return Err(LeaseDecline::NoCapacity(
+                "connect: a session needs at least one env slot".into(),
+            ));
         }
         // One admission decision at a time: the activation snapshot below
         // must not race another connect's lease.
@@ -866,7 +1123,7 @@ impl SimServer {
         let active: Vec<bool> = self
             .shards
             .iter()
-            .map(|sh| sh.state.lock().unwrap().coal.leased() > 0)
+            .map(|sh| lock_state(&sh.state).coal.leased() > 0)
             .collect();
         let active_bytes: usize = self
             .shards
@@ -877,6 +1134,7 @@ impl SimServer {
             .sum();
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
         let mut over_budget = None;
+        let mut quarantined = 0usize;
         for (shard, &was_active) in self.shards.iter().zip(&active) {
             if shard.task != task {
                 continue;
@@ -889,8 +1147,11 @@ impl SimServer {
                 }
             }
             let slots = {
-                let mut st = shard.state.lock().unwrap();
+                let mut st = lock_state(&shard.state);
                 if st.shutdown {
+                    if st.quarantined {
+                        quarantined += 1;
+                    }
                     continue;
                 }
                 st.coal.lease(id, n_envs)
@@ -909,19 +1170,25 @@ impl SimServer {
             }
         }
         if let (Some(projected), Some(budget)) = (over_budget, self.mem_budget) {
-            bail!(
+            self.shed_admission.inc();
+            return Err(LeaseDecline::Overload(format!(
                 "connect: admitting a {n_envs}-env {task:?} lease would put \
                  {} MB of scene assets resident, over the {} MB budget — \
                  detach sessions on other shards or raise --mem-budget",
                 projected / (1024 * 1024),
                 budget / (1024 * 1024)
-            );
+            )));
         }
-        bail!(
+        let quarantine_note = if quarantined > 0 {
+            format!(" ({quarantined} quarantined — restart_shard may recover them)")
+        } else {
+            String::new()
+        };
+        Err(LeaseDecline::NoCapacity(format!(
             "connect: no {task:?} shard with {n_envs} free slots \
-             (tasks served: {:?})",
+             (tasks served: {:?}){quarantine_note}",
             self.shards.iter().map(|s| s.task).collect::<Vec<_>>()
-        )
+        )))
     }
 
     /// Lease `n_envs` slots *plus* the server-side policy `variant`, and
@@ -1013,14 +1280,14 @@ impl SimServer {
         let tshared = {
             let mut tenancy = self.tenancy.lock().unwrap();
             if tenancy[shard_idx].is_none() {
-                let straggler = self.shards[shard_idx].state.lock().unwrap().coal.policy();
+                let straggler = lock_state(&self.shards[shard_idx].state).coal.policy();
                 let shared = Arc::new(TenantShared::new(width, straggler));
                 {
                     // Attach the tenant registry's cells (same-cell
                     // discipline as the shard coalescer above).
                     let sid = shard_idx.to_string();
                     let l: &[(&str, &str)] = &[("shard", &sid)];
-                    let st = shared.state.lock().unwrap();
+                    let st = lock_tenants(&shared.state);
                     self.registry.attach_counter("tenant.infer_runs", l, &st.infer_runs);
                     self.registry.attach_counter("tenant.agent_steps", l, &st.agent_steps);
                     self.registry.attach_counter("tenant.idle_fills", l, &st.coal.idle_fills);
@@ -1033,9 +1300,39 @@ impl SimServer {
                 let hb = self
                     .watchdog
                     .register("tenant-driver", DRIVER_DEGRADED, DRIVER_STALLED);
+                // Same supervisor contract as shard drivers: a panic in
+                // the tenant driver quarantines this shard's tenancy
+                // (handles see the error; env-only sessions unaffected)
+                // instead of tearing the process down.
+                let sup_shared = Arc::clone(&shared);
+                let sup_hb = hb.clone();
+                let events = Arc::clone(&self.events);
+                let recorder = Arc::clone(&self.recorder);
                 let driver = std::thread::Builder::new()
                     .name("sim-serve-tenant".into())
-                    .spawn(move || tenant_driver(for_driver, shard, vault, hb))
+                    .spawn(move || {
+                        let r = catch_unwind(AssertUnwindSafe(move || {
+                            tenant_driver(for_driver, shard, vault, hb)
+                        }));
+                        if let Err(e) = r {
+                            let msg = format!(
+                                "tenant driver panicked: {}",
+                                panic_msg(e.as_ref())
+                            );
+                            quarantine_tenants(&sup_shared, msg.clone());
+                            sup_hb.dead();
+                            events.emit(
+                                "tenant.quarantine",
+                                &[
+                                    ("shard", Json::Num(shard_idx as f64)),
+                                    ("reason", Json::Str(msg.clone())),
+                                ],
+                            );
+                            if let Some(rec) = recorder.get() {
+                                let _ = rec.trigger(Trigger::DriverPanic(msg));
+                            }
+                        }
+                    })
                     .map_err(|e| anyhow!("spawn tenant driver thread: {e}"))?;
                 self.tenant_drivers.lock().unwrap().push(driver);
                 tenancy[shard_idx] = Some(shared);
@@ -1058,7 +1355,7 @@ impl SimServer {
         };
         let (tx, rx) = std::sync::mpsc::sync_channel(TRAJ_QUEUE);
         {
-            let mut st = tshared.state.lock().unwrap();
+            let mut st = lock_tenants(&tshared.state);
             if st.shutdown {
                 let msg = st.error.clone().unwrap_or_else(|| "tenant driver stopped".into());
                 bail!("connect_with_policy: {msg}");
@@ -1097,7 +1394,7 @@ impl SimServer {
             .shards
             .iter()
             .map(|sh| {
-                let st = sh.state.lock().unwrap();
+                let st = lock_state(&sh.state);
                 let [latency_p50, latency_p95] = st.latency.percentiles([0.5, 0.95]);
                 ShardStats {
                     task: sh.task,
@@ -1118,7 +1415,7 @@ impl SimServer {
         let tenancy = self.tenancy.lock().unwrap();
         for (stats, tshared) in out.iter_mut().zip(tenancy.iter()) {
             let Some(ts) = tshared else { continue };
-            let st = ts.state.lock().unwrap();
+            let st = lock_tenants(&ts.state);
             let [infer_p50, infer_p95] = st.infer_lat.percentiles([0.5, 0.95]);
             let [gather_p50, gather_p95] = st.gather_lat.percentiles([0.5, 0.95]);
             let [step_p50, step_p95] = st.step_lat.percentiles([0.5, 0.95]);
@@ -1153,14 +1450,26 @@ impl Drop for SimServer {
             sh.fail("server shut down".into());
         }
         for ts in self.tenancy.lock().unwrap().iter().flatten() {
-            let mut st = ts.state.lock().unwrap();
+            let mut st = lock_tenants(&ts.state);
             st.shutdown = true;
             ts.posted.notify_all();
         }
-        for d in self.tenant_drivers.lock().unwrap().drain(..) {
+        let tenant_drivers: Vec<JoinHandle<()>> = self
+            .tenant_drivers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        for d in tenant_drivers {
             let _ = d.join();
         }
-        for d in self.drivers.drain(..) {
+        let drivers: Vec<JoinHandle<()>> = self
+            .drivers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        for d in drivers {
             let _ = d.join();
         }
     }

@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use crate::metrics::Window;
 use crate::sim::Task;
 
-use super::server::{ShardShared, StepResult};
+use super::server::{lock_state, ShardShared, StepResult};
 
 /// How many latency samples each session keeps for its own p50/p95.
 const SESSION_LATENCY_WINDOW: usize = 1024;
@@ -70,9 +70,16 @@ impl Session {
         };
         // Seed the buffers from the latest published step so `view` works
         // before the first submit.
-        let res = Arc::clone(&s.shard.state.lock().unwrap().result);
+        let res = Arc::clone(&lock_state(&s.shard.state).result);
         s.gather(&res);
         s
+    }
+
+    /// Whether the shard backing this lease is quarantined after a
+    /// driver panic (the wire pump maps this to a retry-after-hinted
+    /// `SHARD_DOWN` error frame instead of a generic shard error).
+    pub fn shard_quarantined(&self) -> bool {
+        lock_state(&self.shard.state).quarantined
     }
 
     /// Envs leased by this session.
@@ -135,7 +142,7 @@ impl Session {
             );
         }
         let target = {
-            let mut st = self.shard.state.lock().unwrap();
+            let mut st = lock_state(&self.shard.state);
             if st.shutdown {
                 let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
                 bail!("serve: {msg}");
@@ -177,7 +184,7 @@ impl Session {
             );
         }
         let (accepted, target) = {
-            let mut st = self.shard.state.lock().unwrap();
+            let mut st = lock_state(&self.shard.state);
             if st.shutdown {
                 let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
                 bail!("serve: {msg}");
@@ -212,7 +219,7 @@ impl Session {
         }
         self.detached = true;
         {
-            let mut st = self.shard.state.lock().unwrap();
+            let mut st = lock_state(&self.shard.state);
             st.coal.release(self.id);
             // A waiting driver may now have a complete batch (every
             // remaining leased slot already submitted).
@@ -299,13 +306,13 @@ impl<'a> Ticket<'a> {
         } = self;
         let shard = Arc::clone(&session.shard);
         let res = {
-            let mut st = shard.state.lock().unwrap();
+            let mut st = lock_state(&shard.state);
             while st.result.step < target {
                 if st.shutdown {
                     let msg = st.error.clone().unwrap_or_else(|| "shard stopped".into());
                     bail!("serve: {msg}");
                 }
-                st = shard.stepped.wait(st).unwrap();
+                st = shard.stepped.wait(st).unwrap_or_else(|e| e.into_inner());
             }
             let elapsed = submitted.elapsed();
             let lat = elapsed.as_secs_f32();

@@ -28,7 +28,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{SyncSender, TrySendError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::metrics::Window;
@@ -36,7 +36,7 @@ use crate::obs::{Counter, Heartbeat};
 use crate::policy::{argmax_action, Policy};
 use crate::runtime::Runtime;
 use crate::serve::coalescer::{FillAction, StragglerPolicy};
-use crate::serve::server::{ShardShared, TICK};
+use crate::serve::server::{lock_state, ShardShared, TICK};
 use crate::serve::session::Session;
 use crate::sim::ACTION_STOP;
 
@@ -91,6 +91,28 @@ pub(crate) struct TenantShared {
     /// Handles → driver: goal posted / member joined / detached /
     /// shutdown.
     pub posted: Condvar,
+}
+
+/// Poison-recovering lock on a tenant registry. A tenant driver that
+/// panicked mid-lock poisons the mutex; handles and the panic
+/// supervisor still need the state (to read the error, to mark the
+/// shutdown), so everyone recovers the guard instead of propagating.
+pub(crate) fn lock_tenants(m: &Mutex<TenantState>) -> MutexGuard<'_, TenantState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Supervisor-side cleanup after a caught tenant-driver panic: fail the
+/// registry so every handle (and future `connect_with_policy`) sees the
+/// error instead of hanging on a condvar nobody will signal. The
+/// members' trajectory senders died with the driver thread, so handles
+/// blocked in `recv` wake via disconnect and read this error.
+pub(crate) fn quarantine_tenants(shared: &TenantShared, msg: String) {
+    let mut st = lock_tenants(&shared.state);
+    st.shutdown = true;
+    if st.error.is_none() {
+        st.error = Some(msg);
+    }
+    shared.posted.notify_all();
 }
 
 impl TenantShared {
@@ -160,7 +182,7 @@ pub(crate) fn tenant_driver(
     loop {
         // Phase 1: wait until a tick can fire (or membership changed).
         let wake = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_tenants(&shared.state);
             loop {
                 if st.shutdown {
                     break Wake::Shutdown;
@@ -179,7 +201,10 @@ pub(crate) fn tenant_driver(
                         if st.coal.waited() >= ticks {
                             break Wake::Tick(st.coal.begin_tick());
                         }
-                        let (guard, timeout) = shared.posted.wait_timeout(st, TICK).unwrap();
+                        let (guard, timeout) = shared
+                            .posted
+                            .wait_timeout(st, TICK)
+                            .unwrap_or_else(|e| e.into_inner());
                         st = guard;
                         if timeout.timed_out() {
                             st.coal.tick();
@@ -188,7 +213,7 @@ pub(crate) fn tenant_driver(
                     _ => {
                         // Deliberate unbounded park, not a stall.
                         hb.idle();
-                        st = shared.posted.wait(st).unwrap();
+                        st = shared.posted.wait(st).unwrap_or_else(|e| e.into_inner());
                     }
                 }
             }
@@ -198,7 +223,7 @@ pub(crate) fn tenant_driver(
         match wake {
             Wake::Shutdown => {
                 let msg = {
-                    let st = shared.state.lock().unwrap();
+                    let st = lock_tenants(&shared.state);
                     st.error.clone().unwrap_or_else(|| "server shut down".into())
                 };
                 for m in members.values() {
@@ -249,7 +274,7 @@ fn adopt(
                 let _ = j
                     .tx
                     .try_send(TrajMsg::Error(format!("policy engine: {e:#}")));
-                shared.state.lock().unwrap().coal.unregister(j.tenant);
+                lock_tenants(&shared.state).coal.unregister(j.tenant);
                 return; // j.session drops here: lease released
             }
         }
@@ -284,14 +309,14 @@ fn run_tick(
     plan: &[TickShare],
     width: usize,
 ) -> bool {
-    let fill = match shared.state.lock().unwrap().coal.policy() {
+    let fill = match lock_tenants(&shared.state).coal.policy() {
         StragglerPolicy::Deadline { fill, .. } => fill,
         StragglerPolicy::Wait => FillAction::NoOp,
     };
     // Observe: the shard's latest published step IS the batch input —
     // tenants are rows of it, no gather needed.
     let t0 = Instant::now();
-    let snapshot = Arc::clone(&shard.state.lock().unwrap().result);
+    let snapshot = Arc::clone(&lock_state(&shard.state).result);
     // Fresh goals start from zeroed recurrent rows, like a fresh
     // client-side Policy.
     let mut reset = vec![false; width];
@@ -425,7 +450,7 @@ fn run_tick(
                                 break;
                             }
                             Err(TrySendError::Full(m)) => {
-                                if shared.state.lock().unwrap().shutdown {
+                                if lock_tenants(&shared.state).shutdown {
                                     stalled.push(tenant);
                                     break;
                                 }
@@ -483,7 +508,7 @@ fn run_tick(
     }
     // Publish counters; reap members whose handle hung up mid-stream.
     {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_tenants(&shared.state);
         st.infer_runs.add(runs);
         st.agent_steps.add(agent_steps);
         st.gather_lat.push(gather_s);
@@ -505,7 +530,7 @@ fn fail(shared: &TenantShared, members: &mut HashMap<u64, MemberState>, msg: Str
         let _ = m.tx.try_send(TrajMsg::Error(msg.clone()));
     }
     members.clear();
-    let mut st = shared.state.lock().unwrap();
+    let mut st = lock_tenants(&shared.state);
     st.shutdown = true;
     st.error = Some(msg);
     shared.posted.notify_all();

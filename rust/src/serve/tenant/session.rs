@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::sim::Task;
 
-use super::driver::TenantShared;
+use super::driver::{lock_tenants, TenantShared};
 
 /// How the server picks actions for a tenant lease.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,7 +73,7 @@ impl ControlInner {
         if self.detached.swap(true, Ordering::SeqCst) {
             return;
         }
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_tenants(&self.shared.state);
         st.coal.unregister(self.tenant);
         st.detached.push(self.tenant);
         // Wake the driver: it may now have a complete tick (every
@@ -116,7 +116,7 @@ impl TenantControl {
         if self.inner.detached.load(Ordering::SeqCst) {
             bail!("set_goal on a detached tenant session");
         }
-        let mut st = self.inner.shared.state.lock().unwrap();
+        let mut st = lock_tenants(&self.inner.shared.state);
         if st.shutdown {
             let msg = st.error.clone().unwrap_or_else(|| "server shut down".into());
             bail!("serve: {msg}");
@@ -229,7 +229,7 @@ impl TenantSession {
                 if self.control.detached() {
                     return Ok(None);
                 }
-                let st = self.control.inner.shared.state.lock().unwrap();
+                let st = lock_tenants(&self.control.inner.shared.state);
                 if let Some(msg) = &st.error {
                     bail!("serve: {msg}");
                 }

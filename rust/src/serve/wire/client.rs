@@ -17,14 +17,27 @@
 //! thread, drive them from others. Dropping the client closes the
 //! socket, which errors out all of its sessions and — server-side —
 //! detaches their leases.
+//!
+//! With [`RemoteClient::connect_with_resume`], a dropped connection is
+//! no longer fatal: sessions reconnect with capped exponential backoff
+//! (jittered), present their grant's resume token, and the server
+//! reattaches the parked lease — replaying the one step that may have
+//! been applied but not delivered, while the client re-sends submits
+//! the server never saw. The delivered observation stream is bitwise
+//! identical to an undisturbed run (`rust/tests/serve_chaos.rs`).
+//! Overload sheds (`ERR_RETRY_AFTER`) are also absorbed transparently:
+//! the client sleeps out the server's retry-after hint and re-sends the
+//! shed submit. Resume covers plain env sessions only — agent tenancies
+//! hold server-side recurrent state a reconnecting client cannot prove
+//! continuity for, so their leases release on disconnect.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -32,10 +45,27 @@ use crate::metrics::Window;
 use crate::serve::session::SessionView;
 use crate::sim::Task;
 
-use super::frame::{self, Frame, ReadError, StepFrame, ERR_LEASE};
+use super::frame::{
+    self, retry_after_ms, Frame, ReadError, StepFrame, ERR_LEASE, ERR_RETRY_AFTER,
+};
 
 /// How many latency samples a remote session keeps for its p50/p95.
 const REMOTE_LATENCY_WINDOW: usize = 1024;
+
+/// Set on every client-chosen request id (lease/stats/dump). Server-
+/// chosen wire session ids are small counters that never reach this
+/// bit, so an `ERROR`'s `re` field routes unambiguously even though
+/// the two id spaces would otherwise collide numerically.
+const REQ_BIT: u64 = 1 << 62;
+
+/// Set on resume request ids — their own namespace, distinct from both
+/// plain requests and session ids, so `RESUMED` / resume-refusal
+/// errors can never be misrouted to a lease waiter or a mailbox.
+const RESUME_REQ_BIT: u64 = 1 << 63;
+
+/// Cap on transparent re-submits after shed (`ERR_RETRY_AFTER`)
+/// answers, per submit — beyond this the shed surfaces as an error.
+const MAX_SHED_RETRIES: u32 = 64;
 
 /// What the reader routes into a session's mailbox.
 enum SessMsg {
@@ -50,12 +80,16 @@ enum SessMsg {
         view: StepFrame,
     },
     Detached,
-    Error(String),
+    Error {
+        code: u16,
+        msg: String,
+    },
 }
 
 /// A granted lease, delivered from the reader to `open_session`.
 struct GrantMsg {
     session: u64,
+    token: u64,
     task: Task,
     obs_floats: u32,
     slots: Vec<u32>,
@@ -70,21 +104,100 @@ type StatsReply = (u32, String);
 /// Answer to a `Dump` request: ok flag + bundle path or decline reason.
 type DumpReply = (bool, String);
 
+/// Answer to a `Resume` request: the server's applied count, or the
+/// refusal message.
+type ResumeReply = std::result::Result<u64, String>;
+
 #[derive(Default)]
 struct Routes {
     leases: HashMap<u64, Sender<LeaseReply>>,
     sessions: HashMap<u64, Sender<SessMsg>>,
     stats: HashMap<u64, Sender<StatsReply>>,
     dumps: HashMap<u64, Sender<DumpReply>>,
+    resumes: HashMap<u64, Sender<ResumeReply>>,
+}
+
+/// Reconnect/backoff policy for [`RemoteClient::connect_with_resume`].
+/// Attempt `k` sleeps `min(cap_ms, base_ms · 2^(k-1))` ± 25% jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct ResumeCfg {
+    /// Reconnect+resume attempts per outage before giving up.
+    pub max_retries: u32,
+    /// First backoff delay, in milliseconds (doubles per attempt).
+    pub base_ms: u64,
+    /// Backoff ceiling, in milliseconds.
+    pub cap_ms: u64,
+    /// Jitter seed. Deterministic per (seed, attempt); give each client
+    /// of a fleet its own seed so their retries spread out.
+    pub seed: u64,
+}
+
+impl Default for ResumeCfg {
+    fn default() -> ResumeCfg {
+        ResumeCfg {
+            max_retries: 8,
+            base_ms: 50,
+            cap_ms: 2000,
+            seed: 0,
+        }
+    }
+}
+
+/// Reconnect machinery, present only on `connect_with_resume` clients.
+struct ResumeMeta {
+    addr: String,
+    cfg: ResumeCfg,
+    /// Serializes re-dials: one session reconnects, the rest block here
+    /// and then find the connection already healthy.
+    gate: Mutex<()>,
+    /// Sessions successfully resumed (lease reattached and reconciled).
+    resumes: AtomicU64,
+    /// Sockets re-dialed (≤ resumes: one reconnect serves every session
+    /// of the client).
+    reconnects: AtomicU64,
+    /// Total milliseconds callers spent in reconnect backoff.
+    backoff_ms: AtomicU64,
+}
+
+/// Capped exponential backoff with deterministic ±25% jitter
+/// (splitmix64 over `(seed, attempt)` — no RNG state to carry).
+fn backoff_delay(cfg: &ResumeCfg, attempt: u32) -> u64 {
+    let exp = u64::from(attempt.saturating_sub(1).min(20));
+    let capped = cfg.base_ms.max(1).saturating_mul(1 << exp).min(cfg.cap_ms.max(1));
+    let mut z = cfg
+        .seed
+        .wrapping_add(u64::from(attempt).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let jitter = capped / 4;
+    if jitter == 0 {
+        capped
+    } else {
+        capped - jitter / 2 + z % jitter
+    }
 }
 
 struct ClientShared {
-    /// All client→server frames are written under this lock.
+    /// All client→server frames are written under this lock. Swapped in
+    /// place on reconnect.
     writer: Mutex<TcpStream>,
+    /// Shutdown handle of the *current* socket (also swapped on
+    /// reconnect); closing it unblocks the live reader thread.
+    conn: Mutex<TcpStream>,
     routes: Mutex<Routes>,
-    /// Why the connection died, once it has.
+    /// Why the connection died, once it has. Cleared by a reconnect.
     dead: Mutex<Option<String>>,
     next_req: AtomicU64,
+    /// Reader threads spawned over this client's lifetime (one per
+    /// (re)connect); all joined on drop.
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Set by `RemoteClient::drop`: no further reconnects may start.
+    closing: AtomicBool,
+    /// Frames the reader rejected as malformed (corruption guard).
+    bad_frames: AtomicU64,
+    /// Reconnect/resume machinery; `None` on plain `connect`.
+    resume: Option<ResumeMeta>,
 }
 
 fn death(shared: &ClientShared) -> String {
@@ -104,51 +217,134 @@ fn send_frame(shared: &ClientShared, f: &Frame) -> Result<()> {
     frame::write_frame(&mut *w, f).context("write frame")
 }
 
+/// Dial and perform the hello/welcome handshake; returns the socket
+/// (reader end), plus writer and shutdown clones, and the shard count.
+fn dial(addr: &str) -> Result<(TcpStream, TcpStream, TcpStream, u32)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    frame::write_frame(&mut stream, &Frame::Hello).context("send hello")?;
+    let shards = match frame::read_frame_dir(&mut stream, false) {
+        Ok(Frame::Welcome { shards }) => shards,
+        Ok(other) => bail!("handshake: unexpected frame {other:?}"),
+        Err(e) => bail!("handshake with {addr} failed: {e}"),
+    };
+    let shutdown = stream.try_clone().context("clone socket")?;
+    let writer = stream.try_clone().context("clone socket")?;
+    Ok((stream, writer, shutdown, shards))
+}
+
+fn spawn_reader(shared: &Arc<ClientShared>, stream: TcpStream) -> Result<()> {
+    let for_reader = Arc::clone(shared);
+    let h = std::thread::Builder::new()
+        .name("bps-wire-client".into())
+        .spawn(move || client_reader(stream, for_reader))
+        .context("spawn client reader")?;
+    shared.readers.lock().unwrap().push(h);
+    Ok(())
+}
+
+/// Re-dial after a connection death, serialized by the resume gate: the
+/// winner swaps the writer/shutdown sockets and spawns a fresh reader;
+/// losers block on the gate, then find `dead` already cleared. Backoff
+/// is the caller's job — between attempts, never under the gate.
+fn ensure_connected(shared: &Arc<ClientShared>) -> Result<()> {
+    let meta = shared
+        .resume
+        .as_ref()
+        .expect("ensure_connected without resume");
+    let _gate = meta.gate.lock().unwrap();
+    if shared.closing.load(Ordering::SeqCst) {
+        bail!("client is shutting down");
+    }
+    if shared.dead.lock().unwrap().is_none() {
+        return Ok(()); // another session already reconnected
+    }
+    let (stream, writer, shutdown, _shards) = dial(&meta.addr)?;
+    *shared.writer.lock().unwrap() = writer;
+    *shared.conn.lock().unwrap() = shutdown;
+    *shared.dead.lock().unwrap() = None;
+    if let Err(e) = spawn_reader(shared, stream) {
+        // No reader means mailboxes would starve forever — mark the
+        // connection dead again so callers keep retrying or fail.
+        *shared.dead.lock().unwrap() = Some(format!("spawn reader: {e:#}"));
+        return Err(e);
+    }
+    meta.reconnects.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
 /// One TCP connection to a `WireServer` (see module docs).
 pub struct RemoteClient {
     shared: Arc<ClientShared>,
-    /// Shutdown handle; closing it unblocks the reader thread.
-    stream: TcpStream,
-    reader: Option<JoinHandle<()>>,
     shards: u32,
 }
 
 impl RemoteClient {
     /// Dial `addr` (e.g. `"127.0.0.1:7447"`) and perform the
-    /// hello/welcome handshake.
+    /// hello/welcome handshake. A dropped connection is fatal to the
+    /// client's sessions; see
+    /// [`connect_with_resume`](RemoteClient::connect_with_resume).
     pub fn connect(addr: &str) -> Result<RemoteClient> {
-        let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        let _ = stream.set_nodelay(true);
-        frame::write_frame(&mut stream, &Frame::Hello).context("send hello")?;
-        let shards = match frame::read_frame_dir(&mut stream, false) {
-            Ok(Frame::Welcome { shards }) => shards,
-            Ok(other) => bail!("handshake: unexpected frame {other:?}"),
-            Err(e) => bail!("handshake with {addr} failed: {e}"),
-        };
-        let shutdown_handle = stream.try_clone().context("clone socket")?;
-        let writer = stream.try_clone().context("clone socket")?;
+        RemoteClient::connect_inner(addr, None)
+    }
+
+    /// Like [`connect`](RemoteClient::connect), but sessions survive
+    /// connection drops: they reconnect under `cfg`'s backoff policy and
+    /// resume their parked lease (server `--park-ttl`), transparently to
+    /// the `submit → wait → view` caller. See the module docs.
+    pub fn connect_with_resume(addr: &str, cfg: ResumeCfg) -> Result<RemoteClient> {
+        RemoteClient::connect_inner(addr, Some(cfg))
+    }
+
+    fn connect_inner(addr: &str, resume: Option<ResumeCfg>) -> Result<RemoteClient> {
+        let (stream, writer, shutdown, shards) = dial(addr)?;
         let shared = Arc::new(ClientShared {
             writer: Mutex::new(writer),
+            conn: Mutex::new(shutdown),
             routes: Mutex::new(Routes::default()),
             dead: Mutex::new(None),
             next_req: AtomicU64::new(0),
+            readers: Mutex::new(Vec::new()),
+            closing: AtomicBool::new(false),
+            bad_frames: AtomicU64::new(0),
+            resume: resume.map(|cfg| ResumeMeta {
+                addr: addr.to_string(),
+                cfg,
+                gate: Mutex::new(()),
+                resumes: AtomicU64::new(0),
+                reconnects: AtomicU64::new(0),
+                backoff_ms: AtomicU64::new(0),
+            }),
         });
-        let for_reader = Arc::clone(&shared);
-        let reader = std::thread::Builder::new()
-            .name("bps-wire-client".into())
-            .spawn(move || client_reader(stream, for_reader))
-            .context("spawn client reader")?;
-        Ok(RemoteClient {
-            shared,
-            stream: shutdown_handle,
-            reader: Some(reader),
-            shards,
-        })
+        spawn_reader(&shared, stream)?;
+        Ok(RemoteClient { shared, shards })
     }
 
     /// Shards the server advertised in its welcome.
     pub fn num_shards(&self) -> usize {
         self.shards as usize
+    }
+
+    /// `(resumes, backoff_ms_total)` over this client's lifetime: how
+    /// many session resumes completed, and how long callers spent in
+    /// reconnect backoff. Zeros for plain [`connect`] clients.
+    ///
+    /// [`connect`]: RemoteClient::connect
+    pub fn resume_stats(&self) -> (u64, u64) {
+        match &self.shared.resume {
+            Some(m) => (
+                m.resumes.load(Ordering::Relaxed),
+                m.backoff_ms.load(Ordering::Relaxed),
+            ),
+            None => (0, 0),
+        }
+    }
+
+    /// Frames the reader rejected as malformed. Fault-injected payload
+    /// corruption lands here: the client refuses the frame and treats
+    /// the connection as dead rather than adopting garbage.
+    pub fn bad_frames(&self) -> u64 {
+        self.shared.bad_frames.load(Ordering::Relaxed)
     }
 
     /// Lease `n_envs` slots of `task` on the server — the remote
@@ -163,7 +359,7 @@ impl RemoteClient {
                 frame::MAX_SESSION_ENVS
             );
         }
-        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let req = (self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1) | REQ_BIT;
         let (tx, rx) = channel();
         self.shared.routes.lock().unwrap().leases.insert(req, tx);
         let lease = Frame::Lease {
@@ -186,6 +382,7 @@ impl RemoteClient {
         let mut session = RemoteSession {
             shared: Arc::clone(&self.shared),
             id: grant.session,
+            token: grant.token,
             task: grant.task,
             obs_floats: of,
             slots: grant.slots.iter().map(|&s| s as usize).collect(),
@@ -200,6 +397,9 @@ impl RemoteClient {
             synced: 0,
             submitted_seq: 0,
             delivered_seq: 0,
+            steps_recv: 0,
+            unacked: VecDeque::new(),
+            shed_retries: 0,
             latency: Window::new(REMOTE_LATENCY_WINDOW),
             detached: false,
         };
@@ -236,7 +436,7 @@ impl RemoteClient {
                 frame::MAX_VARIANT_NAME
             );
         }
-        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let req = (self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1) | REQ_BIT;
         let (tx, rx) = channel();
         self.shared.routes.lock().unwrap().leases.insert(req, tx);
         let lease = Frame::LeasePolicy {
@@ -276,7 +476,7 @@ impl RemoteClient {
                 agent.initial_step = step;
                 agent.initial = view;
             }
-            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
+            Ok(SessMsg::Error { msg, .. }) => bail!("serve: {msg}"),
             Ok(_) => bail!("open_agent: unexpected frame before the initial observation"),
             Err(_) => bail!("connection lost: {}", death(&self.shared)),
         }
@@ -288,7 +488,7 @@ impl RemoteClient {
     /// byte-identical to what the server's `GET /metrics` endpoint would
     /// serve at the same instant. Blocks until the reply arrives.
     pub fn stats_text(&self) -> Result<(u32, String)> {
-        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let req = (self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1) | REQ_BIT;
         let (tx, rx) = channel();
         self.shared.routes.lock().unwrap().stats.insert(req, tx);
         if let Err(e) = send_frame(&self.shared, &Frame::Stats { req }) {
@@ -307,7 +507,7 @@ impl RemoteClient {
     /// (no `--dump-dir`) or the bundle write failed. Blocks until the
     /// reply arrives.
     pub fn dump(&self) -> Result<String> {
-        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        let req = (self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1) | REQ_BIT;
         let (tx, rx) = channel();
         self.shared.routes.lock().unwrap().dumps.insert(req, tx);
         if let Err(e) = send_frame(&self.shared, &Frame::Dump { req }) {
@@ -324,8 +524,31 @@ impl RemoteClient {
 
 impl Drop for RemoteClient {
     fn drop(&mut self) {
-        let _ = self.stream.shutdown(Shutdown::Both);
-        if let Some(h) = self.reader.take() {
+        // Order matters: flag first (no new reconnects may start), then
+        // wait out any in-flight re-dial under the gate (so the reader
+        // it spawns is in `readers` before the join sweep), then cut the
+        // current socket to unblock the live reader.
+        self.shared.closing.store(true, Ordering::SeqCst);
+        if let Some(meta) = &self.shared.resume {
+            drop(meta.gate.lock());
+        }
+        {
+            let conn = self
+                .shared
+                .conn
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<_> = {
+            let mut r = self
+                .shared
+                .readers
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            r.drain(..).collect()
+        };
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -341,6 +564,12 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
             Ok(f) => f,
             Err(ReadError::Eof) => break,
             Err(e) => {
+                if matches!(e, ReadError::Wire(_)) {
+                    // Malformed bytes (corruption, not transport): count
+                    // the rejection — chaos tests assert the client
+                    // refused the frame instead of adopting garbage.
+                    shared.bad_frames.fetch_add(1, Ordering::Relaxed);
+                }
                 why = Some(e.to_string());
                 break;
             }
@@ -349,6 +578,7 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
             Frame::Grant {
                 req,
                 session,
+                token,
                 task,
                 obs_floats,
                 slots,
@@ -360,6 +590,7 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
                     Some(reply) => {
                         let _ = reply.send(Ok(GrantMsg {
                             session,
+                            token,
                             task,
                             obs_floats,
                             slots,
@@ -401,21 +632,32 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
                     let _ = tx.send(SessMsg::Detached);
                 }
             }
+            Frame::Resumed { req, applied, .. } => {
+                let mut r = shared.routes.lock().unwrap();
+                if let Some(reply) = r.resumes.remove(&req) {
+                    let _ = reply.send(Ok(applied));
+                }
+            }
             Frame::Error { re, code, msg } => {
                 if re == 0 {
                     why = Some(format!("server error: {msg}"));
                     break;
                 }
-                // Route by code, not by id: lease req ids (client-chosen)
-                // and wire session ids (server-chosen) are separate
-                // namespaces that can collide numerically.
+                // Route by id namespace (see REQ_BIT / RESUME_REQ_BIT):
+                // resume refusals first, then client-chosen request ids
+                // (lease declines — terminal ERR_LEASE or retry-after
+                // overload sheds), then server-chosen session ids.
                 let mut r = shared.routes.lock().unwrap();
-                if code == ERR_LEASE {
+                if let Some(reply) = r.resumes.remove(&re) {
+                    let _ = reply.send(Err(msg));
+                } else if (code == ERR_LEASE || code == ERR_RETRY_AFTER)
+                    && r.leases.contains_key(&re)
+                {
                     if let Some(reply) = r.leases.remove(&re) {
                         let _ = reply.send(Err(msg));
                     }
                 } else if let Some(tx) = r.sessions.get(&re) {
-                    let _ = tx.send(SessMsg::Error(msg));
+                    let _ = tx.send(SessMsg::Error { code, msg });
                 }
             }
             Frame::StatsReply { req, version, text } => {
@@ -438,19 +680,26 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
             | Frame::LeasePolicy { .. }
             | Frame::Goal { .. }
             | Frame::Stats { .. }
-            | Frame::Dump { .. } => {
+            | Frame::Dump { .. }
+            | Frame::Resume { .. } => {
                 why = Some("unexpected client-bound frame".into());
                 break;
             }
         }
     }
+    // Routes first, *then* the death note. Dropping the senders errors
+    // out every blocked lease/step wait; resuming sessions key their
+    // reconnect on `dead`, so it must become `Some` only after this
+    // (old) reader can no longer wipe the new connection's routes.
+    {
+        let mut r = shared.routes.lock().unwrap();
+        r.leases.clear();
+        r.sessions.clear();
+        r.stats.clear();
+        r.dumps.clear();
+        r.resumes.clear();
+    }
     *shared.dead.lock().unwrap() = Some(why.unwrap_or_else(|| "connection closed".into()));
-    // Dropping the senders errors out every blocked lease/step wait.
-    let mut r = shared.routes.lock().unwrap();
-    r.leases.clear();
-    r.sessions.clear();
-    r.stats.clear();
-    r.dumps.clear();
 }
 
 /// A lease on a remote shard, driven through the same
@@ -458,6 +707,9 @@ fn client_reader(stream: TcpStream, shared: Arc<ClientShared>) {
 pub struct RemoteSession {
     shared: Arc<ClientShared>,
     id: u64,
+    /// Opaque resume token minted with the grant; presented on RESUME
+    /// to prove ownership of the parked lease.
+    token: u64,
     task: Task,
     obs_floats: usize,
     slots: Vec<usize>,
@@ -478,6 +730,17 @@ pub struct RemoteSession {
     /// `RemoteTicket::wait` drain frames left behind by tickets that
     /// were dropped without waiting, instead of desyncing one-behind.
     delivered_seq: u64,
+    /// Step frames *adopted* so far, counting the seed — the resume
+    /// protocol's `delivered` ordinal. Distinct from `delivered_seq`,
+    /// which also counts error frames for ticket sequencing.
+    steps_recv: u64,
+    /// Submits not yet answered by an adopted step, tagged with the
+    /// `steps_recv` ordinal each will land on. On resume, entries the
+    /// server never applied are re-sent; applied ones are matched to
+    /// the replayed step. Popped as their steps arrive.
+    unacked: VecDeque<(u64, Vec<(u32, u8)>)>,
+    /// Transparent re-submits after shed answers, since the last step.
+    shed_retries: u32,
     latency: Window,
     detached: bool,
 }
@@ -535,11 +798,28 @@ impl RemoteSession {
             .zip(actions)
             .map(|(&s, &a)| (s as u32, a))
             .collect();
+        // Record before sending: if the write races a connection drop,
+        // only the resume reconciliation can tell whether the server
+        // applied this submit (replay it) or never saw it (re-send it).
+        let expected = self.steps_recv + self.unacked.len() as u64 + 1;
+        self.unacked.push_back((expected, pairs.clone()));
         let submit = Frame::Submit {
             session: self.id,
             pairs,
         };
-        send_frame(&self.shared, &submit)?;
+        if let Err(e) = send_frame(&self.shared, &submit) {
+            if self.shared.resume.is_some() {
+                // try_resume re-sends the unacked queue — including this
+                // submit if (and only if) the server never applied it.
+                if let Err(re) = self.try_resume(&format!("{e:#}")) {
+                    self.unacked.pop_back();
+                    return Err(re);
+                }
+            } else {
+                self.unacked.pop_back();
+                return Err(e);
+            }
+        }
         self.submitted_seq += 1;
         let seq = self.submitted_seq;
         Ok(RemoteTicket {
@@ -577,7 +857,7 @@ impl RemoteSession {
                     // Surface it: a caller that only detaches (e.g. the
                     // CLI's clean-shutdown path) must still exit nonzero
                     // when the server reported a failure mid-stream.
-                    Ok(SessMsg::Error(msg)) => {
+                    Ok(SessMsg::Error { msg, .. }) => {
                         errored = Some(msg);
                         break;
                     }
@@ -602,38 +882,179 @@ impl RemoteSession {
         (p50, p95)
     }
 
-    /// Block for the next `Step` frame and adopt its arrays.
+    /// Block for the next `Step` frame and adopt its arrays. Absorbs
+    /// shed answers (sleep out the retry-after hint, re-send) and — on
+    /// resume-enabled clients — connection deaths (reconnect, resume
+    /// the parked lease, keep waiting).
     fn recv_step(&mut self) -> Result<()> {
-        match self.mailbox.recv() {
-            Ok(SessMsg::Step { step, view }) => {
-                let n = self.slots.len();
-                let of = self.obs_floats;
-                if view.obs.len() != n * of
-                    || view.goal.len() != n * 3
-                    || view.rewards.len() != n
-                    || view.dones.len() != n
-                    || view.successes.len() != n
-                    || view.spl.len() != n
-                    || view.scores.len() != n
-                {
-                    bail!("server sent a mis-shaped step view");
+        loop {
+            match self.mailbox.recv() {
+                Ok(SessMsg::Step { step, view }) => {
+                    let n = self.slots.len();
+                    let of = self.obs_floats;
+                    if view.obs.len() != n * of
+                        || view.goal.len() != n * 3
+                        || view.rewards.len() != n
+                        || view.dones.len() != n
+                        || view.successes.len() != n
+                        || view.spl.len() != n
+                        || view.scores.len() != n
+                    {
+                        bail!("server sent a mis-shaped step view");
+                    }
+                    self.obs = view.obs;
+                    self.goal = view.goal;
+                    self.rewards = view.rewards;
+                    self.dones = view.dones;
+                    self.successes = view.successes;
+                    self.spl = view.spl;
+                    self.scores = view.scores;
+                    self.synced = step;
+                    self.steps_recv += 1;
+                    self.shed_retries = 0;
+                    while self
+                        .unacked
+                        .front()
+                        .is_some_and(|&(exp, _)| exp <= self.steps_recv)
+                    {
+                        self.unacked.pop_front();
+                    }
+                    return Ok(());
                 }
-                self.obs = view.obs;
-                self.goal = view.goal;
-                self.rewards = view.rewards;
-                self.dones = view.dones;
-                self.successes = view.successes;
-                self.spl = view.spl;
-                self.scores = view.scores;
-                self.synced = step;
-                Ok(())
+                Ok(SessMsg::Traj { .. }) => {
+                    bail!("server sent a trajectory frame to a plain env session")
+                }
+                Ok(SessMsg::Detached) => bail!("session detached by the server"),
+                Ok(SessMsg::Error { code, msg }) => {
+                    // An overload shed is transient by contract: honor
+                    // the server's retry-after hint and re-send the shed
+                    // submit (the most recent unacked one) instead of
+                    // surfacing an error.
+                    if code == ERR_RETRY_AFTER && self.shed_retries < MAX_SHED_RETRIES {
+                        let hint = retry_after_ms(&msg);
+                        let resend = self.unacked.back().map(|(_, p)| p.clone());
+                        if let (Some(ms), Some(pairs)) = (hint, resend) {
+                            self.shed_retries += 1;
+                            std::thread::sleep(Duration::from_millis(ms));
+                            let f = Frame::Submit {
+                                session: self.id,
+                                pairs,
+                            };
+                            if send_frame(&self.shared, &f).is_ok() {
+                                continue;
+                            }
+                        }
+                    }
+                    bail!("serve: {msg}")
+                }
+                Err(_) => {
+                    // The connection died under us. With resume enabled
+                    // this is recoverable: reattach and keep waiting —
+                    // the missing step is replayed, or its submit
+                    // re-sent, by the resume reconciliation.
+                    let cause = death(&self.shared);
+                    if self.shared.resume.is_none() {
+                        bail!("connection lost: {cause}");
+                    }
+                    self.try_resume(&cause)?;
+                }
             }
-            Ok(SessMsg::Traj { .. }) => {
-                bail!("server sent a trajectory frame to a plain env session")
+        }
+    }
+
+    /// Reattach this session after a connection death: reconnect under
+    /// the backoff policy, present the resume token, adopt the fresh
+    /// mailbox, and reconcile with the server's applied count — it
+    /// replays an applied-but-undelivered step; submits it never
+    /// applied are re-sent here. On success the delivered observation
+    /// stream continues bitwise exactly where it left off.
+    fn try_resume(&mut self, cause: &str) -> Result<()> {
+        let meta = match self.shared.resume.as_ref() {
+            Some(m) => m,
+            None => bail!("connection lost: {cause}"),
+        };
+        let cfg = meta.cfg;
+        let mut last = cause.to_string();
+        let mut attempt = 0u32;
+        'attempts: loop {
+            if attempt >= cfg.max_retries {
+                bail!(
+                    "resume gave up after {} attempts; last error: {last}",
+                    cfg.max_retries
+                );
             }
-            Ok(SessMsg::Detached) => bail!("session detached by the server"),
-            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
-            Err(_) => bail!("connection lost: {}", death(&self.shared)),
+            attempt += 1;
+            let delay = backoff_delay(&cfg, attempt);
+            std::thread::sleep(Duration::from_millis(delay));
+            meta.backoff_ms.fetch_add(delay, Ordering::Relaxed);
+            if let Err(e) = ensure_connected(&self.shared) {
+                last = format!("{e:#}");
+                continue;
+            }
+            let req = (self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1) | RESUME_REQ_BIT;
+            let (stx, mailbox) = channel();
+            let (rtx, rrx) = channel();
+            {
+                let mut r = self.shared.routes.lock().unwrap();
+                r.sessions.insert(self.id, stx);
+                r.resumes.insert(req, rtx);
+            }
+            let f = Frame::Resume {
+                req,
+                session: self.id,
+                token: self.token,
+                delivered: self.steps_recv,
+            };
+            if let Err(e) = send_frame(&self.shared, &f) {
+                let mut r = self.shared.routes.lock().unwrap();
+                r.sessions.remove(&self.id);
+                r.resumes.remove(&req);
+                last = format!("{e:#}");
+                continue;
+            }
+            let applied = match rrx.recv() {
+                Ok(Ok(applied)) => applied,
+                Ok(Err(msg)) => {
+                    // The server answered and refused (park TTL expired,
+                    // parking disabled, token mismatch) — terminal;
+                    // retrying cannot help.
+                    self.shared.routes.lock().unwrap().sessions.remove(&self.id);
+                    bail!("serve: {msg}");
+                }
+                Err(_) => {
+                    // Died again mid-handshake; that reader's teardown
+                    // already cleared the routes we inserted.
+                    last = death(&self.shared);
+                    continue;
+                }
+            };
+            let owed = applied.saturating_sub(self.steps_recv);
+            if owed > 1 {
+                self.shared.routes.lock().unwrap().sessions.remove(&self.id);
+                bail!(
+                    "resume cannot reconstruct {owed} applied-but-undelivered \
+                     steps (only the latest is replayable; keep at most one \
+                     submit in flight across reconnects)"
+                );
+            }
+            // Submits past `applied` never reached the shard: re-send
+            // them in order. The one *at* `applied`, if any, is answered
+            // by the replay the server queued behind RESUMED.
+            for (exp, pairs) in self.unacked.iter() {
+                if *exp > applied {
+                    let f = Frame::Submit {
+                        session: self.id,
+                        pairs: pairs.clone(),
+                    };
+                    if let Err(e) = send_frame(&self.shared, &f) {
+                        last = format!("{e:#}");
+                        continue 'attempts;
+                    }
+                }
+            }
+            self.mailbox = mailbox;
+            meta.resumes.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
         }
     }
 }
@@ -814,7 +1235,7 @@ impl RemoteAgent {
                 self.detached = true;
                 Ok(None)
             }
-            Ok(SessMsg::Error(msg)) => bail!("serve: {msg}"),
+            Ok(SessMsg::Error { msg, .. }) => bail!("serve: {msg}"),
             Err(_) => bail!("connection lost: {}", death(&self.shared)),
         }
     }
@@ -836,7 +1257,7 @@ impl RemoteAgent {
                 match self.mailbox.recv() {
                     Ok(SessMsg::Detached) => break,
                     Ok(SessMsg::Step { .. }) | Ok(SessMsg::Traj { .. }) => continue,
-                    Ok(SessMsg::Error(msg)) => {
+                    Ok(SessMsg::Error { msg, .. }) => {
                         errored = Some(msg);
                         break;
                     }

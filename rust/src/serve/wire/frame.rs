@@ -59,14 +59,20 @@ pub const FT_STATS_REPLY: u8 = 14;
 // incident bundle (`bps stats ADDR --dump`).
 pub const FT_DUMP: u8 = 15;
 pub const FT_DUMP_REPLY: u8 = 16;
+// Fault-tolerance frames (DESIGN.md §0.12): reattach to a lease parked
+// by the server when its connection dropped.
+pub const FT_RESUME: u8 = 17;
+pub const FT_RESUMED: u8 = 18;
 
 // Error-frame codes (the `code` field of `Frame::Error`). The code also
 // disambiguates what the `re` field names: `ERR_LEASE` refers to a
-// client-chosen lease `req` id; `ERR_SESSION`/`ERR_SUBMIT`/`ERR_SHARD`
-// refer to a server-chosen wire session id (the two id spaces can
-// collide numerically). Codes 1–2 are connection-level (`re` = 0).
-// A slow-reader disconnect carries no code: a full outbox cannot carry
-// a farewell frame, so the policy is just a closed connection.
+// client-chosen lease `req` id; `ERR_SESSION`/`ERR_SUBMIT`/`ERR_SHARD`/
+// `ERR_SHARD_DOWN` refer to a server-chosen wire session id (the two id
+// spaces can collide numerically). Codes 1–2 and `ERR_SLOW_READER` are
+// connection-level (`re` = 0). Policy disconnects are never silent: a
+// slow-reader close is preceded by a best-effort [`ERR_SLOW_READER`]
+// farewell written directly to the socket (the outbox is full by
+// definition), and every shed answer carries [`ERR_RETRY_AFTER`].
 /// Malformed frame; the server closes the connection after sending this.
 pub const ERR_PROTOCOL: u16 = 1;
 /// Header carried an unsupported protocol version; connection closed.
@@ -79,6 +85,34 @@ pub const ERR_SESSION: u16 = 4;
 pub const ERR_SUBMIT: u16 = 5;
 /// The shard backing the session failed; the session is gone.
 pub const ERR_SHARD: u16 = 6;
+/// Overload shed: the request was declined, not failed — retry later.
+/// The message may carry a hint via [`with_retry_after`] /
+/// [`retry_after_ms`]. Sent for admission declines, submit-inbox
+/// floods (the submit is dropped, the connection and lease survive),
+/// failed resumes, and parked-slot exhaustion.
+pub const ERR_RETRY_AFTER: u16 = 7;
+/// Farewell before a slow-reader disconnect: the client's socket
+/// backlogged past the outbox bound. The lease is parked (resumable)
+/// when a park TTL is configured.
+pub const ERR_SLOW_READER: u16 = 8;
+/// The shard backing the session panicked and is quarantined; the
+/// lease is gone, but the shard may be restarted — the message carries
+/// a [`with_retry_after`] hint for when to try a fresh lease.
+pub const ERR_SHARD_DOWN: u16 = 9;
+
+/// Prefix `msg` with a machine-readable retry-after hint that
+/// [`retry_after_ms`] recovers. Kept inside the message string so the
+/// `ERROR` frame layout (and protocol version) is unchanged.
+pub fn with_retry_after(ms: u64, msg: &str) -> String {
+    format!("retry_after_ms={ms}; {msg}")
+}
+
+/// Parse the hint written by [`with_retry_after`], if present.
+pub fn retry_after_ms(msg: &str) -> Option<u64> {
+    let rest = msg.strip_prefix("retry_after_ms=")?;
+    let end = rest.find(';')?;
+    rest[..end].trim().parse().ok()
+}
 
 /// A frame-grammar violation. The server answers with an
 /// [`ERR_PROTOCOL`]/[`ERR_VERSION`] error frame (best effort) and closes
@@ -173,11 +207,14 @@ pub enum Frame {
     Lease { req: u64, task: Task, n_envs: u32 },
     /// Server → client: the lease was granted. `slots` are the
     /// shard-absolute env slot indices, in view order; `session` names
-    /// the lease in every later frame. An initial `Step` with the
-    /// current observations follows immediately.
+    /// the lease in every later frame. `token` is the opaque resume
+    /// token a later [`Frame::Resume`] must present to reattach to this
+    /// lease after a disconnect. An initial `Step` with the current
+    /// observations follows immediately.
     Grant {
         req: u64,
         session: u64,
+        token: u64,
         task: Task,
         obs_floats: u32,
         slots: Vec<u32>,
@@ -247,6 +284,24 @@ pub enum Frame {
     /// server-side bundle directory path; without, the reason the dump
     /// was declined (most commonly: no `--dump-dir`, recorder unarmed).
     DumpReply { req: u64, ok: bool, msg: String },
+    /// Client → server: reattach to a parked lease after a disconnect.
+    /// `session`/`token` must match a prior [`Frame::Grant`];
+    /// `delivered` is the last step sequence number the client fully
+    /// received, so the server can replay or discard the one in-flight
+    /// step. Answered by [`Frame::Resumed`] (then the step stream
+    /// continues) or an [`ERR_RETRY_AFTER`] error when the park
+    /// expired or the token does not match.
+    Resume {
+        req: u64,
+        session: u64,
+        token: u64,
+        delivered: u64,
+    },
+    /// Server → client: the lease is reattached. `applied` is how many
+    /// submits the server has fully applied; when `applied` is ahead of
+    /// the client's `delivered`, the step the client missed is replayed
+    /// immediately after this frame.
+    Resumed { req: u64, session: u64, applied: u64 },
 }
 
 impl Frame {
@@ -268,6 +323,8 @@ impl Frame {
             Frame::StatsReply { .. } => FT_STATS_REPLY,
             Frame::Dump { .. } => FT_DUMP,
             Frame::DumpReply { .. } => FT_DUMP_REPLY,
+            Frame::Resume { .. } => FT_RESUME,
+            Frame::Resumed { .. } => FT_RESUMED,
         }
     }
 }
@@ -414,12 +471,14 @@ pub fn encode(f: &Frame, out: &mut Vec<u8>) {
         Frame::Grant {
             req,
             session,
+            token,
             task,
             obs_floats,
             slots,
         } => {
             put_u64(out, *req);
             put_u64(out, *session);
+            put_u64(out, *token);
             out.push(task_to_wire(*task));
             put_u32(out, *obs_floats);
             put_u32(out, slots.len() as u32);
@@ -512,6 +571,26 @@ pub fn encode(f: &Frame, out: &mut Vec<u8>) {
             put_u32(out, msg.len() as u32);
             out.extend_from_slice(msg.as_bytes());
         }
+        Frame::Resume {
+            req,
+            session,
+            token,
+            delivered,
+        } => {
+            put_u64(out, *req);
+            put_u64(out, *session);
+            put_u64(out, *token);
+            put_u64(out, *delivered);
+        }
+        Frame::Resumed {
+            req,
+            session,
+            applied,
+        } => {
+            put_u64(out, *req);
+            put_u64(out, *session);
+            put_u64(out, *applied);
+        }
     }
     finish_frame(out);
 }
@@ -536,7 +615,7 @@ pub fn decode_header(b: &[u8; HEADER_LEN]) -> Result<Header, WireError> {
         return Err(WireError::BadVersion(b[2]));
     }
     let ftype = b[3];
-    if !(FT_HELLO..=FT_DUMP_REPLY).contains(&ftype) {
+    if !(FT_HELLO..=FT_RESUMED).contains(&ftype) {
         return Err(WireError::UnknownType(ftype));
     }
     let len = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
@@ -625,6 +704,7 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
         FT_GRANT => {
             let req = r.u64()?;
             let session = r.u64()?;
+            let token = r.u64()?;
             let task = task_from_wire(r.u8()?)?;
             let obs_floats = r.u32()?;
             let n = r.u32()? as u64;
@@ -636,6 +716,7 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             Frame::Grant {
                 req,
                 session,
+                token,
                 task,
                 obs_floats,
                 slots,
@@ -746,6 +827,17 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             let msg = String::from_utf8_lossy(r.take(len)?).into_owned();
             Frame::DumpReply { req, ok, msg }
         }
+        FT_RESUME => Frame::Resume {
+            req: r.u64()?,
+            session: r.u64()?,
+            token: r.u64()?,
+            delivered: r.u64()?,
+        },
+        FT_RESUMED => Frame::Resumed {
+            req: r.u64()?,
+            session: r.u64()?,
+            applied: r.u64()?,
+        },
         other => return Err(WireError::UnknownType(other)),
     };
     r.done()?;
@@ -754,7 +846,7 @@ pub fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
 
 /// Most envs one wire session may lease. Derived from the frame caps:
 /// a session's `SUBMIT` (`12 + 5n` ≤ [`SUBMIT_CAP`]) and `GRANT`
-/// (`25 + 4n` ≤ [`GRANT_CAP`]) must stay encodable, and its `STEP`
+/// (`33 + 4n` ≤ [`GRANT_CAP`]) must stay encodable, and its `STEP`
 /// view must fit [`MAX_FRAME`] (also obs-size dependent — the server
 /// checks that at lease time). Both ends enforce this so an over-sized
 /// lease fails diagnosably instead of bricking the session on its
@@ -764,7 +856,7 @@ pub const MAX_SESSION_ENVS: usize = 8192;
 /// Generous bound for the variable-length client→server `SUBMIT`
 /// payload (`12 + 5n` bytes — 64 KiB covers >13k slot/action pairs).
 const SUBMIT_CAP: usize = 64 << 10;
-/// Bound for the server→client `GRANT` payload (`25 + 4n` bytes).
+/// Bound for the server→client `GRANT` payload (`33 + 4n` bytes).
 const GRANT_CAP: usize = 64 << 10;
 /// Bound for an `ERROR` payload (`14 + msg` bytes).
 const ERROR_CAP: usize = 16 << 10;
@@ -807,6 +899,8 @@ pub fn payload_cap(ftype: u8, from_client: bool) -> Option<usize> {
         (FT_TRAJ, false) => Some(MAX_FRAME),
         (FT_STATS_REPLY, false) => Some(STATS_CAP),
         (FT_DUMP_REPLY, false) => Some(DUMP_REPLY_CAP),
+        (FT_RESUME, true) => Some(32),
+        (FT_RESUMED, false) => Some(24),
         _ => None,
     }
 }
@@ -907,6 +1001,7 @@ mod tests {
         roundtrip(Frame::Grant {
             req: 7,
             session: 42,
+            token: 0x1234_5678_9ABC_DEF0,
             task: Task::PointNav,
             obs_floats: 400,
             slots: vec![0, 1, 5, 9],
@@ -980,6 +1075,32 @@ mod tests {
                 scores: vec![1.0, 0.0],
             },
         });
+        roundtrip(Frame::Resume {
+            req: 11,
+            session: 42,
+            token: u64::MAX,
+            delivered: 99,
+        });
+        roundtrip(Frame::Resumed {
+            req: 11,
+            session: 42,
+            applied: 100,
+        });
+    }
+
+    /// Resume frames are asymmetric and fixed-size; the retry-after
+    /// hint survives its message-string round trip.
+    #[test]
+    fn resume_frames_and_retry_after_hint() {
+        assert_eq!(payload_cap(FT_RESUME, true), Some(32));
+        assert_eq!(payload_cap(FT_RESUME, false), None);
+        assert_eq!(payload_cap(FT_RESUMED, false), Some(24));
+        assert_eq!(payload_cap(FT_RESUMED, true), None);
+        let msg = with_retry_after(250, "shard 0 quarantined");
+        assert_eq!(retry_after_ms(&msg), Some(250));
+        assert!(msg.contains("shard 0 quarantined"));
+        assert_eq!(retry_after_ms("plain failure"), None);
+        assert_eq!(retry_after_ms("retry_after_ms=oops; x"), None);
     }
 
     /// The zero-copy server send path must emit exactly the bytes the
@@ -1120,14 +1241,16 @@ mod tests {
             FT_STATS_REPLY,
             FT_DUMP,
             FT_DUMP_REPLY,
+            FT_RESUME,
+            FT_RESUMED,
         ] {
             let h = [m[0], m[1], VERSION, ft, 0, 0, 0, 0];
             assert!(decode_header(&h).is_ok(), "type {ft} must validate");
         }
-        let h = [m[0], m[1], VERSION, FT_DUMP_REPLY + 1, 0, 0, 0, 0];
+        let h = [m[0], m[1], VERSION, FT_RESUMED + 1, 0, 0, 0, 0];
         assert_eq!(
             decode_header(&h),
-            Err(WireError::UnknownType(FT_DUMP_REPLY + 1))
+            Err(WireError::UnknownType(FT_RESUMED + 1))
         );
         // dump frames are asymmetric like stats frames
         assert_eq!(payload_cap(FT_DUMP, true), Some(8));

@@ -40,5 +40,5 @@ pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{RemoteAgent, RemoteClient, RemoteSession, RemoteTicket, RemoteTraj};
+pub use client::{RemoteAgent, RemoteClient, RemoteSession, RemoteTicket, RemoteTraj, ResumeCfg};
 pub use server::{ConnStats, WireConfig, WireServer};

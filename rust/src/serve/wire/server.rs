@@ -16,13 +16,27 @@
 //! ([`WireConfig::outbox_frames`]). A client that stops draining its
 //! socket eventually fills it; the next frame *disconnects* the
 //! connection instead of blocking a shard's pump behind one slow peer
-//! (`dropped_slow` in the [`ConnStats`] row). Inbound is bounded too:
-//! each session's submit queue holds at most
-//! [`WireConfig::inbox_submits`], and a peer flooding submits faster
-//! than the shard steps is likewise disconnected. Disconnect — slow,
-//! flooding, hostile, or crashed — detaches the connection's sessions,
-//! so their slots fall back to the auto-reset filler and co-tenants
-//! keep stepping.
+//! (`dropped_slow` in the [`ConnStats`] row) — after a best-effort
+//! `ERR_SLOW_READER` farewell written straight onto the socket, so the
+//! policy disconnect is never silent. Inbound is bounded too: each
+//! session's submit queue holds at most [`WireConfig::inbox_submits`];
+//! a peer flooding submits faster than the shard steps has the excess
+//! submit *shed* with an `ERR_RETRY_AFTER` frame (carrying a
+//! `retry_after_ms=` hint) while the connection and the lease survive.
+//! Disconnect — slow, hostile, or crashed — detaches the connection's
+//! sessions, so their slots fall back to the auto-reset filler and
+//! co-tenants keep stepping.
+//!
+//! **Resume (DESIGN.md §0.12).** Every grant carries an opaque resume
+//! token. With [`WireConfig::park_ttl_ticks`] set, an env session whose
+//! connection dies is *parked* instead of detached: the lease is held,
+//! the shard (if this session is its sole tenant) freezes, and a client
+//! that reconnects within the TTL sends `RESUME{session, token,
+//! delivered}` to reclaim it. The server answers `RESUMED{applied}`
+//! and replays the one step the client missed (if any), making the
+//! delivered observation stream bitwise-identical to an undisturbed
+//! run. Expired parks release their leases via the accept loop's
+//! reaper.
 //!
 //! **Hostile input.** Frame validation happens before allocation (see
 //! [`frame`](super::frame)); a malformed frame earns a best-effort error
@@ -50,26 +64,29 @@ use crate::obs::{
     Counter, EventLog, Gauge, Heartbeat, Histogram, Registry, TraceSink, Trigger,
     SNAPSHOT_VERSION, WIRE_PID,
 };
+use crate::serve::fault::Injector;
+use crate::serve::server::LeaseDecline;
 use crate::serve::session::{Session, SessionView};
 use crate::serve::tenant::session::{ActionMode, TenantControl, TenantSession, TrajStep};
 use crate::serve::SimServer;
 use crate::util::json::Json;
 
 use super::frame::{
-    self, Frame, ReadError, StepRef, ERR_LEASE, ERR_PROTOCOL, ERR_SESSION, ERR_SHARD, ERR_SUBMIT,
+    self, with_retry_after, Frame, ReadError, StepRef, ERR_LEASE, ERR_PROTOCOL, ERR_RETRY_AFTER,
+    ERR_SESSION, ERR_SHARD, ERR_SHARD_DOWN, ERR_SLOW_READER, ERR_SUBMIT,
 };
 
 /// Wire front-end knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct WireConfig {
     /// Server→client frames buffered per connection before the
     /// slow-reader disconnect policy fires.
     pub outbox_frames: usize,
     /// Client→server submits buffered per *session* before the flood
-    /// policy disconnects the connection. A well-behaved client
-    /// pipelines one or two submits; without this bound a peer writing
-    /// submits faster than the shard steps would grow server memory at
-    /// line rate.
+    /// policy sheds the excess submit with an `ERR_RETRY_AFTER` frame
+    /// (the connection survives). A well-behaved client pipelines one
+    /// or two submits; without this bound a peer writing submits faster
+    /// than the shard steps would grow server memory at line rate.
     pub inbox_submits: usize,
     /// Reap a connection after this many idle ticks (units of
     /// [`TICK`](crate::serve::TICK), i.e. milliseconds) with no frame
@@ -79,6 +96,16 @@ pub struct WireConfig {
     /// flagged `reaped`. `None` (the default) never reaps: a legitimate
     /// client may idle-hold a lease indefinitely.
     pub idle_timeout_ticks: Option<u64>,
+    /// Park env sessions of a dead connection for this many ticks
+    /// (milliseconds) awaiting a `RESUME`, instead of detaching them
+    /// immediately. `None` (the default) keeps the historical
+    /// detach-on-disconnect behavior. (`bps serve --park-ttl`.)
+    pub park_ttl_ticks: Option<u64>,
+    /// Fault-injection plane for chaos drills (`bps serve --fault`,
+    /// DESIGN.md §0.12): connection drops, write delays, and payload
+    /// corruption are applied in [`writer_loop`]; shard panics fire in
+    /// the shard drivers via `SimServer::arm_faults`.
+    pub fault: Option<Arc<Injector>>,
 }
 
 impl Default for WireConfig {
@@ -87,6 +114,8 @@ impl Default for WireConfig {
             outbox_frames: 256,
             inbox_submits: 64,
             idle_timeout_ticks: None,
+            park_ttl_ticks: None,
+            fault: None,
         }
     }
 }
@@ -135,6 +164,14 @@ struct WireObs {
     errors_out: Counter,
     dropped_slow: Counter,
     reaped: Counter,
+    /// Fault-tolerance plane (DESIGN.md §0.12): parked-session
+    /// lifecycle, resume outcomes, and flood sheds.
+    park_parked: Counter,
+    park_expired: Counter,
+    park_open: Gauge,
+    resume_ok: Counter,
+    resume_fail: Counter,
+    shed_flood: Counter,
     /// Latency-attribution phases owned by the wire layer: serializing a
     /// step/traj view into frame bytes, and flushing those bytes onto
     /// the socket (`serve.session.phase_us{phase=...}`).
@@ -158,6 +195,12 @@ impl WireObs {
             errors_out: reg.counter("wire.errors_out", no_labels),
             dropped_slow: reg.counter("wire.dropped_slow", no_labels),
             reaped: reg.counter("wire.reaped", no_labels),
+            park_parked: reg.counter("serve.park.parked", no_labels),
+            park_expired: reg.counter("serve.park.expired", no_labels),
+            park_open: reg.gauge("serve.park.open", no_labels),
+            resume_ok: reg.counter("serve.resume.ok", no_labels),
+            resume_fail: reg.counter("serve.resume.fail", no_labels),
+            shed_flood: reg.counter("serve.shed.flood", no_labels),
             encode_us: reg.histogram("serve.session.phase_us", &[("phase", "wire_encode")]),
             flush_us: reg.histogram("serve.session.phase_us", &[("phase", "wire_flush")]),
         }
@@ -196,6 +239,9 @@ struct ConnShared {
     events: Arc<EventLog>,
     /// Megaframe trace sink, for the wire encode/flush spans.
     trace: Arc<TraceSink>,
+    /// Connection-level fault injector ([`WireConfig::fault`]), applied
+    /// by the writer thread.
+    fault: Option<Arc<Injector>>,
 }
 
 impl ConnShared {
@@ -266,6 +312,29 @@ impl ConnShared {
     }
 }
 
+/// An env session parked after its connection died, awaiting a
+/// `RESUME` within [`WireConfig::park_ttl_ticks`]. Holding the
+/// [`Session`] keeps the lease (and so the frozen shard state) alive;
+/// dropping the entry releases it.
+struct ParkedSession {
+    session: Session,
+    /// The grant's opaque resume token; a `RESUME` must echo it.
+    token: u64,
+    /// Step frames this session's pump committed to the wire (the seed
+    /// view counts). `RESUME` reconciles the client's `delivered`
+    /// against this to decide between replaying the last step and
+    /// accepting a re-submission — exactly-once either way.
+    applied: u64,
+    obs_floats: usize,
+    /// Milliseconds-since-epoch after which the park expires.
+    deadline_ms: u64,
+}
+
+/// Parked sessions held at once before the earliest-deadline entry is
+/// evicted (its lease releases) to make room — parking must never grow
+/// without bound under connection churn.
+const MAX_PARKED: usize = 1024;
+
 struct WireShared {
     sim: Arc<SimServer>,
     cfg: WireConfig,
@@ -275,10 +344,28 @@ struct WireShared {
     shutting_down: AtomicBool,
     /// Epoch of every connection's idle clock.
     epoch: Instant,
+    /// Per-process secret folded into resume tokens, so tokens from a
+    /// previous server incarnation never validate against this one.
+    nonce: u64,
+    /// Sessions parked for resume, keyed by wire session id.
+    parked: Mutex<HashMap<u64, ParkedSession>>,
     /// Aggregate wire cells on the sim server's registry.
     obs: WireObs,
     events: Arc<EventLog>,
     trace: Arc<TraceSink>,
+}
+
+/// Mint the opaque resume token a grant carries (splitmix64 over the
+/// wire id and the server nonce): unguessable enough that a stray
+/// client cannot reclaim someone else's parked lease by id alone, with
+/// no per-session secret state to store.
+fn mint_token(shared: &WireShared, wire_id: u64) -> u64 {
+    let mut z = shared
+        .nonce
+        .wrapping_add(wire_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// Closed connections whose stats rows are kept for post-mortems; older
@@ -314,6 +401,11 @@ impl WireServer {
         let obs = WireObs::new(&sim.registry());
         let events = sim.events();
         let trace = sim.trace();
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED)
+            | 1;
         let shared = Arc::new(WireShared {
             sim,
             cfg,
@@ -322,6 +414,8 @@ impl WireServer {
             next_session: AtomicU64::new(0),
             shutting_down: AtomicBool::new(false),
             epoch: Instant::now(),
+            nonce,
+            parked: Mutex::new(HashMap::new()),
             obs,
             events,
             trace,
@@ -362,6 +456,15 @@ impl WireServer {
     pub fn accepted(&self) -> u64 {
         self.shared.next_conn.load(Ordering::Relaxed)
     }
+
+    /// Sessions currently parked awaiting resume (DESIGN.md §0.12).
+    /// `bps serve --once` holds its exit while this is nonzero: after an
+    /// injected (or real) connection kill, every conn is momentarily
+    /// closed while the client backs off, and without this check the
+    /// smoke server would read that window as "all clients done".
+    pub fn parked_open(&self) -> usize {
+        self.shared.parked.lock().unwrap().len()
+    }
 }
 
 impl Drop for WireServer {
@@ -375,6 +478,9 @@ impl Drop for WireServer {
         for c in self.shared.conns.lock().unwrap().iter() {
             c.close();
         }
+        // Release parked leases: nothing can resume past server drop.
+        self.shared.parked.lock().unwrap().clear();
+        self.shared.obs.park_open.set(0.0);
     }
 }
 
@@ -405,6 +511,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             return;
         }
         reap_idle_conns(&shared);
+        reap_parked(&shared);
         let (stream, peer) = match listener.accept() {
             Ok(x) => x,
             // WouldBlock (no pending connection) or a transient error:
@@ -448,6 +555,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             obs: shared.obs.clone(),
             events: Arc::clone(&shared.events),
             trace: Arc::clone(&shared.trace),
+            fault: shared.cfg.fault.clone(),
         });
         {
             let mut conns = shared.conns.lock().unwrap();
@@ -522,6 +630,93 @@ fn reap_idle_conns(shared: &Arc<WireShared>) {
     }
 }
 
+/// Release parked sessions whose TTL ran out (checked once per
+/// accept-loop iteration). Dropping the entry drops its [`Session`],
+/// which detaches the lease — the slots fall back to the auto-reset
+/// filler exactly as an ordinary disconnect would have.
+fn reap_parked(shared: &Arc<WireShared>) {
+    if shared.cfg.park_ttl_ticks.is_none() {
+        return;
+    }
+    let now_ms = shared.epoch.elapsed().as_millis() as u64;
+    let mut parked = shared.parked.lock().unwrap();
+    let before = parked.len();
+    parked.retain(|wire_id, p| {
+        if p.deadline_ms <= now_ms {
+            shared.obs.park_expired.inc();
+            shared.events.emit(
+                "conn.park_expired",
+                &[("session", Json::Num(*wire_id as f64))],
+            );
+            false
+        } else {
+            true
+        }
+    });
+    if parked.len() != before {
+        shared.obs.park_open.set(parked.len() as f64);
+    }
+}
+
+/// Park a session whose connection died, keeping its lease alive for a
+/// `RESUME` within the TTL. Always consumes the session: `true` means
+/// it was parked, `false` (parking off, or the server shutting down)
+/// means it was dropped — which detaches the lease as before.
+fn park_session(
+    shared: &WireShared,
+    wire_id: u64,
+    session: Session,
+    token: u64,
+    applied: u64,
+    obs_floats: usize,
+) -> bool {
+    let Some(ttl) = shared.cfg.park_ttl_ticks else {
+        return false;
+    };
+    if shared.shutting_down.load(Ordering::SeqCst) {
+        return false;
+    }
+    let now_ms = shared.epoch.elapsed().as_millis() as u64;
+    let mut parked = shared.parked.lock().unwrap();
+    if parked.len() >= MAX_PARKED {
+        // Park-slot exhaustion: evict the entry closest to expiry (it
+        // had the least time left to be reclaimed) rather than
+        // declining the fresh park or growing without bound.
+        if let Some(&victim) = parked
+            .iter()
+            .min_by_key(|(_, p)| p.deadline_ms)
+            .map(|(id, _)| id)
+        {
+            parked.remove(&victim);
+            shared.obs.park_expired.inc();
+            shared.events.emit(
+                "conn.park_evicted",
+                &[("session", Json::Num(victim as f64))],
+            );
+        }
+    }
+    parked.insert(
+        wire_id,
+        ParkedSession {
+            session,
+            token,
+            applied,
+            obs_floats,
+            deadline_ms: now_ms.saturating_add(ttl),
+        },
+    );
+    shared.obs.park_parked.inc();
+    shared.obs.park_open.set(parked.len() as f64);
+    shared.events.emit(
+        "conn.park",
+        &[
+            ("session", Json::Num(wire_id as f64)),
+            ("ttl_ms", Json::Num(ttl as f64)),
+        ],
+    );
+    true
+}
+
 /// Drain the outbox onto the socket. The periodic timeout lets the
 /// writer notice a closed connection even while pumps still hold
 /// outbox senders (e.g. blocked on an in-flight step).
@@ -529,7 +724,21 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
     loop {
         hb.beat();
         match rx.recv_timeout(Duration::from_millis(500)) {
-            Ok(buf) => {
+            Ok(mut buf) => {
+                // Fault-injection plane (`bps serve --fault`): delay,
+                // corrupt, or cut this write. Corruption flips header
+                // bytes, so the client *rejects* the frame (BadMagic)
+                // rather than silently adopting garbage.
+                if let Some(inj) = conn.fault.as_deref() {
+                    if let Some(d) = inj.write_delay() {
+                        std::thread::sleep(d);
+                    }
+                    inj.corrupt_frame(&mut buf);
+                    if inj.should_drop_conn() {
+                        conn.close();
+                        return;
+                    }
+                }
                 let flush_from = if conn.trace.enabled() {
                     Some(conn.trace.now_us())
                 } else {
@@ -562,6 +771,33 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
     }
 }
 
+/// Best-effort final error frame, written straight onto the socket with
+/// a short timeout — for policy disconnects whose outbox can no longer
+/// carry it (it is full, or its writer is gone). The write may race the
+/// writer thread's last in-flight frame and interleave; the peer then
+/// sees a framing error instead of the farewell, which is still a
+/// diagnosable close, not a silent one. Never blocks teardown.
+fn farewell_error(conn: &ConnShared, code: u16, msg: &str) {
+    let stream = {
+        let guard = conn.stream.lock().unwrap();
+        guard.as_ref().and_then(|s| s.try_clone().ok())
+    };
+    if let Some(mut s) = stream {
+        let _ = s.set_write_timeout(Some(Duration::from_millis(250)));
+        let mut buf = Vec::new();
+        frame::encode(
+            &Frame::Error {
+                re: 0,
+                code,
+                msg: msg.into(),
+            },
+            &mut buf,
+        );
+        let _ = std::io::Write::write_all(&mut s, &buf);
+        conn.obs.errors_out.inc();
+    }
+}
+
 /// Push an already-encoded frame into the connection's bounded outbox.
 /// `false` means the connection is gone — either it already closed, or
 /// it just earned a slow-reader disconnect because the outbox is full.
@@ -577,6 +813,14 @@ fn enqueue_buf(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, buf: Vec<u8>) ->
                         ("conn", Json::Num(conn.id as f64)),
                         ("peer", Json::Str(conn.peer.clone())),
                     ],
+                );
+                // Never a silent close: tell the peer why, bypassing
+                // the full outbox (DESIGN.md §0.12 error-frame table).
+                farewell_error(
+                    conn,
+                    ERR_SLOW_READER,
+                    "disconnected: slow reader (outbox overflow — drain step \
+                     frames faster or lease fewer envs)",
                 );
             }
             conn.close();
@@ -758,7 +1002,7 @@ fn reader_loop(
                 }
             }
             Frame::Lease { req, task, n_envs } => {
-                match shared.sim.connect(task, n_envs as usize) {
+                match shared.sim.try_connect(task, n_envs as usize) {
                     Ok(session) => {
                         // Wire-level size guard: the session's submit,
                         // grant, and step frames must all fit the
@@ -785,6 +1029,7 @@ fn reader_loop(
                             continue;
                         }
                         let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                        let token = mint_token(&shared, wire_id);
                         let (tx, rx) = sync_channel(shared.cfg.inbox_submits.max(1));
                         conn.session_opened();
                         let ctx = PumpCtx {
@@ -792,8 +1037,14 @@ fn reader_loop(
                             rx,
                             conn: Arc::clone(&conn),
                             outbox: outbox.clone(),
+                            shared: Arc::clone(&shared),
                             wire_id,
                             req,
+                            token,
+                            // The seed view the pump sends with the
+                            // grant is the first applied step frame.
+                            applied: 1,
+                            send_grant: true,
                             hb: shared.sim.watchdog().register(
                                 "wire-session-pump",
                                 PUMP_DEGRADED,
@@ -825,16 +1076,19 @@ fn reader_loop(
                             }
                         }
                     }
-                    Err(e) => {
-                        if !enqueue(
-                            &conn,
-                            &outbox,
-                            &Frame::Error {
-                                re: req,
-                                code: ERR_LEASE,
-                                msg: format!("{e:#}"),
-                            },
-                        ) {
+                    Err(decline) => {
+                        // Admission declines are never a disconnect, and
+                        // overload (the memory-budget gate) is shed with
+                        // a retry-after hint rather than a terminal
+                        // lease rejection: capacity returns when a
+                        // co-tenant detaches.
+                        let (code, msg) = match decline {
+                            LeaseDecline::Overload(m) => {
+                                (ERR_RETRY_AFTER, with_retry_after(250, &m))
+                            }
+                            LeaseDecline::NoCapacity(m) => (ERR_LEASE, m),
+                        };
+                        if !enqueue(&conn, &outbox, &Frame::Error { re: req, code, msg }) {
                             break;
                         }
                     }
@@ -860,20 +1114,39 @@ fn reader_loop(
                 match outcome {
                     SubmitOutcome::Sent => {}
                     SubmitOutcome::Flood => {
-                        // Flood policy, mirror of the outbox bound: a
-                        // peer pipelining submits faster than the shard
-                        // steps is disconnected before it can grow the
-                        // queue at line rate.
-                        let _ = enqueue(
+                        // Flood policy, mirror of the outbox bound — but
+                        // shed, not disconnect: the excess submit is
+                        // dropped and answered with a typed retry-after
+                        // error; the connection and the lease survive.
+                        // The bounded inbox still caps memory at
+                        // inbox_submits frames, and because every
+                        // session's inbox is its own bounded queue, one
+                        // flooding tenant cannot starve its co-tenants'
+                        // submits (round-robin fairness by construction).
+                        shared.obs.shed_flood.inc();
+                        conn.events.emit(
+                            "overload.shed",
+                            &[
+                                ("conn", Json::Num(conn.id as f64)),
+                                ("session", Json::Num(session as f64)),
+                                ("what", Json::Str("submit_flood".into())),
+                            ],
+                        );
+                        if !enqueue(
                             &conn,
                             &outbox,
                             &Frame::Error {
                                 re: session,
-                                code: ERR_PROTOCOL,
-                                msg: "submit pipeline overflow".into(),
+                                code: ERR_RETRY_AFTER,
+                                msg: with_retry_after(
+                                    10,
+                                    "submit shed: pipeline overflow (submitting \
+                                     faster than the shard steps)",
+                                ),
                             },
-                        );
-                        break;
+                        ) {
+                            break;
+                        }
                     }
                     SubmitOutcome::AgentRoute => {
                         // Server-driven lease: the client has no actions
@@ -1015,6 +1288,7 @@ fn reader_loop(
                             continue;
                         }
                         let wire_id = shared.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                        let token = mint_token(&shared, wire_id);
                         conn.session_opened();
                         let control = ts.control();
                         let ctx = AgentCtx {
@@ -1023,6 +1297,7 @@ fn reader_loop(
                             outbox: outbox.clone(),
                             wire_id,
                             req,
+                            token,
                             hb: shared.sim.watchdog().register(
                                 "wire-agent-pump",
                                 PUMP_DEGRADED,
@@ -1154,6 +1429,131 @@ fn reader_loop(
                     break;
                 }
             }
+            Frame::Resume {
+                req,
+                session,
+                token,
+                delivered,
+            } => {
+                let entry = shared.parked.lock().unwrap().remove(&session);
+                match entry {
+                    Some(p) if p.token == token => {
+                        shared
+                            .obs
+                            .park_open
+                            .set(shared.parked.lock().unwrap().len() as f64);
+                        // FIFO discipline: RESUMED first, then the
+                        // replayed step (if one is owed), and only then
+                        // is the pump spawned — its frames follow ours
+                        // through the same outbox. If the connection
+                        // dies mid-handshake, re-park so a later
+                        // reconnect can still reclaim the lease.
+                        let resumed = Frame::Resumed {
+                            req,
+                            session,
+                            applied: p.applied,
+                        };
+                        if !enqueue(&conn, &outbox, &resumed) {
+                            shared.parked.lock().unwrap().insert(session, p);
+                            break;
+                        }
+                        if p.applied > delivered
+                            && !enqueue_step(&conn, &outbox, session, p.obs_floats, p.session.view())
+                        {
+                            // The applied-but-undelivered step replays
+                            // from the session's frozen view; the shard
+                            // did not advance past it while parked.
+                            shared.parked.lock().unwrap().insert(session, p);
+                            break;
+                        }
+                        shared.obs.resume_ok.inc();
+                        conn.events.emit(
+                            "conn.resume",
+                            &[
+                                ("conn", Json::Num(conn.id as f64)),
+                                ("session", Json::Num(session as f64)),
+                                ("applied", Json::Num(p.applied as f64)),
+                                ("delivered", Json::Num(delivered as f64)),
+                            ],
+                        );
+                        conn.session_opened();
+                        let (tx, rx) = sync_channel(shared.cfg.inbox_submits.max(1));
+                        let ctx = PumpCtx {
+                            session: p.session,
+                            rx,
+                            conn: Arc::clone(&conn),
+                            outbox: outbox.clone(),
+                            shared: Arc::clone(&shared),
+                            wire_id: session,
+                            req,
+                            token: p.token,
+                            applied: p.applied,
+                            send_grant: false,
+                            hb: shared.sim.watchdog().register(
+                                "wire-session-pump",
+                                PUMP_DEGRADED,
+                                PUMP_STALLED,
+                            ),
+                        };
+                        let spawned = std::thread::Builder::new()
+                            .name("bps-wire-session".into())
+                            .spawn(move || session_pump(ctx));
+                        match spawned {
+                            Ok(_) => {
+                                sessions.insert(session, Route::Env(tx));
+                            }
+                            Err(e) => {
+                                conn.session_closed();
+                                if !enqueue(
+                                    &conn,
+                                    &outbox,
+                                    &Frame::Error {
+                                        re: session,
+                                        code: ERR_SESSION,
+                                        msg: format!("spawn session pump: {e}"),
+                                    },
+                                ) {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Some(p) => {
+                        // Wrong token: not the owner. Re-park untouched
+                        // so the rightful client's window stays open.
+                        shared.parked.lock().unwrap().insert(session, p);
+                        shared.obs.resume_fail.inc();
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: req,
+                                code: ERR_SESSION,
+                                msg: "resume refused: token mismatch".into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                    None => {
+                        shared.obs.resume_fail.inc();
+                        if !enqueue(
+                            &conn,
+                            &outbox,
+                            &Frame::Error {
+                                re: req,
+                                code: ERR_SESSION,
+                                msg: "resume refused: unknown or expired session \
+                                      (park TTL elapsed, parking disabled, or \
+                                      already resumed)"
+                                    .into(),
+                            },
+                        ) {
+                            break;
+                        }
+                    }
+                }
+            }
             Frame::Welcome { .. }
             | Frame::Grant { .. }
             | Frame::Step { .. }
@@ -1161,7 +1561,8 @@ fn reader_loop(
             | Frame::Detached { .. }
             | Frame::Error { .. }
             | Frame::StatsReply { .. }
-            | Frame::DumpReply { .. } => {
+            | Frame::DumpReply { .. }
+            | Frame::Resumed { .. } => {
                 conn.bad_frame("client sent a server-only frame");
                 let _ = enqueue(
                     &conn,
@@ -1195,6 +1596,11 @@ struct AgentCtx {
     outbox: SyncSender<Vec<u8>>,
     wire_id: u64,
     req: u64,
+    /// Minted like a plain session's resume token so the GRANT shape is
+    /// uniform, but agent leases are never parked — a dropped connection
+    /// releases the tenancy (its goal/recurrent state is server-side and
+    /// not reconstructible by a reconnecting client).
+    token: u64,
     hb: Heartbeat,
 }
 
@@ -1250,12 +1656,14 @@ fn agent_pump(ctx: AgentCtx) {
         outbox,
         wire_id,
         req,
+        token,
         hb,
     } = ctx;
     let of = ts.obs_floats();
     let grant = Frame::Grant {
         req,
         session: wire_id,
+        token,
         task: ts.task(),
         obs_floats: of as u32,
         slots: ts.slots().iter().map(|&s| s as u32).collect(),
@@ -1326,39 +1734,99 @@ struct PumpCtx {
     rx: Receiver<PumpMsg>,
     conn: Arc<ConnShared>,
     outbox: SyncSender<Vec<u8>>,
+    shared: Arc<WireShared>,
     wire_id: u64,
     req: u64,
+    /// Resume token minted with the grant; proves ownership on RESUME.
+    token: u64,
+    /// Step frames *committed* for this session, counting the seed. A
+    /// step counts the moment its `ticket.wait()` returns — before the
+    /// delivery attempt — so a resume can tell replay from re-submit.
+    applied: u64,
+    /// False on a resume re-spawn: the client already holds the grant
+    /// and the seed, so the pump starts straight at the submit loop.
+    send_grant: bool,
     hb: Heartbeat,
 }
 
+/// Why a session pump stopped — decides what happens to the lease.
+enum PumpExit {
+    /// Client detached deliberately: release the lease, ack `DETACHED`.
+    Clean,
+    /// Shard/session failure, already reported as an error frame:
+    /// release the lease; there is nothing left to resume.
+    Failed,
+    /// The connection died under the session: park the lease for a
+    /// resume window instead of releasing it (when parking is on).
+    ConnDead,
+}
+
+/// Report a shard-side failure on the session's stream. A quarantined
+/// shard gets the typed `ERR_SHARD_DOWN` plus a retry-after hint — the
+/// lease is gone either way, but the server may heal the shard and a
+/// client can re-lease after the hint. Anything else stays `ERR_SHARD`.
+fn shard_failure(
+    conn: &ConnShared,
+    outbox: &SyncSender<Vec<u8>>,
+    session: &Session,
+    wire_id: u64,
+    e: anyhow::Error,
+) -> PumpExit {
+    let (code, msg) = if session.shard_quarantined() {
+        (ERR_SHARD_DOWN, with_retry_after(1000, &format!("{e:#}")))
+    } else {
+        (ERR_SHARD, format!("{e:#}"))
+    };
+    let _ = enqueue(
+        conn,
+        outbox,
+        &Frame::Error {
+            re: wire_id,
+            code,
+            msg,
+        },
+    );
+    PumpExit::Failed
+}
+
 /// Owns one remote session server-side: grants the lease, then turns
-/// each routed `Submit` into a `submit_at → wait → Step` cycle. Exits —
-/// detaching the session — when the client detaches, the connection
-/// dies, or the shard fails.
+/// each routed `Submit` into a `submit_at → wait → Step` cycle. Exits
+/// when the client detaches, the connection dies (parking the lease if
+/// a resume window is configured), or the shard fails.
 fn session_pump(ctx: PumpCtx) {
     let PumpCtx {
         mut session,
         rx,
         conn,
         outbox,
+        shared,
         wire_id,
         req,
+        token,
+        mut applied,
+        send_grant,
         hb,
     } = ctx;
     let of = session.obs_floats();
-    let grant = Frame::Grant {
-        req,
-        session: wire_id,
-        task: session.task(),
-        obs_floats: of as u32,
-        slots: session.slots().iter().map(|&s| s as u32).collect(),
-    };
-    // Grant, then seed the client's buffers with the latest published
-    // step so its `view()` works before the first submit.
-    let mut alive = enqueue(&conn, &outbox, &grant)
-        && enqueue_step(&conn, &outbox, wire_id, of, session.view());
-    let mut clean_detach = false;
-    while alive {
+    let mut exit: Option<PumpExit> = None;
+    if send_grant {
+        let grant = Frame::Grant {
+            req,
+            session: wire_id,
+            token,
+            task: session.task(),
+            obs_floats: of as u32,
+            slots: session.slots().iter().map(|&s| s as u32).collect(),
+        };
+        // Grant, then seed the client's buffers with the latest published
+        // step so its `view()` works before the first submit.
+        if !(enqueue(&conn, &outbox, &grant)
+            && enqueue_step(&conn, &outbox, wire_id, of, session.view()))
+        {
+            exit = Some(PumpExit::ConnDead);
+        }
+    }
+    while exit.is_none() {
         // A lease held idle by the client parks here unboundedly — mark
         // the park deliberate so the watchdog polices only the working
         // submit→wait→encode interval.
@@ -1370,94 +1838,80 @@ fn session_pump(ctx: PumpCtx) {
                 let slots: Vec<usize> = pairs.iter().map(|&(s, _)| s as usize).collect();
                 let actions: Vec<u8> = pairs.iter().map(|&(_, a)| a).collect();
                 match session.submit_at(&slots, &actions) {
-                    Ok((accepted, _ticket)) if accepted < slots.len() => {
-                        // Some slot indices were bad (out of range,
-                        // unleased, or foreign) — the coalescer skipped
-                        // them. Log what the peer tried.
-                        conn.events.emit(
-                            "conn.bad_submit",
-                            &[
-                                ("conn", Json::Num(conn.id as f64)),
-                                ("session", Json::Num(wire_id as f64)),
-                                ("requested", Json::Num(slots.len() as f64)),
-                                ("accepted", Json::Num(accepted as f64)),
-                            ],
-                        );
-                        if accepted > 0 {
-                            match _ticket.wait() {
-                                Ok(v) => {
-                                    alive = enqueue_step(&conn, &outbox, wire_id, of, v);
-                                }
-                                Err(e) => {
-                                    let _ = enqueue(
-                                        &conn,
-                                        &outbox,
-                                        &Frame::Error {
-                                            re: wire_id,
-                                            code: ERR_SHARD,
-                                            msg: format!("{e:#}"),
-                                        },
-                                    );
-                                    alive = false;
-                                }
-                            }
-                            continue;
+                    Ok((accepted, ticket)) => {
+                        if accepted < slots.len() {
+                            // Some slot indices were bad (out of range,
+                            // unleased, or foreign) — the coalescer
+                            // skipped them. Log what the peer tried.
+                            conn.events.emit(
+                                "conn.bad_submit",
+                                &[
+                                    ("conn", Json::Num(conn.id as f64)),
+                                    ("session", Json::Num(wire_id as f64)),
+                                    ("requested", Json::Num(slots.len() as f64)),
+                                    ("accepted", Json::Num(accepted as f64)),
+                                ],
+                            );
                         }
-                        // Nothing was buffered (every slot index was bad):
-                        // waiting could hang forever, so report instead.
-                        alive = enqueue(
-                            &conn,
-                            &outbox,
-                            &Frame::Error {
-                                re: wire_id,
-                                code: ERR_SUBMIT,
-                                msg: "no acceptable slots in submit".into(),
-                            },
-                        );
-                    }
-                    Ok((_accepted, ticket)) => match ticket.wait() {
-                        Ok(v) => {
-                            alive = enqueue_step(&conn, &outbox, wire_id, of, v);
-                        }
-                        Err(e) => {
-                            let _ = enqueue(
+                        if accepted == 0 {
+                            // Nothing was buffered (every slot index was
+                            // bad): waiting could hang forever, so report
+                            // instead.
+                            drop(ticket);
+                            if !enqueue(
                                 &conn,
                                 &outbox,
                                 &Frame::Error {
                                     re: wire_id,
-                                    code: ERR_SHARD,
-                                    msg: format!("{e:#}"),
+                                    code: ERR_SUBMIT,
+                                    msg: "no acceptable slots in submit".into(),
                                 },
-                            );
-                            alive = false;
+                            ) {
+                                exit = Some(PumpExit::ConnDead);
+                            }
+                            continue;
                         }
-                    },
+                        match ticket.wait() {
+                            Ok(v) => {
+                                // Committed server-side the moment the
+                                // wait returns: count it *before* the
+                                // delivery attempt, so a resume after a
+                                // mid-enqueue disconnect replays this
+                                // step instead of double-stepping.
+                                applied += 1;
+                                if !enqueue_step(&conn, &outbox, wire_id, of, v) {
+                                    exit = Some(PumpExit::ConnDead);
+                                }
+                            }
+                            Err(e) => {
+                                exit = Some(shard_failure(&conn, &outbox, &session, wire_id, e));
+                            }
+                        }
+                    }
                     Err(e) => {
-                        let _ = enqueue(
-                            &conn,
-                            &outbox,
-                            &Frame::Error {
-                                re: wire_id,
-                                code: ERR_SHARD,
-                                msg: format!("{e:#}"),
-                            },
-                        );
-                        alive = false;
+                        exit = Some(shard_failure(&conn, &outbox, &session, wire_id, e));
                     }
                 }
             }
-            Ok(PumpMsg::Detach) => {
-                clean_detach = true;
-                break;
-            }
-            Err(_) => break, // connection reader is gone
+            Ok(PumpMsg::Detach) => exit = Some(PumpExit::Clean),
+            Err(_) => exit = Some(PumpExit::ConnDead), // connection reader is gone
         }
     }
-    session.detach();
-    if clean_detach {
-        // Acked *after* the release, so a client that waits for this can
-        // immediately re-lease the freed slots.
-        let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
+    match exit.unwrap_or(PumpExit::Failed) {
+        PumpExit::Clean => {
+            session.detach();
+            // Acked *after* the release, so a client that waits for this
+            // can immediately re-lease the freed slots.
+            let _ = enqueue(&conn, &outbox, &Frame::Detached { session: wire_id });
+        }
+        PumpExit::Failed => session.detach(),
+        PumpExit::ConnDead => {
+            // Dead peer: park the lease for a resume window rather than
+            // releasing it. `park_session` declines — dropping (and thus
+            // detaching) the session — when parking is off, the server is
+            // shutting down, or the table is full past eviction.
+            park_session(&shared, wire_id, session, token, applied, of);
+        }
     }
     conn.session_closed();
 }

@@ -1,0 +1,457 @@
+//! Chaos tests for the fault-tolerance layer (DESIGN.md §0.12): shard
+//! panic quarantine + restart, session park/resume across injected
+//! connection drops, and the typed overload/failure error frames.
+//!
+//! The centerpiece is the chaos loopback run: T steps driven through
+//! `bps serve`'s wire layer with k injected connection kills and one
+//! shard panic+restart mid-stream must deliver an observation sequence
+//! *bitwise identical* to an undisturbed run — fault tolerance is not
+//! allowed to perturb the simulation stream, only to delay it.
+
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bps::env::EnvBatchConfig;
+use bps::render::RenderConfig;
+use bps::scene::procgen::{generate, Complexity};
+use bps::scene::SceneAsset;
+use bps::serve::wire::frame::{self, Frame, ERR_SESSION, ERR_SHARD_DOWN};
+use bps::serve::{
+    FaultSpec, Injector, RemoteClient, ResumeCfg, ShardSpec, SimServer, StragglerPolicy,
+    WireConfig, WireServer,
+};
+use bps::sim::{Task, NUM_ACTIONS};
+use bps::util::pool::WorkerPool;
+
+const SEED: u64 = 0xC4A05;
+
+fn scene() -> Arc<SceneAsset> {
+    Arc::new(generate("serve_chaos", 29, Complexity::test()))
+}
+
+fn env_cfg() -> EnvBatchConfig {
+    EnvBatchConfig::new(Task::PointNav, RenderConfig::depth(16)).seed(SEED)
+}
+
+/// `shards` identical shards of `n` slots each — identical specs, so a
+/// session's stream depends only on its actions, never on which shard
+/// hosted it (the chaos run and the baseline may place differently).
+fn server(shards: usize, n: usize, pool: &Arc<WorkerPool>) -> Arc<SimServer> {
+    let s = scene();
+    let specs = (0..shards)
+        .map(|_| {
+            ShardSpec::with_scenes(env_cfg(), (0..n).map(|_| Arc::clone(&s)).collect())
+                .straggler(StragglerPolicy::Wait)
+        })
+        .collect();
+    Arc::new(SimServer::start(specs, Arc::clone(pool)).unwrap())
+}
+
+fn actions_at(t: usize, n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((5 * t + 3 * i) % NUM_ACTIONS) as u8).collect()
+}
+
+fn wait_until(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// One step's delivered arrays, recorded for bitwise comparison.
+#[derive(PartialEq, Debug)]
+struct Recorded {
+    step: u64,
+    obs: Vec<f32>,
+    goal: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
+    successes: Vec<bool>,
+    spl: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Deep-copy a borrowed step view so it outlives the session.
+fn record(v: bps::serve::SessionView<'_>) -> Recorded {
+    Recorded {
+        step: v.step,
+        obs: v.obs.to_vec(),
+        goal: v.goal.to_vec(),
+        rewards: v.rewards.to_vec(),
+        dones: v.dones.to_vec(),
+        successes: v.successes.to_vec(),
+        spl: v.spl.to_vec(),
+        scores: v.scores.to_vec(),
+    }
+}
+
+/// The chaos loopback drill (ISSUE §0.12 acceptance): T steps with k
+/// injected connection kills plus one shard panic + restart mid-stream.
+/// The session rides `conn_drop:every=9` — every ninth outbound frame
+/// cuts the connection — while a co-tenant on the second shard absorbs
+/// a driver panic and an in-place restart. The delivered stream must be
+/// bitwise identical to an undisturbed baseline, every lease and park
+/// slot must return to zero, and `serve.resume.ok` must equal the
+/// number of kills.
+#[test]
+fn chaos_resume_stream_is_bitwise_identical() {
+    const N: usize = 2; // slots per shard == envs per session
+    const T: usize = 30;
+    let pool = Arc::new(WorkerPool::new(2));
+
+    // Undisturbed baseline: same spec, no faults, plain client.
+    let baseline: Vec<Recorded> = {
+        let srv = server(1, N, &pool);
+        let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+        let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+        let mut session = client.open_session(Task::PointNav, N).unwrap();
+        let mut rec = Vec::with_capacity(T + 1);
+        rec.push(record(session.view()));
+        for t in 0..T {
+            let r = record(session.step(&actions_at(t, N)).unwrap());
+            rec.push(r);
+        }
+        session.detach().unwrap();
+        rec
+    };
+
+    // Chaos run: two shards (remote session lands on shard 0 first-fit,
+    // the in-process co-tenant fills shard 1), deterministic conn kills,
+    // parking armed, resume-capable client.
+    let srv = server(2, N, &pool);
+    let inj = Arc::new(Injector::new(FaultSpec::parse("conn_drop:every=9").unwrap()));
+    srv.arm_faults(Arc::clone(&inj)).unwrap();
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            park_ttl_ticks: Some(60_000),
+            fault: Some(Arc::clone(&inj)),
+            ..WireConfig::default()
+        },
+    )
+    .unwrap();
+    let client = RemoteClient::connect_with_resume(
+        &wire.local_addr().to_string(),
+        ResumeCfg {
+            max_retries: 10,
+            base_ms: 40,
+            cap_ms: 200,
+            seed: 3,
+        },
+    )
+    .unwrap();
+    let mut session = client.open_session(Task::PointNav, N).unwrap();
+    let mut cotenant = Some(srv.connect(Task::PointNav, N).unwrap());
+    assert_eq!(srv.stats()[0].leased, N, "remote session fills shard 0");
+    assert_eq!(srv.stats()[1].leased, N, "co-tenant fills shard 1");
+
+    let mut delivered = Vec::with_capacity(T + 1);
+    delivered.push(record(session.view()));
+    let mut panicked = false;
+    for t in 0..T {
+        // Mid-stream, panic the co-tenant's shard driver and restart it
+        // in place; the remote session's shard must never notice.
+        if t == T / 2 {
+            inj.arm_panic(1);
+            let err = cotenant
+                .as_mut()
+                .unwrap()
+                .step(&actions_at(t, N))
+                .expect_err("armed panic must fail the co-tenant step");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("quarantined") || msg.contains("panic"),
+                "co-tenant error names the quarantine: {msg}"
+            );
+            wait_until("shard 1 quarantine", || srv.shard_quarantined(1));
+            cotenant = None; // release the dead session before the rebuild
+            srv.restart_shard(1).unwrap();
+            assert!(!srv.shard_quarantined(1));
+            cotenant = Some(srv.connect(Task::PointNav, N).unwrap());
+            cotenant.as_mut().unwrap().step(&actions_at(t, N)).unwrap();
+            panicked = true;
+        } else if t % 5 == 0 {
+            cotenant.as_mut().unwrap().step(&actions_at(t, N)).unwrap();
+        }
+        let r = record(session.step(&actions_at(t, N)).unwrap());
+        delivered.push(r);
+    }
+    assert!(panicked);
+    session.detach().unwrap();
+
+    // Bitwise identity, step by step, starting from the seed view.
+    assert_eq!(delivered.len(), baseline.len());
+    for (t, (got, want)) in delivered.iter().zip(&baseline).enumerate() {
+        assert_eq!(got, want, "stream diverged at delivered step {t}");
+    }
+
+    // The run actually exercised the fault plane: several kills, each
+    // reclaimed by exactly one successful resume, client and server in
+    // agreement about the count.
+    let k = inj.fired_drops.load(Ordering::Relaxed);
+    assert!(k >= 3, "conn_drop:every=9 over {T} steps must kill >= 3, got {k}");
+    assert_eq!(inj.fired_panics.load(Ordering::Relaxed), 1);
+    let (resumes, backoff_ms) = client.resume_stats();
+    assert_eq!(resumes, k, "every kill resumed exactly once");
+    assert!(backoff_ms > 0, "resume waited out at least one backoff");
+    let snap = srv.registry().snapshot();
+    assert_eq!(snap.counter("serve.resume.ok", &[]), Some(k));
+    assert_eq!(snap.counter("serve.resume.fail", &[]), Some(0));
+    assert_eq!(snap.counter("serve.park.parked", &[]), Some(k));
+    assert_eq!(snap.counter("serve.park.expired", &[]), Some(0));
+
+    // Everything returns to zero: leases, park slots, open sessions.
+    drop(cotenant);
+    wait_until("leases to drain", || {
+        srv.stats().iter().all(|s| s.leased == 0)
+    });
+    assert_eq!(snap.gauge("serve.park.open", &[]), Some(0.0));
+    wait_until("wire sessions to close", || session_open_total(&wire) == 0);
+}
+
+fn session_open_total(wire: &WireServer) -> usize {
+    wire.conn_stats().iter().map(|c| c.sessions_open).sum()
+}
+
+/// A quarantined shard answers in-flight submits with the typed
+/// `ERR_SHARD_DOWN` frame carrying a `retry_after_ms=` hint — never a
+/// silent close — and an in-place restart brings the shard back for
+/// fresh leases.
+#[test]
+fn shard_panic_yields_typed_error_and_restart_recovers() {
+    let n = 2;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(1, n, &pool);
+    let inj = Arc::new(Injector::new(FaultSpec::default()));
+    srv.arm_faults(Arc::clone(&inj)).unwrap();
+    let wire = WireServer::listen("127.0.0.1:0", Arc::clone(&srv)).unwrap();
+    let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
+    let mut session = client.open_session(Task::PointNav, n).unwrap();
+    session.step(&actions_at(0, n)).unwrap();
+
+    inj.arm_panic(0);
+    let err = session
+        .step(&actions_at(1, n))
+        .expect_err("step into an armed panic must fail");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("retry_after_ms="),
+        "ERR_SHARD_DOWN carries a retry-after hint: {msg}"
+    );
+    wait_until("quarantine", || srv.shard_quarantined(0));
+    // the failed session's lease released (pump exit: Failed → detach)
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+
+    // leasing while quarantined is a diagnosable decline, not a hang
+    let decline = client
+        .open_session(Task::PointNav, n)
+        .expect_err("quarantined shard must decline leases");
+    assert!(
+        format!("{decline:#}").contains("quarantined"),
+        "decline names the quarantine: {decline:#}"
+    );
+
+    srv.restart_shard(0).unwrap();
+    assert!(!srv.shard_quarantined(0));
+    let mut fresh = client.open_session(Task::PointNav, n).unwrap();
+    let v = fresh.step(&actions_at(0, n)).unwrap();
+    assert!(v.rewards.iter().all(|r| r.is_finite()));
+}
+
+/// Protocol-level resume: a parked session is reclaimed only by the
+/// exact grant token; a stale token is refused (the park entry
+/// survives for the rightful owner), and the reclaim replays nothing
+/// when the client is already current.
+#[test]
+fn resume_validates_token_and_skips_replay_when_current() {
+    let n = 1;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(1, n, &pool);
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            park_ttl_ticks: Some(60_000),
+            ..WireConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = wire.local_addr();
+
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+    assert!(matches!(frame::read_frame(&mut sock).unwrap(), Frame::Welcome { .. }));
+    frame::write_frame(
+        &mut sock,
+        &Frame::Lease {
+            req: 1,
+            task: Task::PointNav,
+            n_envs: n as u32,
+        },
+    )
+    .unwrap();
+    let (session, token) = match frame::read_frame(&mut sock).unwrap() {
+        Frame::Grant { session, token, .. } => (session, token),
+        other => panic!("want GRANT, got {other:?}"),
+    };
+    // the seed step view: applied=1 server-side, delivered=1 here
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Step { session: s, step, .. } => {
+            assert_eq!(s, session);
+            assert_eq!(step, 0);
+        }
+        other => panic!("want seed STEP, got {other:?}"),
+    }
+    drop(sock); // connection dies; the session parks, lease held
+    wait_until("park", || {
+        srv.registry().snapshot().gauge("serve.park.open", &[]) == Some(1.0)
+    });
+    assert_eq!(srv.stats()[0].leased, n, "parked lease is held");
+
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+    assert!(matches!(frame::read_frame(&mut sock).unwrap(), Frame::Welcome { .. }));
+    // wrong token: refused, entry kept for the rightful owner
+    frame::write_frame(
+        &mut sock,
+        &Frame::Resume {
+            req: 7,
+            session,
+            token: token ^ 1,
+            delivered: 1,
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Error { re, code, msg } => {
+            assert_eq!(re, 7);
+            assert_eq!(code, ERR_SESSION);
+            assert!(msg.contains("token"), "refusal names the token: {msg:?}");
+        }
+        other => panic!("want ERR_SESSION, got {other:?}"),
+    }
+    assert_eq!(
+        srv.registry().snapshot().gauge("serve.park.open", &[]),
+        Some(1.0),
+        "refused resume must not consume the park entry"
+    );
+    // right token, already current: RESUMED with applied=1, no replay,
+    // and the session steps on
+    frame::write_frame(
+        &mut sock,
+        &Frame::Resume {
+            req: 8,
+            session,
+            token,
+            delivered: 1,
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Resumed { req, session: s, applied } => {
+            assert_eq!(req, 8);
+            assert_eq!(s, session);
+            assert_eq!(applied, 1);
+        }
+        other => panic!("want RESUMED, got {other:?}"),
+    }
+    frame::write_frame(
+        &mut sock,
+        &Frame::Submit {
+            session,
+            pairs: vec![(0, 1)],
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Step { session: s, step, .. } => {
+            assert_eq!(s, session);
+            assert_eq!(step, 1, "resumed session continues the shard stream");
+        }
+        other => panic!("want STEP, got {other:?}"),
+    }
+    let snap = srv.registry().snapshot();
+    assert_eq!(snap.counter("serve.resume.ok", &[]), Some(1));
+    assert_eq!(snap.counter("serve.resume.fail", &[]), Some(1));
+    assert_eq!(snap.gauge("serve.park.open", &[]), Some(0.0));
+}
+
+/// A parked session whose owner never returns expires at the TTL and
+/// releases its lease — parking holds capacity for seconds, not
+/// forever.
+#[test]
+fn parked_session_expires_at_ttl_and_releases_lease() {
+    let n = 2;
+    let pool = Arc::new(WorkerPool::new(2));
+    let srv = server(1, n, &pool);
+    let wire = WireServer::listen_with(
+        "127.0.0.1:0",
+        Arc::clone(&srv),
+        WireConfig {
+            park_ttl_ticks: Some(300), // ticks are milliseconds
+            ..WireConfig::default()
+        },
+    )
+    .unwrap();
+    {
+        // raw socket so the disconnect is abrupt — no courtesy DETACH
+        let mut sock = TcpStream::connect(wire.local_addr()).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+        assert!(matches!(frame::read_frame(&mut sock).unwrap(), Frame::Welcome { .. }));
+        frame::write_frame(
+            &mut sock,
+            &Frame::Lease {
+                req: 1,
+                task: Task::PointNav,
+                n_envs: n as u32,
+            },
+        )
+        .unwrap();
+        assert!(matches!(frame::read_frame(&mut sock).unwrap(), Frame::Grant { .. }));
+        wait_until("lease", || srv.stats()[0].leased == n);
+        // socket dropped here without detaching
+    }
+    // parked first — the lease survives the disconnect...
+    wait_until("park", || {
+        srv.registry().snapshot().counter("serve.park.parked", &[]) == Some(1)
+    });
+    // ...then the TTL reaps it and the slots come back
+    wait_until("park expiry", || {
+        srv.registry().snapshot().counter("serve.park.expired", &[]) == Some(1)
+    });
+    wait_until("lease release", || srv.stats()[0].leased == 0);
+    assert_eq!(
+        srv.registry().snapshot().gauge("serve.park.open", &[]),
+        Some(0.0)
+    );
+    // an expired session cannot be resumed; the refusal is typed
+    let mut sock = TcpStream::connect(wire.local_addr()).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    frame::write_frame(&mut sock, &Frame::Hello).unwrap();
+    assert!(matches!(frame::read_frame(&mut sock).unwrap(), Frame::Welcome { .. }));
+    frame::write_frame(
+        &mut sock,
+        &Frame::Resume {
+            req: 3,
+            session: 1,
+            token: 0,
+            delivered: 1,
+        },
+    )
+    .unwrap();
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Error { re, code, msg } => {
+            assert_eq!(re, 3);
+            assert_eq!(code, ERR_SESSION);
+            assert!(msg.contains("expired") || msg.contains("unknown"), "{msg:?}");
+        }
+        other => panic!("want ERR_SESSION, got {other:?}"),
+    }
+}

@@ -17,7 +17,7 @@ use bps::env::{EnvBatch, EnvBatchConfig};
 use bps::render::RenderConfig;
 use bps::scene::procgen::{generate, Complexity};
 use bps::scene::SceneAsset;
-use bps::serve::wire::frame::{self, Frame, ERR_SESSION, ERR_SUBMIT};
+use bps::serve::wire::frame::{self, Frame, ERR_RETRY_AFTER, ERR_SESSION, ERR_SUBMIT};
 use bps::serve::{
     FillAction, RemoteClient, ShardSpec, SimServer, StragglerPolicy, WireConfig, WireServer,
 };
@@ -503,6 +503,7 @@ fn slow_reader_is_disconnected_and_lease_released() {
         WireConfig {
             outbox_frames: 1,
             inbox_submits: 1 << 20,
+            ..WireConfig::default()
         },
     )
     .unwrap();
@@ -561,10 +562,13 @@ fn slow_reader_is_disconnected_and_lease_released() {
 }
 
 /// Backpressure, inbound direction: a client pipelining submits faster
-/// than the shard steps overflows the bounded per-session inbox and is
-/// disconnected instead of growing server memory at line rate.
+/// than the shard steps overflows the bounded per-session inbox and has
+/// the excess *shed* with a typed `ERR_RETRY_AFTER` frame (carrying a
+/// `retry_after_ms=` hint) — the connection and the lease survive, so a
+/// well-behaved client backs off and continues instead of losing its
+/// slots to one burst.
 #[test]
-fn submit_flood_is_disconnected_and_lease_released() {
+fn submit_flood_is_shed_with_retry_after() {
     let pool = Arc::new(WorkerPool::new(2));
     let srv = server(2, StragglerPolicy::Wait, &pool);
     let wire = WireServer::listen_with(
@@ -573,6 +577,7 @@ fn submit_flood_is_disconnected_and_lease_released() {
         WireConfig {
             outbox_frames: 256,
             inbox_submits: 4,
+            ..WireConfig::default()
         },
     )
     .unwrap();
@@ -597,9 +602,18 @@ fn submit_flood_is_disconnected_and_lease_released() {
         Frame::Grant { session, .. } => session,
         other => panic!("want GRANT, got {other:?}"),
     };
-    // the sole tenant's submit provokes one coalesced step each, but
-    // the flood arrives far faster than the shard can step, so the
-    // 4-deep inbox overflows and the flood policy hangs up
+    // drain the seed STEP that follows every GRANT, so the burst
+    // accounting below is exact
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Step { session: s, .. } => assert_eq!(s, session),
+        other => panic!("want seed STEP, got {other:?}"),
+    }
+    // The sole tenant's submit provokes one coalesced step each, but a
+    // burst of 64 arrives far faster than the shard can step, so the
+    // 4-deep inbox overflows and the excess sheds. Every submit is
+    // answered — a STEP if accepted, ERR_RETRY_AFTER if shed — so
+    // reading exactly 64 frames accounts for the whole burst.
+    const BURST: usize = 64;
     let mut submit = Vec::new();
     frame::encode(
         &Frame::Submit {
@@ -608,16 +622,41 @@ fn submit_flood_is_disconnected_and_lease_released() {
         },
         &mut submit,
     );
-    for _ in 0..100_000 {
-        if sock.write_all(&submit).is_err() {
-            break; // already disconnected
-        }
-        if wire.conn_stats()[0].closed {
-            break;
+    for _ in 0..BURST {
+        sock.write_all(&submit).unwrap();
+    }
+    let (mut steps, mut sheds) = (0usize, 0usize);
+    for _ in 0..BURST {
+        match frame::read_frame(&mut sock).unwrap() {
+            Frame::Step { session: s, .. } => {
+                assert_eq!(s, session);
+                steps += 1;
+            }
+            Frame::Error { re, code, msg } => {
+                assert_eq!(re, session, "shed error targets the session stream");
+                assert_eq!(code, ERR_RETRY_AFTER);
+                assert!(
+                    frame::retry_after_ms(&msg).is_some(),
+                    "shed frame must carry a retry_after_ms hint: {msg:?}"
+                );
+                sheds += 1;
+            }
+            other => panic!("want STEP or ERR_RETRY_AFTER, got {other:?}"),
         }
     }
-    wait_until("flood disconnect", || wire.conn_stats()[0].closed);
-    wait_until("lease release", || srv.stats()[0].leased == 0);
+    assert_eq!(steps + sheds, BURST);
+    assert!(sheds > 0, "a 64-burst into a 4-deep inbox must shed");
+    // shed, not disconnected: connection open, lease intact, and the
+    // session keeps stepping at a polite pace
+    assert!(!wire.conn_stats()[0].closed, "flood must not disconnect");
+    assert_eq!(srv.stats()[0].leased, 1, "lease survives the shed");
+    sock.write_all(&submit).unwrap();
+    match frame::read_frame(&mut sock).unwrap() {
+        Frame::Step { session: s, .. } => assert_eq!(s, session),
+        other => panic!("want STEP after backing off, got {other:?}"),
+    }
+    drop(sock);
+    wait_until("lease release on disconnect", || srv.stats()[0].leased == 0);
     // the shard is healthy: a fresh client leases and steps
     let client = RemoteClient::connect(&wire.local_addr().to_string()).unwrap();
     let mut fresh = client.open_session(Task::PointNav, 2).unwrap();
