@@ -65,6 +65,10 @@
 //! conn_drop:every=6 --park-ttl 30 --heal-ms 500` plus `bps connect
 //! --retries 8`.
 //!
+//! The concurrency invariants all of this leans on (SAFETY notes, lock
+//! order, thread hygiene, wire/doc agreement) are machine-checked:
+//! `cargo run --release -- lint` (DESIGN.md §0.13) must exit clean.
+//!
 //! Run: cargo run --release --example quickstart
 
 use std::sync::Arc;

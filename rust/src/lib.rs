@@ -11,6 +11,7 @@ pub mod config;
 pub mod coordinator;
 pub mod env;
 pub mod geom;
+pub mod lint;
 pub mod metrics;
 pub mod optim;
 pub mod policy;

@@ -1,0 +1,201 @@
+//! `bps lint` — dependency-free static analysis for this repository's
+//! concurrency invariants (DESIGN.md §0.13).
+//!
+//! The batch simulator's throughput rests on hand-rolled lock-free code:
+//! the `WorkerPool` lifetime erasure, a hundred-plus `Ordering::Relaxed`
+//! sites, and the serve layer's poison-recovering lock discipline. Those
+//! invariants live in comments and reviewers' heads; this module turns
+//! them into machine-checked rules with stable IDs (L001–L005, plus L000
+//! for the directives themselves) so CI can enforce them deny-by-default.
+//!
+//! Usage: `bps lint [--root DIR] [--json]` — scans `rust/src/**/*.rs`
+//! plus DESIGN.md, exits nonzero on any violation. Scoped escapes use
+//! `// bps-lint: allow(L00X, reason)`: trailing on a code line it covers
+//! that statement only; on a comment-only line it covers the rest of the
+//! file. A missing reason is itself an error (L000).
+
+pub mod rules;
+pub mod scan;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+pub use rules::Diag;
+use scan::SourceFile;
+
+/// The result of linting a tree: ordered findings plus scan stats.
+pub struct LintReport {
+    pub diags: Vec<Diag>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Machine-readable rendering (the `--json` surface; schema pinned by
+    /// `rust/tests/lint.rs`).
+    pub fn to_json(&self) -> Json {
+        let violations: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("rule", s(d.rule)),
+                    ("file", s(&d.file)),
+                    ("line", num(d.line as f64)),
+                    ("msg", s(&d.msg)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", num(1.0)),
+            ("clean", Json::Bool(self.clean())),
+            ("files_scanned", num(self.files_scanned as f64)),
+            ("violations", Json::Arr(violations)),
+        ])
+    }
+
+    /// Human rendering: one `file:line: [rule] msg` per finding plus a
+    /// summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.msg));
+        }
+        out.push_str(&format!(
+            "bps lint: {} file(s) scanned, {} violation(s)\n",
+            self.files_scanned,
+            self.diags.len()
+        ));
+        out
+    }
+}
+
+/// Lint a single source string (the fixture-test entry point — same code
+/// path the tree walk uses, minus the L005 cross-file check).
+pub fn lint_str(path: &str, src: &str) -> Vec<Diag> {
+    let f = SourceFile::parse(path, src);
+    let mut diags = Vec::new();
+    rules::check_file(&f, &mut diags);
+    diags
+}
+
+/// Run the L005 protocol-drift check over explicit sources (fixture
+/// entry point).
+pub fn lint_protocol(frame_src: &str, design: &str) -> Vec<Diag> {
+    let f = SourceFile::parse("rust/src/serve/wire/frame.rs", frame_src);
+    let mut diags = Vec::new();
+    rules::l005_protocol_drift(&f, design, &mut diags);
+    diags
+}
+
+/// Lint the repository at `root`: every `.rs` file under `rust/src`, plus
+/// the frame/DESIGN.md drift check.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        bail!("{} has no rust/src — not a repo root?", root.display());
+    }
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    let mut frame: Option<SourceFile> = None;
+    for p in &files {
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("read {}", p.display()))?;
+        let label = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let sf = SourceFile::parse(&label, &text);
+        rules::check_file(&sf, &mut diags);
+        if label.ends_with("serve/wire/frame.rs") {
+            frame = Some(sf);
+        }
+    }
+    match frame {
+        Some(f) => {
+            let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+            rules::l005_protocol_drift(&f, &design, &mut diags);
+        }
+        None => diags.push(Diag {
+            rule: "L005",
+            file: "rust/src/serve/wire/frame.rs".into(),
+            line: 0,
+            msg: "wire frame definition file not found".into(),
+        }),
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(LintReport {
+        diags,
+        files_scanned: files.len(),
+    })
+}
+
+/// Walk up from the current directory to the repo root (the first
+/// ancestor containing `rust/src`), so `bps lint` works from anywhere in
+/// the checkout.
+pub fn find_root() -> Result<PathBuf> {
+    let mut dir = std::env::current_dir().context("current dir")?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            bail!("no repo root (directory containing rust/src) above the current directory");
+        }
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read dir {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let report = LintReport {
+            diags: vec![Diag {
+                rule: "L001",
+                file: "rust/src/x.rs".into(),
+                line: 3,
+                msg: "`unsafe` without a `// SAFETY:` justification".into(),
+            }],
+            files_scanned: 2,
+        };
+        assert!(!report.clean());
+        let text = report.render_text();
+        assert!(text.contains("rust/src/x.rs:3: [L001]"), "{text}");
+        assert!(text.contains("2 file(s) scanned, 1 violation(s)"), "{text}");
+        let j = report.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.req("version").unwrap().as_f64().unwrap() as i64, 1);
+        assert_eq!(parsed.req("violations").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn lint_str_is_the_rule_pipeline() {
+        let d = lint_str("rust/src/a.rs", "fn f(p: *const u8) {\n    unsafe { p.read() };\n}\n");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "L001");
+        assert_eq!(d[0].line, 2, "1-indexed display line");
+    }
+}

@@ -1,0 +1,646 @@
+//! The `bps lint` rule set (stable IDs L000–L005).
+//!
+//! Each rule is a pure function over a scanned [`SourceFile`] (plus, for
+//! L005, the wire-protocol source and DESIGN.md). Rationale, scope, and
+//! the allow-directive syntax are documented in DESIGN.md §0.13; the
+//! fixture corpus in `rust/tests/lint.rs` seeds one violation and one
+//! clean sample per rule.
+//!
+//! | id   | invariant |
+//! |------|-----------|
+//! | L000 | every `bps-lint:` directive parses and carries a reason |
+//! | L001 | every `unsafe` carries a `// SAFETY:` justification |
+//! | L002 | control-flow `Ordering::Relaxed` carries a `// relaxed:` note |
+//! | L003 | serve code locks state/tenant maps via the poison-recovering helpers, state before tenants |
+//! | L004 | long-lived threads in serve/obs/scenario are named and heartbeat-monitored |
+//! | L005 | wire frame types / ERR codes stay in sync with `payload_cap` and DESIGN.md |
+
+use super::scan::{has_word, SourceFile};
+
+/// One linter finding. `line` is 1-indexed for display.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+fn diag(diags: &mut Vec<Diag>, rule: &'static str, file: &SourceFile, line0: usize, msg: String) {
+    diags.push(Diag {
+        rule,
+        file: file.path.clone(),
+        line: line0 + 1,
+        msg,
+    });
+}
+
+/// Run every per-file rule over `file`.
+pub fn check_file(file: &SourceFile, diags: &mut Vec<Diag>) {
+    l000_directives(file, diags);
+    l001_unsafe_safety(file, diags);
+    l002_relaxed_control_flow(file, diags);
+    l003_serve_lock_discipline(file, diags);
+    l004_thread_hygiene(file, diags);
+}
+
+/// L000: a malformed or reason-less allow directive is itself an error —
+/// otherwise a typo silently disables a rule.
+fn l000_directives(file: &SourceFile, diags: &mut Vec<Diag>) {
+    for a in &file.allows {
+        if a.rule.is_empty() {
+            diag(
+                diags,
+                "L000",
+                file,
+                a.line,
+                "malformed bps-lint directive (expected `bps-lint: allow(L00X, reason)`)".into(),
+            );
+        } else if !matches!(a.rule.as_str(), "L001" | "L002" | "L003" | "L004" | "L005") {
+            diag(
+                diags,
+                "L000",
+                file,
+                a.line,
+                format!("unknown rule {:?} in bps-lint directive", a.rule),
+            );
+        } else if a.reason.trim().is_empty() {
+            diag(
+                diags,
+                "L000",
+                file,
+                a.line,
+                format!("bps-lint allow({}) needs a reason", a.rule),
+            );
+        }
+    }
+}
+
+/// L001: every `unsafe` token (block, fn, impl) must have a `SAFETY:`
+/// note on its statement or in the comment block directly above it.
+fn l001_unsafe_safety(file: &SourceFile, diags: &mut Vec<Diag>) {
+    for (i, l) in file.lines.iter().enumerate() {
+        if !has_word(&l.code, "unsafe") {
+            continue;
+        }
+        if file.allowed("L001", i) {
+            continue;
+        }
+        if !file.has_note(i, "safety:") {
+            diag(
+                diags,
+                "L001",
+                file,
+                i,
+                "`unsafe` without a `// SAFETY:` justification".into(),
+            );
+        }
+    }
+}
+
+/// L002: an `Ordering::Relaxed` load/RMW inside a control-flow statement
+/// (`if`/`while`/`match`/assertions) must carry a `// relaxed:` note
+/// explaining why no stronger ordering is needed. Pure counter bumps and
+/// stores are exempt; test modules are exempt.
+fn l002_relaxed_control_flow(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let mut reported_stmt = usize::MAX;
+    for (i, l) in file.lines.iter().enumerate() {
+        if file.in_tests(i) || !l.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let stmt = file.stmt_start(i);
+        if stmt == reported_stmt {
+            continue; // one diagnostic per statement
+        }
+        let code = file.stmt_code(i);
+        let control = has_word(&code, "if")
+            || has_word(&code, "while")
+            || has_word(&code, "match")
+            || code.contains("assert!")
+            || code.contains("assert_eq!")
+            || code.contains("assert_ne!")
+            || code.contains("debug_assert");
+        if !control {
+            continue;
+        }
+        if file.allowed("L002", i) {
+            continue;
+        }
+        if !file.has_note(i, "relaxed:") {
+            reported_stmt = stmt;
+            diag(
+                diags,
+                "L002",
+                file,
+                i,
+                "control-flow `Ordering::Relaxed` without a `// relaxed:` note".into(),
+            );
+        }
+    }
+}
+
+/// L003: serve-layer lock discipline. (a) state/tenant mutexes must go
+/// through the poison-recovering helpers (`lock_state`/`lock_tenants`/
+/// `lock_tenancy`), never `.lock().unwrap()` — a quarantined shard's
+/// poisoned mutex would otherwise cascade panics. (b) lock ordering:
+/// while a `lock_tenants` guard is live, taking `lock_state` inverts the
+/// documented state-before-tenants order and can deadlock.
+fn l003_serve_lock_discipline(file: &SourceFile, diags: &mut Vec<Diag>) {
+    if !file.path.contains("serve/") {
+        return;
+    }
+    // (a) raw unwrap on a state/tenant mutex
+    for (i, l) in file.lines.iter().enumerate() {
+        if file.in_tests(i) || !l.code.contains(".lock()") {
+            continue;
+        }
+        let full = file.stmt_code_full(i);
+        let Some(pos) = full.find(".lock().unwrap()") else {
+            continue;
+        };
+        let recv = receiver_before(&full, pos);
+        if recv.contains("state") || recv.contains("tenant") || recv.contains("tenancy") {
+            if file.allowed("L003", i) {
+                continue;
+            }
+            diag(
+                diags,
+                "L003",
+                file,
+                i,
+                format!(
+                    "`{recv}.lock().unwrap()` on a state/tenant mutex — use the \
+                     poison-recovering helper (lock_state/lock_tenants/lock_tenancy)"
+                ),
+            );
+        }
+    }
+    // (b) lock_state while a let-bound lock_tenants guard is live
+    let mut guard: Option<(usize, usize)> = None; // (line, depth at binding)
+    for (i, l) in file.lines.iter().enumerate() {
+        if file.in_tests(i) {
+            break;
+        }
+        if let Some((_, d)) = guard {
+            if l.depth_before < d {
+                guard = None;
+            }
+        }
+        let stripped: String = l.code.chars().filter(|c| !c.is_whitespace()).collect();
+        if guard.is_some() && stripped.contains("lock_state(") && !file.allowed("L003", i) {
+            diag(
+                diags,
+                "L003",
+                file,
+                i,
+                "lock_state taken while a lock_tenants guard is held — \
+                 acquire state before tenants"
+                    .into(),
+            );
+        }
+        // a guard binding is `let <pat> = lock_tenants(...);` with nothing
+        // chained after the call (a chained temporary drops immediately)
+        if let Some(p) = stripped.find("=lock_tenants(") {
+            let after = &stripped[p + "=lock_tenants".len()..];
+            if balanced_call_then_semicolon(after) {
+                guard = Some((i, l.depth_before));
+            }
+        }
+    }
+}
+
+/// The receiver chain immediately before byte offset `pos` in a
+/// whitespace-stripped statement: identifier/path/field chars only.
+fn receiver_before(full: &str, pos: usize) -> String {
+    let b = full.as_bytes();
+    let mut s = pos;
+    while s > 0 {
+        let c = b[s - 1];
+        if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b':' {
+            s -= 1;
+        } else {
+            break;
+        }
+    }
+    full[s..pos].to_string()
+}
+
+/// True when `s` starts with a balanced `( ... )` call argument list
+/// followed directly by `;` — i.e. the call result is bound, not chained.
+fn balanced_call_then_semicolon(s: &str) -> bool {
+    let b = s.as_bytes();
+    if b.first() != Some(&b'(') {
+        return false;
+    }
+    let mut depth = 0usize;
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return b.get(i + 1) == Some(&b';');
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// L004: thread hygiene in the long-running layers (serve/, obs/,
+/// scenario/): every spawn must use `Builder::new().name(...)`, and the
+/// spawn site must be covered by watchdog evidence — a `Heartbeat`/
+/// watchdog reference in the enclosing function or in a same-file
+/// function the spawn statement calls (loops often register their role
+/// from inside the spawned function).
+fn l004_thread_hygiene(file: &SourceFile, diags: &mut Vec<Diag>) {
+    let p = &file.path;
+    if !(p.contains("serve/") || p.contains("obs/") || p.contains("scenario/")) {
+        return;
+    }
+    let mut reported_stmt = usize::MAX;
+    for (i, l) in file.lines.iter().enumerate() {
+        if file.in_tests(i) {
+            continue;
+        }
+        let is_spawn = l.code.contains("thread::spawn(") || l.code.contains(".spawn(");
+        if !is_spawn {
+            continue;
+        }
+        let stmt = file.stmt_start(i);
+        if stmt == reported_stmt {
+            continue;
+        }
+        if file.allowed("L004", i) {
+            continue;
+        }
+        let full = file.stmt_code_full(i);
+        let thread_spawn = full.contains("thread::spawn(")
+            || (full.contains("Builder::new(") && full.contains(".spawn("));
+        if !thread_spawn {
+            continue;
+        }
+        if !full.contains("Builder::new(") {
+            reported_stmt = stmt;
+            diag(
+                diags,
+                "L004",
+                file,
+                i,
+                "bare thread::spawn — use Builder::new().name(...) so crash \
+                 reports and debuggers see a role"
+                    .into(),
+            );
+            continue;
+        }
+        if !full.contains(".name(") {
+            reported_stmt = stmt;
+            diag(diags, "L004", file, i, "spawned thread has no .name(...)".into());
+            continue;
+        }
+        if !heartbeat_evidence(file, i, &full) {
+            reported_stmt = stmt;
+            diag(
+                diags,
+                "L004",
+                file,
+                i,
+                "spawned thread has no watchdog Heartbeat in scope (register \
+                 one, or `bps-lint: allow(L004, reason)` for short-lived \
+                 helpers)"
+                    .into(),
+            );
+        }
+    }
+}
+
+/// Heartbeat/watchdog token in the enclosing fn, or in the body of any
+/// same-file fn the spawn statement mentions (drivers register their
+/// role from inside the spawned loop).
+fn heartbeat_evidence(file: &SourceFile, line: usize, full_stmt: &str) -> bool {
+    let hit = |lo: usize, hi: usize| {
+        file.lines[lo..=hi].iter().any(|l| {
+            let c = l.code.to_ascii_lowercase();
+            c.contains("heartbeat") || c.contains("watchdog")
+        })
+    };
+    if let Some(f) = file.enclosing_fn(line) {
+        if hit(f.start, f.end) {
+            return true;
+        }
+    }
+    for f in &file.fns {
+        if has_word(full_stmt, &f.name) && hit(f.start, f.end) {
+            return true;
+        }
+    }
+    false
+}
+
+/// L005: wire-protocol drift detection. `frame` is the source of
+/// `serve/wire/frame.rs`, `design` the text of DESIGN.md. Checks:
+/// frame-type and error-code value uniqueness, a `payload_cap` arm per
+/// frame type, a §0.8 table row per frame type, and an `ERR_*` mention
+/// in DESIGN.md per error code.
+pub fn l005_protocol_drift(frame: &SourceFile, design: &str, diags: &mut Vec<Diag>) {
+    let consts = find_wire_consts(frame);
+    let fts: Vec<&(String, u32, usize)> =
+        consts.iter().filter(|(n, _, _)| n.starts_with("FT_")).collect();
+    let errs: Vec<&(String, u32, usize)> =
+        consts.iter().filter(|(n, _, _)| n.starts_with("ERR_")).collect();
+    for (kind, set) in [("frame type", &fts), ("error code", &errs)] {
+        for (ai, a) in set.iter().enumerate() {
+            for b in set.iter().skip(ai + 1) {
+                if a.1 == b.1 {
+                    diag(
+                        diags,
+                        "L005",
+                        frame,
+                        b.2,
+                        format!("{kind} value {} reused by {} and {}", a.1, a.0, b.0),
+                    );
+                }
+            }
+        }
+    }
+    // every frame type has a payload_cap arm
+    if let Some(cap) = frame.fns.iter().find(|f| f.name == "payload_cap") {
+        for (name, _, line) in consts.iter().filter(|(n, _, _)| n.starts_with("FT_")) {
+            let covered = frame.lines[cap.start..=cap.end]
+                .iter()
+                .any(|l| has_word(&l.code, name));
+            if !covered {
+                diag(
+                    diags,
+                    "L005",
+                    frame,
+                    *line,
+                    format!("{name} has no arm in payload_cap()"),
+                );
+            }
+        }
+    } else {
+        diag(diags, "L005", frame, 0, "payload_cap() not found in frame.rs".into());
+    }
+    // every frame type has a DESIGN.md §0.8 row; every ERR code is documented
+    for (name, _, line) in &consts {
+        if let Some(short) = name.strip_prefix("FT_") {
+            let row = format!("`{short}`");
+            if !design.contains(&row) {
+                diag(
+                    diags,
+                    "L005",
+                    frame,
+                    *line,
+                    format!("frame type {name} has no `{short}` row in DESIGN.md §0.8"),
+                );
+            }
+        } else if name.starts_with("ERR_") && !contains_word(design, name) {
+            diag(
+                diags,
+                "L005",
+                frame,
+                *line,
+                format!("{name} is not documented in DESIGN.md"),
+            );
+        }
+    }
+}
+
+/// `pub const NAME: u8 = N;` / `: u16 = N;` declarations in code, with
+/// their values. Frame types are `u8`, error codes `u16` — both widths
+/// must be visible or the ERR_* half of L005 silently checks nothing.
+fn find_wire_consts(file: &SourceFile) -> Vec<(String, u32, usize)> {
+    let mut out = Vec::new();
+    for (i, l) in file.lines.iter().enumerate() {
+        let t = l.code.trim();
+        let Some(rest) = t
+            .strip_prefix("pub const ")
+            .or_else(|| t.strip_prefix("const "))
+        else {
+            continue;
+        };
+        let Some((name, tail)) = rest.split_once(':') else {
+            continue;
+        };
+        let ty = tail.trim_start();
+        let width = if ty.starts_with("u16") {
+            3
+        } else if ty.starts_with("u8") {
+            2
+        } else {
+            continue;
+        };
+        if ty.as_bytes().get(width).is_some_and(|c| c.is_ascii_alphanumeric() || *c == b'_') {
+            continue;
+        }
+        let Some((_, val)) = tail.split_once('=') else {
+            continue;
+        };
+        let val = val.trim().trim_end_matches(';').trim();
+        if let Ok(v) = val.parse::<u32>() {
+            out.push((name.trim().to_string(), v, i));
+        }
+    }
+    out
+}
+
+/// Word-boundary `contains` over arbitrary text (used for ERR_* mentions
+/// in DESIGN.md, where ERR_SHARD must not match ERR_SHARD_DOWN).
+fn contains_word(text: &str, word: &str) -> bool {
+    let b = text.as_bytes();
+    let w = word.as_bytes();
+    let ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut i = 0;
+    while i + w.len() <= b.len() {
+        if &b[i..i + w.len()] == w
+            && (i == 0 || !ident(b[i - 1]))
+            && (i + w.len() == b.len() || !ident(b[i + w.len()]))
+        {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Diag> {
+        let f = SourceFile::parse(path, src);
+        let mut d = Vec::new();
+        check_file(&f, &mut d);
+        d
+    }
+
+    fn rules(d: &[Diag]) -> Vec<&str> {
+        d.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn l001_flags_and_accepts() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules(&lint("a.rs", bad)), ["L001"]);
+        let good =
+            "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller promises p is valid\n    unsafe { *p }\n}\n";
+        assert!(lint("a.rs", good).is_empty());
+    }
+
+    #[test]
+    fn l002_only_control_flow() {
+        let counter = "fn f(c: &AtomicUsize) {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert!(lint("a.rs", counter).is_empty());
+        let branch =
+            "fn f(c: &AtomicBool) {\n    if c.load(Ordering::Relaxed) {\n        stop();\n    }\n}\n";
+        assert_eq!(rules(&lint("a.rs", branch)), ["L002"]);
+        let noted = "fn f(c: &AtomicBool) {\n    // relaxed: advisory only, \
+            re-checked under the lock\n    if c.load(Ordering::Relaxed) {\n        stop();\n    }\n}\n";
+        assert!(lint("a.rs", noted).is_empty());
+    }
+
+    #[test]
+    fn l002_multiline_statement_one_diag() {
+        let src = "fn f(a: &AtomicBool, b: &AtomicU64) {\n    if !a.load(Ordering::Relaxed)\n        \
+            && b.load(Ordering::Relaxed) > 3\n    {\n        stop();\n    }\n}\n";
+        let d = lint("a.rs", src);
+        assert_eq!(rules(&d), ["L002"], "{d:?}");
+    }
+
+    #[test]
+    fn l003_scoped_to_serve_and_receiver() {
+        let src = "fn f(s: &Shard) {\n    let g = s.state.lock().unwrap();\n}\n";
+        assert!(lint("rust/src/util/a.rs", src).is_empty(), "only serve/");
+        assert_eq!(rules(&lint("rust/src/serve/a.rs", src)), ["L003"]);
+        let other = "fn f(s: &Shard) {\n    let g = s.mailbox.lock().unwrap();\n}\n";
+        assert!(lint("rust/src/serve/a.rs", other).is_empty());
+        let helper = "fn f(s: &Shard) {\n    let g = lock_state(&s.state);\n}\n";
+        assert!(lint("rust/src/serve/a.rs", helper).is_empty());
+    }
+
+    #[test]
+    fn l003_ordering_inversion() {
+        let src = "\
+fn f(s: &Shard) {
+    let t = lock_tenants(&s.state);
+    let g = lock_state(&s.state);
+}
+";
+        assert_eq!(rules(&lint("rust/src/serve/a.rs", src)), ["L003"]);
+        // a chained temporary is not a live guard
+        let tmp = "\
+fn f(s: &Shard) {
+    let fill = lock_tenants(&s.state).coal.policy();
+    let g = lock_state(&s.state);
+}
+";
+        assert!(lint("rust/src/serve/a.rs", tmp).is_empty());
+        // guard dies with its block
+        let scoped = "\
+fn f(s: &Shard) {
+    {
+        let t = lock_tenants(&s.state);
+    }
+    let g = lock_state(&s.state);
+}
+";
+        assert!(lint("rust/src/serve/a.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn l004_name_and_heartbeat() {
+        let bare = "fn f() {\n    std::thread::spawn(|| loop_fn());\n}\n";
+        assert_eq!(rules(&lint("rust/src/serve/a.rs", bare)), ["L004"]);
+        assert!(lint("rust/src/env/a.rs", bare).is_empty(), "env/ out of scope");
+        let unnamed =
+            "fn f() {\n    std::thread::Builder::new().spawn(|| loop_fn()).unwrap();\n}\n";
+        assert!(rules(&lint("rust/src/obs/a.rs", unnamed)).contains(&"L004"));
+        let no_hb =
+            "fn f() {\n    std::thread::Builder::new().name(\"x\".into()).spawn(|| {}).unwrap();\n}\n";
+        assert!(rules(&lint("rust/src/obs/a.rs", no_hb)).contains(&"L004"));
+        let hb = "\
+fn f(w: &Watchdog) {
+    let hb = w.register(\"x\");
+    std::thread::Builder::new().name(\"x\".into()).spawn(move || run(hb)).unwrap();
+}
+";
+        assert!(lint("rust/src/obs/a.rs", hb).is_empty());
+    }
+
+    #[test]
+    fn l004_heartbeat_inside_spawned_fn() {
+        let src = "\
+fn listen(w: Wd) {
+    std::thread::Builder::new()
+        .name(\"x\".into())
+        .spawn(move || accept_loop(w))
+        .unwrap();
+}
+
+fn accept_loop(w: Wd) {
+    let hb = w.watchdog().register(\"accept\");
+    loop {
+        hb.beat();
+    }
+}
+";
+        assert!(lint("rust/src/serve/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_directive_scoping() {
+        let line_scoped = "\
+fn f() {
+    std::thread::spawn(|| {}); // bps-lint: allow(L004, short-lived test helper)
+    std::thread::spawn(|| {});
+}
+";
+        let d = lint("rust/src/serve/a.rs", line_scoped);
+        assert_eq!(rules(&d), ["L004"], "second spawn still flagged: {d:?}");
+        let file_scoped = "\
+// bps-lint: allow(L004, demo binary, no watchdog exists here)
+fn f() {
+    std::thread::spawn(|| {});
+    std::thread::spawn(|| {});
+}
+";
+        assert!(lint("rust/src/serve/a.rs", file_scoped).is_empty());
+    }
+
+    #[test]
+    fn l000_rejects_bad_directives() {
+        let d = lint("a.rs", "// bps-lint: allow(L002)\n");
+        assert_eq!(rules(&d), ["L000"]);
+        let d = lint("a.rs", "// bps-lint: allow(L999, nope)\n");
+        assert_eq!(rules(&d), ["L000"]);
+    }
+
+    #[test]
+    fn l005_detects_drift() {
+        let frame_src = "\
+pub const FT_HELLO: u8 = 1;
+pub const FT_STEP: u8 = 2;
+pub const ERR_PROTOCOL: u8 = 1;
+pub const ERR_LEASE: u8 = 1;
+
+pub fn payload_cap(ftype: u8) -> usize {
+    match ftype {
+        FT_HELLO => 64,
+        _ => 0,
+    }
+}
+";
+        let frame = SourceFile::parse("rust/src/serve/wire/frame.rs", frame_src);
+        let design = "| `HELLO` | hi |\nERR_PROTOCOL is sent on malformed frames.\n";
+        let mut d = Vec::new();
+        l005_protocol_drift(&frame, design, &mut d);
+        let msgs: Vec<&str> = d.iter().map(|x| x.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("value 1 reused")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("FT_STEP has no arm")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("no `STEP` row")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("ERR_LEASE is not documented")), "{msgs:?}");
+        assert!(d.iter().all(|x| x.rule == "L005"));
+    }
+}

@@ -1,0 +1,621 @@
+//! Line/token-aware Rust source scanner for `bps lint`.
+//!
+//! Hand-rolled in the spirit of `util/toml.rs`/`util/json.rs`: no syn, no
+//! proc-macro machinery — a single forward pass that separates *code* from
+//! *comments* and blanks out string/char literal contents, so the rules in
+//! [`super::rules`] can match tokens without being fooled by `"unsafe"`
+//! inside a string or `.lock()` inside a doc comment. The scanner also
+//! derives the structural facts every rule needs: per-line brace depth,
+//! function spans, the trailing `#[cfg(test)]` region, and
+//! `// bps-lint: allow(...)` directives.
+//!
+//! The scanner is deliberately heuristic (it does not parse Rust); its
+//! contract is documented in DESIGN.md §0.13 and every assumption it
+//! bakes in (tests live in a trailing `#[cfg(test)]` module, statements
+//! end in `;`/`{`/`}`) matches how this repository is written — the
+//! fixture suite in `rust/tests/lint.rs` pins the behaviour.
+
+/// One physical source line, split into code and comment channels.
+pub struct Line {
+    /// Source text with comments removed and string/char literal contents
+    /// blanked (the delimiting quotes are kept, so `""` marks "a string
+    /// was here").
+    pub code: String,
+    /// Concatenated comment text on this line (line + block comments,
+    /// including doc comments), without the `//`/`/*` markers.
+    pub comment: String,
+    /// Brace depth (code braces only) at the start of the line.
+    pub depth_before: usize,
+    /// Brace depth at the end of the line.
+    pub depth_after: usize,
+    /// Number of `{` seen in code on this line.
+    pub opens: usize,
+}
+
+impl Line {
+    /// No code tokens — only comment text (doc comments included).
+    pub fn comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+
+    /// An attribute line (`#[...]` / `#![...]`), treated like a comment
+    /// when walking a statement's leading block.
+    pub fn attr_only(&self) -> bool {
+        let t = self.code.trim();
+        t.starts_with("#[") || t.starts_with("#![")
+    }
+
+    pub fn blank(&self) -> bool {
+        self.code.trim().is_empty() && self.comment.trim().is_empty()
+    }
+}
+
+/// A `fn` item with a body, located by the scanner. Lines are 0-indexed.
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A parsed `// bps-lint: allow(RULE, reason)` directive.
+pub struct Allow {
+    pub rule: String,
+    /// 0-indexed line the directive appears on.
+    pub line: usize,
+    /// Comment-only line → applies from `line` to end of file;
+    /// trailing on a code line → applies to that line only.
+    pub file_scoped: bool,
+    /// The reason text (may be empty — rules reject that as L000).
+    pub reason: String,
+}
+
+/// A scanned source file plus the structural indexes the rules consume.
+pub struct SourceFile {
+    /// Path label used in diagnostics (repo-relative by convention).
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// First line of the trailing `#[cfg(test)]` region, if any; the
+    /// region extends to end of file (repo convention: unit tests are
+    /// the last item of a module).
+    pub test_start: Option<usize>,
+    pub fns: Vec<FnSpan>,
+    pub allows: Vec<Allow>,
+}
+
+/// Lexer state for the code/comment split.
+enum Mode {
+    Normal,
+    LineComment,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+    Char,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let lines = split_lines(text);
+        let test_start = lines
+            .iter()
+            .position(|l| l.code.trim() == "#[cfg(test)]");
+        let fns = find_fns(&lines);
+        let allows = find_allows(&lines);
+        SourceFile {
+            path: path.to_string(),
+            lines,
+            test_start,
+            fns,
+            allows,
+        }
+    }
+
+    /// True when `line` is inside the trailing test region.
+    pub fn in_tests(&self, line: usize) -> bool {
+        self.test_start.is_some_and(|t| line >= t)
+    }
+
+    /// Walk back from `line` to the first line of its statement: stop when
+    /// the previous code line ends a statement (`;`, `{` or `}`) or is not
+    /// code at all.
+    pub fn stmt_start(&self, line: usize) -> usize {
+        let mut s = line;
+        while s > 0 {
+            let prev = &self.lines[s - 1];
+            let code = prev.code.trim_end();
+            if code.trim().is_empty() {
+                break;
+            }
+            match code.chars().last() {
+                Some(';') | Some('{') | Some('}') => break,
+                _ => s -= 1,
+            }
+        }
+        s
+    }
+
+    /// The statement's code from its first line through `line`, joined
+    /// with single spaces (enough context for keyword checks — tokens
+    /// after the flagged line belong to later checks on those lines).
+    pub fn stmt_code(&self, line: usize) -> String {
+        let s = self.stmt_start(line);
+        let mut out = String::new();
+        for l in &self.lines[s..=line] {
+            out.push_str(l.code.trim());
+            out.push(' ');
+        }
+        out
+    }
+
+    /// The statement's code with *all* whitespace removed, extended
+    /// forward until braces opened inside the statement are balanced and
+    /// a `;`/`{`/`}` terminator is reached. This is the view used for
+    /// call-chain matching (`.lock().unwrap()` split across lines) and
+    /// for reading a whole spawn expression including its closure body.
+    pub fn stmt_code_full(&self, line: usize) -> String {
+        let s = self.stmt_start(line);
+        let mut out = String::new();
+        let mut depth: isize = 0;
+        for l in &self.lines[s..] {
+            for ch in l.code.chars() {
+                if !ch.is_whitespace() {
+                    out.push(ch);
+                }
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            let t = l.code.trim_end();
+            let terminated = matches!(t.chars().last(), Some(';') | Some('{') | Some('}'));
+            if terminated && depth <= 0 {
+                break;
+            }
+        }
+        out
+    }
+
+    /// True when the comment channel of the statement containing `line`,
+    /// or of the contiguous comment/attribute block directly above it,
+    /// contains `needle` (case-insensitive).
+    pub fn has_note(&self, line: usize, needle: &str) -> bool {
+        let needle = needle.to_ascii_lowercase();
+        let s = self.stmt_start(line);
+        for l in &self.lines[s..=line] {
+            if l.comment.to_ascii_lowercase().contains(&needle) {
+                return true;
+            }
+        }
+        // the comment/attribute block directly above the statement
+        let mut i = s;
+        while i > 0 {
+            let prev = &self.lines[i - 1];
+            if prev.comment_only() || prev.attr_only() {
+                if prev.comment.to_ascii_lowercase().contains(&needle) {
+                    return true;
+                }
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+        false
+    }
+
+    /// True when a scoped allow directive covers `rule` for a diagnostic
+    /// anchored at `line` (whose statement starts at `stmt_start(line)`).
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        let s = self.stmt_start(line);
+        self.allows.iter().any(|a| {
+            a.rule == rule
+                && !a.reason.trim().is_empty()
+                && if a.file_scoped {
+                    a.line <= line
+                } else {
+                    a.line >= s && a.line <= line
+                }
+        })
+    }
+
+    /// The span of the `fn` whose body contains `line`, if any (smallest
+    /// enclosing span wins, so methods beat their `impl` siblings).
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .min_by_key(|f| f.end - f.start)
+    }
+}
+
+/// Split `text` into code/comment channels, tracking brace depth.
+fn split_lines(text: &str) -> Vec<Line> {
+    let mut lines = Vec::new();
+    let bytes: Vec<char> = text.chars().collect();
+    let mut mode = Mode::Normal;
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut depth: usize = 0;
+    let mut depth_before = 0usize;
+    let mut opens = 0usize;
+    let mut i = 0;
+    let n = bytes.len();
+    macro_rules! flush_line {
+        () => {{
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                depth_before,
+                depth_after: depth,
+                opens,
+            });
+            depth_before = depth;
+            opens = 0;
+        }};
+    }
+    while i < n {
+        let c = bytes[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Normal;
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Normal => {
+                if c == '/' && i + 1 < n && bytes[i + 1] == '/' {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    // raw string? count '#'s backwards to an 'r'
+                    let mut h = 0usize;
+                    let mut j = code.len();
+                    let cb: Vec<char> = code.chars().collect();
+                    while j > 0 && cb[j - 1] == '#' {
+                        h += 1;
+                        j -= 1;
+                    }
+                    if j > 0 && cb[j - 1] == 'r' {
+                        mode = Mode::RawStr(h);
+                    } else {
+                        mode = Mode::Str;
+                    }
+                    code.push('"');
+                    i += 1;
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    if i + 1 < n && bytes[i + 1] == '\\' {
+                        mode = Mode::Char;
+                        code.push('\'');
+                        i += 2; // consume the backslash too
+                    } else if i + 2 < n && bytes[i + 2] == '\'' {
+                        // 'x' — blank the payload char
+                        code.push('\'');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        // lifetime marker: plain code
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    if c == '{' {
+                        depth += 1;
+                        opens += 1;
+                    } else if c == '}' {
+                        depth = depth.saturating_sub(1);
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(d) => {
+                if c == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                    mode = if d == 1 {
+                        Mode::Normal
+                    } else {
+                        Mode::BlockComment(d - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                    mode = Mode::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // skip the escaped char (contents are blanked) — but a
+                    // `\` line-continuation must still flush the line
+                    if i + 1 < n && bytes[i + 1] == '\n' {
+                        flush_line!();
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(h) => {
+                if c == '"' {
+                    let mut k = 0usize;
+                    while k < h && i + 1 + k < n && bytes[i + 1 + k] == '#' {
+                        k += 1;
+                    }
+                    if k == h {
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        mode = Mode::Normal;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Char => {
+                if c == '\'' {
+                    code.push('\'');
+                    mode = Mode::Normal;
+                }
+                i += 1;
+            }
+        }
+    }
+    flush_line!();
+    lines
+}
+
+/// True when `word` appears in `code` delimited by non-identifier chars.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    let w = word.as_bytes();
+    let ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut i = 0;
+    while i + w.len() <= b.len() {
+        if &b[i..i + w.len()] == w {
+            let before_ok = i == 0 || !ident(b[i - 1]);
+            let after_ok = i + w.len() == b.len() || !ident(b[i + w.len()]);
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Locate `fn` items with bodies by brace counting from the declaration.
+fn find_fns(lines: &[Line]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let Some(name) = fn_name(&l.code) else {
+            continue;
+        };
+        // walk forward to the body's closing brace (or a bodyless `;`)
+        let mut depth: isize = 0;
+        let mut opened = false;
+        for (j, lj) in lines.iter().enumerate().skip(i) {
+            for ch in lj.code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                out.push(FnSpan {
+                    name: name.clone(),
+                    start: i,
+                    end: j,
+                });
+                break;
+            }
+            if !opened && lj.code.contains(';') {
+                break; // trait method declaration without a body
+            }
+        }
+    }
+    out
+}
+
+/// Extract the identifier after a `fn` keyword token, if present.
+fn fn_name(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    let mut i = 0;
+    while i + 2 <= b.len() {
+        if &b[i..i + 2] == b"fn" && (i == 0 || !ident(b[i - 1])) {
+            let mut j = i + 2;
+            if j < b.len() && !ident(b[j]) {
+                while j < b.len() && b[j] == b' ' {
+                    j += 1;
+                }
+                let s = j;
+                while j < b.len() && ident(b[j]) {
+                    j += 1;
+                }
+                if j > s {
+                    return Some(code[s..j].to_string());
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse every `bps-lint: allow(RULE, reason)` directive in the file's
+/// comment channel. A malformed directive is recorded with an empty rule
+/// so the caller can report it (L000) instead of silently ignoring it.
+///
+/// A directive must *begin* its comment: `// bps-lint: ...` (trailing on
+/// a code line or alone). Doc comments (`///`, `//!`) keep their extra
+/// `/` or `!` in the comment channel, so prose and examples that merely
+/// mention the marker — including this module's own documentation — are
+/// never parsed as directives.
+fn find_allows(lines: &[Line]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let Some(rest) = l.comment.trim_start().strip_prefix("bps-lint:") else {
+            continue;
+        };
+        let parsed = rest.trim_start().strip_prefix("allow(").and_then(|r| {
+            let close = r.find(')')?;
+            let inner = &r[..close];
+            let (rule, reason) = match inner.split_once(',') {
+                Some((a, b)) => (a.trim(), b.trim()),
+                None => (inner.trim(), ""),
+            };
+            Some((rule.to_string(), reason.to_string()))
+        });
+        let (rule, reason) = parsed.unwrap_or_default();
+        out.push(Allow {
+            rule,
+            line: i,
+            file_scoped: l.comment_only(),
+            reason,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_separated() {
+        let src = "let a = \"unsafe // not code\"; // trailing unsafe note\nlet b = 'x';\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].comment.contains("unsafe note"));
+        assert_eq!(f.lines[1].code, "let b = '';");
+    }
+
+    #[test]
+    fn lifetimes_are_not_chars() {
+        let f = SourceFile::parse("t.rs", "fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(f.lines[0].code.contains("'a"));
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "f");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"unsafe { }\"#;\nlet t = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].code.contains("unsafe"), "{}", f.lines[0].code);
+        assert!(f.lines[1].code.contains("let t"));
+    }
+
+    #[test]
+    fn string_line_continuations_keep_line_numbers() {
+        let src = "let s = \"a \\\nb\";\nlet t = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.lines[2].code.contains("let t"), "{}", f.lines[2].code);
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "/* outer /* inner */ still comment */ let x = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.lines[0].code.contains("let x"));
+        assert!(!f.lines[0].code.contains("outer"));
+    }
+
+    #[test]
+    fn fn_spans_and_depth() {
+        let src = "fn a() {\n    inner();\n}\n\nfn b(x: usize) -> usize {\n    x\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["a", "b"]);
+        assert_eq!((f.fns[0].start, f.fns[0].end), (0, 2));
+        assert_eq!((f.fns[1].start, f.fns[1].end), (4, 6));
+        assert_eq!(f.lines[1].depth_before, 1);
+    }
+
+    #[test]
+    fn stmt_walkback_joins_continuations() {
+        let src = "let x = foo(\n    bar,\n    baz,\n);\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.stmt_start(2), 0);
+        assert!(f.stmt_code(2).contains("foo("));
+    }
+
+    #[test]
+    fn stmt_code_full_spans_closures() {
+        let src =
+            "let t = Builder::new()\n    .name(\"x\")\n    .spawn(move || {\n        run_loop();\n    });\n";
+        let f = SourceFile::parse("t.rs", src);
+        let full = f.stmt_code_full(0);
+        assert!(full.contains(".name("), "{full}");
+        assert!(full.contains("run_loop"), "{full}");
+    }
+
+    #[test]
+    fn allow_directives_parse_and_scope() {
+        let src = "\
+// bps-lint: allow(L002, counters only)
+let a = x.load(Ordering::Relaxed); // bps-lint: allow(L003, demo)
+// bps-lint: allow(
+/// docs may mention bps-lint: allow(L001, x) without arming it
+// prose about the bps-lint: allow syntax is not a directive either
+";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.allows.len(), 3, "doc/prose mentions must not parse");
+        assert!(f.allows[0].file_scoped);
+        assert_eq!(f.allows[0].rule, "L002");
+        assert_eq!(f.allows[0].reason, "counters only");
+        assert!(!f.allows[1].file_scoped);
+        assert!(f.allows[2].rule.is_empty(), "malformed keeps empty rule");
+        assert!(f.allowed("L002", 1));
+        assert!(!f.allowed("L003", 0));
+    }
+
+    #[test]
+    fn test_region_detected() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.test_start, Some(1));
+        assert!(f.in_tests(2));
+        assert!(!f.in_tests(0));
+    }
+
+    #[test]
+    fn has_note_sees_statement_and_leading_block() {
+        let src = "\
+// SAFETY: fine here
+#[inline]
+unsafe fn f() {}
+";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.has_note(2, "safety:"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("unsafe impl Send for T {}", "unsafe"));
+        assert!(!has_word("let unsafely = 1;", "unsafe"));
+        assert!(!has_word("dyn Fn(usize)", "fn"));
+    }
+}

@@ -16,6 +16,9 @@
 //!   scenario-demo  scenario engine demo: streaming procgen + curriculum
 //!   bench          standalone batch-renderer benchmark (--json appends the
 //!                  machine-readable perf trajectory to BENCH_render.json)
+//!   lint           static analysis: enforce the repo's concurrency
+//!                  invariants (SAFETY comments, lock discipline, thread
+//!                  hygiene, wire-protocol drift — DESIGN.md §0.13)
 //!   info           print manifest / artifact information
 //!   help           describe the batched environment API + all options
 //!
@@ -71,6 +74,7 @@ fn run() -> Result<()> {
         Some("serve-demo") => serve_demo(&mut args),
         Some("scenario-demo") => scenario_demo(&mut args),
         Some("bench") => bench(&mut args),
+        Some("lint") => lint_cmd(&mut args),
         Some("info") => info(&mut args),
         Some("help") | None => {
             print_help();
@@ -80,7 +84,7 @@ fn run() -> Result<()> {
             bail!(
                 "unknown subcommand {other:?}\n\
                  usage: bps <gen-dataset|train|eval|serve|connect|agent|stats|trace|\
-                 serve-demo|scenario-demo|bench|info|help> [--key value ...]"
+                 serve-demo|scenario-demo|bench|lint|info|help> [--key value ...]"
             )
         }
     };
@@ -194,6 +198,15 @@ SUBCOMMANDS
                (--complexity gibson|thor|test --n N --res R --warmup W
                 --reps K --threads T --json --out BENCH_render.json;
                 BPS_BENCH_QUICK=1 shrinks everything to CI-smoke size)
+  lint         static analysis over rust/src: enforce the concurrency
+               invariants of DESIGN.md §0.13 with stable rule IDs —
+               L001 unsafe needs // SAFETY:, L002 control-flow Relaxed
+               needs // relaxed:, L003 serve lock discipline, L004
+               thread naming + watchdog heartbeats, L005 wire-protocol /
+               DESIGN.md drift. Exits nonzero on any violation; scoped
+               escapes via `// bps-lint: allow(L00X, reason)`
+               (--root DIR  repo root, default: nearest ancestor with
+                rust/src; --json  machine-readable report)
   info         print the AOT artifact manifest (--artifacts-dir PATH)
   help         this text
 
@@ -687,6 +700,10 @@ fn serve(args: &mut Args) -> Result<()> {
                 }));
             }
             let m = bps::obs::MetricsServer::listen_with(a.as_str(), server.registry(), hooks)?;
+            // the scrape surface is a long-lived thread like any other:
+            // fold its heartbeat into the server's watchdog so a wedged
+            // /metrics accept loop is visible in /healthz
+            server.watchdog().adopt(m.heartbeat());
             println!("metrics: http://{}/metrics", m.local_addr());
             Some(m)
         }
@@ -1323,6 +1340,27 @@ fn bench(args: &mut Args) -> Result<()> {
     }
     if json {
         println!("appended 4 records to {out_path:?}");
+    }
+    Ok(())
+}
+
+/// `bps lint` — run the repo's static-analysis rules (DESIGN.md §0.13)
+/// over `rust/src` and exit nonzero on any violation.
+fn lint_cmd(args: &mut Args) -> Result<()> {
+    let root = match args.opt("root") {
+        Some(r) => PathBuf::from(r),
+        None => bps::lint::find_root()?,
+    };
+    let json = args.flag("json")?;
+    let report = bps::lint::lint_tree(&root)?;
+    if json {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.clean() {
+        // findings already printed; a nonzero exit is the CI contract
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -24,9 +24,15 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::registry::Registry;
+use super::watchdog::Heartbeat;
 
 /// How often the accept loop polls for shutdown.
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Watchdog thresholds for the accept thread: it wakes at least every
+/// [`ACCEPT_POLL`], so a second of silence means the scrape surface (and
+/// with it `/healthz`) is wedged.
+const HTTP_DEGRADED: Duration = Duration::from_secs(1);
+const HTTP_STALLED: Duration = Duration::from_secs(5);
 /// Per-request read deadline and cap on the request head we will buffer.
 const READ_TIMEOUT: Duration = Duration::from_secs(2);
 const MAX_REQUEST_HEAD: usize = 4096;
@@ -51,6 +57,7 @@ pub struct MetricsServer {
     addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     thread: Option<JoinHandle<()>>,
+    heartbeat: Heartbeat,
 }
 
 impl MetricsServer {
@@ -71,22 +78,33 @@ impl MetricsServer {
             .context("metrics listener nonblocking")?;
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let heartbeat = Heartbeat::new("metrics-http", HTTP_DEGRADED, HTTP_STALLED);
         let thread = {
             let shutdown = Arc::clone(&shutdown);
+            let hb = heartbeat.clone();
             std::thread::Builder::new()
                 .name("bps-metrics-http".into())
-                .spawn(move || accept_loop(listener, registry, hooks, shutdown))
+                .spawn(move || accept_loop(listener, registry, hooks, shutdown, hb))
                 .context("spawn metrics thread")?
         };
         Ok(MetricsServer {
             addr,
             shutdown,
             thread: Some(thread),
+            heartbeat,
         })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.addr
+    }
+
+    /// The accept thread's liveness beacon. Standalone uses (tests,
+    /// `bps train --metrics-addr`) may ignore it; `bps serve` adopts it
+    /// into the server's watchdog so a wedged scrape surface shows up in
+    /// `/healthz` like any other stalled role.
+    pub fn heartbeat(&self) -> &Heartbeat {
+        &self.heartbeat
     }
 }
 
@@ -114,9 +132,11 @@ fn accept_loop(
     registry: Arc<Registry>,
     hooks: HttpHooks,
     shutdown: Arc<AtomicBool>,
+    hb: Heartbeat,
 ) {
     let active = Arc::new(AtomicUsize::new(0));
     while !shutdown.load(Ordering::SeqCst) {
+        hb.beat();
         match listener.accept() {
             Ok((stream, _)) => {
                 if active.fetch_add(1, Ordering::SeqCst) >= MAX_CONNS {

@@ -572,6 +572,35 @@ mod tests {
         assert_eq!(ab_c, global);
     }
 
+    /// Concurrent observers on one shared histogram lose nothing: the
+    /// final snapshot equals a serial replay of every observation. Runs
+    /// under Miri in CI (small iteration count) so the Relaxed atomics
+    /// get checked as a concurrency protocol, not just as arithmetic.
+    #[test]
+    fn histogram_concurrent_observe_loses_nothing() {
+        let threads = 4u64;
+        let per: u64 = if cfg!(miri) { 16 } else { 2000 };
+        let shared = Histogram::new();
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = shared.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.observe((t * per + i) % 3000);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let serial = Histogram::new();
+        for v in 0..threads * per {
+            serial.observe(v % 3000);
+        }
+        assert_eq!(shared.snapshot(), serial.snapshot());
+    }
+
     #[test]
     fn snapshot_order_is_deterministic() {
         let r = Registry::new();

@@ -251,6 +251,9 @@ impl Watchdog {
         let handle = std::thread::Builder::new()
             .name("bps-watchdog".into())
             .spawn(move || {
+                // relaxed: shutdown poll — a stale read delays exit by at
+                // most one SCAN_INTERVAL; stop() joins the thread, so no
+                // state is read after the flag is observed
                 while !inner.stop.load(Ordering::Relaxed) {
                     std::thread::sleep(SCAN_INTERVAL);
                     scan(&inner, Instant::now());
@@ -331,8 +334,10 @@ impl Watchdog {
         {
             let t = self.inner.tracked.lock().unwrap();
             for e in t.iter() {
-                // A death declaration takes effect on report()
-                // immediately, even before the next scan commits it.
+                // relaxed: a death declaration takes effect on report()
+                // immediately, even before the next scan commits it; the
+                // flag is monotonic and carries no payload, so a stale
+                // read only reports Dead one call later.
                 if e.cell.dead.load(Ordering::Relaxed) {
                     dead.insert(e.cell.role.to_string());
                     continue;
@@ -442,11 +447,17 @@ fn scan(inner: &Inner, now: Instant) {
         t.retain(|e| Arc::strong_count(&e.cell) > 1);
         for e in t.iter_mut() {
             let ticks = e.cell.ticks.load(Ordering::Relaxed);
+            // relaxed: liveness scan over monotonic beat/idle counters —
+            // a torn-in-time view errs by one SCAN_INTERVAL in the
+            // degraded/stalled classification, which the debounce below
+            // absorbs; no data is transferred through these atomics
             if ticks != e.last_ticks || e.cell.idle.load(Ordering::Relaxed) {
                 e.last_ticks = ticks;
                 e.last_progress = now;
             }
             let silent = now.saturating_duration_since(e.last_progress);
+            // relaxed: same argument as the scan loads above; Dead is
+            // additionally re-checked by report() directly
             let raw = if e.cell.dead.load(Ordering::Relaxed) {
                 Level::Dead
             } else if silent >= e.cell.stalled {
@@ -669,6 +680,31 @@ mod tests {
         w.scan_once(t0 + 10_000 * MS);
         w.scan_once(t0 + 10_010 * MS);
         assert!(w.report().healthy(), "a retired thread is not a stall");
+    }
+
+    /// Beats from a worker thread race the scanner's counter loads —
+    /// the exact access pattern the CI Miri job checks. Sleep-free:
+    /// scans use explicit instants, so Miri never waits on wall time.
+    #[test]
+    fn concurrent_beats_race_the_scanner() {
+        let w = wd();
+        let hb = w.register("role-f", 50 * MS, 200 * MS);
+        let beats: u64 = if cfg!(miri) { 64 } else { 10_000 };
+        let worker = {
+            let hb = hb.clone();
+            std::thread::spawn(move || {
+                for _ in 0..beats {
+                    hb.beat();
+                }
+            })
+        };
+        let t0 = Instant::now();
+        for k in 0..8u32 {
+            w.scan_once(t0 + k * 10 * MS);
+        }
+        worker.join().unwrap();
+        w.scan_once(t0 + 90 * MS);
+        assert!(w.report().healthy(), "a beating thread never stalls");
     }
 
     #[test]

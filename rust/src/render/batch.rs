@@ -286,9 +286,13 @@ impl BatchRenderer {
             .fetch_add(raster_total.saturating_sub(times.transform_ns), Ordering::Relaxed);
         self.prev_cost[i].store(stats.tris_rasterized, Ordering::Relaxed);
 
-        // fused resolve: normalize + box-downsample straight into this
-        // env's tile of the megaframe observation buffer
+        // Fused resolve: normalize + box-downsample straight into this
+        // env's tile of the megaframe observation buffer.
         let of = self.cfg.obs_floats();
+        // SAFETY: tile i is the half-open float range [i*of, (i+1)*of) of
+        // the megaframe — index-disjoint across workers — and `obs_base`
+        // comes from a `&mut [f32]` spanning n*of floats that the caller
+        // holds across the whole batch (the pool joins before it returns).
         let out =
             unsafe { std::slice::from_raw_parts_mut((obs_base as *mut f32).add(i * of), of) };
         let t1 = Instant::now();

@@ -52,6 +52,10 @@ impl ParamStore {
         w.write_all(&(self.flat.len() as u64).to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
         for buf in [&self.flat, &self.m, &self.v] {
+            // SAFETY: a `[f32]` reinterpreted as bytes — same allocation,
+            // same length in bytes (len * 4), f32 has no padding or
+            // invalid bit patterns, and the shared borrow of `buf` keeps
+            // the storage alive for the duration of `bytes`.
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4)
             };
@@ -77,6 +81,10 @@ impl ParamStore {
         let step = f32::from_le_bytes(b4);
         let mut read_vec = |n: usize| -> Result<Vec<f32>> {
             let mut v = vec![0.0f32; n];
+            // SAFETY: the byte view aliases `v`'s own storage exclusively
+            // (fresh `&mut`), covers exactly its n * 4 bytes, and any bit
+            // pattern read into it is a valid f32 — little-endian on-disk
+            // layout matches the in-memory layout written by `save`.
             let bytes: &mut [u8] = unsafe {
                 std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, n * 4)
             };

@@ -264,6 +264,18 @@ pub(crate) fn lock_state(m: &Mutex<ShardState>) -> MutexGuard<'_, ShardState> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Lock the server's per-shard tenant-registry table with the same
+/// poison-recovery contract as [`lock_state`]/`lock_tenants`: a tenant
+/// driver that panicked mid-update has already quarantined its shard, so
+/// readers (stats, shutdown, new leases) must keep working rather than
+/// cascade the `PoisonError`. Every `tenancy` lock site goes through
+/// this (enforced by `bps lint` rule L003).
+pub(crate) fn lock_tenancy(
+    m: &Mutex<Vec<Option<Arc<TenantShared>>>>,
+) -> MutexGuard<'_, Vec<Option<Arc<TenantShared>>>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl ShardShared {
     pub fn fail(&self, msg: String) {
         let mut st = lock_state(&self.state);
@@ -1278,7 +1290,7 @@ impl SimServer {
         // First policy lease on the shard stands up its tenant registry
         // + driver thread.
         let tshared = {
-            let mut tenancy = self.tenancy.lock().unwrap();
+            let mut tenancy = lock_tenancy(&self.tenancy);
             if tenancy[shard_idx].is_none() {
                 let straggler = lock_state(&self.shards[shard_idx].state).coal.policy();
                 let shared = Arc::new(TenantShared::new(width, straggler));
@@ -1334,7 +1346,10 @@ impl SimServer {
                         }
                     })
                     .map_err(|e| anyhow!("spawn tenant driver thread: {e}"))?;
-                self.tenant_drivers.lock().unwrap().push(driver);
+                self.tenant_drivers
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(driver);
                 tenancy[shard_idx] = Some(shared);
             }
             Arc::clone(tenancy[shard_idx].as_ref().unwrap())
@@ -1412,7 +1427,7 @@ impl SimServer {
                 }
             })
             .collect();
-        let tenancy = self.tenancy.lock().unwrap();
+        let tenancy = lock_tenancy(&self.tenancy);
         for (stats, tshared) in out.iter_mut().zip(tenancy.iter()) {
             let Some(ts) = tshared else { continue };
             let st = lock_tenants(&ts.state);
@@ -1449,7 +1464,7 @@ impl Drop for SimServer {
         for sh in &self.shards {
             sh.fail("server shut down".into());
         }
-        for ts in self.tenancy.lock().unwrap().iter().flatten() {
+        for ts in lock_tenancy(&self.tenancy).iter().flatten() {
             let mut st = lock_tenants(&ts.state);
             st.shutdown = true;
             ts.posted.notify_all();

@@ -235,6 +235,7 @@ fn dial(addr: &str) -> Result<(TcpStream, TcpStream, TcpStream, u32)> {
 
 fn spawn_reader(shared: &Arc<ClientShared>, stream: TcpStream) -> Result<()> {
     let for_reader = Arc::clone(shared);
+    // bps-lint: allow(L004, client process — no watchdog exists here; the reader's liveness is the socket's)
     let h = std::thread::Builder::new()
         .name("bps-wire-client".into())
         .spawn(move || client_reader(stream, for_reader))

@@ -281,9 +281,11 @@ impl ConnShared {
     }
 
     fn close(&self) {
-        // Swap-gated: close() has several racing callers (reader
-        // teardown, writer errors, slow-reader policy, the reaper, server
-        // drop) and the open-connection gauge must move exactly once.
+        // relaxed: the swap is a pure at-most-once gate — close() has
+        // several racing callers (reader teardown, writer errors, the
+        // slow-reader policy, the reaper, server drop) and the
+        // open-connection gauge must move exactly once; no other memory
+        // is published through this flag.
         if !self.closed.swap(true, Ordering::Relaxed) {
             self.obs.conns_open.add(-1.0);
         }
@@ -567,6 +569,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<WireShared>) {
             if closed > RETAINED_CLOSED_CONNS {
                 let mut to_drop = closed - RETAINED_CLOSED_CONNS;
                 conns.retain(|c| {
+                    // relaxed: `closed` is monotonic (false→true once);
+                    // a stale read keeps a row one prune round longer,
+                    // which only delays bookkeeping
                     if to_drop > 0 && c.closed.load(Ordering::Relaxed) {
                         to_drop -= 1;
                         false
@@ -611,9 +616,14 @@ fn reap_idle_conns(shared: &Arc<WireShared>) {
     };
     let now_ms = shared.epoch.elapsed().as_millis() as u64;
     for c in shared.conns.lock().unwrap().iter() {
+        // relaxed: both flags are advisory — a stale `closed` or
+        // `last_activity_ms` read defers the reap to the next accept-loop
+        // iteration (25 ms later); nothing is published through them
         if !c.closed.load(Ordering::Relaxed)
             && now_ms.saturating_sub(c.last_activity_ms.load(Ordering::Relaxed)) > ticks
         {
+            // relaxed: at-most-once gate for the reap bookkeeping; the
+            // close() below is idempotent either way
             if !c.reaped.swap(true, Ordering::Relaxed) {
                 c.obs.reaped.inc();
                 c.events.emit(
@@ -762,6 +772,8 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Vec<u8>>, conn: Arc<ConnShare
                 conn.touch();
             }
             Err(RecvTimeoutError::Timeout) => {
+                // relaxed: exit poll only — a stale read costs one more
+                // timeout tick before the writer notices the close
                 if conn.closed.load(Ordering::Relaxed) {
                     return;
                 }
@@ -805,6 +817,9 @@ fn enqueue_buf(conn: &ConnShared, outbox: &SyncSender<Vec<u8>>, buf: Vec<u8>) ->
     match outbox.try_send(buf) {
         Ok(()) => true,
         Err(TrySendError::Full(_)) => {
+            // relaxed: at-most-once gate so the slow-reader event and
+            // counter fire once; the actual disconnect is the close()
+            // below, which is ordering-safe on its own
             if !conn.dropped_slow.swap(true, Ordering::Relaxed) {
                 conn.obs.dropped_slow.inc();
                 conn.events.emit(

@@ -174,12 +174,15 @@ impl BatchSim {
     /// Queue a scene swap for env `i` (applied at its next episode reset) —
     /// the simulator half of the renderer's asset rotation (paper §3.2).
     pub fn queue_scene(&mut self, i: usize, scene: Arc<SceneAsset>) {
-        // &mut self: exclusive access, safe to touch the cell directly.
+        // SAFETY: `&mut self` gives exclusive access to every env cell —
+        // no `step_batch` (also `&mut self`) can be running concurrently.
         unsafe { (*self.envs.0[i].get()).pending_scene = Some(scene) };
     }
 
     pub fn env(&self, i: usize) -> &EnvState {
-        // &self with no concurrent step() running; used by tests/metrics.
+        // SAFETY: all mutation goes through `&mut self` methods
+        // (`step_batch`, `queue_scene`), so under this `&self` borrow no
+        // writer can exist; used by tests/metrics between steps.
         unsafe { &*self.envs.0[i].get() }
     }
 
@@ -219,6 +222,10 @@ impl BatchSim {
             // SAFETY: index-disjoint writes (one env per slot).
             let env = unsafe { &mut *envs.0[i].get() };
             let (reward, done, success, spl, score) = step_env(&cfg, env, actions[i]);
+            // SAFETY: same index-disjointness as the env cell above —
+            // worker i writes only offset i (and the i*3 goal triple) of
+            // each output buffer, whose `&mut` borrows outlive this
+            // `parallel_for` (the pool joins before `step_batch` returns).
             unsafe {
                 *(outs.rewards as *mut f32).add(i) = reward;
                 *(outs.dones as *mut bool).add(i) = done;

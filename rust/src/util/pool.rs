@@ -9,44 +9,120 @@
 //!
 //! `parallel_for` borrows its closure (no `'static` bound) — the pool
 //! guarantees every worker has finished with the closure before returning,
-//! which is what makes the internal pointer-erasure sound.
+//! which is what makes the internal pointer-erasure sound. The erasure
+//! itself is a plain raw-pointer cast ([`erase`]); the only `unsafe` is
+//! the dereference inside [`task::Task::run`], whose liveness argument is
+//! spelled out at the deref site.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-struct Task {
-    /// Type-erased `&dyn Fn(usize)` valid for the duration of the task.
-    func: *const (dyn Fn(usize) + Sync),
-    next: AtomicUsize,
-    end: usize,
-    grain: usize,
-    completed: AtomicUsize,
-    done: Mutex<bool>,
-    done_cv: Condvar,
+use task::Task;
+
+/// Erase the caller-stack lifetime from a borrowed task closure.
+///
+/// A plain coercion cannot turn `&'a (dyn Fn(usize) + Sync + 'a)` into
+/// `*const (dyn Fn(usize) + Sync)` because the unadorned trait-object
+/// pointer type implies a `'static` bound. Raw-pointer `as` casts,
+/// however, may change only the lifetime bound of a trait object (the
+/// vtable and principal trait are identical), so the two-step cast below
+/// is the documented, transmute-free spelling of the same erasure. The
+/// cast itself is safe; all obligations attach to the later dereference.
+///
+/// Contract for the single caller (`parallel_for`): the returned pointer
+/// must not be dereferenced after `'a` ends. `Task::run` documents how
+/// the completion protocol enforces that.
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync) {
+    f as *const (dyn Fn(usize) + Sync + 'a) as *const (dyn Fn(usize) + Sync)
 }
 
-// SAFETY: `func` outlives the task (parallel_for blocks until completion);
-// the pointee is Sync so shared calls from many threads are fine.
-unsafe impl Send for Task {}
-unsafe impl Sync for Task {}
+/// Private home of [`Task`]: keeps the erased pointer and the completion
+/// protocol's fields inaccessible outside this block, so every use goes
+/// through `new`/`run`/`wait_done` and the liveness argument below stays
+/// local to one screen of code.
+mod task {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex};
 
-impl Task {
-    fn run(&self) {
-        loop {
-            let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
-            if start >= self.end {
-                break;
+    pub(super) struct Task {
+        /// Type-erased `&dyn Fn(usize)` (see [`super::erase`]) valid until
+        /// [`wait_done`](Task::wait_done) returns.
+        func: *const (dyn Fn(usize) + Sync),
+        /// Next unclaimed index (chunk grab cursor).
+        next: AtomicUsize,
+        end: usize,
+        grain: usize,
+        /// Indices fully executed; reaching `end` flips `done`.
+        completed: AtomicUsize,
+        done: Mutex<bool>,
+        done_cv: Condvar,
+    }
+
+    // SAFETY: the raw `func` pointer is the only non-Send field; it is
+    // produced from a `&(dyn Fn + Sync)` that outlives the task (the
+    // submitting thread blocks in `wait_done` until every worker is out
+    // of `run`), so sending the Task to worker threads cannot outlive
+    // the pointee.
+    unsafe impl Send for Task {}
+    // SAFETY: sharing `&Task` across threads shares `*const dyn Fn` and
+    // atomics/locks. The pointee is `Sync` (bound on the erased type),
+    // so concurrent `&`-calls through `func` are permitted.
+    unsafe impl Sync for Task {}
+
+    impl Task {
+        /// Wrap an erased closure for one `parallel_for` batch.
+        ///
+        /// Contract: `func` must stay dereferenceable until `wait_done`
+        /// returns (the submitter must not drop the closure earlier).
+        pub(super) fn new(func: *const (dyn Fn(usize) + Sync), end: usize, grain: usize) -> Task {
+            Task {
+                func,
+                next: AtomicUsize::new(0),
+                end,
+                grain,
+                completed: AtomicUsize::new(0),
+                done: Mutex::new(false),
+                done_cv: Condvar::new(),
             }
-            let stop = (start + self.grain).min(self.end);
-            let f = unsafe { &*self.func };
-            for i in start..stop {
-                f(i);
+        }
+
+        /// Claim and execute chunks until the index range is exhausted.
+        pub(super) fn run(&self) {
+            loop {
+                let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+                if start >= self.end {
+                    break;
+                }
+                let stop = (start + self.grain).min(self.end);
+                // SAFETY: the pointee is still alive *here*. `wait_done`
+                // cannot return (so the borrowed closure cannot drop)
+                // before `completed` reaches `end`, and this chunk's
+                // indices have not been counted into `completed` yet —
+                // claiming a ticket below `end` therefore pins the
+                // closure until the `fetch_add` below. Workers that
+                // arrive after completion observe `start >= end` and
+                // break above without ever touching `func`. The pointee
+                // is `Sync`, so concurrent `&`-calls are allowed.
+                let f = unsafe { &*self.func };
+                for i in start..stop {
+                    f(i);
+                }
+                let prev = self.completed.fetch_add(stop - start, Ordering::AcqRel);
+                if prev + (stop - start) == self.end {
+                    *self.done.lock().unwrap() = true;
+                    self.done_cv.notify_all();
+                }
             }
-            let prev = self.completed.fetch_add(stop - start, Ordering::AcqRel);
-            if prev + (stop - start) == self.end {
-                *self.done.lock().unwrap() = true;
-                self.done_cv.notify_all();
+        }
+
+        /// Block until every index has fully executed (i.e. every worker
+        /// has returned from the closure). This is the fence that makes
+        /// the lifetime erasure sound.
+        pub(super) fn wait_done(&self) {
+            let mut done = self.done.lock().unwrap();
+            while !*done {
+                done = self.done_cv.wait(done).unwrap();
             }
         }
     }
@@ -110,21 +186,9 @@ impl WorkerPool {
         // One batch at a time: the slot is a broadcast of the current task.
         let _guard = self.serialize.lock().unwrap();
         let fref: &(dyn Fn(usize) + Sync) = &f;
-        // SAFETY: we erase the lifetime; `wait_done` below ensures all
-        // workers finished calling `func` before `f` drops. A plain `as`
-        // cast cannot widen the trait object's lifetime bound to the
-        // 'static the pointer type implies, hence transmute.
-        #[allow(clippy::useless_transmute)]
-        let func: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fref) };
-        let task = Arc::new(Task {
-            func,
-            next: AtomicUsize::new(0),
-            end: n,
-            grain,
-            completed: AtomicUsize::new(0),
-            done: Mutex::new(false),
-            done_cv: Condvar::new(),
-        });
+        // Lifetime-erasing cast (no unsafe): `task.wait_done()` below keeps
+        // `f` alive until every worker has left the closure.
+        let task = Arc::new(Task::new(erase(fref), n, grain));
         {
             let mut slot = self.shared.slot.lock().unwrap();
             slot.0 += 1;
@@ -134,10 +198,7 @@ impl WorkerPool {
         // The caller helps until the index range is exhausted...
         task.run();
         // ...then waits for stragglers still inside `f`.
-        let mut done = task.done.lock().unwrap();
-        while !*done {
-            done = task.done_cv.wait(done).unwrap();
-        }
+        task.wait_done();
         // Clear the slot so idle workers stop re-checking a finished task.
         let mut slot = self.shared.slot.lock().unwrap();
         slot.1 = None;
@@ -164,8 +225,12 @@ impl WorkerPool {
         let ready = AtomicUsize::new(0); // published stage-1 prefix length
         self.parallel_for(n, 1, |k| {
             while ready.load(Ordering::Acquire) <= k {
-                // once every ticket is claimed, wait without hammering the
-                // cursor cache line with RMWs (the cullers still need it)
+                // relaxed: an advisory peek only — a stale read merely
+                // takes one extra trip through the ticket fetch_add (whose
+                // bound is re-checked); correctness rests on the Acquire
+                // reads of `ready`, never on this load. Once every ticket
+                // is claimed this waits without hammering the cursor cache
+                // line with RMWs (the cullers still need it).
                 if cursor.load(Ordering::Relaxed) >= n {
                     std::hint::spin_loop();
                     continue;
@@ -225,10 +290,21 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
 
+    /// Miri runs these tests too (CI `miri` job) at a fraction of the
+    /// index space — enough to exercise multi-chunk, multi-worker
+    /// interleavings without minutes of interpreted spinning.
+    fn sized(native: usize, miri: usize) -> usize {
+        if cfg!(miri) {
+            miri
+        } else {
+            native
+        }
+    }
+
     #[test]
     fn all_indices_visited_exactly_once() {
         let pool = WorkerPool::new(4);
-        let n = 10_000;
+        let n = sized(10_000, 128);
         let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
         pool.parallel_for(n, 7, |i| {
             counts[i].fetch_add(1, Ordering::Relaxed);
@@ -249,6 +325,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock assertion; meaningless interpreted
     fn imbalanced_work_dynamic_schedule() {
         // A few very slow items must not serialize the rest: with dynamic
         // scheduling total wall time ~= slow item, not sum of all.
@@ -266,7 +343,7 @@ mod tests {
     #[test]
     fn reusable_across_batches() {
         let pool = WorkerPool::new(3);
-        for round in 0..50 {
+        for round in 0..sized(50, 8) {
             let sum = AtomicU64::new(0);
             pool.parallel_for(round + 1, 4, |i| {
                 sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
@@ -286,7 +363,7 @@ mod tests {
     fn staged_for_runs_each_stage_once_in_order() {
         use std::sync::atomic::AtomicBool;
         let pool = WorkerPool::new(4);
-        let n = 500;
+        let n = sized(500, 24);
         let s1: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
         let s1_count: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
         let s2_count: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
@@ -329,6 +406,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock assertion; meaningless interpreted
     fn staged_for_imbalanced_stage2_overlaps() {
         // stage1 is cheap; a slow stage-2 item must not serialize the rest
         let pool = WorkerPool::new(4);
@@ -348,11 +426,12 @@ mod tests {
     #[test]
     fn borrows_local_state() {
         let pool = WorkerPool::new(2);
-        let data: Vec<u64> = (0..1000).collect();
+        let data: Vec<u64> = (0..sized(1000, 200) as u64).collect();
         let sum = AtomicU64::new(0);
+        let expect: u64 = data.iter().sum();
         pool.parallel_for(data.len(), 16, |i| {
             sum.fetch_add(data[i], Ordering::Relaxed);
         });
-        assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+        assert_eq!(sum.load(Ordering::Relaxed), expect);
     }
 }

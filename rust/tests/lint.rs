@@ -1,0 +1,266 @@
+//! Fixture corpus for `bps lint` (DESIGN.md §0.13): one seeded violation
+//! and one clean sample per rule, the `--json` schema pin, allow-directive
+//! scoping, and a meta-check that the repository's own tree lints clean —
+//! the same invariant the CI `lint` job enforces deny-by-default.
+
+use std::path::Path;
+
+use bps::lint::{lint_protocol, lint_str, lint_tree, Diag, LintReport};
+use bps::util::json::Json;
+
+fn rules(diags: &[Diag]) -> Vec<&'static str> {
+    diags.iter().map(|d| d.rule).collect()
+}
+
+// -- L001: unsafe needs SAFETY -----------------------------------------------
+
+#[test]
+fn l001_seeded_unsafe_without_safety() {
+    let src = "pub fn read(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let d = lint_str("rust/src/x.rs", src);
+    assert_eq!(rules(&d), ["L001"]);
+    assert_eq!(d[0].line, 2);
+    assert!(d[0].msg.contains("SAFETY"), "{}", d[0].msg);
+}
+
+#[test]
+fn l001_clean_justified_unsafe() {
+    let src = "pub fn read(p: *const u8) -> u8 {\n    \
+               // SAFETY: caller keeps p valid for the call\n    \
+               unsafe { *p }\n}\n";
+    assert!(lint_str("rust/src/x.rs", src).is_empty());
+}
+
+// -- L002: control-flow Relaxed needs a note ---------------------------------
+
+#[test]
+fn l002_seeded_relaxed_in_branch() {
+    let src = "fn f(a: &AtomicUsize) -> bool {\n    \
+               if a.load(Ordering::Relaxed) > 0 {\n        \
+               return true;\n    }\n    false\n}\n";
+    let d = lint_str("rust/src/x.rs", src);
+    assert_eq!(rules(&d), ["L002"]);
+    assert_eq!(d[0].line, 2);
+}
+
+#[test]
+fn l002_clean_noted_branch_and_plain_counter() {
+    let noted = "fn f(a: &AtomicUsize) -> bool {\n    \
+                 // relaxed: advisory peek; the Acquire reload decides\n    \
+                 if a.load(Ordering::Relaxed) > 0 {\n        \
+                 return true;\n    }\n    false\n}\n";
+    assert!(lint_str("rust/src/x.rs", noted).is_empty());
+    // A counter bump outside control flow never needs a note.
+    let counter = "fn bump(a: &AtomicUsize) {\n    \
+                   a.fetch_add(1, Ordering::Relaxed);\n}\n";
+    assert!(lint_str("rust/src/x.rs", counter).is_empty());
+}
+
+// -- L003: serve lock discipline ---------------------------------------------
+
+#[test]
+fn l003_seeded_raw_state_lock_in_serve() {
+    let src = "impl S {\n    fn touch(&self) {\n        \
+               let g = self.state.lock().unwrap();\n        g.step();\n    }\n}\n";
+    let d = lint_str("rust/src/serve/x.rs", src);
+    assert_eq!(rules(&d), ["L003"]);
+    assert_eq!(d[0].line, 3);
+    // The same code outside serve/ is not this rule's business.
+    assert!(lint_str("rust/src/sim/x.rs", src).is_empty());
+}
+
+#[test]
+fn l003_seeded_lock_order_inversion() {
+    let src = "fn stats(&self) {\n    \
+               let t = lock_tenants(&self.tenants);\n    \
+               let s = lock_state(&self.state);\n    use_both(&t, &s);\n}\n";
+    let d = lint_str("rust/src/serve/x.rs", src);
+    assert_eq!(rules(&d), ["L003"]);
+    assert_eq!(d[0].line, 3);
+}
+
+#[test]
+fn l003_clean_helpers_in_canonical_order() {
+    let src = "fn stats(&self) {\n    \
+               let s = lock_state(&self.state);\n    \
+               let t = lock_tenants(&self.tenants);\n    use_both(&s, &t);\n}\n";
+    assert!(lint_str("rust/src/serve/x.rs", src).is_empty());
+}
+
+// -- L004: thread hygiene ----------------------------------------------------
+
+#[test]
+fn l004_seeded_bare_spawn_and_unnamed_builder() {
+    let bare = "fn start() {\n    \
+                std::thread::spawn(move || loop {\n        tick();\n    });\n}\n";
+    let d = lint_str("rust/src/obs/x.rs", bare);
+    assert_eq!(rules(&d), ["L004"]);
+    // Outside serve/obs/scenario the rule does not apply.
+    assert!(lint_str("rust/src/sim/x.rs", bare).is_empty());
+
+    let unnamed = "fn start(w: &Watchdog) {\n    \
+                   let hb = w.heartbeat(\"pump\");\n    \
+                   std::thread::Builder::new()\n        \
+                   .spawn(move || loop {\n            hb.beat();\n        })\n        \
+                   .unwrap();\n}\n";
+    let d = lint_str("rust/src/serve/x.rs", unnamed);
+    assert_eq!(rules(&d), ["L004"]);
+    assert!(d[0].msg.contains(".name("), "{}", d[0].msg);
+}
+
+#[test]
+fn l004_clean_named_spawn_with_heartbeat() {
+    let src = "fn start(w: &Watchdog) {\n    \
+               let hb = w.heartbeat(\"pump\");\n    \
+               std::thread::Builder::new()\n        \
+               .name(\"pump\".into())\n        \
+               .spawn(move || loop {\n            hb.beat();\n        })\n        \
+               .unwrap();\n}\n";
+    assert!(lint_str("rust/src/serve/x.rs", src).is_empty());
+}
+
+// -- L005: protocol drift ----------------------------------------------------
+
+const FRAME_FIXTURE: &str = "\
+pub const FT_HELLO: u8 = 1;
+pub const FT_STEP: u8 = 2;
+pub const ERR_PROTOCOL: u16 = 1;
+pub const ERR_LEASE: u16 = 2;
+pub fn payload_cap(ftype: u8) -> usize {
+    match ftype {
+        FT_HELLO => 0,
+        FT_STEP => 64,
+        _ => 0,
+    }
+}
+";
+
+const DESIGN_FIXTURE: &str = "\
+| `HELLO` | c->s | - |
+| `STEP`  | s->c | step view |
+Errors: ERR_PROTOCOL closes the connection, ERR_LEASE declines a lease.
+";
+
+#[test]
+fn l005_clean_when_wire_and_design_agree() {
+    assert!(lint_protocol(FRAME_FIXTURE, DESIGN_FIXTURE).is_empty());
+}
+
+#[test]
+fn l005_seeded_drift_variants() {
+    // A frame type with no DESIGN.md row.
+    let design = DESIGN_FIXTURE.replace("| `STEP`  | s->c | step view |\n", "");
+    let d = lint_protocol(FRAME_FIXTURE, &design);
+    assert_eq!(rules(&d), ["L005"]);
+    assert!(d[0].msg.contains("FT_STEP"), "{}", d[0].msg);
+
+    // A reused wire value.
+    let frame = FRAME_FIXTURE.replace("ERR_LEASE: u16 = 2", "ERR_LEASE: u16 = 1");
+    let d = lint_protocol(&frame, DESIGN_FIXTURE);
+    assert_eq!(rules(&d), ["L005"]);
+    assert!(d[0].msg.contains("ERR_LEASE"), "{}", d[0].msg);
+
+    // A frame type missing its payload_cap arm.
+    let frame = FRAME_FIXTURE.replace("        FT_STEP => 64,\n", "");
+    let d = lint_protocol(&frame, DESIGN_FIXTURE);
+    assert_eq!(rules(&d), ["L005"]);
+    assert!(d[0].msg.contains("payload_cap"), "{}", d[0].msg);
+
+    // An error code DESIGN.md never mentions. ERR_LEASE must not match
+    // a hypothetical ERR_LEASE_FOO — the check is word-boundary exact.
+    let design = DESIGN_FIXTURE.replace("ERR_LEASE", "ERR_LEASE_FOO");
+    let d = lint_protocol(FRAME_FIXTURE, &design);
+    assert_eq!(rules(&d), ["L005"]);
+    assert!(d[0].msg.contains("ERR_LEASE"), "{}", d[0].msg);
+}
+
+// -- L000 + allow-directive scoping ------------------------------------------
+
+#[test]
+fn l000_seeded_bad_directives() {
+    let d = lint_str("rust/src/x.rs", "// bps-lint: allow(L001)\n");
+    assert_eq!(rules(&d), ["L000"]);
+    assert!(d[0].msg.contains("reason"), "{}", d[0].msg);
+
+    let d = lint_str("rust/src/x.rs", "// bps-lint: allow(L999, nope)\n");
+    assert_eq!(rules(&d), ["L000"]);
+    assert!(d[0].msg.contains("unknown rule"), "{}", d[0].msg);
+
+    let d = lint_str("rust/src/x.rs", "// bps-lint: allow(\n");
+    assert_eq!(rules(&d), ["L000"]);
+    assert!(d[0].msg.contains("malformed"), "{}", d[0].msg);
+}
+
+#[test]
+fn allow_trailing_covers_one_statement_only() {
+    let src = "fn f(p: *const u8) -> u8 {\n    \
+               unsafe { *p } // bps-lint: allow(L001, fixture)\n}\n\
+               fn g(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let d = lint_str("rust/src/x.rs", src);
+    assert_eq!(rules(&d), ["L001"]);
+    assert_eq!(d[0].line, 5, "only the un-allowed unsafe is reported");
+}
+
+#[test]
+fn allow_comment_line_covers_rest_of_file() {
+    let src = "// bps-lint: allow(L001, fixture file)\n\
+               fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n\
+               fn g(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    assert!(lint_str("rust/src/x.rs", src).is_empty());
+}
+
+#[test]
+fn doc_comment_mention_is_not_a_directive() {
+    // Prose about the syntax must neither arm an allow nor trip L000.
+    let src = "/// see bps-lint: allow(L001, example) in DESIGN.md\n\
+               fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let d = lint_str("rust/src/x.rs", src);
+    assert_eq!(rules(&d), ["L001"], "the unsafe is still reported");
+}
+
+// -- --json schema ------------------------------------------------------------
+
+#[test]
+fn json_report_schema_is_stable() {
+    let rep = LintReport {
+        diags: vec![Diag {
+            rule: "L001",
+            file: "rust/src/x.rs".to_string(),
+            line: 7,
+            msg: "`unsafe` without a `// SAFETY:` justification".to_string(),
+        }],
+        files_scanned: 3,
+    };
+    let parsed = Json::parse(&rep.to_json().to_string()).unwrap();
+    assert_eq!(parsed.req("version").unwrap().as_f64().unwrap(), 1.0);
+    assert!(matches!(parsed.req("clean").unwrap(), Json::Bool(false)));
+    assert_eq!(parsed.req("files_scanned").unwrap().as_usize().unwrap(), 3);
+    let v = parsed.req("violations").unwrap().as_arr().unwrap();
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].req("rule").unwrap().as_str().unwrap(), "L001");
+    assert_eq!(v[0].req("file").unwrap().as_str().unwrap(), "rust/src/x.rs");
+    assert_eq!(v[0].req("line").unwrap().as_usize().unwrap(), 7);
+    assert!(v[0].req("msg").unwrap().as_str().unwrap().contains("SAFETY"));
+
+    let empty = LintReport { diags: vec![], files_scanned: 72 };
+    let parsed = Json::parse(&empty.to_json().to_string()).unwrap();
+    assert!(matches!(parsed.req("clean").unwrap(), Json::Bool(true)));
+    assert!(parsed.req("violations").unwrap().as_arr().unwrap().is_empty());
+}
+
+// -- the tree itself ----------------------------------------------------------
+
+#[test]
+fn repository_tree_lints_clean() {
+    // CARGO_MANIFEST_DIR is <repo>/rust for this crate; the repo root is
+    // one level up. Deny-by-default: any new violation fails this test
+    // (and the CI lint job) until fixed or explicitly allowed.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+    let rep = lint_tree(root).expect("lint_tree");
+    assert!(
+        rep.files_scanned > 40,
+        "expected to scan the whole tree, got {} files",
+        rep.files_scanned
+    );
+    assert!(rep.clean(), "repository must lint clean:\n{}", rep.render_text());
+}
